@@ -1,0 +1,134 @@
+"""PEFT adapters over frozen linear weights — the six methods compared in
+the paper's experiments (Tables 1–2):
+
+  full / ft      — every base weight trains (no adapter params)
+  lora           — additive low-rank update
+  oft            — multiplicative block-diagonal orthogonal factor
+  boft           — multiplicative block-butterfly orthogonal product
+  gsoft          — multiplicative GS orthogonal factor (ours, §6.1)
+  double_gsoft   — two-sided GS orthogonal factors (ours, §6.2)
+
+Convention: a linear layer computes `y = x @ W` with `W: (din, dout)`.
+Multiplicative adapters act on the input dimension, `W' = Q @ W`
+(Double GSOFT additionally on the output: `W' = Q_U W Q_V`) — the same
+convention as `gsoft::gs::orthogonal` on the Rust side. Every adapter is
+the identity at zero initialization, so fine-tuning starts exactly at the
+pretrained model.
+"""
+
+from typing import Callable, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import gs
+
+Shape = Tuple[int, ...]
+
+ADAPTED = ("wq", "wk", "wv", "wo", "w1", "w2")  # attention + MLP linears
+
+
+class AdapterConfig:
+    """Hyperparameters of one method (Table 1 defaults)."""
+
+    def __init__(self, method: str, block: int = 8, rank: int = 8,
+                 boft_m: int = 2, scale: bool = True):
+        assert method in ("ft", "lora", "oft", "boft", "gsoft", "double_gsoft")
+        self.method = method
+        self.block = block
+        self.rank = rank
+        self.boft_m = boft_m
+        self.scale = scale
+
+    def label(self) -> str:
+        m = self.method
+        if m == "lora":
+            return f"LoRA(r={self.rank})"
+        if m == "oft":
+            return f"OFT(b={self.block})"
+        if m == "boft":
+            return f"BOFT(b={self.block},m={self.boft_m})"
+        if m == "gsoft":
+            return f"GSOFT(b={self.block})"
+        if m == "double_gsoft":
+            return f"DoubleGSOFT(b={self.block})"
+        return "FT"
+
+
+def adapter_entries(cfg: AdapterConfig, name: str, din: int, dout: int
+                    ) -> List[Tuple[str, Shape]]:
+    """ParamSpec entries for adapting one (din, dout) linear layer."""
+    b = cfg.block
+    if cfg.method == "ft":
+        return []
+    if cfg.method == "lora":
+        return [
+            (f"{name}.lora_a", (din, cfg.rank)),
+            (f"{name}.lora_b", (cfg.rank, dout)),
+        ]
+    if cfg.method == "oft":
+        assert din % b == 0
+        return [(f"{name}.oft_k", (din // b, b, b))]
+    if cfg.method == "boft":
+        assert din % b == 0
+        r = din // b
+        out: List[Tuple[str, Shape]] = []
+        for i in range(cfg.boft_m):
+            if i >= 1:
+                assert 2 * (1 << (i - 1)) <= r, "boft_m too deep for r blocks"
+            out.append((f"{name}.boft_k{i}", (r, b, b)))
+        return out
+    if cfg.method == "gsoft":
+        assert din % b == 0
+        r = din // b
+        return [
+            (f"{name}.gs_l", (r, b, b)),
+            (f"{name}.gs_r", (r, b, b)),
+        ]
+    if cfg.method == "double_gsoft":
+        assert din % b == 0 and dout % b == 0
+        ru, rv = din // b, dout // b
+        return [
+            (f"{name}.gsu_l", (ru, b, b)),
+            (f"{name}.gsu_r", (ru, b, b)),
+            (f"{name}.gsv_l", (rv, b, b)),
+            (f"{name}.gsv_r", (rv, b, b)),
+        ]
+    raise ValueError(cfg.method)
+
+
+def adapter_init(cfg: AdapterConfig, name: str, din: int, dout: int,
+                 rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """Initial adapter params: identity transform for every method.
+
+    Orthogonal methods: zero Cayley pre-images ⇒ Q = I.
+    LoRA: `b = 0` ⇒ additive term vanishes (`a` is random, as usual).
+    """
+    out: Dict[str, np.ndarray] = {}
+    for pname, shape in adapter_entries(cfg, name, din, dout):
+        if pname.endswith("lora_a"):
+            out[pname] = (rng.standard_normal(shape) / np.sqrt(din)).astype(np.float32)
+        else:
+            out[pname] = np.zeros(shape, dtype=np.float32)
+    return out
+
+
+def adapt_weight(cfg: AdapterConfig, name: str, w: jnp.ndarray,
+                 params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Apply the method's transform to a frozen weight."""
+    if cfg.method == "ft":
+        return w
+    if cfg.method == "lora":
+        return gs.lora_apply(params[f"{name}.lora_a"], params[f"{name}.lora_b"], w)
+    if cfg.method == "oft":
+        return gs.oft_apply(params[f"{name}.oft_k"], w)
+    if cfg.method == "boft":
+        factors = [params[f"{name}.boft_k{i}"] for i in range(cfg.boft_m)]
+        return gs.boft_apply(factors, w, cfg.block)
+    if cfg.method == "gsoft":
+        return gs.gsoft_apply(params[f"{name}.gs_l"], params[f"{name}.gs_r"], w)
+    if cfg.method == "double_gsoft":
+        return gs.double_gsoft_apply(
+            params[f"{name}.gsu_l"], params[f"{name}.gsu_r"],
+            params[f"{name}.gsv_l"], params[f"{name}.gsv_r"], w)
+    raise ValueError(cfg.method)

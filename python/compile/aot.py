@@ -1,0 +1,119 @@
+"""AOT lowering: JAX → HLO *text* → `artifacts/`.
+
+Python runs exactly once (`make artifacts`); the Rust binary is
+self-contained afterwards. The interchange format is HLO text, NOT a
+serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction
+ids that xla_extension 0.5.1 (what the `xla` crate binds) rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per artifact we emit
+  artifacts/<name>.hlo.txt    — the lowered module
+  artifacts/<name>.meta.json  — shapes, dtypes, io names, experiment data
+plus shared initial-value buffers `artifacts/<init>.f32` (raw LE f32) and
+a global `artifacts/manifest.json`.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import all_artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def arg_meta(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_one(art, outdir: str, force: bool) -> dict:
+    hlo_path = os.path.join(outdir, f"{art.name}.hlo.txt")
+    meta_path = os.path.join(outdir, f"{art.name}.meta.json")
+    t0 = time.time()
+    lowered = jax.jit(art.fn, keep_unused=True).lower(*art.args)
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    # Output shapes from the lowered signature.
+    out_shapes = [arg_meta(o) for o in jax.eval_shape(art.fn, *art.args)]
+    meta = {
+        "name": art.name,
+        "hlo": os.path.basename(hlo_path),
+        "inputs": [
+            {"name": n, **arg_meta(a)}
+            for n, a in zip(art.extra.get("inputs", [f"arg{i}" for i in range(len(art.args))]),
+                            art.args)
+        ],
+        "outputs": [
+            {"name": n, **m}
+            for n, m in zip(art.extra.get("outputs",
+                                          [f"out{i}" for i in range(len(out_shapes))]),
+                            out_shapes)
+        ],
+        "extra": {k: v for k, v in art.extra.items() if k not in ("inputs", "outputs")},
+        "inits": {k: f"{k}.f32" for k in art.inits},
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    for iname, arr in art.inits.items():
+        ipath = os.path.join(outdir, f"{iname}.f32")
+        if force or not os.path.exists(ipath):
+            np.asarray(arr, dtype="<f4").tofile(ipath)
+    print(f"  [aot] {art.name}: {len(text) / 1e6:.2f} MB HLO "
+          f"({meta['lower_seconds']}s)", flush=True)
+    return meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--subset", default="all",
+                    help="all|quickstart|cls|clsbig|dn|lip")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    arts = all_artifacts(args.subset)
+    t0 = time.time()
+    names = []
+    for art in arts:
+        meta = lower_one(art, outdir, args.force)
+        names.append(meta["name"])
+    # Merge with any existing manifest so `--subset` rebuilds never drop
+    # artifacts lowered by other subsets.
+    mpath = os.path.join(outdir, "manifest.json")
+    existing = []
+    if os.path.exists(mpath):
+        try:
+            with open(mpath) as f:
+                existing = json.load(f).get("artifacts", [])
+        except Exception:
+            existing = []
+    merged = sorted(set(existing) | set(names),
+                    key=lambda n: (existing + names).index(n) if n in existing + names else 0)
+    manifest = {"artifacts": merged, "subset": args.subset,
+                "total_seconds": round(time.time() - t0, 1)}
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] {len(arts)} artifacts in {manifest['total_seconds']}s -> {outdir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""L2 — a tiny conditional denoiser: the subject-driven-generation
+stand-in (Table 2 / Figure 6).
+
+The paper fine-tunes Stable Diffusion on a handful of concept images
+(DreamBooth); we cannot run SD on this testbed, so we reproduce the
+*experimental structure* on a conditional DDPM over 8×8 synthetic
+"images": a base model pretrained on context classes, then fine-tuned on
+a new concept with a few examples under each PEFT method. The overfitting
+vs. editability tradeoff (CLIP-I vs CLIP-T) is probed with feature-space
+similarities computed by the Rust harness (see `rust/src/coordinator/`).
+
+Model: MLP denoiser `eps_hat = f(x_t, t, cond)` with two adapted square
+hidden layers — the layers every method in Table 2 adapts.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .adapters import AdapterConfig, adapt_weight, adapter_entries, adapter_init
+from .flat import ParamSpec, adam_update
+
+ADAPTED_DN = ("h1", "h2")
+
+
+class DenoiserConfig:
+    def __init__(self, img: int = 8, hidden: int = 128, conds: int = 10,
+                 tsteps: int = 50, batch: int = 32):
+        self.img = img          # images are img*img
+        self.dim = img * img
+        self.hidden = hidden
+        self.conds = conds      # context classes + 1 concept token (last id)
+        self.tsteps = tsteps
+        self.batch = batch
+
+    def base_spec(self) -> ParamSpec:
+        c = self
+        return ParamSpec([
+            ("temb", (c.tsteps, c.hidden)),
+            ("cemb", (c.conds, c.hidden)),
+            ("win", (c.dim, c.hidden)),
+            ("h1", (c.hidden, c.hidden)),
+            ("h2", (c.hidden, c.hidden)),
+            ("wout", (c.hidden, c.dim)),
+        ])
+
+    def adapter_spec(self, acfg: AdapterConfig) -> ParamSpec:
+        entries = []
+        for lname in ADAPTED_DN:
+            entries += adapter_entries(acfg, lname, self.hidden, self.hidden)
+        return ParamSpec(entries)
+
+    def init_base(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        spec = self.base_spec()
+        out = {}
+        for name, shape in spec.entries:
+            out[name] = (rng.standard_normal(shape) / np.sqrt(shape[0])).astype(np.float32)
+        return spec.pack_np(out)
+
+    def init_adapters(self, acfg: AdapterConfig, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        spec = self.adapter_spec(acfg)
+        out = {}
+        for lname in ADAPTED_DN:
+            out.update(adapter_init(acfg, lname, self.hidden, self.hidden, rng))
+        return spec.pack_np(out)
+
+    # Linear (DDPM) noise schedule, matching the Rust sampler.
+    def alphas_bar(self) -> np.ndarray:
+        betas = np.linspace(1e-3, 0.2, self.tsteps, dtype=np.float64)
+        return np.cumprod(1.0 - betas).astype(np.float32)
+
+
+def predict_eps(cfg: DenoiserConfig, acfg: AdapterConfig,
+                base: Dict[str, jnp.ndarray], adapt: Dict[str, jnp.ndarray],
+                x_t: jnp.ndarray, t: jnp.ndarray, cond: jnp.ndarray) -> jnp.ndarray:
+    """x_t: (B, dim); t: (B,) int32; cond: (B,) int32 → eps_hat (B, dim)."""
+    def w(lname):
+        bw = base[lname]
+        if acfg.method == "ft":
+            return bw
+        return adapt_weight(acfg, lname, bw, adapt)
+
+    h = x_t @ base["win"] + base["temb"][t] + base["cemb"][cond]
+    h = jax.nn.silu(h)
+    h = h + jax.nn.silu(h @ w("h1"))
+    h = h + jax.nn.silu(h @ w("h2"))
+    return h @ base["wout"]
+
+
+def make_steps(cfg: DenoiserConfig, acfg: AdapterConfig):
+    """(train_step, predict, n_train, n_frozen) for AOT lowering.
+
+    train(trainable, m, v, step, lr, frozen, x0, cond, t, eps)
+      -> (trainable', m', v', loss)                 [eps-prediction MSE]
+    predict(trainable, frozen, x_t, t, cond) -> eps_hat
+      (the Rust coordinator runs the DDIM reverse loop around this)
+    """
+    base_spec = cfg.base_spec()
+    adapt_spec = cfg.adapter_spec(acfg)
+    is_ft = acfg.method == "ft"
+    abar = jnp.asarray(cfg.alphas_bar())
+
+    def unpack(trainable, frozen):
+        if is_ft:
+            return base_spec.unpack(trainable), {}
+        return base_spec.unpack(frozen), adapt_spec.unpack(trainable)
+
+    def loss_fn(trainable, frozen, x0, cond, t, eps):
+        base, adapt = unpack(trainable, frozen)
+        a = abar[t][:, None]
+        x_t = jnp.sqrt(a) * x0 + jnp.sqrt(1.0 - a) * eps
+        eps_hat = predict_eps(cfg, acfg, base, adapt, x_t, t, cond)
+        return ((eps_hat - eps) ** 2).mean()
+
+    def train_step(trainable, m, v, step, lr, frozen, x0, cond, t, eps):
+        loss, grad = jax.value_and_grad(loss_fn)(trainable, frozen, x0, cond, t, eps)
+        new_t, new_m, new_v = adam_update(trainable, m, v, step, lr, grad)
+        return new_t, new_m, new_v, loss
+
+    def predict(trainable, frozen, x_t, t, cond):
+        base, adapt = unpack(trainable, frozen)
+        return predict_eps(cfg, acfg, base, adapt, x_t, t, cond)
+
+    n_train = base_spec.size if is_ft else adapt_spec.size
+    n_frozen = 1 if is_ft else base_spec.size
+    return train_step, predict, n_train, n_frozen

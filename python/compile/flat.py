@@ -1,0 +1,71 @@
+"""Flat parameter buffers.
+
+Every AOT train/eval artifact exchanges parameters with the Rust
+coordinator as a single `f32[n]` vector, so the runtime is arity-stable
+across methods and models. `ParamSpec` records the (name, shape) layout;
+pack/unpack are pure reshapes+concats that XLA fuses away.
+"""
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Shape = Tuple[int, ...]
+
+
+class ParamSpec:
+    """Ordered (name, shape) layout of a flat f32 buffer."""
+
+    def __init__(self, entries: Sequence[Tuple[str, Shape]]):
+        self.entries: List[Tuple[str, Shape]] = [(n, tuple(s)) for n, s in entries]
+        names = [n for n, _ in self.entries]
+        assert len(set(names)) == len(names), "duplicate param names"
+
+    @property
+    def size(self) -> int:
+        return int(sum(int(np.prod(s)) for _, s in self.entries))
+
+    def unpack(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        assert flat.shape == (self.size,), (flat.shape, self.size)
+        out = {}
+        off = 0
+        for name, shape in self.entries:
+            n = int(np.prod(shape))
+            out[name] = flat[off:off + n].reshape(shape)
+            off += n
+        return out
+
+    def pack(self, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        parts = []
+        for name, shape in self.entries:
+            p = params[name]
+            assert tuple(p.shape) == shape, (name, p.shape, shape)
+            parts.append(p.reshape(-1))
+        if not parts:
+            return jnp.zeros((0,), dtype=jnp.float32)
+        return jnp.concatenate(parts).astype(jnp.float32)
+
+    def pack_np(self, params: Dict[str, np.ndarray]) -> np.ndarray:
+        parts = [np.asarray(params[n], dtype=np.float32).reshape(-1) for n, _ in self.entries]
+        if not parts:
+            return np.zeros((0,), dtype=np.float32)
+        return np.concatenate(parts)
+
+    def to_meta(self) -> list:
+        return [{"name": n, "shape": list(s)} for n, s in self.entries]
+
+
+def adam_update(flat, m, v, step, lr, grad,
+                beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0):
+    """One Adam step on a flat buffer. `step` is the 0-based step count
+    *before* this update (scalar f32)."""
+    t = step + 1.0
+    m2 = beta1 * m + (1.0 - beta1) * grad
+    v2 = beta2 * v + (1.0 - beta2) * grad * grad
+    mhat = m2 / (1.0 - beta1 ** t)
+    vhat = v2 / (1.0 - beta2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * flat
+    return flat - lr * upd, m2, v2

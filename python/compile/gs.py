@@ -1,0 +1,142 @@
+"""L2 — structured orthogonal parametrizations as JAX transforms.
+
+Builds on the L1 kernels: every `Q @ W` here goes through the Pallas
+group-and-shuffle path (never a dense `d×d` materialization), exactly as
+the paper's efficiency argument requires.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gs_kernels as K
+from .kernels import ref
+
+
+def cayley(a: jnp.ndarray, iters: int = 18) -> jnp.ndarray:
+    """Batched Cayley transform `(…, b, b) → (…, b, b)` in pure HLO ops.
+
+    `jnp.linalg.solve` lowers to LAPACK typed-FFI custom-calls
+    (`lapack_sgetrf_ffi` / `lapack_strsm_ffi`) that the runtime's XLA
+    (xla_extension 0.5.1) cannot compile, so the AOT graphs invert
+    `(I - K)` with Newton–Schulz iteration instead:
+
+        X₀ = (I-K)ᵀ / s,  s = 1 + ‖K‖_F² ≥ σ_max(I-K)²
+        X ← X (2I - (I-K) X)          (quadratic convergence)
+
+    For skew-symmetric `K` the iteration is globally convergent with this
+    scaling (σ(I-K)² = 1 + λ² ≤ s), and the whole transform is a chain of
+    batched matmuls — differentiable and MXU-friendly. `ref.cayley_ref`
+    (exact solve) remains the pytest oracle.
+    """
+    k = a - jnp.swapaxes(a, -1, -2)
+    b = a.shape[-1]
+    eye = jnp.eye(b, dtype=a.dtype)
+    amat = eye - k
+    s = 1.0 + (k * k).sum(axis=(-1, -2), keepdims=True)
+    x0 = jnp.swapaxes(amat, -1, -2) / s
+
+    def body(x, _):
+        return x @ (2.0 * eye - amat @ x), None
+
+    x, _ = jax.lax.scan(body, x0, None, length=iters)
+    return (eye + k) @ x
+
+
+def gsoft_apply(l_params: jnp.ndarray, r_params: jnp.ndarray, w: jnp.ndarray,
+                scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """`Q @ W` with `Q = P^T L P R`, Cayley-orthogonal blocks (§6.1).
+
+    l_params, r_params: (r, b, b) unconstrained; w: (d, n), d = r*b.
+    `scale` is the optional magnitude scaling the paper uses.
+    """
+    lq = cayley(l_params)
+    rq = cayley(r_params)
+    out = K.gs_apply(lq, rq, w)
+    if scale is not None:
+        out = out * scale
+    return out
+
+
+def double_gsoft_apply(lu, ru, lv, rv, w):
+    """Double GSOFT (§6.2): `Q_U W Q_V` — both singular bases rotated.
+
+    Q_V acts on the right: `W Q_V = (Q_V^T W^T)^T`, and for the GS class
+    `Q^T = R^T P^T L^T P` is again group-and-shuffle; we evaluate it with
+    the same kernels on the transpose.
+    """
+    wu = K.gs_apply(cayley(lu), cayley(ru), w)  # Q_U W
+    # (Q_V^T W^T): Cayley(K)^T = Cayley(-K); negating params transposes Q.
+    qvt_wt = K.gs_apply_transpose(cayley(lv), cayley(rv), wu.T)
+    return qvt_wt.T
+
+
+def oft_apply(blocks: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """OFT (§2): block-diagonal Cayley-orthogonal `Q @ W`."""
+    return K.block_diag_matmul(cayley(blocks), w)
+
+
+def butterfly_gather(r: int, b: int, stride: int) -> np.ndarray:
+    """Index map for one BOFT butterfly factor (Remark 2: butterflies are
+    GS chains with particular permutations).
+
+    Each factor stays "a block-diagonal matrix up to a permutation of rows
+    and columns, consisting of r block matrices of size b×b" (paper §2):
+    for every block pair `(p, q = p XOR stride)` the gathered block `p`
+    holds the first halves of `p` and `q`, and the gathered block `q` the
+    second halves — so each b×b rotation mixes two blocks and `m` factors
+    reach `b·2^{m-1}` inputs (dense at `m = 1 + ceil(log2 r)`).
+    """
+    assert b % 2 == 0, "butterfly interleave needs even block size"
+    idx = np.zeros(r * b, dtype=np.int32)
+    h = b // 2
+    for p in range(r):
+        if p & stride:
+            continue
+        q = p ^ stride
+        idx[p * b:p * b + h] = np.arange(p * b, p * b + h)
+        idx[p * b + h:(p + 1) * b] = np.arange(q * b, q * b + h)
+        idx[q * b:q * b + h] = np.arange(p * b + h, (p + 1) * b)
+        idx[q * b + h:(q + 1) * b] = np.arange(q * b + h, (q + 1) * b)
+    return idx
+
+
+def butterfly_shuffle(x: jnp.ndarray, r: int, b: int, stride: int) -> jnp.ndarray:
+    """Apply the `butterfly_gather(r, b, stride)` permutation to the rows
+    of `x: (r*b, T)` as a pure reshape–transpose (no gather op: `jnp.take`
+    miscompiles to NaNs under the runtime's older XLA, and a relayout is
+    what the permutation *is* — same argument as Def. 5.2).
+
+    View the rows as (G, u, j, v, w) with G = r/(2·stride), u the stride
+    bit of the block index, j the low bits, (v, w) the half/offset inside
+    a block; the butterfly interleave is exactly `swapaxes(u, v)` — an
+    involution, so the post-mix scatter is the same transform.
+    """
+    d, t = x.shape
+    g = r // (2 * stride)
+    h = b // 2
+    v5 = x.reshape(g, 2, stride, 2, h, t)
+    return v5.transpose(0, 3, 2, 1, 4, 5).reshape(d, t)
+
+
+def boft_apply(factors: list[jnp.ndarray], w: jnp.ndarray, block: int) -> jnp.ndarray:
+    """BOFT (§2): `B_m … B_1 @ W`, `B_1` block-diagonal with `r` blocks of
+    `b×b`, `B_i` (i≥2) block-butterfly at stride `2^{i-2}` — every factor
+    has `r` Cayley-orthogonal `b×b` blocks (`m·d·b` parameters total).
+    """
+    d = w.shape[0]
+    r = d // block
+    out = K.block_diag_matmul(cayley(factors[0]), w)
+    for i, f in enumerate(factors[1:]):
+        stride = 1 << i
+        assert 2 * stride <= r, "butterfly deeper than log2(r)"
+        gathered = butterfly_shuffle(out, r, block, stride)
+        mixed = K.block_diag_matmul(cayley(f), gathered)
+        out = butterfly_shuffle(mixed, r, block, stride)  # involution
+    return out
+
+
+def lora_apply(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,
+               scale: float = 1.0) -> jnp.ndarray:
+    """LoRA: `W + scale · a @ b` (a: (d, rank) zero-init, b: (rank, n))."""
+    return w + scale * (a @ b)

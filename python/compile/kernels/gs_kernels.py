@@ -1,0 +1,211 @@
+"""L1 — Pallas kernels for the group-and-shuffle hot path.
+
+The paper's compute hot-spot is applying `Q = P^T L P R` (two block-
+diagonal GEMMs with reshape-transpose relayouts in between) without ever
+materializing the dense `d×d` matrix. On TPU-shaped hardware:
+
+* each block-diagonal factor is a batched `b×b @ b×T` MXU matmul — we grid
+  over the `r` blocks with `BlockSpec((1, b, b))` so one block plus its
+  input tile live in VMEM per grid step;
+* the `P_(r,d)` shuffle is a `(r,b) → (b,r)` reshape-transpose — expressed
+  through the *index_map* of the second kernel's input BlockSpec, so the
+  HBM→VMEM transfer performs the shuffle (no gather);
+* the final `P^T` relayout is left to XLA (a free bitcast-transpose).
+
+All entry points carry `jax.custom_vjp` rules whose backward passes run
+through the *same* batched-matmul kernel (the VJP of a block-diagonal
+GEMM is two block-diagonal GEMMs), so the training graphs stay on the
+kernel path end to end.
+
+Kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is what lowers into the AOT HLO.
+Real-TPU efficiency is estimated from the BlockSpec VMEM footprint in
+DESIGN.md §Perf / EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT requirement; see module docstring.
+
+
+# ---- core batched-matmul kernel --------------------------------------------
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: multiply batch element i."""
+    o_ref[0] = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=o_ref.dtype)
+
+
+def bmm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Batched matmul `(r, m, k) @ (r, k, n) -> (r, m, n)` — one MXU-sized
+    block per grid step; the primitive every GS factor reduces to."""
+    r, m, k = a.shape
+    rb, kb, n = b.shape
+    assert r == rb and k == kb, (a.shape, b.shape)
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, m, n), a.dtype),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _shuffle_bmm_kernel(blocks_ref, z_ref, o_ref):
+    """Fused-shuffle grid step: block i consumes the tile `(P z)_i`.
+
+    The input BlockSpec's index_map selects z.reshape(b, r, T)[:, i, :],
+    which *is* the `P_(r,d)` relayout — the body is a plain matmul.
+    """
+    zi = z_ref[:, 0, :]  # (b, T): the shuffled group for block i
+    o_ref[0] = jnp.dot(blocks_ref[0], zi, preferred_element_type=o_ref.dtype)
+
+
+def _shuffle_bmm(blocks: jnp.ndarray, z3: jnp.ndarray) -> jnp.ndarray:
+    """`out[i] = blocks[i] @ z3[:, i, :]` — z3: (b, r, T)."""
+    r, b, _ = blocks.shape
+    bb, rr, t = z3.shape
+    assert bb == b and rr == r
+    return pl.pallas_call(
+        _shuffle_bmm_kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((b, 1, t), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, t), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, b, t), z3.dtype),
+        interpret=INTERPRET,
+    )(blocks, z3)
+
+
+# ---- block-diagonal matmul (with VJP) ---------------------------------------
+
+@jax.custom_vjp
+def block_diag_matmul(blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """`diag(blocks) @ x` — blocks: (r, b_out, b_in), x: (r*b_in, T) →
+    (r*b_out, T), never materializing the dense form."""
+    r, b_out, b_in = blocks.shape
+    t = x.shape[1]
+    out = bmm(blocks, x.reshape(r, b_in, t))
+    return out.reshape(r * b_out, t)
+
+
+def _bdmm_fwd(blocks, x):
+    return block_diag_matmul(blocks, x), (blocks, x)
+
+
+def _bdmm_bwd(res, dy):
+    blocks, x = res
+    r, b_out, b_in = blocks.shape
+    t = x.shape[1]
+    dy3 = dy.reshape(r, b_out, t)
+    # dx = diag(blocks)^T dy: batched (b_in, b_out) @ (b_out, T).
+    dx = bmm(jnp.swapaxes(blocks, -1, -2), dy3).reshape(r * b_in, t)
+    # dblocks_i = dy_i @ x_i^T: batched (b_out, T) @ (T, b_in).
+    dblocks = bmm(dy3, jnp.swapaxes(x.reshape(r, b_in, t), -1, -2))
+    return dblocks, dx
+
+
+block_diag_matmul.defvjp(_bdmm_fwd, _bdmm_bwd)
+
+
+# ---- shuffled block-diagonal matmul (with VJP) -------------------------------
+
+@jax.custom_vjp
+def shuffled_block_diag_matmul(blocks: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """`diag(blocks) @ (P_(r,d) z)` with the shuffle fused into the
+    BlockSpec index map. blocks: (r, b, b); z: (d, T), d = r·b.
+
+    Derivation: with σ(i) = (i mod r)·b + i//r (Def. 5.2, k = r), row j of
+    `P z` is z[σ^{-1}(j)] and block i of `P z` is z.reshape(b, r, T)[:, i, :]
+    — a strided slice the HBM→VMEM DMA performs for free.
+    """
+    r, b, _ = blocks.shape
+    d, t = z.shape
+    assert d == r * b
+    out = _shuffle_bmm(blocks, z.reshape(b, r, t))
+    return out.reshape(d, t)
+
+
+def _sbdmm_fwd(blocks, z):
+    return shuffled_block_diag_matmul(blocks, z), (blocks, z)
+
+
+def _sbdmm_bwd(res, dw):
+    blocks, z = res
+    r, b, _ = blocks.shape
+    d, t = z.shape
+    dw3 = dw.reshape(r, b, t)
+    # dz = P^T diag(blocks)^T dw: batched transpose-matmul, then the
+    # inverse relayout (the (r,b)->(b,r) transpose).
+    dpz = bmm(jnp.swapaxes(blocks, -1, -2), dw3)  # (r, b, t) = d(Pz)
+    dz = dpz.transpose(1, 0, 2).reshape(d, t)     # undo the shuffle
+    # dblocks_i = dw_i @ (Pz)_i^T.
+    pz = z.reshape(b, r, t).transpose(1, 0, 2)    # (r, b, t)
+    dblocks = bmm(dw3, jnp.swapaxes(pz, -1, -2))
+    return dblocks, dz
+
+
+shuffled_block_diag_matmul.defvjp(_sbdmm_fwd, _sbdmm_bwd)
+
+
+# ---- the GSOFT hot path ------------------------------------------------------
+
+def gs_apply(l_blocks: jnp.ndarray, r_blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """`y = P^T L P R x` — the structured orthogonal apply (§6.1).
+
+    l_blocks, r_blocks: (r, b, b) (already Cayley-transformed); x: (d, T).
+    Two Pallas stages + one XLA relayout for the outer `P^T`:
+      y = w.reshape(r, b, T).transpose(1, 0, 2).reshape(d, T)
+    since y[u·r+v] = w[σ(u·r+v)] = w[v·b+u].
+    """
+    r, b, _ = l_blocks.shape
+    d = r * b
+    assert x.shape[0] == d
+    t = x.shape[1]
+    z = block_diag_matmul(r_blocks, x)           # R x      (grouped GEMM 1)
+    w = shuffled_block_diag_matmul(l_blocks, z)  # L (P z)  (grouped GEMM 2)
+    return w.reshape(r, b, t).transpose(1, 0, 2).reshape(d, t)
+
+
+def gs_apply_transpose(l_blocks: jnp.ndarray, r_blocks: jnp.ndarray,
+                       x: jnp.ndarray) -> jnp.ndarray:
+    """`y = Q^T x` for `Q = P^T L P R`, i.e. `y = R^T P^T L^T (P x)`.
+
+    Reuses the same kernels: `L^T (P x)` is `shuffled_block_diag_matmul`
+    with transposed blocks, the outer `P^T` is the same free relayout, and
+    `R^T ·` is the plain block-diagonal kernel. Needed by Double GSOFT's
+    right-side factor.
+    """
+    r, b, _ = l_blocks.shape
+    d = r * b
+    assert x.shape[0] == d
+    t = x.shape[1]
+    lt = jnp.swapaxes(l_blocks, -1, -2)
+    rt = jnp.swapaxes(r_blocks, -1, -2)
+    w = shuffled_block_diag_matmul(lt, x)  # L^T P x
+    y = w.reshape(r, b, t).transpose(1, 0, 2).reshape(d, t)  # P^T ·
+    return block_diag_matmul(rt, y)  # R^T ·
+
+
+# ---- perf-model helpers ------------------------------------------------------
+
+def vmem_footprint_bytes(r: int, b: int, t: int, dtype_bytes: int = 4) -> dict:
+    """Per-grid-step VMEM usage estimate for the two kernels (DESIGN.md
+    §Perf): one b×b block + b×T input tile + b×T output tile, plus an
+    MXU-fill proxy for the (b, b, T) matmul against a 128³ MXU pass."""
+    per_step = dtype_bytes * (b * b + 2 * b * t)
+    mxu_fill = min(b / 128.0, 1.0) * min(b / 128.0, 1.0) * min(t / 128.0, 1.0)
+    return {
+        "per_step_bytes": per_step,
+        "grid_steps": r,
+        "mxu_fill_fraction": mxu_fill,
+        "flops": 2 * r * b * b * t,
+        "hbm_bytes": dtype_bytes * (r * b * b + 2 * r * b * t),
+    }

@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything here is deliberately written in the most transparent way
+possible (dense materialization, explicit permutation matrices) — these
+are the correctness anchors the kernel tests and the L2 model tests
+compare against.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def perm_kn_sigma(k: int, n: int) -> np.ndarray:
+    """Definition 5.2: sigma(i) = (i mod k) * n/k + i // k."""
+    assert n % k == 0, f"P_(k,n) requires k | n, got k={k} n={n}"
+    i = np.arange(n)
+    return (i % k) * (n // k) + i // k
+
+
+def perm_paired_sigma(k: int, n: int) -> np.ndarray:
+    """Appendix F paired permutation:
+    sigma(i) = (floor(i/2) mod k) * n/k + 2*floor(i/(2k)) + (i mod 2)."""
+    assert n % 2 == 0 and n % k == 0 and (n // k) % 2 == 0
+    i = np.arange(n)
+    return (i // 2 % k) * (n // k) + 2 * (i // (2 * k)) + i % 2
+
+
+def apply_perm(sigma: np.ndarray, x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """y[sigma[i]] = x[i] along `axis` — i.e. y = P x with P[sigma[i], i]=1."""
+    inv = np.argsort(sigma)
+    return jnp.take(x, jnp.asarray(inv), axis=axis)
+
+
+def perm_matrix(sigma: np.ndarray) -> jnp.ndarray:
+    n = len(sigma)
+    p = np.zeros((n, n), dtype=np.float32)
+    p[sigma, np.arange(n)] = 1.0
+    return jnp.asarray(p)
+
+
+def block_diag_matmul_ref(blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """blocks: (r, b_out, b_in); x: (r*b_in, T) -> (r*b_out, T).
+
+    Dense oracle: materialize diag(blocks) and multiply.
+    """
+    r, b_out, b_in = blocks.shape
+    dense = jnp.zeros((r * b_out, r * b_in), dtype=blocks.dtype)
+    for i in range(r):
+        dense = dense.at[i * b_out:(i + 1) * b_out, i * b_in:(i + 1) * b_in].set(blocks[i])
+    return dense @ x
+
+
+def cayley_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Cayley transform of a batch of unconstrained blocks (…, b, b):
+    Q = (I + K)(I - K)^{-1}, K = A - A^T (batched)."""
+    k = a - jnp.swapaxes(a, -1, -2)
+    eye = jnp.eye(a.shape[-1], dtype=a.dtype)
+    # (I+K) and (I-K)^{-1} commute, so left-solve equals the paper's form.
+    return jnp.linalg.solve(eye - k, eye + k)
+
+
+def gs_q_dense_ref(l_params: jnp.ndarray, r_params: jnp.ndarray) -> jnp.ndarray:
+    """Dense GSOFT Q = P^T L P R for Cayley-parametrized blocks.
+
+    l_params/r_params: (r, b, b) unconstrained. P = P_(r, d), d = r*b.
+    """
+    r, b, _ = l_params.shape
+    d = r * b
+    lq = cayley_ref(l_params)
+    rq = cayley_ref(r_params)
+    sigma = perm_kn_sigma(r, d)
+    p = perm_matrix(sigma).astype(l_params.dtype)
+    ldense = block_diag_matmul_ref(lq, jnp.eye(d, dtype=l_params.dtype))
+    rdense = block_diag_matmul_ref(rq, jnp.eye(d, dtype=r_params.dtype))
+    return p.T @ ldense @ p @ rdense
+
+
+def gs_apply_ref(l_params, r_params, x):
+    """y = Q x with Q = P^T L P R (dense oracle)."""
+    return gs_q_dense_ref(l_params, r_params) @ x

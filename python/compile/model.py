@@ -1,0 +1,236 @@
+"""Artifact registry — every AOT compilation unit of the system.
+
+Each artifact is a pure JAX function plus example (shape) arguments and a
+JSON metadata record (input/output names+shapes, experiment constants,
+initial flat buffers). `aot.py` lowers each to HLO text under
+`artifacts/`, which the Rust runtime loads and executes.
+"""
+
+from typing import Callable, Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import diffusion, lipconvnet, transformer
+from .adapters import AdapterConfig
+from . import gs
+from .kernels import gs_kernels as K
+
+
+class Artifact:
+    def __init__(self, name: str, fn: Callable, args: List, extra: dict | None = None,
+                 inits: Dict[str, np.ndarray] | None = None):
+        self.name = name
+        self.fn = fn
+        self.args = args  # example arrays defining shapes/dtypes
+        self.extra = extra or {}
+        self.inits = inits or {}  # name -> f32 array, written as .f32 files
+
+
+def f32(*shape):
+    return jnp.zeros(shape, dtype=jnp.float32)
+
+
+def i32(*shape):
+    return jnp.zeros(shape, dtype=jnp.int32)
+
+
+# ---- experiment configurations (single source of truth, mirrored into
+# ---- artifact metadata for the Rust harness) --------------------------------
+
+CLS_CFG = transformer.TransformerConfig(
+    vocab=512, d=128, layers=2, heads=4, ff=256, seq=32, classes=4, batch=16)
+
+CLS_BIG_CFG = transformer.TransformerConfig(
+    vocab=2048, d=256, layers=4, heads=8, ff=512, seq=64, classes=4, batch=16)
+
+# Table-1 method roster (paper hyperparameters, scaled block sizes).
+CLS_METHODS: Dict[str, AdapterConfig] = {
+    "ft": AdapterConfig("ft"),
+    "lora": AdapterConfig("lora", rank=8),
+    "oft": AdapterConfig("oft", block=16),
+    "boft": AdapterConfig("boft", block=8, boft_m=2),
+    "gsoft": AdapterConfig("gsoft", block=8),
+    "double_gsoft": AdapterConfig("double_gsoft", block=8),
+}
+
+DN_CFG = diffusion.DenoiserConfig(img=8, hidden=128, conds=10, tsteps=50, batch=32)
+
+# Table-2 roster: several parameter budgets per family.
+DN_METHODS: Dict[str, AdapterConfig] = {
+    "ft": AdapterConfig("ft"),
+    "lora4": AdapterConfig("lora", rank=4),
+    "lora32": AdapterConfig("lora", rank=32),
+    "boft8m4": AdapterConfig("boft", block=8, boft_m=4),
+    "gsoft8": AdapterConfig("gsoft", block=8),
+    "gsoft16": AdapterConfig("gsoft", block=16),
+    "dgsoft8": AdapterConfig("double_gsoft", block=8),
+}
+
+LIP_CFG = lipconvnet.LipConfig(img=16, in_ch=4, classes=8,
+                               channels=(32, 64, 128, 128), batch=32)
+
+
+def lip_variants() -> Dict[str, lipconvnet.LipVariant]:
+    """Table 4's 17 rows: SOC + {(4,-),(4,1),(4,2),(4,4)} × {act} × {perm}."""
+    out = {"soc": lipconvnet.LipVariant(groups_a=1, activation="maxmin")}
+    for gb in (0, 1, 2, 4):
+        for act in ("maxmin", "maxmin_permuted"):
+            for paired in (True, False):
+                v = lipconvnet.LipVariant(groups_a=4, groups_b=gb,
+                                          activation=act, paired=paired)
+                out[v.key()] = v
+    return out
+
+
+# ---- artifact construction --------------------------------------------------
+
+def quickstart_artifacts() -> List[Artifact]:
+    r, b, t = 8, 8, 16
+    d = r * b
+
+    def gs_apply_fn(lp, rp, x):
+        return (K.gs_apply(gs.cayley(lp), gs.cayley(rp), x),)
+
+    return [Artifact(
+        "quickstart_gs_apply",
+        gs_apply_fn,
+        [f32(r, b, b), f32(r, b, b), f32(d, t)],
+        extra={"family": "quickstart", "r": r, "b": b, "d": d, "t": t,
+               "inputs": ["l_params", "r_params", "x"],
+               "outputs": ["y"]},
+    )]
+
+
+def _cls_family(tag: str, cfg: transformer.TransformerConfig,
+                methods: Dict[str, AdapterConfig], seed: int) -> List[Artifact]:
+    arts: List[Artifact] = []
+    base_init = cfg.init_base(seed)
+    for mname, acfg in methods.items():
+        train, evalf, n_train, n_frozen = transformer.make_steps(cfg, acfg)
+        extra = {
+            "family": "cls", "tag": tag, "method": mname,
+            "n_train": n_train, "n_frozen": n_frozen,
+            "batch": cfg.batch, "seq": cfg.seq, "classes": cfg.classes,
+            "vocab": cfg.vocab, "d": cfg.d, "layers": cfg.layers,
+            "label": acfg.label(),
+            "block": acfg.block,
+            # flat-buffer layouts, so the Rust coordinator can unpack,
+            # merge adapters into base weights, and checkpoint by name
+            "base_spec": cfg.base_spec().to_meta(),
+            "adapter_spec": cfg.adapter_spec(acfg).to_meta(),
+        }
+        inits = {f"{tag}_base": base_init}
+        if mname != "ft":
+            inits[f"{tag}_{mname}_adapter"] = cfg.init_adapters(acfg, seed + 1)
+        arts.append(Artifact(
+            f"{tag}_{mname}_train", lambda *a, f=train: f(*a),
+            [f32(n_train), f32(n_train), f32(n_train), f32(), f32(),
+             f32(n_frozen), i32(cfg.batch, cfg.seq), i32(cfg.batch)],
+            extra={**extra, "kind": "train",
+                   "inputs": ["trainable", "adam_m", "adam_v", "step", "lr",
+                              "frozen", "tokens", "labels"],
+                   "outputs": ["trainable", "adam_m", "adam_v", "loss"]},
+            inits=inits))
+        arts.append(Artifact(
+            f"{tag}_{mname}_eval", lambda *a, f=evalf: f(*a),
+            [f32(n_train), f32(n_frozen), i32(cfg.batch, cfg.seq), i32(cfg.batch)],
+            extra={**extra, "kind": "eval",
+                   "inputs": ["trainable", "frozen", "tokens", "labels"],
+                   "outputs": ["loss", "correct", "preds"]}))
+    return arts
+
+
+def cls_artifacts() -> List[Artifact]:
+    return _cls_family("cls", CLS_CFG, CLS_METHODS, seed=100)
+
+
+def cls_big_artifacts() -> List[Artifact]:
+    methods = {"ft": CLS_METHODS["ft"], "gsoft": CLS_METHODS["gsoft"]}
+    return _cls_family("clsbig", CLS_BIG_CFG, methods, seed=200)
+
+
+def dn_artifacts() -> List[Artifact]:
+    cfg = DN_CFG
+    arts: List[Artifact] = []
+    base_init = cfg.init_base(300)
+    for mname, acfg in DN_METHODS.items():
+        train, predict, n_train, n_frozen = diffusion.make_steps(cfg, acfg)
+        extra = {
+            "family": "dn", "method": mname,
+            "n_train": n_train, "n_frozen": n_frozen,
+            "batch": cfg.batch, "dim": cfg.dim, "img": cfg.img,
+            "conds": cfg.conds, "tsteps": cfg.tsteps,
+            "alphas_bar": [float(x) for x in cfg.alphas_bar()],
+            "label": acfg.label(),
+        }
+        inits = {"dn_base": base_init}
+        if mname != "ft":
+            inits[f"dn_{mname}_adapter"] = cfg.init_adapters(acfg, 301)
+        arts.append(Artifact(
+            f"dn_{mname}_train", lambda *a, f=train: f(*a),
+            [f32(n_train), f32(n_train), f32(n_train), f32(), f32(),
+             f32(n_frozen), f32(cfg.batch, cfg.dim), i32(cfg.batch),
+             i32(cfg.batch), f32(cfg.batch, cfg.dim)],
+            extra={**extra, "kind": "train",
+                   "inputs": ["trainable", "adam_m", "adam_v", "step", "lr",
+                              "frozen", "x0", "cond", "t", "eps"],
+                   "outputs": ["trainable", "adam_m", "adam_v", "loss"]},
+            inits=inits))
+        arts.append(Artifact(
+            f"dn_{mname}_predict", lambda *a, f=predict: (f(*a),),
+            [f32(n_train), f32(n_frozen), f32(cfg.batch, cfg.dim),
+             i32(cfg.batch), i32(cfg.batch)],
+            extra={**extra, "kind": "predict",
+                   "inputs": ["trainable", "frozen", "x_t", "t", "cond"],
+                   "outputs": ["eps_hat"]}))
+    return arts
+
+
+def lip_artifacts() -> List[Artifact]:
+    cfg = LIP_CFG
+    arts: List[Artifact] = []
+    for key, v in lip_variants().items():
+        train, evalf, n_train = lipconvnet.make_steps(cfg, v)
+        extra = {
+            "family": "lip", "variant": key, "label": v.label(),
+            "n_train": n_train, "n_frozen": 1,
+            "batch": cfg.batch, "img": cfg.img, "in_ch": cfg.in_ch,
+            "classes": cfg.classes,
+            "groups_a": v.groups_a, "groups_b": v.groups_b,
+            "activation": v.activation, "paired": v.paired,
+        }
+        inits = {f"lip_{key}": cfg.init(v, 400)}
+        arts.append(Artifact(
+            f"lip_{key}_train", lambda *a, f=train: f(*a),
+            [f32(n_train), f32(n_train), f32(n_train), f32(), f32(), f32(1),
+             f32(cfg.batch, cfg.img, cfg.img, cfg.in_ch), i32(cfg.batch)],
+            extra={**extra, "kind": "train",
+                   "inputs": ["trainable", "adam_m", "adam_v", "step", "lr",
+                              "frozen", "x", "y"],
+                   "outputs": ["trainable", "adam_m", "adam_v", "loss"]},
+            inits=inits))
+        arts.append(Artifact(
+            f"lip_{key}_eval", lambda *a, f=evalf: f(*a),
+            [f32(n_train), f32(1),
+             f32(cfg.batch, cfg.img, cfg.img, cfg.in_ch), i32(cfg.batch)],
+            extra={**extra, "kind": "eval",
+                   "inputs": ["trainable", "frozen", "x", "y"],
+                   "outputs": ["loss", "correct", "robust_correct"]}))
+    return arts
+
+
+def all_artifacts(subset: str = "all") -> List[Artifact]:
+    groups = {
+        "quickstart": quickstart_artifacts,
+        "cls": cls_artifacts,
+        "clsbig": cls_big_artifacts,
+        "dn": dn_artifacts,
+        "lip": lip_artifacts,
+    }
+    if subset != "all":
+        return groups[subset]()
+    out: List[Artifact] = []
+    for g in groups.values():
+        out.extend(g())
+    return out

@@ -1,0 +1,172 @@
+"""L2 — a small pre-LN transformer encoder classifier.
+
+The workload stand-in for the paper's GLUE/RoBERTa experiments
+(Table 1): base weights are *frozen inputs* to the AOT graphs; adapter
+parameters (or, for full fine-tuning, the base weights themselves) are
+the trainable flat buffer. All attention and MLP linears are adapted,
+matching the paper's "adapters for all linear layers in the attention
+and MLP" setup.
+"""
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .adapters import ADAPTED, AdapterConfig, adapt_weight, adapter_entries, adapter_init
+from .flat import ParamSpec, adam_update
+
+
+class TransformerConfig:
+    def __init__(self, vocab: int = 512, d: int = 128, layers: int = 2,
+                 heads: int = 4, ff: int = 256, seq: int = 32,
+                 classes: int = 4, batch: int = 16):
+        assert d % heads == 0
+        self.vocab, self.d, self.layers = vocab, d, layers
+        self.heads, self.ff, self.seq = heads, ff, seq
+        self.classes, self.batch = classes, batch
+
+    def base_spec(self) -> ParamSpec:
+        c = self
+        entries = [("embed", (c.vocab, c.d)), ("pos", (c.seq, c.d))]
+        for i in range(c.layers):
+            p = f"layer{i}."
+            entries += [
+                (p + "ln1_g", (c.d,)), (p + "ln1_b", (c.d,)),
+                (p + "wq", (c.d, c.d)), (p + "wk", (c.d, c.d)),
+                (p + "wv", (c.d, c.d)), (p + "wo", (c.d, c.d)),
+                (p + "ln2_g", (c.d,)), (p + "ln2_b", (c.d,)),
+                (p + "w1", (c.d, c.ff)), (p + "w2", (c.ff, c.d)),
+            ]
+        entries += [("lnf_g", (c.d,)), ("lnf_b", (c.d,)), ("head", (c.d, c.classes))]
+        return ParamSpec(entries)
+
+    def adapter_spec(self, cfg: AdapterConfig) -> ParamSpec:
+        entries = []
+        for i in range(self.layers):
+            p = f"layer{i}."
+            dims = {"wq": (self.d, self.d), "wk": (self.d, self.d),
+                    "wv": (self.d, self.d), "wo": (self.d, self.d),
+                    "w1": (self.d, self.ff), "w2": (self.ff, self.d)}
+            for lname in ADAPTED:
+                din, dout = dims[lname]
+                entries += adapter_entries(cfg, p + lname, din, dout)
+        return ParamSpec(entries)
+
+    def init_base(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        spec = self.base_spec()
+        out = {}
+        for name, shape in spec.entries:
+            if name.endswith(("_g",)):
+                out[name] = np.ones(shape, dtype=np.float32)
+            elif name.endswith(("_b",)):
+                out[name] = np.zeros(shape, dtype=np.float32)
+            else:
+                fan_in = shape[0] if len(shape) > 1 else shape[0]
+                out[name] = (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+        return spec.pack_np(out)
+
+    def init_adapters(self, cfg: AdapterConfig, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        spec = self.adapter_spec(cfg)
+        out = {}
+        for i in range(self.layers):
+            p = f"layer{i}."
+            dims = {"wq": (self.d, self.d), "wk": (self.d, self.d),
+                    "wv": (self.d, self.d), "wo": (self.d, self.d),
+                    "w1": (self.d, self.ff), "w2": (self.ff, self.d)}
+            for lname in ADAPTED:
+                din, dout = dims[lname]
+                out.update(adapter_init(cfg, p + lname, din, dout, rng))
+        return spec.pack_np(out)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(cfg: TransformerConfig, acfg: AdapterConfig,
+            base: Dict[str, jnp.ndarray], adapt: Dict[str, jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, S) int32 → logits (B, classes)."""
+    c = cfg
+    B, S = tokens.shape
+
+    def w(layer_prefix: str, lname: str) -> jnp.ndarray:
+        base_w = base[layer_prefix + lname]
+        if acfg.method == "ft":
+            return base_w
+        return adapt_weight(acfg, layer_prefix + lname, base_w, adapt)
+
+    h = base["embed"][tokens] + base["pos"][None, :S, :]
+    for i in range(c.layers):
+        p = f"layer{i}."
+        x = _layernorm(h, base[p + "ln1_g"], base[p + "ln1_b"])
+        q = x @ w(p, "wq")
+        k = x @ w(p, "wk")
+        v = x @ w(p, "wv")
+        hd = c.d // c.heads
+        q = q.reshape(B, S, c.heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(B, S, c.heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, S, c.heads, hd).transpose(0, 2, 1, 3)
+        att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / np.sqrt(hd), axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, c.d)
+        h = h + o @ w(p, "wo")
+        x = _layernorm(h, base[p + "ln2_g"], base[p + "ln2_b"])
+        h = h + jax.nn.gelu(x @ w(p, "w1")) @ w(p, "w2")
+    h = _layernorm(h, base["lnf_g"], base["lnf_b"])
+    pooled = h.mean(axis=1)
+    return pooled @ base["head"]
+
+
+def _ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def make_steps(cfg: TransformerConfig, acfg: AdapterConfig):
+    """Build (train_step, eval_step) pure functions for AOT lowering.
+
+    Signatures (flat f32 buffers; `frozen` is size-1 dummy for ft):
+      train(trainable, m, v, step, lr, frozen, tokens, labels)
+        -> (trainable', m', v', loss)
+      eval(trainable, frozen, tokens, labels) -> (loss, correct)
+    """
+    base_spec = cfg.base_spec()
+    adapt_spec = cfg.adapter_spec(acfg)
+    is_ft = acfg.method == "ft"
+
+    def unpack(trainable, frozen):
+        if is_ft:
+            base = base_spec.unpack(trainable)
+            adapt = {}
+        else:
+            base = base_spec.unpack(frozen)
+            adapt = adapt_spec.unpack(trainable)
+        return base, adapt
+
+    def loss_fn(trainable, frozen, tokens, labels):
+        base, adapt = unpack(trainable, frozen)
+        logits = forward(cfg, acfg, base, adapt, tokens)
+        return _ce_loss(logits, labels)
+
+    def train_step(trainable, m, v, step, lr, frozen, tokens, labels):
+        loss, grad = jax.value_and_grad(loss_fn)(trainable, frozen, tokens, labels)
+        new_t, new_m, new_v = adam_update(trainable, m, v, step, lr, grad)
+        return new_t, new_m, new_v, loss
+
+    def eval_step(trainable, frozen, tokens, labels):
+        base, adapt = unpack(trainable, frozen)
+        logits = forward(cfg, acfg, base, adapt, tokens)
+        loss = _ce_loss(logits, labels)
+        preds = logits.argmax(-1).astype(jnp.int32)
+        correct = (preds == labels).sum().astype(jnp.float32)
+        return loss, correct, preds
+
+    n_train = base_spec.size if is_ft else adapt_spec.size
+    n_frozen = 1 if is_ft else base_spec.size
+    return train_step, eval_step, n_train, n_frozen

@@ -1,0 +1,117 @@
+"""L2 adapter invariants: identity at init, orthogonality, parameter
+parity with the paper's accounting."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.gs as G
+from compile.adapters import AdapterConfig, adapt_weight, adapter_entries, adapter_init
+from compile.flat import ParamSpec
+from compile.kernels import ref
+
+METHODS = ["lora", "oft", "boft", "gsoft", "double_gsoft"]
+
+
+def build_params(cfg, name, din, dout, seed, random=False):
+    rng = np.random.default_rng(seed)
+    params = adapter_init(cfg, name, din, dout, rng)
+    if random:
+        for k in params:
+            params[k] = rng.standard_normal(params[k].shape).astype(np.float32)
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_identity_at_init(method):
+    cfg = AdapterConfig(method, block=8, rank=4, boft_m=2)
+    din, dout = 32, 16
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((din, dout)).astype(np.float32))
+    params = build_params(cfg, "l", din, dout, 1)
+    w2 = adapt_weight(cfg, "l", w, params)
+    np.testing.assert_allclose(w2, w, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["oft", "boft", "gsoft"])
+def test_orthogonal_methods_preserve_spectrum(method):
+    cfg = AdapterConfig(method, block=4, boft_m=3)
+    din, dout = 16, 8
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((din, dout)).astype(np.float32))
+    params = build_params(cfg, "l", din, dout, 3, random=True)
+    w2 = adapt_weight(cfg, "l", w, params)
+    s1 = np.linalg.svd(np.asarray(w), compute_uv=False)
+    s2 = np.linalg.svd(np.asarray(w2), compute_uv=False)
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-4)
+
+
+def test_double_gsoft_preserves_spectrum_and_acts_both_sides():
+    cfg = AdapterConfig("double_gsoft", block=4)
+    din, dout = 16, 8
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.standard_normal((din, dout)).astype(np.float32))
+    params = build_params(cfg, "l", din, dout, 5, random=True)
+    w2 = adapt_weight(cfg, "l", w, params)
+    s1 = np.linalg.svd(np.asarray(w), compute_uv=False)
+    s2 = np.linalg.svd(np.asarray(w2), compute_uv=False)
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-4)
+    # right factor differs from identity: W^T W rotated
+    assert not np.allclose(np.asarray(w2), np.asarray(w), atol=1e-3)
+
+
+def test_gsoft_q_is_orthogonal_and_dense():
+    """The materialized Q must be orthogonal and fully dense (Thm 2, m=2
+    with b >= r)."""
+    rng = np.random.default_rng(6)
+    r, b = 4, 8
+    lp = jnp.asarray(rng.standard_normal((r, b, b)).astype(np.float32))
+    rp = jnp.asarray(rng.standard_normal((r, b, b)).astype(np.float32))
+    q = np.asarray(ref.gs_q_dense_ref(lp, rp))
+    d = r * b
+    np.testing.assert_allclose(q.T @ q, np.eye(d), atol=1e-4)
+    assert (np.abs(q) > 1e-9).all(), "Q must be dense"
+
+
+def test_boft_orthogonal_and_depth_limit():
+    rng = np.random.default_rng(7)
+    cfg = AdapterConfig("boft", block=4, boft_m=3)
+    din = 32  # r = 8 blocks
+    w = jnp.eye(din, dtype=jnp.float32)
+    params = build_params(cfg, "l", din, din, 8, random=True)
+    q = np.asarray(adapt_weight(cfg, "l", w, params))
+    np.testing.assert_allclose(q.T @ q, np.eye(din), atol=1e-4)
+    # m too deep must be rejected: stride 2^{m-2} exceeds r/2.
+    with pytest.raises(AssertionError):
+        adapter_entries(AdapterConfig("boft", block=4, boft_m=5), "l", 32, 32)
+
+
+def test_param_counts_match_paper_accounting():
+    d = 128
+    counts = {}
+    for method, kwargs in [
+        ("lora", dict(rank=8)),
+        ("oft", dict(block=16)),
+        ("boft", dict(block=8, boft_m=2)),
+        ("gsoft", dict(block=8)),
+        ("double_gsoft", dict(block=8)),
+    ]:
+        cfg = AdapterConfig(method, **kwargs)
+        spec = ParamSpec(adapter_entries(cfg, "l", d, d))
+        counts[method] = spec.size
+    assert counts["lora"] == 2 * d * 8
+    assert counts["oft"] == d * 16
+    assert counts["boft"] == 2 * d * 8        # m·d·b
+    assert counts["gsoft"] == 2 * d * 8       # 2·r·b² = 2·d·b
+    assert counts["gsoft"] == counts["lora"] == counts["boft"]
+    assert counts["double_gsoft"] == 2 * counts["gsoft"]
+
+
+def test_butterfly_gather_is_permutation_and_pairs_blocks():
+    for r, b, stride in [(4, 4, 1), (8, 2, 2), (8, 8, 4)]:
+        idx = G.butterfly_gather(r, b, stride)
+        assert sorted(idx.tolist()) == list(range(r * b))
+        # each gathered block draws from exactly two source blocks
+        for p in range(r):
+            src_blocks = {int(s) // b for s in idx[p * b:(p + 1) * b]}
+            assert src_blocks == {p, p ^ stride}

@@ -1,0 +1,120 @@
+"""L2 gs.py invariants: Newton–Schulz Cayley vs the exact solve oracle,
+orthogonality of every parametrization, and AOT-compatibility guards."""
+
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.gs as G
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([1, 4]), st.sampled_from([2, 8, 16]),
+       st.sampled_from([0.1, 1.0, 3.0]), st.integers(0, 2 ** 31 - 1))
+def test_newton_cayley_matches_solve(r, b, std, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((r, b, b)).astype(np.float32) * std)
+    got = G.cayley(a)
+    want = ref.cayley_ref(a)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_newton_cayley_extreme_magnitude():
+    # Even far outside the training regime the clamped Newton iteration
+    # must stay orthogonal (convergence is what the scaling guarantees).
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((2, 8, 8)).astype(np.float32) * 8.0)
+    q = G.cayley(a, iters=30)
+    eye = jnp.eye(8)
+    err = jnp.abs(jnp.swapaxes(q, -1, -2) @ q - eye).max()
+    assert float(err) < 1e-3, float(err)
+
+
+def test_newton_cayley_is_differentiable():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((2, 4, 4)).astype(np.float32))
+
+    def f(x):
+        return (G.cayley(x) ** 2).sum()
+
+    g = jax.grad(f)(a)
+    assert np.isfinite(np.asarray(g)).all()
+    # grad of sum of squares of an orthogonal matrix is ~0 only at
+    # stationary points; just require a sane magnitude.
+    assert float(jnp.abs(g).max()) < 100.0
+
+
+@pytest.mark.parametrize("apply_fn", ["gsoft", "boft", "oft"])
+def test_parametrizations_are_orthogonal_maps(apply_fn):
+    """Applying the parametrization to I materializes Q; Q^T Q = I."""
+    rng = np.random.default_rng(2)
+    d, b = 32, 4
+    r = d // b
+    eye = jnp.eye(d, dtype=jnp.float32)
+    if apply_fn == "gsoft":
+        lp = jnp.asarray(rng.standard_normal((r, b, b)).astype(np.float32))
+        rp = jnp.asarray(rng.standard_normal((r, b, b)).astype(np.float32))
+        q = G.gsoft_apply(lp, rp, eye)
+    elif apply_fn == "oft":
+        kp = jnp.asarray(rng.standard_normal((r, b, b)).astype(np.float32))
+        q = G.oft_apply(kp, eye)
+    else:
+        fs = [jnp.asarray(rng.standard_normal((r, b, b)).astype(np.float32))
+              for _ in range(3)]
+        q = G.boft_apply(fs, eye, b)
+    q = np.asarray(q)
+    np.testing.assert_allclose(q.T @ q, np.eye(d), atol=2e-4)
+
+
+def test_double_gsoft_matches_dense_two_sided():
+    rng = np.random.default_rng(3)
+    dr, dc, b = 16, 8, 4
+    lu = jnp.asarray(rng.standard_normal((dr // b, b, b)).astype(np.float32))
+    ru = jnp.asarray(rng.standard_normal((dr // b, b, b)).astype(np.float32))
+    lv = jnp.asarray(rng.standard_normal((dc // b, b, b)).astype(np.float32))
+    rv = jnp.asarray(rng.standard_normal((dc // b, b, b)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((dr, dc)).astype(np.float32))
+    got = G.double_gsoft_apply(lu, ru, lv, rv, w)
+    qu = ref.gs_q_dense_ref(lu, ru)
+    qv = ref.gs_q_dense_ref(lv, rv)
+    want = qu @ w @ qv
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_artifacts_contain_no_custom_calls():
+    """Regression guard: the runtime's XLA (xla_extension 0.5.1) rejects
+    typed-FFI custom-calls (e.g. jnp.linalg.solve's LAPACK lowering); no
+    artifact may contain any custom-call."""
+    offenders = []
+    for path in glob.glob(os.path.join(ARTIFACTS, "*.hlo.txt")):
+        with open(path) as f:
+            if "custom_call_target" in f.read():
+                offenders.append(os.path.basename(path))
+    assert not offenders, f"custom-calls in: {offenders}"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_artifact_metadata_is_complete():
+    import json
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert len(manifest["artifacts"]) >= 60
+    for name in manifest["artifacts"]:
+        with open(os.path.join(ARTIFACTS, f"{name}.meta.json")) as f:
+            meta = json.load(f)
+        assert os.path.exists(os.path.join(ARTIFACTS, meta["hlo"])), name
+        assert meta["inputs"] and meta["outputs"], name
+        for init_file in meta.get("inits", {}).values():
+            assert os.path.exists(os.path.join(ARTIFACTS, init_file)), init_file

@@ -1,0 +1,182 @@
+"""L2 model graphs: shapes, loss decrease under the train step, flat
+pack/unpack round-trips."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import diffusion, lipconvnet, transformer
+from compile.adapters import AdapterConfig
+from compile.flat import ParamSpec
+
+
+def tiny_cls_cfg():
+    return transformer.TransformerConfig(
+        vocab=32, d=16, layers=1, heads=2, ff=32, seq=8, classes=3, batch=4)
+
+
+def test_flat_pack_unpack_round_trip():
+    spec = ParamSpec([("a", (2, 3)), ("b", (4,)), ("c", (1, 1, 5))])
+    rng = np.random.default_rng(0)
+    params = {n: jnp.asarray(rng.standard_normal(s).astype(np.float32))
+              for n, s in spec.entries}
+    flat = spec.pack(params)
+    assert flat.shape == (spec.size,)
+    back = spec.unpack(flat)
+    for n, _ in spec.entries:
+        np.testing.assert_array_equal(back[n], params[n])
+
+
+@pytest.mark.parametrize("method", ["ft", "lora", "gsoft", "boft"])
+def test_cls_train_step_reduces_loss(method):
+    cfg = tiny_cls_cfg()
+    acfg = AdapterConfig(method, block=4, rank=2, boft_m=2)
+    train, evalf, n_train, n_frozen = transformer.make_steps(cfg, acfg)
+    base = jnp.asarray(cfg.init_base(1))
+    if method == "ft":
+        trainable, frozen = base, jnp.zeros((1,))
+    else:
+        trainable, frozen = jnp.asarray(cfg.init_adapters(acfg, 2)), base
+    assert trainable.shape == (n_train,) and frozen.shape == (n_frozen,)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), dtype=jnp.int32)
+    # learnable rule: label = first token mod classes
+    y = jnp.asarray(np.asarray(x[:, 0]) % cfg.classes, dtype=jnp.int32)
+    m = jnp.zeros_like(trainable)
+    v = jnp.zeros_like(trainable)
+    first_loss = None
+    loss = None
+    for step in range(30):
+        trainable, m, v, loss = train(trainable, m, v, jnp.float32(step),
+                                      jnp.float32(5e-3), frozen, x, y)
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < first_loss, (first_loss, float(loss))
+    eloss, correct, preds = evalf(trainable, frozen, x, y)
+    assert preds.shape == (cfg.batch,)
+    assert 0 <= float(correct) <= cfg.batch
+
+
+def test_cls_eval_matches_forward():
+    cfg = tiny_cls_cfg()
+    acfg = AdapterConfig("gsoft", block=4)
+    _, evalf, n_train, n_frozen = transformer.make_steps(cfg, acfg)
+    base = jnp.asarray(cfg.init_base(4))
+    adapter = jnp.asarray(cfg.init_adapters(acfg, 5))
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), dtype=jnp.int32)
+    y = jnp.zeros((cfg.batch,), dtype=jnp.int32)
+    loss, correct, _ = evalf(adapter, base, x, y)
+    assert np.isfinite(float(loss))
+    # identity-initialized adapter == ft forward on the same weights
+    ft_train, ft_eval, _, _ = transformer.make_steps(cfg, AdapterConfig("ft"))
+    loss_ft, _, _ = ft_eval(base, jnp.zeros((1,)), x, y)
+    np.testing.assert_allclose(float(loss), float(loss_ft), rtol=1e-5)
+
+
+def test_dn_train_step_reduces_loss():
+    cfg = diffusion.DenoiserConfig(img=4, hidden=32, conds=4, tsteps=10, batch=8)
+    acfg = AdapterConfig("gsoft", block=4)
+    train, predict, n_train, n_frozen = diffusion.make_steps(cfg, acfg)
+    frozen = jnp.asarray(cfg.init_base(7))
+    trainable = jnp.asarray(cfg.init_adapters(acfg, 8))
+    rng = np.random.default_rng(9)
+    x0 = jnp.asarray(rng.standard_normal((cfg.batch, cfg.dim)).astype(np.float32))
+    cond = jnp.asarray(rng.integers(0, cfg.conds, cfg.batch), dtype=jnp.int32)
+    t = jnp.asarray(rng.integers(0, cfg.tsteps, cfg.batch), dtype=jnp.int32)
+    eps = jnp.asarray(rng.standard_normal((cfg.batch, cfg.dim)).astype(np.float32))
+    m = jnp.zeros_like(trainable)
+    v = jnp.zeros_like(trainable)
+    losses = []
+    for step in range(25):
+        trainable, m, v, loss = train(trainable, m, v, jnp.float32(step),
+                                      jnp.float32(1e-2), frozen, x0, cond, t, eps)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    out = predict(trainable, frozen, x0, t, cond)
+    assert out.shape == (cfg.batch, cfg.dim)
+
+
+def test_alphas_bar_monotone():
+    cfg = diffusion.DenoiserConfig()
+    ab = cfg.alphas_bar()
+    assert (np.diff(ab) < 0).all()
+    assert 0 < ab[-1] < ab[0] < 1
+
+
+@pytest.mark.parametrize("variant", [
+    lipconvnet.LipVariant(groups_a=1, activation="maxmin"),
+    lipconvnet.LipVariant(groups_a=4, groups_b=0, activation="maxmin_permuted", paired=True),
+    lipconvnet.LipVariant(groups_a=4, groups_b=2, activation="maxmin_permuted", paired=False),
+])
+def test_lip_forward_shapes_and_training(variant):
+    cfg = lipconvnet.LipConfig(img=8, in_ch=4, classes=4, channels=(8, 8), batch=4)
+    train, evalf, n_train = lipconvnet.make_steps(cfg, variant)
+    trainable = jnp.asarray(cfg.init(variant, 10))
+    assert trainable.shape == (n_train,)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((cfg.batch, 8, 8, 4)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 4, cfg.batch), dtype=jnp.int32)
+    m = jnp.zeros_like(trainable)
+    v = jnp.zeros_like(trainable)
+    losses = []
+    for step in range(15):
+        trainable, m, v, loss = train(trainable, m, v, jnp.float32(step),
+                                      jnp.float32(5e-3), jnp.zeros((1,)), x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    loss, correct, robust = evalf(trainable, jnp.zeros((1,)), x, y)
+    assert 0 <= float(robust) <= float(correct) <= cfg.batch
+
+
+def test_lip_network_is_1_lipschitz_empirically():
+    """Pairs of inputs: |f(x) - f(x')|_2 ≤ |x - x'|_2 per logit vector."""
+    cfg = lipconvnet.LipConfig(img=8, in_ch=4, classes=4, channels=(8, 8), batch=2)
+    v = lipconvnet.LipVariant(groups_a=4, groups_b=1,
+                              activation="maxmin_permuted", paired=True)
+    spec = cfg.spec(v)
+    rng = np.random.default_rng(12)
+    flat = jnp.asarray(rng.standard_normal(spec.size).astype(np.float32) * 0.2)
+    params = spec.unpack(flat)
+    for _ in range(5):
+        x1 = jnp.asarray(rng.standard_normal((1, 8, 8, 4)).astype(np.float32))
+        x2 = x1 + jnp.asarray(0.05 * rng.standard_normal((1, 8, 8, 4)).astype(np.float32))
+        y1 = lipconvnet.forward(cfg, v, params, x1)
+        y2 = lipconvnet.forward(cfg, v, params, x2)
+        dy = float(jnp.linalg.norm(y1 - y2))
+        dx = float(jnp.linalg.norm(x1 - x2))
+        assert dy <= dx * 1.01, (dy, dx)
+
+
+def test_conv_exp_jacobian_orthogonality():
+    """The conv-exponential layer preserves norms (orthogonal Jacobian)."""
+    rng = np.random.default_rng(13)
+    kernel = jnp.asarray(rng.standard_normal((3, 3, 2, 8)).astype(np.float32) * 0.1)
+    skew = lipconvnet._skew_grouped(kernel, 4)
+    x = jnp.asarray(rng.standard_normal((1, 6, 6, 8)).astype(np.float32))
+    y = lipconvnet.conv_exp(x, skew, 4)
+    # zero-padding breaks exact norm preservation at the boundary only;
+    # allow a small tolerance.
+    nx, ny = float(jnp.linalg.norm(x)), float(jnp.linalg.norm(y))
+    assert abs(nx - ny) / nx < 0.05, (nx, ny)
+
+
+def test_maxmin_variants_preserve_norm_and_sets():
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.standard_normal((2, 3, 3, 8)).astype(np.float32))
+    for permuted in (False, True):
+        y = lipconvnet.maxmin(x, permuted)
+        np.testing.assert_allclose(float(jnp.linalg.norm(x)),
+                                   float(jnp.linalg.norm(y)), rtol=1e-6)
+        # multiset of values preserved
+        np.testing.assert_allclose(np.sort(np.asarray(x).ravel()),
+                                   np.sort(np.asarray(y).ravel()), rtol=1e-6)
+
+
+def test_space_to_depth_is_isometric_and_invertible():
+    rng = np.random.default_rng(15)
+    x = jnp.asarray(rng.standard_normal((2, 4, 4, 3)).astype(np.float32))
+    y = lipconvnet.space_to_depth(x)
+    assert y.shape == (2, 2, 2, 12)
+    np.testing.assert_allclose(float(jnp.linalg.norm(x)), float(jnp.linalg.norm(y)),
+                               rtol=1e-6)

@@ -1,0 +1,43 @@
+//! Bench + verification sweep for Theorem 2 (Figure 5): cost of the exact
+//! support computation and the (b, r) → minimal-m landscape for GS vs
+//! block-butterfly permutations.
+
+use gsoft::gs::density::{
+    butterfly_min_factors, chain_support, empirical_min_factors, gs_min_factors, PermFamily,
+};
+use gsoft::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::new("density");
+
+    for (d, b) in [(256usize, 8usize), (1024, 32), (4096, 64)] {
+        bench.bench(&format!("support_m2/d{d}_b{b}"), || {
+            black_box(chain_support(d, b, 2, PermFamily::GsKn).nnz())
+        });
+    }
+
+    // The Theorem-2 landscape (also printed as a verification table).
+    println!("\n(b, r) -> minimal m for density, measured vs formula:");
+    println!("{:>6} {:>6} {:>10} {:>10} {:>12} {:>12}", "b", "r", "GS meas", "GS form", "BF meas", "BF form");
+    for (b, r) in [
+        (2usize, 8usize),
+        (4, 16),
+        (8, 8),
+        (8, 64),
+        (16, 16),
+        (32, 32),
+    ] {
+        let d = b * r;
+        let gs_meas = empirical_min_factors(d, b, PermFamily::GsKn, 16).unwrap();
+        let bf_meas = empirical_min_factors(d, b, PermFamily::Butterfly, 16).unwrap();
+        let gs_form = gs_min_factors(b, r);
+        let bf_form = butterfly_min_factors(r);
+        println!(
+            "{b:>6} {r:>6} {gs_meas:>10} {gs_form:>10} {bf_meas:>12} {bf_form:>12}"
+        );
+        assert_eq!(gs_meas, gs_form, "Theorem 2 (GS) violated at b={b}, r={r}");
+        assert_eq!(bf_meas, bf_form, "butterfly formula violated at b={b}, r={r}");
+    }
+
+    bench.finish();
+}

@@ -1,0 +1,87 @@
+//! Bench: applying a d×d orthogonal transform to a d×T activation batch —
+//! the paper's central computational-efficiency claim (§5.2 / Table 2's
+//! training-time column). Compares, in the exact Rust algebra:
+//!   dense Q · X                      (full fine-tune / merged inference)
+//!   OFT (1 block-diagonal factor)
+//!   GSOFT (2 factors + shuffles)     — ours, m = 2
+//!   BOFT-style butterfly (m = 1 + log2 r factors)
+//! plus the AOT kernel path (`quickstart_gs_apply`) through PJRT.
+
+use gsoft::gs::{GsChain, GsSpec};
+use gsoft::linalg::Mat;
+use gsoft::util::bench::{black_box, Bench};
+use gsoft::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("gs_apply");
+    let mut rng = Rng::new(42);
+
+    for (d, b, t) in [(256usize, 8usize, 32usize), (1024, 32, 32)] {
+        let r = d / b;
+        let x = Mat::randn(d, t, 1.0, &mut rng);
+
+        // Dense baseline.
+        let q_dense = GsSpec::gsoft(d, b)
+            .random_orthogonal_member(&mut rng)
+            .to_dense();
+        bench.bench_with_elements(
+            &format!("dense_qx/d{d}_t{t}"),
+            Some((d * d * t) as f64),
+            || black_box(q_dense.matmul(&x)),
+        );
+
+        // OFT: single block-diagonal factor.
+        let oft = GsChain::gs_kn(d, b, 1, &mut rng, true);
+        bench.bench_with_elements(
+            &format!("oft_m1/d{d}_b{b}_t{t}"),
+            Some((r * b * b * t) as f64),
+            || black_box(oft.apply(&x)),
+        );
+
+        // GSOFT: m = 2 (ours).
+        let gs = GsChain::gs_kn(d, b, 2, &mut rng, true);
+        bench.bench_with_elements(
+            &format!("gsoft_m2/d{d}_b{b}_t{t}"),
+            Some((2 * r * b * b * t) as f64),
+            || black_box(gs.apply(&x)),
+        );
+
+        // Butterfly at full density depth (what BOFT needs).
+        let m_bf = 1 + (r as f64).log2().ceil() as usize;
+        let bf = GsChain::butterfly(d, b, m_bf, &mut rng, true);
+        bench.bench_with_elements(
+            &format!("butterfly_m{m_bf}/d{d}_b{b}_t{t}"),
+            Some((bf.param_count() * t) as f64),
+            || black_box(bf.apply(&x)),
+        );
+
+        // GS chain at butterfly depth (isolates the factor-count effect).
+        let gs6 = GsChain::gs_kn(d, b, m_bf, &mut rng, true);
+        bench.bench(&format!("gs_m{m_bf}/d{d}_b{b}_t{t}"), || {
+            black_box(gs6.apply(&x))
+        });
+    }
+
+    // AOT kernel path (if artifacts are built).
+    if let Ok(rt) = gsoft::runtime::Runtime::new("artifacts") {
+        if let Ok(exe) = rt.load("quickstart_gs_apply") {
+            let r = exe.meta.extra_usize("r").unwrap();
+            let b = exe.meta.extra_usize("b").unwrap();
+            let d = exe.meta.extra_usize("d").unwrap();
+            let t = exe.meta.extra_usize("t").unwrap();
+            let lp: Vec<f32> = (0..r * b * b).map(|_| rng.normal_f32(0.3)).collect();
+            let rp: Vec<f32> = (0..r * b * b).map(|_| rng.normal_f32(0.3)).collect();
+            let x: Vec<f32> = (0..d * t).map(|_| rng.normal_f32(1.0)).collect();
+            let inputs = [
+                gsoft::runtime::Tensor::f32(vec![r, b, b], lp),
+                gsoft::runtime::Tensor::f32(vec![r, b, b], rp),
+                gsoft::runtime::Tensor::f32(vec![d, t], x),
+            ];
+            bench.bench(&format!("pjrt_kernel/d{d}_b{b}_t{t}"), || {
+                black_box(exe.run(&inputs).unwrap())
+            });
+        }
+    }
+
+    bench.finish();
+}

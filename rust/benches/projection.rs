@@ -1,0 +1,36 @@
+//! Bench: Algorithm 1 (projection onto the GS class) — blockwise Jacobi
+//! SVD over the permutation-routed blocks — plus its SVD/QR/Cayley
+//! substrate primitives.
+
+use gsoft::gs::{project, GsSpec};
+use gsoft::linalg::{cayley_unconstrained, qr, svd, Mat};
+use gsoft::util::bench::{black_box, Bench};
+use gsoft::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("projection");
+    let mut rng = Rng::new(7);
+
+    for (d, b) in [(64usize, 8usize), (128, 8), (256, 16)] {
+        let spec = GsSpec::gsoft(d, b);
+        let a = Mat::randn(d, d, 1.0, &mut rng);
+        bench.bench(&format!("algorithm1/d{d}_b{b}"), || {
+            black_box(project(&a, &spec))
+        });
+    }
+
+    for n in [8usize, 16, 32, 64] {
+        let a = Mat::randn(n, n, 1.0, &mut rng);
+        bench.bench(&format!("jacobi_svd/{n}x{n}"), || {
+            black_box(svd::svd(&a))
+        });
+        bench.bench(&format!("householder_qr/{n}x{n}"), || {
+            black_box(qr::qr(&a))
+        });
+        bench.bench(&format!("cayley/{n}x{n}"), || {
+            black_box(cayley_unconstrained(&a))
+        });
+    }
+
+    bench.finish();
+}

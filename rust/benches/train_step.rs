@@ -1,0 +1,73 @@
+//! Bench: end-to-end PJRT train/eval step latency per method — the
+//! systems counterpart of Table 2's "training time" column and the §7.1
+//! efficiency discussion (GSOFT m=2 vs BOFT's deeper product), measured
+//! through the real artifact path (Pallas kernels in HLO, executed by the
+//! Rust runtime). Requires `make artifacts`.
+
+use std::time::Duration;
+
+use gsoft::runtime::{Runtime, Tensor};
+use gsoft::util::bench::{black_box, Bench};
+use gsoft::util::rng::Rng;
+
+fn inputs_for(exe: &gsoft::runtime::Executable, rng: &mut Rng) -> Vec<Tensor> {
+    exe.meta
+        .inputs
+        .iter()
+        .map(|m| {
+            let n: usize = m.shape.iter().product();
+            if m.dtype == "float32" {
+                Tensor::f32(m.shape.clone(), (0..n).map(|_| rng.normal_f32(0.01)).collect())
+            } else {
+                Tensor::i32(m.shape.clone(), vec![1; n])
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping train_step bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let mut bench = Bench::new("train_step");
+    bench.measure_time(Duration::from_secs(3));
+    let mut rng = Rng::new(3);
+
+    // Table-1 family: the per-step cost of each fine-tuning method.
+    for method in ["ft", "lora", "oft", "boft", "gsoft", "double_gsoft"] {
+        let exe = rt.load(&format!("cls_{method}_train")).unwrap();
+        let inputs = inputs_for(&exe, &mut rng);
+        bench.bench(&format!("cls_train/{method}"), || {
+            black_box(exe.run(&inputs).unwrap())
+        });
+        let exe = rt.load(&format!("cls_{method}_eval")).unwrap();
+        let inputs = inputs_for(&exe, &mut rng);
+        bench.bench(&format!("cls_eval/{method}"), || {
+            black_box(exe.run(&inputs).unwrap())
+        });
+    }
+
+    // Table-2 family (denoiser).
+    for method in ["ft", "lora4", "boft8m4", "gsoft8", "dgsoft8"] {
+        let exe = rt.load(&format!("dn_{method}_train")).unwrap();
+        let inputs = inputs_for(&exe, &mut rng);
+        bench.bench(&format!("dn_train/{method}"), || {
+            black_box(exe.run(&inputs).unwrap())
+        });
+    }
+
+    // Table-3 family: SOC vs GS-SOC per-step (the Speedup column).
+    for variant in ["soc", "g4_0_mmp_p", "g4_1_mmp_p", "g4_2_mmp_p", "g4_4_mmp_p"] {
+        let exe = rt.load(&format!("lip_{variant}_train")).unwrap();
+        let inputs = inputs_for(&exe, &mut rng);
+        bench.bench(&format!("lip_train/{variant}"), || {
+            black_box(exe.run(&inputs).unwrap())
+        });
+    }
+
+    bench.finish();
+}

@@ -1,0 +1,133 @@
+//! Checkpoints: flat buffers + optimizer state + step, with a JSON header
+//! and raw little-endian f32 payloads (a tiny self-describing container —
+//! no external serialization crates offline).
+//!
+//! Layout: `GSCK` magic, u32 header length, JSON header
+//! `{"step":…, "sections": [{"name":…, "len":…}, …]}`, then the f32
+//! sections back to back.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"GSCK";
+
+/// A named collection of f32 buffers plus a step counter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: usize,
+    pub sections: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+            .ok_or_else(|| anyhow!("checkpoint has no section '{name}'"))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = Json::obj(vec![
+            ("step", Json::Num(self.step as f64)),
+            (
+                "sections",
+                Json::Arr(
+                    self.sections
+                        .iter()
+                        .map(|(n, v)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(n.clone())),
+                                ("len", Json::Num(v.len() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, v) in &self.sections {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
+        let mut len = [0u8; 4];
+        f.read_exact(&mut len)?;
+        let hlen = u32::from_le_bytes(len) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        let step = header.req_usize("step").map_err(|e| anyhow!("{e}"))?;
+        let mut sections = Vec::new();
+        for s in header
+            .req("sections")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("sections not an array"))?
+        {
+            let name = s.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string();
+            let n = s.req_usize("len").map_err(|e| anyhow!("{e}"))?;
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            sections.push((name, data));
+        }
+        Ok(Checkpoint { step, sections })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let ck = Checkpoint {
+            step: 123,
+            sections: vec![
+                ("trainable".into(), vec![1.0, -2.5, 3.25]),
+                ("adam_m".into(), vec![0.0; 5]),
+            ],
+        };
+        let path = std::env::temp_dir().join("gsoft_ck_test.gsck");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.get("trainable").unwrap()[1], -2.5);
+        assert!(back.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("gsoft_ck_garbage.gsck");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Experiment run options: defaults + JSON config files + CLI overrides.
+//!
+//! Every table harness reads a `configs/<name>.json` (if present), then
+//! applies `--key value` CLI overrides, so the full experiment grid is
+//! reproducible from checked-in configs.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Options shared by the experiment harnesses.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Artifacts directory.
+    pub artifacts: String,
+    /// Pretraining steps for the base model (cls / dn).
+    pub pretrain_steps: usize,
+    /// Fine-tuning / training steps per cell.
+    pub steps: usize,
+    /// Evaluation batches per cell.
+    pub eval_batches: usize,
+    /// Base learning rate for fine-tuning.
+    pub lr: f64,
+    /// Pretraining learning rate.
+    pub pretrain_lr: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Worker threads for independent cells (each owns its PJRT client).
+    pub workers: usize,
+    /// Reuse cached pretrained bases / trained cells under results/cache.
+    pub use_cache: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            artifacts: "artifacts".into(),
+            pretrain_steps: 400,
+            steps: 300,
+            eval_batches: 25,
+            lr: 1e-3,
+            pretrain_lr: 2e-3,
+            seed: 17,
+            workers: 2,
+            use_cache: true,
+        }
+    }
+}
+
+impl RunOpts {
+    /// Load `configs/<name>.json` when present, then apply CLI overrides.
+    pub fn load(name: &str, args: &Args) -> Result<RunOpts> {
+        let mut o = RunOpts::default();
+        let path = format!("configs/{name}.json");
+        if Path::new(&path).exists() {
+            let text = std::fs::read_to_string(&path)?;
+            let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            let get_usize = |k: &str, d: usize| v.get(k).and_then(|x| x.as_usize()).unwrap_or(d);
+            let get_f64 = |k: &str, d: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
+            o.pretrain_steps = get_usize("pretrain_steps", o.pretrain_steps);
+            o.steps = get_usize("steps", o.steps);
+            o.eval_batches = get_usize("eval_batches", o.eval_batches);
+            o.lr = get_f64("lr", o.lr);
+            o.pretrain_lr = get_f64("pretrain_lr", o.pretrain_lr);
+            o.seed = get_usize("seed", o.seed as usize) as u64;
+            o.workers = get_usize("workers", o.workers);
+            if let Some(a) = v.get("artifacts").and_then(|x| x.as_str()) {
+                o.artifacts = a.to_string();
+            }
+        }
+        o.artifacts = args.opt_or("artifacts", &o.artifacts).to_string();
+        o.pretrain_steps = args.opt_usize("pretrain-steps", o.pretrain_steps)?;
+        o.steps = args.opt_usize("steps", o.steps)?;
+        o.eval_batches = args.opt_usize("eval-batches", o.eval_batches)?;
+        o.lr = args.opt_f64("lr", o.lr)?;
+        o.pretrain_lr = args.opt_f64("pretrain-lr", o.pretrain_lr)?;
+        o.seed = args.opt_u64("seed", o.seed)?;
+        o.workers = args.opt_usize("workers", o.workers)?;
+        if args.flag("no-cache") {
+            o.use_cache = false;
+        }
+        Ok(o)
+    }
+}
+
+/// results/cache path helper.
+pub fn cache_path(key: &str, ext: &str) -> std::path::PathBuf {
+    let dir = Path::new("results/cache");
+    let _ = std::fs::create_dir_all(dir);
+    dir.join(format!("{key}.{ext}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let args = Args::parse(
+            ["x", "--steps", "50", "--lr", "0.01", "--no-cache"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["no-cache"],
+        );
+        let o = RunOpts::load("nonexistent_config", &args).unwrap();
+        assert_eq!(o.steps, 50);
+        assert_eq!(o.lr, 0.01);
+        assert!(!o.use_cache);
+        assert_eq!(o.pretrain_steps, RunOpts::default().pretrain_steps);
+    }
+}

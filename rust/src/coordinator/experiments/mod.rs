@@ -1,0 +1,60 @@
+//! Experiment harnesses — one module per paper table/figure family.
+
+pub mod statics;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::config::{cache_path, RunOpts};
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::{Trainer, TrainState};
+use crate::data::synglue;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Pretrain (or load from cache) the `cls`-family base transformer on the
+/// SynGLUE task mixture via the full-fine-tune artifact. Returns the
+/// pretrained flat base buffer.
+pub fn pretrained_cls_base(rt: &Runtime, tag: &str, opts: &RunOpts) -> Result<Vec<f32>> {
+    let key = format!(
+        "{tag}_pretrained_s{}_lr{}_seed{}",
+        opts.pretrain_steps, opts.pretrain_lr, opts.seed
+    );
+    let ck_path = cache_path(&key, "gsck");
+    if opts.use_cache && ck_path.exists() {
+        let ck = Checkpoint::load(&ck_path)?;
+        return Ok(ck.get("base")?.to_vec());
+    }
+    let exe = rt.load(&format!("{tag}_ft_train"))?;
+    let vocab = exe.meta.extra_usize("vocab")?;
+    let seq = exe.meta.extra_usize("seq")?;
+    let batch = exe.meta.extra_usize("batch")?;
+    let init = rt.load_init(&format!("{tag}_base"))?;
+    let trainer = Trainer::new(exe, vec![0.0]); // ft: frozen is a dummy
+    let mut state = TrainState::new(init);
+    let mut rng = Rng::new(opts.seed ^ 0xBA5E);
+    let sched = LrSchedule::finetune(opts.pretrain_lr, opts.pretrain_steps);
+    let log = trainer.run(&mut state, opts.pretrain_steps, sched, &mut rng, |_, r| {
+        let (xs, ys) = synglue::pretrain_batch(vocab, seq, batch, r);
+        vec![
+            Tensor::i32(vec![batch, seq], xs),
+            Tensor::i32(vec![batch], ys),
+        ]
+    })?;
+    println!(
+        "[pretrain:{tag}] {} steps, loss {:.3} -> {:.3} ({:.1} steps/s)",
+        opts.pretrain_steps,
+        log.losses.first().copied().unwrap_or(f32::NAN),
+        log.tail_loss(20),
+        log.steps_per_second()
+    );
+    let ck = Checkpoint {
+        step: state.step,
+        sections: vec![("base".into(), state.trainable.clone())],
+    };
+    ck.save(&ck_path)?;
+    Ok(state.trainable)
+}

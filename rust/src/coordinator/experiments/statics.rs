@@ -1,0 +1,156 @@
+//! Static (analysis-only) experiments: the §5.2 parameter table, the
+//! Theorem-2 density sweep (Figure 5), and the Figure-3 permutation
+//! pictures — no PJRT required.
+
+use anyhow::Result;
+
+use crate::gs::density::{
+    butterfly_min_factors, chain_support, empirical_min_factors, gs_min_factors, PermFamily,
+};
+use crate::gs::params::{dense_cost_comparison, Method};
+use crate::gs::perm::perm_kn;
+use crate::report::{fmt, fmt_params, Table};
+
+/// §5.2 — factors + parameters needed for a dense d×d orthogonal matrix.
+pub fn params_table() -> Table {
+    let mut t = Table::new(
+        "§5.2 — cost of a dense d×d orthogonal matrix (BOFT vs GSOFT)",
+        &[
+            "d", "b", "r", "BOFT m", "BOFT params", "GS m", "GS params", "param ratio",
+        ],
+    );
+    for (d, b) in [
+        (256usize, 8usize),
+        (256, 16),
+        (768, 8),
+        (768, 16),
+        (1024, 8),
+        (1024, 32),
+        (1024, 64),
+        (4096, 32),
+        (4096, 64),
+    ] {
+        let ((m_bf, p_bf), (m_gs, p_gs)) = dense_cost_comparison(d, b);
+        t.row(vec![
+            d.to_string(),
+            b.to_string(),
+            (d / b).to_string(),
+            m_bf.to_string(),
+            fmt_params(p_bf),
+            m_gs.to_string(),
+            fmt_params(p_gs),
+            fmt(p_bf as f64 / p_gs as f64, 2),
+        ]);
+    }
+    t
+}
+
+/// Table-1-style parameter budgets for the cls geometry (sanity view).
+pub fn budget_table(d: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Adapter parameter budgets on a {d}x{d} layer"),
+        &["Method", "Params", "Storable (upper-tri)"],
+    );
+    for m in [
+        Method::Full,
+        Method::LoRa { rank: 8 },
+        Method::Oft { block: 16 },
+        Method::Boft { block: 8, m: 2 },
+        Method::Gsoft { block: 8, m: 2 },
+        Method::DoubleGsoft { block: 8, m: 2 },
+    ] {
+        t.row(vec![
+            m.name(),
+            fmt_params(m.param_count(d)),
+            fmt_params(m.storage_count(d)),
+        ]);
+    }
+    t
+}
+
+/// Figure 5 / Theorem 2 — empirical density sweep: fill fraction of the
+/// product support vs number of factors, GS vs butterfly vs identity.
+pub fn density_table(d: usize, b: usize) -> Result<Table> {
+    anyhow::ensure!(d % b == 0, "b must divide d");
+    let r = d / b;
+    let mut t = Table::new(
+        &format!("Theorem 2 — support fill vs m (d={d}, b={b}, r={r})"),
+        &["m", "GS P_(k,n) fill", "Butterfly fill", "Identity fill"],
+    );
+    let max_m = butterfly_min_factors(r).max(gs_min_factors(b, r)) + 1;
+    for m in 1..=max_m {
+        t.row(vec![
+            m.to_string(),
+            fmt(chain_support(d, b, m, PermFamily::GsKn).fill(), 4),
+            fmt(chain_support(d, b, m, PermFamily::Butterfly).fill(), 4),
+            fmt(chain_support(d, b, m, PermFamily::Identity).fill(), 4),
+        ]);
+    }
+    let gs_m = empirical_min_factors(d, b, PermFamily::GsKn, max_m + 2);
+    let bf_m = empirical_min_factors(d, b, PermFamily::Butterfly, max_m + 2);
+    println!(
+        "Theorem 2 check: GS dense at m={:?} (formula {}), butterfly at m={:?} (formula {})",
+        gs_m,
+        gs_min_factors(b, r),
+        bf_m,
+        butterfly_min_factors(r)
+    );
+    Ok(t)
+}
+
+/// Figure 3 — print the `P_(k,12)` permutation matrices.
+pub fn perms_figure() -> String {
+    let mut out = String::from("Figure 3 — P_(k,12) permutation matrices (rows = outputs):\n");
+    for k in [3usize, 4, 6, 2] {
+        let p = perm_kn(k, 12);
+        out.push_str(&format!("\nP_({k},12):  sigma = {:?}\n", p.sigma));
+        let m = p.to_mat();
+        for i in 0..12 {
+            out.push_str("  ");
+            for j in 0..12 {
+                out.push(if m[(i, j)] > 0.5 { '#' } else { '.' });
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_table_has_the_worked_example() {
+        let t = params_table();
+        let row = t
+            .rows
+            .iter()
+            .find(|r| r[0] == "1024" && r[1] == "32")
+            .expect("worked example present");
+        assert_eq!(row[3], "6"); // BOFT factors
+        assert_eq!(row[5], "2"); // GS factors
+        assert_eq!(row[7], "3.00"); // 6·32³ / 2·32³
+    }
+
+    #[test]
+    fn density_table_runs() {
+        let t = density_table(64, 4).unwrap();
+        assert!(t.rows.len() >= 4);
+        // last GS row must be fully dense
+        let dense_row = t
+            .rows
+            .iter()
+            .find(|r| r[1] == "1.0000")
+            .expect("GS reaches density");
+        let m: usize = dense_row[0].parse().unwrap();
+        assert_eq!(m, gs_min_factors(4, 16));
+    }
+
+    #[test]
+    fn perms_figure_renders() {
+        let s = perms_figure();
+        assert!(s.contains("P_(3,12)"));
+        assert_eq!(s.matches('#').count(), 4 * 12);
+    }
+}

@@ -1,0 +1,273 @@
+//! Table 1 — SynGLUE fine-tuning: FT / LoRA / OFT / BOFT / GSOFT /
+//! Double GSOFT on the eight synthetic tasks (accuracy; Matthews for
+//! CoLA*; Pearson for STS-B*), plus trainable-parameter counts.
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::config::{cache_path, RunOpts};
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::{Trainer, TrainState};
+use crate::data::synglue::{self, Task, ALL_TASKS};
+use crate::report::{fmt, fmt_params, Table};
+use crate::runtime::{Runtime, Tensor};
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+
+pub const METHODS: [&str; 6] = ["ft", "lora", "oft", "boft", "gsoft", "double_gsoft"];
+
+/// Per-method learning-rate multiplier: the paper tunes LR per method;
+/// multiplicative-orthogonal methods prefer larger steps than additive
+/// ones at identity init.
+fn lr_mult(method: &str) -> f64 {
+    match method {
+        "ft" => 0.3,
+        "lora" => 1.0,
+        _ => 3.0,
+    }
+}
+
+/// Metric for one (method, task) cell, in percent (or correlation×100).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub method: String,
+    pub task: Task,
+    pub metric: f64,
+    pub params: usize,
+}
+
+/// Fine-tune + evaluate one (method, task) cell. The Runtime is shared
+/// across all tasks of one method (compiled executables are reused;
+/// PJRT clients are not Sync, so sharing stays within one worker).
+fn run_cell(rt: &Runtime, method: &str, task: Task, base: &[f32], opts: &RunOpts) -> Result<Cell> {
+    let key = format!(
+        "table1_{method}_{}_s{}_p{}_lr{}_seed{}",
+        task.name().trim_end_matches('*'),
+        opts.steps,
+        opts.pretrain_steps,
+        opts.lr,
+        opts.seed
+    );
+    let jpath = cache_path(&key, "json");
+    if opts.use_cache && jpath.exists() {
+        if let Ok(v) = crate::util::json::Json::parse(&std::fs::read_to_string(&jpath)?) {
+            if let (Some(metric), Some(params)) = (
+                v.get("metric").and_then(|x| x.as_f64()),
+                v.get("params").and_then(|x| x.as_usize()),
+            ) {
+                return Ok(Cell {
+                    method: method.into(),
+                    task,
+                    metric,
+                    params,
+                });
+            }
+        }
+    }
+
+    let train = rt.load(&format!("cls_{method}_train"))?;
+    let eval = rt.load(&format!("cls_{method}_eval"))?;
+    let vocab = train.meta.extra_usize("vocab")?;
+    let seq = train.meta.extra_usize("seq")?;
+    let batch = train.meta.extra_usize("batch")?;
+    let gen = synglue::TaskGen::new(task, vocab, seq);
+
+    // Trainable/frozen wiring per method.
+    let (init, frozen, params): (Vec<f32>, Vec<f32>, usize) = if method == "ft" {
+        (base.to_vec(), vec![0.0], base.len())
+    } else {
+        let adapter = rt.load_init(&format!("cls_{method}_adapter"))?;
+        let n = adapter.len();
+        (adapter, base.to_vec(), n)
+    };
+
+    let mut rng = Rng::new(opts.seed ^ (task.id() as u64) << 8 ^ hash_method(method));
+    let trainer = Trainer::new(train, frozen.clone());
+    let mut state = TrainState::new(init);
+    let sched = LrSchedule::finetune(opts.lr * lr_mult(method), opts.steps);
+    trainer.run(&mut state, opts.steps, sched, &mut rng, |_, r| {
+        let (xs, ys) = gen.batch(batch, r);
+        vec![
+            Tensor::i32(vec![batch, seq], xs),
+            Tensor::i32(vec![batch], ys),
+        ]
+    })?;
+
+    // Evaluation with per-example predictions (for MCC / Pearson).
+    let mut eval_rng = Rng::new(0xEEAA ^ task.id() as u64); // shared across methods
+    let mut preds = Vec::new();
+    let mut labels = Vec::new();
+    let n = state.trainable.len();
+    for _ in 0..opts.eval_batches {
+        let (xs, ys) = gen.batch(batch, &mut eval_rng);
+        let out = eval.run(&[
+            Tensor::f32(vec![n], state.trainable.clone()),
+            Tensor::f32(vec![frozen.len()], frozen.clone()),
+            Tensor::i32(vec![batch, seq], xs),
+            Tensor::i32(vec![batch], ys.clone()),
+        ])?;
+        preds.extend_from_slice(out[2].as_i32()?);
+        labels.extend_from_slice(&ys);
+    }
+    let metric = match task.metric() {
+        "matthews" => synglue::matthews(&preds, &labels) * 100.0,
+        "pearson" => synglue::pearson(&preds, &labels) * 100.0,
+        _ => {
+            let correct = preds
+                .iter()
+                .zip(labels.iter())
+                .filter(|(p, l)| p == l)
+                .count();
+            correct as f64 / labels.len() as f64 * 100.0
+        }
+    };
+    let cell = Cell {
+        method: method.into(),
+        task,
+        metric,
+        params,
+    };
+    let _ = std::fs::write(
+        &jpath,
+        crate::util::json::Json::obj(vec![
+            ("metric", crate::util::json::Json::Num(metric)),
+            ("params", crate::util::json::Json::Num(params as f64)),
+        ])
+        .to_string(),
+    );
+    Ok(cell)
+}
+
+fn hash_method(m: &str) -> u64 {
+    m.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64))
+}
+
+/// Run the full Table-1 grid and render it.
+pub fn run(opts: &RunOpts) -> Result<Table> {
+    let rt = Runtime::new(&opts.artifacts)?;
+    let base = super::pretrained_cls_base(&rt, "cls", opts)?;
+    drop(rt); // workers create their own clients
+
+    // One worker per *method*: each owns a Runtime and runs its 8 tasks
+    // sequentially, so compiled executables are reused across tasks.
+    let results: Vec<Vec<Result<Cell, String>>> =
+        parallel_map(METHODS.len(), opts.workers, |m| {
+            let rt = match Runtime::new(&opts.artifacts) {
+                Ok(rt) => rt,
+                Err(e) => return vec![Err(format!("{e:#}")); ALL_TASKS.len()],
+            };
+            ALL_TASKS
+                .iter()
+                .map(|&t| {
+                    run_cell(&rt, METHODS[m], t, &base, opts).map_err(|e| format!("{e:#}"))
+                })
+                .collect()
+        });
+    let results: Vec<Result<Cell, String>> = results.into_iter().flatten().collect();
+
+    let mut table = Table::new(
+        "Table 1 — SynGLUE (GLUE stand-in) with the pretrained cls transformer",
+        &[
+            "Method", "# Params", "MNLI*", "SST-2*", "CoLA*", "QQP*", "QNLI*", "RTE*",
+            "MRPC*", "STS-B*", "ALL",
+        ],
+    );
+    for (mi, method) in METHODS.iter().enumerate() {
+        let mut row = vec![String::new(); 11];
+        let mut sum = 0.0;
+        let mut params = 0usize;
+        for (ti, task) in ALL_TASKS.iter().enumerate() {
+            let cell = results[mi * ALL_TASKS.len() + ti]
+                .as_ref()
+                .map_err(|e| anyhow::anyhow!("cell {method}/{}: {e}", task.name()))?;
+            // Column order in the header matches ALL_TASKS order.
+            row[2 + ti] = fmt(cell.metric, 2);
+            sum += cell.metric;
+            params = cell.params;
+        }
+        row[0] = pretty_method(method);
+        row[1] = fmt_params(params);
+        row[10] = fmt(sum / ALL_TASKS.len() as f64, 2);
+        table.row(row);
+    }
+    Ok(table)
+}
+
+fn pretty_method(m: &str) -> String {
+    match m {
+        "ft" => "FT".into(),
+        "lora" => "LoRA(r=8)".into(),
+        "oft" => "OFT(b=16)".into(),
+        "boft" => "BOFT(b=8,m=2)".into(),
+        "gsoft" => "GSOFT(b=8)".into(),
+        "double_gsoft" => "DoubleGSOFT(b=8)".into(),
+        other => other.into(),
+    }
+}
+
+/// Loss-curve helper for the quickstart / e2e drivers: fine-tune one task
+/// with one method and return the loss log plus final accuracy.
+pub fn finetune_once(
+    rt: &Runtime,
+    tag: &str,
+    method: &str,
+    task: Task,
+    base: &[f32],
+    opts: &RunOpts,
+) -> Result<(crate::coordinator::trainer::RunLog, f64, TrainState, Vec<f32>)> {
+    let train = rt.load(&format!("{tag}_{method}_train"))?;
+    let eval = rt.load(&format!("{tag}_{method}_eval"))?;
+    let vocab = train.meta.extra_usize("vocab")?;
+    let seq = train.meta.extra_usize("seq")?;
+    let batch = train.meta.extra_usize("batch")?;
+    let gen = synglue::TaskGen::new(task, vocab, seq);
+    let (init, frozen) = if method == "ft" {
+        (base.to_vec(), vec![0.0])
+    } else {
+        (
+            rt.load_init(&format!("{tag}_{method}_adapter"))?,
+            base.to_vec(),
+        )
+    };
+    let trainer = Trainer::new(train, frozen.clone());
+    let mut state = TrainState::new(init);
+    let mut rng = Rng::new(opts.seed);
+    let sched = LrSchedule::finetune(opts.lr * lr_mult(method), opts.steps);
+    let log = trainer.run(&mut state, opts.steps, sched, &mut rng, |_, r| {
+        let (xs, ys) = gen.batch(batch, r);
+        vec![
+            Tensor::i32(vec![batch, seq], xs),
+            Tensor::i32(vec![batch], ys),
+        ]
+    })?;
+    let mut eval_rng = Rng::new(0xEEAA ^ task.id() as u64);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let n = state.trainable.len();
+    for _ in 0..opts.eval_batches {
+        let (xs, ys) = gen.batch(batch, &mut eval_rng);
+        let out = eval.run(&[
+            Tensor::f32(vec![n], state.trainable.clone()),
+            Tensor::f32(vec![frozen.len()], frozen.clone()),
+            Tensor::i32(vec![batch, seq], xs),
+            Tensor::i32(vec![batch], ys.clone()),
+        ])?;
+        correct += out[1].scalar()? as usize;
+        total += batch;
+    }
+    let acc = correct as f64 / total as f64 * 100.0;
+    Ok((log, acc, state, frozen))
+}
+
+/// Persist a fine-tuned cell as a checkpoint (used by examples).
+pub fn save_state(key: &str, state: &TrainState) -> Result<()> {
+    Checkpoint {
+        step: state.step,
+        sections: vec![
+            ("trainable".into(), state.trainable.clone()),
+            ("adam_m".into(), state.adam_m.clone()),
+            ("adam_v".into(), state.adam_v.clone()),
+        ],
+    }
+    .save(cache_path(key, "gsck"))
+}

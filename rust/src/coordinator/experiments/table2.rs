@@ -1,0 +1,362 @@
+//! Table 2 + Figure 6 — subject-driven generation stand-in.
+//!
+//! Pretrain the tiny conditional denoiser on the context classes, then
+//! fine-tune on a few-shot concept under each PEFT method. Metrics
+//! (frozen random-projection encoder as the CLIP stand-in):
+//!
+//! * **Concept-I** (CLIP-I analogue): mean feature similarity between
+//!   samples generated with the concept condition and the true concept
+//!   examples — higher = better fidelity.
+//! * **Concept-T** (CLIP-T analogue): mean similarity between samples
+//!   generated with *context* conditions after fine-tuning and the same
+//!   conditions' true class templates — higher = the model still follows
+//!   its "prompt" rather than collapsing onto the concept (overfitting).
+//!
+//! Training wall-clock per method reproduces the Table-2 time column.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::config::{cache_path, RunOpts};
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::{Trainer, TrainState};
+use crate::data::concept::{self, Encoder, CONCEPT_COND, DIM, NUM_CONTEXTS};
+use crate::report::{fmt, fmt_params, Table};
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::util::json::Json;
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+
+pub const METHODS: [&str; 7] =
+    ["ft", "lora4", "lora32", "boft8m4", "gsoft8", "gsoft16", "dgsoft8"];
+
+/// Measurements for one method at one checkpoint.
+#[derive(Clone, Debug)]
+pub struct DnCell {
+    pub method: String,
+    pub params: usize,
+    pub seconds: f64,
+    pub steps: usize,
+    pub concept_i: f64,
+    pub concept_t: f64,
+}
+
+/// DDIM (eta = 0) reverse process around the `predict` artifact.
+pub struct Sampler {
+    exe: Arc<Executable>,
+    abar: Vec<f64>,
+    batch: usize,
+    dim: usize,
+}
+
+impl Sampler {
+    pub fn new(exe: Arc<Executable>) -> Result<Sampler> {
+        let abar = exe.meta.extra_f64_vec("alphas_bar")?;
+        let batch = exe.meta.extra_usize("batch")?;
+        let dim = exe.meta.extra_usize("dim")?;
+        Ok(Sampler {
+            exe,
+            abar,
+            batch,
+            dim,
+        })
+    }
+
+    /// Generate one batch conditioned on `conds` starting from seeded noise.
+    pub fn sample(
+        &self,
+        trainable: &[f32],
+        frozen: &[f32],
+        conds: &[i32],
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(conds.len(), self.batch);
+        let tsteps = self.abar.len();
+        let mut x: Vec<f32> = (0..self.batch * self.dim)
+            .map(|_| rng.normal_f32(1.0))
+            .collect();
+        for t in (0..tsteps).rev() {
+            let out = self.exe.run(&[
+                Tensor::f32(vec![trainable.len()], trainable.to_vec()),
+                Tensor::f32(vec![frozen.len()], frozen.to_vec()),
+                Tensor::f32(vec![self.batch, self.dim], x.clone()),
+                Tensor::i32(vec![self.batch], vec![t as i32; self.batch]),
+                Tensor::i32(vec![self.batch], conds.to_vec()),
+            ])?;
+            let eps = out[0].as_f32()?;
+            let a_t = self.abar[t] as f32;
+            let a_prev = if t == 0 { 1.0 } else { self.abar[t - 1] as f32 };
+            for i in 0..x.len() {
+                let x0 = (x[i] - (1.0 - a_t).sqrt() * eps[i]) / a_t.sqrt();
+                x[i] = a_prev.sqrt() * x0 + (1.0 - a_prev).sqrt() * eps[i];
+            }
+        }
+        Ok((0..self.batch)
+            .map(|i| x[i * self.dim..(i + 1) * self.dim].to_vec())
+            .collect())
+    }
+}
+
+/// Pretrain (or load) the denoiser base on the context classes.
+pub fn pretrained_dn_base(rt: &Runtime, opts: &RunOpts) -> Result<Vec<f32>> {
+    let key = format!(
+        "dn_pretrained_s{}_lr{}_seed{}",
+        opts.pretrain_steps, opts.pretrain_lr, opts.seed
+    );
+    let ck_path = cache_path(&key, "gsck");
+    if opts.use_cache && ck_path.exists() {
+        return Ok(Checkpoint::load(&ck_path)?.get("base")?.to_vec());
+    }
+    let exe = rt.load("dn_ft_train")?;
+    let batch = exe.meta.extra_usize("batch")?;
+    let tsteps = exe.meta.extra_usize("tsteps")?;
+    let init = rt.load_init("dn_base")?;
+    let trainer = Trainer::new(exe, vec![0.0]);
+    let mut state = TrainState::new(init);
+    let mut rng = Rng::new(opts.seed ^ 0xD1FF);
+    let sched = LrSchedule::finetune(opts.pretrain_lr, opts.pretrain_steps);
+    let log = trainer.run(&mut state, opts.pretrain_steps, sched, &mut rng, |_, r| {
+        dn_batch_inputs(batch, tsteps, r, |rr| concept::pretrain_batch(batch, rr))
+    })?;
+    println!(
+        "[pretrain:dn] {} steps, loss {:.4} -> {:.4}",
+        opts.pretrain_steps,
+        log.losses.first().copied().unwrap_or(f32::NAN),
+        log.tail_loss(20)
+    );
+    Checkpoint {
+        step: state.step,
+        sections: vec![("base".into(), state.trainable.clone())],
+    }
+    .save(&ck_path)?;
+    Ok(state.trainable)
+}
+
+/// Assemble the 4 batch tensors of a dn train step from an (x0, cond)
+/// generator: adds the uniform t and eps draws.
+fn dn_batch_inputs(
+    batch: usize,
+    tsteps: usize,
+    rng: &mut Rng,
+    mut gen: impl FnMut(&mut Rng) -> (Vec<f32>, Vec<i32>),
+) -> Vec<Tensor> {
+    let (x0, cond) = gen(rng);
+    let t: Vec<i32> = (0..batch).map(|_| rng.below(tsteps) as i32).collect();
+    let eps: Vec<f32> = (0..batch * DIM).map(|_| rng.normal_f32(1.0)).collect();
+    vec![
+        Tensor::f32(vec![batch, DIM], x0),
+        Tensor::i32(vec![batch], cond),
+        Tensor::i32(vec![batch], t),
+        Tensor::f32(vec![batch, DIM], eps),
+    ]
+}
+
+/// Fine-tune one method on the concept and measure at the given
+/// checkpoints (in steps). Returns one `DnCell` per checkpoint.
+fn run_method(method: &str, base: &[f32], checkpoints: &[usize], opts: &RunOpts) -> Result<Vec<DnCell>> {
+    let key = format!(
+        "table2_{method}_s{}_p{}_lr{}_seed{}_ck{:?}",
+        opts.steps, opts.pretrain_steps, opts.lr, opts.seed, checkpoints
+    );
+    let jpath = cache_path(&key, "json");
+    if opts.use_cache && jpath.exists() {
+        if let Some(cells) = load_cells(&jpath, method) {
+            return Ok(cells);
+        }
+    }
+
+    let rt = Runtime::new(&opts.artifacts)?;
+    let train = rt.load(&format!("dn_{method}_train"))?;
+    let predict = rt.load(&format!("dn_{method}_predict"))?;
+    let batch = train.meta.extra_usize("batch")?;
+    let tsteps = train.meta.extra_usize("tsteps")?;
+
+    let (init, frozen, params): (Vec<f32>, Vec<f32>, usize) = if method == "ft" {
+        (base.to_vec(), vec![0.0], base.len())
+    } else {
+        let adapter = rt.load_init(&format!("dn_{method}_adapter"))?;
+        let n = adapter.len();
+        (adapter, base.to_vec(), n)
+    };
+
+    // The few-shot concept set (fixed across methods).
+    let mut data_rng = Rng::new(0xC0CE);
+    let examples = concept::concept_examples(4, &mut data_rng);
+
+    let sampler = Sampler::new(predict)?;
+    let encoder = Encoder::new();
+    let trainer = Trainer::new(train, frozen.clone());
+    let mut state = TrainState::new(init);
+    let mut rng = Rng::new(opts.seed ^ 0xFACE);
+    let sched = LrSchedule::finetune(opts.lr, *checkpoints.last().unwrap());
+
+    let mut cells = Vec::new();
+    let mut done = 0usize;
+    let mut seconds = 0.0;
+    for &ck in checkpoints {
+        let t0 = Instant::now();
+        let ex = examples.clone();
+        trainer.run(&mut state, ck - done, sched, &mut rng, |_, r| {
+            dn_batch_inputs(batch, tsteps, r, |rr| {
+                concept::finetune_batch(batch, &ex, rr)
+            })
+        })?;
+        seconds += t0.elapsed().as_secs_f64();
+        done = ck;
+
+        // ---- metrics ----
+        let mut metric_rng = Rng::new(0x5EED); // shared noise across methods
+        // Concept-I: generate with the concept condition.
+        let gens = sampler.sample(
+            &state.trainable,
+            &frozen,
+            &vec![CONCEPT_COND; batch],
+            &mut metric_rng,
+        )?;
+        let mut ci = 0.0;
+        for g in &gens {
+            // best similarity to any concept example (nearest reference)
+            let best = examples
+                .iter()
+                .map(|e| encoder.similarity(g, e))
+                .fold(f64::MIN, f64::max);
+            ci += best / gens.len() as f64;
+        }
+        // Concept-T: generate with context conditions; compare with the
+        // class templates (does the model still follow the "prompt"?).
+        let conds: Vec<i32> = (0..batch).map(|i| (i % NUM_CONTEXTS) as i32).collect();
+        let gens_ctx = sampler.sample(&state.trainable, &frozen, &conds, &mut metric_rng)?;
+        let mut tmpl_rng = Rng::new(0x7E11);
+        let mut ct = 0.0;
+        for (g, &c) in gens_ctx.iter().zip(conds.iter()) {
+            let mut best = f64::MIN;
+            for _ in 0..4 {
+                let tmpl = concept::context_image(c as usize, &mut tmpl_rng);
+                best = best.max(encoder.similarity(g, &tmpl));
+            }
+            ct += best / gens_ctx.len() as f64;
+        }
+        cells.push(DnCell {
+            method: method.into(),
+            params,
+            seconds,
+            steps: ck,
+            concept_i: ci,
+            concept_t: ct,
+        });
+    }
+    save_cells(&jpath, &cells);
+    Ok(cells)
+}
+
+fn load_cells(path: &std::path::Path, method: &str) -> Option<Vec<DnCell>> {
+    let v = Json::parse(&std::fs::read_to_string(path).ok()?).ok()?;
+    let arr = v.as_arr()?;
+    let mut out = Vec::new();
+    for c in arr {
+        out.push(DnCell {
+            method: method.into(),
+            params: c.get("params")?.as_usize()?,
+            seconds: c.get("seconds")?.as_f64()?,
+            steps: c.get("steps")?.as_usize()?,
+            concept_i: c.get("concept_i")?.as_f64()?,
+            concept_t: c.get("concept_t")?.as_f64()?,
+        });
+    }
+    Some(out)
+}
+
+fn save_cells(path: &std::path::Path, cells: &[DnCell]) {
+    let arr = Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("params", Json::Num(c.params as f64)),
+                    ("seconds", Json::Num(c.seconds)),
+                    ("steps", Json::Num(c.steps as f64)),
+                    ("concept_i", Json::Num(c.concept_i)),
+                    ("concept_t", Json::Num(c.concept_t)),
+                ])
+            })
+            .collect(),
+    );
+    let _ = std::fs::write(path, arr.pretty());
+}
+
+/// All methods at all checkpoints (the grid behind Table 2 and Fig. 6).
+pub fn run_grid(opts: &RunOpts, checkpoints: &[usize]) -> Result<Vec<Vec<DnCell>>> {
+    let rt = Runtime::new(&opts.artifacts)?;
+    let base = pretrained_dn_base(&rt, opts)?;
+    drop(rt);
+    let results = parallel_map(METHODS.len(), opts.workers, |i| {
+        run_method(METHODS[i], &base, checkpoints, opts).map_err(|e| format!("{e:#}"))
+    });
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.map_err(|e| anyhow::anyhow!("method {}: {e}", METHODS[i])))
+        .collect()
+}
+
+fn pretty(m: &str) -> &'static str {
+    match m {
+        "ft" => "Full",
+        "lora4" => "LoRA(r=4)",
+        "lora32" => "LoRA(r=32)",
+        "boft8m4" => "BOFT(b=8,m=4)",
+        "gsoft8" => "GSOFT(b=8)",
+        "gsoft16" => "GSOFT(b=16)",
+        "dgsoft8" => "DoubleGSOFT(b=8)",
+        _ => "?",
+    }
+}
+
+/// Table 2: final-checkpoint metrics per method.
+pub fn run(opts: &RunOpts) -> Result<Table> {
+    let grid = run_grid(opts, &[opts.steps / 3, opts.steps])?;
+    let mut table = Table::new(
+        "Table 2 — subject-driven adaptation (DreamBooth stand-in)",
+        &[
+            "Method",
+            "# Params",
+            "Training time (s)",
+            "Concept-I ↑",
+            "Concept-T ↑",
+        ],
+    );
+    for cells in &grid {
+        let last = cells.last().unwrap();
+        table.row(vec![
+            pretty(&last.method).to_string(),
+            fmt_params(last.params),
+            fmt(last.seconds, 1),
+            fmt(last.concept_i, 3),
+            fmt(last.concept_t, 3),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Figure 6: the (Concept-I, Concept-T) series at both checkpoints.
+pub fn fig6(opts: &RunOpts) -> Result<Table> {
+    let grid = run_grid(opts, &[opts.steps / 3, opts.steps])?;
+    let mut table = Table::new(
+        "Figure 6 — fidelity/editability tradeoff at two checkpoints",
+        &["Method", "Steps", "Concept-I ↑", "Concept-T ↑"],
+    );
+    for cells in &grid {
+        for c in cells {
+            table.row(vec![
+                pretty(&c.method).to_string(),
+                format!("{}", c.steps),
+                fmt(c.concept_i, 3),
+                fmt(c.concept_t, 3),
+            ]);
+        }
+    }
+    Ok(table)
+}

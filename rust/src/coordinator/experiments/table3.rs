@@ -1,0 +1,220 @@
+//! Tables 3–4 — 1-Lipschitz LipConvnet with SOC vs GS-SOC orthogonal
+//! convolutions on the synthetic vision task: parameters, measured
+//! per-step speedup over SOC, accuracy and certified robust accuracy,
+//! with the activation × ChShuffle-permutation ablation of Table 4.
+
+use anyhow::Result;
+
+use crate::coordinator::config::{cache_path, RunOpts};
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::{Trainer, TrainState};
+use crate::data::vision::{self, CH, IMG, PIX};
+use crate::report::{fmt, fmt_params, Table};
+use crate::runtime::{Runtime, Tensor};
+use crate::util::json::Json;
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+
+/// All 17 Table-4 variants (SOC + 4 group structures × 2 acts × 2 perms).
+pub fn all_variants() -> Vec<String> {
+    let mut v = vec!["soc".to_string()];
+    for gb in [0, 1, 2, 4] {
+        for act in ["mmp", "mm"] {
+            for perm in ["p", "u"] {
+                v.push(format!("g4_{gb}_{act}_{perm}"));
+            }
+        }
+    }
+    v
+}
+
+/// The Table-3 subset: SOC + the best activation/permutation combo
+/// (MaxMinPermuted + paired, per the paper).
+pub fn table3_variants() -> Vec<String> {
+    let mut v = vec!["soc".to_string()];
+    for gb in [0, 1, 2, 4] {
+        v.push(format!("g4_{gb}_mmp_p"));
+    }
+    v
+}
+
+#[derive(Clone, Debug)]
+pub struct LipCell {
+    pub variant: String,
+    pub params: usize,
+    pub step_seconds: f64,
+    pub accuracy: f64,
+    pub robust_accuracy: f64,
+}
+
+fn run_variant(variant: &str, opts: &RunOpts) -> Result<LipCell> {
+    let key = format!(
+        "table3_{variant}_s{}_lr{}_seed{}",
+        opts.steps, opts.lr, opts.seed
+    );
+    let jpath = cache_path(&key, "json");
+    if opts.use_cache && jpath.exists() {
+        if let Ok(v) = Json::parse(&std::fs::read_to_string(&jpath)?) {
+            if let (Some(params), Some(sec), Some(acc), Some(racc)) = (
+                v.get("params").and_then(|x| x.as_usize()),
+                v.get("step_seconds").and_then(|x| x.as_f64()),
+                v.get("accuracy").and_then(|x| x.as_f64()),
+                v.get("robust_accuracy").and_then(|x| x.as_f64()),
+            ) {
+                return Ok(LipCell {
+                    variant: variant.into(),
+                    params,
+                    step_seconds: sec,
+                    accuracy: acc,
+                    robust_accuracy: racc,
+                });
+            }
+        }
+    }
+
+    let rt = Runtime::new(&opts.artifacts)?;
+    let train = rt.load(&format!("lip_{variant}_train"))?;
+    let eval = rt.load(&format!("lip_{variant}_eval"))?;
+    let batch = train.meta.extra_usize("batch")?;
+    let init = rt.load_init(&format!("lip_{variant}"))?;
+    let params = init.len();
+
+    let trainer = Trainer::new(train, vec![0.0]);
+    let mut state = TrainState::new(init);
+    let mut rng = Rng::new(opts.seed ^ 0x11AA);
+    let sched = LrSchedule::finetune(opts.lr, opts.steps);
+    let log = trainer.run(&mut state, opts.steps, sched, &mut rng, |_, r| {
+        let (xs, ys) = vision::batch(batch, r);
+        vec![
+            Tensor::f32(vec![batch, IMG, IMG, CH], xs),
+            Tensor::i32(vec![batch], ys),
+        ]
+    })?;
+
+    // Evaluation on the fixed held-out set.
+    let n = state.trainable.len();
+    let (test_x, test_y) = vision::test_set(opts.eval_batches * batch);
+    let mut correct = 0.0;
+    let mut robust = 0.0;
+    for b in 0..opts.eval_batches {
+        let xs = test_x[b * batch * PIX..(b + 1) * batch * PIX].to_vec();
+        let ys = test_y[b * batch..(b + 1) * batch].to_vec();
+        let out = eval.run(&[
+            Tensor::f32(vec![n], state.trainable.clone()),
+            Tensor::f32(vec![1], vec![0.0]),
+            Tensor::f32(vec![batch, IMG, IMG, CH], xs),
+            Tensor::i32(vec![batch], ys),
+        ])?;
+        correct += out[1].scalar()? as f64;
+        robust += out[2].scalar()? as f64;
+    }
+    let total = (opts.eval_batches * batch) as f64;
+    let cell = LipCell {
+        variant: variant.into(),
+        params,
+        step_seconds: log.seconds / log.steps as f64,
+        accuracy: correct / total * 100.0,
+        robust_accuracy: robust / total * 100.0,
+    };
+    let _ = std::fs::write(
+        &jpath,
+        Json::obj(vec![
+            ("params", Json::Num(cell.params as f64)),
+            ("step_seconds", Json::Num(cell.step_seconds)),
+            ("accuracy", Json::Num(cell.accuracy)),
+            ("robust_accuracy", Json::Num(cell.robust_accuracy)),
+        ])
+        .to_string(),
+    );
+    Ok(cell)
+}
+
+/// Run a list of variants (parallel across workers).
+pub fn run_variants(variants: &[String], opts: &RunOpts) -> Result<Vec<LipCell>> {
+    let results = parallel_map(variants.len(), opts.workers, |i| {
+        run_variant(&variants[i], opts).map_err(|e| format!("{e:#}"))
+    });
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.map_err(|e| anyhow::anyhow!("variant {}: {e}", variants[i])))
+        .collect()
+}
+
+fn describe(variant: &str) -> (String, String, String, String) {
+    // (conv layer, groups, activation, permutation)
+    if variant == "soc" {
+        return ("SOC".into(), "-".into(), "MaxMin".into(), "-".into());
+    }
+    let parts: Vec<&str> = variant.split('_').collect(); // g4 gb act perm
+    let gb = parts[1];
+    let groups = if gb == "0" {
+        "(4, -)".to_string()
+    } else {
+        format!("(4, {gb})")
+    };
+    let act = if parts[2] == "mmp" {
+        "MaxMinPermuted"
+    } else {
+        "MaxMin"
+    };
+    let perm = if parts[3] == "p" { "paired" } else { "not paired" };
+    ("GS-SOC".into(), groups, act.into(), perm.into())
+}
+
+fn render(title: &str, cells: &[LipCell], with_perm: bool) -> Table {
+    let soc_time = cells
+        .iter()
+        .find(|c| c.variant == "soc")
+        .map(|c| c.step_seconds)
+        .unwrap_or(1.0);
+    let mut headers = vec!["Conv. Layer", "# Params", "Groups", "Speedup", "Activation"];
+    if with_perm {
+        headers.push("Permutation");
+    }
+    headers.extend_from_slice(&["Accuracy", "Robust Accuracy"]);
+    let mut table = Table::new(title, &headers);
+    for c in cells {
+        let (conv, groups, act, perm) = describe(&c.variant);
+        let mut row = vec![
+            conv,
+            fmt_params(c.params),
+            groups,
+            fmt(soc_time / c.step_seconds, 2),
+            act,
+        ];
+        if with_perm {
+            row.push(perm);
+        }
+        row.push(format!("{}%", fmt(c.accuracy, 2)));
+        row.push(format!("{}%", fmt(c.robust_accuracy, 2)));
+        table.row(row);
+    }
+    table
+}
+
+/// Render an arbitrary subset (used by `--variants` when the full 17-cell
+/// ablation exceeds the compute budget of the testbed).
+pub fn render_partial(title: &str, cells: &[LipCell], with_perm: bool) -> Table {
+    render(title, cells, with_perm)
+}
+
+/// Table 3: SOC + GS-SOC (best act/perm).
+pub fn run_table3(opts: &RunOpts) -> Result<Table> {
+    let cells = run_variants(&table3_variants(), opts)?;
+    Ok(render(
+        "Table 3 — LipConvnet-8 (CIFAR-100 stand-in): SOC vs GS-SOC",
+        &cells,
+        false,
+    ))
+}
+
+/// Table 4: the full activation × permutation ablation.
+pub fn run_table4(opts: &RunOpts) -> Result<Table> {
+    let cells = run_variants(&all_variants(), opts)?;
+    Ok(render(
+        "Table 4 — activation × ChShuffle-permutation ablation",
+        &cells,
+        true,
+    ))
+}

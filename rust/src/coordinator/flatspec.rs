@@ -1,0 +1,116 @@
+//! Rust mirror of `python/compile/flat.py`'s `ParamSpec`: named views
+//! into the flat f32 buffers the artifacts exchange. The layout is read
+//! from each artifact's metadata (`extra.base_spec` / `extra.adapter_spec`),
+//! so Rust never hard-codes the Python packing order.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Ordered (name, shape) layout of a flat f32 buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatSpec {
+    pub entries: Vec<(String, Vec<usize>)>,
+}
+
+impl FlatSpec {
+    pub fn from_json(v: &Json) -> Result<FlatSpec> {
+        let arr = v.as_arr().ok_or_else(|| anyhow!("spec is not an array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let name = e.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string();
+            let shape = e
+                .req("shape")
+                .map_err(|e| anyhow!("{e}"))?
+                .usize_vec()
+                .ok_or_else(|| anyhow!("bad shape"))?;
+            entries.push((name, shape));
+        }
+        Ok(FlatSpec { entries })
+    }
+
+    pub fn size(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Byte-offset table entry for `name`: (offset, shape).
+    pub fn locate(&self, name: &str) -> Result<(usize, &[usize])> {
+        let mut off = 0;
+        for (n, s) in &self.entries {
+            let len: usize = s.iter().product();
+            if n == name {
+                return Ok((off, s));
+            }
+            off += len;
+        }
+        Err(anyhow!("flat spec has no entry '{name}'"))
+    }
+
+    /// Immutable view of one named parameter.
+    pub fn view<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let (off, shape) = self.locate(name)?;
+        let len: usize = shape.iter().product();
+        anyhow::ensure!(flat.len() == self.size(), "flat buffer size mismatch");
+        Ok(&flat[off..off + len])
+    }
+
+    /// Mutable view of one named parameter.
+    pub fn view_mut<'a>(&self, flat: &'a mut [f32], name: &str) -> Result<&'a mut [f32]> {
+        anyhow::ensure!(flat.len() == self.size(), "flat buffer size mismatch");
+        let (off, shape) = self.locate(name)?;
+        let len: usize = shape.iter().product();
+        Ok(&mut flat[off..off + len])
+    }
+
+    /// Names with a given suffix (e.g. all `.gs_l` adapter blocks).
+    pub fn names_with_suffix(&self, suffix: &str) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|(n, _)| n.ends_with(suffix))
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FlatSpec {
+        FlatSpec::from_json(
+            &Json::parse(
+                r#"[{"name":"a","shape":[2,2]},{"name":"b","shape":[3]},
+                    {"name":"l.gs_l","shape":[2,1,1]}]"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_sizes() {
+        let s = spec();
+        assert_eq!(s.size(), 4 + 3 + 2);
+        assert_eq!(s.locate("b").unwrap().0, 4);
+        assert!(s.locate("zz").is_err());
+    }
+
+    #[test]
+    fn views() {
+        let s = spec();
+        let mut flat: Vec<f32> = (0..9).map(|x| x as f32).collect();
+        assert_eq!(s.view(&flat, "b").unwrap(), &[4.0, 5.0, 6.0]);
+        s.view_mut(&mut flat, "a").unwrap()[0] = 99.0;
+        assert_eq!(flat[0], 99.0);
+        assert_eq!(s.names_with_suffix(".gs_l"), vec!["l.gs_l".to_string()]);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let s = spec();
+        assert!(s.view(&[0.0; 3], "a").is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! Adapter merging (§6.1: "weights of the matrix Q can be merged with the
+//! pretrained weight W producing no inference overhead").
+//!
+//! Given a fine-tuned GSOFT (or OFT / LoRA / Double GSOFT) adapter flat
+//! buffer and the frozen base buffer, produce a *merged* base buffer whose
+//! plain forward pass (the `ft` eval artifact) reproduces the adapted
+//! model exactly. The GS algebra runs through [`crate::gs`] — the exact
+//! f64 reference implementation.
+
+use anyhow::{anyhow, Result};
+
+use crate::gs::{GsMatrix, GsSpec};
+use crate::gs::blockdiag::BlockDiag;
+use crate::linalg::{cayley_unconstrained, Mat};
+
+use super::flatspec::FlatSpec;
+
+/// Cayley blocks from a flat `(r, b, b)` parameter slab.
+fn cayley_blocks(raw: &[f32], r: usize, b: usize) -> BlockDiag {
+    assert_eq!(raw.len(), r * b * b);
+    let blocks = (0..r)
+        .map(|i| {
+            let a = Mat::from_f32(b, b, &raw[i * b * b..(i + 1) * b * b]);
+            cayley_unconstrained(&a)
+        })
+        .collect();
+    BlockDiag::new(blocks)
+}
+
+/// Build the orthogonal GSOFT `Q` (d×d) from the two flat slabs.
+pub fn gsoft_q(l_raw: &[f32], r_raw: &[f32], d: usize, b: usize) -> GsMatrix {
+    let r = d / b;
+    let spec = GsSpec::gsoft(d, b);
+    GsMatrix::new(
+        spec,
+        cayley_blocks(l_raw, r, b),
+        cayley_blocks(r_raw, r, b),
+    )
+}
+
+/// Merge a GSOFT adapter into the base weights of the `cls` transformer.
+///
+/// For every adapted linear `W (din×dout)` the fine-tuned model computes
+/// `x @ (Q W)`; merging stores `W' = Q W` back into the base buffer.
+pub fn merge_gsoft(
+    base: &[f32],
+    adapter: &[f32],
+    base_spec: &FlatSpec,
+    adapter_spec: &FlatSpec,
+    block: usize,
+) -> Result<Vec<f32>> {
+    let mut merged = base.to_vec();
+    for lname in adapter_spec.names_with_suffix(".gs_l") {
+        let layer = lname
+            .strip_suffix(".gs_l")
+            .ok_or_else(|| anyhow!("bad adapter name {lname}"))?;
+        let l_raw = adapter_spec.view(adapter, &lname)?;
+        let r_raw = adapter_spec.view(adapter, &format!("{layer}.gs_r"))?;
+        let (_, wshape) = base_spec.locate(layer)?;
+        anyhow::ensure!(wshape.len() == 2, "adapted entry {layer} is not a matrix");
+        let (din, dout) = (wshape[0], wshape[1]);
+        let q = gsoft_q(l_raw, r_raw, din, block);
+        let w = Mat::from_f32(din, dout, base_spec.view(base, layer)?);
+        let wq = q.apply(&w); // Q @ W via the structured path
+        base_spec
+            .view_mut(&mut merged, layer)?
+            .copy_from_slice(&wq.to_f32());
+    }
+    Ok(merged)
+}
+
+/// Merge an OFT adapter (block-diagonal Q).
+pub fn merge_oft(
+    base: &[f32],
+    adapter: &[f32],
+    base_spec: &FlatSpec,
+    adapter_spec: &FlatSpec,
+    block: usize,
+) -> Result<Vec<f32>> {
+    let mut merged = base.to_vec();
+    for kname in adapter_spec.names_with_suffix(".oft_k") {
+        let layer = kname.strip_suffix(".oft_k").unwrap();
+        let k_raw = adapter_spec.view(adapter, &kname)?;
+        let (_, wshape) = base_spec.locate(layer)?;
+        let (din, dout) = (wshape[0], wshape[1]);
+        let q = cayley_blocks(k_raw, din / block, block);
+        let w = Mat::from_f32(din, dout, base_spec.view(base, layer)?);
+        let wq = q.matmul_right(&w);
+        base_spec
+            .view_mut(&mut merged, layer)?
+            .copy_from_slice(&wq.to_f32());
+    }
+    Ok(merged)
+}
+
+/// Merge a LoRA adapter: `W' = W + A B`.
+pub fn merge_lora(
+    base: &[f32],
+    adapter: &[f32],
+    base_spec: &FlatSpec,
+    adapter_spec: &FlatSpec,
+) -> Result<Vec<f32>> {
+    let mut merged = base.to_vec();
+    for aname in adapter_spec.names_with_suffix(".lora_a") {
+        let layer = aname.strip_suffix(".lora_a").unwrap();
+        let (_, ashape) = adapter_spec.locate(&aname)?;
+        let (din, rank) = (ashape[0], ashape[1]);
+        let a = Mat::from_f32(din, rank, adapter_spec.view(adapter, &aname)?);
+        let bname = format!("{layer}.lora_b");
+        let (_, bshape) = adapter_spec.locate(&bname)?;
+        let bmat = Mat::from_f32(bshape[0], bshape[1], adapter_spec.view(adapter, &bname)?);
+        let (_, wshape) = base_spec.locate(layer)?;
+        let w = Mat::from_f32(wshape[0], wshape[1], base_spec.view(base, layer)?);
+        let merged_w = &w + &a.matmul(&bmat);
+        base_spec
+            .view_mut(&mut merged, layer)?
+            .copy_from_slice(&merged_w.to_f32());
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    fn mini_specs() -> (FlatSpec, FlatSpec) {
+        let base = FlatSpec::from_json(
+            &Json::parse(r#"[{"name":"l0.wq","shape":[8,6]},{"name":"head","shape":[6,2]}]"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let adapter = FlatSpec::from_json(
+            &Json::parse(
+                r#"[{"name":"l0.wq.gs_l","shape":[4,2,2]},
+                    {"name":"l0.wq.gs_r","shape":[4,2,2]}]"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        (base, adapter)
+    }
+
+    #[test]
+    fn identity_adapter_is_noop() {
+        let (bs, asp) = mini_specs();
+        let mut rng = Rng::new(1);
+        let base: Vec<f32> = (0..bs.size()).map(|_| rng.normal_f32(1.0)).collect();
+        let adapter = vec![0.0f32; asp.size()];
+        let merged = merge_gsoft(&base, &adapter, &bs, &asp, 2).unwrap();
+        for (a, b) in merged.iter().zip(base.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn merged_weight_matches_explicit_q_w() {
+        let (bs, asp) = mini_specs();
+        let mut rng = Rng::new(2);
+        let base: Vec<f32> = (0..bs.size()).map(|_| rng.normal_f32(1.0)).collect();
+        let adapter: Vec<f32> = (0..asp.size()).map(|_| rng.normal_f32(0.5)).collect();
+        let merged = merge_gsoft(&base, &adapter, &bs, &asp, 2).unwrap();
+        // Explicit: Q dense times W.
+        let q = gsoft_q(
+            asp.view(&adapter, "l0.wq.gs_l").unwrap(),
+            asp.view(&adapter, "l0.wq.gs_r").unwrap(),
+            8,
+            2,
+        )
+        .to_dense();
+        let w = Mat::from_f32(8, 6, bs.view(&base, "l0.wq").unwrap());
+        let expect = q.matmul(&w).to_f32();
+        let got = bs.view(&merged, "l0.wq").unwrap();
+        for (a, b) in got.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Non-adapted entries untouched.
+        assert_eq!(
+            bs.view(&merged, "head").unwrap(),
+            bs.view(&base, "head").unwrap()
+        );
+        // Orthogonality: singular values of W preserved.
+        let s0 = crate::linalg::singular_values(&w);
+        let s1 = crate::linalg::singular_values(&Mat::from_f32(
+            8,
+            6,
+            bs.view(&merged, "l0.wq").unwrap(),
+        ));
+        for (a, b) in s0.iter().zip(s1.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lora_merge_adds_low_rank() {
+        let bs = FlatSpec::from_json(
+            &Json::parse(r#"[{"name":"l0.wq","shape":[4,4]}]"#).unwrap(),
+        )
+        .unwrap();
+        let asp = FlatSpec::from_json(
+            &Json::parse(
+                r#"[{"name":"l0.wq.lora_a","shape":[4,2]},
+                    {"name":"l0.wq.lora_b","shape":[2,4]}]"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(3);
+        let base: Vec<f32> = (0..16).map(|_| rng.normal_f32(1.0)).collect();
+        let mut adapter: Vec<f32> = (0..16).map(|_| rng.normal_f32(1.0)).collect();
+        let merged = merge_lora(&base, &adapter, &bs, &asp).unwrap();
+        assert!(merged.iter().zip(base.iter()).any(|(a, b)| (a - b).abs() > 1e-4));
+        // zero B ⇒ no-op
+        for v in asp.view_mut(&mut adapter, "l0.wq.lora_b").unwrap() {
+            *v = 0.0;
+        }
+        let merged0 = merge_lora(&base, &adapter, &bs, &asp).unwrap();
+        assert_eq!(merged0, base);
+    }
+}

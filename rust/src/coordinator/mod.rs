@@ -1,0 +1,18 @@
+//! L3 coordinator — the fine-tuning orchestration framework: config
+//! system, training/eval drivers, adapter merging, checkpoints, and the
+//! experiment harnesses that regenerate every table and figure of the
+//! paper (see `DESIGN.md` §3 for the experiment index).
+
+pub mod checkpoint;
+pub mod config;
+pub mod experiments;
+pub mod flatspec;
+pub mod merge;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use config::RunOpts;
+pub use flatspec::FlatSpec;
+pub use schedule::LrSchedule;
+pub use trainer::{Evaluator, RunLog, Trainer, TrainState};

@@ -1,0 +1,78 @@
+//! Learning-rate schedules for the training driver.
+
+/// LR as a function of the 0-based step.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Const(f64),
+    /// Linear warmup to `base` over `warmup` steps, cosine decay to
+    /// `base * floor_frac` at `total`.
+    WarmupCosine {
+        base: f64,
+        warmup: usize,
+        total: usize,
+        floor_frac: f64,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f64 {
+        match *self {
+            LrSchedule::Const(lr) => lr,
+            LrSchedule::WarmupCosine {
+                base,
+                warmup,
+                total,
+                floor_frac,
+            } => {
+                if warmup > 0 && step < warmup {
+                    return base * (step + 1) as f64 / warmup as f64;
+                }
+                let total = total.max(warmup + 1);
+                let t = ((step - warmup) as f64 / (total - warmup) as f64).min(1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                base * (floor_frac + (1.0 - floor_frac) * cos)
+            }
+        }
+    }
+
+    /// The standard fine-tuning schedule used by the table harnesses.
+    pub fn finetune(base: f64, total: usize) -> LrSchedule {
+        LrSchedule::WarmupCosine {
+            base,
+            warmup: (total / 10).max(1),
+            total,
+            floor_frac: 0.1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        let s = LrSchedule::Const(1e-3);
+        assert_eq!(s.at(0), 1e-3);
+        assert_eq!(s.at(1000), 1e-3);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::WarmupCosine {
+            base: 1.0,
+            warmup: 10,
+            total: 100,
+            floor_frac: 0.1,
+        };
+        assert!(s.at(0) < s.at(5));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(50) < 1.0);
+        assert!((s.at(99) - 0.1).abs() < 0.01, "{}", s.at(99));
+        assert!((s.at(500) - 0.1).abs() < 1e-9, "clamped past total");
+        // monotone decreasing after warmup
+        for k in 10..99 {
+            assert!(s.at(k) >= s.at(k + 1) - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! The generic training driver: owns the Adam state, the step loop and
+//! the metric log; every experiment family (cls / dn / lip) plugs in a
+//! batch generator and an artifact pair.
+//!
+//! The hot loop is pure Rust + PJRT: `train_step` artifacts have the
+//! uniform signature
+//! `(trainable, adam_m, adam_v, step, lr, frozen, *batch) ->
+//!  (trainable', adam_m', adam_v', loss)`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Executable, Tensor};
+use crate::util::rng::Rng;
+
+use super::schedule::LrSchedule;
+
+/// Mutable optimizer state carried across steps.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub trainable: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub step: usize,
+}
+
+impl TrainState {
+    pub fn new(trainable: Vec<f32>) -> TrainState {
+        let n = trainable.len();
+        TrainState {
+            trainable,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            step: 0,
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct RunLog {
+    pub losses: Vec<f32>,
+    pub seconds: f64,
+    pub steps: usize,
+}
+
+impl RunLog {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean of the last `k` losses (smoother than the last point).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let k = k.min(n);
+        self.losses[n - k..].iter().sum::<f32>() / k as f32
+    }
+
+    pub fn steps_per_second(&self) -> f64 {
+        self.steps as f64 / self.seconds.max(1e-9)
+    }
+}
+
+/// Training driver over one train artifact.
+pub struct Trainer {
+    pub exe: Arc<Executable>,
+    pub frozen: Vec<f32>,
+}
+
+impl Trainer {
+    pub fn new(exe: Arc<Executable>, frozen: Vec<f32>) -> Trainer {
+        Trainer { exe, frozen }
+    }
+
+    /// Run `steps` optimizer steps. `batch_fn(step, rng)` produces the
+    /// family-specific batch tensors appended after the uniform prefix.
+    pub fn run(
+        &self,
+        state: &mut TrainState,
+        steps: usize,
+        schedule: LrSchedule,
+        rng: &mut Rng,
+        mut batch_fn: impl FnMut(usize, &mut Rng) -> Vec<Tensor>,
+    ) -> Result<RunLog> {
+        let n = state.trainable.len();
+        let frozen_shape = self.exe.meta.inputs[5].shape.clone();
+        let t0 = Instant::now();
+        let mut losses = Vec::with_capacity(steps);
+        for local in 0..steps {
+            let lr = schedule.at(state.step) as f32;
+            let mut inputs = vec![
+                Tensor::f32(vec![n], std::mem::take(&mut state.trainable)),
+                Tensor::f32(vec![n], std::mem::take(&mut state.adam_m)),
+                Tensor::f32(vec![n], std::mem::take(&mut state.adam_v)),
+                Tensor::scalar_f32(state.step as f32),
+                Tensor::scalar_f32(lr),
+                Tensor::f32(frozen_shape.clone(), self.frozen.clone()),
+            ];
+            inputs.extend(batch_fn(local, rng));
+            let mut out = self.exe.run(&inputs)?;
+            let loss = out[3].scalar()?;
+            anyhow::ensure!(
+                loss.is_finite(),
+                "non-finite loss at step {} of {}",
+                state.step,
+                self.exe.meta.name
+            );
+            state.adam_v = std::mem::replace(&mut out[2], Tensor::zeros_f32(vec![0]))
+                .into_f32()?;
+            state.adam_m = std::mem::replace(&mut out[1], Tensor::zeros_f32(vec![0]))
+                .into_f32()?;
+            state.trainable = std::mem::replace(&mut out[0], Tensor::zeros_f32(vec![0]))
+                .into_f32()?;
+            state.step += 1;
+            losses.push(loss);
+        }
+        Ok(RunLog {
+            losses,
+            seconds: t0.elapsed().as_secs_f64(),
+            steps,
+        })
+    }
+}
+
+/// Evaluation driver: sums each output scalar over batches.
+pub struct Evaluator {
+    pub exe: Arc<Executable>,
+    pub frozen: Vec<f32>,
+}
+
+impl Evaluator {
+    pub fn new(exe: Arc<Executable>, frozen: Vec<f32>) -> Evaluator {
+        Evaluator { exe, frozen }
+    }
+
+    /// Run `batches` eval batches; returns per-output sums (loss summed,
+    /// counts summed) in artifact output order, skipping output 0's mean
+    /// semantics — callers divide as appropriate.
+    pub fn run(
+        &self,
+        trainable: &[f32],
+        batches: usize,
+        rng: &mut Rng,
+        mut batch_fn: impl FnMut(usize, &mut Rng) -> Vec<Tensor>,
+    ) -> Result<Vec<f64>> {
+        let frozen_shape = self.exe.meta.inputs[1].shape.clone();
+        let mut sums = vec![0.0f64; self.exe.meta.outputs.len()];
+        for b in 0..batches {
+            let mut inputs = vec![
+                Tensor::f32(vec![trainable.len()], trainable.to_vec()),
+                Tensor::f32(frozen_shape.clone(), self.frozen.clone()),
+            ];
+            inputs.extend(batch_fn(b, rng));
+            let out = self.exe.run(&inputs)?;
+            for (s, t) in sums.iter_mut().zip(out.iter()) {
+                *s += t.scalar()? as f64;
+            }
+        }
+        Ok(sums)
+    }
+
+    /// Per-example predictions are not exposed by the eval artifacts (they
+    /// return sums); for metric computations that need predictions (MCC /
+    /// Pearson) the caller uses batch size 1 labels trick — see table1.
+    pub fn outputs(&self) -> usize {
+        self.exe.meta.outputs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_log_stats() {
+        let log = RunLog {
+            losses: vec![4.0, 3.0, 2.0, 1.0],
+            seconds: 2.0,
+            steps: 4,
+        };
+        assert_eq!(log.final_loss(), 1.0);
+        assert_eq!(log.tail_loss(2), 1.5);
+        assert_eq!(log.tail_loss(100), 2.5);
+        assert_eq!(log.steps_per_second(), 2.0);
+    }
+
+    #[test]
+    fn train_state_init() {
+        let s = TrainState::new(vec![1.0, 2.0]);
+        assert_eq!(s.adam_m, vec![0.0, 0.0]);
+        assert_eq!(s.step, 0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Concept dataset — the DreamBooth stand-in (Table 2 / Figure 6).
+//!
+//! 8×8 grayscale "images" from 8 procedural context classes (blobs,
+//! stripes, rings, ...) plus one held-out *concept* (a pattern mixture
+//! never seen in pretraining) with only a handful of examples — the same
+//! few-shot fine-tuning regime as subject-driven generation. Feature-space
+//! similarity against a fixed random-projection encoder plays the role of
+//! CLIP embeddings (deterministic, frozen, and shared by all methods, so
+//! comparisons between methods are meaningful even though absolute values
+//! are not CLIP scores).
+
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 8;
+pub const DIM: usize = IMG * IMG;
+/// Context classes 0..7; the concept conditions on token 8.
+pub const NUM_CONTEXTS: usize = 8;
+pub const CONCEPT_COND: i32 = 8;
+
+/// Render one context-class image with per-sample jitter.
+pub fn context_image(class: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(class < NUM_CONTEXTS);
+    let mut img = vec![0.0f32; DIM];
+    let jx = rng.uniform_in(-1.0, 1.0);
+    let jy = rng.uniform_in(-1.0, 1.0);
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let fx = x as f32 + jx;
+            let fy = y as f32 + jy;
+            let v = match class {
+                // gaussian blob, center varies by jitter
+                0 => {
+                    let dx = fx - 3.5;
+                    let dy = fy - 3.5;
+                    (-(dx * dx + dy * dy) / 6.0).exp() * 2.0 - 0.5
+                }
+                // vertical stripes
+                1 => ((fx * std::f32::consts::PI / 2.0).sin()) * 0.9,
+                // horizontal stripes
+                2 => ((fy * std::f32::consts::PI / 2.0).sin()) * 0.9,
+                // diagonal gradient
+                3 => (fx + fy) / 14.0 * 2.0 - 1.0,
+                // ring
+                4 => {
+                    let r = ((fx - 3.5).powi(2) + (fy - 3.5).powi(2)).sqrt();
+                    (-(r - 2.5).powi(2)).exp() * 1.8 - 0.4
+                }
+                // checker (coarse)
+                5 => {
+                    if ((x / 2) + (y / 2)) % 2 == 0 {
+                        0.8
+                    } else {
+                        -0.8
+                    }
+                }
+                // corner blob
+                6 => {
+                    let dx = fx - 1.0;
+                    let dy = fy - 1.0;
+                    (-(dx * dx + dy * dy) / 4.0).exp() * 2.0 - 0.5
+                }
+                // diagonal stripes
+                _ => (((fx - fy) * std::f32::consts::PI / 2.5).sin()) * 0.9,
+            };
+            img[y * IMG + x] = v + rng.normal_f32(0.08);
+        }
+    }
+    img
+}
+
+/// The held-out concept: fine checkerboard modulated by a corner gradient
+/// — a combination no context class produces.
+pub fn concept_image(rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0.0f32; DIM];
+    // Fixed identity (same "subject" in every shot), small per-sample
+    // amplitude jitter + noise (different "shots").
+    let amp = 1.0 + rng.uniform_in(-0.1, 0.1);
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let checker = if (x + y) % 2 == 0 { 1.0 } else { -1.0 };
+            let grad = (x as f32) / 7.0; // left-to-right ramp
+            img[y * IMG + x] = amp * checker * (0.4 + 0.6 * grad) + rng.normal_f32(0.05);
+        }
+    }
+    img
+}
+
+/// Pretraining batch: (x0, cond) pairs over the context classes.
+pub fn pretrain_batch(n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = Vec::with_capacity(n * DIM);
+    let mut conds = Vec::with_capacity(n);
+    for _ in 0..n {
+        let class = rng.below(NUM_CONTEXTS);
+        xs.extend_from_slice(&context_image(class, rng));
+        conds.push(class as i32);
+    }
+    (xs, conds)
+}
+
+/// The few-shot concept set (like DreamBooth's 4–6 photos). Fixed count,
+/// jittered instances.
+pub fn concept_examples(n: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    (0..n).map(|_| concept_image(rng)).collect()
+}
+
+/// Fine-tuning batch: concept examples (resampled with jitter) with the
+/// concept condition token.
+pub fn finetune_batch(n: usize, examples: &[Vec<f32>], rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = Vec::with_capacity(n * DIM);
+    let conds = vec![CONCEPT_COND; n];
+    for _ in 0..n {
+        xs.extend_from_slice(rng.choice(examples).as_slice());
+    }
+    (xs, conds)
+}
+
+// ---- frozen feature encoder (the CLIP stand-in) ------------------------------
+
+/// Deterministic random-projection + tanh feature encoder. All methods
+/// share it, like all methods share CLIP in the paper.
+pub struct Encoder {
+    w: Vec<f32>, // (FEAT, DIM) row-major
+}
+
+pub const FEAT: usize = 32;
+
+impl Encoder {
+    pub fn new() -> Encoder {
+        let mut rng = Rng::new(0xC11A);
+        Encoder {
+            w: (0..FEAT * DIM)
+                .map(|_| rng.normal_f32(1.0 / (DIM as f32).sqrt()))
+                .collect(),
+        }
+    }
+
+    pub fn embed(&self, img: &[f32]) -> Vec<f32> {
+        assert_eq!(img.len(), DIM);
+        let mut out = vec![0.0f32; FEAT];
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &self.w[i * DIM..(i + 1) * DIM];
+            let dot: f32 = row.iter().zip(img).map(|(a, b)| a * b).sum();
+            *o = dot.tanh();
+        }
+        out
+    }
+
+    /// Cosine similarity of embeddings.
+    pub fn similarity(&self, a: &[f32], b: &[f32]) -> f64 {
+        let ea = self.embed(a);
+        let eb = self.embed(b);
+        cosine(&ea, &eb)
+    }
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        (dot / (na * nb)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_have_expected_scale() {
+        let mut rng = Rng::new(1);
+        for class in 0..NUM_CONTEXTS {
+            let img = context_image(class, &mut rng);
+            assert_eq!(img.len(), DIM);
+            let maxabs = img.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            assert!(maxabs < 4.0 && maxabs > 0.1, "class {class}: {maxabs}");
+        }
+        let c = concept_image(&mut rng);
+        assert_eq!(c.len(), DIM);
+    }
+
+    #[test]
+    fn classes_are_separable_in_feature_space() {
+        // Same-class similarity must exceed cross-class similarity — else
+        // the "CLIP" metric would be meaningless.
+        let enc = Encoder::new();
+        let mut rng = Rng::new(2);
+        let mut same = 0.0;
+        let mut cross = 0.0;
+        let mut n = 0.0;
+        for class in 0..NUM_CONTEXTS {
+            let a = context_image(class, &mut rng);
+            let b = context_image(class, &mut rng);
+            let c = context_image((class + 3) % NUM_CONTEXTS, &mut rng);
+            same += enc.similarity(&a, &b);
+            cross += enc.similarity(&a, &c);
+            n += 1.0;
+        }
+        assert!(
+            same / n > cross / n + 0.2,
+            "same {} vs cross {}",
+            same / n,
+            cross / n
+        );
+    }
+
+    #[test]
+    fn concept_is_distinct_from_contexts() {
+        let enc = Encoder::new();
+        let mut rng = Rng::new(3);
+        let concept = concept_image(&mut rng);
+        let concept2 = concept_image(&mut rng);
+        let self_sim = enc.similarity(&concept, &concept2);
+        for class in 0..NUM_CONTEXTS {
+            let ctx = context_image(class, &mut rng);
+            let sim = enc.similarity(&concept, &ctx);
+            assert!(self_sim > sim + 0.1, "class {class}: {self_sim} vs {sim}");
+        }
+    }
+
+    #[test]
+    fn batches_shapes_and_determinism() {
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let (x1, c1) = pretrain_batch(16, &mut r1);
+        let (x2, c2) = pretrain_batch(16, &mut r2);
+        assert_eq!(x1, x2);
+        assert_eq!(c1, c2);
+        assert_eq!(x1.len(), 16 * DIM);
+        assert!(c1.iter().all(|&c| (0..NUM_CONTEXTS as i32).contains(&c)));
+
+        let ex = concept_examples(4, &mut r1);
+        let (fx, fc) = finetune_batch(8, &ex, &mut r1);
+        assert_eq!(fx.len(), 8 * DIM);
+        assert!(fc.iter().all(|&c| c == CONCEPT_COND));
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic workload generators — the offline stand-ins for the paper's
+//! datasets (substitutions documented in DESIGN.md §3 and EXPERIMENTS.md):
+//!
+//! - [`synglue`] — 8-task sequence-classification suite (GLUE stand-in)
+//! - [`concept`] — few-shot concept adaptation set (DreamBooth stand-in)
+//! - [`vision`]  — image classification (CIFAR-100 stand-in)
+//!
+//! All generators are seeded and platform-deterministic, so every number
+//! in EXPERIMENTS.md regenerates exactly.
+
+pub mod concept;
+pub mod synglue;
+pub mod vision;

@@ -1,0 +1,210 @@
+//! Block-diagonal matrices — the `L` and `R` factors of a GS matrix.
+//!
+//! Blocks may be rectangular (Definition 3.1 allows `b^1 × b^2` blocks);
+//! the orthogonal parametrization (§4) uses square blocks produced by the
+//! Cayley transform.
+
+use crate::linalg::{cayley, Mat};
+use crate::util::rng::Rng;
+
+/// `diag(B_1, …, B_k)` with arbitrary rectangular blocks.
+#[derive(Clone, Debug)]
+pub struct BlockDiag {
+    pub blocks: Vec<Mat>,
+}
+
+impl BlockDiag {
+    pub fn new(blocks: Vec<Mat>) -> BlockDiag {
+        assert!(!blocks.is_empty());
+        BlockDiag { blocks }
+    }
+
+    /// `k` identical-shape zero blocks.
+    pub fn zeros(k: usize, b_rows: usize, b_cols: usize) -> BlockDiag {
+        BlockDiag {
+            blocks: (0..k).map(|_| Mat::zeros(b_rows, b_cols)).collect(),
+        }
+    }
+
+    /// Identity (square blocks).
+    pub fn identity(k: usize, b: usize) -> BlockDiag {
+        BlockDiag {
+            blocks: (0..k).map(|_| Mat::eye(b)).collect(),
+        }
+    }
+
+    /// Gaussian random blocks of a common shape.
+    pub fn randn(k: usize, b_rows: usize, b_cols: usize, std: f64, rng: &mut Rng) -> BlockDiag {
+        BlockDiag {
+            blocks: (0..k).map(|_| Mat::randn(b_rows, b_cols, std, rng)).collect(),
+        }
+    }
+
+    /// Random block-diag with *orthogonal* square blocks.
+    pub fn rand_orthogonal(k: usize, b: usize, rng: &mut Rng) -> BlockDiag {
+        BlockDiag {
+            blocks: (0..k).map(|_| Mat::rand_orthogonal(b, rng)).collect(),
+        }
+    }
+
+    /// Cayley-parametrized orthogonal block-diag: block `i` is
+    /// `cayley(A_i - A_i^T)` — the paper's per-block orthogonality
+    /// enforcement, identity at `A = 0`.
+    pub fn cayley_from(params: &[Mat]) -> BlockDiag {
+        BlockDiag {
+            blocks: params.iter().map(cayley::cayley_unconstrained).collect(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total rows.
+    pub fn rows(&self) -> usize {
+        self.blocks.iter().map(|b| b.rows).sum()
+    }
+
+    /// Total cols.
+    pub fn cols(&self) -> usize {
+        self.blocks.iter().map(|b| b.cols).sum()
+    }
+
+    /// Trainable parameter count (entries of all blocks).
+    pub fn param_count(&self) -> usize {
+        self.blocks.iter().map(|b| b.rows * b.cols).sum()
+    }
+
+    /// Dense materialization.
+    pub fn to_mat(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows(), self.cols());
+        let (mut r0, mut c0) = (0, 0);
+        for b in &self.blocks {
+            out.set_block(r0, c0, b);
+            r0 += b.rows;
+            c0 += b.cols;
+        }
+        out
+    }
+
+    /// `self · a` without materializing the dense form — each block hits
+    /// its row-slice of `a`. This is the "group" half of group-and-shuffle.
+    pub fn matmul_right(&self, a: &Mat) -> Mat {
+        assert_eq!(self.cols(), a.rows, "blockdiag @ a shape mismatch");
+        let mut out = Mat::zeros(self.rows(), a.cols);
+        let (mut r0, mut c0) = (0, 0);
+        for blk in &self.blocks {
+            for i in 0..blk.rows {
+                for kk in 0..blk.cols {
+                    let f = blk[(i, kk)];
+                    if f == 0.0 {
+                        continue;
+                    }
+                    let arow = a.row(c0 + kk);
+                    let orow =
+                        &mut out.data[(r0 + i) * a.cols..(r0 + i + 1) * a.cols];
+                    for (o, &x) in orow.iter_mut().zip(arow.iter()) {
+                        *o += f * x;
+                    }
+                }
+            }
+            r0 += blk.rows;
+            c0 += blk.cols;
+        }
+        out
+    }
+
+    /// Apply to a vector.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols(), x.len());
+        let mut y = vec![0.0; self.rows()];
+        let (mut r0, mut c0) = (0, 0);
+        for blk in &self.blocks {
+            for i in 0..blk.rows {
+                let mut acc = 0.0;
+                for kk in 0..blk.cols {
+                    acc += blk[(i, kk)] * x[c0 + kk];
+                }
+                y[r0 + i] = acc;
+            }
+            r0 += blk.rows;
+            c0 += blk.cols;
+        }
+        y
+    }
+
+    /// Max per-block orthogonality error (`||B_i^T B_i - I||_F`).
+    pub fn blockwise_orthogonality_error(&self) -> f64 {
+        self.blocks
+            .iter()
+            .map(|b| b.orthogonality_error())
+            .fold(0.0, f64::max)
+    }
+
+    /// Transpose (block-wise).
+    pub fn t(&self) -> BlockDiag {
+        BlockDiag {
+            blocks: self.blocks.iter().map(|b| b.t()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn dense_and_structured_apply_agree() {
+        prop::check("blockdiag apply == dense apply", 81, |rng| {
+            let k = prop::size_in(rng, 1, 5);
+            let br = prop::size_in(rng, 1, 5);
+            let bc = prop::size_in(rng, 1, 5);
+            let bd = BlockDiag::randn(k, br, bc, 1.0, rng);
+            let a = Mat::randn(bd.cols(), prop::size_in(rng, 1, 4), 1.0, rng);
+            let dense = bd.to_mat().matmul(&a);
+            let fast = bd.matmul_right(&a);
+            assert!(dense.fro_dist(&fast) < 1e-10);
+
+            let x: Vec<f64> = (0..bd.cols()).map(|_| rng.normal()).collect();
+            let y1 = bd.matvec(&x);
+            let y2 = bd.to_mat().matvec(&x);
+            for (a, b) in y1.iter().zip(y2.iter()) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn cayley_blocks_give_orthogonal_blockdiag() {
+        prop::check("cayley blockdiag orthogonal", 82, |rng| {
+            let (b, k) = prop::block_shape(rng, 32);
+            let params: Vec<Mat> = (0..k).map(|_| Mat::randn(b, b, 1.0, rng)).collect();
+            let bd = BlockDiag::cayley_from(&params);
+            assert!(bd.blockwise_orthogonality_error() < 1e-8);
+            // The whole block-diagonal matrix is then orthogonal (§4).
+            assert!(bd.to_mat().is_orthogonal(1e-8));
+        });
+    }
+
+    #[test]
+    fn identity_blockdiag() {
+        let bd = BlockDiag::identity(3, 4);
+        assert!(bd.to_mat().fro_dist(&Mat::eye(12)) < 1e-15);
+        assert_eq!(bd.param_count(), 3 * 16);
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut rng = Rng::new(4);
+        let bd = BlockDiag::randn(3, 2, 5, 1.0, &mut rng);
+        assert!(bd.t().to_mat().fro_dist(&bd.to_mat().t()) < 1e-15);
+    }
+
+    #[test]
+    fn rectangular_sizes() {
+        let bd = BlockDiag::zeros(4, 3, 7);
+        assert_eq!(bd.rows(), 12);
+        assert_eq!(bd.cols(), 28);
+    }
+}

@@ -1,0 +1,303 @@
+//! Higher-order GS matrices `GS(P_{m+1}, …, P_1)` of Definition 5.1:
+//! `A = P_{m+1} · Π_{i=m..1} (B_i P_i)`, each `B_i` block-diagonal.
+//!
+//! Both the paper's recommended chains (`P_i = P_(k, br)`) and the block
+//! butterfly chains used by BOFT (Remark 2: butterflies are GS chains with
+//! particular permutations) are constructed here.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+use super::blockdiag::BlockDiag;
+use super::perm::{perm_kn, Perm};
+
+/// One `B_i P_i` stage of a GS chain.
+#[derive(Clone, Debug)]
+pub struct GsStage {
+    pub block: BlockDiag,
+    /// Applied *before* the block-diagonal factor (rightmost first).
+    pub perm: Perm,
+}
+
+/// `A = P_out · (B_m P_m) ⋯ (B_1 P_1)`.
+#[derive(Clone, Debug)]
+pub struct GsChain {
+    /// `P_{m+1}` — the final output permutation.
+    pub p_out: Perm,
+    /// Stages in application order: `stages[0]` is `(B_1, P_1)`.
+    pub stages: Vec<GsStage>,
+}
+
+impl GsChain {
+    /// Validated constructor: the Definition 5.1 chain constraint
+    /// `b_i^1 · k_i = b_{i+1}^2 · k_{i+1}`, plus permutation sizes.
+    pub fn new(p_out: Perm, stages: Vec<GsStage>) -> GsChain {
+        assert!(!stages.is_empty());
+        for w in stages.windows(2) {
+            assert_eq!(
+                w[0].block.rows(),
+                w[1].block.cols(),
+                "chain stage size mismatch"
+            );
+        }
+        for st in &stages {
+            assert_eq!(st.perm.n(), st.block.cols(), "P_i size must match B_i cols");
+        }
+        assert_eq!(
+            p_out.n(),
+            stages.last().unwrap().block.rows(),
+            "P_out size must match B_m rows"
+        );
+        GsChain { p_out, stages }
+    }
+
+    /// Number of block-diagonal factors `m`.
+    pub fn m(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Input dimension.
+    pub fn n(&self) -> usize {
+        self.stages[0].block.cols()
+    }
+
+    /// Output dimension.
+    pub fn out_dim(&self) -> usize {
+        self.p_out.n()
+    }
+
+    /// Trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.stages.iter().map(|s| s.block.param_count()).sum()
+    }
+
+    /// Dense materialization.
+    pub fn to_dense(&self) -> Mat {
+        let n = self.n();
+        // Apply the chain to the identity.
+        self.apply(&Mat::eye(n))
+    }
+
+    /// Structured apply `A · X`.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut cur = x.clone();
+        for st in &self.stages {
+            cur = st.perm.apply_rows(&cur);
+            cur = st.block.matmul_right(&cur);
+        }
+        self.p_out.apply_rows(&cur)
+    }
+
+    /// Structured apply to a vector.
+    pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut cur = x.to_vec();
+        for st in &self.stages {
+            cur = st.perm.apply_vec(&cur);
+            cur = st.block.matvec(&cur);
+        }
+        self.p_out.apply_vec(&cur)
+    }
+
+    /// Max per-block orthogonality error across all stages.
+    pub fn blockwise_orthogonality_error(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.block.blockwise_orthogonality_error())
+            .fold(0.0, f64::max)
+    }
+
+    // ---- constructors for the chains the paper discusses -----------------
+
+    /// The paper's recommended dense-forming chain (§5.1 / Theorem 2):
+    /// `m` square-block stages of `r` blocks sized `b×b` on dimension
+    /// `d = r·b`, with `P_1 = I` (first stage groups raw indices),
+    /// `P_2 = … = P_m = P_(r,d)`, and `P_out = P_(r,d)^T` so the chain with
+    /// identity blocks is the identity matrix... (for m=2 this reduces to
+    /// the GSOFT `Q = P^T L P R` layout).
+    pub fn gs_kn(d: usize, b: usize, m: usize, rng: &mut Rng, orthogonal: bool) -> GsChain {
+        assert!(d % b == 0);
+        let r = d / b;
+        let p = perm_kn(r, d);
+        let mut stages = Vec::new();
+        for i in 0..m {
+            let block = if orthogonal {
+                BlockDiag::rand_orthogonal(r, b, rng)
+            } else {
+                BlockDiag::randn(r, b, b, 1.0, rng)
+            };
+            let perm = if i == 0 { Perm::identity(d) } else { p.clone() };
+            stages.push(GsStage { block, perm });
+        }
+        // P_out chosen so identity blocks give the identity overall:
+        // (P (P ... )) — with m-1 interior P's, P_out = (P^{m-1})^{-1}.
+        let mut p_out = Perm::identity(d);
+        for _ in 1..m {
+            p_out = p_out.compose(&p);
+        }
+        GsChain::new(p_out.inverse(), stages)
+    }
+
+    /// Block-butterfly chain as used by BOFT (Remark 2): stage 0 is plain
+    /// block-diagonal (`r` blocks of `b`); stage `i ≥ 1` mixes block pairs
+    /// at block-stride `2^{i-1}`, expressed in GS form as
+    /// `S^{-1} · diag(2b-blocks) · S` with `S` the stride-gather
+    /// permutation. Requires `r` to be a power of two for the strided
+    /// stages (as in BOFT).
+    pub fn butterfly(d: usize, b: usize, m: usize, rng: &mut Rng, orthogonal: bool) -> GsChain {
+        assert!(d % b == 0);
+        let r = d / b;
+        let mut stages = Vec::new();
+        let mut pending = Perm::identity(d); // permutation to undo before next stage
+        for i in 0..m {
+            if i == 0 {
+                let block = if orthogonal {
+                    BlockDiag::rand_orthogonal(r, b, rng)
+                } else {
+                    BlockDiag::randn(r, b, b, 1.0, rng)
+                };
+                stages.push(GsStage {
+                    block,
+                    perm: Perm::identity(d),
+                });
+                continue;
+            }
+            let stride = 1usize << (i - 1);
+            assert!(
+                2 * stride <= r,
+                "butterfly stage {i} needs 2·2^{} ≤ r={r} blocks",
+                i - 1
+            );
+            let gather = butterfly_gather_perm(r, b, stride);
+            let block = if orthogonal {
+                BlockDiag::rand_orthogonal(r / 2, 2 * b, rng)
+            } else {
+                BlockDiag::randn(r / 2, 2 * b, 2 * b, 1.0, rng)
+            };
+            // B_i = gather^{-1} · blockdiag · gather; fold gather^{-1} into
+            // the next stage's P (chain composition keeps everything in
+            // GS(P_{m+1},…,P_1) form — this is exactly Remark 2).
+            stages.push(GsStage {
+                block,
+                perm: gather.compose(&pending),
+            });
+            pending = gather.inverse();
+        }
+        GsChain::new(pending, stages)
+    }
+}
+
+/// Gather permutation for a butterfly stage: reorders block indices so that
+/// blocks `p` and `p ⊕ stride` (XOR on the block index) become adjacent.
+fn butterfly_gather_perm(r: usize, b: usize, stride: usize) -> Perm {
+    assert!(stride > 0 && 2 * stride <= r);
+    // Enumerate block pairs in order; each pair (p, p^stride) with p's
+    // stride-bit clear becomes the next two block slots.
+    let mut order = Vec::with_capacity(r);
+    for p in 0..r {
+        if p & stride == 0 {
+            order.push(p);
+            order.push(p ^ stride);
+        }
+    }
+    // order[slot] = source block. sigma maps source index -> destination.
+    let mut sigma = vec![0usize; r * b];
+    for (slot, &src) in order.iter().enumerate() {
+        for j in 0..b {
+            sigma[src * b + j] = slot * b + j;
+        }
+    }
+    Perm::from_sigma(sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn gs_kn_identity_blocks_give_identity() {
+        for (d, b, m) in [(8, 2, 2), (16, 2, 3), (27, 3, 3), (16, 4, 2)] {
+            let mut rng = Rng::new(1);
+            let mut chain = GsChain::gs_kn(d, b, m, &mut rng, false);
+            for st in &mut chain.stages {
+                st.block = BlockDiag::identity(st.block.k(), st.block.blocks[0].rows);
+            }
+            assert!(
+                chain.to_dense().fro_dist(&Mat::eye(d)) < 1e-12,
+                "d={d} b={b} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn chain_apply_matches_dense() {
+        prop::check("chain apply == dense", 101, |rng| {
+            let b = [2usize, 3][rng.below(2)];
+            let r = prop::size_in(rng, 2, 4);
+            let d = b * r;
+            let m = prop::size_in(rng, 1, 3);
+            let chain = GsChain::gs_kn(d, b, m, rng, false);
+            let x = Mat::randn(d, 3, 1.0, rng);
+            assert!(chain.to_dense().matmul(&x).fro_dist(&chain.apply(&x)) < 1e-9);
+            let xv: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let y1 = chain.apply_vec(&xv);
+            let y2 = chain.to_dense().matvec(&xv);
+            for (a, b) in y1.iter().zip(y2.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn orthogonal_chain_is_orthogonal() {
+        prop::check("orthogonal chain", 102, |rng| {
+            let b = [2usize, 4][rng.below(2)];
+            let r = [2usize, 4][rng.below(2)];
+            let m = prop::size_in(rng, 1, 3);
+            let chain = GsChain::gs_kn(b * r, b, m, rng, true);
+            let dense = chain.to_dense();
+            assert!(dense.is_orthogonal(1e-8));
+        });
+    }
+
+    #[test]
+    fn butterfly_is_orthogonal_and_matches_dense() {
+        let mut rng = Rng::new(5);
+        // r = 8 blocks of b = 2, full butterfly m = 1 + log2(8) = 4.
+        let chain = GsChain::butterfly(16, 2, 4, &mut rng, true);
+        let dense = chain.to_dense();
+        assert!(dense.is_orthogonal(1e-8));
+        let x = Mat::randn(16, 2, 1.0, &mut rng);
+        assert!(dense.matmul(&x).fro_dist(&chain.apply(&x)) < 1e-9);
+    }
+
+    #[test]
+    fn butterfly_full_depth_is_dense_but_shallow_is_not() {
+        let mut rng = Rng::new(6);
+        let (d, b) = (16, 2); // r = 8 → needs m = 1 + log2 8 = 4
+        let full = GsChain::butterfly(d, b, 4, &mut rng, false);
+        assert_eq!(full.to_dense().nnz(1e-12), d * d);
+        let shallow = GsChain::butterfly(d, b, 3, &mut rng, false);
+        assert!(shallow.to_dense().nnz(1e-12) < d * d);
+    }
+
+    #[test]
+    fn gs_needs_fewer_factors_than_butterfly() {
+        // Headline structural claim (§5.2): with b = 4, r = 4 (d = 16), GS
+        // is dense at m = 2 while butterfly still has zeros at m = 2.
+        let mut rng = Rng::new(7);
+        let gs = GsChain::gs_kn(16, 4, 2, &mut rng, false);
+        assert_eq!(gs.to_dense().nnz(1e-12), 16 * 16);
+        let bf = GsChain::butterfly(16, 4, 2, &mut rng, false);
+        assert!(bf.to_dense().nnz(1e-12) < 16 * 16);
+    }
+
+    #[test]
+    fn param_count_scales_with_m() {
+        let mut rng = Rng::new(8);
+        let c2 = GsChain::gs_kn(64, 8, 2, &mut rng, false);
+        let c6 = GsChain::gs_kn(64, 8, 6, &mut rng, false);
+        assert_eq!(c2.param_count(), 2 * 8 * 64);
+        assert_eq!(c6.param_count(), 3 * c2.param_count());
+    }
+}

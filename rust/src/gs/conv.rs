@@ -1,0 +1,369 @@
+//! §6.3 — GS orthogonal convolutions, exact matrix view.
+//!
+//! Equation (2): a multichannel 2-D convolution is the block matrix whose
+//! `(i, j)` block is the doubly-Toeplitz matrix of the scalar convolution
+//! between input channel `j` and output channel `i`. This module builds
+//! that matrix exactly (small sizes) so we can verify, in Rust and
+//! independently of the JAX stack:
+//!   * grouped convolution  ⇔  block-diagonal structure of Eq. (2),
+//!   * `ChShuffle`          ⇔  a permutation matrix on `vec(X)`,
+//!   * `L = M - ConvTranspose(M)` ⇔ skew-symmetric Eq. (2) matrix,
+//!   * convolution exponential   ⇔ orthogonal Jacobian (SOC / GS-SOC).
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+use super::perm::Perm;
+
+/// A conv kernel `[c_out][c_in][k][k]` with odd `k`, zero ("same") padding.
+#[derive(Clone, Debug)]
+pub struct ConvKernel {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub k: usize,
+    /// Row-major `[c_out, c_in, k, k]`.
+    pub w: Vec<f64>,
+}
+
+impl ConvKernel {
+    pub fn zeros(c_out: usize, c_in: usize, k: usize) -> ConvKernel {
+        assert!(k % 2 == 1, "same-padded conv needs odd kernel");
+        ConvKernel {
+            c_out,
+            c_in,
+            k,
+            w: vec![0.0; c_out * c_in * k * k],
+        }
+    }
+
+    pub fn randn(c_out: usize, c_in: usize, k: usize, std: f64, rng: &mut Rng) -> ConvKernel {
+        let mut c = ConvKernel::zeros(c_out, c_in, k);
+        for v in c.w.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        c
+    }
+
+    #[inline]
+    pub fn at(&self, o: usize, i: usize, p: usize, q: usize) -> f64 {
+        self.w[((o * self.c_in + i) * self.k + p) * self.k + q]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, o: usize, i: usize, p: usize, q: usize) -> &mut f64 {
+        &mut self.w[((o * self.c_in + i) * self.k + p) * self.k + q]
+    }
+
+    /// The paper's `ConvTranspose`: `M'_{i,j,p,q} = M_{j,i,k-1-p,k-1-q}`.
+    pub fn conv_transpose(&self) -> ConvKernel {
+        let mut out = ConvKernel::zeros(self.c_in, self.c_out, self.k);
+        for o in 0..self.c_out {
+            for i in 0..self.c_in {
+                for p in 0..self.k {
+                    for q in 0..self.k {
+                        *out.at_mut(i, o, self.k - 1 - p, self.k - 1 - q) =
+                            self.at(o, i, p, q);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// SOC parametrization: `L = M - ConvTranspose(M)` (requires
+    /// `c_in == c_out`); makes Eq. (2) skew-symmetric.
+    pub fn skew_symmetrize(&self) -> ConvKernel {
+        assert_eq!(self.c_in, self.c_out);
+        let t = self.conv_transpose();
+        let mut out = self.clone();
+        for (a, b) in out.w.iter_mut().zip(t.w.iter()) {
+            *a -= b;
+        }
+        out
+    }
+
+    /// Eq. (2): materialize the `(c_out·h·w) × (c_in·h·w)` matrix of the
+    /// same-padded convolution on an `h×w` grid. `vec` is row-major
+    /// `[channel, row, col]`.
+    pub fn to_matrix(&self, h: usize, w: usize) -> Mat {
+        let half = (self.k - 1) / 2;
+        let mut m = Mat::zeros(self.c_out * h * w, self.c_in * h * w);
+        for o in 0..self.c_out {
+            for i in 0..self.c_in {
+                for y in 0..h {
+                    for x in 0..w {
+                        // output (o, y, x) = Σ_{p,q} K[o,i,p,q] · X[i, y+p-half, x+q-half]
+                        for p in 0..self.k {
+                            for q in 0..self.k {
+                                let yy = y as isize + p as isize - half as isize;
+                                let xx = x as isize + q as isize - half as isize;
+                                if yy < 0 || xx < 0 || yy >= h as isize || xx >= w as isize {
+                                    continue;
+                                }
+                                let row = (o * h + y) * w + x;
+                                let col = (i * h + yy as usize) * w + xx as usize;
+                                m[(row, col)] += self.at(o, i, p, q);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Direct convolution (same padding) of `x: [c_in, h, w]`.
+    pub fn conv(&self, x: &[f64], h: usize, w: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.c_in * h * w);
+        let half = (self.k - 1) / 2;
+        let mut y = vec![0.0; self.c_out * h * w];
+        for o in 0..self.c_out {
+            for i in 0..self.c_in {
+                for yy in 0..h {
+                    for xx in 0..w {
+                        let mut acc = 0.0;
+                        for p in 0..self.k {
+                            for q in 0..self.k {
+                                let sy = yy as isize + p as isize - half as isize;
+                                let sx = xx as isize + q as isize - half as isize;
+                                if sy < 0 || sx < 0 || sy >= h as isize || sx >= w as isize {
+                                    continue;
+                                }
+                                acc += self.at(o, i, p, q)
+                                    * x[(i * h + sy as usize) * w + sx as usize];
+                            }
+                        }
+                        y[(o * h + yy) * w + xx] += acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Zero out cross-group couplings: `groups` grouped convolution
+    /// (requires `groups | c_in` and `groups | c_out`).
+    pub fn grouped(&self, groups: usize) -> ConvKernel {
+        assert!(self.c_in % groups == 0 && self.c_out % groups == 0);
+        let gi = self.c_in / groups;
+        let go = self.c_out / groups;
+        let mut out = self.clone();
+        for o in 0..self.c_out {
+            for i in 0..self.c_in {
+                if o / go != i / gi {
+                    for p in 0..self.k {
+                        for q in 0..self.k {
+                            *out.at_mut(o, i, p, q) = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Channel shuffle as a permutation on `vec(X)` for `[c, h, w]` tensors:
+/// channel `i` moves to `chperm.sigma[i]`, spatial layout unchanged.
+pub fn channel_shuffle_perm(chperm: &Perm, h: usize, w: usize) -> Perm {
+    let c = chperm.n();
+    let hw = h * w;
+    let mut sigma = vec![0usize; c * hw];
+    for i in 0..c {
+        let dst = chperm.sigma[i];
+        for s in 0..hw {
+            sigma[i * hw + s] = dst * hw + s;
+        }
+    }
+    Perm::from_sigma(sigma)
+}
+
+/// Convolution exponential `L ⋆_e X = X + L⋆X/1! + L⋆²X/2! + …`
+/// (Definition 6.1), truncated at `terms` Taylor terms.
+pub fn conv_exp(kernel: &ConvKernel, x: &[f64], h: usize, w: usize, terms: usize) -> Vec<f64> {
+    assert_eq!(kernel.c_in, kernel.c_out);
+    let mut acc = x.to_vec();
+    let mut term = x.to_vec();
+    let mut fact = 1.0;
+    for t in 1..=terms {
+        term = kernel.conv(&term, h, w);
+        fact *= t as f64;
+        for (a, b) in acc.iter_mut().zip(term.iter()) {
+            *a += b / fact;
+        }
+    }
+    acc
+}
+
+/// Dense matrix exponential by scaling-and-squaring Taylor (small sizes).
+pub fn mat_exp(a: &Mat, terms: usize) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    // Scale down so the series converges fast, then square back.
+    let norm = a.max_abs() * a.rows as f64;
+    let squarings = if norm > 0.5 {
+        (norm / 0.5).log2().ceil().max(0.0) as usize
+    } else {
+        0
+    };
+    let scaled = a.scale(1.0 / (1u64 << squarings) as f64);
+    let mut acc = Mat::eye(a.rows);
+    let mut term = Mat::eye(a.rows);
+    let mut fact = 1.0;
+    for t in 1..=terms {
+        term = term.matmul(&scaled);
+        fact *= t as f64;
+        acc = &acc + &term.scale(1.0 / fact);
+    }
+    for _ in 0..squarings {
+        acc = acc.matmul(&acc);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gs::perm::{perm_kn, perm_paired};
+    use crate::util::prop;
+
+    #[test]
+    fn eq2_matrix_matches_direct_convolution() {
+        prop::check("Eq 2: vec(L ⋆ X) = M vec(X)", 131, |rng| {
+            let c_in = prop::size_in(rng, 1, 3);
+            let c_out = prop::size_in(rng, 1, 3);
+            let (h, w) = (prop::size_in(rng, 2, 4), prop::size_in(rng, 2, 4));
+            let kern = ConvKernel::randn(c_out, c_in, 3, 1.0, rng);
+            let x: Vec<f64> = (0..c_in * h * w).map(|_| rng.normal()).collect();
+            let direct = kern.conv(&x, h, w);
+            let via_mat = kern.to_matrix(h, w).matvec(&x);
+            for (a, b) in direct.iter().zip(via_mat.iter()) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn grouped_conv_is_block_diagonal_in_eq2() {
+        // The §6.3 structural claim: GrConv ⇔ block-diagonal Eq. (2).
+        let mut rng = Rng::new(2);
+        let kern = ConvKernel::randn(8, 8, 3, 1.0, &mut rng).grouped(4);
+        let (h, w) = (3, 3);
+        let m = kern.to_matrix(h, w);
+        let blk = 2 * h * w; // channels per group × spatial
+        for bi in 0..4 {
+            for bj in 0..4 {
+                if bi != bj {
+                    assert_eq!(
+                        m.block(bi * blk, bj * blk, blk, blk).nnz(1e-15),
+                        0,
+                        "cross-group block must vanish"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skew_parametrization_gives_skew_matrix() {
+        prop::check("L = M - ConvTranspose(M) ⇒ Eq2 skew", 132, |rng| {
+            let c = prop::size_in(rng, 1, 3);
+            let kern = ConvKernel::randn(c, c, 3, 1.0, rng).skew_symmetrize();
+            let (h, w) = (3, 4);
+            let m = kern.to_matrix(h, w);
+            assert!(m.fro_dist(&m.t().scale(-1.0)) < 1e-10, "M = -M^T");
+        });
+    }
+
+    #[test]
+    fn conv_exponential_jacobian_is_orthogonal() {
+        // SOC: exp of a skew matrix is orthogonal; the conv exponential is
+        // the matrix exponential of the Eq. 2 matrix.
+        let mut rng = Rng::new(3);
+        let c = 2;
+        let (h, w) = (3, 3);
+        let mut kern = ConvKernel::randn(c, c, 3, 0.3, &mut rng).skew_symmetrize();
+        // Keep the spectral mass small so a short Taylor series suffices
+        // (SOC uses ~6 terms in practice).
+        for v in kern.w.iter_mut() {
+            *v *= 0.3;
+        }
+        let m = kern.to_matrix(h, w);
+        let j = mat_exp(&m, 20);
+        assert!(j.is_orthogonal(1e-8), "err={}", j.orthogonality_error());
+        // conv_exp agrees with the dense exponential applied to vec(X).
+        let x: Vec<f64> = (0..c * h * w).map(|_| rng.normal()).collect();
+        let y1 = conv_exp(&kern, &x, h, w, 20);
+        let y2 = j.matvec(&x);
+        for (a, b) in y1.iter().zip(y2.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gs_soc_layer_jacobian_is_orthogonal() {
+        // Equation (3): GrExpConv2(ChShuffle2(GrExpConv1(ChShuffle1(X))))
+        // has an orthogonal Jacobian = product of orthogonal factors.
+        let mut rng = Rng::new(4);
+        // c/groups = 4 channels per group and groups = 4: Theorem 2 says
+        // two factors suffice for dense channel coupling (log_4 4 = 1).
+        let c = 16;
+        let groups = 4;
+        let (h, w) = (2, 2);
+        let mk = |k: usize, rng: &mut Rng| {
+            let mut kern = ConvKernel::randn(c, c, k, 0.2, rng)
+                .grouped(groups)
+                .skew_symmetrize();
+            for v in kern.w.iter_mut() {
+                *v *= 0.4;
+            }
+            kern
+        };
+        let k1 = mk(3, &mut rng);
+        let k2 = mk(1, &mut rng); // second conv is 1×1 per §6.3
+        let p1 = channel_shuffle_perm(&perm_paired(groups, c), h, w);
+        let p2 = channel_shuffle_perm(&perm_kn(groups, c), h, w);
+        let j1 = mat_exp(&k1.to_matrix(h, w), 24);
+        let j2 = mat_exp(&k2.to_matrix(h, w), 24);
+        let jac = j2.matmul(&p2.to_mat()).matmul(&j1).matmul(&p1.to_mat());
+        assert!(jac.is_orthogonal(1e-7), "err={}", jac.orthogonality_error());
+        // Grouped factors alone are block-diagonal; with the shuffles the
+        // full Jacobian mixes all channel pairs (dense channel coupling).
+        let cblk = h * w;
+        let mut coupled = 0;
+        for ci in 0..c {
+            for cj in 0..c {
+                if jac.block(ci * cblk, cj * cblk, cblk, cblk).nnz(1e-12) > 0 {
+                    coupled += 1;
+                }
+            }
+        }
+        assert_eq!(coupled, c * c, "all channel pairs interact (group-and-shuffle)");
+    }
+
+    #[test]
+    fn channel_shuffle_is_spatially_coherent() {
+        let p = channel_shuffle_perm(&perm_kn(2, 4), 2, 3);
+        // Channel blocks move wholesale; spatial offset preserved.
+        let hw = 6;
+        for i in 0..4 {
+            let dst = p.sigma[i * hw] / hw;
+            for s in 0..hw {
+                assert_eq!(p.sigma[i * hw + s], dst * hw + s);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_transpose_is_involution() {
+        let mut rng = Rng::new(5);
+        let kern = ConvKernel::randn(3, 2, 3, 1.0, &mut rng);
+        let back = kern.conv_transpose().conv_transpose();
+        assert_eq!(kern.w, back.w);
+    }
+
+    #[test]
+    fn mat_exp_of_zero_is_identity() {
+        let e = mat_exp(&Mat::zeros(5, 5), 10);
+        assert!(e.fro_dist(&Mat::eye(5)) < 1e-12);
+    }
+}

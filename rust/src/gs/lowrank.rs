@@ -1,0 +1,240 @@
+//! Proposition 1: block low-rank interpretation of `GS(I, P, I)` matrices.
+//!
+//! A member of `GS(I, P, I)` is a `k_L × k_R` block matrix whose
+//! `(k_1, k_2)` block is `Σ u_{σ(i)} v_i^T` over the indices `i` with
+//! `⌊σ(i)/b_L²⌋ = k_1` and `⌊i/b_R¹⌋ = k_2` — each block is low-rank, with
+//! rank bounded by how many rank-one terms the permutation routes into it.
+//!
+//! Note: the paper's displayed formula writes `⌊σ(i)/k_L⌋` / `⌊i/k_R⌋`, but
+//! its own Figure-2 walkthrough (k_L=4, b_L=3: `A_00 = u_0 v_2^T +
+//! u_2 v_4^T` requires `⌊2/3⌋ = 0` and `⌊4/6⌋ = 0`) shows the divisors are
+//! the *block sizes*, not block counts; we follow the walkthrough.
+
+use crate::linalg::Mat;
+
+use super::matrix::{GsMatrix, GsSpec};
+use super::perm::Perm;
+
+/// The index sets of Proposition 1: `terms[k1][k2]` lists the `i` whose
+/// rank-one term `u_{σ(i)} v_i^T` lands in block `(k1, k2)`.
+pub fn block_terms(spec: &GsSpec) -> Vec<Vec<Vec<usize>>> {
+    let b_l2 = spec.b_l.1;
+    let b_r1 = spec.b_r.0;
+    let mut terms = vec![vec![Vec::new(); spec.k_r]; spec.k_l];
+    for i in 0..spec.p.n() {
+        let k1 = spec.p.sigma[i] / b_l2;
+        let k2 = i / b_r1;
+        terms[k1][k2].push(i);
+    }
+    terms
+}
+
+/// Rank bound per block implied by `P` (the `r_{k1,k2}` of Algorithm 1):
+/// the number of rank-one terms routed into each block, clipped by the
+/// block dimensions.
+pub fn block_ranks(spec: &GsSpec) -> Vec<Vec<usize>> {
+    let cap = spec.b_l.0.min(spec.b_r.1);
+    block_terms(spec)
+        .iter()
+        .map(|row| row.iter().map(|t| t.len().min(cap)).collect())
+        .collect()
+}
+
+/// Reconstruct the dense matrix of a `GS(I, P, I)` member *via the
+/// Proposition 1 formula* (sum of routed rank-one terms), rather than by
+/// multiplying factors. Used to validate the proposition.
+pub fn dense_via_prop1(a: &GsMatrix) -> Mat {
+    let spec = &a.spec;
+    assert!(
+        spec.p_l.is_identity() && spec.p_r.is_identity(),
+        "Proposition 1 is stated for GS(I, P, I)"
+    );
+    let (b_l1, b_l2) = spec.b_l;
+    let (b_r1, b_r2) = spec.b_r;
+    let m = spec.m();
+    let n = spec.n();
+    let mut out = Mat::zeros(m, n);
+    // u_j: the j-th column of L (consecutive across blocks);
+    // v_i^T: the i-th row of R.
+    for i in 0..spec.p.n() {
+        let j = spec.p.sigma[i];
+        let k1 = j / b_l2; // which L block owns column j
+        let k2 = i / b_r1; // which R block owns row i
+        let lj = j % b_l2;
+        let ri = i % b_r1;
+        let lblk = &a.l.blocks[k1];
+        let rblk = &a.r.blocks[k2];
+        // Add u_j v_i^T into the (k1, k2) dense block.
+        for p in 0..b_l1 {
+            for q in 0..b_r2 {
+                out[(k1 * b_l1 + p, k2 * b_r2 + q)] += lblk[(p, lj)] * rblk[(ri, q)];
+            }
+        }
+    }
+    out
+}
+
+/// Check that every block of a dense matrix `a` obeys the rank profile a
+/// given `GS(I,P,I)` spec implies (numerical rank ≤ `r_{k1,k2}`).
+pub fn respects_rank_profile(a: &Mat, spec: &GsSpec, tol: f64) -> bool {
+    let ranks = block_ranks(spec);
+    let (b_l1, b_r2) = (spec.b_l.0, spec.b_r.1);
+    for k1 in 0..spec.k_l {
+        for k2 in 0..spec.k_r {
+            let blk = a.block(k1 * b_l1, k2 * b_r2, b_l1, b_r2);
+            if blk.rank(tol) > ranks[k1][k2] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Convenience: a `GS(I, P, I)` spec with square blocks (`r` blocks of
+/// `b×b` each side) and permutation `p`.
+pub fn gs_ipi_spec(b: usize, r: usize, p: Perm) -> GsSpec {
+    let d = b * r;
+    assert_eq!(p.n(), d);
+    GsSpec::new(
+        Perm::identity(d),
+        p,
+        Perm::identity(d),
+        r,
+        r,
+        (b, b),
+        (b, b),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gs::blockdiag::BlockDiag;
+    use crate::gs::perm::perm_kn;
+    use crate::util::{prop, rng::Rng};
+
+    fn random_ipi(rng: &mut Rng) -> GsMatrix {
+        // Rectangular-block GS(I,P,I) with compatible sizes.
+        let b_l2 = prop::size_in(rng, 1, 4);
+        let k_l = prop::size_in(rng, 1, 4);
+        let s = b_l2 * k_l;
+        let divisors: Vec<usize> = (1..=s).filter(|d| s % d == 0).collect();
+        let k_r = *rng.choice(&divisors);
+        let b_r1 = s / k_r;
+        let b_l1 = prop::size_in(rng, 1, 4);
+        let b_r2 = prop::size_in(rng, 1, 4);
+        let spec = GsSpec::new(
+            Perm::identity(b_l1 * k_l),
+            Perm::random(s, rng),
+            Perm::identity(b_r2 * k_r),
+            k_l,
+            k_r,
+            (b_l1, b_l2),
+            (b_r1, b_r2),
+        );
+        spec.random_member(1.0, rng)
+    }
+
+    #[test]
+    fn prop1_formula_matches_factor_product() {
+        prop::check("Prop 1: Σ u_{σ(i)} v_i^T == L P R", 111, |rng| {
+            let a = random_ipi(rng);
+            let dense = a.to_dense();
+            let viaprop = dense_via_prop1(&a);
+            assert!(dense.fro_dist(&viaprop) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn members_respect_rank_profile() {
+        prop::check("GS member blocks have rank ≤ r_{k1,k2}", 112, |rng| {
+            let a = random_ipi(rng);
+            assert!(respects_rank_profile(&a.to_dense(), &a.spec, 1e-8));
+        });
+    }
+
+    #[test]
+    fn figure2_worked_example() {
+        // Figure 2: k_L = 4 blocks of 3×3 in L; k_R = 2 blocks of 6×6 in R;
+        // A_00 receives u_0 v_2^T + u_2 v_4^T when σ(2)=0, σ(4)=2 — we
+        // reproduce with an explicit σ matching those routings.
+        // Exactly i=2 and i=4 (both in R's block 0) route into L's column
+        // block 0 (targets {0,1,2}); every other i < 6 routes elsewhere so
+        // A_00 receives exactly the two terms of the figure.
+        let p = Perm::from_sigma(vec![3, 4, 0, 5, 2, 6, 1, 7, 8, 9, 10, 11]);
+        let spec = GsSpec::new(
+            Perm::identity(12),
+            p,
+            Perm::identity(12),
+            4,
+            2,
+            (3, 3),
+            (6, 6),
+        );
+        let mut rng = Rng::new(3);
+        let a = spec.random_member(1.0, &mut rng);
+        let dense = a.to_dense();
+        // A_00 must equal u_0 v_2^T + u_2 v_4^T.
+        let u0: Vec<f64> = (0..3).map(|i| a.l.blocks[0][(i, 0)]).collect();
+        let u2: Vec<f64> = (0..3).map(|i| a.l.blocks[0][(i, 2)]).collect();
+        let v2: Vec<f64> = (0..6).map(|j| a.r.blocks[0][(2, j)]).collect();
+        let v4: Vec<f64> = (0..6).map(|j| a.r.blocks[0][(4, j)]).collect();
+        for i in 0..3 {
+            for j in 0..6 {
+                let expect = u0[i] * v2[j] + u2[i] * v4[j];
+                assert!((dense[(i, j)] - expect).abs() < 1e-10);
+            }
+        }
+        // And its rank is ≤ 2.
+        assert!(dense.block(0, 0, 3, 6).rank(1e-9) <= 2);
+    }
+
+    #[test]
+    fn perm_kn_distributes_terms_evenly() {
+        // With P_(r, rb) and square b-blocks each block of the bipartite
+        // routing gets the same number of terms — the "balanced" rank
+        // profile that makes m = 2 dense when b ≥ r.
+        for (b, r) in [(4, 4), (8, 4), (6, 3)] {
+            let spec = gs_ipi_spec(b, r, perm_kn(r, b * r));
+            let terms = block_terms(&spec);
+            let per = b / r.min(b); // b*r indices into r*r blocks → b/r each (b ≥ r)
+            for row in &terms {
+                for t in row {
+                    assert_eq!(t.len(), per.max(1), "b={b} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identity_perm_gives_block_diagonal_profile() {
+        let spec = gs_ipi_spec(3, 4, Perm::identity(12));
+        let ranks = block_ranks(&spec);
+        for k1 in 0..4 {
+            for k2 in 0..4 {
+                assert_eq!(ranks[k1][k2], if k1 == k2 { 3 } else { 0 });
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rank_blocks_are_zero() {
+        // Blocks that receive no terms must be exactly zero in the dense
+        // matrix — the density mechanism behind Theorem 2.
+        let mut rng = Rng::new(9);
+        let spec = gs_ipi_spec(2, 4, Perm::identity(8));
+        let a = GsMatrix::new(
+            spec.clone(),
+            BlockDiag::randn(4, 2, 2, 1.0, &mut rng),
+            BlockDiag::randn(4, 2, 2, 1.0, &mut rng),
+        );
+        let dense = a.to_dense();
+        for k1 in 0..4 {
+            for k2 in 0..4 {
+                if k1 != k2 {
+                    assert_eq!(dense.block(2 * k1, 2 * k2, 2, 2).nnz(1e-14), 0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! The two-factor GS class `GS(P_L, P, P_R)` of Definition 3.1:
+//! `A = P_L (L P R) P_R` with `L = diag(L_1..L_{k_L})`,
+//! `R = diag(R_1..R_{k_R})`.
+//!
+//! [`GsSpec`] fixes the structural data (permutations and block shapes —
+//! "in practice we fix P_L, P, P_R depending on the application and only
+//! make matrices L, R subject for change"); [`GsMatrix`] carries the
+//! trainable factors.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+use super::blockdiag::BlockDiag;
+use super::perm::{perm_kn, Perm};
+
+/// Structural description of a `GS(P_L, P, P_R)` class.
+#[derive(Clone, Debug)]
+pub struct GsSpec {
+    pub p_l: Perm,
+    pub p: Perm,
+    pub p_r: Perm,
+    pub k_l: usize,
+    pub k_r: usize,
+    /// L block shape `(b_L^1, b_L^2)`.
+    pub b_l: (usize, usize),
+    /// R block shape `(b_R^1, b_R^2)`.
+    pub b_r: (usize, usize),
+}
+
+impl GsSpec {
+    /// Validated constructor enforcing the Definition 3.1 size constraints:
+    /// `b_L^2·k_L = b_R^1·k_R = s`, `P` is `s×s`, `P_L` is `m×m`, `P_R` is
+    /// `n×n`.
+    pub fn new(
+        p_l: Perm,
+        p: Perm,
+        p_r: Perm,
+        k_l: usize,
+        k_r: usize,
+        b_l: (usize, usize),
+        b_r: (usize, usize),
+    ) -> GsSpec {
+        let s = b_l.1 * k_l;
+        assert_eq!(
+            s,
+            b_r.0 * k_r,
+            "inner sizes must agree: b_L^2*k_L = {} vs b_R^1*k_R = {}",
+            s,
+            b_r.0 * k_r
+        );
+        assert_eq!(p.n(), s, "P must be s×s");
+        assert_eq!(p_l.n(), b_l.0 * k_l, "P_L must be m×m");
+        assert_eq!(p_r.n(), b_r.1 * k_r, "P_R must be n×n");
+        GsSpec {
+            p_l,
+            p,
+            p_r,
+            k_l,
+            k_r,
+            b_l,
+            b_r,
+        }
+    }
+
+    /// The GSOFT spec of §6.1: square `d×d`, `r` blocks of size `b×b` in
+    /// both factors, `Q = P^T L P R` with `P = P_(r, d)` (the paper uses
+    /// `P_(r,br)`), `P_R = I`.
+    pub fn gsoft(d: usize, b: usize) -> GsSpec {
+        assert!(d % b == 0, "block size must divide dimension");
+        let r = d / b;
+        let p = perm_kn(r, d);
+        GsSpec::new(
+            p.inverse(), // P_L = P^T
+            p,
+            Perm::identity(d),
+            r,
+            r,
+            (b, b),
+            (b, b),
+        )
+    }
+
+    /// The convolutional variant (§3): `P_L = I`, `P_R = P`.
+    pub fn conv(d: usize, b: usize) -> GsSpec {
+        assert!(d % b == 0);
+        let r = d / b;
+        let p = perm_kn(r, d);
+        GsSpec::new(
+            Perm::identity(d),
+            p.clone(),
+            p,
+            r,
+            r,
+            (b, b),
+            (b, b),
+        )
+    }
+
+    /// Output dimension `m`.
+    pub fn m(&self) -> usize {
+        self.b_l.0 * self.k_l
+    }
+
+    /// Input dimension `n`.
+    pub fn n(&self) -> usize {
+        self.b_r.1 * self.k_r
+    }
+
+    /// Inner dimension `s`.
+    pub fn s(&self) -> usize {
+        self.b_l.1 * self.k_l
+    }
+
+    /// Trainable parameters of a member of this class.
+    pub fn param_count(&self) -> usize {
+        self.k_l * self.b_l.0 * self.b_l.1 + self.k_r * self.b_r.0 * self.b_r.1
+    }
+
+    /// Sample a member with Gaussian blocks.
+    pub fn random_member(&self, std: f64, rng: &mut Rng) -> GsMatrix {
+        GsMatrix {
+            spec: self.clone(),
+            l: BlockDiag::randn(self.k_l, self.b_l.0, self.b_l.1, std, rng),
+            r: BlockDiag::randn(self.k_r, self.b_r.0, self.b_r.1, std, rng),
+        }
+    }
+
+    /// Sample a member with *orthogonal* blocks (requires square blocks).
+    pub fn random_orthogonal_member(&self, rng: &mut Rng) -> GsMatrix {
+        assert_eq!(self.b_l.0, self.b_l.1, "orthogonal blocks must be square");
+        assert_eq!(self.b_r.0, self.b_r.1, "orthogonal blocks must be square");
+        GsMatrix {
+            spec: self.clone(),
+            l: BlockDiag::rand_orthogonal(self.k_l, self.b_l.0, rng),
+            r: BlockDiag::rand_orthogonal(self.k_r, self.b_r.0, rng),
+        }
+    }
+
+    /// The identity member (identity blocks; requires square blocks and
+    /// `P_L (P) P_R = I`-compatible perms only give exact identity for the
+    /// GSOFT spec, where `P^T I P I = I`).
+    pub fn identity_member(&self) -> GsMatrix {
+        GsMatrix {
+            spec: self.clone(),
+            l: BlockDiag::identity(self.k_l, self.b_l.0),
+            r: BlockDiag::identity(self.k_r, self.b_r.0),
+        }
+    }
+}
+
+/// A concrete member of a `GS(P_L, P, P_R)` class.
+#[derive(Clone, Debug)]
+pub struct GsMatrix {
+    pub spec: GsSpec,
+    pub l: BlockDiag,
+    pub r: BlockDiag,
+}
+
+impl GsMatrix {
+    pub fn new(spec: GsSpec, l: BlockDiag, r: BlockDiag) -> GsMatrix {
+        assert_eq!(l.k(), spec.k_l);
+        assert_eq!(r.k(), spec.k_r);
+        for blk in &l.blocks {
+            assert_eq!((blk.rows, blk.cols), spec.b_l);
+        }
+        for blk in &r.blocks {
+            assert_eq!((blk.rows, blk.cols), spec.b_r);
+        }
+        GsMatrix { spec, l, r }
+    }
+
+    /// Dense materialization `P_L (L P R) P_R`.
+    pub fn to_dense(&self) -> Mat {
+        let r = self.r.to_mat();
+        let pr = self.spec.p.apply_rows(&r);
+        let lpr = self.l.matmul_right(&pr);
+        let pl_lpr = self.spec.p_l.apply_rows(&lpr);
+        // (X) P_R : columns permuted.
+        self.spec.p_r.apply_cols(&pl_lpr)
+    }
+
+    /// Structured apply `A · X` for `X: n×t` — never materializes the dense
+    /// `m×n` matrix. This is the hot path the paper's efficiency claims are
+    /// about: two grouped (block-diagonal) GEMMs plus three relayouts.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.spec.n());
+        // A X = P_L L P R (P_R X).
+        let x1 = self.spec.p_r.apply_rows(x); // P_R X
+        let x2 = self.r.matmul_right(&x1); // R ·
+        let x3 = self.spec.p.apply_rows(&x2); // P ·
+        let x4 = self.l.matmul_right(&x3); // L ·
+        self.spec.p_l.apply_rows(&x4) // P_L ·
+    }
+
+    /// Structured apply to a single vector.
+    pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let x1 = self.spec.p_r.apply_vec(x);
+        let x2 = self.r.matvec(&x1);
+        let x3 = self.spec.p.apply_vec(&x2);
+        let x4 = self.l.matvec(&x3);
+        self.spec.p_l.apply_vec(&x4)
+    }
+
+    /// Trainable parameter count.
+    pub fn param_count(&self) -> usize {
+        self.l.param_count() + self.r.param_count()
+    }
+
+    /// Max per-block orthogonality error over both factors.
+    pub fn blockwise_orthogonality_error(&self) -> f64 {
+        self.l
+            .blockwise_orthogonality_error()
+            .max(self.r.blockwise_orthogonality_error())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_spec(rng: &mut Rng) -> GsSpec {
+        // Draw compatible shapes: s = lcm-ish via common grid.
+        let b_l2 = prop::size_in(rng, 1, 4);
+        let k_l = prop::size_in(rng, 1, 4);
+        let s = b_l2 * k_l;
+        // choose k_r dividing s
+        let divisors: Vec<usize> = (1..=s).filter(|d| s % d == 0).collect();
+        let k_r = *rng.choice(&divisors);
+        let b_r1 = s / k_r;
+        let b_l1 = prop::size_in(rng, 1, 4);
+        let b_r2 = prop::size_in(rng, 1, 4);
+        let m = b_l1 * k_l;
+        let n = b_r2 * k_r;
+        GsSpec::new(
+            Perm::random(m, rng),
+            Perm::random(s, rng),
+            Perm::random(n, rng),
+            k_l,
+            k_r,
+            (b_l1, b_l2),
+            (b_r1, b_r2),
+        )
+    }
+
+    #[test]
+    fn structured_apply_matches_dense() {
+        prop::check("GS apply == dense apply", 91, |rng| {
+            let spec = random_spec(rng);
+            let a = spec.random_member(1.0, rng);
+            let x = Mat::randn(spec.n(), prop::size_in(rng, 1, 4), 1.0, rng);
+            let dense = a.to_dense().matmul(&x);
+            let fast = a.apply(&x);
+            assert!(dense.fro_dist(&fast) < 1e-9);
+
+            let xv: Vec<f64> = (0..spec.n()).map(|_| rng.normal()).collect();
+            let y1 = a.apply_vec(&xv);
+            let y2 = a.to_dense().matvec(&xv);
+            for (p, q) in y1.iter().zip(y2.iter()) {
+                assert!((p - q).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn gsoft_spec_orthogonal_member_is_orthogonal() {
+        // §4: per-block orthogonality of L and R ⇒ the whole GS matrix is
+        // orthogonal (permutations are orthogonal, products of orthogonal
+        // matrices are orthogonal).
+        prop::check("orthogonal blocks => orthogonal GS", 92, |rng| {
+            let b = [2usize, 4, 8][rng.below(3)];
+            let r = [2usize, 3, 4][rng.below(3)];
+            let spec = GsSpec::gsoft(b * r, b);
+            let q = spec.random_orthogonal_member(rng);
+            let dense = q.to_dense();
+            assert!(dense.is_orthogonal(1e-8), "err={}", dense.orthogonality_error());
+        });
+    }
+
+    #[test]
+    fn gsoft_identity_member_is_identity() {
+        // §6.1: initializing each block with identity gives Q = I
+        // (P^T I P I = I).
+        for (d, b) in [(8, 2), (16, 4), (32, 8), (12, 3)] {
+            let spec = GsSpec::gsoft(d, b);
+            let q = spec.identity_member();
+            assert!(
+                q.to_dense().fro_dist(&Mat::eye(d)) < 1e-12,
+                "d={d} b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn gsoft_param_count_formula() {
+        // §5.2 example: d=1024, b=32 → 2·32³ parameters... per Q with r=32
+        // blocks of 32² each in both factors: 2·r·b² = 2·1024·32 = 2·32³.
+        let spec = GsSpec::gsoft(1024, 32);
+        assert_eq!(spec.param_count(), 2 * 32 * 32 * 32);
+        assert_eq!(spec.param_count(), spec.random_member(1.0, &mut Rng::new(0)).param_count());
+    }
+
+    #[test]
+    fn gsoft_q_is_dense_with_m2() {
+        // Theorem 2 for m=2: with b ≥ r... more precisely GSOFT's two
+        // factors with P_(r,d) produce a fully dense matrix when b ≥ r
+        // (log_b(r) ≤ 1). Use generic (non-zero) random blocks.
+        let mut rng = Rng::new(7);
+        for (d, b) in [(16, 4), (64, 8), (36, 6)] {
+            let spec = GsSpec::gsoft(d, b); // r = d/b = b here
+            let a = spec.random_member(1.0, &mut rng);
+            assert_eq!(a.to_dense().nnz(1e-12), d * d, "d={d} b={b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner sizes")]
+    fn bad_spec_rejected() {
+        GsSpec::new(
+            Perm::identity(4),
+            Perm::identity(4),
+            Perm::identity(6),
+            2,
+            3,
+            (2, 2),
+            (1, 2),
+        );
+    }
+}

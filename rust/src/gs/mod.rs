@@ -1,0 +1,39 @@
+//! The Group-and-Shuffle matrix algebra — exact (f64) reference
+//! implementations of every construction in the paper:
+//!
+//! - [`perm`] — `P_(k,n)` (Def. 5.2) and the paired variant (App. F)
+//! - [`blockdiag`] — the `L`/`R` factors, Cayley-orthogonal blocks
+//! - [`matrix`] — two-factor `GS(P_L, P, P_R)` class (Def. 3.1)
+//! - [`chain`] — higher-order `GS(P_{m+1},…,P_1)` (Def. 5.1) + the block
+//!   butterfly chains of BOFT expressed as GS chains (Remark 2)
+//! - [`lowrank`] — Proposition 1 block low-rank structure
+//! - [`project`] — Algorithm 1 projection + the Theorem 1 construction
+//! - [`density`] — Theorem 2 information-transmission analysis
+//! - [`monarch`] — Appendix C Monarch constraint comparison
+//! - [`params`] — parameter/factor accounting (§5.2, Tables 1–2)
+//! - [`conv`] — §6.3 orthogonal convolutions in exact matrix form (Eq. 2)
+//! - [`orthogonal`] — Cayley-parametrized orthogonal GS + weight merging
+//!
+//! The f32 *training* path lives in the JAX layer (`python/compile/`) and
+//! executes through [`crate::runtime`]; this module is the ground truth
+//! the tests and the merge path rely on.
+
+pub mod blockdiag;
+pub mod chain;
+pub mod compress;
+pub mod conv;
+pub mod density;
+pub mod lowrank;
+pub mod matrix;
+pub mod monarch;
+pub mod orthogonal;
+pub mod params;
+pub mod perm;
+pub mod project;
+
+pub use blockdiag::BlockDiag;
+pub use chain::{GsChain, GsStage};
+pub use matrix::{GsMatrix, GsSpec};
+pub use orthogonal::{DoubleGsParams, OrthoGsParams};
+pub use perm::{perm_kn, perm_paired, Perm};
+pub use project::{orthogonal_representation, project};

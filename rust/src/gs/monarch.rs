@@ -1,0 +1,69 @@
+//! Appendix C: the relationship between Monarch matrices and the GS class.
+//!
+//! (Generalized) Monarch matrices are `P_1 L P_2 R` — a special case of
+//! `GS(P_1, P_2, I)` with the *hard coupling* `k_L = b_R¹` and
+//! `k_R = b_L²`. For square matrices with square blocks this forces
+//! `k_L · k_R = n`, which rules out many practically useful
+//! configurations (e.g. two factors with equally many small blocks under
+//! a low parameter budget). GS drops the coupling.
+
+use super::matrix::GsSpec;
+
+/// Does this spec satisfy the Monarch structural coupling
+/// `k_L = b_R¹ ∧ k_R = b_L²`?
+pub fn is_monarch_expressible(spec: &GsSpec) -> bool {
+    spec.k_l == spec.b_r.0 && spec.k_r == spec.b_l.1
+}
+
+/// For square `d×d` with square `b×b` blocks and `r` blocks per factor
+/// (the orthogonal fine-tuning shape): Monarch requires `b = k_L = k_R`,
+/// i.e. `r = b` and hence `d = b²`. Returns whether `(d, b)` is Monarch-
+/// representable in that shape.
+pub fn square_config_is_monarch(d: usize, b: usize) -> bool {
+    d % b == 0 && d / b == b
+}
+
+/// Order-p Monarch (Fu et al. 2023) side constraint: dimensions must be
+/// perfect p-th powers `a^p`.
+pub fn order_p_monarch_dim_ok(n: usize, p: u32) -> bool {
+    if p == 0 {
+        return false;
+    }
+    let a = (n as f64).powf(1.0 / p as f64).round() as usize;
+    (a.saturating_sub(1)..=a + 1).any(|c| c.checked_pow(p).map(|v| v == n).unwrap_or(false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gsoft_specs_usually_escape_monarch() {
+        // Paper App. C: e.g. stacking two factors with 4 blocks each on
+        // n = 1024 is impossible for Monarch (needs k_L·k_R = n).
+        let spec = GsSpec::gsoft(1024, 256); // r = 4 blocks of 256
+        assert!(!is_monarch_expressible(&spec));
+        // b = 8, r = 128 on d = 1024: also not Monarch (b_R=8 ≠ k_L=128).
+        assert!(!is_monarch_expressible(&GsSpec::gsoft(1024, 8)));
+    }
+
+    #[test]
+    fn sqrt_config_is_monarch() {
+        // d = b² is the one square-block configuration Monarch captures.
+        let spec = GsSpec::gsoft(1024, 32); // r = 32 = b
+        assert!(is_monarch_expressible(&spec));
+        assert!(square_config_is_monarch(1024, 32));
+        assert!(!square_config_is_monarch(1024, 8));
+        assert!(!square_config_is_monarch(1024, 256));
+    }
+
+    #[test]
+    fn order_p_dims() {
+        assert!(order_p_monarch_dim_ok(64, 2)); // 8²
+        assert!(order_p_monarch_dim_ok(64, 3)); // 4³
+        assert!(order_p_monarch_dim_ok(64, 6)); // 2⁶
+        assert!(!order_p_monarch_dim_ok(768, 2));
+        assert!(!order_p_monarch_dim_ok(768, 3));
+        assert!(order_p_monarch_dim_ok(729, 3)); // 9³
+    }
+}

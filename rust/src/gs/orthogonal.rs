@@ -1,0 +1,178 @@
+//! §4 / §6.1 — the structured orthogonal parametrization: Cayley-
+//! parametrized GS matrices, plus weight merging (the "no inference
+//! overhead" property).
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+use super::blockdiag::BlockDiag;
+use super::matrix::{GsMatrix, GsSpec};
+
+/// Trainable state of an orthogonal GS adapter: one unconstrained square
+/// matrix per block (the Cayley pre-image `A`, trained as `K = A - Aᵀ`).
+#[derive(Clone, Debug)]
+pub struct OrthoGsParams {
+    pub spec: GsSpec,
+    pub l_params: Vec<Mat>,
+    pub r_params: Vec<Mat>,
+    /// Optional magnitude scaling (the paper uses scaling, not dropout).
+    pub scale: f64,
+}
+
+impl OrthoGsParams {
+    /// Identity initialization (all-zero Cayley pre-images ⇒ Q = I).
+    pub fn identity(spec: GsSpec) -> OrthoGsParams {
+        assert_eq!(spec.b_l.0, spec.b_l.1, "orthogonal GS needs square blocks");
+        assert_eq!(spec.b_r.0, spec.b_r.1);
+        let l = (0..spec.k_l).map(|_| Mat::zeros(spec.b_l.0, spec.b_l.0)).collect();
+        let r = (0..spec.k_r).map(|_| Mat::zeros(spec.b_r.0, spec.b_r.0)).collect();
+        OrthoGsParams {
+            spec,
+            l_params: l,
+            r_params: r,
+            scale: 1.0,
+        }
+    }
+
+    /// Random initialization (used by tests/benches, not by fine-tuning).
+    pub fn random(spec: GsSpec, std: f64, rng: &mut Rng) -> OrthoGsParams {
+        let mut p = OrthoGsParams::identity(spec);
+        for blk in p.l_params.iter_mut().chain(p.r_params.iter_mut()) {
+            *blk = Mat::randn(blk.rows, blk.cols, std, rng);
+        }
+        p
+    }
+
+    /// Materialize the orthogonal member: Cayley per block.
+    pub fn build(&self) -> GsMatrix {
+        GsMatrix::new(
+            self.spec.clone(),
+            BlockDiag::cayley_from(&self.l_params),
+            BlockDiag::cayley_from(&self.r_params),
+        )
+    }
+
+    /// Trainable parameter count.
+    pub fn param_count(&self) -> usize {
+        self.spec.param_count()
+    }
+
+    /// Merge into a frozen pretrained weight: `W' = scale · Q · W⁰`
+    /// (§6.1: "weights of the matrix Q can be merged with the pretrained
+    /// weight W producing no inference overhead").
+    pub fn merge(&self, w0: &Mat) -> Mat {
+        let q = self.build();
+        q.apply(w0).scale(self.scale)
+    }
+}
+
+/// Double GSOFT (§6.2): two-sided adaptation `W' = Q_U W⁰ Q_V`.
+#[derive(Clone, Debug)]
+pub struct DoubleGsParams {
+    pub q_u: OrthoGsParams,
+    pub q_v: OrthoGsParams,
+}
+
+impl DoubleGsParams {
+    pub fn identity(d_out: usize, d_in: usize, b: usize) -> DoubleGsParams {
+        DoubleGsParams {
+            q_u: OrthoGsParams::identity(GsSpec::gsoft(d_out, b)),
+            q_v: OrthoGsParams::identity(GsSpec::gsoft(d_in, b)),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.q_u.param_count() + self.q_v.param_count()
+    }
+
+    /// `W' = Q_U W⁰ Q_V`.
+    pub fn merge(&self, w0: &Mat) -> Mat {
+        let qu = self.q_u.build();
+        let qv = self.q_v.build();
+        // Q_U (W0 Q_V): right-multiplication via (Q_Vᵀ W0ᵀ)ᵀ using the
+        // structured apply on the transpose.
+        let w0qv = qv.apply(&w0.t()).t();
+        qu.apply(&w0qv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn identity_params_are_noop() {
+        let mut rng = Rng::new(1);
+        let w0 = Mat::randn(16, 5, 1.0, &mut rng);
+        let p = OrthoGsParams::identity(GsSpec::gsoft(16, 4));
+        assert!(p.merge(&w0).fro_dist(&w0) < 1e-10);
+        let d = DoubleGsParams::identity(16, 5 * 1, 1); // b=1 divides 5
+        assert!(d.merge(&w0).fro_dist(&w0) < 1e-9);
+    }
+
+    #[test]
+    fn built_matrix_is_orthogonal_for_any_params() {
+        prop::check("Cayley GS always orthogonal", 141, |rng| {
+            let b = [2usize, 4, 8][rng.below(3)];
+            let r = [2usize, 4][rng.below(2)];
+            let p = OrthoGsParams::random(GsSpec::gsoft(b * r, b), 1.0, rng);
+            let q = p.build().to_dense();
+            assert!(q.is_orthogonal(1e-7), "err={}", q.orthogonality_error());
+        });
+    }
+
+    #[test]
+    fn merge_preserves_singular_values() {
+        // Orthogonal fine-tuning preserves the spectrum of W (the paper's
+        // §6.2 argument: Q only rotates the left singular vectors).
+        prop::check("spectrum preserved", 142, |rng| {
+            let p = OrthoGsParams::random(GsSpec::gsoft(8, 2), 0.7, rng);
+            let w0 = Mat::randn(8, 6, 1.0, rng);
+            let w1 = p.merge(&w0);
+            let s0 = crate::linalg::singular_values(&w0);
+            let s1 = crate::linalg::singular_values(&w1);
+            for (a, b) in s0.iter().zip(s1.iter()) {
+                assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn merge_equals_explicit_product() {
+        // No inference overhead: merged weight equals Q_dense · W0 exactly.
+        let mut rng = Rng::new(9);
+        let p = OrthoGsParams::random(GsSpec::gsoft(12, 3), 0.5, &mut rng);
+        let w0 = Mat::randn(12, 7, 1.0, &mut rng);
+        let merged = p.merge(&w0);
+        let explicit = p.build().to_dense().matmul(&w0);
+        assert!(merged.fro_dist(&explicit) < 1e-9);
+    }
+
+    #[test]
+    fn double_gsoft_changes_both_sides() {
+        let mut rng = Rng::new(10);
+        let w0 = Mat::randn(8, 8, 1.0, &mut rng);
+        let mut d = DoubleGsParams::identity(8, 8, 2);
+        for blk in d.q_v.l_params.iter_mut() {
+            *blk = Mat::randn(2, 2, 1.0, &mut rng);
+        }
+        let w1 = d.merge(&w0);
+        // Left singular subspace unchanged (Q_U = I), right rotated.
+        assert!(w1.fro_dist(&w0) > 1e-3, "Q_V must act");
+        let s0 = crate::linalg::singular_values(&w0);
+        let s1 = crate::linalg::singular_values(&w1);
+        for (a, b) in s0.iter().zip(s1.iter()) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn scale_is_applied() {
+        let mut rng = Rng::new(11);
+        let mut p = OrthoGsParams::identity(GsSpec::gsoft(8, 2));
+        p.scale = 0.5;
+        let w0 = Mat::randn(8, 3, 1.0, &mut rng);
+        assert!(p.merge(&w0).fro_dist(&w0.scale(0.5)) < 1e-10);
+    }
+}

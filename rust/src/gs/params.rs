@@ -1,0 +1,145 @@
+//! Parameter-count and factor-count accounting for the PEFT methods the
+//! paper compares (§2, §5.2, Tables 1–2), used by `gsoft params-table`.
+
+use super::density::{butterfly_min_factors, gs_min_factors};
+
+/// Trainable parameters of one `d×d` adapter under each method.
+/// `b` is the block size, `m` the number of factors, `rank` the LoRA rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Full fine-tuning of the `d×n` weight (here reported for `n = d`).
+    Full,
+    /// LoRA with rank `r`: `2 d r`.
+    LoRa { rank: usize },
+    /// OFT: one block-diagonal orthogonal factor, `r` blocks of `b×b`.
+    Oft { block: usize },
+    /// BOFT: `m` block-butterfly factors of `b×b` blocks.
+    Boft { block: usize, m: usize },
+    /// GSOFT: `m` (=2 in practice) block-diagonal factors of `b×b` blocks.
+    Gsoft { block: usize, m: usize },
+    /// Double GSOFT: GSOFT applied on both sides (each with m factors).
+    DoubleGsoft { block: usize, m: usize },
+}
+
+impl Method {
+    /// Dense trainable-parameter count for a `d×d` weight.
+    ///
+    /// Orthogonal methods are counted as stored in practice — a full `b×b`
+    /// matrix per block (`K = A - Aᵀ`; the paper notes one can store only
+    /// the upper triangle post-training, halving this).
+    pub fn param_count(&self, d: usize) -> usize {
+        match *self {
+            Method::Full => d * d,
+            Method::LoRa { rank } => 2 * d * rank,
+            Method::Oft { block } => {
+                assert!(d % block == 0);
+                (d / block) * block * block // = d·b
+            }
+            Method::Boft { block, m } => m * (d / block) * block * block,
+            Method::Gsoft { block, m } => m * (d / block) * block * block,
+            Method::DoubleGsoft { block, m } => 2 * m * (d / block) * block * block,
+        }
+    }
+
+    /// Upper-triangle storage count (post-training memory; paper §7.1).
+    pub fn storage_count(&self, d: usize) -> usize {
+        match *self {
+            Method::Oft { block }
+            | Method::Boft { block, .. }
+            | Method::Gsoft { block, .. }
+            | Method::DoubleGsoft { block, .. } => {
+                // skew-symmetric: b(b-1)/2 per block
+                let per_block = block * (block - 1) / 2;
+                let blocks = self.param_count(d) / (block * block);
+                blocks * per_block
+            }
+            _ => self.param_count(d),
+        }
+    }
+
+    /// Factors needed to form a dense matrix at this block size (§5.2).
+    pub fn factors_for_dense(&self, d: usize) -> usize {
+        match *self {
+            Method::Full | Method::LoRa { .. } => 1,
+            Method::Oft { .. } => 1, // never dense; reported as its single factor
+            Method::Boft { block, .. } => butterfly_min_factors(d / block),
+            Method::Gsoft { block, .. } | Method::DoubleGsoft { block, .. } => {
+                gs_min_factors(block, d / block)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            Method::Full => "Full".into(),
+            Method::LoRa { rank } => format!("LoRA(r={rank})"),
+            Method::Oft { block } => format!("OFT(b={block})"),
+            Method::Boft { block, m } => format!("BOFT(b={block},m={m})"),
+            Method::Gsoft { block, m } => format!("GSOFT(b={block},m={m})"),
+            Method::DoubleGsoft { block, m } => format!("DoubleGSOFT(b={block},m={m})"),
+        }
+    }
+}
+
+/// The §5.2 worked example and its generalization: for a `d×d` dense
+/// orthogonal matrix with block size `b`, the (factors, params) cost of
+/// BOFT vs GSOFT.
+pub fn dense_cost_comparison(d: usize, b: usize) -> ((usize, usize), (usize, usize)) {
+    let r = d / b;
+    let m_bf = butterfly_min_factors(r);
+    let m_gs = gs_min_factors(b, r);
+    let boft = Method::Boft { block: b, m: m_bf };
+    let gsoft = Method::Gsoft { block: b, m: m_gs };
+    ((m_bf, boft.param_count(d)), (m_gs, gsoft.param_count(d)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn section_5_2_worked_example() {
+        // 1024×1024, b = 32: butterfly needs 6 factors → 6·32³ params;
+        // GS needs 2 → 2·32³.
+        let ((m_bf, p_bf), (m_gs, p_gs)) = dense_cost_comparison(1024, 32);
+        assert_eq!(m_bf, 6);
+        assert_eq!(p_bf, 6 * 32 * 32 * 32);
+        assert_eq!(m_gs, 2);
+        assert_eq!(p_gs, 2 * 32 * 32 * 32);
+    }
+
+    #[test]
+    fn table1_param_budgets_are_comparable() {
+        // Table 1 uses LoRA r=8, OFT b=16, BOFT b=8 m=2, GSOFT b=8 on
+        // RoBERTa-base (hidden 768): per-layer counts should be of the
+        // same order (the paper reports 1.33M–1.42M total).
+        let d = 768;
+        let lora = Method::LoRa { rank: 8 }.param_count(d);
+        let oft = Method::Oft { block: 16 }.param_count(d);
+        let boft = Method::Boft { block: 8, m: 2 }.param_count(d);
+        let gsoft = Method::Gsoft { block: 8, m: 2 }.param_count(d);
+        assert_eq!(lora, 2 * 768 * 8);
+        assert_eq!(oft, 768 * 16);
+        assert_eq!(boft, gsoft);
+        assert_eq!(gsoft, 2 * 768 * 8);
+        // GSOFT(b=8,m=2) == LoRA(r=8) parameter parity on square layers.
+        assert_eq!(lora, gsoft);
+    }
+
+    #[test]
+    fn storage_halving() {
+        let m = Method::Gsoft { block: 8, m: 2 };
+        let d = 64;
+        // b(b-1)/2 per block vs b² per block → ratio (b-1)/(2b).
+        assert_eq!(m.storage_count(d) * 2 * 8, m.param_count(d) * 7);
+    }
+
+    #[test]
+    fn double_gsoft_doubles() {
+        let d = 256;
+        assert_eq!(
+            Method::DoubleGsoft { block: 8, m: 2 }.param_count(d),
+            2 * Method::Gsoft { block: 8, m: 2 }.param_count(d)
+        );
+    }
+}

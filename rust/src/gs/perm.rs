@@ -1,0 +1,256 @@
+//! Permutations and the paper's `P_(k,n)` family (Definition 5.2) plus the
+//! "paired" variant `σ^paired_(k,n)` from Appendix F.
+//!
+//! Convention (matches the paper's Proposition 1 walkthrough): a
+//! permutation `σ` defines the matrix `P` with `P[σ(i), i] = 1`, i.e.
+//! `(P x)[σ(i)] = x[i]` — index `i` of the input is routed to position
+//! `σ(i)` of the output.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// A permutation of `{0, …, n-1}`, stored as the map `i ↦ σ(i)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Perm {
+    pub sigma: Vec<usize>,
+}
+
+impl Perm {
+    /// Identity permutation.
+    pub fn identity(n: usize) -> Perm {
+        Perm {
+            sigma: (0..n).collect(),
+        }
+    }
+
+    /// Build from an explicit map, validating bijectivity.
+    pub fn from_sigma(sigma: Vec<usize>) -> Perm {
+        let n = sigma.len();
+        let mut seen = vec![false; n];
+        for &s in &sigma {
+            assert!(s < n, "sigma out of range");
+            assert!(!seen[s], "sigma not injective");
+            seen[s] = true;
+        }
+        Perm { sigma }
+    }
+
+    /// Uniformly random permutation.
+    pub fn random(n: usize, rng: &mut Rng) -> Perm {
+        Perm {
+            sigma: rng.permutation(n),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sigma.len()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.sigma.iter().enumerate().all(|(i, &s)| i == s)
+    }
+
+    /// Inverse permutation (`P^T` as a matrix).
+    pub fn inverse(&self) -> Perm {
+        let mut inv = vec![0; self.n()];
+        for (i, &s) in self.sigma.iter().enumerate() {
+            inv[s] = i;
+        }
+        Perm { sigma: inv }
+    }
+
+    /// Composition: `(self ∘ other)(i) = self(other(i))` — as matrices,
+    /// `P_self · P_other`.
+    pub fn compose(&self, other: &Perm) -> Perm {
+        assert_eq!(self.n(), other.n());
+        Perm {
+            sigma: other.sigma.iter().map(|&i| self.sigma[i]).collect(),
+        }
+    }
+
+    /// Apply to a vector: `y[σ(i)] = x[i]`.
+    pub fn apply_vec<T: Copy + Default>(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.n());
+        let mut y = vec![T::default(); x.len()];
+        for (i, &xi) in x.iter().enumerate() {
+            y[self.sigma[i]] = xi;
+        }
+        y
+    }
+
+    /// `P · A` — permute rows: row `i` of `A` lands at row `σ(i)`.
+    pub fn apply_rows(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows, self.n());
+        let mut out = Mat::zeros(a.rows, a.cols);
+        for i in 0..a.rows {
+            let dst = self.sigma[i];
+            out.data[dst * a.cols..(dst + 1) * a.cols].copy_from_slice(a.row(i));
+        }
+        out
+    }
+
+    /// `A · P` — permute columns: column `σ(j)` of `A` lands at column `j`
+    /// (since `P[σ(j), j] = 1`).
+    pub fn apply_cols(&self, a: &Mat) -> Mat {
+        assert_eq!(a.cols, self.n());
+        let mut out = Mat::zeros(a.rows, a.cols);
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                out[(i, j)] = a[(i, self.sigma[j])];
+            }
+        }
+        out
+    }
+
+    /// Dense matrix form.
+    pub fn to_mat(&self) -> Mat {
+        let n = self.n();
+        let mut p = Mat::zeros(n, n);
+        for (i, &s) in self.sigma.iter().enumerate() {
+            p[(s, i)] = 1.0;
+        }
+        p
+    }
+}
+
+/// `P_(k,n)` of Definition 5.2:
+/// `σ(i) = (i mod k) · n/k + ⌊i/k⌋`.
+///
+/// Applying it is the reshape(n → n/k × k, row-major) → transpose →
+/// flatten relayout; it is the permutation Monarch/GS use between the two
+/// block-diagonal factors.
+pub fn perm_kn(k: usize, n: usize) -> Perm {
+    assert!(k > 0 && n % k == 0, "P_(k,n) requires k | n (got k={k}, n={n})");
+    let stride = n / k;
+    Perm {
+        sigma: (0..n).map(|i| (i % k) * stride + i / k).collect(),
+    }
+}
+
+/// The "paired" permutation of Appendix F:
+/// `σ(i) = (⌊i/2⌋ mod k) · n/k + 2·⌊i/(2k)⌋ + (i mod 2)`.
+///
+/// It moves *pairs* of adjacent channels together so that the channels
+/// coupled by `MaxMinPermuted` stay in the same group across `ChShuffle`.
+pub fn perm_paired(k: usize, n: usize) -> Perm {
+    assert!(n % 2 == 0, "paired permutation needs even n");
+    assert!(k > 0 && n % k == 0 && (n / k) % 2 == 0, "paired P_(k,n) requires 2k | n");
+    let stride = n / k;
+    Perm {
+        sigma: (0..n)
+            .map(|i| ((i / 2) % k) * stride + 2 * (i / (2 * k)) + (i % 2))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn perm_kn_matches_reshape_transpose() {
+        // Def 5.2's description: reshape n into (k rows? see paper) —
+        // concretely σ(i) = (i mod k)·n/k + ⌊i/k⌋ sends consecutive input
+        // indices to strided outputs. Check against a literal
+        // reshape-transpose for k=3, n=12.
+        let p = perm_kn(3, 12);
+        // y[σ(i)] = x[i] ⇔ y[j] = x[σ^{-1}(j)]; σ^{-1}(j) = (j mod 4)*3 + j/4.
+        let x: Vec<usize> = (0..12).collect();
+        let y = p.apply_vec(&x);
+        let expected: Vec<usize> = (0..12).map(|j| (j % 4) * 3 + j / 4).collect();
+        assert_eq!(y, expected);
+    }
+
+    #[test]
+    fn perm_kn_inverse_is_perm_nk() {
+        prop::check("P_(k,n)^{-1} = P_(n/k,n)", 71, |rng| {
+            let k = [2, 3, 4, 6, 8][rng.below(5)];
+            let mult = prop::size_in(rng, 1, 6);
+            let n = k * mult;
+            assert_eq!(perm_kn(k, n).inverse(), perm_kn(n / k, n));
+        });
+    }
+
+    #[test]
+    fn apply_rows_cols_match_dense() {
+        prop::check("P·A and A·P match dense matmul", 72, |rng| {
+            let n = prop::size_in(rng, 1, 9);
+            let p = Perm::random(n, rng);
+            let a = Mat::randn(n, n, 1.0, rng);
+            let pd = p.to_mat();
+            assert!(p.apply_rows(&a).fro_dist(&pd.matmul(&a)) < 1e-12);
+            assert!(p.apply_cols(&a).fro_dist(&a.matmul(&pd)) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn inverse_and_compose_laws() {
+        prop::check("P P^{-1} = I; compose matches matmul", 73, |rng| {
+            let n = prop::size_in(rng, 1, 12);
+            let p = Perm::random(n, rng);
+            let q = Perm::random(n, rng);
+            assert!(p.compose(&p.inverse()).is_identity());
+            assert!(p.inverse().compose(&p).is_identity());
+            let pq = p.compose(&q);
+            assert!(pq.to_mat().fro_dist(&p.to_mat().matmul(&q.to_mat())) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn perm_matrix_is_orthogonal() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let p = Perm::random(17, &mut rng);
+        assert!(p.to_mat().is_orthogonal(1e-12));
+        // P^T = P^{-1}.
+        assert!(p.to_mat().t().fro_dist(&p.inverse().to_mat()) < 1e-12);
+    }
+
+    #[test]
+    fn paired_perm_keeps_pairs_adjacent() {
+        // Pairs (2t, 2t+1) must land on adjacent (even, odd) positions.
+        for (k, n) in [(2, 8), (4, 16), (2, 12), (4, 32)] {
+            let p = perm_paired(k, n);
+            for t in 0..n / 2 {
+                let a = p.sigma[2 * t];
+                let b = p.sigma[2 * t + 1];
+                assert_eq!(a % 2, 0, "even member lands even");
+                assert_eq!(b, a + 1, "pair stays adjacent");
+            }
+        }
+    }
+
+    #[test]
+    fn paired_perm_is_valid_permutation() {
+        for (k, n) in [(2, 8), (4, 16), (2, 12), (8, 32)] {
+            let p = perm_paired(k, n);
+            // from_sigma would panic on a non-bijection.
+            let _ = Perm::from_sigma(p.sigma.clone());
+        }
+    }
+
+    #[test]
+    fn paired_perm_quotient_is_perm_kn() {
+        // Collapsing pairs to single "super-channels" must reproduce
+        // P_(k, n/2) — that is exactly why Appendix F calls it optimal for
+        // information transmission.
+        let (k, n) = (4, 32);
+        let p = perm_paired(k, n);
+        let q = perm_kn(k, n / 2);
+        for t in 0..n / 2 {
+            assert_eq!(p.sigma[2 * t] / 2, q.sigma[t]);
+        }
+    }
+
+    #[test]
+    fn fig3_examples_shapes() {
+        // Figure 3 shows P_(k,12) for k ∈ {3,4,6,2}; sanity: all valid, and
+        // k=1 / k=n are identities.
+        for k in [3, 4, 6, 2] {
+            let p = perm_kn(k, 12);
+            let _ = Perm::from_sigma(p.sigma.clone());
+        }
+        assert!(perm_kn(1, 12).is_identity());
+        assert!(perm_kn(12, 12).is_identity());
+    }
+}

@@ -1,0 +1,29 @@
+//! # gsoft — Group-and-Shuffle structured orthogonal parametrization
+//!
+//! A production-shaped reproduction of *"Group and Shuffle: Efficient
+//! Structured Orthogonal Parametrization"* (Gorbunov et al., NeurIPS 2024)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L1** (build-time Python): Pallas kernels for the block-diagonal /
+//!   group-and-shuffle hot path, under `python/compile/kernels/`.
+//! - **L2** (build-time Python): JAX models — GSOFT / Double GSOFT / OFT /
+//!   BOFT / LoRA adapters on a transformer classifier, a diffusion-style
+//!   denoiser, and 1-Lipschitz LipConvnets with GS orthogonal
+//!   convolutions — AOT-lowered to HLO text in `artifacts/`.
+//! - **L3** (this crate): the exact GS matrix algebra ([`gs`]), a dense
+//!   linear-algebra substrate ([`linalg`]), the PJRT runtime that executes
+//!   the AOT artifacts ([`runtime`]), the fine-tuning coordinator
+//!   ([`coordinator`]), synthetic workload generators ([`data`]) and the
+//!   experiment/reporting harness ([`report`]) that regenerates every
+//!   table and figure of the paper.
+//!
+//! See `DESIGN.md` for the systems inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod data;
+pub mod gs;
+pub mod linalg;
+pub mod report;
+pub mod runtime;
+pub mod util;

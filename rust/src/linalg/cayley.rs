@@ -1,0 +1,109 @@
+//! Cayley parametrization of orthogonal matrices (paper §2).
+//!
+//! `Q = (I + K)(I - K)^{-1}` with `K = -K^T` skew-symmetric maps any
+//! skew-symmetric matrix to an orthogonal matrix with `det = +1` (no -1
+//! eigenvalue). OFT/BOFT/GSOFT all enforce per-block orthogonality this
+//! way; the paper (and our L2 graphs) parametrize `K = A - A^T` from an
+//! unconstrained square `A` for implementation convenience.
+
+use super::lu;
+use super::mat::Mat;
+
+/// Skew-symmetrize: `K = A - A^T` (exactly what the paper trains).
+pub fn skew(a: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    &a.clone() - &a.t()
+}
+
+/// Cayley transform of a skew-symmetric `K`:
+/// `Q = (I + K)(I - K)^{-1}`.
+///
+/// `I - K` is always nonsingular for skew-symmetric `K` (its eigenvalues
+/// are `1 - iλ`), so the unwrap is mathematically safe; we still surface
+/// failure for non-skew inputs.
+pub fn cayley(k: &Mat) -> Option<Mat> {
+    assert_eq!(k.rows, k.cols);
+    let n = k.rows;
+    let i = Mat::eye(n);
+    let i_minus = &i - k;
+    let i_plus = &i + k;
+    // (I+K)(I-K)^{-1} = solve((I-K)^T, (I+K)^T)^T ; both orders commute
+    // for Cayley, but we keep the literal form for clarity.
+    let inv = lu::solve(&i_minus, &i)?;
+    Some(i_plus.matmul(&inv))
+}
+
+/// Cayley transform from an unconstrained matrix: `cayley(A - A^T)`.
+pub fn cayley_unconstrained(a: &Mat) -> Mat {
+    cayley(&skew(a)).expect("I - K is nonsingular for skew K")
+}
+
+/// Inverse Cayley: recover `K` from an orthogonal `Q` with no -1
+/// eigenvalue: `K = (Q - I)(Q + I)^{-1}`.
+pub fn cayley_inverse(q: &Mat) -> Option<Mat> {
+    assert_eq!(q.rows, q.cols);
+    let n = q.rows;
+    let i = Mat::eye(n);
+    let inv = lu::inverse(&(&q.clone() + &i))?;
+    Some((&q.clone() - &i).matmul(&inv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn cayley_is_orthogonal() {
+        prop::check("cayley(A - A^T) is orthogonal", 29, |rng| {
+            let n = prop::size_in(rng, 1, 12);
+            let a = Mat::randn(n, n, 1.0, rng);
+            let q = cayley_unconstrained(&a);
+            assert!(q.is_orthogonal(1e-8), "err={}", q.orthogonality_error());
+        });
+    }
+
+    #[test]
+    fn zero_k_gives_identity() {
+        // Identity initialization (paper §6.1: init Q = I by K = 0).
+        let q = cayley(&Mat::zeros(5, 5)).unwrap();
+        assert!(q.fro_dist(&Mat::eye(5)) < 1e-12);
+    }
+
+    #[test]
+    fn skew_output_is_skew() {
+        prop::check("K = A - A^T is skew", 31, |rng| {
+            let n = prop::size_in(rng, 1, 8);
+            let k = skew(&Mat::randn(n, n, 1.0, rng));
+            assert!(k.fro_dist(&k.t().scale(-1.0)) < 1e-12);
+            for i in 0..n {
+                assert!(k[(i, i)].abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn cayley_round_trip() {
+        prop::check("cayley_inverse(cayley(K)) = K", 37, |rng| {
+            let n = prop::size_in(rng, 1, 8);
+            let k = skew(&Mat::randn(n, n, 0.5, rng));
+            let q = cayley(&k).unwrap();
+            let k2 = cayley_inverse(&q).unwrap();
+            assert!(k.fro_dist(&k2) < 1e-7, "dist={}", k.fro_dist(&k2));
+        });
+    }
+
+    #[test]
+    fn determinant_stays_on_rotation_component() {
+        // Cayley images are rotations: Q has no -1 eigenvalue, so a path
+        // t -> cayley(tK) connects Q to I without leaving O(n); check det
+        // via products of singular-value-signed QR... simpler: check
+        // Q + I is nonsingular.
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let k = skew(&Mat::randn(6, 6, 1.0, &mut rng));
+            let q = cayley(&k).unwrap();
+            assert!(lu::inverse(&(&q + &Mat::eye(6))).is_some());
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! LU decomposition with partial pivoting; linear solves and inverses.
+//!
+//! The Cayley transform `Q = (I + K)(I - K)^{-1}` needs a small dense
+//! solve; blocks in this codebase are at most a few hundred on a side, so
+//! textbook LU with partial pivoting is the right tool.
+
+use super::mat::Mat;
+
+/// Solve `a x = b` for (possibly multiple right-hand sides) `b`.
+/// Returns `None` if `a` is singular to working precision.
+pub fn solve(a: &Mat, b: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols, "solve requires a square matrix");
+    assert_eq!(a.rows, b.rows, "rhs row mismatch");
+    let n = a.rows;
+    let mut lu = a.clone();
+    let mut x = b.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+
+    for k in 0..n {
+        // Partial pivot.
+        let mut pmax = k;
+        for i in k + 1..n {
+            if lu[(i, k)].abs() > lu[(pmax, k)].abs() {
+                pmax = i;
+            }
+        }
+        if lu[(pmax, k)].abs() < 1e-300 {
+            return None;
+        }
+        if pmax != k {
+            for j in 0..n {
+                let t = lu[(k, j)];
+                lu[(k, j)] = lu[(pmax, j)];
+                lu[(pmax, j)] = t;
+            }
+            piv.swap(k, pmax);
+            for j in 0..x.cols {
+                let t = x[(k, j)];
+                x[(k, j)] = x[(pmax, j)];
+                x[(pmax, j)] = t;
+            }
+        }
+        // Eliminate below.
+        let pivot = lu[(k, k)];
+        for i in k + 1..n {
+            let f = lu[(i, k)] / pivot;
+            lu[(i, k)] = f;
+            for j in k + 1..n {
+                let v = lu[(k, j)];
+                lu[(i, j)] -= f * v;
+            }
+            for j in 0..x.cols {
+                let v = x[(k, j)];
+                x[(i, j)] -= f * v;
+            }
+        }
+    }
+
+    // Back substitution.
+    for j in 0..x.cols {
+        for i in (0..n).rev() {
+            let mut s = x[(i, j)];
+            for k in i + 1..n {
+                s -= lu[(i, k)] * x[(k, j)];
+            }
+            x[(i, j)] = s / lu[(i, i)];
+        }
+    }
+    Some(x)
+}
+
+/// Matrix inverse via LU. `None` when singular.
+pub fn inverse(a: &Mat) -> Option<Mat> {
+    solve(a, &Mat::eye(a.rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn solve_recovers_solution() {
+        prop::check("LU: A (A^{-1} b) = b", 17, |rng| {
+            let n = prop::size_in(rng, 1, 10);
+            // Diagonally dominant => comfortably nonsingular.
+            let mut a = Mat::randn(n, n, 1.0, rng);
+            for i in 0..n {
+                a[(i, i)] += n as f64 + 1.0;
+            }
+            let b = Mat::randn(n, prop::size_in(rng, 1, 3), 1.0, rng);
+            let x = solve(&a, &b).expect("nonsingular");
+            assert!(a.matmul(&x).fro_dist(&b) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let mut rng = Rng::new(2);
+        let q = Mat::rand_orthogonal(7, &mut rng);
+        let qi = inverse(&q).unwrap();
+        assert!(q.matmul(&qi).fro_dist(&Mat::eye(7)) < 1e-9);
+        // For orthogonal matrices the inverse is the transpose.
+        assert!(qi.fro_dist(&q.t()) < 1e-9);
+    }
+
+    #[test]
+    fn singular_matrix_is_detected() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(solve(&a, &Mat::eye(2)).is_none());
+        assert!(inverse(&Mat::zeros(3, 3)).is_none());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        let b = Mat::from_rows(2, 1, &[3.0, 5.0]);
+        let x = solve(&a, &b).unwrap();
+        assert!((x[(0, 0)] - 5.0).abs() < 1e-12);
+        assert!((x[(1, 0)] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,392 @@
+//! Dense row-major matrix type and basic operations.
+//!
+//! Everything downstream (GS algebra, projection, Cayley, adapter merging)
+//! is built on this type. Values are `f64` — the paper's constructions
+//! (Cayley solves, blockwise SVD in Algorithm 1) are small but numerically
+//! delicate, and model weights are converted at the f32 boundary only when
+//! talking to PJRT buffers.
+
+use std::fmt;
+use std::ops::{Add, Mul, Sub};
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:9.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat {
+            rows,
+            cols,
+            data: data.to_vec(),
+        }
+    }
+
+    /// From f32 data (PJRT buffers are f32).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// To f32 row-major data.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Gaussian random matrix.
+    pub fn randn(rows: usize, cols: usize, std: f64, rng: &mut Rng) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    /// Random orthogonal matrix via QR of a Gaussian (Haar-ish; enough for
+    /// property tests).
+    pub fn rand_orthogonal(n: usize, rng: &mut Rng) -> Mat {
+        let g = Mat::randn(n, n, 1.0, rng);
+        let (q, r) = super::qr::qr(&g);
+        // Fix signs so the distribution doesn't collapse (standard trick).
+        let mut q = q;
+        for j in 0..n {
+            if r[(j, j)] < 0.0 {
+                for i in 0..n {
+                    q[(i, j)] = -q[(i, j)];
+                }
+            }
+        }
+        q
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix transpose.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product. Straightforward ikj loop — cache friendly enough for
+    /// the sizes this substrate sees (blocks are ≤ a few hundred).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// `||self - other||_F`.
+    pub fn fro_dist(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Deviation from orthogonality: `||A^T A - I||_F`.
+    pub fn orthogonality_error(&self) -> f64 {
+        let gram = self.t().matmul(self);
+        gram.fro_dist(&Mat::eye(self.cols))
+    }
+
+    /// True when `||A^T A - I||_F <= tol`.
+    pub fn is_orthogonal(&self, tol: f64) -> bool {
+        self.orthogonality_error() <= tol
+    }
+
+    /// Extract the sub-block with rows `r0..r0+nr` and cols `c0..c0+nc`.
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Mat {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
+        let mut out = Mat::zeros(nr, nc);
+        for i in 0..nr {
+            for j in 0..nc {
+                out[(i, j)] = self[(r0 + i, c0 + j)];
+            }
+        }
+        out
+    }
+
+    /// Write `b` into the sub-block starting at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                self[(r0 + i, c0 + j)] = b[(i, j)];
+            }
+        }
+    }
+
+    /// Scale every entry.
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// Count entries with |a_ij| > tol (used by the density experiments).
+    pub fn nnz(&self, tol: f64) -> usize {
+        self.data.iter().filter(|x| x.abs() > tol).count()
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// Numerical rank: number of singular values above `tol * s_max`.
+    pub fn rank(&self, tol: f64) -> usize {
+        let sv = super::svd::singular_values(self);
+        let smax = sv.first().copied().unwrap_or(0.0);
+        if smax == 0.0 {
+            return 0;
+        }
+        sv.iter().filter(|&&s| s > tol * smax).count()
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, other: &Mat) -> Mat {
+        self.matmul(other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        assert!(a.fro_dist(&Mat::eye(5).matmul(&a)) < 1e-12);
+        assert!(a.fro_dist(&a.matmul(&Mat::eye(7))) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution_and_product_rule() {
+        prop::check("(AB)^T = B^T A^T", 42, |rng| {
+            let (m, k, n) = (
+                prop::size_in(rng, 1, 6),
+                prop::size_in(rng, 1, 6),
+                prop::size_in(rng, 1, 6),
+            );
+            let a = Mat::randn(m, k, 1.0, rng);
+            let b = Mat::randn(k, n, 1.0, rng);
+            assert!(a.t().t().fro_dist(&a) < 1e-12);
+            let lhs = a.matmul(&b).t();
+            let rhs = b.t().matmul(&a.t());
+            assert!(lhs.fro_dist(&rhs) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        prop::check("matvec = matmul column", 7, |rng| {
+            let (m, n) = (prop::size_in(rng, 1, 8), prop::size_in(rng, 1, 8));
+            let a = Mat::randn(m, n, 1.0, rng);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let xm = Mat::from_rows(n, 1, &x);
+            let y1 = a.matvec(&x);
+            let y2 = a.matmul(&xm);
+            for i in 0..m {
+                assert!((y1[i] - y2[(i, 0)]).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn rand_orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(3);
+        for n in [1, 2, 5, 16] {
+            let q = Mat::rand_orthogonal(n, &mut rng);
+            assert!(q.is_orthogonal(1e-8), "n={n} err={}", q.orthogonality_error());
+        }
+    }
+
+    #[test]
+    fn block_get_set_round_trip() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(6, 8, 1.0, &mut rng);
+        let b = a.block(2, 3, 3, 4);
+        let mut c = Mat::zeros(6, 8);
+        c.set_block(2, 3, &b);
+        assert_eq!(c.block(2, 3, 3, 4).data, b.data);
+        assert_eq!(c[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn rank_of_outer_product_is_one() {
+        let mut rng = Rng::new(5);
+        let u = Mat::randn(6, 1, 1.0, &mut rng);
+        let v = Mat::randn(1, 5, 1.0, &mut rng);
+        let a = u.matmul(&v);
+        assert_eq!(a.rank(1e-9), 1);
+        assert_eq!(Mat::eye(4).rank(1e-9), 4);
+        assert_eq!(Mat::zeros(3, 3).rank(1e-9), 0);
+    }
+
+    #[test]
+    fn f32_round_trip() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(3, 4, 1.0, &mut rng);
+        let b = Mat::from_f32(3, 4, &a.to_f32());
+        assert!(a.fro_dist(&b) < 1e-6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear-algebra substrate, built from scratch (no LAPACK/BLAS in
+//! this environment): row-major [`mat::Mat`], Householder [`qr`], one-sided
+//! Jacobi [`svd`] (needed by the paper's Algorithm 1 projection), [`lu`]
+//! solves, and the [`cayley`] orthogonal parametrization.
+
+pub mod cayley;
+pub mod lu;
+pub mod mat;
+pub mod qr;
+pub mod svd;
+
+pub use cayley::{cayley, cayley_unconstrained, skew};
+pub use lu::{inverse, solve};
+pub use mat::Mat;
+pub use qr::qr;
+pub use svd::{singular_values, spectral_norm, svd, Svd};

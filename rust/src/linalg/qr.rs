@@ -1,0 +1,115 @@
+//! Householder QR decomposition.
+//!
+//! Used by Theorem 1's constructive proof path (orthonormalizing skeleton
+//! factors of GS blocks) and by [`crate::linalg::mat::Mat::rand_orthogonal`].
+
+use super::mat::Mat;
+
+/// Thin QR: `a = q r`, `q` is `m×n` with orthonormal columns (m ≥ n), `r`
+/// upper triangular `n×n`. For m < n returns the full-width factorization
+/// (`q` m×m, `r` m×n).
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let m = a.rows;
+    let n = a.cols;
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Accumulate Q by applying the Householder reflectors to the identity.
+    let mut q = Mat::eye(m);
+
+    for j in 0..k {
+        // Build the Householder vector for column j below the diagonal.
+        let mut norm = 0.0;
+        for i in j..m {
+            norm += r[(i, j)] * r[(i, j)];
+        }
+        let norm = norm.sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = if r[(j, j)] > 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; m - j];
+        v[0] = r[(j, j)] - alpha;
+        for i in j + 1..m {
+            v[i - j] = r[(i, j)];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        // Apply H = I - 2 v v^T / (v^T v) to R (columns j..n).
+        for c in j..n {
+            let dot: f64 = (j..m).map(|i| v[i - j] * r[(i, c)]).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in j..m {
+                r[(i, c)] -= f * v[i - j];
+            }
+        }
+        // Apply H to Q from the right: Q <- Q H (accumulates Q = H1 H2 ...).
+        for rr in 0..m {
+            let dot: f64 = (j..m).map(|i| v[i - j] * q[(rr, i)]).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in j..m {
+                q[(rr, i)] -= f * v[i - j];
+            }
+        }
+    }
+
+    // Trim to thin factors when m >= n.
+    if m >= n {
+        let q_thin = q.block(0, 0, m, n);
+        let r_thin = r.block(0, 0, n, n);
+        (q_thin, r_thin)
+    } else {
+        (q, r)
+    }
+}
+
+/// Orthonormalize the columns of `a` (Q factor of thin QR).
+pub fn orthonormal_columns(a: &Mat) -> Mat {
+    qr(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        prop::check("QR: A = QR, Q^T Q = I, R upper-tri", 13, |rng| {
+            let m = prop::size_in(rng, 1, 10);
+            let n = prop::size_in(rng, 1, m);
+            let a = Mat::randn(m, n, 1.0, rng);
+            let (q, r) = qr(&a);
+            assert_eq!((q.rows, q.cols), (m, n));
+            assert_eq!((r.rows, r.cols), (n, n));
+            assert!(q.matmul(&r).fro_dist(&a) < 1e-9, "reconstruction");
+            assert!(q.is_orthogonal(1e-9), "orthonormal columns");
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r[(i, j)].abs() < 1e-9, "R not upper triangular");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn qr_wide_matrix() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(3, 7, 1.0, &mut rng);
+        let (q, r) = qr(&a);
+        assert!(q.matmul(&r).fro_dist(&a) < 1e-9);
+        assert!(q.is_orthogonal(1e-9));
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        // A column of zeros must not produce NaNs.
+        let mut a = Mat::zeros(4, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 2)] = 2.0;
+        let (q, r) = qr(&a);
+        assert!(q.matmul(&r).fro_dist(&a) < 1e-9);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,268 @@
+//! One-sided Jacobi SVD.
+//!
+//! Algorithm 1 of the paper (projection onto the GS class) requires SVD
+//! truncations of every `(P_L^T A P_R^T)` block; with no LAPACK available
+//! we implement the one-sided Jacobi method, which is simple, numerically
+//! robust, and exactly adequate for the `b×b` block sizes the paper uses
+//! (8–128).
+
+use super::mat::Mat;
+
+
+/// Full SVD `a = u diag(s) v^T`, with `u`: m×k, `s` descending, `v`: n×k,
+/// where `k = min(m, n)`.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+/// Compute the SVD of `a` by one-sided Jacobi on the (possibly implicitly
+/// transposed) matrix with rows ≥ cols.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        // SVD(A^T) = (V, S, U).
+        let t = svd_tall(&a.t());
+        Svd {
+            u: t.v,
+            s: t.s,
+            v: t.u,
+        }
+    }
+}
+
+/// Singular values only (descending).
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    svd(a).s
+}
+
+fn svd_tall(a: &Mat) -> Svd {
+    let m = a.rows;
+    let n = a.cols;
+    debug_assert!(m >= n);
+    // Work on W = A; rotate columns until pairwise orthogonal.
+    let mut w = a.clone();
+    let mut v = Mat::eye(n);
+
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram entries for columns p, q.
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+
+    // Column norms of W are the singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&x, &y| norms[y].partial_cmp(&norms[x]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut vv = Mat::zeros(n, n);
+    let mut s = vec![0.0; n];
+    for (idx, &j) in order.iter().enumerate() {
+        s[idx] = norms[j];
+        if norms[j] > 1e-300 {
+            for i in 0..m {
+                u[(i, idx)] = w[(i, j)] / norms[j];
+            }
+        }
+        for i in 0..n {
+            vv[(i, idx)] = v[(i, j)];
+        }
+    }
+    // Zero singular values leave zero columns in U; replace them with an
+    // orthonormal completion so U always has orthonormal columns.
+    let zero_cols: Vec<usize> = (0..n).filter(|&j| s[j] <= 1e-300).collect();
+    if !zero_cols.is_empty() {
+        u = complete_orthonormal(&u, &zero_cols);
+    }
+    Svd { u, s, v: vv }
+}
+
+/// Replace the listed (zero) columns of `u` with vectors orthonormal to the
+/// rest, via QR of [U | I-slices].
+fn complete_orthonormal(u: &Mat, zero_cols: &[usize]) -> Mat {
+    let m = u.rows;
+    let n = u.cols;
+    let mut out = u.clone();
+    // Gram-Schmidt candidate basis vectors against current columns.
+    let mut next_e = 0usize;
+    for &jz in zero_cols {
+        'candidates: while next_e < m {
+            let mut cand = vec![0.0; m];
+            cand[next_e] = 1.0;
+            next_e += 1;
+            // Orthogonalize against all current non-zero columns.
+            for j in 0..n {
+                if j == jz {
+                    continue;
+                }
+                let dot: f64 = (0..m).map(|i| out[(i, j)] * cand[i]).sum();
+                for i in 0..m {
+                    cand[i] -= dot * out[(i, j)];
+                }
+            }
+            let norm: f64 = cand.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-8 {
+                for i in 0..m {
+                    out[(i, jz)] = cand[i] / norm;
+                }
+                break 'candidates;
+            }
+        }
+    }
+    out
+}
+
+/// Best rank-`r` approximation `a ≈ u_r diag(s_r) v_r^T`, returned as the
+/// pair `(u_r * sqrt(s_r), v_r * sqrt(s_r))` — exactly the "pack
+/// `U_r Σ_r^{1/2}` into L and `Σ_r^{1/2} V_r` into R" step of Algorithm 1.
+pub fn truncated_factors(a: &Mat, r: usize) -> (Mat, Mat) {
+    let Svd { u, s, v } = svd(a);
+    let r = r.min(s.len());
+    let mut uf = Mat::zeros(a.rows, r);
+    let mut vf = Mat::zeros(a.cols, r);
+    for j in 0..r {
+        let sq = s[j].max(0.0).sqrt();
+        for i in 0..a.rows {
+            uf[(i, j)] = u[(i, j)] * sq;
+        }
+        for i in 0..a.cols {
+            vf[(i, j)] = v[(i, j)] * sq;
+        }
+    }
+    (uf, vf)
+}
+
+/// Spectral norm (largest singular value).
+pub fn spectral_norm(a: &Mat) -> f64 {
+    singular_values(a).first().copied().unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn reconstruct(d: &Svd, m: usize, n: usize) -> Mat {
+        let k = d.s.len();
+        let mut us = Mat::zeros(m, k);
+        for i in 0..m {
+            for j in 0..k {
+                us[(i, j)] = d.u[(i, j)] * d.s[j];
+            }
+        }
+        us.matmul(&d.v.t())
+    }
+
+    #[test]
+    fn svd_reconstructs_random_matrices() {
+        prop::check("SVD: A = U S V^T, factors orthonormal", 21, |rng| {
+            let m = prop::size_in(rng, 1, 10);
+            let n = prop::size_in(rng, 1, 10);
+            let a = Mat::randn(m, n, 1.0, rng);
+            let d = svd(&a);
+            assert!(reconstruct(&d, m, n).fro_dist(&a) < 1e-8, "reconstruction");
+            assert!(d.u.is_orthogonal(1e-8), "U orthonormal");
+            assert!(d.v.is_orthogonal(1e-8), "V orthonormal");
+            for w in d.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12, "descending");
+            }
+            assert!(d.s.iter().all(|&x| x >= 0.0), "non-negative");
+        });
+    }
+
+    #[test]
+    fn singular_values_of_orthogonal_are_ones() {
+        let mut rng = Rng::new(9);
+        let q = Mat::rand_orthogonal(12, &mut rng);
+        for s in singular_values(&q) {
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn truncation_is_optimal_rank_r() {
+        // Build a matrix with known singular values; check Eckart–Young.
+        let mut rng = Rng::new(10);
+        let u = Mat::rand_orthogonal(8, &mut rng);
+        let v = Mat::rand_orthogonal(6, &mut rng);
+        let svals = [5.0, 3.0, 1.0, 0.5, 0.1, 0.01];
+        let mut s = Mat::zeros(8, 6);
+        for (i, &x) in svals.iter().enumerate() {
+            s[(i, i)] = x;
+        }
+        let a = u.matmul(&s).matmul(&v.t());
+        let (lf, rf) = truncated_factors(&a, 2);
+        let approx = lf.matmul(&rf.t());
+        let err = approx.fro_dist(&a);
+        let expected: f64 = svals[2..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((err - expected).abs() < 1e-8, "err={err} expected={expected}");
+    }
+
+    #[test]
+    fn zero_and_degenerate_matrices() {
+        let z = Mat::zeros(4, 3);
+        let d = svd(&z);
+        assert!(d.s.iter().all(|&x| x == 0.0));
+        assert!(d.u.is_orthogonal(1e-9), "U completed to orthonormal");
+
+        let mut one = Mat::zeros(3, 3);
+        one[(1, 1)] = 2.5;
+        let d = svd(&one);
+        assert!((d.s[0] - 2.5).abs() < 1e-12);
+        assert!(d.s[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_norm_submultiplicative() {
+        prop::check("||AB|| <= ||A|| ||B||", 33, |rng| {
+            let a = Mat::randn(5, 4, 1.0, rng);
+            let b = Mat::randn(4, 6, 1.0, rng);
+            let ab = spectral_norm(&a.matmul(&b));
+            assert!(ab <= spectral_norm(&a) * spectral_norm(&b) + 1e-9);
+        });
+    }
+}

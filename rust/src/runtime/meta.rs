@@ -1,0 +1,147 @@
+//! Artifact metadata (`artifacts/<name>.meta.json`) — the contract
+//! between the Python compile path and the Rust runtime.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One input or output tensor of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorMeta> {
+        Ok(TensorMeta {
+            name: v.req_str("name")?.to_string(),
+            shape: v
+                .req("shape")?
+                .usize_vec()
+                .ok_or_else(|| anyhow!("bad shape"))?,
+            dtype: v.req_str("dtype")?.to_string(),
+        })
+    }
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo_file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub extra: Json,
+    /// init-buffer name -> file name under artifacts/.
+    pub inits: Vec<(String, String)>,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let inputs = v
+            .req("inputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("inputs not an array"))?
+            .iter()
+            .map(TensorMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .req("outputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("outputs not an array"))?
+            .iter()
+            .map(TensorMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut inits = Vec::new();
+        if let Some(obj) = v.get("inits").and_then(|j| j.as_obj()) {
+            for (k, f) in obj {
+                inits.push((
+                    k.clone(),
+                    f.as_str().ok_or_else(|| anyhow!("init not a string"))?.to_string(),
+                ));
+            }
+        }
+        Ok(ArtifactMeta {
+            name: v.req_str("name")?.to_string(),
+            hlo_file: v.req_str("hlo")?.to_string(),
+            inputs,
+            outputs,
+            extra: v.get("extra").cloned().unwrap_or(Json::Obj(Default::default())),
+            inits,
+        })
+    }
+
+    pub fn input(&self, name: &str) -> Result<&TensorMeta> {
+        self.inputs
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input '{name}'", self.name))
+    }
+
+    /// Usize field from the `extra` record.
+    pub fn extra_usize(&self, key: &str) -> Result<usize> {
+        self.extra
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("artifact {}: extra.{key} missing", self.name))
+    }
+
+    pub fn extra_str(&self, key: &str) -> Result<&str> {
+        self.extra
+            .get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("artifact {}: extra.{key} missing", self.name))
+    }
+
+    /// f64 array field from `extra` (e.g. the diffusion noise schedule).
+    pub fn extra_f64_vec(&self, key: &str) -> Result<Vec<f64>> {
+        self.extra
+            .get(key)
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .ok_or_else(|| anyhow!("artifact {}: extra.{key} missing", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_meta_file() {
+        let dir = std::env::temp_dir().join("gsoft_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.meta.json");
+        std::fs::write(
+            &path,
+            r#"{"name":"x","hlo":"x.hlo.txt",
+               "inputs":[{"name":"a","shape":[2,3],"dtype":"float32"}],
+               "outputs":[{"name":"y","shape":[],"dtype":"float32"}],
+               "extra":{"batch":4,"label":"L","sched":[0.5,0.25]},
+               "inits":{"base":"base.f32"}}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(&path).unwrap();
+        assert_eq!(m.name, "x");
+        assert_eq!(m.inputs[0].shape, vec![2, 3]);
+        assert_eq!(m.inputs[0].element_count(), 6);
+        assert_eq!(m.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.extra_usize("batch").unwrap(), 4);
+        assert_eq!(m.extra_str("label").unwrap(), "L");
+        assert_eq!(m.extra_f64_vec("sched").unwrap(), vec![0.5, 0.25]);
+        assert_eq!(m.inits, vec![("base".to_string(), "base.f32".to_string())]);
+        assert!(m.input("a").is_ok());
+        assert!(m.input("zz").is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path — Python is never involved here.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are compiled once and cached in the [`Runtime`] registry;
+//! train loops re-enter through [`Executable::run`] with host tensors.
+
+pub mod meta;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use meta::{ArtifactMeta, TensorMeta};
+pub use tensor::Tensor;
+
+/// A compiled artifact plus its metadata.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns host tensors (the lowered
+    /// modules use `return_tuple=True`, so the single output buffer is a
+    /// tuple that we decompose).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "artifact {}: expected {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        for (t, m) in inputs.iter().zip(self.meta.inputs.iter()) {
+            anyhow::ensure!(
+                t.shape() == m.shape && t.dtype_name() == m.dtype,
+                "artifact {}: input '{}' expects {:?} {}, got {:?} {}",
+                self.meta.name,
+                m.name,
+                m.shape,
+                m.dtype,
+                t.shape(),
+                t.dtype_name()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let buf = &result[0][0];
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "artifact {}: expected {} outputs, got {}",
+            self.meta.name,
+            self.meta.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(self.meta.outputs.iter())
+            .map(|(l, m)| Tensor::from_literal(&l, m))
+            .collect()
+    }
+}
+
+/// Artifact registry: loads HLO text + metadata from `artifacts/`,
+/// compiles lazily, caches compiled executables and init buffers.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU-PJRT runtime over an artifacts directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "artifacts directory {} missing manifest.json — run `make artifacts`",
+            dir.display()
+        );
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names listed in the manifest.
+    pub fn manifest(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.json"))?;
+        let v = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Ok(v.req("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+            .iter()
+            .filter_map(|x| x.as_str().map(String::from))
+            .collect())
+    }
+
+    /// Load + compile (cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = ArtifactMeta::load(&self.dir.join(format!("{name}.meta.json")))?;
+        let hlo_path = self.dir.join(&meta.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exec = std::sync::Arc::new(Executable { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Read a raw little-endian f32 init buffer (`artifacts/<name>.f32`).
+    pub fn load_init(&self, name: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("{name}.f32"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading init buffer {}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "init buffer not f32-aligned");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}

@@ -1,0 +1,161 @@
+//! Host tensors crossing the PJRT boundary (f32 / i32 only — everything
+//! the artifacts exchange).
+
+use anyhow::{anyhow, Result};
+
+use super::meta::TensorMeta;
+
+/// A host tensor: shape + typed data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::F32 {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "float32",
+            Tensor::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// Scalar f32 value (0-d or 1-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(d.len() == 1, "tensor is not a scalar");
+        Ok(d[0])
+    }
+
+    /// Convert to an xla Literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a Literal back into a host tensor, checking against metadata.
+    pub fn from_literal(lit: &xla::Literal, meta: &TensorMeta) -> Result<Tensor> {
+        match meta.dtype.as_str() {
+            "float32" => Ok(Tensor::F32 {
+                shape: meta.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            }),
+            "int32" => Ok(Tensor::I32 {
+                shape: meta.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => Err(anyhow!("unsupported artifact dtype {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_accessors() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype_name(), "float32");
+        assert_eq!(t.len(), 6);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(Tensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let meta = TensorMeta {
+            name: "x".into(),
+            shape: vec![2, 2],
+            dtype: "float32".into(),
+        };
+        let back = Tensor::from_literal(&lit, &meta).unwrap();
+        assert_eq!(back, t);
+
+        let ti = Tensor::i32(vec![3], vec![7, 8, 9]);
+        let lit = ti.to_literal().unwrap();
+        let meta = TensorMeta {
+            name: "y".into(),
+            shape: vec![3],
+            dtype: "int32".into(),
+        };
+        assert_eq!(Tensor::from_literal(&lit, &meta).unwrap(), ti);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Mini-criterion: a self-contained benchmark harness.
+//!
+//! `criterion` is unavailable offline, so `cargo bench` targets
+//! (declared `harness = false`) use this module instead. It mirrors the
+//! parts of criterion we rely on: warmup, timed iterations, robust
+//! statistics (mean / p50 / p95), throughput reporting and a
+//! machine-readable JSON dump under `results/bench/`.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// One benchmark measurement summary. Times in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<f64>,
+}
+
+impl Summary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+            (
+                "elements",
+                self.elements.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:7.1} ns")
+    } else if ns < 1e6 {
+        format!("{:7.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:7.2} ms", ns / 1e6)
+    } else {
+        format!("{:7.2} s ", ns / 1e9)
+    }
+}
+
+/// Benchmark runner for one `cargo bench` target.
+pub struct Bench {
+    target: String,
+    warmup: Duration,
+    measure: Duration,
+    max_iters: usize,
+    summaries: Vec<Summary>,
+}
+
+impl Bench {
+    pub fn new(target: &str) -> Self {
+        // Honor the same quick-run env var our CI scripts use.
+        let quick = std::env::var("GSOFT_BENCH_QUICK").is_ok();
+        Self {
+            target: target.to_string(),
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_millis(1500)
+            },
+            max_iters: 100_000,
+            summaries: Vec::new(),
+        }
+    }
+
+    /// Override the measurement window (for very slow end-to-end cases).
+    pub fn measure_time(&mut self, d: Duration) -> &mut Self {
+        self.measure = d;
+        self
+    }
+
+    /// Run one benchmark case. `f` is the unit of work; its return value is
+    /// black-boxed to prevent the optimizer from deleting the work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, f: F) -> &Summary {
+        self.bench_with_elements(name, None, f)
+    }
+
+    /// Like [`Bench::bench`], reporting `elements` of throughput per iter.
+    pub fn bench_with_elements<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elements: Option<f64>,
+        mut f: F,
+    ) -> &Summary {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0usize;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measure individual iteration times.
+        let mut times: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && times.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        if times.is_empty() {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let pct = |q: f64| times[((n as f64 - 1.0) * q) as usize];
+        let summary = Summary {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            min_ns: times[0],
+            elements,
+        };
+        let throughput = summary
+            .elements
+            .map(|e| format!("  {:9.2} Melem/s", e / summary.mean_ns * 1e3))
+            .unwrap_or_default();
+        println!(
+            "{:<52} mean {}  p50 {}  p95 {}  ({} iters){}",
+            format!("{}/{}", self.target, name),
+            fmt_ns(summary.mean_ns),
+            fmt_ns(summary.p50_ns),
+            fmt_ns(summary.p95_ns),
+            n,
+            throughput,
+        );
+        self.summaries.push(summary);
+        self.summaries.last().unwrap()
+    }
+
+    /// Write all collected summaries under `results/bench/<target>.json`.
+    pub fn finish(&self) {
+        let dir = std::path::Path::new("results/bench");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let json = Json::Arr(self.summaries.iter().map(|s| s.to_json()).collect());
+        let path = dir.join(format!("{}.json", self.target));
+        let _ = std::fs::write(&path, json.pretty());
+        println!("[bench] wrote {}", path.display());
+    }
+}
+
+/// Optimizer barrier (stable-Rust `black_box` equivalent semantics).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("GSOFT_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        b.measure_time(Duration::from_millis(30));
+        let s = b
+            .bench("sum", || (0..1000u64).sum::<u64>())
+            .clone();
+        assert!(s.iters > 0);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.min_ns <= s.p50_ns);
+    }
+}

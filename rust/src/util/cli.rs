@@ -1,0 +1,122 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports the shapes the `gsoft` launcher needs:
+//! `gsoft <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, `--flag`
+/// booleans and positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    ///
+    /// `known_flags` lists options that take no value; everything else
+    /// starting with `--` consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if let Some(v) = it.next() {
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    // Trailing --key with no value: treat as a flag.
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags)
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse("table1 --steps 300 --quiet extra1 extra2", &["quiet"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.opt("steps"), Some("300"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn typed_options() {
+        let a = parse("run --n 8 --lr 0.5", &[]);
+        assert_eq!(a.opt_usize("n", 1).unwrap(), 8);
+        assert_eq!(a.opt_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+        let bad = parse("run --n x", &[]);
+        assert!(bad.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_option_becomes_flag() {
+        let a = parse("run --verbose", &[]);
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-contained utility substrates (the environment is offline, so the
+//! usual crates — rand, serde_json, clap, criterion, proptest, rayon — are
+//! re-implemented here at the scale this project needs).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,77 @@
+//! Scoped thread pool built on `std::thread::scope` (no tokio offline).
+//!
+//! Used by the coordinator to overlap synthetic-batch generation and
+//! evaluation with the PJRT hot loop, and by the table harnesses to run
+//! independent (method × task) cells in parallel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for `i in 0..n` across up to `workers` threads, collecting
+/// results in index order. Panics in workers propagate.
+pub fn parallel_map<T: Send, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                results.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|v| v.expect("worker did not fill slot"))
+        .collect()
+}
+
+/// Reasonable default worker count for this host.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn workers_share_the_queue() {
+        // With more tasks than workers every task still runs exactly once.
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map(1000, 7, |_| counter.fetch_add(1, Ordering::Relaxed));
+        assert_eq!(out.len(), 1000);
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+}

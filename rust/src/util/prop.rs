@@ -1,0 +1,109 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! A property test here is a closure over a seeded [`crate::util::rng::Rng`]
+//! run for many cases; on failure we re-run with the failing case index so
+//! the panic message pinpoints a deterministic reproduction. Strategies are
+//! plain functions drawing structured values from the RNG — enough to
+//! express the invariants DESIGN.md §5 lists (permutation algebra, GS
+//! reconstruction, projection optimality, orthogonality, ...).
+
+use super::rng::Rng;
+
+/// Number of cases per property (overridable for expensive properties).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for `cases` seeded cases. Panics with the case seed on the
+/// first failure. `prop` gets a fresh forked RNG per case so failures
+/// reproduce from `(seed, case_index)` alone.
+pub fn check_named(name: &str, seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = root.fork(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut case_rng)
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with default case count.
+pub fn check(name: &str, seed: u64, prop: impl FnMut(&mut Rng)) {
+    check_named(name, seed, DEFAULT_CASES, prop);
+}
+
+// ---- common strategies ----------------------------------------------------
+
+/// Draw a size in `[lo, hi]`.
+pub fn size_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Draw a (block_size, num_blocks) pair with `b*r <= max_dim`, both ≥ 1.
+pub fn block_shape(rng: &mut Rng, max_dim: usize) -> (usize, usize) {
+    let b = size_in(rng, 1, 8);
+    let max_r = (max_dim / b).max(1);
+    let r = size_in(rng, 1, max_r.min(8));
+    (b, r)
+}
+
+/// Draw `n` f32s from N(0, std).
+pub fn normal_vec(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+    rng.normal_vec(n, std)
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + tol * x.abs().max(y.abs()),
+            "{what}: mismatch at {i}: {x} vs {y} (tol={tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_named("trivial", 1, 10, |_| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_case() {
+        check_named("fails", 1, 10, |rng| {
+            assert!(rng.below(10) < 9, "hit the 10%% case");
+        });
+    }
+
+    #[test]
+    fn strategies_in_bounds() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let n = size_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&n));
+            let (b, r) = block_shape(&mut rng, 32);
+            assert!(b * r <= 32 || r == 1);
+        }
+    }
+
+    #[test]
+    fn assert_close_tolerates_roundoff() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, "roundoff");
+    }
+}

@@ -1,0 +1,231 @@
+//! Integration tests over the full stack: artifact loading, PJRT
+//! execution, training-loop behaviour, adapter merging and cross-layer
+//! agreement (Rust exact algebra vs the Pallas/HLO kernel path).
+//!
+//! These tests require `make artifacts`; they are skipped (pass
+//! trivially, with a note) when `artifacts/manifest.json` is absent so
+//! `cargo test` works on a fresh checkout.
+
+use gsoft::coordinator::flatspec::FlatSpec;
+use gsoft::coordinator::merge::{gsoft_q, merge_gsoft};
+use gsoft::coordinator::schedule::LrSchedule;
+use gsoft::coordinator::trainer::{Trainer, TrainState};
+use gsoft::data::synglue::{Task, TaskGen};
+use gsoft::linalg::Mat;
+use gsoft::runtime::{Runtime, Tensor};
+use gsoft::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ not built; integration test skipped");
+            None
+        }
+    }
+}
+
+#[test]
+fn quickstart_kernel_matches_exact_algebra() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("quickstart_gs_apply").unwrap();
+    let r = exe.meta.extra_usize("r").unwrap();
+    let b = exe.meta.extra_usize("b").unwrap();
+    let d = exe.meta.extra_usize("d").unwrap();
+    let t = exe.meta.extra_usize("t").unwrap();
+    let mut rng = Rng::new(5);
+    let lp: Vec<f32> = (0..r * b * b).map(|_| rng.normal_f32(0.4)).collect();
+    let rp: Vec<f32> = (0..r * b * b).map(|_| rng.normal_f32(0.4)).collect();
+    let x: Vec<f32> = (0..d * t).map(|_| rng.normal_f32(1.0)).collect();
+    let out = exe
+        .run(&[
+            Tensor::f32(vec![r, b, b], lp.clone()),
+            Tensor::f32(vec![r, b, b], rp.clone()),
+            Tensor::f32(vec![d, t], x.clone()),
+        ])
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+
+    let q = gsoft_q(&lp, &rp, d, b);
+    let yx = q.apply(&Mat::from_f32(d, t, &x));
+    for i in 0..d {
+        for j in 0..t {
+            assert!(
+                (yx[(i, j)] - y[i * t + j] as f64).abs() < 1e-4,
+                "kernel/exact mismatch at ({i},{j})"
+            );
+        }
+    }
+    // And Q is orthogonal.
+    assert!(q.to_dense().is_orthogonal(1e-6));
+}
+
+#[test]
+fn training_reduces_loss_and_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("cls_gsoft_train").unwrap();
+    let base = rt.load_init("cls_base").unwrap();
+    let adapter = rt.load_init("cls_gsoft_adapter").unwrap();
+    let vocab = exe.meta.extra_usize("vocab").unwrap();
+    let seq = exe.meta.extra_usize("seq").unwrap();
+    let batch = exe.meta.extra_usize("batch").unwrap();
+    let gen = TaskGen::new(Task::Qnli, vocab, seq);
+
+    let run = |steps: usize| -> Vec<f32> {
+        let trainer = Trainer::new(exe.clone(), base.clone());
+        let mut state = TrainState::new(adapter.clone());
+        let mut rng = Rng::new(99);
+        trainer
+            .run(&mut state, steps, LrSchedule::Const(3e-3), &mut rng, |_, r| {
+                let (xs, ys) = gen.batch(batch, r);
+                vec![
+                    Tensor::i32(vec![batch, seq], xs),
+                    Tensor::i32(vec![batch], ys),
+                ]
+            })
+            .unwrap()
+            .losses
+    };
+    let losses = run(30);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss should drop: {head} -> {tail}");
+    // Bitwise determinism of the whole loop (seeded data + PJRT CPU).
+    let again = run(30);
+    assert_eq!(losses, again, "training loop must be deterministic");
+}
+
+#[test]
+fn identity_adapter_matches_ft_eval() {
+    let Some(rt) = runtime() else { return };
+    // GSOFT adapter at zero-init must produce exactly the frozen model's
+    // predictions (identity Q) — checked through two different artifacts.
+    let eval_gs = rt.load("cls_gsoft_eval").unwrap();
+    let eval_ft = rt.load("cls_ft_eval").unwrap();
+    let base = rt.load_init("cls_base").unwrap();
+    let adapter = rt.load_init("cls_gsoft_adapter").unwrap();
+    let batch = eval_gs.meta.extra_usize("batch").unwrap();
+    let seq = eval_gs.meta.extra_usize("seq").unwrap();
+    let gen = TaskGen::new(Task::Mnli, 512, seq);
+    let mut rng = Rng::new(3);
+    let (xs, ys) = gen.batch(batch, &mut rng);
+    let a = eval_gs
+        .run(&[
+            Tensor::f32(vec![adapter.len()], adapter.clone()),
+            Tensor::f32(vec![base.len()], base.clone()),
+            Tensor::i32(vec![batch, seq], xs.clone()),
+            Tensor::i32(vec![batch], ys.clone()),
+        ])
+        .unwrap();
+    let b = eval_ft
+        .run(&[
+            Tensor::f32(vec![base.len()], base.clone()),
+            Tensor::f32(vec![1], vec![0.0]),
+            Tensor::i32(vec![batch, seq], xs),
+            Tensor::i32(vec![batch], ys),
+        ])
+        .unwrap();
+    let la = a[0].scalar().unwrap();
+    let lb = b[0].scalar().unwrap();
+    assert!(
+        (la - lb).abs() < 2e-4 * lb.abs().max(1.0),
+        "identity adapter loss {la} vs ft loss {lb}"
+    );
+    assert_eq!(a[2].as_i32().unwrap(), b[2].as_i32().unwrap(), "predictions");
+}
+
+#[test]
+fn merged_adapter_reproduces_adapted_model() {
+    let Some(rt) = runtime() else { return };
+    let train = rt.load("cls_gsoft_train").unwrap();
+    let base = rt.load_init("cls_base").unwrap();
+    let block = train.meta.extra_usize("block").unwrap();
+    let base_spec = FlatSpec::from_json(train.meta.extra.get("base_spec").unwrap()).unwrap();
+    let adapter_spec =
+        FlatSpec::from_json(train.meta.extra.get("adapter_spec").unwrap()).unwrap();
+    // Random (non-trivial) adapter.
+    let mut rng = Rng::new(21);
+    let adapter: Vec<f32> = (0..adapter_spec.size()).map(|_| rng.normal_f32(0.2)).collect();
+    let merged = merge_gsoft(&base, &adapter, &base_spec, &adapter_spec, block).unwrap();
+
+    let eval_gs = rt.load("cls_gsoft_eval").unwrap();
+    let eval_ft = rt.load("cls_ft_eval").unwrap();
+    let batch = eval_gs.meta.extra_usize("batch").unwrap();
+    let seq = eval_gs.meta.extra_usize("seq").unwrap();
+    let gen = TaskGen::new(Task::Rte, 512, seq);
+    for trial in 0..3 {
+        let (xs, ys) = gen.batch(batch, &mut rng);
+        let a = eval_gs
+            .run(&[
+                Tensor::f32(vec![adapter.len()], adapter.clone()),
+                Tensor::f32(vec![base.len()], base.clone()),
+                Tensor::i32(vec![batch, seq], xs.clone()),
+                Tensor::i32(vec![batch], ys.clone()),
+            ])
+            .unwrap();
+        let b = eval_ft
+            .run(&[
+                Tensor::f32(vec![merged.len()], merged.clone()),
+                Tensor::f32(vec![1], vec![0.0]),
+                Tensor::i32(vec![batch, seq], xs),
+                Tensor::i32(vec![batch], ys),
+            ])
+            .unwrap();
+        assert_eq!(
+            a[2].as_i32().unwrap(),
+            b[2].as_i32().unwrap(),
+            "trial {trial}: merged model must predict identically"
+        );
+        let (la, lb) = (a[0].scalar().unwrap(), b[0].scalar().unwrap());
+        assert!((la - lb).abs() < 5e-3 * lb.abs().max(1.0), "{la} vs {lb}");
+    }
+}
+
+#[test]
+fn lip_eval_outputs_are_consistent() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("lip_g4_1_mmp_p_eval").unwrap();
+    let init = rt.load_init("lip_g4_1_mmp_p").unwrap();
+    let batch = exe.meta.extra_usize("batch").unwrap();
+    let img = exe.meta.extra_usize("img").unwrap();
+    let in_ch = exe.meta.extra_usize("in_ch").unwrap();
+    let (xs, ys) = gsoft::data::vision::batch(batch, &mut Rng::new(8));
+    let out = exe
+        .run(&[
+            Tensor::f32(vec![init.len()], init),
+            Tensor::f32(vec![1], vec![0.0]),
+            Tensor::f32(vec![batch, img, img, in_ch], xs),
+            Tensor::i32(vec![batch], ys),
+        ])
+        .unwrap();
+    let loss = out[0].scalar().unwrap();
+    let correct = out[1].scalar().unwrap();
+    let robust = out[2].scalar().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(robust <= correct, "certified ⊆ correct");
+    assert!(correct <= batch as f32);
+}
+
+#[test]
+fn dn_predict_shapes_and_determinism() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("dn_gsoft8_predict").unwrap();
+    let base = rt.load_init("dn_base").unwrap();
+    let adapter = rt.load_init("dn_gsoft8_adapter").unwrap();
+    let batch = exe.meta.extra_usize("batch").unwrap();
+    let dim = exe.meta.extra_usize("dim").unwrap();
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..batch * dim).map(|_| rng.normal_f32(1.0)).collect();
+    let inputs = [
+        Tensor::f32(vec![adapter.len()], adapter.clone()),
+        Tensor::f32(vec![base.len()], base.clone()),
+        Tensor::f32(vec![batch, dim], x),
+        Tensor::i32(vec![batch], vec![3; batch]),
+        Tensor::i32(vec![batch], vec![1; batch]),
+    ];
+    let a = exe.run(&inputs).unwrap();
+    let b = exe.run(&inputs).unwrap();
+    assert_eq!(a[0], b[0], "PJRT CPU must be deterministic");
+    assert_eq!(a[0].shape(), &[batch, dim]);
+}
