@@ -1,0 +1,104 @@
+//! Bench: the multi-tenant serving engine's three paths and the end-to-end
+//! Zipf workload. Isolates what the `serve-bench` CLI measures in vivo:
+//!   merge_cold      — full adapter merge (the cost the cache amortizes)
+//!   gemm_hot        — dense forward through cached merged layers
+//!   apply_factorized— structured Q apply on top of the base GEMM
+//!   engine_zipf     — whole engine under a Zipf-popular request trace
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gsoft::data::zipf::Zipf;
+use gsoft::linalg::Mat;
+use gsoft::serve::{synthetic, CachedModel, Engine, EngineOpts, MergedCache, TenantId};
+use gsoft::util::bench::{black_box, Bench};
+use gsoft::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("serve");
+    let mut rng = Rng::new(7);
+
+    let (tenants, layers, d, block) = (64usize, 4usize, 64usize, 8usize);
+    let registry = synthetic(tenants, layers, d, block, 1).expect("synthetic registry");
+    let spec = Arc::clone(&registry.base().spec);
+    let layer_names: Vec<String> = spec
+        .entries
+        .iter()
+        .filter(|(_, s)| s.len() == 2 && s[0] == s[1])
+        .map(|(n, _)| n.clone())
+        .collect();
+
+    // Cold merge (tenant 0 = GSOFT).
+    bench.bench("merge_cold/gsoft_d64_b8_l4", || {
+        black_box(registry.merge(0).unwrap())
+    });
+
+    // Hot path: dense GEMM through the merged layers, batch of 16.
+    let merged = registry.merge(0).unwrap();
+    let layer_mats: Vec<Mat> = layer_names
+        .iter()
+        .map(|n| Mat::from_f32(d, d, spec.view(&merged, n).unwrap()))
+        .collect();
+    let x = Mat::randn(d, 16, 0.5, &mut rng);
+    bench.bench_with_elements("gemm_hot/d64_t16", Some((layers * d * d * 16) as f64), || {
+        let mut z = x.clone();
+        for w in &layer_mats {
+            z = w.matmul(&z);
+        }
+        black_box(z)
+    });
+
+    // Cache ops at serving granularity.
+    let mut cache = MergedCache::new(64 << 20);
+    cache.insert(
+        0,
+        CachedModel {
+            flat: Arc::new(merged.clone()),
+            layers: layer_mats.clone(),
+        },
+    );
+    bench.bench("cache_hit_lookup", || black_box(cache.get(0)));
+
+    // Registry construction cost on its own (not part of serving).
+    bench.bench("registry_build/64t_l4_d64", || {
+        black_box(synthetic(tenants, layers, d, block, 1).unwrap())
+    });
+
+    // Steady-state engine throughput under Zipf traffic: one long-lived
+    // engine, so the first pass pays the cold merges and later passes
+    // measure the warmed cache — the deployment regime serve-bench's
+    // end-to-end numbers complement.
+    let zipf = Zipf::new(tenants, 1.1);
+    let trace = zipf.trace(512, &mut rng);
+    let inputs: Vec<Vec<f32>> = (0..512).map(|_| rng.normal_vec(d, 0.5)).collect();
+    let engine = Engine::new(
+        synthetic(tenants, layers, d, block, 1).unwrap(),
+        EngineOpts {
+            workers: 4,
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            ..EngineOpts::default()
+        },
+    )
+    .unwrap();
+    bench.measure_time(Duration::from_millis(1500));
+    bench.bench_with_elements("engine_zipf_steady/64t_512req", Some(512.0), || {
+        let handles: Vec<_> = trace
+            .iter()
+            .zip(inputs.iter())
+            .map(|(&t, input)| engine.submit(t as TenantId, input.clone()).unwrap())
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        black_box(())
+    });
+    let report = engine.finish();
+    println!(
+        "[serve bench] steady-state cache hit-rate: {:.3} ({} merges)",
+        report.cache.hit_rate(),
+        report.metrics.merges
+    );
+
+    bench.finish();
+}

@@ -15,6 +15,52 @@ use crate::linalg::{cayley_unconstrained, Mat};
 
 use super::flatspec::FlatSpec;
 
+/// Which adapter family a flat parameter buffer encodes — the reusable
+/// merge API shared by the experiment harnesses, `merge-demo`, and the
+/// multi-tenant serving engine ([`crate::serve`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdapterKind {
+    /// GSOFT (§6.1): `W' = Q W` with `Q = P^T L P R` (two Cayley
+    /// block-diagonal factors of block size `block`).
+    Gsoft { block: usize },
+    /// OFT: `W' = Q W` with a single Cayley block-diagonal `Q`.
+    Oft { block: usize },
+    /// LoRA: `W' = W + A B`.
+    Lora,
+}
+
+impl AdapterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdapterKind::Gsoft { .. } => "gsoft",
+            AdapterKind::Oft { .. } => "oft",
+            AdapterKind::Lora => "lora",
+        }
+    }
+
+    /// Orthogonal adapters preserve the singular values of every adapted
+    /// layer; LoRA does not.
+    pub fn is_orthogonal(&self) -> bool {
+        !matches!(self, AdapterKind::Lora)
+    }
+}
+
+/// Merge any supported adapter kind into a copy of the base buffer —
+/// single entry point dispatching to the kind-specific mergers below.
+pub fn merge_adapter(
+    kind: AdapterKind,
+    base: &[f32],
+    adapter: &[f32],
+    base_spec: &FlatSpec,
+    adapter_spec: &FlatSpec,
+) -> Result<Vec<f32>> {
+    match kind {
+        AdapterKind::Gsoft { block } => merge_gsoft(base, adapter, base_spec, adapter_spec, block),
+        AdapterKind::Oft { block } => merge_oft(base, adapter, base_spec, adapter_spec, block),
+        AdapterKind::Lora => merge_lora(base, adapter, base_spec, adapter_spec),
+    }
+}
+
 /// Cayley blocks from a flat `(r, b, b)` parameter slab.
 fn cayley_blocks(raw: &[f32], r: usize, b: usize) -> BlockDiag {
     assert_eq!(raw.len(), r * b * b);
@@ -69,6 +115,11 @@ pub fn merge_gsoft(
     Ok(merged)
 }
 
+/// Build the OFT orthogonal `Q` (block-diagonal, d×d) from its flat slab.
+pub fn oft_q(k_raw: &[f32], d: usize, b: usize) -> BlockDiag {
+    cayley_blocks(k_raw, d / b, b)
+}
+
 /// Merge an OFT adapter (block-diagonal Q).
 pub fn merge_oft(
     base: &[f32],
@@ -83,7 +134,7 @@ pub fn merge_oft(
         let k_raw = adapter_spec.view(adapter, &kname)?;
         let (_, wshape) = base_spec.locate(layer)?;
         let (din, dout) = (wshape[0], wshape[1]);
-        let q = cayley_blocks(k_raw, din / block, block);
+        let q = oft_q(k_raw, din, block);
         let w = Mat::from_f32(din, dout, base_spec.view(base, layer)?);
         let wq = q.matmul_right(&w);
         base_spec
@@ -123,6 +174,7 @@ pub fn merge_lora(
 mod tests {
     use super::*;
     use crate::util::json::Json;
+    use crate::util::prop;
     use crate::util::rng::Rng;
 
     fn mini_specs() -> (FlatSpec, FlatSpec) {
@@ -190,6 +242,124 @@ mod tests {
         for (a, b) in s0.iter().zip(s1.iter()) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn gsoft_q_is_orthogonal_for_any_params() {
+        // Property: for any flat adapter slab, the GSOFT Q built from
+        // Cayley blocks satisfies ‖QᵀQ − I‖_F ≈ 0 (§4) — so merging can
+        // never distort the spectrum of the base layer. Shrinking drives
+        // any counterexample toward the zero (identity) adapter.
+        prop::check_shrunk(
+            "gsoft_q orthogonal",
+            101,
+            32,
+            |rng| {
+                let b = [2usize, 3, 4][rng.below(3)];
+                let r = [2usize, 3, 4][rng.below(3)];
+                let d = b * r;
+                let params = rng.normal_vec(2 * r * b * b, 1.0);
+                (d, b, params)
+            },
+            |(d, b, params)| {
+                prop::shrink_vec_f32(params)
+                    .into_iter()
+                    .map(|p| (*d, *b, p))
+                    .collect()
+            },
+            |(d, b, params)| {
+                let half = params.len() / 2;
+                let q = gsoft_q(&params[..half], &params[half..], *d, *b).to_dense();
+                assert!(
+                    q.is_orthogonal(1e-8),
+                    "‖QᵀQ−I‖={} for d={d} b={b}",
+                    q.orthogonality_error()
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn merge_gsoft_preserves_orthogonality_invariants() {
+        // Property: merged layer W' = Q W has the same singular values as
+        // W, and for square orthogonal W the merged layer stays orthogonal.
+        prop::check_named("merge_gsoft preserves spectrum", 102, 16, |rng| {
+            let (bs, asp) = mini_specs();
+            let base: Vec<f32> = (0..bs.size()).map(|_| rng.normal_f32(1.0)).collect();
+            let adapter: Vec<f32> = (0..asp.size()).map(|_| rng.normal_f32(0.7)).collect();
+            let merged =
+                merge_adapter(AdapterKind::Gsoft { block: 2 }, &base, &adapter, &bs, &asp)
+                    .unwrap();
+            let w0 = Mat::from_f32(8, 6, bs.view(&base, "l0.wq").unwrap());
+            let w1 = Mat::from_f32(8, 6, bs.view(&merged, "l0.wq").unwrap());
+            let s0 = crate::linalg::singular_values(&w0);
+            let s1 = crate::linalg::singular_values(&w1);
+            for (a, b) in s0.iter().zip(s1.iter()) {
+                assert!((a - b).abs() < 1e-4, "singular value drift: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn merge_oft_preserves_orthogonality_invariants() {
+        let bs = FlatSpec::from_json(
+            &Json::parse(r#"[{"name":"l0.wq","shape":[8,8]}]"#).unwrap(),
+        )
+        .unwrap();
+        let asp = FlatSpec::from_json(
+            &Json::parse(r#"[{"name":"l0.wq.oft_k","shape":[4,2,2]}]"#).unwrap(),
+        )
+        .unwrap();
+        prop::check_named("merge_oft preserves spectrum", 103, 16, |rng| {
+            // Start from an orthogonal base layer: W' = Q W must remain
+            // orthogonal since Q is (Cayley blocks are exactly orthogonal).
+            let w = Mat::rand_orthogonal(8, rng);
+            let base = w.to_f32();
+            let adapter: Vec<f32> = (0..asp.size()).map(|_| rng.normal_f32(1.0)).collect();
+            let q = oft_q(asp.view(&adapter, "l0.wq.oft_k").unwrap(), 8, 2);
+            assert!(q.to_mat().is_orthogonal(1e-8));
+            let merged =
+                merge_adapter(AdapterKind::Oft { block: 2 }, &base, &adapter, &bs, &asp)
+                    .unwrap();
+            let w1 = Mat::from_f32(8, 8, &merged);
+            assert!(
+                w1.is_orthogonal(1e-4),
+                "merged orthogonal base drifted: ‖WᵀW−I‖={}",
+                w1.orthogonality_error()
+            );
+        });
+    }
+
+    #[test]
+    fn repeated_merge_is_bit_identical() {
+        // The serving cache depends on merges being pure functions of
+        // (base, adapter): a cache-hit must be indistinguishable from a
+        // recomputed cold merge, bit for bit.
+        prop::check_named("merge is deterministic", 104, 8, |rng| {
+            let (bs, asp) = mini_specs();
+            let base: Vec<f32> = (0..bs.size()).map(|_| rng.normal_f32(1.0)).collect();
+            let adapter: Vec<f32> = (0..asp.size()).map(|_| rng.normal_f32(0.5)).collect();
+            let kind = AdapterKind::Gsoft { block: 2 };
+            let cold = merge_adapter(kind, &base, &adapter, &bs, &asp).unwrap();
+            let again = merge_adapter(kind, &base, &adapter, &bs, &asp).unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&cold), bits(&again), "merge must be bit-deterministic");
+        });
+    }
+
+    #[test]
+    fn adapter_kind_dispatch_matches_direct_calls() {
+        let (bs, asp) = mini_specs();
+        let mut rng = Rng::new(11);
+        let base: Vec<f32> = (0..bs.size()).map(|_| rng.normal_f32(1.0)).collect();
+        let adapter: Vec<f32> = (0..asp.size()).map(|_| rng.normal_f32(0.5)).collect();
+        let via_kind =
+            merge_adapter(AdapterKind::Gsoft { block: 2 }, &base, &adapter, &bs, &asp).unwrap();
+        let direct = merge_gsoft(&base, &adapter, &bs, &asp, 2).unwrap();
+        assert_eq!(via_kind, direct);
+        assert!(AdapterKind::Gsoft { block: 2 }.is_orthogonal());
+        assert!(!AdapterKind::Lora.is_orthogonal());
+        assert_eq!(AdapterKind::Lora.name(), "lora");
     }
 
     #[test]

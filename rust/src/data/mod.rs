@@ -4,6 +4,7 @@
 //! - [`synglue`] — 8-task sequence-classification suite (GLUE stand-in)
 //! - [`concept`] — few-shot concept adaptation set (DreamBooth stand-in)
 //! - [`vision`]  — image classification (CIFAR-100 stand-in)
+//! - [`zipf`]    — Zipf tenant-popularity traces for the serving engine
 //!
 //! All generators are seeded and platform-deterministic, so every number
 //! in EXPERIMENTS.md regenerates exactly.
@@ -11,3 +12,6 @@
 pub mod concept;
 pub mod synglue;
 pub mod vision;
+pub mod zipf;
+
+pub use zipf::Zipf;

@@ -1,0 +1,109 @@
+//! Zipf-distributed popularity sampling — the canonical model for
+//! multi-tenant request traffic (a few hot tenants, a long cold tail).
+//! Drives the serving-engine benchmarks ([`crate::serve`]): tenant `k`
+//! (0-indexed rank) is drawn with probability proportional to
+//! `1 / (k+1)^s`.
+
+use crate::util::rng::Rng;
+
+/// Zipf(n, s) sampler over ranks `0..n` via a precomputed CDF and binary
+/// search — O(n) setup, O(log n) per sample, fully deterministic from the
+/// caller's [`Rng`].
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    /// Cumulative probabilities; `cdf[k]` = P(rank <= k).
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `n` ranks with exponent `s` (s = 0 is uniform; s ≈ 1 is classic
+    /// web-traffic skew; larger s concentrates harder on the head).
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf needs at least one rank");
+        assert!(s >= 0.0 && s.is_finite(), "exponent must be finite and >= 0");
+        let weights: Vec<f64> = (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Probability of rank `k`.
+    pub fn pmf(&self, k: usize) -> f64 {
+        let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - lo
+    }
+
+    /// Draw one rank in `0..n`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        // First index with cdf[k] > u.
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Draw a whole request trace of `len` ranks.
+    pub fn trace(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        (0..len).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one_and_is_monotone() {
+        let z = Zipf::new(64, 1.1);
+        let total: f64 = (0..64).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        for k in 1..64 {
+            assert!(z.pmf(k) <= z.pmf(k - 1) + 1e-15, "pmf must be non-increasing");
+        }
+    }
+
+    #[test]
+    fn samples_in_range_and_deterministic() {
+        let z = Zipf::new(10, 1.0);
+        let a = z.trace(500, &mut Rng::new(7));
+        let b = z.trace(500, &mut Rng::new(7));
+        assert_eq!(a, b, "same seed, same trace");
+        assert!(a.iter().all(|&k| k < 10));
+    }
+
+    #[test]
+    fn skew_concentrates_on_the_head() {
+        let z = Zipf::new(100, 1.2);
+        let trace = z.trace(20_000, &mut Rng::new(42));
+        let head = trace.iter().filter(|&&k| k < 10).count() as f64 / trace.len() as f64;
+        assert!(head > 0.6, "head mass {head} too small for s=1.2");
+        // Uniform (s=0) spreads evenly.
+        let u = Zipf::new(100, 0.0);
+        let trace = u.trace(20_000, &mut Rng::new(42));
+        let head = trace.iter().filter(|&&k| k < 10).count() as f64 / trace.len() as f64;
+        assert!((head - 0.1).abs() < 0.02, "uniform head mass {head}");
+    }
+
+    #[test]
+    fn single_rank_degenerate() {
+        let z = Zipf::new(1, 2.0);
+        assert_eq!(z.sample(&mut Rng::new(1)), 0);
+        assert!((z.pmf(0) - 1.0).abs() < 1e-15);
+    }
+}

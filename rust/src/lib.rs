@@ -13,9 +13,10 @@
 //! - **L3** (this crate): the exact GS matrix algebra ([`gs`]), a dense
 //!   linear-algebra substrate ([`linalg`]), the PJRT runtime that executes
 //!   the AOT artifacts ([`runtime`]), the fine-tuning coordinator
-//!   ([`coordinator`]), synthetic workload generators ([`data`]) and the
+//!   ([`coordinator`]), synthetic workload generators ([`data`]), the
 //!   experiment/reporting harness ([`report`]) that regenerates every
-//!   table and figure of the paper.
+//!   table and figure of the paper, and the multi-tenant adapter serving
+//!   engine ([`serve`]).
 //!
 //! See `DESIGN.md` for the systems inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -26,4 +27,5 @@ pub mod gs;
 pub mod linalg;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

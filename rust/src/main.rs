@@ -10,6 +10,7 @@
 //! gsoft density  [--d 1024 --b 32]
 //! gsoft params-table
 //! gsoft perms
+//! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8]
 //! gsoft merge-demo
 //! gsoft list     # artifacts in the registry
 //! gsoft all      # every experiment, in order
@@ -78,11 +79,9 @@ fn dispatch(args: &Args) -> Result<()> {
             statics::budget_table(args.opt_usize("d", 128)?).emit("budgets")?;
         }
         "perms" => {
-            let s = statics::perms_figure();
-            println!("{s}");
-            std::fs::create_dir_all("results")?;
-            std::fs::write("results/fig3_perms.txt", s)?;
+            gsoft::report::emit_text("fig3_perms", &statics::perms_figure())?;
         }
+        "serve-bench" => serve_bench(args)?,
         "merge-demo" => merge_demo(args)?,
         "compress-demo" => compress_demo(args)?,
         "list" => {
@@ -192,6 +191,164 @@ fn merge_demo(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-tenant serving benchmark: a synthetic registry of GSOFT/OFT/LoRA
+/// adapters over one frozen base, driven by a Zipf-popularity request
+/// trace through the `serve::Engine`. Reports end-to-end p50/p99 latency,
+/// throughput, cache hit-rate, and per-path worker service times, and
+/// writes a machine-readable `BENCH_serve.json` perf record.
+fn serve_bench(args: &Args) -> Result<()> {
+    use gsoft::data::zipf::Zipf;
+    use gsoft::report::{emit_json_record, fmt, Table};
+    use gsoft::serve::{synthetic, Engine, EngineOpts, TenantId};
+    use gsoft::util::json::Json;
+    use gsoft::util::rng::Rng;
+    use std::time::Instant;
+
+    let tenants = args.opt_usize("tenants", 256)?;
+    let requests = args.opt_usize("requests", 4096)?;
+    let layers = args.opt_usize("layers", 4)?;
+    let d = args.opt_usize("d", 64)?;
+    let block = args.opt_usize("block", 8)?;
+    let zipf_s = args.opt_f64("zipf-s", 1.1)?;
+    let workers = args.opt_usize("workers", gsoft::util::pool::default_workers().min(8))?;
+    let max_batch = args.opt_usize("max-batch", 16)?;
+    let cache_mb = args.opt_usize("cache-mb", 64)?;
+    let seed = args.opt_u64("seed", 42)?;
+
+    println!(
+        "[serve-bench] registry: {tenants} tenants over {layers} layers of {d}x{d} (block {block})"
+    );
+    let registry = synthetic(tenants, layers, d, block, seed)?;
+    let engine = Engine::new(
+        registry,
+        EngineOpts {
+            workers,
+            max_batch,
+            cache_budget_bytes: cache_mb << 20,
+            ..EngineOpts::default()
+        },
+    )?;
+    let policy = engine.policy();
+    println!(
+        "[serve-bench] policy: promote after {} requests/tenant (Theorem-2 density model; Q dense: {})",
+        policy.promote_after, policy.q_dense
+    );
+
+    // Zipf-popular request trace with per-request random inputs.
+    let zipf = Zipf::new(tenants, zipf_s);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let trace = zipf.trace(requests, &mut rng);
+    let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(d, 0.5)).collect();
+
+    println!("[serve-bench] submitting {requests} requests (zipf s={zipf_s}, {workers} workers)…");
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for (tenant, input) in trace.iter().zip(inputs) {
+        handles.push(engine.submit(*tenant as TenantId, input)?);
+    }
+    for h in handles {
+        h.wait()?;
+    }
+    let wall = t0.elapsed();
+    let report = engine.finish();
+    let m = &report.metrics;
+    let throughput = m.requests as f64 / wall.as_secs_f64();
+    let hit_rate = report.cache.hit_rate();
+
+    let ns_ms = 1e-6;
+    let mut table = Table::new(
+        "serve-bench — multi-tenant adapter serving",
+        &["Metric", "Value"],
+    );
+    table.row(vec!["requests".into(), m.requests.to_string()]);
+    table.row(vec!["batches".into(), m.batches.to_string()]);
+    table.row(vec!["merges".into(), m.merges.to_string()]);
+    table.row(vec!["wall time (s)".into(), fmt(wall.as_secs_f64(), 3)]);
+    table.row(vec!["throughput (req/s)".into(), fmt(throughput, 0)]);
+    table.row(vec!["p50 latency (ms)".into(), fmt(m.overall.p50_ns * ns_ms, 3)]);
+    table.row(vec!["p99 latency (ms)".into(), fmt(m.overall.p99_ns * ns_ms, 3)]);
+    table.row(vec!["cache hit-rate".into(), fmt(hit_rate, 3)]);
+    table.row(vec![
+        "cached batches / p50 service (ms)".into(),
+        format!(
+            "{} / {}",
+            m.service_cached.count,
+            fmt(m.service_cached.p50_ns * ns_ms, 4)
+        ),
+    ]);
+    table.row(vec![
+        "cold-merge batches / p50 service (ms)".into(),
+        format!(
+            "{} / {}",
+            m.service_cold.count,
+            fmt(m.service_cold.p50_ns * ns_ms, 4)
+        ),
+    ]);
+    table.row(vec![
+        "factorized batches / p50 service (ms)".into(),
+        format!(
+            "{} / {}",
+            m.service_factorized.count,
+            fmt(m.service_factorized.p50_ns * ns_ms, 4)
+        ),
+    ]);
+    table.emit("serve_bench")?;
+
+    if m.service_cached.count > 0 && m.service_cold.count > 0 {
+        let speedup = m.service_cold.p50_ns / m.service_cached.p50_ns.max(1.0);
+        println!(
+            "[serve-bench] cold-merge p50 service / cached p50 service = {:.1}x",
+            speedup
+        );
+        if speedup <= 1.0 {
+            println!("[serve-bench] WARNING: cached path was not faster than cold merges");
+        }
+    }
+
+    let path_stats_json = |s: &gsoft::serve::engine::PathStats| {
+        Json::obj(vec![
+            ("count", Json::Num(s.count as f64)),
+            ("mean_ns", Json::Num(s.mean_ns)),
+            ("p50_ns", Json::Num(s.p50_ns)),
+            ("p99_ns", Json::Num(s.p99_ns)),
+        ])
+    };
+    let record = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("tenants", Json::Num(tenants as f64)),
+                ("requests", Json::Num(requests as f64)),
+                ("layers", Json::Num(layers as f64)),
+                ("d", Json::Num(d as f64)),
+                ("block", Json::Num(block as f64)),
+                ("zipf_s", Json::Num(zipf_s)),
+                ("workers", Json::Num(workers as f64)),
+                ("max_batch", Json::Num(max_batch as f64)),
+                ("cache_mb", Json::Num(cache_mb as f64)),
+                ("seed", Json::Num(seed as f64)),
+                ("promote_after", Json::Num(policy.promote_after as f64)),
+            ]),
+        ),
+        ("wall_s", Json::Num(wall.as_secs_f64())),
+        ("throughput_rps", Json::Num(throughput)),
+        ("p50_latency_ns", Json::Num(m.overall.p50_ns)),
+        ("p99_latency_ns", Json::Num(m.overall.p99_ns)),
+        ("cache_hit_rate", Json::Num(hit_rate)),
+        ("cache_evictions", Json::Num(report.cache.evictions as f64)),
+        ("batches", Json::Num(m.batches as f64)),
+        ("merges", Json::Num(m.merges as f64)),
+        ("latency_cached", path_stats_json(&m.cached)),
+        ("latency_cold_merge", path_stats_json(&m.cold)),
+        ("latency_factorized", path_stats_json(&m.factorized)),
+        ("service_cached", path_stats_json(&m.service_cached)),
+        ("service_cold_merge", path_stats_json(&m.service_cold)),
+        ("service_factorized", path_stats_json(&m.service_factorized)),
+    ]);
+    emit_json_record(std::path::Path::new("BENCH_serve.json"), &record)?;
+    Ok(())
+}
+
 /// Non-orthogonal GS compression (the concluding remarks' direction):
 /// project a pretrained attention weight onto the GS class at several
 /// block sizes and compare against budget-matched truncated SVD.
@@ -250,6 +407,9 @@ Experiments (regenerate the paper's tables/figures into results/):
 Utilities:
   merge-demo    fine-tune, merge Q into W in Rust, verify zero overhead
   compress-demo non-orthogonal GS layer compression vs truncated SVD
+  serve-bench   multi-tenant adapter serving engine benchmark
+                [--tenants 256 --requests 4096 --layers 4 --d 64
+                 --block 8 --zipf-s 1.1 --max-batch 16 --cache-mb 64]
   list          list compiled artifacts
 
 Common options: --steps N --pretrain-steps N --eval-batches N --lr X

@@ -88,6 +88,32 @@ impl Table {
     }
 }
 
+/// Print a preformatted text figure and persist it under `results/` —
+/// the text-artifact counterpart of [`Table::emit`], so every subcommand
+/// goes through one report path.
+pub fn emit_text(slug: &str, text: &str) -> Result<()> {
+    println!("{text}");
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{slug}.txt"));
+    std::fs::write(&path, text)?;
+    println!("[results] wrote {}", path.display());
+    Ok(())
+}
+
+/// Persist a machine-readable JSON record (benchmark/perf results) at an
+/// explicit path, creating parent directories as needed.
+pub fn emit_json_record(path: &Path, record: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, record.pretty())?;
+    println!("[results] wrote {}", path.display());
+    Ok(())
+}
+
 /// Format a float with fixed decimals.
 pub fn fmt(x: f64, decimals: usize) -> String {
     format!("{x:.decimals$}")
@@ -135,6 +161,22 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn emit_text_and_json_record_write_files() {
+        emit_text("fig_emit_text_selftest", "hello\nfigure").unwrap();
+        let read = std::fs::read_to_string("results/fig_emit_text_selftest.txt").unwrap();
+        assert_eq!(read, "hello\nfigure");
+        let _ = std::fs::remove_file("results/fig_emit_text_selftest.txt");
+
+        let dir = std::env::temp_dir().join(format!("gsoft_report_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/BENCH_test.json");
+        emit_json_record(&path, &Json::obj(vec![("ok", Json::Bool(true))])).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("ok").unwrap(), &Json::Bool(true));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

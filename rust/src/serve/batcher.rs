@@ -1,0 +1,167 @@
+//! Dynamic micro-batching: concurrent requests for the *same* tenant are
+//! grouped so the engine pays one cache lookup / one (possibly cold) merge
+//! / one batched GEMM per flush instead of per request. A batch flushes
+//! when it reaches `max_batch` items or when its oldest request has waited
+//! `max_wait` (the deadline bound on added latency).
+//!
+//! Time is passed in explicitly (`Instant` arguments) so the flush logic
+//! is deterministic under test.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::serve::registry::TenantId;
+
+/// A flushed group of same-tenant items.
+pub struct Batch<T> {
+    pub tenant: TenantId,
+    pub items: Vec<T>,
+    /// When the oldest item in the batch was enqueued.
+    pub opened_at: Instant,
+}
+
+struct Pending<T> {
+    items: Vec<T>,
+    opened_at: Instant,
+}
+
+/// Size/deadline micro-batcher. Not thread-safe by itself — the engine
+/// wraps it in a mutex and drives flushes from submitters and a ticker.
+pub struct MicroBatcher<T> {
+    max_batch: usize,
+    max_wait: Duration,
+    pending: HashMap<TenantId, Pending<T>>,
+}
+
+impl<T> MicroBatcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> MicroBatcher<T> {
+        assert!(max_batch >= 1);
+        MicroBatcher {
+            max_batch,
+            max_wait,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Add one item. Returns a full batch if this item completed one.
+    pub fn push(&mut self, tenant: TenantId, item: T, now: Instant) -> Option<Batch<T>> {
+        let p = self.pending.entry(tenant).or_insert_with(|| Pending {
+            items: Vec::new(),
+            opened_at: now,
+        });
+        p.items.push(item);
+        if p.items.len() >= self.max_batch {
+            let p = self.pending.remove(&tenant).unwrap();
+            Some(Batch {
+                tenant,
+                items: p.items,
+                opened_at: p.opened_at,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every batch whose oldest item has waited at least `max_wait`.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch<T>> {
+        let expired: Vec<TenantId> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| now.duration_since(p.opened_at) >= self.max_wait)
+            .map(|(&t, _)| t)
+            .collect();
+        self.drain(expired)
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Batch<T>> {
+        let all: Vec<TenantId> = self.pending.keys().copied().collect();
+        self.drain(all)
+    }
+
+    fn drain(&mut self, tenants: Vec<TenantId>) -> Vec<Batch<T>> {
+        let mut out: Vec<Batch<T>> = tenants
+            .into_iter()
+            .filter_map(|t| {
+                self.pending.remove(&t).map(|p| Batch {
+                    tenant: t,
+                    items: p.items,
+                    opened_at: p.opened_at,
+                })
+            })
+            .collect();
+        // Oldest first, then tenant id: deterministic flush order.
+        out.sort_by_key(|b| (b.opened_at, b.tenant));
+        out
+    }
+
+    /// Total items waiting across tenants.
+    pub fn pending_items(&self) -> usize {
+        self.pending.values().map(|p| p.items.len()).sum()
+    }
+
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(3, Duration::from_secs(1));
+        let t0 = Instant::now();
+        assert!(b.push(7, 1, t0).is_none());
+        assert!(b.push(7, 2, t0).is_none());
+        let batch = b.push(7, 3, t0).expect("third item completes the batch");
+        assert_eq!(batch.tenant, 7);
+        assert_eq!(batch.items, vec![1, 2, 3]);
+        assert_eq!(b.pending_items(), 0);
+    }
+
+    #[test]
+    fn tenants_batch_independently() {
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(2, Duration::from_secs(1));
+        let t0 = Instant::now();
+        assert!(b.push(1, 10, t0).is_none());
+        assert!(b.push(2, 20, t0).is_none());
+        assert_eq!(b.pending_items(), 2);
+        let batch = b.push(1, 11, t0).unwrap();
+        assert_eq!(batch.items, vec![10, 11]);
+        assert_eq!(b.pending_items(), 1, "tenant 2 still pending");
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(100, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(1, 1, t0);
+        b.push(2, 2, t0 + Duration::from_millis(5));
+        // At +9ms nothing has aged past 10ms.
+        assert!(b.flush_expired(t0 + Duration::from_millis(9)).is_empty());
+        // At +10ms tenant 1's batch (opened at t0) expires; tenant 2's not.
+        let flushed = b.flush_expired(t0 + Duration::from_millis(10));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].tenant, 1);
+        // At +15ms tenant 2 expires too.
+        let flushed = b.flush_expired(t0 + Duration::from_millis(15));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].tenant, 2);
+        assert_eq!(b.pending_items(), 0);
+    }
+
+    #[test]
+    fn flush_all_is_deterministic_oldest_first() {
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(10, Duration::from_secs(1));
+        let t0 = Instant::now();
+        b.push(5, 50, t0 + Duration::from_millis(2));
+        b.push(3, 30, t0);
+        b.push(4, 40, t0 + Duration::from_millis(1));
+        let flushed = b.flush_all();
+        let order: Vec<TenantId> = flushed.iter().map(|f| f.tenant).collect();
+        assert_eq!(order, vec![3, 4, 5]);
+        assert_eq!(b.pending_items(), 0);
+    }
+}

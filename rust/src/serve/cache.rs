@@ -1,0 +1,268 @@
+//! LRU cache of merged per-tenant weights with byte-budget eviction.
+//!
+//! Merging `Q` into `W` (§6.1) makes a tenant's forward pass exactly as
+//! cheap as the frozen base model — but costs a full merge (Cayley solves
+//! + structured `Q·W` products) and a dense copy of the base buffer. Hot
+//! tenants should pay that once; cold tenants should not evict them. This
+//! cache gives the serving engine that policy knob: a strict LRU over
+//! merged models, bounded by bytes instead of entry count (all tenants
+//! share one base, so every entry costs the same, but the byte budget is
+//! the operational unit a deployment reasons in).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::linalg::Mat;
+use crate::serve::registry::TenantId;
+
+/// A merged tenant model, ready for the dense hot path: the flat merged
+/// buffer (bit-identical to what a cold `merge` returns — tested) plus the
+/// per-layer dense matrices the GEMM path multiplies by.
+pub struct CachedModel {
+    pub flat: Arc<Vec<f32>>,
+    pub layers: Vec<Mat>,
+}
+
+impl CachedModel {
+    /// Resident bytes: the f32 flat buffer + f64 layer matrices.
+    pub fn bytes(&self) -> usize {
+        self.flat.len() * 4
+            + self
+                .layers
+                .iter()
+                .map(|m| m.data.len() * 8)
+                .sum::<usize>()
+    }
+}
+
+/// Cache counters (monotonic; snapshot with [`MergedCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Slot {
+    model: Arc<CachedModel>,
+    bytes: usize,
+    /// Tick of the most recent touch; stale queue entries are skipped.
+    tick: u64,
+}
+
+/// Strict-LRU, byte-budgeted cache. Recency is tracked with a lazily
+/// compacted queue of `(tick, tenant)` touches — O(1) amortized per
+/// operation, no linked-list unsafe code.
+pub struct MergedCache {
+    budget_bytes: usize,
+    used_bytes: usize,
+    slots: HashMap<TenantId, Slot>,
+    recency: VecDeque<(u64, TenantId)>,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl MergedCache {
+    pub fn new(budget_bytes: usize) -> MergedCache {
+        MergedCache {
+            budget_bytes,
+            used_bytes: 0,
+            slots: HashMap::new(),
+            recency: VecDeque::new(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn touch(&mut self, tenant: TenantId) {
+        self.clock += 1;
+        let tick = self.clock;
+        if let Some(slot) = self.slots.get_mut(&tenant) {
+            slot.tick = tick;
+        }
+        self.recency.push_back((tick, tenant));
+        // Bound the queue: compact once stale entries dominate.
+        if self.recency.len() > 4 * self.slots.len().max(8) {
+            let slots = &self.slots;
+            self.recency
+                .retain(|&(t, id)| slots.get(&id).is_some_and(|s| s.tick == t));
+        }
+    }
+
+    /// Look up a tenant's merged model, counting a hit or miss and
+    /// refreshing recency on hit.
+    pub fn get(&mut self, tenant: TenantId) -> Option<Arc<CachedModel>> {
+        if let Some(model) = self.slots.get(&tenant).map(|s| Arc::clone(&s.model)) {
+            self.stats.hits += 1;
+            self.touch(tenant);
+            Some(model)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Peek without touching recency or counters (for tests/metrics).
+    pub fn peek(&self, tenant: TenantId) -> Option<Arc<CachedModel>> {
+        self.slots.get(&tenant).map(|s| Arc::clone(&s.model))
+    }
+
+    /// Insert a merged model, evicting least-recently-used tenants until
+    /// it fits. Returns `false` (and caches nothing) when the model alone
+    /// exceeds the whole budget.
+    pub fn insert(&mut self, tenant: TenantId, model: CachedModel) -> bool {
+        let bytes = model.bytes();
+        if bytes > self.budget_bytes {
+            return false;
+        }
+        if let Some(old) = self.slots.remove(&tenant) {
+            self.used_bytes -= old.bytes;
+        }
+        while self.used_bytes + bytes > self.budget_bytes {
+            if !self.evict_lru() {
+                break;
+            }
+        }
+        self.used_bytes += bytes;
+        self.slots.insert(
+            tenant,
+            Slot {
+                model: Arc::new(model),
+                bytes,
+                tick: self.clock,
+            },
+        );
+        self.touch(tenant);
+        self.stats.inserts += 1;
+        true
+    }
+
+    /// Evict the least-recently-used entry. Returns `false` if empty.
+    fn evict_lru(&mut self) -> bool {
+        while let Some((tick, tenant)) = self.recency.pop_front() {
+            let live = self
+                .slots
+                .get(&tenant)
+                .is_some_and(|s| s.tick == tick);
+            if live {
+                let slot = self.slots.remove(&tenant).unwrap();
+                self.used_bytes -= slot.bytes;
+                self.stats.evictions += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(floats: usize) -> CachedModel {
+        CachedModel {
+            flat: Arc::new(vec![0.5; floats]),
+            layers: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn hit_miss_and_hit_rate() {
+        let mut c = MergedCache::new(1 << 20);
+        assert!(c.get(1).is_none());
+        assert!(c.insert(1, model(10)));
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 2, 1));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_order() {
+        // Budget fits exactly two 100-float models (400 bytes each).
+        let mut c = MergedCache::new(800);
+        assert!(c.insert(1, model(100)));
+        assert!(c.insert(2, model(100)));
+        assert_eq!(c.used_bytes(), 800);
+        // Touch 1 so 2 becomes LRU.
+        assert!(c.get(1).is_some());
+        assert!(c.insert(3, model(100)));
+        assert_eq!(c.len(), 2);
+        assert!(c.peek(1).is_some(), "recently used survives");
+        assert!(c.peek(2).is_none(), "LRU evicted");
+        assert!(c.peek(3).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.used_bytes() <= c.budget_bytes());
+    }
+
+    #[test]
+    fn oversized_model_is_refused() {
+        let mut c = MergedCache::new(100);
+        assert!(!c.insert(1, model(1000)));
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leaking_bytes() {
+        let mut c = MergedCache::new(10_000);
+        assert!(c.insert(1, model(100)));
+        assert!(c.insert(1, model(200)));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 800);
+    }
+
+    #[test]
+    fn recency_queue_compacts_under_churn() {
+        let mut c = MergedCache::new(4 * 4 * 10); // fits 4 ten-float models
+        for round in 0..50u64 {
+            for t in 0..4 {
+                let tenant = t + (round % 2) * 2; // overlapping working sets
+                if c.peek(tenant).is_none() {
+                    c.insert(tenant, model(10));
+                } else {
+                    c.get(tenant);
+                }
+            }
+        }
+        assert!(
+            c.recency.len() <= 4 * c.slots.len().max(8) + 1,
+            "recency queue must stay bounded, got {}",
+            c.recency.len()
+        );
+        assert!(c.used_bytes() <= c.budget_bytes());
+    }
+}

@@ -1,0 +1,858 @@
+//! The multi-tenant serving engine: worker threads on a
+//! [`crate::util::pool::WorkQueue`] drain micro-batches and serve each one
+//! over the cheapest available path:
+//!
+//! - **hot** (`CachedDense`): the tenant's merged weights are in the LRU
+//!   cache → one dense GEMM per layer, exactly the frozen-model cost
+//!   (the paper's "no inference overhead" claim, §6.1).
+//! - **cold merge** (`ColdMerge`): the tenant just crossed the promotion
+//!   threshold → pay `merge` once (Cayley solves + structured `Q·W`),
+//!   cache the result, serve this batch from it.
+//! - **factorized** (`Factorized`): cold-tail tenants skip merging —
+//!   serve `W'X = Q(WX)` with the structured GS/OFT apply (or the
+//!   low-rank `WX + A(BX)` for LoRA), paying a small per-request
+//!   overhead instead of a merge.
+//!
+//! The promotion threshold comes from the Theorem-2 density cost model
+//! ([`Policy::from_cost_model`]).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::merge::{gsoft_q, oft_q, AdapterKind};
+use crate::gs::density::{chain_support, gs_min_factors, BitMatrix, PermFamily};
+use crate::gs::{BlockDiag, GsMatrix};
+use crate::linalg::Mat;
+use crate::util::pool::{default_workers, WorkQueue};
+
+use super::batcher::{Batch, MicroBatcher};
+use super::cache::{CacheStats, CachedModel, MergedCache};
+use super::registry::{AdapterEntry, Registry, TenantId};
+
+/// Which path served a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServePath {
+    CachedDense,
+    ColdMerge,
+    Factorized,
+}
+
+impl ServePath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServePath::CachedDense => "cached_dense",
+            ServePath::ColdMerge => "cold_merge",
+            ServePath::Factorized => "factorized",
+        }
+    }
+}
+
+/// Promotion policy derived from the paper's density/cost model
+/// (`gs/density.rs`): merging pays `m·nnz(factor)·d` flops once, while the
+/// factorized path pays `m·nnz(factor)` extra flops per request on top of
+/// the base GEMM. With micro-batches of expected size `B`, break-even is
+/// after `d/B` requests — tenants past that threshold are merged and
+/// cached; the cold tail is served factorized and never evicts a hot
+/// tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct Policy {
+    /// Requests seen (per tenant) before the engine merges + caches it.
+    pub promote_after: u64,
+    /// Whether the merged `Q` support is fully dense at the chosen
+    /// `(d, block)` — Theorem 2 guarantees this for `m = 1 + ⌈log_b r⌉`,
+    /// which is what makes the cached path a plain dense GEMM.
+    pub q_dense: bool,
+}
+
+impl Policy {
+    pub fn from_cost_model(d: usize, block: usize, expected_batch: usize) -> Policy {
+        let b = block.clamp(2, d.max(2));
+        let r = (d / b).max(1);
+        let m = gs_min_factors(b, r);
+        // Exact per-column structured cost from the support model: one
+        // block-diagonal factor has nnz = r·b² = d·b; GSOFT applies m of
+        // them. Merge applies the same to all d columns of W.
+        let factor_nnz = BitMatrix::block_diag(r, b, b).nnz();
+        let q_apply_flops = (m * factor_nnz).max(1);
+        let merge_flops = q_apply_flops * d;
+        let batch = expected_batch.max(1);
+        let promote_after = (merge_flops / (q_apply_flops * batch)).max(1) as u64;
+        let q_dense = chain_support(r * b, b, m, PermFamily::GsKn).is_dense();
+        Policy {
+            promote_after,
+            q_dense,
+        }
+    }
+
+    /// Fixed threshold (tests, or deployments that know their traffic).
+    pub fn fixed(promote_after: u64) -> Policy {
+        Policy {
+            promote_after,
+            q_dense: true,
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineOpts {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Ticker poll interval for deadline flushes.
+    pub poll_interval: Duration,
+    pub cache_budget_bytes: usize,
+    /// `None` → derive from [`Policy::from_cost_model`].
+    pub promote_after: Option<u64>,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            workers: default_workers().min(8),
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            poll_interval: Duration::from_micros(500),
+            cache_budget_bytes: 64 << 20,
+            promote_after: None,
+        }
+    }
+}
+
+/// One served request's result.
+pub struct ServeOutput {
+    pub output: Vec<f32>,
+    pub path: ServePath,
+    pub latency: Duration,
+}
+
+struct Slot {
+    result: Mutex<Option<Result<ServeOutput, String>>>,
+    done: Condvar,
+}
+
+/// Handle to an in-flight request; [`Handle::wait`] blocks for the result.
+pub struct Handle {
+    slot: Arc<Slot>,
+}
+
+impl Handle {
+    pub fn wait(self) -> Result<ServeOutput> {
+        let mut guard = self.slot.result.lock().unwrap();
+        while guard.is_none() {
+            guard = self.slot.done.wait(guard).unwrap();
+        }
+        guard.take().unwrap().map_err(|e| anyhow!(e))
+    }
+}
+
+fn fulfill(slot: &Slot, result: Result<ServeOutput, String>) {
+    *slot.result.lock().unwrap() = Some(result);
+    slot.done.notify_all();
+}
+
+struct Job {
+    input: Vec<f32>,
+    submitted_at: Instant,
+    slot: Arc<Slot>,
+}
+
+/// Latency statistics for one path (or overall).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathStats {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+fn path_stats(mut ns: Vec<u64>) -> PathStats {
+    if ns.is_empty() {
+        return PathStats::default();
+    }
+    ns.sort_unstable();
+    let n = ns.len();
+    let pct = |q: f64| ns[((n as f64 - 1.0) * q).round() as usize] as f64;
+    PathStats {
+        count: n as u64,
+        mean_ns: ns.iter().sum::<u64>() as f64 / n as f64,
+        p50_ns: pct(0.50),
+        p99_ns: pct(0.99),
+    }
+}
+
+/// Snapshot of the engine's counters and latency distributions.
+///
+/// `overall`/`cached`/`cold`/`factorized` are *end-to-end per-request
+/// latencies* (submit → result, including batching and queueing);
+/// `service_*` are *per-batch worker compute times*, which isolate the
+/// cached-GEMM vs cold-merge vs factorized cost difference from queue
+/// depth under bursty load.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub merges: u64,
+    pub overall: PathStats,
+    pub cached: PathStats,
+    pub cold: PathStats,
+    pub factorized: PathStats,
+    pub service_cached: PathStats,
+    pub service_cold: PathStats,
+    pub service_factorized: PathStats,
+}
+
+struct Metrics {
+    batches: AtomicU64,
+    merges: AtomicU64,
+    latencies: Mutex<Vec<(ServePath, u64)>>,
+    /// Per-batch worker compute time.
+    service: Mutex<Vec<(ServePath, u64)>>,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        Metrics {
+            batches: AtomicU64::new(0),
+            merges: AtomicU64::new(0),
+            latencies: Mutex::new(Vec::new()),
+            service: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn record(&self, path: ServePath, latency: Duration) {
+        self.latencies
+            .lock()
+            .unwrap()
+            .push((path, latency.as_nanos() as u64));
+    }
+
+    fn record_service(&self, path: ServePath, elapsed: Duration) {
+        self.service
+            .lock()
+            .unwrap()
+            .push((path, elapsed.as_nanos() as u64));
+    }
+
+    fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latencies.lock().unwrap().clone();
+        let service = self.service.lock().unwrap().clone();
+        let by = |v: &[(ServePath, u64)], p: ServePath| {
+            path_stats(
+                v.iter()
+                    .filter(|(q, _)| *q == p)
+                    .map(|&(_, ns)| ns)
+                    .collect(),
+            )
+        };
+        MetricsSnapshot {
+            requests: lat.len() as u64,
+            batches: self.batches.load(Ordering::Relaxed),
+            merges: self.merges.load(Ordering::Relaxed),
+            overall: path_stats(lat.iter().map(|&(_, ns)| ns).collect()),
+            cached: by(&lat, ServePath::CachedDense),
+            cold: by(&lat, ServePath::ColdMerge),
+            factorized: by(&lat, ServePath::Factorized),
+            service_cached: by(&service, ServePath::CachedDense),
+            service_cold: by(&service, ServePath::ColdMerge),
+            service_factorized: by(&service, ServePath::Factorized),
+        }
+    }
+}
+
+/// Final report returned by [`Engine::finish`].
+pub struct EngineReport {
+    pub metrics: MetricsSnapshot,
+    pub cache: CacheStats,
+}
+
+struct Shared {
+    registry: Registry,
+    /// Names + dense matrices of the square served layers, in spec order.
+    base_layers: Vec<(String, Mat)>,
+    d: usize,
+    policy: Policy,
+    cache: Mutex<MergedCache>,
+    seen: Mutex<HashMap<TenantId, u64>>,
+    /// Tenants with a merge in flight — prevents two workers that both
+    /// miss the cache from paying the same cold merge concurrently.
+    merging: Mutex<HashSet<TenantId>>,
+    /// Tenants whose merged model exceeds the whole cache budget: they
+    /// stay on the factorized path forever instead of re-merging on every
+    /// batch.
+    uncacheable: Mutex<HashSet<TenantId>>,
+    /// Memoized factorized operators (Cayley blocks are built once per
+    /// tenant, not per batch); entries are dropped on promotion. Adapters
+    /// are immutable once the engine owns the registry, so this cannot go
+    /// stale.
+    factored: Mutex<HashMap<TenantId, Arc<Vec<Option<LayerQ>>>>>,
+    batcher: Mutex<MicroBatcher<Job>>,
+    queue: WorkQueue<Batch<Job>>,
+    metrics: Metrics,
+    shutting_down: AtomicBool,
+}
+
+/// The serving engine. `submit` is thread-safe; drop or [`Engine::finish`]
+/// drains pending work and joins the workers.
+pub struct Engine {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    ticker: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    pub fn new(registry: Registry, opts: EngineOpts) -> Result<Engine> {
+        let base = registry.base().clone();
+        let mut base_layers = Vec::new();
+        let mut d = None;
+        for (name, shape) in &base.spec.entries {
+            if shape.len() == 2 && shape[0] == shape[1] {
+                let dim = shape[0];
+                anyhow::ensure!(
+                    d.is_none() || d == Some(dim),
+                    "square layers must share one dimension"
+                );
+                d = Some(dim);
+                let w = Mat::from_f32(dim, dim, base.spec.view(&base.weights, name)?);
+                base_layers.push((name.clone(), w));
+            }
+        }
+        let d = d.ok_or_else(|| anyhow!("base model has no square layers to serve"))?;
+        let policy = match opts.promote_after {
+            Some(k) => Policy::fixed(k),
+            None => {
+                // Infer the dominant block size from any registered GSOFT
+                // adapter; fall back to d/4.
+                let block = registry
+                    .tenant_ids()
+                    .into_iter()
+                    .find_map(|t| {
+                        registry.get(t).and_then(|e| match e.kind {
+                            AdapterKind::Gsoft { block } | AdapterKind::Oft { block } => {
+                                Some(block)
+                            }
+                            AdapterKind::Lora => None,
+                        })
+                    })
+                    .unwrap_or((d / 4).max(1));
+                Policy::from_cost_model(d, block, opts.max_batch.div_ceil(2))
+            }
+        };
+
+        let shared = Arc::new(Shared {
+            registry,
+            base_layers,
+            d,
+            policy,
+            cache: Mutex::new(MergedCache::new(opts.cache_budget_bytes)),
+            seen: Mutex::new(HashMap::new()),
+            merging: Mutex::new(HashSet::new()),
+            uncacheable: Mutex::new(HashSet::new()),
+            factored: Mutex::new(HashMap::new()),
+            batcher: Mutex::new(MicroBatcher::new(opts.max_batch, opts.max_wait)),
+            queue: WorkQueue::new(),
+            metrics: Metrics::new(),
+            shutting_down: AtomicBool::new(false),
+        });
+
+        let workers = (0..opts.workers.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    while let Some(batch) = sh.queue.pop() {
+                        process_batch(&sh, batch);
+                    }
+                })
+            })
+            .collect();
+
+        let ticker = {
+            let sh = Arc::clone(&shared);
+            let poll = opts.poll_interval;
+            std::thread::spawn(move || {
+                while !sh.shutting_down.load(Ordering::SeqCst) {
+                    std::thread::sleep(poll);
+                    let expired = sh.batcher.lock().unwrap().flush_expired(Instant::now());
+                    for b in expired {
+                        sh.queue.push(b);
+                    }
+                }
+            })
+        };
+
+        Ok(Engine {
+            shared,
+            workers,
+            ticker: Some(ticker),
+        })
+    }
+
+    /// Input/output dimension of the served model.
+    pub fn input_dim(&self) -> usize {
+        self.shared.d
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.shared.policy
+    }
+
+    /// Enqueue one request. The returned handle resolves once a worker has
+    /// served the micro-batch the request lands in.
+    pub fn submit(&self, tenant: TenantId, input: Vec<f32>) -> Result<Handle> {
+        anyhow::ensure!(
+            !self.shared.shutting_down.load(Ordering::SeqCst),
+            "engine is shutting down"
+        );
+        anyhow::ensure!(
+            input.len() == self.shared.d,
+            "input has {} floats, model dimension is {}",
+            input.len(),
+            self.shared.d
+        );
+        anyhow::ensure!(
+            self.shared.registry.contains(tenant),
+            "unknown tenant {tenant}"
+        );
+        let slot = Arc::new(Slot {
+            result: Mutex::new(None),
+            done: Condvar::new(),
+        });
+        let job = Job {
+            input,
+            submitted_at: Instant::now(),
+            slot: Arc::clone(&slot),
+        };
+        let full = self
+            .shared
+            .batcher
+            .lock()
+            .unwrap()
+            .push(tenant, job, Instant::now());
+        if let Some(batch) = full {
+            self.shared.queue.push(batch);
+        }
+        Ok(Handle { slot })
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.lock().unwrap().stats()
+    }
+
+    fn shutdown(&mut self) {
+        if self.shared.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(t) = self.ticker.take() {
+            let _ = t.join();
+        }
+        let flushed = self.shared.batcher.lock().unwrap().flush_all();
+        for b in flushed {
+            self.shared.queue.push(b);
+        }
+        self.shared.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Drain pending work, join workers, and return the final report.
+    pub fn finish(mut self) -> EngineReport {
+        self.shutdown();
+        EngineReport {
+            metrics: self.metrics(),
+            cache: self.cache_stats(),
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---- batch serving ---------------------------------------------------------
+
+/// Per-layer structured operator for the factorized (unmerged) path.
+enum LayerQ {
+    Gs(GsMatrix),
+    Block(BlockDiag),
+    LowRank { a: Mat, b: Mat },
+}
+
+fn activate(m: &mut Mat) {
+    for v in m.data.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+fn forward_dense(layers: &[Mat], mut x: Mat) -> Mat {
+    for w in layers {
+        x = w.matmul(&x);
+        activate(&mut x);
+    }
+    x
+}
+
+/// `W' X = Q (W X)` per layer without ever forming `W' = Q W`.
+fn forward_factorized(sh: &Shared, ops: &[Option<LayerQ>], mut x: Mat) -> Mat {
+    for ((_, w), q) in sh.base_layers.iter().zip(ops) {
+        let base_y = w.matmul(&x);
+        let y = match q {
+            Some(LayerQ::Gs(q)) => q.apply(&base_y),
+            Some(LayerQ::Block(bd)) => bd.matmul_right(&base_y),
+            Some(LayerQ::LowRank { a, b }) => &base_y + &a.matmul(&b.matmul(&x)),
+            None => base_y,
+        };
+        x = y;
+        activate(&mut x);
+    }
+    x
+}
+
+/// Per-tenant factorized operators, built once (the Cayley solves are the
+/// expensive part) and reused across batches until the tenant is promoted.
+fn factored_ops(
+    sh: &Shared,
+    tenant: TenantId,
+    entry: &AdapterEntry,
+) -> Result<Arc<Vec<Option<LayerQ>>>> {
+    if let Some(ops) = sh.factored.lock().unwrap().get(&tenant) {
+        return Ok(Arc::clone(ops));
+    }
+    let ops: Vec<Option<LayerQ>> = sh
+        .base_layers
+        .iter()
+        .map(|(name, _)| layer_q(entry, name, sh.d))
+        .collect::<Result<_>>()?;
+    let ops = Arc::new(ops);
+    // Racing builders both produce identical operators; keep whichever
+    // landed first.
+    Ok(Arc::clone(
+        sh.factored
+            .lock()
+            .unwrap()
+            .entry(tenant)
+            .or_insert_with(|| Arc::clone(&ops)),
+    ))
+}
+
+/// Build the structured operator for one layer of one tenant's adapter,
+/// or `None` if the adapter does not touch this layer.
+fn layer_q(entry: &AdapterEntry, layer: &str, d: usize) -> Result<Option<LayerQ>> {
+    match entry.kind {
+        AdapterKind::Gsoft { block } => {
+            let lname = format!("{layer}.gs_l");
+            if entry.spec.locate(&lname).is_err() {
+                return Ok(None);
+            }
+            let l_raw = entry.spec.view(&entry.params, &lname)?;
+            let r_raw = entry.spec.view(&entry.params, &format!("{layer}.gs_r"))?;
+            Ok(Some(LayerQ::Gs(gsoft_q(l_raw, r_raw, d, block))))
+        }
+        AdapterKind::Oft { block } => {
+            let kname = format!("{layer}.oft_k");
+            if entry.spec.locate(&kname).is_err() {
+                return Ok(None);
+            }
+            let k_raw = entry.spec.view(&entry.params, &kname)?;
+            Ok(Some(LayerQ::Block(oft_q(k_raw, d, block))))
+        }
+        AdapterKind::Lora => {
+            let aname = format!("{layer}.lora_a");
+            let Ok((_, ashape)) = entry.spec.locate(&aname) else {
+                return Ok(None);
+            };
+            let rank = ashape[1];
+            let a = Mat::from_f32(d, rank, entry.spec.view(&entry.params, &aname)?);
+            let b = Mat::from_f32(
+                rank,
+                d,
+                entry.spec.view(&entry.params, &format!("{layer}.lora_b"))?,
+            );
+            Ok(Some(LayerQ::LowRank { a, b }))
+        }
+    }
+}
+
+fn layer_mats(sh: &Shared, flat: &[f32]) -> Result<Vec<Mat>> {
+    let spec = &sh.registry.base().spec;
+    sh.base_layers
+        .iter()
+        .map(|(name, _)| Ok(Mat::from_f32(sh.d, sh.d, spec.view(flat, name)?)))
+        .collect()
+}
+
+fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, ServePath)> {
+    let d = sh.d;
+    let mut x = Mat::zeros(d, jobs.len());
+    for (j, job) in jobs.iter().enumerate() {
+        for i in 0..d {
+            x[(i, j)] = job.input[i] as f64;
+        }
+    }
+
+    // Hot path: merged weights already cached.
+    let cached = sh.cache.lock().unwrap().get(tenant);
+    if let Some(model) = cached {
+        return Ok((forward_dense(&model.layers, x), ServePath::CachedDense));
+    }
+
+    let entry = sh
+        .registry
+        .get(tenant)
+        .ok_or_else(|| anyhow!("tenant {tenant} disappeared from the registry"))?;
+
+    // Promotion: merge once the tenant has proven hot enough to amortize.
+    let total_seen = {
+        let mut seen = sh.seen.lock().unwrap();
+        let e = seen.entry(tenant).or_insert(0);
+        *e += jobs.len() as u64;
+        *e
+    };
+    // A tenant past the threshold is merged by exactly one worker: claim
+    // it in the `merging` set; concurrent batches that lose the claim are
+    // served factorized while the merge is in flight. Tenants whose
+    // merged model cannot fit the cache at all stay factorized.
+    let promotable = total_seen >= sh.policy.promote_after
+        && !sh.uncacheable.lock().unwrap().contains(&tenant);
+    if promotable && sh.merging.lock().unwrap().insert(tenant) {
+        // Double-check: a peer may have finished merging between our
+        // cache miss and the claim. Bind the lookup so the cache mutex
+        // is released before the forward pass.
+        let recheck = sh.cache.lock().unwrap().get(tenant);
+        if let Some(model) = recheck {
+            sh.merging.lock().unwrap().remove(&tenant);
+            return Ok((forward_dense(&model.layers, x), ServePath::CachedDense));
+        }
+        let merged = (|| -> Result<CachedModel> {
+            let flat = sh.registry.merge(tenant)?;
+            let layers = layer_mats(sh, &flat)?;
+            Ok(CachedModel {
+                flat: Arc::new(flat),
+                layers,
+            })
+        })();
+        sh.merging.lock().unwrap().remove(&tenant);
+        let model = merged?;
+        let y = forward_dense(&model.layers, x);
+        sh.metrics.merges.fetch_add(1, Ordering::Relaxed);
+        let inserted = sh.cache.lock().unwrap().insert(tenant, model);
+        if inserted {
+            // The factorized operators are dead weight once cached.
+            sh.factored.lock().unwrap().remove(&tenant);
+        } else {
+            // Model alone exceeds the whole budget: never merge again,
+            // keep serving this tenant factorized.
+            sh.uncacheable.lock().unwrap().insert(tenant);
+        }
+        return Ok((y, ServePath::ColdMerge));
+    }
+
+    // Cold tail: factorized apply, no merge.
+    let ops = factored_ops(sh, tenant, &entry)?;
+    Ok((forward_factorized(sh, &ops, x), ServePath::Factorized))
+}
+
+fn process_batch(sh: &Shared, batch: Batch<Job>) {
+    sh.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    let service_start = Instant::now();
+    // Contain panics from the linear algebra: a poisoned batch must fail
+    // its handles (and leave the worker alive), never hang `wait()`.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_batch(sh, batch.tenant, &batch.items)
+    }));
+    match outcome {
+        Ok(Ok((y, path))) => {
+            sh.metrics.record_service(path, service_start.elapsed());
+            for (j, job) in batch.items.into_iter().enumerate() {
+                let output: Vec<f32> = (0..sh.d).map(|i| y[(i, j)] as f32).collect();
+                let latency = job.submitted_at.elapsed();
+                sh.metrics.record(path, latency);
+                fulfill(
+                    &job.slot,
+                    Ok(ServeOutput {
+                        output,
+                        path,
+                        latency,
+                    }),
+                );
+            }
+        }
+        Ok(Err(e)) => {
+            let msg = format!("serve failed for tenant {}: {e:#}", batch.tenant);
+            for job in batch.items {
+                fulfill(&job.slot, Err(msg.clone()));
+            }
+        }
+        Err(panic) => {
+            let detail = crate::util::prop::panic_message(panic.as_ref());
+            let msg = format!("serve panicked for tenant {}: {detail}", batch.tenant);
+            for job in batch.items {
+                fulfill(&job.slot, Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::synthetic;
+
+    fn quick_opts() -> EngineOpts {
+        EngineOpts {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            poll_interval: Duration::from_micros(200),
+            cache_budget_bytes: 16 << 20,
+            promote_after: Some(3),
+        }
+    }
+
+    #[test]
+    fn paths_progress_from_factorized_to_cached() {
+        let reg = synthetic(4, 2, 8, 2, 7).unwrap();
+        let engine = Engine::new(reg, quick_opts()).unwrap();
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| (i as f32 / d as f32) - 0.4).collect();
+
+        let mut paths = Vec::new();
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..6 {
+            let h = engine.submit(0, input.clone()).unwrap();
+            let out = h.wait().unwrap();
+            assert_eq!(out.output.len(), d);
+            assert!(out.output.iter().all(|x| x.is_finite()));
+            paths.push(out.path);
+            outputs.push(out.output);
+        }
+        // promote_after=3: requests 1-2 factorized, the batch containing
+        // request 3 pays the merge, everything after hits the cache.
+        assert_eq!(paths[0], ServePath::Factorized);
+        assert_eq!(paths[1], ServePath::Factorized);
+        assert_eq!(paths[2], ServePath::ColdMerge);
+        assert_eq!(*paths.last().unwrap(), ServePath::CachedDense);
+        // All paths compute the same function (merge rounds through f32).
+        for out in &outputs[1..] {
+            for (a, b) in out.iter().zip(outputs[0].iter()) {
+                assert!((a - b).abs() < 1e-3, "path mismatch: {a} vs {b}");
+            }
+        }
+        let report = engine.finish();
+        assert_eq!(report.metrics.requests, 6);
+        assert_eq!(report.metrics.merges, 1);
+        assert!(report.cache.hits >= 1);
+        assert!(report.metrics.cached.count >= 1);
+        assert!(report.metrics.factorized.count == 2);
+        assert_eq!(report.metrics.service_cold.count, 1, "one cold-merge batch");
+        assert!(report.metrics.service_cached.count >= 1);
+    }
+
+    #[test]
+    fn full_batches_flush_without_waiting_for_the_ticker() {
+        let reg = synthetic(2, 1, 8, 2, 8).unwrap();
+        let mut opts = quick_opts();
+        opts.max_batch = 2;
+        // Ticker effectively disabled: only size-triggered flushes.
+        opts.max_wait = Duration::from_secs(60);
+        opts.poll_interval = Duration::from_millis(1);
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        let h1 = engine.submit(1, vec![0.1; d]).unwrap();
+        let h2 = engine.submit(1, vec![0.2; d]).unwrap();
+        assert!(h1.wait().is_ok());
+        assert!(h2.wait().is_ok());
+    }
+
+    #[test]
+    fn shutdown_flushes_partial_batches() {
+        let reg = synthetic(2, 1, 8, 2, 9).unwrap();
+        let mut opts = quick_opts();
+        opts.max_wait = Duration::from_secs(60); // only finish() can flush
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        let h = engine.submit(0, vec![0.3; d]).unwrap();
+        let report = engine.finish();
+        let out = h.wait().unwrap();
+        assert_eq!(out.output.len(), d);
+        assert_eq!(report.metrics.requests, 1);
+    }
+
+    #[test]
+    fn submit_validates_tenant_and_dimension() {
+        let reg = synthetic(2, 1, 8, 2, 10).unwrap();
+        let engine = Engine::new(reg, quick_opts()).unwrap();
+        assert!(engine.submit(99, vec![0.0; 8]).is_err(), "unknown tenant");
+        assert!(engine.submit(0, vec![0.0; 5]).is_err(), "wrong dimension");
+    }
+
+    #[test]
+    fn every_adapter_kind_serves_and_matches_its_merged_model() {
+        // Tenants 0,1 gsoft; 2 lora; 3 oft (synthetic kind mix).
+        let reg = synthetic(4, 2, 8, 2, 11).unwrap();
+        let mut opts = quick_opts();
+        opts.promote_after = Some(2);
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| ((i * 7 % 5) as f32) * 0.1 - 0.2).collect();
+        for tenant in 0..4u64 {
+            let cold = engine.submit(tenant, input.clone()).unwrap().wait().unwrap();
+            assert_eq!(cold.path, ServePath::Factorized);
+            let merged = engine.submit(tenant, input.clone()).unwrap().wait().unwrap();
+            assert_eq!(merged.path, ServePath::ColdMerge);
+            for (a, b) in cold.output.iter().zip(merged.output.iter()) {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "tenant {tenant}: factorized {a} vs merged {b}"
+                );
+            }
+        }
+        let report = engine.finish();
+        assert_eq!(report.metrics.merges, 4);
+    }
+
+    #[test]
+    fn uncacheable_tenant_merges_once_then_stays_factorized() {
+        let reg = synthetic(2, 2, 8, 2, 12).unwrap();
+        let mut opts = quick_opts();
+        opts.cache_budget_bytes = 64; // smaller than any merged model
+        opts.promote_after = Some(2);
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        let mut paths = Vec::new();
+        for _ in 0..5 {
+            let out = engine.submit(0, vec![0.1; d]).unwrap().wait().unwrap();
+            paths.push(out.path);
+        }
+        assert_eq!(paths[1], ServePath::ColdMerge, "one merge attempt");
+        assert!(
+            paths[2..].iter().all(|p| *p == ServePath::Factorized),
+            "oversized model must not re-merge every batch: {paths:?}"
+        );
+        let report = engine.finish();
+        assert_eq!(report.metrics.merges, 1);
+    }
+
+    #[test]
+    fn policy_cost_model_is_sane() {
+        // Paper's worked example: d=1024, b=32 → Q dense at m=2; with
+        // expected batches of 8 the break-even is d/8 = 128 requests.
+        let p = Policy::from_cost_model(1024, 32, 8);
+        assert!(p.q_dense);
+        assert_eq!(p.promote_after, 128);
+        // Tiny geometry still yields a positive threshold.
+        let p = Policy::from_cost_model(8, 2, 16);
+        assert!(p.promote_after >= 1);
+    }
+}

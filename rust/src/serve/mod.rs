@@ -1,0 +1,29 @@
+//! Multi-tenant GSOFT adapter serving (DESIGN.md §6) — the paper's
+//! headline use-case at system scale: thousands of cheap Group-and-Shuffle
+//! orthogonal adapters sharing one frozen base model, served under heavy
+//! mixed-tenant traffic.
+//!
+//! - [`registry`] — adapters keyed by tenant id over a shared base
+//!   [`crate::coordinator::FlatSpec`] buffer
+//! - [`cache`] — byte-budgeted LRU of merged (`W' = Q W`) weights
+//! - [`batcher`] — size/deadline micro-batching of same-tenant requests
+//! - [`engine`] — worker engine on [`crate::util::pool`]:
+//!   `submit(tenant, input) -> Handle`, three serving paths
+//!   (cached dense / cold merge / factorized GS apply), and
+//!   latency/throughput/hit-rate metrics
+//!
+//! Benchmarked by `gsoft serve-bench` and `rust/benches/serve.rs` with a
+//! Zipf tenant-popularity trace from [`crate::data::zipf`].
+
+pub mod batcher;
+pub mod cache;
+pub mod engine;
+pub mod registry;
+
+pub use batcher::{Batch, MicroBatcher};
+pub use cache::{CacheStats, CachedModel, MergedCache};
+pub use engine::{
+    Engine, EngineOpts, EngineReport, Handle, MetricsSnapshot, PathStats, Policy, ServeOutput,
+    ServePath,
+};
+pub use registry::{synthetic, AdapterEntry, BaseModel, Registry, TenantId};

@@ -1,0 +1,412 @@
+//! Multi-tenant adapter registry: one frozen base model (flat f32 buffer +
+//! [`FlatSpec`]) shared by every tenant, plus per-tenant adapter parameters
+//! (GSOFT / OFT / LoRA — the §6.1 use-case of thousands of cheap
+//! orthogonal adapters over one pretrained model).
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::merge::{merge_adapter, AdapterKind};
+use crate::coordinator::FlatSpec;
+use crate::util::rng::Rng;
+
+/// Tenant identifier (subject / task / user id).
+pub type TenantId = u64;
+
+/// One tenant's adapter: kind + flat parameters + their layout.
+#[derive(Clone)]
+pub struct AdapterEntry {
+    pub kind: AdapterKind,
+    pub params: Arc<Vec<f32>>,
+    pub spec: Arc<FlatSpec>,
+}
+
+/// The shared base model every tenant adapts.
+#[derive(Clone)]
+pub struct BaseModel {
+    pub weights: Arc<Vec<f32>>,
+    pub spec: Arc<FlatSpec>,
+}
+
+/// Registry of adapters keyed by tenant id over one shared base.
+/// Registration is concurrent-safe (`RwLock`); lookups clone `Arc`s only.
+pub struct Registry {
+    base: BaseModel,
+    tenants: RwLock<HashMap<TenantId, AdapterEntry>>,
+}
+
+impl Registry {
+    pub fn new(base_weights: Vec<f32>, base_spec: FlatSpec) -> Result<Registry> {
+        anyhow::ensure!(
+            base_weights.len() == base_spec.size(),
+            "base buffer has {} floats but spec expects {}",
+            base_weights.len(),
+            base_spec.size()
+        );
+        Ok(Registry {
+            base: BaseModel {
+                weights: Arc::new(base_weights),
+                spec: Arc::new(base_spec),
+            },
+            tenants: RwLock::new(HashMap::new()),
+        })
+    }
+
+    pub fn base(&self) -> &BaseModel {
+        &self.base
+    }
+
+    /// Register (or replace) a tenant's adapter. Validates the parameter
+    /// buffer against its spec, that every adapted layer exists in the
+    /// base spec, and that every slab's shape is consistent with the
+    /// adapter kind and the adapted layer's dimensions — a malformed
+    /// entry must be rejected here, not panic later inside a serving
+    /// worker.
+    pub fn register(&self, tenant: TenantId, entry: AdapterEntry) -> Result<()> {
+        anyhow::ensure!(
+            entry.params.len() == entry.spec.size(),
+            "tenant {tenant}: adapter buffer has {} floats but spec expects {}",
+            entry.params.len(),
+            entry.spec.size()
+        );
+        for (name, shape) in &entry.spec.entries {
+            let (layer, suffix) = name
+                .rsplit_once('.')
+                .ok_or_else(|| anyhow!("tenant {tenant}: bad adapter entry name '{name}'"))?;
+            let (_, wshape) = self
+                .base
+                .spec
+                .locate(layer)
+                .map_err(|_| anyhow!("tenant {tenant}: adapts unknown base layer '{layer}'"))?;
+            anyhow::ensure!(
+                wshape.len() == 2,
+                "tenant {tenant}: adapted base entry '{layer}' is not a matrix"
+            );
+            let (din, dout) = (wshape[0], wshape[1]);
+            match entry.kind {
+                AdapterKind::Gsoft { block } | AdapterKind::Oft { block } => {
+                    let suffix_ok = match entry.kind {
+                        AdapterKind::Gsoft { .. } => suffix == "gs_l" || suffix == "gs_r",
+                        _ => suffix == "oft_k",
+                    };
+                    anyhow::ensure!(
+                        suffix_ok,
+                        "tenant {tenant}: entry '{name}' does not belong to a {} adapter",
+                        entry.kind.name()
+                    );
+                    anyhow::ensure!(
+                        block > 0 && din % block == 0,
+                        "tenant {tenant}: block {block} does not divide layer dim {din}"
+                    );
+                    anyhow::ensure!(
+                        *shape == [din / block, block, block],
+                        "tenant {tenant}: '{name}' has shape {shape:?}, expected {:?}",
+                        [din / block, block, block]
+                    );
+                    // GSOFT factors come in pairs: a lone gs_l errors at
+                    // serve time, a lone gs_r is silently ignored — both
+                    // must be rejected here.
+                    if suffix == "gs_l" || suffix == "gs_r" {
+                        let other = if suffix == "gs_l" { "gs_r" } else { "gs_l" };
+                        let paired = entry
+                            .spec
+                            .locate(&format!("{layer}.{other}"))
+                            .map(|(_, s)| s == &shape[..])
+                            .unwrap_or(false);
+                        anyhow::ensure!(
+                            paired,
+                            "tenant {tenant}: '{name}' has no matching '{layer}.{other}'"
+                        );
+                    }
+                }
+                AdapterKind::Lora => match suffix {
+                    "lora_a" => {
+                        anyhow::ensure!(
+                            shape.len() == 2 && shape[0] == din,
+                            "tenant {tenant}: '{name}' has shape {shape:?}, expected [{din}, rank]"
+                        );
+                        let (_, bshape) = entry
+                            .spec
+                            .locate(&format!("{layer}.lora_b"))
+                            .map_err(|_| anyhow!("tenant {tenant}: '{name}' has no paired lora_b"))?;
+                        anyhow::ensure!(
+                            bshape.len() == 2 && bshape[0] == shape[1] && bshape[1] == dout,
+                            "tenant {tenant}: '{layer}.lora_b' has shape {bshape:?}, \
+                             expected [{}, {dout}]",
+                            shape[1]
+                        );
+                    }
+                    "lora_b" => {
+                        // Shape details are checked from the lora_a side;
+                        // here just reject an unpaired lora_b (it would be
+                        // silently ignored by merge and serve).
+                        anyhow::ensure!(
+                            entry.spec.locate(&format!("{layer}.lora_a")).is_ok(),
+                            "tenant {tenant}: '{name}' has no matching '{layer}.lora_a'"
+                        );
+                    }
+                    _ => anyhow::bail!(
+                        "tenant {tenant}: entry '{name}' does not belong to a LoRA adapter"
+                    ),
+                },
+            }
+        }
+        self.tenants.write().unwrap().insert(tenant, entry);
+        Ok(())
+    }
+
+    /// Cheap lookup (Arc clones).
+    pub fn get(&self, tenant: TenantId) -> Option<AdapterEntry> {
+        self.tenants.read().unwrap().get(&tenant).cloned()
+    }
+
+    pub fn contains(&self, tenant: TenantId) -> bool {
+        self.tenants.read().unwrap().contains_key(&tenant)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn tenant_ids(&self) -> Vec<TenantId> {
+        let mut ids: Vec<TenantId> = self.tenants.read().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Cold merge: produce the tenant's dense merged base buffer
+    /// (`W' = Q W` per adapted layer). This is the expensive path the
+    /// serving cache exists to amortize.
+    pub fn merge(&self, tenant: TenantId) -> Result<Vec<f32>> {
+        let entry = self
+            .get(tenant)
+            .ok_or_else(|| anyhow!("unknown tenant {tenant}"))?;
+        merge_adapter(
+            entry.kind,
+            &self.base.weights,
+            &entry.params,
+            &self.base.spec,
+            &entry.spec,
+        )
+    }
+}
+
+/// Names of the square adapted layers in a [`synthetic`] registry.
+pub fn synthetic_layer_names(layers: usize) -> Vec<String> {
+    (0..layers).map(|i| format!("layer{i}.w")).collect()
+}
+
+/// Build a synthetic many-tenant registry for benchmarks and tests:
+/// `layers` square `d×d` base matrices (plus an unadapted head), and one
+/// adapter per tenant — GSOFT for most tenants, OFT and LoRA sprinkled in
+/// (tenant id mod 4) to exercise every merge path.
+pub fn synthetic(
+    tenants: usize,
+    layers: usize,
+    d: usize,
+    block: usize,
+    seed: u64,
+) -> Result<Registry> {
+    anyhow::ensure!(d % block == 0, "block must divide d");
+    let r = d / block;
+    let mut rng = Rng::new(seed);
+
+    // Base spec: layer{i}.w [d,d] + head [d,2].
+    let mut base_entries: Vec<(String, Vec<usize>)> = synthetic_layer_names(layers)
+        .into_iter()
+        .map(|n| (n, vec![d, d]))
+        .collect();
+    base_entries.push(("head".to_string(), vec![d, 2]));
+    let base_spec = FlatSpec {
+        entries: base_entries,
+    };
+    let base: Vec<f32> = rng.normal_vec(base_spec.size(), (1.0 / d as f32).sqrt());
+    let registry = Registry::new(base, base_spec)?;
+
+    // Per-kind adapter specs are shared across tenants.
+    let gsoft_spec = Arc::new(FlatSpec {
+        entries: synthetic_layer_names(layers)
+            .into_iter()
+            .flat_map(|n| {
+                [
+                    (format!("{n}.gs_l"), vec![r, block, block]),
+                    (format!("{n}.gs_r"), vec![r, block, block]),
+                ]
+            })
+            .collect(),
+    });
+    let oft_spec = Arc::new(FlatSpec {
+        entries: synthetic_layer_names(layers)
+            .into_iter()
+            .map(|n| (format!("{n}.oft_k"), vec![r, block, block]))
+            .collect(),
+    });
+    let lora_rank = block.min(d / 2).max(1);
+    let lora_spec = Arc::new(FlatSpec {
+        entries: synthetic_layer_names(layers)
+            .into_iter()
+            .flat_map(|n| {
+                [
+                    (format!("{n}.lora_a"), vec![d, lora_rank]),
+                    (format!("{n}.lora_b"), vec![lora_rank, d]),
+                ]
+            })
+            .collect(),
+    });
+
+    for t in 0..tenants as TenantId {
+        let mut trng = rng.fork(t);
+        let (kind, spec) = match t % 4 {
+            3 => (AdapterKind::Oft { block }, Arc::clone(&oft_spec)),
+            2 => (AdapterKind::Lora, Arc::clone(&lora_spec)),
+            _ => (AdapterKind::Gsoft { block }, Arc::clone(&gsoft_spec)),
+        };
+        let std = if kind == AdapterKind::Lora { 0.05 } else { 0.3 };
+        let params = trng.normal_vec(spec.size(), std);
+        registry.register(
+            t,
+            AdapterEntry {
+                kind,
+                params: Arc::new(params),
+                spec,
+            },
+        )?;
+    }
+    Ok(registry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn synthetic_registry_builds_and_merges_every_kind() {
+        let reg = synthetic(8, 2, 8, 2, 1).unwrap();
+        assert_eq!(reg.len(), 8);
+        for t in reg.tenant_ids() {
+            let merged = reg.merge(t).unwrap();
+            assert_eq!(merged.len(), reg.base().weights.len());
+            assert!(merged.iter().all(|x| x.is_finite()));
+            // Orthogonal kinds preserve the base layer's singular values.
+            let entry = reg.get(t).unwrap();
+            if entry.kind.is_orthogonal() {
+                let spec = &reg.base().spec;
+                let w0 = Mat::from_f32(8, 8, spec.view(&reg.base().weights, "layer0.w").unwrap());
+                let w1 = Mat::from_f32(8, 8, spec.view(&merged, "layer0.w").unwrap());
+                let s0 = crate::linalg::singular_values(&w0);
+                let s1 = crate::linalg::singular_values(&w1);
+                for (a, b) in s0.iter().zip(s1.iter()) {
+                    assert!((a - b).abs() < 1e-4, "tenant {t}: {a} vs {b}");
+                }
+            }
+            // Head is never adapted.
+            let spec = &reg.base().spec;
+            assert_eq!(
+                spec.view(&merged, "head").unwrap(),
+                spec.view(&reg.base().weights, "head").unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn register_validates_sizes_and_layers() {
+        let reg = synthetic(1, 1, 8, 2, 2).unwrap();
+        let good = reg.get(0).unwrap();
+        // Wrong buffer length.
+        let bad = AdapterEntry {
+            kind: good.kind,
+            params: Arc::new(vec![0.0; 3]),
+            spec: Arc::clone(&good.spec),
+        };
+        assert!(reg.register(9, bad).is_err());
+        // Unknown base layer.
+        let bad_spec = Arc::new(FlatSpec {
+            entries: vec![("nope.gs_l".to_string(), vec![4, 2, 2])],
+        });
+        let bad = AdapterEntry {
+            kind: good.kind,
+            params: Arc::new(vec![0.0; 16]),
+            spec: bad_spec,
+        };
+        assert!(reg.register(9, bad).is_err());
+        assert!(!reg.contains(9));
+        assert!(reg.merge(77).is_err(), "unknown tenant");
+    }
+
+    #[test]
+    fn register_rejects_kind_and_shape_mismatches() {
+        use crate::coordinator::merge::AdapterKind;
+        let reg = synthetic(1, 1, 8, 2, 3).unwrap();
+
+        // Slab block size disagrees with the kind's block size.
+        let spec = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.oft_k".to_string(), vec![2, 4, 4])],
+        });
+        let bad = AdapterEntry {
+            kind: AdapterKind::Oft { block: 3 },
+            params: Arc::new(vec![0.0; 32]),
+            spec: Arc::clone(&spec),
+        };
+        assert!(reg.register(9, bad).is_err(), "block 3 does not divide 8");
+        let bad = AdapterEntry {
+            kind: AdapterKind::Oft { block: 2 },
+            params: Arc::new(vec![0.0; 32]),
+            spec,
+        };
+        assert!(reg.register(9, bad).is_err(), "slab shaped for block 4, kind says 2");
+
+        // Entry suffix from a different adapter family.
+        let spec = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.gs_l".to_string(), vec![4, 2, 2])],
+        });
+        let bad = AdapterEntry {
+            kind: AdapterKind::Oft { block: 2 },
+            params: Arc::new(vec![0.0; 16]),
+            spec,
+        };
+        assert!(reg.register(9, bad).is_err(), "gs_l slab under an OFT kind");
+
+        // LoRA with mismatched a/b ranks.
+        let spec = Arc::new(FlatSpec {
+            entries: vec![
+                ("layer0.w.lora_a".to_string(), vec![8, 2]),
+                ("layer0.w.lora_b".to_string(), vec![3, 8]),
+            ],
+        });
+        let bad = AdapterEntry {
+            kind: AdapterKind::Lora,
+            params: Arc::new(vec![0.0; 16 + 24]),
+            spec,
+        };
+        assert!(reg.register(9, bad).is_err(), "rank 2 a vs rank 3 b");
+
+        // Unpaired factors: lone gs_r would be silently ignored, lone
+        // lora_b likewise; both must be rejected.
+        let spec = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.gs_r".to_string(), vec![4, 2, 2])],
+        });
+        let bad = AdapterEntry {
+            kind: AdapterKind::Gsoft { block: 2 },
+            params: Arc::new(vec![0.0; 16]),
+            spec,
+        };
+        assert!(reg.register(9, bad).is_err(), "gs_r without gs_l");
+        let spec = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.lora_b".to_string(), vec![2, 8])],
+        });
+        let bad = AdapterEntry {
+            kind: AdapterKind::Lora,
+            params: Arc::new(vec![0.0; 16]),
+            spec,
+        };
+        assert!(reg.register(9, bad).is_err(), "lora_b without lora_a");
+        assert!(!reg.contains(9));
+    }
+}

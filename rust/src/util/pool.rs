@@ -1,11 +1,14 @@
 //! Scoped thread pool built on `std::thread::scope` (no tokio offline).
 //!
 //! Used by the coordinator to overlap synthetic-batch generation and
-//! evaluation with the PJRT hot loop, and by the table harnesses to run
-//! independent (method × task) cells in parallel.
+//! evaluation with the PJRT hot loop, by the table harnesses to run
+//! independent (method × task) cells in parallel, and by the serving
+//! engine ([`crate::serve`]), whose worker threads drain a [`WorkQueue`]
+//! of micro-batches.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Run `f(i)` for `i in 0..n` across up to `workers` threads, collecting
 /// results in index order. Panics in workers propagate.
@@ -42,6 +45,84 @@ where
         .collect()
 }
 
+/// Blocking multi-producer / multi-consumer FIFO queue (Mutex + Condvar —
+/// no crossbeam offline). Producers [`WorkQueue::push`]; consumers block in
+/// [`WorkQueue::pop`] until an item arrives or the queue is closed.
+pub struct WorkQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> WorkQueue<T> {
+        WorkQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item. Returns `false` (dropping the item) if the queue
+    /// has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Block until an item is available. Returns `None` once the queue is
+    /// closed *and* drained — the worker-shutdown signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.state.lock().unwrap().items.pop_front()
+    }
+
+    /// Close the queue: pending items still drain, new pushes are refused,
+    /// and blocked consumers wake up with `None` once empty.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Reasonable default worker count for this host.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
@@ -64,6 +145,44 @@ mod tests {
     fn single_worker_and_empty() {
         assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
         assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn work_queue_fifo_and_close() {
+        let q: WorkQueue<usize> = WorkQueue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+        q.close();
+        assert!(!q.push(3), "push after close is refused");
+        assert_eq!(q.pop(), None, "closed+empty pop returns None");
+    }
+
+    #[test]
+    fn work_queue_across_threads() {
+        let q: WorkQueue<usize> = WorkQueue::new();
+        let total = 1000usize;
+        let consumed = AtomicUsize::new(0);
+        let sum = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    while let Some(v) = q.pop() {
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                        sum.fetch_add(v, Ordering::Relaxed);
+                    }
+                });
+            }
+            for i in 0..total {
+                assert!(q.push(i));
+            }
+            q.close();
+        });
+        assert_eq!(consumed.load(Ordering::Relaxed), total);
+        assert_eq!(sum.load(Ordering::Relaxed), total * (total - 1) / 2);
     }
 
     #[test]

@@ -12,9 +12,20 @@ use super::rng::Rng;
 /// Number of cases per property (overridable for expensive properties).
 pub const DEFAULT_CASES: usize = 64;
 
-/// Run `prop` for `cases` seeded cases. Panics with the case seed on the
-/// first failure. `prop` gets a fresh forked RNG per case so failures
-/// reproduce from `(seed, case_index)` alone.
+/// Extract a readable message from a caught panic payload (shared with
+/// any `catch_unwind` site, e.g. the serving engine's worker isolation).
+pub fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
+}
+
+/// Run `prop` for `cases` seeded cases. On the first failure, panics with
+/// the property name, the failing `(seed, case)` pair, and an exact
+/// reproduction recipe (`Rng::new(seed).fork(case)`), so every failure is
+/// deterministic to replay. `prop` gets a fresh forked RNG per case.
 pub fn check_named(name: &str, seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng)) {
     let mut root = Rng::new(seed);
     for case in 0..cases {
@@ -23,15 +34,69 @@ pub fn check_named(name: &str, seed: u64, cases: usize, mut prop: impl FnMut(&mu
             prop(&mut case_rng)
         }));
         if let Err(panic) = result {
-            let msg = panic
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".to_string());
+            let msg = panic_message(panic.as_ref());
             panic!(
-                "property '{name}' failed at case {case}/{cases} (seed={seed}): {msg}"
+                "property '{name}' failed at case {case}/{cases} (seed={seed}): {msg}\n\
+                 reproduce with: prop(&mut Rng::new({seed}).fork({case}))"
             );
         }
+    }
+}
+
+/// Property check with *shrinking*: inputs are drawn by `gen`, tested by
+/// `prop`, and on failure greedily shrunk via `shrink` (which returns
+/// simpler candidate inputs; return an empty vec to stop). The final panic
+/// reports the seed, the case index, the original failing input, and the
+/// shrunk minimal input — a reproducible counterexample instead of a bare
+/// panic deep inside the property body.
+pub fn check_shrunk<T, G, S, P>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: G,
+    shrink: S,
+    prop: P,
+) where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T),
+{
+    let fails = |input: &T| -> Option<String> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input)))
+            .err()
+            .map(|p| panic_message(p.as_ref()))
+    };
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = root.fork(case as u64);
+        let original = gen(&mut case_rng);
+        let Some(first_msg) = fails(&original) else {
+            continue;
+        };
+        // Greedy shrink: repeatedly replace the counterexample with the
+        // first simpler candidate that still fails (bounded, so a cyclic
+        // shrinker cannot loop forever).
+        let mut minimal = original.clone();
+        let mut msg = first_msg;
+        for _ in 0..1000 {
+            let next = shrink(&minimal)
+                .into_iter()
+                .find_map(|c| fails(&c).map(|m| (c, m)));
+            match next {
+                Some((c, m)) => {
+                    minimal = c;
+                    msg = m;
+                }
+                None => break,
+            }
+        }
+        panic!(
+            "property '{name}' failed at case {case}/{cases} (seed={seed}): {msg}\n\
+             original input: {original:?}\n\
+             shrunk input:   {minimal:?}\n\
+             reproduce with: prop(&{minimal:?})"
+        );
     }
 }
 
@@ -58,6 +123,46 @@ pub fn block_shape(rng: &mut Rng, max_dim: usize) -> (usize, usize) {
 /// Draw `n` f32s from N(0, std).
 pub fn normal_vec(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
     rng.normal_vec(n, std)
+}
+
+// ---- common shrinkers ------------------------------------------------------
+
+/// Length-preserving shrinker for f32 buffers whose size is fixed by
+/// structure (flat adapter slabs): candidates zero out halves and damp
+/// magnitudes, driving counterexamples toward the all-zero (identity)
+/// input without breaking shape invariants.
+pub fn shrink_vec_f32(x: &[f32]) -> Vec<Vec<f32>> {
+    if x.iter().all(|&v| v == 0.0) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    out.push(vec![0.0; x.len()]);
+    let half = x.len() / 2;
+    if half > 0 {
+        let mut front = x.to_vec();
+        front[..half].fill(0.0);
+        out.push(front);
+        let mut back = x.to_vec();
+        back[half..].fill(0.0);
+        out.push(back);
+    }
+    out.push(x.iter().map(|&v| v * 0.5).collect());
+    out
+}
+
+/// Shrink a usize toward `lo` (halving steps, then decrement).
+pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > lo {
+        out.push(lo);
+        let mid = lo + (x - lo) / 2;
+        if mid != lo && mid != x {
+            out.push(mid);
+        }
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
 }
 
 /// Assert two slices are elementwise close.
@@ -89,6 +194,74 @@ mod tests {
         check_named("fails", 1, 10, |rng| {
             assert!(rng.below(10) < 9, "hit the 10%% case");
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with")]
+    fn failure_reports_reproduction_recipe() {
+        check_named("recipe", 3, 4, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn shrinking_finds_minimal_counterexample() {
+        // Property "all entries are zero" fails for any nonzero vec; the
+        // shrinker must drive the reported counterexample to a vector with
+        // a single minimal nonzero structure (here: half-zeroed).
+        let caught = std::panic::catch_unwind(|| {
+            check_shrunk(
+                "needs zero",
+                5,
+                8,
+                |rng| normal_vec(rng, 8, 1.0),
+                |v| shrink_vec_f32(v),
+                |v| assert!(v.iter().all(|&x| x == 0.0), "nonzero entry"),
+            );
+        });
+        let msg = caught
+            .expect_err("property must fail")
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap();
+        assert!(msg.contains("original input"), "msg: {msg}");
+        assert!(msg.contains("shrunk input"), "msg: {msg}");
+        assert!(msg.contains("seed=5"), "msg: {msg}");
+    }
+
+    #[test]
+    fn shrunk_passing_property_is_silent() {
+        let mut count = 0;
+        check_shrunk(
+            "always passes",
+            6,
+            5,
+            |rng| rng.below(100),
+            |&n| shrink_usize(n, 0),
+            |_| {},
+        );
+        // Separate counter check: generator runs once per case.
+        check_shrunk(
+            "counts",
+            7,
+            5,
+            |rng| {
+                count += 1;
+                rng.below(10)
+            },
+            |_| Vec::new(),
+            |_| {},
+        );
+        assert_eq!(count, 5);
+    }
+
+    #[test]
+    fn shrinkers_preserve_invariants() {
+        let v = vec![1.0f32, -2.0, 3.0, 4.0];
+        for cand in shrink_vec_f32(&v) {
+            assert_eq!(cand.len(), v.len(), "shrinker must preserve length");
+        }
+        assert!(shrink_vec_f32(&[0.0, 0.0]).is_empty(), "zero vec is minimal");
+        assert!(shrink_usize(5, 0).contains(&0));
+        assert!(shrink_usize(3, 3).is_empty());
     }
 
     #[test]

@@ -208,6 +208,61 @@ fn lip_eval_outputs_are_consistent() {
 }
 
 #[test]
+fn serving_engine_end_to_end_zipf_workload() {
+    // Pure-Rust path — runs without artifacts: a synthetic multi-tenant
+    // registry served under a Zipf trace must complete every request,
+    // agree across serving paths, and show cache reuse for hot tenants.
+    use gsoft::data::zipf::Zipf;
+    use gsoft::serve::{synthetic, Engine, EngineOpts, TenantId};
+
+    let tenants = 16usize;
+    let registry = synthetic(tenants, 2, 16, 4, 33).unwrap();
+    let engine = Engine::new(
+        registry,
+        EngineOpts {
+            workers: 4,
+            max_batch: 8,
+            max_wait: std::time::Duration::from_micros(300),
+            promote_after: Some(4),
+            ..EngineOpts::default()
+        },
+    )
+    .unwrap();
+    let d = engine.input_dim();
+    assert_eq!(d, 16);
+
+    let zipf = Zipf::new(tenants, 1.2);
+    let mut rng = Rng::new(4);
+    let trace = zipf.trace(400, &mut rng);
+    let handles: Vec<_> = trace
+        .iter()
+        .map(|&t| {
+            let input = rng.normal_vec(d, 0.5);
+            engine.submit(t as TenantId, input).unwrap()
+        })
+        .collect();
+    let mut by_path = std::collections::HashMap::new();
+    for h in handles {
+        let out = h.wait().unwrap();
+        assert_eq!(out.output.len(), d);
+        assert!(out.output.iter().all(|x| x.is_finite()));
+        *by_path.entry(out.path.name()).or_insert(0usize) += 1;
+    }
+    let report = engine.finish();
+    assert_eq!(report.metrics.requests, 400);
+    assert!(report.metrics.merges >= 1, "hot tenants must get promoted");
+    assert!(
+        report.cache.hits > 0,
+        "Zipf head traffic must produce cache hits"
+    );
+    assert!(
+        by_path.get("cached_dense").copied().unwrap_or(0) > 0,
+        "paths seen: {by_path:?}"
+    );
+    assert_eq!(by_path.values().sum::<usize>(), 400);
+}
+
+#[test]
 fn dn_predict_shapes_and_determinism() {
     let Some(rt) = runtime() else { return };
     let exe = rt.load("dn_gsoft8_predict").unwrap();
