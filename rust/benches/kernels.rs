@@ -1,0 +1,61 @@
+//! Bench: the CPU kernel subsystem in isolation (DESIGN.md §Perf) —
+//!   gemm_naive      — the reference ikj loop (pre-kernel Mat::matmul)
+//!   gemm_blocked    — cache-blocked register-tiled GEMM, 1 thread
+//!   gemm_parallel   — same, row panels across the persistent pool
+//!   dense_merged    — dispatched dense Q·X (the merged-adapter path)
+//!   fused_chain     — fused group-and-shuffle factorized apply
+//!   fused_batched   — batched multi-RHS fused apply
+//! `gsoft kernel-bench` sweeps the same paths across a (d, b, m, batch)
+//! grid and writes BENCH_kernels.json.
+
+use gsoft::gs::GsChain;
+use gsoft::kernel::{self, KernelCtx};
+use gsoft::linalg::Mat;
+use gsoft::util::bench::{black_box, Bench};
+use gsoft::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("kernels");
+    let mut rng = Rng::new(11);
+    let ctx = KernelCtx::default();
+
+    for (d, t) in [(128usize, 32usize), (256, 32)] {
+        let a = Mat::randn(d, d, 1.0, &mut rng);
+        let x = Mat::randn(d, t, 1.0, &mut rng);
+        let elems = Some((d * d * t) as f64);
+        bench.bench_with_elements(&format!("gemm_naive/d{d}_t{t}"), elems, || {
+            black_box(kernel::gemm_naive(&a, &x))
+        });
+        bench.bench_with_elements(&format!("gemm_blocked/d{d}_t{t}"), elems, || {
+            black_box(kernel::gemm_blocked(&a, &x, ctx.tile, 1))
+        });
+        bench.bench_with_elements(&format!("gemm_parallel/d{d}_t{t}"), elems, || {
+            black_box(kernel::gemm_blocked(&a, &x, ctx.tile, ctx.workers))
+        });
+    }
+
+    for (d, b, t) in [(256usize, 8usize, 32usize), (256, 16, 32)] {
+        let chain = GsChain::gs_kn(d, b, 2, &mut rng, true);
+        let q = chain.to_dense();
+        let x = Mat::randn(d, t, 1.0, &mut rng);
+        let fused_elems = (2 * d * b * t) as f64; // m·d·b MACs per column
+        bench.bench_with_elements(
+            &format!("dense_merged/d{d}_b{b}_t{t}"),
+            Some((d * d * t) as f64),
+            || black_box(ctx.gemm(&q, &x)),
+        );
+        bench.bench_with_elements(
+            &format!("fused_chain/d{d}_b{b}_t{t}"),
+            Some(fused_elems),
+            || black_box(kernel::chain_apply(&chain, &x, &ctx)),
+        );
+        let xs: Vec<Mat> = (0..8).map(|_| Mat::randn(d, t, 1.0, &mut rng)).collect();
+        bench.bench_with_elements(
+            &format!("fused_batched_x8/d{d}_b{b}_t{t}"),
+            Some(fused_elems * 8.0),
+            || black_box(kernel::chain_apply_batch(&chain, &xs, &ctx)),
+        );
+    }
+
+    bench.finish();
+}

@@ -87,31 +87,12 @@ impl BlockDiag {
         out
     }
 
-    /// `self · a` without materializing the dense form — each block hits
-    /// its row-slice of `a`. This is the "group" half of group-and-shuffle.
+    /// `self · a` without materializing the dense form — one fused-kernel
+    /// pass ([`crate::kernel::fused_apply`] with no relayouts, parallel
+    /// over blocks for large applies). This is the "group" half of
+    /// group-and-shuffle.
     pub fn matmul_right(&self, a: &Mat) -> Mat {
-        assert_eq!(self.cols(), a.rows, "blockdiag @ a shape mismatch");
-        let mut out = Mat::zeros(self.rows(), a.cols);
-        let (mut r0, mut c0) = (0, 0);
-        for blk in &self.blocks {
-            for i in 0..blk.rows {
-                for kk in 0..blk.cols {
-                    let f = blk[(i, kk)];
-                    if f == 0.0 {
-                        continue;
-                    }
-                    let arow = a.row(c0 + kk);
-                    let orow =
-                        &mut out.data[(r0 + i) * a.cols..(r0 + i + 1) * a.cols];
-                    for (o, &x) in orow.iter_mut().zip(arow.iter()) {
-                        *o += f * x;
-                    }
-                }
-            }
-            r0 += blk.rows;
-            c0 += blk.cols;
-        }
-        out
+        crate::kernel::fused_apply(self, None, None, a, crate::kernel::ctx())
     }
 
     /// Apply to a vector.

@@ -78,14 +78,11 @@ impl GsChain {
         self.apply(&Mat::eye(n))
     }
 
-    /// Structured apply `A · X`.
+    /// Structured apply `A · X` — one fused group-and-shuffle kernel pass
+    /// per stage, with `P_out` folded into the last stage's scatter
+    /// ([`crate::kernel::chain_apply`]).
     pub fn apply(&self, x: &Mat) -> Mat {
-        let mut cur = x.clone();
-        for st in &self.stages {
-            cur = st.perm.apply_rows(&cur);
-            cur = st.block.matmul_right(&cur);
-        }
-        self.p_out.apply_rows(&cur)
+        crate::kernel::chain_apply(self, x, crate::kernel::ctx())
     }
 
     /// Structured apply to a vector.

@@ -181,15 +181,11 @@ impl GsMatrix {
 
     /// Structured apply `A · X` for `X: n×t` — never materializes the dense
     /// `m×n` matrix. This is the hot path the paper's efficiency claims are
-    /// about: two grouped (block-diagonal) GEMMs plus three relayouts.
+    /// about: two fused kernel passes ([`crate::kernel::gs_apply`]), each a
+    /// grouped (block-diagonal) GEMM with its relayouts folded in as
+    /// gathers/scatters.
     pub fn apply(&self, x: &Mat) -> Mat {
-        assert_eq!(x.rows, self.spec.n());
-        // A X = P_L L P R (P_R X).
-        let x1 = self.spec.p_r.apply_rows(x); // P_R X
-        let x2 = self.r.matmul_right(&x1); // R ·
-        let x3 = self.spec.p.apply_rows(&x2); // P ·
-        let x4 = self.l.matmul_right(&x3); // L ·
-        self.spec.p_l.apply_rows(&x4) // P_L ·
+        crate::kernel::gs_apply(self, x, crate::kernel::ctx())
     }
 
     /// Structured apply to a single vector.

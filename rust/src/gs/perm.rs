@@ -78,28 +78,17 @@ impl Perm {
         y
     }
 
-    /// `P · A` — permute rows: row `i` of `A` lands at row `σ(i)`.
+    /// `P · A` — permute rows: row `i` of `A` lands at row `σ(i)`
+    /// (kernel relayout; see [`crate::kernel::permute_rows`]).
     pub fn apply_rows(&self, a: &Mat) -> Mat {
-        assert_eq!(a.rows, self.n());
-        let mut out = Mat::zeros(a.rows, a.cols);
-        for i in 0..a.rows {
-            let dst = self.sigma[i];
-            out.data[dst * a.cols..(dst + 1) * a.cols].copy_from_slice(a.row(i));
-        }
-        out
+        crate::kernel::permute_rows(self, a)
     }
 
     /// `A · P` — permute columns: column `σ(j)` of `A` lands at column `j`
-    /// (since `P[σ(j), j] = 1`).
+    /// (since `P[σ(j), j] = 1`; kernel relayout, see
+    /// [`crate::kernel::permute_cols`]).
     pub fn apply_cols(&self, a: &Mat) -> Mat {
-        assert_eq!(a.cols, self.n());
-        let mut out = Mat::zeros(a.rows, a.cols);
-        for i in 0..a.rows {
-            for j in 0..a.cols {
-                out[(i, j)] = a[(i, self.sigma[j])];
-            }
-        }
-        out
+        crate::kernel::permute_cols(self, a)
     }
 
     /// Dense matrix form.

@@ -1,0 +1,203 @@
+//! Dispatch + autotune: pick the right kernel per shape, and the right
+//! tile sizes per machine.
+//!
+//! [`KernelCtx`] is the knob bundle threaded through call sites (the
+//! `Mat`/`gs` method fronts use the process-wide [`ctx`]; the serving
+//! engine carries its own copy in `EngineOpts`). Dispatch is by flop
+//! count: tiny products keep the naive ikj loop (no packing overhead,
+//! zero-skip on permutation-like operands), mid-size shapes get the
+//! cache-blocked kernel, large ones additionally fan row panels across
+//! the persistent pool. [`KernelCtx::autotuned`] times the candidate tile
+//! shapes on a representative GEMM and returns a context carrying the
+//! fastest — the CPU analogue of the VMEM-budget tuning the Pallas L1
+//! kernels document.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::gs::BlockDiag;
+use crate::linalg::Mat;
+use crate::util::bench::black_box;
+use crate::util::pool::default_workers;
+use crate::util::rng::Rng;
+
+use super::gemm::{self, Tile};
+
+/// Which GEMM path a shape dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    Naive,
+    Blocked,
+    BlockedParallel,
+}
+
+/// Kernel-dispatch context: tile shape, dispatch thresholds, worker cap.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelCtx {
+    pub tile: Tile,
+    /// Below this flop count (`m·k·n`), the packing/tiling overhead of the
+    /// blocked kernel outweighs its cache wins — use the naive loop.
+    pub naive_below_flops: usize,
+    /// At or above this flop count, split work across the persistent pool.
+    pub parallel_above_flops: usize,
+    /// Worker cap for parallel kernels.
+    pub workers: usize,
+}
+
+impl Default for KernelCtx {
+    fn default() -> KernelCtx {
+        KernelCtx {
+            tile: Tile::default(),
+            naive_below_flops: 64 * 64 * 64,
+            parallel_above_flops: 256 * 256 * 64,
+            workers: default_workers(),
+        }
+    }
+}
+
+impl KernelCtx {
+    /// Pick the GEMM path for an `(m×k)·(k×n)` product.
+    pub fn plan_gemm(&self, m: usize, k: usize, n: usize) -> GemmKind {
+        let flops = m.saturating_mul(k).saturating_mul(n);
+        if flops < self.naive_below_flops {
+            GemmKind::Naive
+        } else if flops >= self.parallel_above_flops && self.workers > 1 && m >= 2 {
+            GemmKind::BlockedParallel
+        } else {
+            GemmKind::Blocked
+        }
+    }
+
+    /// Dispatching matrix product (the `Mat::matmul` backend).
+    pub fn gemm(&self, a: &Mat, b: &Mat) -> Mat {
+        match self.plan_gemm(a.rows, a.cols, b.cols) {
+            GemmKind::Naive => gemm::gemm_naive(a, b),
+            GemmKind::Blocked => gemm::gemm_blocked(a, b, self.tile, 1),
+            GemmKind::BlockedParallel => gemm::gemm_blocked(a, b, self.tile, self.workers),
+        }
+    }
+
+    /// Dispatching matrix-vector product (the `Mat::matvec` backend).
+    pub fn gemv(&self, a: &Mat, x: &[f64]) -> Vec<f64> {
+        let flops = a.rows.saturating_mul(a.cols);
+        let workers = if flops >= self.parallel_above_flops {
+            self.workers
+        } else {
+            1
+        };
+        gemm::gemv(a, x, workers)
+    }
+
+    /// Worker count for a fused block-diagonal apply over `t` RHS columns.
+    pub fn fused_workers(&self, bd: &BlockDiag, t: usize) -> usize {
+        let nnz: usize = bd.blocks.iter().map(|b| b.rows * b.cols).sum();
+        if nnz.saturating_mul(t) >= self.parallel_above_flops && self.workers > 1 {
+            self.workers
+        } else {
+            1
+        }
+    }
+
+    /// Time the candidate tile shapes on a representative `(d×d)·(d×t)`
+    /// GEMM and return a context carrying the fastest. One-time cost of a
+    /// few milliseconds; exercised by `gsoft kernel-bench` and available
+    /// to deployments that know their dominant shape.
+    pub fn autotuned(d: usize, t: usize) -> KernelCtx {
+        let mut ctx = KernelCtx::default();
+        let d = d.clamp(32, 512);
+        let t = t.clamp(8, 128);
+        let mut rng = Rng::new(0xA070);
+        let a = Mat::randn(d, d, 1.0, &mut rng);
+        let b = Mat::randn(d, t, 1.0, &mut rng);
+        let candidates = [
+            Tile { mc: 32, kc: 64, nc: 128 },
+            Tile { mc: 64, kc: 64, nc: 256 },
+            Tile { mc: 96, kc: 128, nc: 192 },
+            Tile { mc: 128, kc: 32, nc: 256 },
+        ];
+        let mut best = (f64::INFINITY, ctx.tile);
+        for tile in candidates {
+            black_box(gemm::gemm_blocked(&a, &b, tile, 1)); // warm
+            let mut fastest = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                black_box(gemm::gemm_blocked(&a, &b, tile, 1));
+                fastest = fastest.min(t0.elapsed().as_secs_f64());
+            }
+            if fastest < best.0 {
+                best = (fastest, tile);
+            }
+        }
+        ctx.tile = best.1;
+        ctx
+    }
+}
+
+/// Process-wide default kernel context — the backend of the `Mat` and
+/// `gs` method fronts, so every existing call site gets dispatch without
+/// signature changes.
+pub fn ctx() -> &'static KernelCtx {
+    static CTX: OnceLock<KernelCtx> = OnceLock::new();
+    CTX.get_or_init(KernelCtx::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::gemm::gemm_naive;
+
+    #[test]
+    fn plan_respects_thresholds() {
+        // Pin workers so the plan is host-independent (a 1-core runner
+        // would otherwise never plan BlockedParallel).
+        let c = KernelCtx {
+            workers: 4,
+            ..KernelCtx::default()
+        };
+        assert_eq!(c.plan_gemm(8, 8, 8), GemmKind::Naive);
+        assert_eq!(c.plan_gemm(128, 128, 32), GemmKind::Blocked);
+        assert_eq!(c.plan_gemm(512, 512, 64), GemmKind::BlockedParallel);
+        let serial = KernelCtx { workers: 1, ..c };
+        assert_eq!(serial.plan_gemm(512, 512, 64), GemmKind::Blocked);
+    }
+
+    #[test]
+    fn dispatch_agrees_with_naive_across_plan_boundaries() {
+        // Thresholds squeezed so three small shapes span all three plans.
+        let ctx = KernelCtx {
+            naive_below_flops: 1000,
+            parallel_above_flops: 8000,
+            workers: 3,
+            ..KernelCtx::default()
+        };
+        let mut rng = Rng::new(3);
+        for (m, k, n) in [(5, 7, 9), (12, 10, 11), (24, 17, 23)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let plan = ctx.plan_gemm(m, k, n);
+            assert!(
+                ctx.gemm(&a, &b).fro_dist(&gemm_naive(&a, &b)) < 1e-9,
+                "plan {plan:?} diverged from reference"
+            );
+        }
+    }
+
+    #[test]
+    fn autotuned_tile_is_a_candidate_and_correct() {
+        let ctx = KernelCtx::autotuned(48, 8);
+        assert!(ctx.tile.mc >= 32 && ctx.tile.kc >= 32 && ctx.tile.nc >= 128);
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(33, 29, 1.0, &mut rng);
+        let b = Mat::randn(29, 31, 1.0, &mut rng);
+        let want = gemm_naive(&a, &b);
+        assert!(gemm::gemm_blocked(&a, &b, ctx.tile, 1).fro_dist(&want) < 1e-9);
+    }
+
+    #[test]
+    fn global_ctx_is_initialized_once() {
+        let a = ctx();
+        let b = ctx();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.workers >= 1);
+    }
+}

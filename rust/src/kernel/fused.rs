@@ -1,0 +1,612 @@
+//! Fused group-and-shuffle kernels: apply a block-diagonal factor
+//! ("group") and the `P_(k,n)` relayouts ("shuffle") in one pass, without
+//! materializing any intermediate matrix — the pure-Rust mirror of the
+//! Pallas L1 `shuffled_block_diag_matmul` kernel
+//! (`python/compile/kernels/gs_kernels.py`).
+//!
+//! [`fused_apply`] computes `P_out · (B · (P_in · X))` in a single sweep:
+//! the input shuffle becomes a row *gather* (through the inverse
+//! permutation) and the output shuffle a row *scatter*, both folded into
+//! the per-block GEMM loop. A two-factor [`crate::gs::GsMatrix`] apply is
+//! two fused passes instead of five ([`gs_apply`]); an `m`-factor
+//! [`crate::gs::GsChain`] is `m` passes instead of `2m+1`
+//! ([`chain_apply`]). This is what makes the Theorem-2 `O(m·nnz)` cost
+//! real on CPU: per column, `m·d·b` multiply-adds and zero relayout
+//! traffic.
+//!
+//! For multi-block factors the arithmetic order per output row is
+//! identical to the unfused `Perm::apply_rows` → `BlockDiag::matmul_right`
+//! pipeline, so those results are bitwise-equal to the pre-kernel
+//! implementation; the one exception is a single relayout-free block,
+//! which dispatches to the cache-blocked GEMM above the naive threshold
+//! and agrees only to rounding (1e-9 in the property tests).
+
+use crate::gs::{BlockDiag, GsChain, GsMatrix, Perm};
+use crate::linalg::Mat;
+use crate::util::pool::parallel_map;
+
+use super::dispatch::KernelCtx;
+
+/// Skip the gather/scatter indirection for identity relayouts.
+fn nonidentity(p: &Perm) -> Option<&Perm> {
+    if p.is_identity() {
+        None
+    } else {
+        Some(p)
+    }
+}
+
+/// `P · A` — permute rows (row `i` of `A` lands at row `σ(i)`); one
+/// row-copy pass.
+pub fn permute_rows(p: &Perm, a: &Mat) -> Mat {
+    assert_eq!(
+        a.rows,
+        p.n(),
+        "P·A shape mismatch: P is {}x{}, A is {}x{}",
+        p.n(),
+        p.n(),
+        a.rows,
+        a.cols
+    );
+    let mut out = Mat::zeros(a.rows, a.cols);
+    for (i, &dst) in p.sigma.iter().enumerate() {
+        out.data[dst * a.cols..(dst + 1) * a.cols].copy_from_slice(a.row(i));
+    }
+    out
+}
+
+/// `A · P` — permute columns (column `σ(j)` of `A` lands at column `j`);
+/// one gather pass per row over contiguous slices.
+pub fn permute_cols(p: &Perm, a: &Mat) -> Mat {
+    assert_eq!(
+        a.cols,
+        p.n(),
+        "A·P shape mismatch: A is {}x{}, P is {}x{}",
+        a.rows,
+        a.cols,
+        p.n(),
+        p.n()
+    );
+    let mut out = Mat::zeros(a.rows, a.cols);
+    for i in 0..a.rows {
+        let src = a.row(i);
+        let dst = &mut out.data[i * a.cols..(i + 1) * a.cols];
+        for (d, &s) in dst.iter_mut().zip(p.sigma.iter()) {
+            *d = src[s];
+        }
+    }
+    out
+}
+
+/// One fused pass `P_out · (B · (P_in · X))`. `None` relayouts skip their
+/// indirection entirely (so `fused_apply(bd, None, None, x, ctx)` is a
+/// bare block-diagonal GEMM). Large applies fan blocks out across the
+/// persistent pool — block output rows are disjoint even after the
+/// scatter, because `σ` is a bijection.
+pub fn fused_apply(
+    bd: &BlockDiag,
+    p_in: Option<&Perm>,
+    p_out: Option<&Perm>,
+    x: &Mat,
+    ctx: &KernelCtx,
+) -> Mat {
+    assert_eq!(
+        bd.cols(),
+        x.rows,
+        "fused apply shape mismatch: blockdiag {}x{} @ {}x{}",
+        bd.rows(),
+        bd.cols(),
+        x.rows,
+        x.cols
+    );
+    if let Some(p) = p_in {
+        assert_eq!(
+            p.n(),
+            x.rows,
+            "fused apply: P_in is {}x{} but X has {} rows",
+            p.n(),
+            p.n(),
+            x.rows
+        );
+    }
+    if let Some(p) = p_out {
+        assert_eq!(
+            p.n(),
+            bd.rows(),
+            "fused apply: P_out is {}x{} but the blockdiag has {} rows",
+            p.n(),
+            p.n(),
+            bd.rows()
+        );
+    }
+    // Input shuffle as a gather: (P_in X) row j = X row σ⁻¹(j).
+    let gather = p_in.map(|p| p.inverse().sigma);
+    let offsets = block_offsets(bd);
+    fused_run(
+        bd,
+        gather.as_deref(),
+        p_out.map(|p| p.sigma.as_slice()),
+        &offsets,
+        x,
+        ctx,
+    )
+}
+
+/// Row/col offsets of each block inside the block-diagonal frame.
+fn block_offsets(bd: &BlockDiag) -> Vec<(usize, usize)> {
+    let mut offsets = Vec::with_capacity(bd.blocks.len());
+    let (mut r0, mut c0) = (0, 0);
+    for blk in &bd.blocks {
+        offsets.push((r0, c0));
+        r0 += blk.rows;
+        c0 += blk.cols;
+    }
+    offsets
+}
+
+/// The fused sweep itself, over pre-resolved gather/scatter maps and
+/// block offsets (one-shot callers resolve them in [`fused_apply`];
+/// repeated callers keep them in a [`FusedPlan`]).
+fn fused_run(
+    bd: &BlockDiag,
+    gather: Option<&[usize]>,
+    scatter: Option<&[usize]>,
+    offsets: &[(usize, usize)],
+    x: &Mat,
+    ctx: &KernelCtx,
+) -> Mat {
+    // A single relayout-free block is just a dense product — hand it to
+    // the GEMM dispatcher so coarse-blocked operands (e.g. OFT with
+    // block == d) still get cache blocking and row-panel parallelism.
+    if bd.blocks.len() == 1 && gather.is_none() && scatter.is_none() {
+        return ctx.gemm(&bd.blocks[0], x);
+    }
+    let t = x.cols;
+    let mut out = Mat::zeros(bd.rows(), t);
+
+    let workers = ctx.fused_workers(bd, t);
+    if workers > 1 && bd.blocks.len() > 1 {
+        // Per-block strips computed in parallel, scattered afterwards.
+        let strips = parallel_map(bd.blocks.len(), workers, |bi| {
+            let blk = &bd.blocks[bi];
+            let c0 = offsets[bi].1;
+            let mut strip = vec![0.0; blk.rows * t];
+            for i in 0..blk.rows {
+                let orow = &mut strip[i * t..(i + 1) * t];
+                accumulate_row(blk, i, c0, gather, x, orow);
+            }
+            strip
+        });
+        for (bi, strip) in strips.iter().enumerate() {
+            let r0 = offsets[bi].0;
+            for i in 0..bd.blocks[bi].rows {
+                let dst = match scatter {
+                    Some(s) => s[r0 + i],
+                    None => r0 + i,
+                };
+                out.data[dst * t..(dst + 1) * t].copy_from_slice(&strip[i * t..(i + 1) * t]);
+            }
+        }
+    } else {
+        // Serial: write each output row straight to its scattered
+        // destination (each destination row is owned by exactly one
+        // (block, row) pair).
+        for (bi, blk) in bd.blocks.iter().enumerate() {
+            let (r0, c0) = offsets[bi];
+            for i in 0..blk.rows {
+                let dst = match scatter {
+                    Some(s) => s[r0 + i],
+                    None => r0 + i,
+                };
+                let orow = &mut out.data[dst * t..(dst + 1) * t];
+                accumulate_row(blk, i, c0, gather, x, orow);
+            }
+        }
+    }
+    out
+}
+
+/// Accumulate one block-row product `Σ_k B[i,k] · X[gather(c0+k)]` into
+/// `orow` (the innermost fused loop, shared by the serial and parallel
+/// drivers).
+#[inline]
+fn accumulate_row(
+    blk: &Mat,
+    i: usize,
+    c0: usize,
+    gather: Option<&[usize]>,
+    x: &Mat,
+    orow: &mut [f64],
+) {
+    for k in 0..blk.cols {
+        let f = blk[(i, k)];
+        if f == 0.0 {
+            continue;
+        }
+        let src = match gather {
+            Some(inv) => inv[c0 + k],
+            None => c0 + k,
+        };
+        for (o, &v) in orow.iter_mut().zip(x.row(src).iter()) {
+            *o += f * v;
+        }
+    }
+}
+
+/// Precomputed relayout maps + block offsets for one fused pass —
+/// resolved once per operator instead of per apply. Pair it only with the
+/// block-diagonal factor it was planned for.
+pub struct FusedPlan {
+    gather: Option<Vec<usize>>,
+    scatter: Option<Vec<usize>>,
+    offsets: Vec<(usize, usize)>,
+}
+
+impl FusedPlan {
+    pub fn new(bd: &BlockDiag, p_in: Option<&Perm>, p_out: Option<&Perm>) -> FusedPlan {
+        if let Some(p) = p_in {
+            assert_eq!(
+                p.n(),
+                bd.cols(),
+                "fused plan: P_in size {} must match blockdiag cols {}",
+                p.n(),
+                bd.cols()
+            );
+        }
+        if let Some(p) = p_out {
+            assert_eq!(
+                p.n(),
+                bd.rows(),
+                "fused plan: P_out size {} must match blockdiag rows {}",
+                p.n(),
+                bd.rows()
+            );
+        }
+        FusedPlan {
+            gather: p_in.map(|p| p.inverse().sigma),
+            scatter: p_out.map(|p| p.sigma.clone()),
+            offsets: block_offsets(bd),
+        }
+    }
+
+    /// Run the planned pass against its block-diagonal factor.
+    pub fn apply(&self, bd: &BlockDiag, x: &Mat, ctx: &KernelCtx) -> Mat {
+        assert_eq!(
+            self.offsets.len(),
+            bd.blocks.len(),
+            "fused plan was built for a different blockdiag"
+        );
+        assert_eq!(
+            bd.cols(),
+            x.rows,
+            "fused apply shape mismatch: blockdiag {}x{} @ {}x{}",
+            bd.rows(),
+            bd.cols(),
+            x.rows,
+            x.cols
+        );
+        fused_run(
+            bd,
+            self.gather.as_deref(),
+            self.scatter.as_deref(),
+            &self.offsets,
+            x,
+            ctx,
+        )
+    }
+}
+
+/// A prepared two-pass GS operator: owns the factors plus the
+/// precomputed relayout plans, so repeated applies — the serving engine's
+/// factorized hot path, which reuses one operator per tenant layer across
+/// every batch — pay zero per-call planning cost.
+pub struct GsOp {
+    gs: GsMatrix,
+    pass_r: FusedPlan,
+    pass_l: FusedPlan,
+}
+
+impl GsOp {
+    pub fn new(gs: GsMatrix) -> GsOp {
+        let pass_r = FusedPlan::new(&gs.r, nonidentity(&gs.spec.p_r), nonidentity(&gs.spec.p));
+        let pass_l = FusedPlan::new(&gs.l, None, nonidentity(&gs.spec.p_l));
+        GsOp { gs, pass_r, pass_l }
+    }
+
+    /// `A · X` via the two planned fused passes (same result as
+    /// [`gs_apply`]).
+    pub fn apply(&self, x: &Mat, ctx: &KernelCtx) -> Mat {
+        assert_eq!(
+            x.rows,
+            self.gs.spec.n(),
+            "GS op: X has {} rows, spec expects {}",
+            x.rows,
+            self.gs.spec.n()
+        );
+        let mid = self.pass_r.apply(&self.gs.r, x, ctx);
+        self.pass_l.apply(&self.gs.l, &mid, ctx)
+    }
+}
+
+/// Two-factor GS apply `A·X = P_L (L (P (R (P_R X))))` as two fused
+/// passes: the first folds `P_R` (gather) and `P` (scatter) around the
+/// `R` grouped GEMM, the second folds `P_L` (scatter) around `L`.
+pub fn gs_apply(gs: &GsMatrix, x: &Mat, ctx: &KernelCtx) -> Mat {
+    assert_eq!(
+        x.rows,
+        gs.spec.n(),
+        "GS apply: X has {} rows, spec expects {}",
+        x.rows,
+        gs.spec.n()
+    );
+    let mid = fused_apply(
+        &gs.r,
+        nonidentity(&gs.spec.p_r),
+        nonidentity(&gs.spec.p),
+        x,
+        ctx,
+    );
+    fused_apply(&gs.l, None, nonidentity(&gs.spec.p_l), &mid, ctx)
+}
+
+/// Higher-order chain apply `P_out (B_m P_m) ⋯ (B_1 P_1) X` as `m` fused
+/// passes: each stage gathers through its own `P_i`, and the final
+/// `P_out` relayout rides the last stage's scatter.
+pub fn chain_apply(chain: &GsChain, x: &Mat, ctx: &KernelCtx) -> Mat {
+    assert_eq!(
+        x.rows,
+        chain.n(),
+        "chain apply: X has {} rows, chain expects {}",
+        x.rows,
+        chain.n()
+    );
+    let last = chain.stages.len() - 1;
+    let mut cur: Option<Mat> = None;
+    for (i, st) in chain.stages.iter().enumerate() {
+        let p_out = if i == last {
+            nonidentity(&chain.p_out)
+        } else {
+            None
+        };
+        let inp = cur.as_ref().unwrap_or(x);
+        cur = Some(fused_apply(&st.block, nonidentity(&st.perm), p_out, inp, ctx));
+    }
+    cur.expect("GsChain has at least one stage")
+}
+
+/// Batched multi-RHS GS apply: one structured operator over many
+/// right-hand sides, fanned out across the persistent pool (the serving
+/// engine's cross-batch shape). Each RHS is applied with a serial inner
+/// context so parallelism lives at the batch level.
+pub fn gs_apply_batch(gs: &GsMatrix, xs: &[Mat], ctx: &KernelCtx) -> Vec<Mat> {
+    let serial = KernelCtx { workers: 1, ..*ctx };
+    parallel_map(xs.len(), ctx.workers, |i| gs_apply(gs, &xs[i], &serial))
+}
+
+/// Batched multi-RHS chain apply (see [`gs_apply_batch`]).
+pub fn chain_apply_batch(chain: &GsChain, xs: &[Mat], ctx: &KernelCtx) -> Vec<Mat> {
+    let serial = KernelCtx { workers: 1, ..*ctx };
+    parallel_map(xs.len(), ctx.workers, |i| chain_apply(chain, &xs[i], &serial))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gs::GsSpec;
+    use crate::kernel::gemm::gemm_naive;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn parallel_ctx() -> KernelCtx {
+        // Forces the parallel fused driver regardless of shape.
+        KernelCtx {
+            parallel_above_flops: 0,
+            workers: 3,
+            ..KernelCtx::default()
+        }
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    struct FusedCase {
+        k: usize,
+        br: usize,
+        bc: usize,
+        t: usize,
+        seed: u64,
+    }
+
+    fn shrink_fused(c: &FusedCase) -> Vec<FusedCase> {
+        let mut out = Vec::new();
+        for k in prop::shrink_usize(c.k, 1) {
+            out.push(FusedCase { k, ..*c });
+        }
+        for br in prop::shrink_usize(c.br, 1) {
+            out.push(FusedCase { br, ..*c });
+        }
+        for bc in prop::shrink_usize(c.bc, 1) {
+            out.push(FusedCase { bc, ..*c });
+        }
+        for t in prop::shrink_usize(c.t, 1) {
+            out.push(FusedCase { t, ..*c });
+        }
+        out
+    }
+
+    #[test]
+    fn fused_apply_matches_dense_reference() {
+        // Oracle built purely from to_mat() + the naive GEMM — fully
+        // independent of every kernel under test. Rectangular blocks
+        // included.
+        prop::check_shrunk(
+            "fused group-and-shuffle == dense P_out·B·P_in·X",
+            1201,
+            48,
+            |rng| FusedCase {
+                k: prop::size_in(rng, 1, 5),
+                br: prop::size_in(rng, 1, 5),
+                bc: prop::size_in(rng, 1, 5),
+                t: prop::size_in(rng, 1, 4),
+                seed: rng.next_u64(),
+            },
+            shrink_fused,
+            |c| {
+                let mut rng = Rng::new(c.seed);
+                let bd = BlockDiag::randn(c.k, c.br, c.bc, 1.0, &mut rng);
+                let p_in = Perm::random(bd.cols(), &mut rng);
+                let p_out = Perm::random(bd.rows(), &mut rng);
+                let x = Mat::randn(bd.cols(), c.t, 1.0, &mut rng);
+                let dense = gemm_naive(
+                    &gemm_naive(&gemm_naive(&p_out.to_mat(), &bd.to_mat()), &p_in.to_mat()),
+                    &x,
+                );
+                for ctx in [KernelCtx::default(), parallel_ctx()] {
+                    let fused = fused_apply(&bd, Some(&p_in), Some(&p_out), &x, &ctx);
+                    assert!(fused.fro_dist(&dense) < 1e-9, "both relayouts");
+                    let bare = fused_apply(&bd, None, None, &x, &ctx);
+                    assert!(
+                        bare.fro_dist(&gemm_naive(&bd.to_mat(), &x)) < 1e-9,
+                        "no relayouts"
+                    );
+                }
+            },
+        );
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    struct ChainCase {
+        b: usize,
+        r: usize,
+        m: usize,
+        t: usize,
+        seed: u64,
+    }
+
+    fn shrink_chain(c: &ChainCase) -> Vec<ChainCase> {
+        let mut out = Vec::new();
+        for r in prop::shrink_usize(c.r, 2) {
+            out.push(ChainCase { r, ..*c });
+        }
+        for m in prop::shrink_usize(c.m, 1) {
+            out.push(ChainCase { m, ..*c });
+        }
+        for t in prop::shrink_usize(c.t, 1) {
+            out.push(ChainCase { t, ..*c });
+        }
+        out
+    }
+
+    #[test]
+    fn chain_apply_matches_factor_product_oracle() {
+        // Dense oracle assembled factor-by-factor with the naive GEMM, so
+        // this covers the fused path end-to-end across (r, b, m, batch).
+        prop::check_shrunk(
+            "fused chain apply == dense factor product",
+            1202,
+            32,
+            |rng| ChainCase {
+                b: [2usize, 3][rng.below(2)],
+                r: prop::size_in(rng, 2, 4),
+                m: prop::size_in(rng, 1, 3),
+                t: prop::size_in(rng, 1, 5),
+                seed: rng.next_u64(),
+            },
+            shrink_chain,
+            |c| {
+                let mut rng = Rng::new(c.seed);
+                let d = c.b * c.r;
+                let chain = GsChain::gs_kn(d, c.b, c.m, &mut rng, false);
+                let x = Mat::randn(d, c.t, 1.0, &mut rng);
+                let mut q = Mat::eye(d);
+                for st in &chain.stages {
+                    q = gemm_naive(&st.block.to_mat(), &gemm_naive(&st.perm.to_mat(), &q));
+                }
+                q = gemm_naive(&chain.p_out.to_mat(), &q);
+                let want = gemm_naive(&q, &x);
+                for ctx in [KernelCtx::default(), parallel_ctx()] {
+                    assert!(chain_apply(&chain, &x, &ctx).fro_dist(&want) < 1e-9);
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gs_two_pass_apply_matches_dense() {
+        prop::check("fused GsMatrix apply == dense", 1203, |rng| {
+            let b = [2usize, 4][rng.below(2)];
+            let r = prop::size_in(rng, 2, 4);
+            let spec = GsSpec::gsoft(b * r, b);
+            let a = spec.random_member(1.0, rng);
+            let x = Mat::randn(spec.n(), prop::size_in(rng, 1, 4), 1.0, rng);
+            let want = gemm_naive(&a.to_dense(), &x);
+            for ctx in [KernelCtx::default(), parallel_ctx()] {
+                assert!(gs_apply(&a, &x, &ctx).fro_dist(&want) < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn batched_apply_matches_individual_applies() {
+        let mut rng = Rng::new(77);
+        let ctx = KernelCtx::default();
+        let spec = GsSpec::gsoft(12, 3);
+        let gs = spec.random_member(1.0, &mut rng);
+        let xs: Vec<Mat> = (0..5).map(|_| Mat::randn(12, 4, 1.0, &mut rng)).collect();
+        let batch = gs_apply_batch(&gs, &xs, &ctx);
+        assert_eq!(batch.len(), xs.len());
+        for (x, y) in xs.iter().zip(batch.iter()) {
+            assert!(gs_apply(&gs, x, &ctx).fro_dist(y) < 1e-12);
+        }
+        let chain = GsChain::gs_kn(12, 3, 2, &mut rng, false);
+        let ys = chain_apply_batch(&chain, &xs, &ctx);
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert!(chain_apply(&chain, x, &ctx).fro_dist(y) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn planned_operator_matches_one_shot_applies() {
+        // FusedPlan/GsOp precompute gathers/scatters once; results must
+        // be identical to the per-call fused_apply/gs_apply paths.
+        prop::check("planned fused ops == one-shot fused ops", 1205, |rng| {
+            let k = prop::size_in(rng, 1, 4);
+            let br = prop::size_in(rng, 1, 4);
+            let bc = prop::size_in(rng, 1, 4);
+            let bd = BlockDiag::randn(k, br, bc, 1.0, rng);
+            let p_in = Perm::random(bd.cols(), rng);
+            let p_out = Perm::random(bd.rows(), rng);
+            let x = Mat::randn(bd.cols(), prop::size_in(rng, 1, 4), 1.0, rng);
+            let ctx = KernelCtx::default();
+            let plan = FusedPlan::new(&bd, Some(&p_in), Some(&p_out));
+            let want = fused_apply(&bd, Some(&p_in), Some(&p_out), &x, &ctx);
+            assert!(plan.apply(&bd, &x, &ctx).fro_dist(&want) < 1e-15);
+
+            let b = [2usize, 3][rng.below(2)];
+            let r = prop::size_in(rng, 2, 4);
+            let spec = GsSpec::gsoft(b * r, b);
+            let gs = spec.random_member(1.0, rng);
+            let xq = Mat::randn(spec.n(), 3, 1.0, rng);
+            let want = gs_apply(&gs, &xq, &ctx);
+            let op = GsOp::new(gs);
+            assert!(op.apply(&xq, &ctx).fro_dist(&want) < 1e-15);
+        });
+    }
+
+    #[test]
+    fn relayouts_match_dense_permutation_products() {
+        prop::check("kernel relayouts == dense P products", 1204, |rng| {
+            let n = prop::size_in(rng, 1, 9);
+            let p = Perm::random(n, rng);
+            let a = Mat::randn(n, n, 1.0, rng);
+            let pd = p.to_mat();
+            assert!(permute_rows(&p, &a).fro_dist(&gemm_naive(&pd, &a)) < 1e-12);
+            assert!(permute_cols(&p, &a).fro_dist(&gemm_naive(&a, &pd)) < 1e-12);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "fused apply shape mismatch")]
+    fn fused_shape_mismatch_is_a_hard_assert() {
+        let bd = BlockDiag::zeros(2, 3, 3);
+        fused_apply(&bd, None, None, &Mat::zeros(5, 2), &KernelCtx::default());
+    }
+}

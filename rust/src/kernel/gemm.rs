@@ -1,0 +1,347 @@
+//! Cache-blocked, register-tiled f64 GEMM — the dense workhorse behind
+//! `Mat::matmul` (the Rust mirror of the dense baseline the Pallas L1
+//! kernels are measured against).
+//!
+//! Layout: classic three-level blocking. The innermost micro-kernel keeps
+//! an `MR×NR` accumulator block in locals; around it, panels of `B` are
+//! packed contiguously per `(kc, nc)` tile so the micro-kernel streams
+//! unit-stride; the outer loops walk `(nc, kc, mc)` cache tiles. Edge
+//! tiles (dimensions not divisible by any tile size) are handled by
+//! clamping every tile to the remaining extent — property-tested against
+//! [`gemm_naive`] across non-divisible shapes.
+//!
+//! The parallel driver splits `A`'s rows into contiguous panels across the
+//! persistent worker pool ([`crate::util::pool::parallel_map`]); panels
+//! are disjoint, so results concatenate without synchronization.
+
+use crate::linalg::Mat;
+use crate::util::pool::parallel_map;
+
+/// Register micro-tile rows (accumulator block height).
+pub const MR: usize = 4;
+/// Register micro-tile cols (accumulator block width).
+pub const NR: usize = 4;
+
+/// Cache tile sizes: `mc` rows of `A`, `kc` inner depth, `nc` cols of `B`
+/// per packed panel. Defaults target ~L1-resident packed panels for f64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl Default for Tile {
+    fn default() -> Tile {
+        Tile {
+            mc: 64,
+            kc: 64,
+            nc: 256,
+        }
+    }
+}
+
+/// Reference GEMM: the original `Mat::matmul` ikj loop, kept verbatim as
+/// the property-test oracle and the dispatch choice for small shapes
+/// (where tiling overhead outweighs cache wins). The zero-skip makes it
+/// cheap on permutation-like operands.
+pub fn gemm_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a[(i, k)];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Pack all of `B` tile-wise: each `(kc, nc)` cache tile contiguous with
+/// row stride `ncc`, so the micro-kernel streams unit-stride and parallel
+/// row strips share one read-only pack instead of re-packing per strip.
+/// Tile `(jc, kc)` starts at offset `kdim·jc + kc·ncc` (panel widths sum
+/// telescopically), so lookups are O(1); the pack is exactly one extra
+/// copy of `B`.
+fn pack_b(b: &Mat, tile: Tile) -> Vec<f64> {
+    let n = b.cols;
+    let kdim = b.rows;
+    let mut pack = vec![0.0; kdim * n];
+    let mut jc = 0;
+    while jc < n {
+        let ncc = tile.nc.min(n - jc);
+        let mut kc = 0;
+        while kc < kdim {
+            let kcc = tile.kc.min(kdim - kc);
+            let base = kdim * jc + kc * ncc;
+            for k in 0..kcc {
+                let src = &b.data[(kc + k) * n + jc..(kc + k) * n + jc + ncc];
+                pack[base + k * ncc..base + (k + 1) * ncc].copy_from_slice(src);
+            }
+            kc += kcc;
+        }
+        jc += ncc;
+    }
+    pack
+}
+
+/// Blocked GEMM over the row range `r0..r1` of `A` against a shared
+/// [`pack_b`] layout of `B` (`n = B.cols`), producing that strip of the
+/// output row-major.
+fn gemm_strip(a: &Mat, bpack: &[f64], n: usize, r0: usize, r1: usize, tile: Tile) -> Vec<f64> {
+    let kdim = a.cols;
+    let mut out = vec![0.0; (r1 - r0) * n];
+    let mut jc = 0;
+    while jc < n {
+        let ncc = tile.nc.min(n - jc);
+        let mut kc = 0;
+        while kc < kdim {
+            let kcc = tile.kc.min(kdim - kc);
+            let btile = &bpack[kdim * jc + kc * ncc..kdim * jc + kc * ncc + kcc * ncc];
+            let mut ic = r0;
+            while ic < r1 {
+                let mcc = tile.mc.min(r1 - ic);
+                let mut ir = 0;
+                while ir < mcc {
+                    let mr = MR.min(mcc - ir);
+                    let mut jr = 0;
+                    while jr < ncc {
+                        let nr = NR.min(ncc - jr);
+                        let mut acc = [[0.0f64; NR]; MR];
+                        for k in 0..kcc {
+                            let brow = &btile[k * ncc + jr..k * ncc + jr + nr];
+                            for (i, accrow) in acc.iter_mut().enumerate().take(mr) {
+                                let av = a.data[(ic + ir + i) * kdim + kc + k];
+                                for (av_acc, &bv) in accrow.iter_mut().zip(brow.iter()) {
+                                    *av_acc += av * bv;
+                                }
+                            }
+                        }
+                        for (i, accrow) in acc.iter().enumerate().take(mr) {
+                            let base = (ic + ir + i - r0) * n + jc + jr;
+                            let orow = &mut out[base..base + nr];
+                            for (o, &v) in orow.iter_mut().zip(accrow.iter()) {
+                                *o += v;
+                            }
+                        }
+                        jr += nr;
+                    }
+                    ir += mr;
+                }
+                ic += mcc;
+            }
+            kc += kcc;
+        }
+        jc += ncc;
+    }
+    out
+}
+
+/// Cache-blocked GEMM; with `workers > 1`, row panels are computed in
+/// parallel on the persistent pool.
+pub fn gemm_blocked(a: &Mat, b: &Mat, tile: Tile, workers: usize) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let m = a.rows;
+    let n = b.cols;
+    let bpack = pack_b(b, tile);
+    let strips = workers.clamp(1, m.max(1));
+    if strips == 1 {
+        return Mat {
+            rows: m,
+            cols: n,
+            data: gemm_strip(a, &bpack, n, 0, m, tile),
+        };
+    }
+    let bounds: Vec<(usize, usize)> = (0..strips)
+        .map(|s| (m * s / strips, m * (s + 1) / strips))
+        .collect();
+    let parts = parallel_map(strips, strips, |s| {
+        gemm_strip(a, &bpack, n, bounds[s].0, bounds[s].1, tile)
+    });
+    let mut data = Vec::with_capacity(m * b.cols);
+    for p in &parts {
+        data.extend_from_slice(p);
+    }
+    Mat {
+        rows: m,
+        cols: b.cols,
+        data,
+    }
+}
+
+/// Matrix-vector product with a 4-way unrolled dot (breaks the serial
+/// FP-add dependency chain); with `workers > 1`, row chunks run on the
+/// persistent pool.
+pub fn gemv(a: &Mat, x: &[f64], workers: usize) -> Vec<f64> {
+    assert_eq!(
+        a.cols,
+        x.len(),
+        "matvec shape mismatch: {}x{} @ {}-vector",
+        a.rows,
+        a.cols,
+        x.len()
+    );
+    let dot = |i: usize| -> f64 {
+        let row = a.row(i);
+        let mut acc = [0.0f64; 4];
+        let quads = row.len() / 4 * 4;
+        let mut k = 0;
+        while k < quads {
+            acc[0] += row[k] * x[k];
+            acc[1] += row[k + 1] * x[k + 1];
+            acc[2] += row[k + 2] * x[k + 2];
+            acc[3] += row[k + 3] * x[k + 3];
+            k += 4;
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        while k < row.len() {
+            s += row[k] * x[k];
+            k += 1;
+        }
+        s
+    };
+    let chunks = workers.clamp(1, a.rows.max(1));
+    if chunks == 1 {
+        return (0..a.rows).map(dot).collect();
+    }
+    let bounds: Vec<(usize, usize)> = (0..chunks)
+        .map(|c| (a.rows * c / chunks, a.rows * (c + 1) / chunks))
+        .collect();
+    let parts = parallel_map(chunks, chunks, |c| {
+        (bounds[c].0..bounds[c].1).map(dot).collect::<Vec<f64>>()
+    });
+    let mut y = Vec::with_capacity(a.rows);
+    for p in &parts {
+        y.extend_from_slice(p);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[derive(Debug, Clone, Copy)]
+    struct GemmCase {
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+    }
+
+    fn shrink_case(c: &GemmCase) -> Vec<GemmCase> {
+        let mut out = Vec::new();
+        for m in prop::shrink_usize(c.m, 1) {
+            out.push(GemmCase { m, ..*c });
+        }
+        for k in prop::shrink_usize(c.k, 1) {
+            out.push(GemmCase { k, ..*c });
+        }
+        for n in prop::shrink_usize(c.n, 1) {
+            out.push(GemmCase { n, ..*c });
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_gemm_matches_naive_including_edge_tiles() {
+        // Tiny tiles against dims up to 40 force partial tiles at every
+        // boundary, and dims are not multiples of MR/NR either.
+        let tile = Tile { mc: 5, kc: 3, nc: 7 };
+        prop::check_shrunk(
+            "blocked gemm == naive gemm",
+            1101,
+            48,
+            |rng| GemmCase {
+                m: prop::size_in(rng, 1, 40),
+                k: prop::size_in(rng, 1, 40),
+                n: prop::size_in(rng, 1, 40),
+                seed: rng.next_u64(),
+            },
+            shrink_case,
+            |c| {
+                let mut rng = Rng::new(c.seed);
+                let a = Mat::randn(c.m, c.k, 1.0, &mut rng);
+                let b = Mat::randn(c.k, c.n, 1.0, &mut rng);
+                let want = gemm_naive(&a, &b);
+                let single = gemm_blocked(&a, &b, tile, 1);
+                assert!(single.fro_dist(&want) < 1e-9, "single-thread blocked");
+                let multi = gemm_blocked(&a, &b, tile, 3);
+                assert!(multi.fro_dist(&want) < 1e-9, "parallel row panels");
+            },
+        );
+    }
+
+    #[test]
+    fn default_tile_matches_naive_on_larger_shapes() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(70, 130, 1.0, &mut rng);
+        let b = Mat::randn(130, 50, 1.0, &mut rng);
+        let want = gemm_naive(&a, &b);
+        assert!(gemm_blocked(&a, &b, Tile::default(), 1).fro_dist(&want) < 1e-9);
+        assert!(gemm_blocked(&a, &b, Tile::default(), 4).fro_dist(&want) < 1e-9);
+    }
+
+    #[test]
+    fn gemv_matches_reference_serial_and_parallel() {
+        prop::check("gemv == row dot products", 1102, |rng| {
+            let m = prop::size_in(rng, 1, 30);
+            let n = prop::size_in(rng, 1, 30);
+            let a = Mat::randn(m, n, 1.0, rng);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let want: Vec<f64> = (0..m)
+                .map(|i| a.row(i).iter().zip(x.iter()).map(|(p, q)| p * q).sum())
+                .collect();
+            for workers in [1, 3] {
+                let got = gemv(&a, &x, workers);
+                for (u, v) in got.iter().zip(want.iter()) {
+                    assert!((u - v).abs() < 1e-9, "workers={workers}: {u} vs {v}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn gemm_shape_mismatch_is_a_hard_assert() {
+        // A real assert!, not debug_assert!: must fire in release builds
+        // too (the tier-1 gate builds --release).
+        gemm_naive(&Mat::zeros(2, 3), &Mat::zeros(4, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "matvec shape mismatch")]
+    fn gemv_shape_mismatch_is_a_hard_assert() {
+        gemv(&Mat::zeros(2, 3), &[0.0; 4], 1);
+    }
+
+    #[test]
+    fn degenerate_dimensions() {
+        // Zero inner dimension: the product is the zero matrix.
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 2);
+        let c = gemm_blocked(&a, &b, Tile::default(), 2);
+        assert_eq!((c.rows, c.cols), (3, 2));
+        assert!(c.data.iter().all(|&v| v == 0.0));
+        // Zero output columns.
+        let c = gemm_blocked(&Mat::zeros(2, 3), &Mat::zeros(3, 0), Tile::default(), 1);
+        assert_eq!((c.rows, c.cols), (2, 0));
+    }
+}

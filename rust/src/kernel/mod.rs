@@ -1,0 +1,36 @@
+//! Fused group-and-shuffle CPU kernel subsystem — the pure-Rust mirror of
+//! the Pallas L1 kernels (`python/compile/kernels/gs_kernels.py`), fronted
+//! by the existing `Mat`/`gs` method surface so every hot path in the
+//! crate (the serving engine's cached-dense, cold-merge and factorized
+//! paths, the GS algebra, the experiment harnesses) runs through it:
+//!
+//! - [`gemm`] — cache-blocked, register-tiled dense GEMM with a parallel
+//!   row-panel driver on the persistent worker pool, plus the naive
+//!   reference loop ([`gemm_naive`]) and an unrolled [`gemv`]
+//! - [`fused`] — the fused group-and-shuffle kernel: block-diagonal GEMM
+//!   with the `P_(k,n)` relayouts folded in as gathers/scatters
+//!   ([`fused_apply`]), two-pass [`gs_apply`], per-stage [`chain_apply`],
+//!   batched multi-RHS variants, and the permutation relayouts
+//! - [`dispatch`] — [`KernelCtx`]: per-shape naive/blocked/parallel
+//!   dispatch, tile autotuning, and the process-wide default [`ctx`]
+//!
+//! Rust kernel ↔ Pallas L1 counterpart (see DESIGN.md §Perf):
+//! `fused_apply` ↔ `shuffled_block_diag_matmul`; `fused_apply(…, None,
+//! None, …)` ↔ `block_diag_matmul`; `gs_apply` ↔ the L1 `gs_apply`;
+//! `gemm_blocked` ↔ `bmm`; `KernelCtx` tiles ↔ `vmem_footprint_bytes`.
+//!
+//! Benchmarked by `gsoft kernel-bench` (writes `BENCH_kernels.json`) and
+//! `rust/benches/kernels.rs`; every path is property-tested equal to the
+//! dense `to_dense().matmul(..)` reference, including non-divisible edge
+//! tiles.
+
+pub mod dispatch;
+pub mod fused;
+pub mod gemm;
+
+pub use dispatch::{ctx, GemmKind, KernelCtx};
+pub use fused::{
+    chain_apply, chain_apply_batch, fused_apply, gs_apply, gs_apply_batch, permute_cols,
+    permute_rows, FusedPlan, GsOp,
+};
+pub use gemm::{gemm_blocked, gemm_naive, gemv, Tile};

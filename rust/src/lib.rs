@@ -11,7 +11,9 @@
 //!   denoiser, and 1-Lipschitz LipConvnets with GS orthogonal
 //!   convolutions — AOT-lowered to HLO text in `artifacts/`.
 //! - **L3** (this crate): the exact GS matrix algebra ([`gs`]), a dense
-//!   linear-algebra substrate ([`linalg`]), the PJRT runtime that executes
+//!   linear-algebra substrate ([`linalg`]) whose hot paths run through the
+//!   fused group-and-shuffle CPU kernel subsystem ([`kernel`] — the
+//!   pure-Rust mirror of the L1 Pallas kernels), the PJRT runtime that executes
 //!   the AOT artifacts ([`runtime`]), the fine-tuning coordinator
 //!   ([`coordinator`]), synthetic workload generators ([`data`]), the
 //!   experiment/reporting harness ([`report`]) that regenerates every
@@ -24,6 +26,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod gs;
+pub mod kernel;
 pub mod linalg;
 pub mod report;
 pub mod runtime;

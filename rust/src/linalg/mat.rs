@@ -139,43 +139,21 @@ impl Mat {
         out
     }
 
-    /// Matrix product. Straightforward ikj loop — cache friendly enough for
-    /// the sizes this substrate sees (blocks are ≤ a few hundred).
+    /// Matrix product, routed through the CPU kernel subsystem
+    /// ([`crate::kernel`]): the dispatcher keeps the naive ikj loop for
+    /// small shapes and switches to the cache-blocked (optionally
+    /// row-parallel) GEMM for large ones. The original loop survives as
+    /// [`crate::kernel::gemm_naive`], the property-test oracle. Panics
+    /// with the offending shapes on dimension mismatch (a hard `assert!`,
+    /// release builds included).
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(
-            self.cols, other.rows,
-            "matmul shape mismatch: {}x{} @ {}x{}",
-            self.rows, self.cols, other.rows, other.cols
-        );
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
-                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
-                for (o, &b) in out_row.iter_mut().zip(orow.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
-        out
+        crate::kernel::ctx().gemm(self, other)
     }
 
-    /// Matrix-vector product.
+    /// Matrix-vector product (kernel-dispatched; see [`crate::kernel::gemv`]).
+    /// Panics with the offending shapes on dimension mismatch.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| {
-                self.row(i)
-                    .iter()
-                    .zip(x.iter())
-                    .map(|(a, b)| a * b)
-                    .sum()
-            })
-            .collect()
+        crate::kernel::ctx().gemv(self, x)
     }
 
     /// Frobenius norm.
@@ -349,6 +327,20 @@ mod tests {
                 assert!((y1[i] - y2[(i, 0)]).abs() < 1e-10);
             }
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch: 2x3 @ 4x2")]
+    fn matmul_mismatch_reports_shapes_in_release() {
+        // A hard assert!, not debug_assert!: the tier-1 gate builds
+        // --release, where debug_assert! would vanish.
+        let _ = Mat::zeros(2, 3).matmul(&Mat::zeros(4, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "matvec shape mismatch")]
+    fn matvec_mismatch_reports_shapes_in_release() {
+        let _ = Mat::zeros(2, 3).matvec(&[0.0; 5]);
     }
 
     #[test]

@@ -26,7 +26,8 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::merge::{gsoft_q, oft_q, AdapterKind};
 use crate::gs::density::{chain_support, gs_min_factors, BitMatrix, PermFamily};
-use crate::gs::{BlockDiag, GsMatrix};
+use crate::gs::BlockDiag;
+use crate::kernel::{self, KernelCtx};
 use crate::linalg::Mat;
 use crate::util::pool::{default_workers, WorkQueue};
 
@@ -109,6 +110,11 @@ pub struct EngineOpts {
     pub cache_budget_bytes: usize,
     /// `None` → derive from [`Policy::from_cost_model`].
     pub promote_after: Option<u64>,
+    /// Compute-kernel dispatch context threaded through every serving
+    /// path (dense GEMMs and fused factorized applies alike); deployments
+    /// that know their dominant shape can pass
+    /// [`KernelCtx::autotuned`].
+    pub kernel: KernelCtx,
 }
 
 impl Default for EngineOpts {
@@ -120,6 +126,7 @@ impl Default for EngineOpts {
             poll_interval: Duration::from_micros(500),
             cache_budget_bytes: 64 << 20,
             promote_after: None,
+            kernel: KernelCtx::default(),
         }
     }
 }
@@ -277,6 +284,8 @@ struct Shared {
     base_layers: Vec<(String, Mat)>,
     d: usize,
     policy: Policy,
+    /// Kernel dispatch context for every worker's linear algebra.
+    kernel: KernelCtx,
     cache: Mutex<MergedCache>,
     seen: Mutex<HashMap<TenantId, u64>>,
     /// Tenants with a merge in flight — prevents two workers that both
@@ -349,6 +358,7 @@ impl Engine {
             base_layers,
             d,
             policy,
+            kernel: opts.kernel,
             cache: Mutex::new(MergedCache::new(opts.cache_budget_bytes)),
             seen: Mutex::new(HashMap::new()),
             merging: Mutex::new(HashSet::new()),
@@ -483,8 +493,11 @@ impl Drop for Engine {
 // ---- batch serving ---------------------------------------------------------
 
 /// Per-layer structured operator for the factorized (unmerged) path.
+/// GS operators are stored as prepared [`kernel::GsOp`]s so the relayout
+/// planning (inverse permutations, block offsets) is paid once per tenant
+/// layer, not per batch.
 enum LayerQ {
-    Gs(GsMatrix),
+    Gs(kernel::GsOp),
     Block(BlockDiag),
     LowRank { a: Mat, b: Mat },
 }
@@ -495,22 +508,25 @@ fn activate(m: &mut Mat) {
     }
 }
 
-fn forward_dense(layers: &[Mat], mut x: Mat) -> Mat {
+fn forward_dense(ctx: &KernelCtx, layers: &[Mat], mut x: Mat) -> Mat {
     for w in layers {
-        x = w.matmul(&x);
+        x = ctx.gemm(w, &x);
         activate(&mut x);
     }
     x
 }
 
-/// `W' X = Q (W X)` per layer without ever forming `W' = Q W`.
+/// `W' X = Q (W X)` per layer without ever forming `W' = Q W` — the base
+/// GEMM plus one fused group-and-shuffle apply, both through the engine's
+/// [`KernelCtx`].
 fn forward_factorized(sh: &Shared, ops: &[Option<LayerQ>], mut x: Mat) -> Mat {
+    let ctx = &sh.kernel;
     for ((_, w), q) in sh.base_layers.iter().zip(ops) {
-        let base_y = w.matmul(&x);
+        let base_y = ctx.gemm(w, &x);
         let y = match q {
-            Some(LayerQ::Gs(q)) => q.apply(&base_y),
-            Some(LayerQ::Block(bd)) => bd.matmul_right(&base_y),
-            Some(LayerQ::LowRank { a, b }) => &base_y + &a.matmul(&b.matmul(&x)),
+            Some(LayerQ::Gs(op)) => op.apply(&base_y, ctx),
+            Some(LayerQ::Block(bd)) => kernel::fused_apply(bd, None, None, &base_y, ctx),
+            Some(LayerQ::LowRank { a, b }) => &base_y + &ctx.gemm(a, &ctx.gemm(b, &x)),
             None => base_y,
         };
         x = y;
@@ -557,7 +573,9 @@ fn layer_q(entry: &AdapterEntry, layer: &str, d: usize) -> Result<Option<LayerQ>
             }
             let l_raw = entry.spec.view(&entry.params, &lname)?;
             let r_raw = entry.spec.view(&entry.params, &format!("{layer}.gs_r"))?;
-            Ok(Some(LayerQ::Gs(gsoft_q(l_raw, r_raw, d, block))))
+            Ok(Some(LayerQ::Gs(kernel::GsOp::new(gsoft_q(
+                l_raw, r_raw, d, block,
+            )))))
         }
         AdapterKind::Oft { block } => {
             let kname = format!("{layer}.oft_k");
@@ -604,7 +622,10 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
     // Hot path: merged weights already cached.
     let cached = sh.cache.lock().unwrap().get(tenant);
     if let Some(model) = cached {
-        return Ok((forward_dense(&model.layers, x), ServePath::CachedDense));
+        return Ok((
+            forward_dense(&sh.kernel, &model.layers, x),
+            ServePath::CachedDense,
+        ));
     }
 
     let entry = sh
@@ -632,7 +653,10 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
         let recheck = sh.cache.lock().unwrap().get(tenant);
         if let Some(model) = recheck {
             sh.merging.lock().unwrap().remove(&tenant);
-            return Ok((forward_dense(&model.layers, x), ServePath::CachedDense));
+            return Ok((
+                forward_dense(&sh.kernel, &model.layers, x),
+                ServePath::CachedDense,
+            ));
         }
         let merged = (|| -> Result<CachedModel> {
             let flat = sh.registry.merge(tenant)?;
@@ -644,7 +668,7 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
         })();
         sh.merging.lock().unwrap().remove(&tenant);
         let model = merged?;
-        let y = forward_dense(&model.layers, x);
+        let y = forward_dense(&sh.kernel, &model.layers, x);
         sh.metrics.merges.fetch_add(1, Ordering::Relaxed);
         let inserted = sh.cache.lock().unwrap().insert(tenant, model);
         if inserted {
@@ -717,6 +741,7 @@ mod tests {
             poll_interval: Duration::from_micros(200),
             cache_budget_bytes: 16 << 20,
             promote_after: Some(3),
+            kernel: KernelCtx::default(),
         }
     }
 

@@ -1,17 +1,210 @@
-//! Scoped thread pool built on `std::thread::scope` (no tokio offline).
+//! Threading primitives (no tokio/rayon/crossbeam offline): a *persistent*
+//! worker pool behind [`parallel_map`], and the blocking [`WorkQueue`] the
+//! serving engine's workers drain.
 //!
-//! Used by the coordinator to overlap synthetic-batch generation and
-//! evaluation with the PJRT hot loop, by the table harnesses to run
-//! independent (method × task) cells in parallel, and by the serving
-//! engine ([`crate::serve`]), whose worker threads drain a [`WorkQueue`]
-//! of micro-batches.
+//! The pool is spawned lazily on first use and reused by every subsequent
+//! [`parallel_map`] call, so hot paths — the kernel subsystem's parallel
+//! GEMM driver ([`crate::kernel`]), the serving engine, the table
+//! harnesses — never pay thread-spawn cost per call. Callers participate
+//! in their own work (the submitting thread drains items alongside the
+//! pool), and nested `parallel_map` calls from inside a pool worker run
+//! inline, so the pool cannot deadlock on its own helpers.
 
+use std::any::Any;
+use std::cell::Cell;
 use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Run `f(i)` for `i in 0..n` across up to `workers` threads, collecting
-/// results in index order. Panics in workers propagate.
+/// A lifetime-erased unit of work queued on the pool.
+type Task = Box<dyn FnOnce() + Send>;
+
+/// A panic payload caught in a worker, replayed on the submitting thread.
+type PanicPayload = Box<dyn Any + Send>;
+
+thread_local! {
+    /// Set inside pool workers so nested [`parallel_map`] calls run inline
+    /// instead of enqueueing helpers that could sit behind the very tasks
+    /// waiting on them.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Persistent worker pool: `size` threads spawned once for the process
+/// lifetime, each draining lifetime-erased tasks from a shared
+/// [`WorkQueue`].
+pub struct WorkerPool {
+    queue: Arc<WorkQueue<Task>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    fn start(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let queue: Arc<WorkQueue<Task>> = Arc::new(WorkQueue::new());
+        for _ in 0..size {
+            let q = Arc::clone(&queue);
+            std::thread::Builder::new()
+                .name("gsoft-pool".into())
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|w| w.set(true));
+                    while let Some(task) = q.pop() {
+                        // A panicking task must not kill the worker; the
+                        // panic is recorded task-side and replayed by the
+                        // submitter.
+                        let _ = std::panic::catch_unwind(AssertUnwindSafe(task));
+                    }
+                })
+                .expect("failed to spawn pool worker");
+        }
+        WorkerPool { queue, size }
+    }
+
+    /// Number of persistent workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    fn submit(&self, task: Task) {
+        self.queue.push(task);
+    }
+}
+
+/// The process-wide pool, started on first use with [`default_workers`]
+/// threads.
+pub fn global_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::start(default_workers()))
+}
+
+/// Erase the lifetime of a boxed task so it can ride the `'static` pool
+/// queue.
+///
+/// SAFETY: the task must never dereference caller-owned state after the
+/// caller returns. [`parallel_map`] guarantees this with a [`Gate`]: tasks
+/// touch the caller's stack only inside a lease, and the caller closes the
+/// gate (waiting out active leases) before returning, turning any
+/// not-yet-scheduled task into a no-op.
+unsafe fn erase_task<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    // Lifetime-only cast: same principal trait, same auto traits, same
+    // vtable — spelled as a raw-pointer cast rather than a transmute.
+    Box::from_raw(Box::into_raw(task) as *mut (dyn FnOnce() + Send))
+}
+
+/// Raw-pointer wrapper handing the caller-stack control block to pool
+/// tasks.
+///
+/// SAFETY (of the `Send` impl): the pointee is only dereferenced inside a
+/// [`Gate`] lease, while the submitting thread is blocked in
+/// [`Gate::close`] or has not yet reached it — so the pointee (whose
+/// fields are `Sync` under `parallel_map`'s `F: Sync`/`T: Send` bounds)
+/// is alive and shareable for every access.
+struct SendPtr<T>(*const T);
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Lease gate between one `parallel_map` caller and its pool helpers.
+/// Helpers [`Gate::enter`] before touching caller state and [`Gate::exit`]
+/// after; the caller's [`Gate::close`] waits out active leases, then bars
+/// new ones — so queued helpers that run later (possibly behind unrelated
+/// long pool tasks) become no-ops instead of stalling the caller.
+struct Gate {
+    state: Mutex<GateState>,
+    idle: Condvar,
+}
+
+struct GateState {
+    open: bool,
+    active: usize,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate {
+            state: Mutex::new(GateState {
+                open: true,
+                active: 0,
+            }),
+            idle: Condvar::new(),
+        }
+    }
+
+    /// Take a lease; `false` once the gate is closed.
+    fn enter(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !st.open {
+            return false;
+        }
+        st.active += 1;
+        true
+    }
+
+    fn exit(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    /// Wait for active leases to finish, then bar new ones. Idempotent.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.idle.wait(st).unwrap();
+        }
+        st.open = false;
+    }
+}
+
+/// Drop guard closing a [`Gate`]: makes the erased-lifetime task contract
+/// hold by construction — even if the caller unwinds between submitting
+/// helpers and its normal close, the gate is closed (waiting out active
+/// leases) before the stack frame dies.
+struct GateCloser<'a>(&'a Gate);
+
+impl Drop for GateCloser<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Shared control block for one `parallel_map` call. Plain references into
+/// the caller's stack frame — helpers reach it through a [`SendPtr`] and
+/// only inside a [`Gate`] lease, so the frame is alive for every access.
+struct Ctl<'a, F, T> {
+    f: &'a F,
+    n: usize,
+    next: &'a AtomicUsize,
+    results: &'a [Mutex<Option<T>>],
+    panic: &'a Mutex<Option<PanicPayload>>,
+}
+
+impl<F: Fn(usize) -> T + Sync, T> Ctl<'_, F, T> {
+    /// Claim and run items until the index space is exhausted. The first
+    /// panic is recorded and stops this drainer; peers keep going.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            match std::panic::catch_unwind(AssertUnwindSafe(|| (self.f)(i))) {
+                Ok(v) => *self.results[i].lock().unwrap() = Some(v),
+                Err(p) => {
+                    let mut first = self.panic.lock().unwrap();
+                    if first.is_none() {
+                        *first = Some(p);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` across up to `workers` threads of the
+/// persistent pool (the caller participates), collecting results in index
+/// order. Panics in workers propagate to the caller.
 pub fn parallel_map<T: Send, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Sync,
@@ -20,28 +213,58 @@ where
         return Vec::new();
     }
     let workers = workers.clamp(1, n);
-    if workers == 1 {
+    if workers == 1 || IN_POOL_WORKER.with(|w| w.get()) {
         return (0..n).map(f).collect();
     }
+
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                results.lock().unwrap()[i] = Some(v);
-            });
-        }
-    });
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let panic_slot: Mutex<Option<PanicPayload>> = Mutex::new(None);
+    let ctl = Ctl {
+        f: &f,
+        n,
+        next: &next,
+        results: &results,
+        panic: &panic_slot,
+    };
+
+    let helpers = (workers - 1).min(global_pool().size());
+    let gate = Arc::new(Gate::new());
+    let closer = GateCloser(&gate);
+    for _ in 0..helpers {
+        let g = Arc::clone(&gate);
+        let ptr: SendPtr<Ctl<'_, F, T>> = SendPtr(&ctl);
+        let task = Box::new(move || {
+            if g.enter() {
+                // SAFETY: the lease keeps the caller blocked in
+                // `Gate::close`, so `ctl` and everything it borrows are
+                // alive for the whole drain.
+                unsafe { (*ptr.0).drain() };
+                g.exit();
+            }
+        });
+        // SAFETY: the task touches caller state only inside a gate lease,
+        // and `gate.close()` below runs before this function returns — a
+        // helper scheduled after that observes the closed gate and
+        // becomes a no-op, so the erased lifetime cannot dangle into an
+        // actual access.
+        global_pool().submit(unsafe { erase_task(task) });
+    }
+    ctl.drain(); // the submitting thread works instead of just waiting
+
+    // Our own drain returning means every item was claimed; helpers
+    // mid-item hold a lease, and closing waits those out. Helpers still
+    // sitting in the queue (possibly behind unrelated long-running pool
+    // tasks) are NOT waited for — they no-op whenever they surface. The
+    // guard also closes on any unwinding path above.
+    drop(closer);
+
+    if let Some(p) = panic_slot.into_inner().unwrap() {
+        std::panic::resume_unwind(p);
+    }
     results
-        .into_inner()
-        .unwrap()
         .into_iter()
-        .map(|v| v.expect("worker did not fill slot"))
+        .map(|m| m.into_inner().unwrap().expect("worker did not fill slot"))
         .collect()
 }
 
@@ -145,6 +368,47 @@ mod tests {
     fn single_worker_and_empty() {
         assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
         assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(16, 4, |i| {
+                assert!(i != 7, "boom at {i}");
+                i
+            })
+        }));
+        assert!(caught.is_err(), "worker panic must reach the caller");
+        // The persistent pool is still serviceable afterwards.
+        assert_eq!(parallel_map(4, 4, |i| i * 2), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn nested_parallel_map_completes_without_deadlock() {
+        // Outer items running on pool workers execute their inner maps
+        // inline; outer items on the caller thread fan out normally.
+        let out = parallel_map(8, 4, |i| parallel_map(8, 4, |j| i * j).iter().sum::<usize>());
+        assert_eq!(out, (0..8).map(|i| i * 28).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_threads_are_reused_across_calls() {
+        use std::collections::HashSet;
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        for _ in 0..4 {
+            parallel_map(64, 4, |i| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                i
+            });
+        }
+        // Persistent workers, not spawn-per-call: the set of serving
+        // threads is bounded by pool size plus the participating caller.
+        let distinct = ids.lock().unwrap().len();
+        assert!(
+            distinct <= global_pool().size() + 1,
+            "expected ≤ {} distinct threads, saw {distinct}",
+            global_pool().size() + 1
+        );
     }
 
     #[test]
