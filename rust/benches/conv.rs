@@ -1,0 +1,69 @@
+//! Bench: the direct GS-SOC convolution runtime in isolation
+//! (DESIGN.md §Perf) —
+//!   conv_direct     — fused AXPY tap loop
+//!   conv_im2col     — patch gather into the cache-blocked GEMM
+//!   conv_dispatch   — KernelCtx-chosen path
+//!   conv_exp        — streaming truncated convolution exponential
+//!   gs_soc_layer    — full P_out · exp(grouped skew conv) · P_in pass
+//!   dense_apply     — materialized (c·H·W)² operator baseline
+//! `gsoft conv-bench` sweeps the same paths across a (c, k, H·W, groups,
+//! batch) grid and writes BENCH_conv.json.
+
+use gsoft::kernel::{conv_apply, conv_exp_apply, GsSocLayer, KernelCtx};
+use gsoft::linalg::Mat;
+use gsoft::util::bench::{black_box, Bench};
+use gsoft::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("conv");
+    let mut rng = Rng::new(19);
+    let ctx = KernelCtx::default();
+    let direct_ctx = KernelCtx {
+        naive_below_flops: usize::MAX,
+        ..ctx
+    };
+    let im2col_ctx = KernelCtx {
+        naive_below_flops: 0,
+        ..ctx
+    };
+    let terms = 6;
+
+    for (c, hw, groups, t) in [
+        (8usize, 8usize, 2usize, 8usize), // small: dense baseline feasible
+        (16, 16, 1, 8),
+        (32, 16, 4, 8),
+    ] {
+        let layer = GsSocLayer::random(c, 3, groups, hw, hw, terms, 0.02, &mut rng);
+        let kern = layer.kern.clone();
+        let d = c * hw * hw;
+        let x = Mat::randn(d, t, 1.0, &mut rng);
+        let tag = format!("c{c}_{hw}x{hw}_g{groups}_t{t}");
+        // One conv pass moves c·(c/g)·k²·hw² MACs per column.
+        let elems = Some((c * (c / groups) * 9 * hw * hw * t) as f64);
+        bench.bench_with_elements(&format!("conv_direct/{tag}"), elems, || {
+            black_box(conv_apply(&kern, &x, hw, hw, &direct_ctx))
+        });
+        bench.bench_with_elements(&format!("conv_im2col/{tag}"), elems, || {
+            black_box(conv_apply(&kern, &x, hw, hw, &im2col_ctx))
+        });
+        bench.bench_with_elements(&format!("conv_dispatch/{tag}"), elems, || {
+            black_box(conv_apply(&kern, &x, hw, hw, &ctx))
+        });
+        bench.bench(&format!("conv_exp/{tag}"), || {
+            black_box(conv_exp_apply(&kern, &x, hw, hw, terms, &ctx))
+        });
+        bench.bench(&format!("gs_soc_layer/{tag}"), || {
+            black_box(layer.apply(&x, &ctx))
+        });
+        if d <= 1024 {
+            let q = kern.to_dense().to_matrix(hw, hw);
+            bench.bench_with_elements(
+                &format!("dense_apply/{tag}"),
+                Some((d * d * t) as f64),
+                || black_box(ctx.gemm(&q, &x)),
+            );
+        }
+    }
+
+    bench.finish();
+}

@@ -9,8 +9,9 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::gs::{GsMatrix, GsSpec};
 use crate::gs::blockdiag::BlockDiag;
+use crate::gs::{perm_kn, GsMatrix, GsSpec};
+use crate::kernel::conv::{GroupedConv, GsSocLayer};
 use crate::linalg::{cayley_unconstrained, Mat};
 
 use super::flatspec::FlatSpec;
@@ -27,6 +28,21 @@ pub enum AdapterKind {
     Oft { block: usize },
     /// LoRA: `W' = W + A B`.
     Lora,
+    /// GS-SOC orthogonal convolution (§6.3): `W' = Q W` with
+    /// `Q = P⁻¹ · exp(grouped skew conv) · P` acting on activations viewed
+    /// as `[c, h, w]` tensors (`d = c·h·w`). The adapter slab per layer is
+    /// the raw grouped kernel `[c, c/groups, k, k]`; skew-symmetrization
+    /// and the `P_(groups, c)` channel shuffles are applied at build time,
+    /// so `Q` is orthogonal by construction (up to the `terms`-term series
+    /// truncation).
+    ConvGsSoc {
+        c: usize,
+        k: usize,
+        groups: usize,
+        h: usize,
+        w: usize,
+        terms: usize,
+    },
 }
 
 impl AdapterKind {
@@ -35,6 +51,7 @@ impl AdapterKind {
             AdapterKind::Gsoft { .. } => "gsoft",
             AdapterKind::Oft { .. } => "oft",
             AdapterKind::Lora => "lora",
+            AdapterKind::ConvGsSoc { .. } => "conv_gssoc",
         }
     }
 
@@ -58,6 +75,14 @@ pub fn merge_adapter(
         AdapterKind::Gsoft { block } => merge_gsoft(base, adapter, base_spec, adapter_spec, block),
         AdapterKind::Oft { block } => merge_oft(base, adapter, base_spec, adapter_spec, block),
         AdapterKind::Lora => merge_lora(base, adapter, base_spec, adapter_spec),
+        AdapterKind::ConvGsSoc {
+            c,
+            k,
+            groups,
+            h,
+            w,
+            terms,
+        } => merge_conv_gssoc(base, adapter, base_spec, adapter_spec, c, k, groups, h, w, terms),
     }
 }
 
@@ -137,6 +162,66 @@ pub fn merge_oft(
         let q = oft_q(k_raw, din, block);
         let w = Mat::from_f32(din, dout, base_spec.view(base, layer)?);
         let wq = q.matmul_right(&w);
+        base_spec
+            .view_mut(&mut merged, layer)?
+            .copy_from_slice(&wq.to_f32());
+    }
+    Ok(merged)
+}
+
+/// Build the orthogonal GS-SOC conv operator for one layer from its raw
+/// grouped-kernel slab: `Q = P⁻¹ · exp(L) · P` with
+/// `L = M - ConvTranspose(M)` (skew ⇒ orthogonal exponential) and
+/// `P = P_(groups, c)` — applied by the direct convolution runtime, never
+/// materialized.
+pub fn conv_gssoc_layer(
+    raw: &[f32],
+    c: usize,
+    k: usize,
+    groups: usize,
+    h: usize,
+    w: usize,
+    terms: usize,
+) -> GsSocLayer {
+    let kern = GroupedConv::from_f32(c, c, k, groups, raw).skew_symmetrize();
+    let p = perm_kn(groups, c);
+    GsSocLayer::new(p.clone(), kern, p.inverse(), h, w, terms)
+}
+
+/// Merge a GS-SOC conv adapter: `W' = Q W`, computed column-streamed
+/// through the direct conv runtime (`Q` applied to the `dout` columns of
+/// `W` as a batch) — the dense `(c·h·w)²` operator is never built.
+#[allow(clippy::too_many_arguments)]
+pub fn merge_conv_gssoc(
+    base: &[f32],
+    adapter: &[f32],
+    base_spec: &FlatSpec,
+    adapter_spec: &FlatSpec,
+    c: usize,
+    k: usize,
+    groups: usize,
+    h: usize,
+    w: usize,
+    terms: usize,
+) -> Result<Vec<f32>> {
+    let mut merged = base.to_vec();
+    for sname in adapter_spec.names_with_suffix(".soc_k") {
+        let layer = sname.strip_suffix(".soc_k").unwrap();
+        let raw = adapter_spec.view(adapter, &sname)?;
+        let (_, wshape) = base_spec.locate(layer)?;
+        anyhow::ensure!(wshape.len() == 2, "adapted entry {layer} is not a matrix");
+        let (din, dout) = (wshape[0], wshape[1]);
+        anyhow::ensure!(
+            din == c * h * w,
+            "conv_gssoc adapts '{layer}' of input dim {din}, but c·h·w = {}·{}·{} = {}",
+            c,
+            h,
+            w,
+            c * h * w
+        );
+        let q = conv_gssoc_layer(raw, c, k, groups, h, w, terms);
+        let wmat = Mat::from_f32(din, dout, base_spec.view(base, layer)?);
+        let wq = q.apply(&wmat, crate::kernel::ctx());
         base_spec
             .view_mut(&mut merged, layer)?
             .copy_from_slice(&wq.to_f32());
@@ -360,6 +445,64 @@ mod tests {
         assert!(AdapterKind::Gsoft { block: 2 }.is_orthogonal());
         assert!(!AdapterKind::Lora.is_orthogonal());
         assert_eq!(AdapterKind::Lora.name(), "lora");
+    }
+
+    #[test]
+    fn conv_gssoc_merge_preserves_spectrum() {
+        let (c, k, groups, h, w) = (4usize, 3usize, 2usize, 2usize, 3usize);
+        let d = c * h * w;
+        let kind = AdapterKind::ConvGsSoc {
+            c,
+            k,
+            groups,
+            h,
+            w,
+            terms: 14,
+        };
+        let bs = FlatSpec {
+            entries: vec![("l0.wq".to_string(), vec![d, 5])],
+        };
+        let asp = FlatSpec {
+            entries: vec![("l0.wq.soc_k".to_string(), vec![c, c / groups, k, k])],
+        };
+        assert!(kind.is_orthogonal());
+        assert_eq!(kind.name(), "conv_gssoc");
+        prop::check_named("conv_gssoc merge preserves spectrum", 105, 8, |rng| {
+            let base: Vec<f32> = (0..bs.size()).map(|_| rng.normal_f32(1.0)).collect();
+            // Small kernel magnitude keeps the truncated exponential
+            // converged, so Q is orthogonal to well below test tolerance.
+            let adapter: Vec<f32> = (0..asp.size()).map(|_| rng.normal_f32(0.05)).collect();
+            let merged = merge_adapter(kind, &base, &adapter, &bs, &asp).unwrap();
+            let w0 = Mat::from_f32(d, 5, bs.view(&base, "l0.wq").unwrap());
+            let w1 = Mat::from_f32(d, 5, bs.view(&merged, "l0.wq").unwrap());
+            let s0 = crate::linalg::singular_values(&w0);
+            let s1 = crate::linalg::singular_values(&w1);
+            for (a, b) in s0.iter().zip(s1.iter()) {
+                assert!((a - b).abs() < 1e-3, "singular value drift: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn conv_gssoc_zero_adapter_is_exact_identity() {
+        // exp(0) = I and the two shuffles cancel (P⁻¹·I·P = I), so the
+        // zero slab must be a bitwise no-op like the other kinds' zero
+        // initializations.
+        let (c, k, groups, h, w) = (4usize, 3usize, 2usize, 3usize, 3usize);
+        let d = c * h * w;
+        let bs = FlatSpec {
+            entries: vec![("l0.wq".to_string(), vec![d, d])],
+        };
+        let asp = FlatSpec {
+            entries: vec![("l0.wq.soc_k".to_string(), vec![c, c / groups, k, k])],
+        };
+        let mut rng = Rng::new(17);
+        let base: Vec<f32> = (0..bs.size()).map(|_| rng.normal_f32(1.0)).collect();
+        let adapter = vec![0.0f32; asp.size()];
+        let merged = merge_conv_gssoc(&base, &adapter, &bs, &asp, c, k, groups, h, w, 8).unwrap();
+        for (a, b) in merged.iter().zip(base.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -114,7 +114,16 @@ impl ConvKernel {
 
     /// Direct convolution (same padding) of `x: [c_in, h, w]`.
     pub fn conv(&self, x: &[f64], h: usize, w: usize) -> Vec<f64> {
-        assert_eq!(x.len(), self.c_in * h * w);
+        assert_eq!(
+            x.len(),
+            self.c_in * h * w,
+            "conv shape mismatch: input has {} elements, kernel expects c_in·h·w = {}·{}·{} = {}",
+            x.len(),
+            self.c_in,
+            h,
+            w,
+            self.c_in * h * w
+        );
         let half = (self.k - 1) / 2;
         let mut y = vec![0.0; self.c_out * h * w];
         for o in 0..self.c_out {
@@ -181,7 +190,21 @@ pub fn channel_shuffle_perm(chperm: &Perm, h: usize, w: usize) -> Perm {
 /// Convolution exponential `L ⋆_e X = X + L⋆X/1! + L⋆²X/2! + …`
 /// (Definition 6.1), truncated at `terms` Taylor terms.
 pub fn conv_exp(kernel: &ConvKernel, x: &[f64], h: usize, w: usize, terms: usize) -> Vec<f64> {
-    assert_eq!(kernel.c_in, kernel.c_out);
+    assert_eq!(
+        kernel.c_in, kernel.c_out,
+        "conv_exp needs a square kernel (c_in {} vs c_out {})",
+        kernel.c_in, kernel.c_out
+    );
+    assert_eq!(
+        x.len(),
+        kernel.c_in * h * w,
+        "conv_exp shape mismatch: input has {} elements, kernel expects c_in·h·w = {}·{}·{} = {}",
+        x.len(),
+        kernel.c_in,
+        h,
+        w,
+        kernel.c_in * h * w
+    );
     let mut acc = x.to_vec();
     let mut term = x.to_vec();
     let mut fact = 1.0;
@@ -351,6 +374,100 @@ mod tests {
                 assert_eq!(p.sigma[i * hw + s], dst * hw + s);
             }
         }
+    }
+
+    #[test]
+    fn channel_shuffle_perm_matches_plane_moves_rectangular() {
+        // The vec(X) permutation must equal moving channel planes
+        // wholesale — checked through Perm::apply_rows on genuinely
+        // rectangular H≠W grids (row/col mixups would cancel at H=W).
+        prop::check("ChShuffle perm == channel-plane relayout (H≠W)", 133, |rng| {
+            let c = prop::size_in(rng, 1, 5);
+            let h = prop::size_in(rng, 1, 4);
+            let mut w = prop::size_in(rng, 1, 4);
+            if w == h {
+                w = h + 1;
+            }
+            let hw = h * w;
+            let chperm = Perm::random(c, rng);
+            let p = channel_shuffle_perm(&chperm, h, w);
+            let x = Mat::randn(c * hw, prop::size_in(rng, 1, 3), 1.0, rng);
+            let got = p.apply_rows(&x);
+            for i in 0..c {
+                for s in 0..hw {
+                    for j in 0..x.cols {
+                        assert_eq!(
+                            got[(chperm.sigma[i] * hw + s, j)],
+                            x[(i * hw + s, j)],
+                            "channel {i} spatial {s} col {j}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn conv_transpose_is_the_adjoint() {
+        // ⟨Mx, y⟩ = ⟨x, Mᵀy⟩ with Mᵀ realized by ConvTranspose — on
+        // rectangular c_out≠c_in kernels and H≠W grids.
+        prop::check("⟨Mx, y⟩ = ⟨x, ConvTranspose(M) y⟩", 134, |rng| {
+            let c_in = prop::size_in(rng, 1, 3);
+            let c_out = prop::size_in(rng, 1, 3);
+            let h = prop::size_in(rng, 2, 4);
+            let mut w = prop::size_in(rng, 2, 5);
+            if w == h {
+                w += 1;
+            }
+            let kern = ConvKernel::randn(c_out, c_in, 3, 1.0, rng);
+            let x: Vec<f64> = (0..c_in * h * w).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..c_out * h * w).map(|_| rng.normal()).collect();
+            let mx = kern.conv(&x, h, w);
+            let mty = kern.conv_transpose().conv(&y, h, w);
+            let lhs: f64 = mx.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
+            let rhs: f64 = x.iter().zip(mty.iter()).map(|(a, b)| a * b).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-8 * (1.0 + lhs.abs().max(rhs.abs())),
+                "{lhs} vs {rhs}"
+            );
+        });
+    }
+
+    #[test]
+    fn skew_symmetrized_kernel_is_anti_self_adjoint() {
+        // L = M - ConvTranspose(M) ⇒ ⟨Lx, y⟩ = -⟨x, Ly⟩ on random inputs
+        // — the operator-level face of the Eq. 2 skew-symmetry.
+        prop::check("⟨Lx, y⟩ = -⟨x, Ly⟩ after skew_symmetrize", 135, |rng| {
+            let c = prop::size_in(rng, 1, 3);
+            let (h, w) = (3, 4);
+            let kern = ConvKernel::randn(c, c, 3, 1.0, rng).skew_symmetrize();
+            let x: Vec<f64> = (0..c * h * w).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..c * h * w).map(|_| rng.normal()).collect();
+            let lx = kern.conv(&x, h, w);
+            let ly = kern.conv(&y, h, w);
+            let lhs: f64 = lx.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
+            let rhs: f64 = x.iter().zip(ly.iter()).map(|(a, b)| a * b).sum();
+            assert!(
+                (lhs + rhs).abs() < 1e-8 * (1.0 + lhs.abs().max(rhs.abs())),
+                "{lhs} vs -{rhs}"
+            );
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "conv shape mismatch")]
+    fn conv_input_shape_is_a_hard_assert() {
+        // Must report the offending dimensions in release builds too
+        // (matching the kernel-subsystem matmul convention).
+        let kern = ConvKernel::zeros(2, 3, 3);
+        kern.conv(&[0.0; 10], 2, 2); // expects 3·2·2 = 12
+    }
+
+    #[test]
+    #[should_panic(expected = "conv_exp shape mismatch")]
+    fn conv_exp_input_shape_is_a_hard_assert() {
+        let kern = ConvKernel::zeros(2, 2, 3);
+        conv_exp(&kern, &[0.0; 7], 2, 2, 3); // expects 2·2·2 = 8
     }
 
     #[test]

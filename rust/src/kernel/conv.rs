@@ -1,0 +1,929 @@
+//! Direct GS-SOC orthogonal-convolution runtime — the production path for
+//! the paper's third empirical pillar (§6.3, Eq. 2): same-padded
+//! multichannel convolution applied in `O(c_out·(c_in/g)·k²·H·W)` per
+//! image, the truncated convolution exponential streamed term by term, and
+//! channel shuffles as plane relayouts — without ever materializing the
+//! `(c·H·W)²` doubly-Toeplitz matrix that `gs/conv.rs` builds.
+//!
+//! The exact dense code in [`crate::gs::conv`] survives solely as the
+//! property-test oracle: every path here is tested (with shrinking)
+//! against `ConvKernel::to_matrix` / `mat_exp`, including rectangular
+//! `H≠W` grids, `c_out≠c_in` kernels and grouped structure.
+//!
+//! Layout convention: an image batch is a [`Mat`] of shape
+//! `[c·h·w, t]` — each column is one `vec(X)` in the row-major
+//! `[channel, row, col]` order `gs/conv.rs` uses, so the serving engine's
+//! `[d, batch]` activations flow through unchanged.
+//!
+//! Two kernels, chosen by [`KernelCtx::plan_conv`]:
+//!
+//! - **direct** — a fused AXPY loop: for each `(o, i, p, q)` tap and each
+//!   valid output row `y`, one contiguous `f · x[row]`-accumulate over the
+//!   `(x_end-x_start)·t` span (taps with zero weight are skipped, which
+//!   makes skew/grouped kernels cheaper for free). Best for small
+//!   channel counts where im2col's patch copy dominates.
+//! - **im2col** — per group, gather patches into a `[gi·k², h·w·t]`
+//!   matrix and hand `[go, gi·k²] · patches` to the cache-blocked GEMM
+//!   dispatcher, which also provides row-panel parallelism for large
+//!   shapes.
+//!
+//! Rust ↔ Pallas/JAX counterpart (DESIGN.md §Perf): `conv_apply` ↔
+//! `lipconvnet._grouped_conv` (XLA `conv_general_dilated`);
+//! `conv_exp_apply` ↔ `lipconvnet.conv_exp`; `channel_shuffle_apply` ↔
+//! `lipconvnet.channel_shuffle`; [`GsSocLayer::apply`] ↔
+//! `lipconvnet.gs_soc_layer`.
+
+use crate::gs::conv::ConvKernel;
+use crate::gs::{perm_kn, Perm};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+use super::dispatch::{ConvKind, KernelCtx};
+
+/// A grouped same-padded conv kernel stored densely *within* groups:
+/// row-major `[c_out, c_in/groups, k, k]` — output channel `o` (in group
+/// `g = o / (c_out/groups)`) couples only to the `c_in/groups` input
+/// channels of group `g`. `groups == 1` is a plain dense kernel.
+#[derive(Clone, Debug)]
+pub struct GroupedConv {
+    pub groups: usize,
+    pub c_out: usize,
+    pub c_in: usize,
+    pub k: usize,
+    /// Row-major `[c_out, c_in/groups, k, k]`.
+    pub w: Vec<f64>,
+}
+
+impl GroupedConv {
+    pub fn zeros(c_out: usize, c_in: usize, k: usize, groups: usize) -> GroupedConv {
+        assert!(k % 2 == 1, "same-padded conv needs odd kernel (got k={k})");
+        assert!(
+            groups > 0 && c_out % groups == 0 && c_in % groups == 0,
+            "groups {groups} must divide c_out {c_out} and c_in {c_in}"
+        );
+        GroupedConv {
+            groups,
+            c_out,
+            c_in,
+            k,
+            w: vec![0.0; c_out * (c_in / groups) * k * k],
+        }
+    }
+
+    pub fn randn(
+        c_out: usize,
+        c_in: usize,
+        k: usize,
+        groups: usize,
+        std: f64,
+        rng: &mut Rng,
+    ) -> GroupedConv {
+        let mut c = GroupedConv::zeros(c_out, c_in, k, groups);
+        for v in c.w.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        c
+    }
+
+    /// From a flat f32 slab (adapter parameters), row-major
+    /// `[c_out, c_in/groups, k, k]`.
+    pub fn from_f32(
+        c_out: usize,
+        c_in: usize,
+        k: usize,
+        groups: usize,
+        raw: &[f32],
+    ) -> GroupedConv {
+        let mut c = GroupedConv::zeros(c_out, c_in, k, groups);
+        assert_eq!(
+            raw.len(),
+            c.w.len(),
+            "grouped conv slab has {} floats, expected c_out·(c_in/groups)·k² = {}",
+            raw.len(),
+            c.w.len()
+        );
+        for (a, &b) in c.w.iter_mut().zip(raw.iter()) {
+            *a = b as f64;
+        }
+        c
+    }
+
+    /// Input channels per group.
+    #[inline]
+    pub fn gi(&self) -> usize {
+        self.c_in / self.groups
+    }
+
+    /// Output channels per group.
+    #[inline]
+    pub fn go(&self) -> usize {
+        self.c_out / self.groups
+    }
+
+    /// Tap weight for output channel `o` and the `il`-th input channel of
+    /// `o`'s group.
+    #[inline]
+    pub fn at(&self, o: usize, il: usize, p: usize, q: usize) -> f64 {
+        self.w[((o * self.gi() + il) * self.k + p) * self.k + q]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, o: usize, il: usize, p: usize, q: usize) -> &mut f64 {
+        let gi = self.gi();
+        &mut self.w[((o * gi + il) * self.k + p) * self.k + q]
+    }
+
+    /// Keep only the within-group taps of a dense [`ConvKernel`] (the
+    /// grouped projection; cross-group taps are discarded).
+    pub fn from_dense(kern: &ConvKernel, groups: usize) -> GroupedConv {
+        let mut out = GroupedConv::zeros(kern.c_out, kern.c_in, kern.k, groups);
+        let (gi, go) = (out.gi(), out.go());
+        for g in 0..groups {
+            for ol in 0..go {
+                for il in 0..gi {
+                    for p in 0..kern.k {
+                        for q in 0..kern.k {
+                            *out.at_mut(g * go + ol, il, p, q) =
+                                kern.at(g * go + ol, g * gi + il, p, q);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Expand to the dense `[c_out, c_in, k, k]` form (cross-group taps
+    /// zero) — the bridge to the `gs/conv.rs` oracle.
+    pub fn to_dense(&self) -> ConvKernel {
+        let mut out = ConvKernel::zeros(self.c_out, self.c_in, self.k);
+        let (gi, go) = (self.gi(), self.go());
+        for g in 0..self.groups {
+            for ol in 0..go {
+                for il in 0..gi {
+                    for p in 0..self.k {
+                        for q in 0..self.k {
+                            *out.at_mut(g * go + ol, g * gi + il, p, q) =
+                                self.at(g * go + ol, il, p, q);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The paper's `ConvTranspose` restricted to the grouped support
+    /// (which is closed under it): `M'_{i,o,p,q} = M_{o,i,k-1-p,k-1-q}`.
+    /// The Eq. 2 matrix of the result is exactly the transpose of this
+    /// kernel's Eq. 2 matrix.
+    pub fn conv_transpose(&self) -> GroupedConv {
+        let mut out = GroupedConv::zeros(self.c_in, self.c_out, self.k, self.groups);
+        let (gi, go) = (self.gi(), self.go());
+        for g in 0..self.groups {
+            for ol in 0..go {
+                for il in 0..gi {
+                    for p in 0..self.k {
+                        for q in 0..self.k {
+                            *out.at_mut(
+                                g * gi + il,
+                                ol,
+                                self.k - 1 - p,
+                                self.k - 1 - q,
+                            ) = self.at(g * go + ol, il, p, q);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// SOC parametrization `L = M - ConvTranspose(M)` (requires
+    /// `c_in == c_out`): the Eq. 2 matrix becomes skew-symmetric, so the
+    /// convolution exponential is orthogonal.
+    pub fn skew_symmetrize(&self) -> GroupedConv {
+        assert_eq!(
+            self.c_in, self.c_out,
+            "skew_symmetrize needs a square kernel (c_in {} vs c_out {})",
+            self.c_in, self.c_out
+        );
+        let t = self.conv_transpose();
+        let mut out = self.clone();
+        for (a, b) in out.w.iter_mut().zip(t.w.iter()) {
+            *a -= b;
+        }
+        out
+    }
+}
+
+/// Same-padded grouped convolution of a `[c_in·h·w, t]` batch, dispatched
+/// between the direct AXPY loop and im2col-into-blocked-GEMM by
+/// [`KernelCtx::plan_conv`].
+pub fn conv_apply(kern: &GroupedConv, x: &Mat, h: usize, w: usize, ctx: &KernelCtx) -> Mat {
+    assert_eq!(
+        x.rows,
+        kern.c_in * h * w,
+        "conv apply shape mismatch: X has {} rows, kernel expects c_in·h·w = {}·{}·{} = {}",
+        x.rows,
+        kern.c_in,
+        h,
+        w,
+        kern.c_in * h * w
+    );
+    match ctx.plan_conv(kern.c_out, kern.gi(), kern.k, h * w, x.cols) {
+        ConvKind::Direct => conv_direct(kern, x, h, w),
+        ConvKind::Im2col => conv_im2col(kern, x, h, w, ctx),
+    }
+}
+
+/// Valid output range along one axis for tap offset `d = p - half`:
+/// output coordinate `y` contributes iff `0 <= y + d < extent`.
+#[inline]
+fn tap_range(d: isize, extent: usize) -> (usize, usize) {
+    let lo = (-d).max(0) as usize;
+    let hi = ((extent as isize - d).min(extent as isize)).max(0) as usize;
+    (lo, hi)
+}
+
+/// Direct path: one contiguous AXPY per `(o, i, p, q, y)` — for fixed
+/// output row `y` the valid columns `x_start..x_end` are a contiguous
+/// span of both the input and the output buffer, `(x_end-x_start)·t`
+/// elements long. Zero taps are skipped (skew kernels have a zero center
+/// tap by construction).
+fn conv_direct(kern: &GroupedConv, x: &Mat, h: usize, w: usize) -> Mat {
+    let (gi, go) = (kern.gi(), kern.go());
+    let hw = h * w;
+    let t = x.cols;
+    let k = kern.k;
+    let half = (k - 1) / 2;
+    let mut out = Mat::zeros(kern.c_out * hw, t);
+    for g in 0..kern.groups {
+        for ol in 0..go {
+            let o = g * go + ol;
+            for il in 0..gi {
+                let ci = g * gi + il;
+                for p in 0..k {
+                    let dy = p as isize - half as isize;
+                    let (y0, y1) = tap_range(dy, h);
+                    for q in 0..k {
+                        let f = kern.at(o, il, p, q);
+                        if f == 0.0 {
+                            continue;
+                        }
+                        let dx = q as isize - half as isize;
+                        let (x0, x1) = tap_range(dx, w);
+                        if x1 <= x0 {
+                            continue;
+                        }
+                        let n = (x1 - x0) * t;
+                        for y in y0..y1 {
+                            let sy = (y as isize + dy) as usize;
+                            let sx0 = (x0 as isize + dx) as usize;
+                            let src0 = (ci * hw + sy * w + sx0) * t;
+                            let dst0 = (o * hw + y * w + x0) * t;
+                            let src = &x.data[src0..src0 + n];
+                            let dst = &mut out.data[dst0..dst0 + n];
+                            for (a, &b) in dst.iter_mut().zip(src.iter()) {
+                                *a += f * b;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col path: per group, gather patches into `[gi·k², h·w·t]` (zeros at
+/// the padding border) and run `[go, gi·k²] · patches` through the GEMM
+/// dispatcher. The group's output block `[go, h·w·t]` is row-major
+/// exactly the `go·h·w` output rows, so it lands with one memcpy.
+fn conv_im2col(kern: &GroupedConv, x: &Mat, h: usize, w: usize, ctx: &KernelCtx) -> Mat {
+    let (gi, go) = (kern.gi(), kern.go());
+    let hw = h * w;
+    let t = x.cols;
+    let k = kern.k;
+    let half = (k - 1) / 2;
+    let mut out = Mat::zeros(kern.c_out * hw, t);
+    let kslab = gi * k * k;
+    for g in 0..kern.groups {
+        // Per-call copy of the group's kernel slab (go·gi·k² doubles) —
+        // a 1/(hw·t) fraction of the GEMM's go·gi·k²·hw·t flops, so a
+        // FusedPlan-style amortization is not warranted here.
+        let kg = Mat {
+            rows: go,
+            cols: kslab,
+            data: kern.w[g * go * kslab..(g + 1) * go * kslab].to_vec(),
+        };
+        let mut pg = Mat::zeros(kslab, hw * t);
+        for il in 0..gi {
+            let ci = g * gi + il;
+            for p in 0..k {
+                let dy = p as isize - half as isize;
+                let (y0, y1) = tap_range(dy, h);
+                for q in 0..k {
+                    let dx = q as isize - half as isize;
+                    let (x0, x1) = tap_range(dx, w);
+                    if x1 <= x0 {
+                        continue;
+                    }
+                    let r = (il * k + p) * k + q;
+                    let n = (x1 - x0) * t;
+                    for y in y0..y1 {
+                        let sy = (y as isize + dy) as usize;
+                        let sx0 = (x0 as isize + dx) as usize;
+                        let src0 = (ci * hw + sy * w + sx0) * t;
+                        let dst0 = r * hw * t + (y * w + x0) * t;
+                        pg.data[dst0..dst0 + n].copy_from_slice(&x.data[src0..src0 + n]);
+                    }
+                }
+            }
+        }
+        let yg = ctx.gemm(&kg, &pg);
+        out.data[g * go * hw * t..(g + 1) * go * hw * t].copy_from_slice(&yg.data);
+    }
+    out
+}
+
+/// Single-image convenience: `x: [c_in, h, w]` flat → `[c_out, h, w]`
+/// flat (the `vec(X)` convention of `gs/conv.rs`).
+pub fn conv_image(kern: &GroupedConv, x: &[f64], h: usize, w: usize, ctx: &KernelCtx) -> Vec<f64> {
+    let xm = Mat::from_rows(x.len(), 1, x);
+    conv_apply(kern, &xm, h, w, ctx).data
+}
+
+/// Batched NCHW convenience: `x: [n, c_in, h, w]` flat → `[n, c_out, h,
+/// w]` flat. Internally transposes to the `[c·h·w, n]` column layout the
+/// kernels stream over, so one dispatch serves the whole batch.
+pub fn conv_apply_nchw(
+    kern: &GroupedConv,
+    x: &[f64],
+    n: usize,
+    h: usize,
+    w: usize,
+    ctx: &KernelCtx,
+) -> Vec<f64> {
+    let d_in = kern.c_in * h * w;
+    assert_eq!(
+        x.len(),
+        n * d_in,
+        "conv NCHW shape mismatch: input has {} elements, expected n·c_in·h·w = {}·{}·{}·{} = {}",
+        x.len(),
+        n,
+        kern.c_in,
+        h,
+        w,
+        n * d_in
+    );
+    let mut xm = Mat::zeros(d_in, n);
+    for j in 0..n {
+        for (i, &v) in x[j * d_in..(j + 1) * d_in].iter().enumerate() {
+            xm[(i, j)] = v;
+        }
+    }
+    let y = conv_apply(kern, &xm, h, w, ctx);
+    let d_out = kern.c_out * h * w;
+    let mut out = vec![0.0; n * d_out];
+    for j in 0..n {
+        for i in 0..d_out {
+            out[j * d_out + i] = y[(i, j)];
+        }
+    }
+    out
+}
+
+/// Streaming convolution exponential (Definition 6.1):
+/// `exp(L) X = X + LX/1! + L²X/2! + …` truncated at `terms`, applied as
+/// `terms` grouped conv passes — never forming `mat_exp` of the
+/// `(c·h·w)²` Eq. 2 matrix.
+pub fn conv_exp_apply(
+    kern: &GroupedConv,
+    x: &Mat,
+    h: usize,
+    w: usize,
+    terms: usize,
+    ctx: &KernelCtx,
+) -> Mat {
+    assert_eq!(
+        kern.c_in, kern.c_out,
+        "conv exponential needs a square kernel (c_in {} vs c_out {})",
+        kern.c_in, kern.c_out
+    );
+    assert_eq!(
+        x.rows,
+        kern.c_in * h * w,
+        "conv_exp shape mismatch: X has {} rows, kernel expects c_in·h·w = {}·{}·{} = {}",
+        x.rows,
+        kern.c_in,
+        h,
+        w,
+        kern.c_in * h * w
+    );
+    let mut acc = x.clone();
+    let mut term = x.clone();
+    for n in 1..=terms {
+        term = conv_apply(kern, &term, h, w, ctx);
+        let inv = 1.0 / n as f64;
+        for v in term.data.iter_mut() {
+            *v *= inv;
+        }
+        for (a, &b) in acc.data.iter_mut().zip(term.data.iter()) {
+            *a += b;
+        }
+    }
+    acc
+}
+
+/// Channel shuffle fast path: channel `i`'s `h·w` rows move wholesale to
+/// channel `chperm.sigma[i]` — one `h·w·t` memcpy per channel instead of
+/// a `(c·h·w)²` permutation-matrix product.
+pub fn channel_shuffle_apply(chperm: &Perm, x: &Mat, hw: usize) -> Mat {
+    assert_eq!(
+        x.rows,
+        chperm.n() * hw,
+        "channel shuffle shape mismatch: X has {} rows, perm expects c·h·w = {}·{} = {}",
+        x.rows,
+        chperm.n(),
+        hw,
+        chperm.n() * hw
+    );
+    let t = x.cols;
+    let plane = hw * t;
+    let mut out = Mat::zeros(x.rows, t);
+    for (i, &dst) in chperm.sigma.iter().enumerate() {
+        out.data[dst * plane..(dst + 1) * plane]
+            .copy_from_slice(&x.data[i * plane..(i + 1) * plane]);
+    }
+    out
+}
+
+/// One GS-SOC layer (§6.3, Eq. 3 factor): `P_out · exp(L) · P_in` with a
+/// grouped skew kernel `L` — applied in a single streaming pass (channel
+/// relayout in, truncated exponential through the grouped conv, relayout
+/// out), never materializing the dense operator.
+#[derive(Clone, Debug)]
+pub struct GsSocLayer {
+    /// Channel permutation applied before the exponential.
+    pub p_in: Perm,
+    /// Grouped, skew-symmetrized (square) conv kernel.
+    pub kern: GroupedConv,
+    /// Channel permutation applied after the exponential.
+    pub p_out: Perm,
+    pub h: usize,
+    pub w: usize,
+    /// Taylor terms of the truncated convolution exponential.
+    pub terms: usize,
+}
+
+impl GsSocLayer {
+    pub fn new(
+        p_in: Perm,
+        kern: GroupedConv,
+        p_out: Perm,
+        h: usize,
+        w: usize,
+        terms: usize,
+    ) -> GsSocLayer {
+        assert_eq!(
+            kern.c_in, kern.c_out,
+            "GS-SOC layer needs a square kernel (c_in {} vs c_out {})",
+            kern.c_in, kern.c_out
+        );
+        assert_eq!(p_in.n(), kern.c_in, "P_in size must match channel count");
+        assert_eq!(p_out.n(), kern.c_out, "P_out size must match channel count");
+        assert!(terms >= 1, "conv exponential needs at least one term");
+        GsSocLayer {
+            p_in,
+            kern,
+            p_out,
+            h,
+            w,
+            terms,
+        }
+    }
+
+    /// Random layer: grouped Gaussian kernel, skew-symmetrized; shuffles
+    /// are the paper's `P_(groups, c)` and its inverse.
+    pub fn random(
+        c: usize,
+        k: usize,
+        groups: usize,
+        h: usize,
+        w: usize,
+        terms: usize,
+        std: f64,
+        rng: &mut Rng,
+    ) -> GsSocLayer {
+        let kern = GroupedConv::randn(c, c, k, groups, std, rng).skew_symmetrize();
+        let p = perm_kn(groups, c);
+        GsSocLayer::new(p.clone(), kern, p.inverse(), h, w, terms)
+    }
+
+    /// Channel count.
+    pub fn c(&self) -> usize {
+        self.kern.c_in
+    }
+
+    /// Flat activation dimension `c·h·w`.
+    pub fn d(&self) -> usize {
+        self.c() * self.h * self.w
+    }
+
+    /// Apply to a `[c·h·w, t]` batch.
+    pub fn apply(&self, x: &Mat, ctx: &KernelCtx) -> Mat {
+        let hw = self.h * self.w;
+        let cur = if self.p_in.is_identity() {
+            conv_exp_apply(&self.kern, x, self.h, self.w, self.terms, ctx)
+        } else {
+            let shuffled = channel_shuffle_apply(&self.p_in, x, hw);
+            conv_exp_apply(&self.kern, &shuffled, self.h, self.w, self.terms, ctx)
+        };
+        if self.p_out.is_identity() {
+            cur
+        } else {
+            channel_shuffle_apply(&self.p_out, &cur, hw)
+        }
+    }
+
+    /// The exact adjoint layer: `(P_out exp(L) P_in)ᵀ =
+    /// P_inᵀ exp(Lᵀ) P_outᵀ`, with `Lᵀ` realized by [`GroupedConv::
+    /// conv_transpose`] (for a skew kernel, `Lᵀ = -L`). Because
+    /// `(Lⁿ)ᵀ = (Lᵀ)ⁿ`, the *truncated* series transposes term by term,
+    /// so `⟨apply(x), y⟩ = ⟨x, transposed().apply(y)⟩` holds exactly —
+    /// this is what the power-iteration certifier iterates.
+    pub fn transposed(&self) -> GsSocLayer {
+        GsSocLayer::new(
+            self.p_out.inverse(),
+            self.kern.conv_transpose(),
+            self.p_in.inverse(),
+            self.h,
+            self.w,
+            self.terms,
+        )
+    }
+
+    /// Dense oracle: the exact `d×d` matrix of this layer, assembled from
+    /// the `gs/conv.rs` Eq. 2 machinery with the *same* series truncation
+    /// as [`GsSocLayer::apply`] — used by the property tests and the
+    /// merge-path checks, never on the request path.
+    pub fn to_matrix(&self) -> Mat {
+        use crate::gs::conv::channel_shuffle_perm;
+        let d = self.d();
+        let m = self.kern.to_dense().to_matrix(self.h, self.w);
+        let mut acc = Mat::eye(d);
+        let mut term = Mat::eye(d);
+        for n in 1..=self.terms {
+            term = m.matmul(&term).scale(1.0 / n as f64);
+            acc = &acc + &term;
+        }
+        let pin = channel_shuffle_perm(&self.p_in, self.h, self.w);
+        let pout = channel_shuffle_perm(&self.p_out, self.h, self.w);
+        // P_out · (E · P_in): apply_cols is `A·P`, apply_rows is `P·A`.
+        pout.apply_rows(&pin.apply_cols(&acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::gemm::gemm_naive;
+    use crate::util::prop;
+
+    /// Context forcing the direct path.
+    fn direct_ctx() -> KernelCtx {
+        KernelCtx {
+            naive_below_flops: usize::MAX,
+            ..KernelCtx::default()
+        }
+    }
+
+    /// Context forcing the im2col path (and its GEMM dispatch).
+    fn im2col_ctx() -> KernelCtx {
+        KernelCtx {
+            naive_below_flops: 0,
+            ..KernelCtx::default()
+        }
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    struct ConvCase {
+        c_out: usize,
+        c_in: usize,
+        k: usize,
+        h: usize,
+        w: usize,
+        groups: usize,
+        t: usize,
+        seed: u64,
+    }
+
+    fn shrink_conv(c: &ConvCase) -> Vec<ConvCase> {
+        let mut out = Vec::new();
+        for t in prop::shrink_usize(c.t, 1) {
+            out.push(ConvCase { t, ..*c });
+        }
+        for h in prop::shrink_usize(c.h, 1) {
+            out.push(ConvCase { h, ..*c });
+        }
+        for w in prop::shrink_usize(c.w, 1) {
+            out.push(ConvCase { w, ..*c });
+        }
+        // Channel counts shrink toward `groups` (must stay divisible).
+        for f in prop::shrink_usize(c.c_out / c.groups, 1) {
+            out.push(ConvCase { c_out: f * c.groups, ..*c });
+        }
+        for f in prop::shrink_usize(c.c_in / c.groups, 1) {
+            out.push(ConvCase { c_in: f * c.groups, ..*c });
+        }
+        if c.k > 1 {
+            out.push(ConvCase { k: c.k - 2, ..*c });
+        }
+        out
+    }
+
+    fn gen_conv(rng: &mut Rng) -> ConvCase {
+        let groups = prop::size_in(rng, 1, 3);
+        ConvCase {
+            c_out: groups * prop::size_in(rng, 1, 3),
+            c_in: groups * prop::size_in(rng, 1, 3),
+            k: 2 * prop::size_in(rng, 0, 1) + 1, // 1 or 3
+            h: prop::size_in(rng, 1, 4),
+            w: prop::size_in(rng, 1, 5), // often ≠ h: rectangular grids
+            groups,
+            t: prop::size_in(rng, 1, 4),
+            seed: rng.next_u64(),
+        }
+    }
+
+    #[test]
+    fn direct_and_im2col_match_the_eq2_oracle() {
+        // Oracle: the exact doubly-Toeplitz matrix of gs/conv.rs times the
+        // batch, via the naive GEMM — independent of everything under test.
+        prop::check_shrunk(
+            "conv_apply == to_matrix · X (direct & im2col, grouped, H≠W)",
+            1301,
+            48,
+            gen_conv,
+            shrink_conv,
+            |c| {
+                let mut rng = Rng::new(c.seed);
+                let kern = GroupedConv::randn(c.c_out, c.c_in, c.k, c.groups, 1.0, &mut rng);
+                let x = Mat::randn(c.c_in * c.h * c.w, c.t, 1.0, &mut rng);
+                let want = gemm_naive(&kern.to_dense().to_matrix(c.h, c.w), &x);
+                for ctx in [direct_ctx(), im2col_ctx(), KernelCtx::default()] {
+                    let got = conv_apply(&kern, &x, c.h, c.w, &ctx);
+                    assert!(
+                        got.fro_dist(&want) < 1e-9,
+                        "plan {:?} diverged",
+                        ctx.plan_conv(c.c_out, c.c_in / c.groups, c.k, c.h * c.w, c.t)
+                    );
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn grouped_apply_matches_dense_grouped_kernel() {
+        prop::check_shrunk(
+            "grouped conv == dense kernel with cross-group taps zeroed",
+            1302,
+            32,
+            gen_conv,
+            shrink_conv,
+            |c| {
+                let mut rng = Rng::new(c.seed);
+                // Round-trip: a dense kernel, grouped-projected two ways.
+                let dense = ConvKernel::randn(c.c_out, c.c_in, c.k, 1.0, &mut rng);
+                let grouped = GroupedConv::from_dense(&dense, c.groups);
+                let x: Vec<f64> = (0..c.c_in * c.h * c.w).map(|_| rng.normal()).collect();
+                let want = dense.grouped(c.groups).conv(&x, c.h, c.w);
+                let xm = Mat::from_rows(x.len(), 1, &x);
+                let got = conv_apply(&grouped, &xm, c.h, c.w, &direct_ctx());
+                for (i, &v) in want.iter().enumerate() {
+                    assert!((got[(i, 0)] - v).abs() < 1e-10);
+                }
+            },
+        );
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    struct ExpCase {
+        c: usize,
+        k: usize,
+        groups: usize,
+        h: usize,
+        w: usize,
+        terms: usize,
+        seed: u64,
+    }
+
+    fn shrink_exp(c: &ExpCase) -> Vec<ExpCase> {
+        let mut out = Vec::new();
+        for f in prop::shrink_usize(c.c / c.groups, 1) {
+            out.push(ExpCase { c: f * c.groups, ..*c });
+        }
+        for h in prop::shrink_usize(c.h, 1) {
+            out.push(ExpCase { h, ..*c });
+        }
+        for w in prop::shrink_usize(c.w, 1) {
+            out.push(ExpCase { w, ..*c });
+        }
+        for terms in prop::shrink_usize(c.terms, 1) {
+            out.push(ExpCase { terms, ..*c });
+        }
+        out
+    }
+
+    #[test]
+    fn streaming_conv_exp_matches_truncated_dense_series() {
+        // Same truncation on both sides ⇒ agreement to rounding, for any
+        // kernel magnitude (no convergence assumption needed).
+        prop::check_shrunk(
+            "conv_exp_apply == Σ Mⁿ/n! · vec(X)",
+            1303,
+            32,
+            |rng| {
+                let groups = prop::size_in(rng, 1, 2);
+                ExpCase {
+                    c: groups * prop::size_in(rng, 1, 3),
+                    k: 3,
+                    groups,
+                    h: prop::size_in(rng, 1, 3),
+                    w: prop::size_in(rng, 1, 4),
+                    terms: prop::size_in(rng, 1, 6),
+                    seed: rng.next_u64(),
+                }
+            },
+            shrink_exp,
+            |c| {
+                let mut rng = Rng::new(c.seed);
+                let kern = GroupedConv::randn(c.c, c.c, c.k, c.groups, 0.5, &mut rng);
+                let d = c.c * c.h * c.w;
+                let x = Mat::randn(d, 2, 1.0, &mut rng);
+                let m = kern.to_dense().to_matrix(c.h, c.w);
+                let mut acc = Mat::eye(d);
+                let mut term = Mat::eye(d);
+                for n in 1..=c.terms {
+                    term = gemm_naive(&m, &term).scale(1.0 / n as f64);
+                    acc = &acc + &term;
+                }
+                let want = gemm_naive(&acc, &x);
+                for ctx in [direct_ctx(), im2col_ctx()] {
+                    let got = conv_exp_apply(&kern, &x, c.h, c.w, c.terms, &ctx);
+                    assert!(got.fro_dist(&want) < 1e-8 * (1.0 + want.fro_norm()));
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn channel_shuffle_matches_perm_on_vec() {
+        // Fast path == the dense channel_shuffle_perm on vec(X), at
+        // rectangular H≠W sizes.
+        prop::check_shrunk(
+            "channel_shuffle_apply == P_shuffle · X (H≠W)",
+            1304,
+            48,
+            |rng| {
+                let c = prop::size_in(rng, 1, 6);
+                (
+                    c,
+                    prop::size_in(rng, 1, 4),
+                    prop::size_in(rng, 1, 5),
+                    prop::size_in(rng, 1, 3),
+                    rng.next_u64(),
+                )
+            },
+            |&(c, h, w, t, seed)| {
+                let mut out = Vec::new();
+                for cc in prop::shrink_usize(c, 1) {
+                    out.push((cc, h, w, t, seed));
+                }
+                for hh in prop::shrink_usize(h, 1) {
+                    out.push((c, hh, w, t, seed));
+                }
+                for ww in prop::shrink_usize(w, 1) {
+                    out.push((c, h, ww, t, seed));
+                }
+                out
+            },
+            |&(c, h, w, t, seed)| {
+                let mut rng = Rng::new(seed);
+                let chperm = Perm::random(c, &mut rng);
+                let x = Mat::randn(c * h * w, t, 1.0, &mut rng);
+                let got = channel_shuffle_apply(&chperm, &x, h * w);
+                let want = crate::gs::conv::channel_shuffle_perm(&chperm, h, w).apply_rows(&x);
+                assert!(got.fro_dist(&want) < 1e-15);
+            },
+        );
+    }
+
+    #[test]
+    fn gs_soc_layer_matches_its_dense_matrix() {
+        prop::check_named("GsSocLayer apply == to_matrix · X", 1305, 24, |rng| {
+            let groups = prop::size_in(rng, 1, 2);
+            let c = groups * 2 * prop::size_in(rng, 1, 2);
+            let (h, w) = (prop::size_in(rng, 1, 3), prop::size_in(rng, 1, 3));
+            let layer = GsSocLayer::random(c, 3, groups, h, w, prop::size_in(rng, 1, 5), 0.4, rng);
+            let x = Mat::randn(layer.d(), 2, 1.0, rng);
+            let want = gemm_naive(&layer.to_matrix(), &x);
+            for ctx in [direct_ctx(), im2col_ctx()] {
+                assert!(layer.apply(&x, &ctx).fro_dist(&want) < 1e-9 * (1.0 + want.fro_norm()));
+            }
+        });
+    }
+
+    #[test]
+    fn transposed_layer_is_the_exact_adjoint() {
+        prop::check_named("⟨Lx, y⟩ == ⟨x, Lᵀy⟩ for GS-SOC layers", 1306, 24, |rng| {
+            let groups = prop::size_in(rng, 1, 2);
+            let c = groups * prop::size_in(rng, 1, 3);
+            let (h, w) = (prop::size_in(rng, 1, 3), prop::size_in(rng, 2, 4));
+            let layer = GsSocLayer::random(c, 3, groups, h, w, 4, 0.6, rng);
+            let ctx = KernelCtx::default();
+            let x = Mat::randn(layer.d(), 1, 1.0, rng);
+            let y = Mat::randn(layer.d(), 1, 1.0, rng);
+            let lx = layer.apply(&x, &ctx);
+            let lty = layer.transposed().apply(&y, &ctx);
+            let lhs: f64 = lx.data.iter().zip(y.data.iter()).map(|(a, b)| a * b).sum();
+            let rhs: f64 = x.data.iter().zip(lty.data.iter()).map(|(a, b)| a * b).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs().max(rhs.abs())),
+                "{lhs} vs {rhs}"
+            );
+        });
+    }
+
+    #[test]
+    fn gs_soc_jacobian_is_orthogonal_at_converged_truncation() {
+        // Small kernel norm + enough terms ⇒ the truncated exponential of
+        // the skew Eq. 2 matrix is orthogonal to certifier tolerance.
+        let mut rng = Rng::new(9);
+        let layer = GsSocLayer::random(8, 3, 2, 3, 4, 18, 0.05, &mut rng);
+        let j = layer.to_matrix();
+        assert!(j.is_orthogonal(1e-8), "err={}", j.orthogonality_error());
+    }
+
+    #[test]
+    fn conv_transpose_matches_dense_transpose() {
+        prop::check("grouped conv_transpose == Eq2 matrix transpose", 1307, |rng| {
+            let groups = prop::size_in(rng, 1, 2);
+            let kern = GroupedConv::randn(
+                groups * prop::size_in(rng, 1, 2),
+                groups * prop::size_in(rng, 1, 2),
+                3,
+                groups,
+                1.0,
+                rng,
+            );
+            let (h, w) = (2, 3);
+            let mt = kern.conv_transpose().to_dense().to_matrix(h, w);
+            assert!(mt.fro_dist(&kern.to_dense().to_matrix(h, w).t()) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn nchw_batch_equals_per_image_convolution() {
+        prop::check("conv_apply_nchw == per-image conv", 1308, |rng| {
+            let groups = prop::size_in(rng, 1, 2);
+            let kern = GroupedConv::randn(
+                groups * prop::size_in(rng, 1, 2),
+                groups * prop::size_in(rng, 1, 2),
+                3,
+                groups,
+                1.0,
+                rng,
+            );
+            let (h, w) = (prop::size_in(rng, 1, 3), prop::size_in(rng, 1, 4));
+            let n = prop::size_in(rng, 1, 3);
+            let d_in = kern.c_in * h * w;
+            let d_out = kern.c_out * h * w;
+            let x: Vec<f64> = (0..n * d_in).map(|_| rng.normal()).collect();
+            let ctx = KernelCtx::default();
+            let batched = conv_apply_nchw(&kern, &x, n, h, w, &ctx);
+            assert_eq!(batched.len(), n * d_out);
+            for j in 0..n {
+                let single = conv_image(&kern, &x[j * d_in..(j + 1) * d_in], h, w, &ctx);
+                for (a, b) in batched[j * d_out..(j + 1) * d_out].iter().zip(single.iter()) {
+                    assert!((a - b).abs() < 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "conv apply shape mismatch")]
+    fn conv_apply_shape_mismatch_is_a_hard_assert() {
+        let kern = GroupedConv::zeros(2, 2, 3, 1);
+        conv_apply(&kern, &Mat::zeros(7, 1), 2, 2, &KernelCtx::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "channel shuffle shape mismatch")]
+    fn shuffle_shape_mismatch_is_a_hard_assert() {
+        let p = Perm::identity(3);
+        channel_shuffle_apply(&p, &Mat::zeros(10, 1), 4);
+    }
+}

@@ -1,0 +1,298 @@
+//! `gsoft conv-bench` — sweep the direct GS-SOC convolution runtime
+//! across `(c, k, H·W, groups, batch)` configs and build the
+//! machine-readable `BENCH_conv.json` record.
+//!
+//! The record builder lives in the library (not `main.rs`) so the
+//! integration suite can assert the determinism contract: same seed ⇒
+//! bit-identical records modulo the timing fields ([`strip_timing`]).
+//! Everything except the `timings` sub-objects is a pure function of
+//! `(opts, ctx)` — configs, dimensions, and the numeric `checksum`s of
+//! the dispatched conv and GS-SOC outputs (the kernels are deterministic
+//! even on the parallel row-panel paths, which split by rows without
+//! reassociating any accumulation).
+
+use std::time::Duration;
+
+use crate::linalg::Mat;
+use crate::report::{fmt, Table};
+use crate::util::bench::{black_box, Bench};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::conv::{conv_apply, conv_exp_apply, GsSocLayer};
+use super::dispatch::KernelCtx;
+
+/// Taylor terms used for the exponential timers (SOC uses ~6 in practice).
+pub const BENCH_TERMS: usize = 6;
+
+/// Dense materialized-operator baseline is only timed below this flat
+/// dimension (the `(c·H·W)²` matrix is the thing the runtime exists to
+/// avoid; at d=1024 it is already 8 MB).
+pub const DENSE_BASELINE_MAX_D: usize = 1024;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConvBenchOpts {
+    pub smoke: bool,
+    pub seed: u64,
+    /// Override the per-timer measurement window (tests use a few ms).
+    pub measure: Option<Duration>,
+}
+
+/// One sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvConfig {
+    pub c: usize,
+    pub k: usize,
+    pub h: usize,
+    pub w: usize,
+    pub groups: usize,
+    pub batch: usize,
+}
+
+/// The sweep grid. `--smoke` runs one small config (the CI gate); the
+/// full grid covers small/large channel counts, both conv dispatch
+/// paths, grouped and ungrouped kernels.
+pub fn grid(smoke: bool) -> Vec<ConvConfig> {
+    if smoke {
+        return vec![ConvConfig {
+            c: 8,
+            k: 3,
+            h: 8,
+            w: 8,
+            groups: 2,
+            batch: 4,
+        }];
+    }
+    let mut g = Vec::new();
+    // One small config keeps the dense materialized-operator baseline
+    // (d ≤ DENSE_BASELINE_MAX_D) in the full sweep, so the headline
+    // direct-vs-dense speedup column is never empty outside --smoke.
+    g.push(ConvConfig {
+        c: 8,
+        k: 3,
+        h: 8,
+        w: 8,
+        groups: 2,
+        batch: 8,
+    });
+    for c in [16usize, 32] {
+        for hw in [16usize, 32] {
+            for groups in [1usize, 4] {
+                g.push(ConvConfig {
+                    c,
+                    k: 3,
+                    h: hw,
+                    w: hw,
+                    groups,
+                    batch: 8,
+                });
+            }
+        }
+    }
+    g
+}
+
+/// Run the sweep: returns the human table and the `BENCH_conv.json`
+/// record. Pure apart from timing — see the module docs.
+pub fn record(opts: &ConvBenchOpts, ctx: &KernelCtx) -> (Table, Json) {
+    let mut bench = Bench::new("conv_bench");
+    if let Some(m) = opts.measure {
+        // Tests shorten both windows this way instead of mutating the
+        // process-global GSOFT_BENCH_QUICK (setenv is not thread-safe in
+        // a threaded test binary).
+        bench.measure_time(m);
+        bench.warmup_time(m);
+    }
+    let mut rng = Rng::new(opts.seed);
+    let mut table = Table::new(
+        "conv-bench — direct GS-SOC convolution runtime vs materialized dense operator",
+        &[
+            "config",
+            "direct p50 (µs)",
+            "im2col p50 (µs)",
+            "dispatch p50 (µs)",
+            "conv_exp p50 (µs)",
+            "gs-soc p50 (µs)",
+            "dense p50 (µs)",
+            "direct speedup vs dense",
+        ],
+    );
+    let direct_ctx = KernelCtx {
+        naive_below_flops: usize::MAX,
+        ..*ctx
+    };
+    let im2col_ctx = KernelCtx {
+        naive_below_flops: 0,
+        ..*ctx
+    };
+    let mut configs = Vec::new();
+    for cfg in grid(opts.smoke) {
+        let d = cfg.c * cfg.h * cfg.w;
+        let layer = GsSocLayer::random(
+            cfg.c,
+            cfg.k,
+            cfg.groups,
+            cfg.h,
+            cfg.w,
+            BENCH_TERMS,
+            0.2 / (cfg.k * cfg.k) as f64,
+            &mut rng,
+        );
+        let kern = layer.kern.clone();
+        let x = Mat::randn(d, cfg.batch, 1.0, &mut rng);
+        let tag = format!(
+            "c{}_k{}_{}x{}_g{}_t{}",
+            cfg.c, cfg.k, cfg.h, cfg.w, cfg.groups, cfg.batch
+        );
+        let direct = bench
+            .bench(&format!("conv_direct/{tag}"), || {
+                black_box(conv_apply(&kern, &x, cfg.h, cfg.w, &direct_ctx))
+            })
+            .clone();
+        let im2col = bench
+            .bench(&format!("conv_im2col/{tag}"), || {
+                black_box(conv_apply(&kern, &x, cfg.h, cfg.w, &im2col_ctx))
+            })
+            .clone();
+        let dispatch = bench
+            .bench(&format!("conv_dispatch/{tag}"), || {
+                black_box(conv_apply(&kern, &x, cfg.h, cfg.w, ctx))
+            })
+            .clone();
+        let cexp = bench
+            .bench(&format!("conv_exp/{tag}"), || {
+                black_box(conv_exp_apply(&kern, &x, cfg.h, cfg.w, BENCH_TERMS, ctx))
+            })
+            .clone();
+        let soc = bench
+            .bench(&format!("gs_soc_layer/{tag}"), || {
+                black_box(layer.apply(&x, ctx))
+            })
+            .clone();
+        // Materialized-operator baseline: the dense (c·h·w)² matrix the
+        // old gs/conv.rs path would build, applied with the dispatched
+        // GEMM (materialization cost excluded — apply cost only).
+        let dense = (d <= DENSE_BASELINE_MAX_D).then(|| {
+            let q = kern.to_dense().to_matrix(cfg.h, cfg.w);
+            bench
+                .bench(&format!("dense_apply/{tag}"), || black_box(ctx.gemm(&q, &x)))
+                .clone()
+        });
+        let speedup = dense
+            .as_ref()
+            .map(|s| s.p50_ns / direct.p50_ns.max(1.0));
+
+        // Deterministic output checksums (timing-independent).
+        let checksum: f64 = conv_apply(&kern, &x, cfg.h, cfg.w, ctx).data.iter().sum();
+        let soc_checksum: f64 = layer.apply(&x, ctx).data.iter().sum();
+
+        table.row(vec![
+            tag,
+            fmt(direct.p50_ns / 1e3, 1),
+            fmt(im2col.p50_ns / 1e3, 1),
+            fmt(dispatch.p50_ns / 1e3, 1),
+            fmt(cexp.p50_ns / 1e3, 1),
+            fmt(soc.p50_ns / 1e3, 1),
+            dense
+                .as_ref()
+                .map(|s| fmt(s.p50_ns / 1e3, 1))
+                .unwrap_or_else(|| "-".into()),
+            speedup
+                .map(|s| format!("{}x", fmt(s, 2)))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+        configs.push(Json::obj(vec![
+            ("c", Json::Num(cfg.c as f64)),
+            ("k", Json::Num(cfg.k as f64)),
+            ("h", Json::Num(cfg.h as f64)),
+            ("w", Json::Num(cfg.w as f64)),
+            ("groups", Json::Num(cfg.groups as f64)),
+            ("batch", Json::Num(cfg.batch as f64)),
+            ("d", Json::Num(d as f64)),
+            ("checksum", Json::Num(checksum)),
+            ("gs_soc_checksum", Json::Num(soc_checksum)),
+            (
+                "timings",
+                Json::obj(vec![
+                    ("direct", direct.to_json()),
+                    ("im2col", im2col.to_json()),
+                    ("dispatch", dispatch.to_json()),
+                    ("conv_exp", cexp.to_json()),
+                    ("gs_soc", soc.to_json()),
+                    (
+                        "dense",
+                        dense.as_ref().map(|s| s.to_json()).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "direct_speedup_vs_dense",
+                        speedup.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                ]),
+            ),
+        ]));
+    }
+    bench.finish();
+    let record = Json::obj(vec![
+        ("smoke", Json::Bool(opts.smoke)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("terms", Json::Num(BENCH_TERMS as f64)),
+        ("workers", Json::Num(ctx.workers as f64)),
+        ("configs", Json::Arr(configs)),
+    ]);
+    (table, record)
+}
+
+/// Drop the timing fields from a bench record: every `timings` sub-object
+/// (and any `wall_s`), recursively. What remains must be bit-identical
+/// across runs with the same seed — the determinism contract the
+/// integration suite enforces on `BENCH_*.json` records.
+pub fn strip_timing(j: &Json) -> Json {
+    match j {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .filter(|(k, _)| k.as_str() != "timings" && k.as_str() != "wall_s")
+                .map(|(k, v)| (k.clone(), strip_timing(v)))
+                .collect(),
+        ),
+        Json::Arr(v) => Json::Arr(v.iter().map(strip_timing).collect()),
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shapes_are_valid() {
+        for smoke in [true, false] {
+            for cfg in grid(smoke) {
+                assert!(cfg.k % 2 == 1);
+                assert_eq!(cfg.c % cfg.groups, 0);
+                assert!(cfg.batch >= 1);
+            }
+        }
+        assert_eq!(grid(true).len(), 1, "smoke runs exactly one config");
+    }
+
+    #[test]
+    fn strip_timing_removes_only_timing_fields() {
+        let j = Json::obj(vec![
+            ("keep", Json::Num(1.0)),
+            ("wall_s", Json::Num(2.0)),
+            (
+                "configs",
+                Json::Arr(vec![Json::obj(vec![
+                    ("d", Json::Num(64.0)),
+                    ("timings", Json::obj(vec![("p50", Json::Num(5.0))])),
+                ])]),
+            ),
+        ]);
+        let s = strip_timing(&j);
+        assert!(s.get("keep").is_some());
+        assert!(s.get("wall_s").is_none());
+        let cfg = &s.get("configs").unwrap().as_arr().unwrap()[0];
+        assert!(cfg.get("d").is_some());
+        assert!(cfg.get("timings").is_none());
+    }
+}

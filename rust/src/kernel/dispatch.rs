@@ -31,6 +31,16 @@ pub enum GemmKind {
     BlockedParallel,
 }
 
+/// Which convolution kernel a shape dispatches to (see
+/// [`crate::kernel::conv`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvKind {
+    /// Fused AXPY loop over taps — no patch materialization, zero-skip.
+    Direct,
+    /// Patch gather into the cache-blocked (optionally parallel) GEMM.
+    Im2col,
+}
+
 /// Kernel-dispatch context: tile shape, dispatch thresholds, worker cap.
 #[derive(Clone, Copy, Debug)]
 pub struct KernelCtx {
@@ -86,6 +96,34 @@ impl KernelCtx {
             1
         };
         gemm::gemv(a, x, workers)
+    }
+
+    /// Pick the convolution path for a grouped same-padded conv of
+    /// `c_out` total output channels, `c_in_per_group` input channels per
+    /// group, a `k×k` kernel, `hw` spatial positions and `t` batch
+    /// columns. Small products keep the direct AXPY loop (im2col's patch
+    /// copy would dominate); large ones gather patches once and ride the
+    /// blocked GEMM's register tiling and row-panel parallelism. The
+    /// total multiply-add count `c_out·(c_in/g)·k²·hw·t` plays the role
+    /// `m·k·n` plays for [`KernelCtx::plan_gemm`].
+    pub fn plan_conv(
+        &self,
+        c_out: usize,
+        c_in_per_group: usize,
+        k: usize,
+        hw: usize,
+        t: usize,
+    ) -> ConvKind {
+        let flops = c_out
+            .saturating_mul(c_in_per_group)
+            .saturating_mul(k * k)
+            .saturating_mul(hw)
+            .saturating_mul(t);
+        if flops < self.naive_below_flops {
+            ConvKind::Direct
+        } else {
+            ConvKind::Im2col
+        }
     }
 
     /// Worker count for a fused block-diagonal apply over `t` RHS columns.
@@ -145,6 +183,15 @@ pub fn ctx() -> &'static KernelCtx {
 mod tests {
     use super::*;
     use crate::kernel::gemm::gemm_naive;
+
+    #[test]
+    fn conv_plan_respects_thresholds() {
+        let c = KernelCtx::default();
+        // 4·4·9·64·4 ≈ 37k flops — below the 64³ naive threshold.
+        assert_eq!(c.plan_conv(4, 4, 3, 64, 4), ConvKind::Direct);
+        // 64·64·9·1024·32 ≈ 1.2G flops — im2col + blocked GEMM.
+        assert_eq!(c.plan_conv(64, 64, 3, 1024, 32), ConvKind::Im2col);
+    }
 
     #[test]
     fn plan_respects_thresholds() {

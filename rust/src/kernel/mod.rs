@@ -11,6 +11,13 @@
 //!   with the `P_(k,n)` relayouts folded in as gathers/scatters
 //!   ([`fused_apply`]), two-pass [`gs_apply`], per-stage [`chain_apply`],
 //!   batched multi-RHS variants, and the permutation relayouts
+//! - [`conv`] — the direct GS-SOC orthogonal-convolution runtime:
+//!   same-padded grouped conv (direct AXPY loop / im2col-into-blocked-GEMM
+//!   chosen by [`KernelCtx::plan_conv`]), the streaming convolution
+//!   exponential, channel-shuffle plane relayouts, and the one-pass
+//!   [`GsSocLayer`] (`P_out · exp(grouped skew conv) · P_in`)
+//! - [`convbench`] — the `gsoft conv-bench` sweep (deterministic record
+//!   builder, reused by the integration determinism test)
 //! - [`dispatch`] — [`KernelCtx`]: per-shape naive/blocked/parallel
 //!   dispatch, tile autotuning, and the process-wide default [`ctx`]
 //!
@@ -24,11 +31,17 @@
 //! dense `to_dense().matmul(..)` reference, including non-divisible edge
 //! tiles.
 
+pub mod conv;
+pub mod convbench;
 pub mod dispatch;
 pub mod fused;
 pub mod gemm;
 
-pub use dispatch::{ctx, GemmKind, KernelCtx};
+pub use conv::{
+    channel_shuffle_apply, conv_apply, conv_apply_nchw, conv_exp_apply, conv_image, GroupedConv,
+    GsSocLayer,
+};
+pub use dispatch::{ctx, ConvKind, GemmKind, KernelCtx};
 pub use fused::{
     chain_apply, chain_apply_batch, fused_apply, gs_apply, gs_apply_batch, permute_cols,
     permute_rows, FusedPlan, GsOp,

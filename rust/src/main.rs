@@ -12,6 +12,7 @@
 //! gsoft perms
 //! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8]
 //! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json]
+//! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json]
 //! gsoft merge-demo
 //! gsoft list     # artifacts in the registry
 //! gsoft all      # every experiment, in order
@@ -84,6 +85,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "serve-bench" => serve_bench(args)?,
         "kernel-bench" => kernel_bench(args)?,
+        "conv-bench" => conv_bench(args)?,
         "merge-demo" => merge_demo(args)?,
         "compress-demo" => compress_demo(args)?,
         "list" => {
@@ -502,6 +504,47 @@ fn kernel_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Direct GS-SOC convolution runtime sweep: for each (c, k, H·W, groups,
+/// batch) config, time the direct AXPY kernel, the im2col-into-blocked-
+/// GEMM kernel, the KernelCtx-dispatched conv, the streaming convolution
+/// exponential and the full GS-SOC layer apply against the materialized
+/// dense `(c·H·W)²` operator (where small enough to build), then write a
+/// machine-readable `BENCH_conv.json` perf record. `--smoke` runs one
+/// small config with short measurement windows (the CI gate).
+fn conv_bench(args: &Args) -> Result<()> {
+    use gsoft::kernel::convbench::{record, ConvBenchOpts};
+    use gsoft::kernel::KernelCtx;
+    use gsoft::report::emit_json_record;
+
+    let smoke = args.flag("smoke");
+    if smoke {
+        // Short warmup/measurement windows; must be set before Bench::new
+        // reads it (same convention as kernel-bench).
+        std::env::set_var("GSOFT_BENCH_QUICK", "1");
+    }
+    let seed = args.opt_u64("seed", 7)?;
+    let out_path = args.opt_or("out", "BENCH_conv.json").to_string();
+    let ctx = if smoke {
+        KernelCtx::autotuned(64, 16)
+    } else {
+        KernelCtx::autotuned(256, 32)
+    };
+    println!(
+        "[conv-bench] autotuned tile {:?}, {} workers; sweeping the direct GS-SOC conv runtime",
+        ctx.tile, ctx.workers
+    );
+    let opts = ConvBenchOpts {
+        smoke,
+        seed,
+        measure: smoke.then_some(std::time::Duration::from_millis(60)),
+    };
+    let (table, rec) = record(&opts, &ctx);
+    table.emit("conv_bench")?;
+    emit_json_record(std::path::Path::new(&out_path), &rec)?;
+    println!("[conv-bench] record is deterministic modulo 'timings' fields (same seed ⇒ same checksums)");
+    Ok(())
+}
+
 /// Non-orthogonal GS compression (the concluding remarks' direction):
 /// project a pretrained attention weight onto the GS class at several
 /// block sizes and compare against budget-matched truncated SVD.
@@ -566,6 +609,10 @@ Utilities:
   kernel-bench  CPU kernel sweep over (d, b, m, batch): fused
                 group-and-shuffle apply vs dense merged GEMM; writes
                 BENCH_kernels.json   [--smoke --seed 7 --out PATH]
+  conv-bench    direct GS-SOC conv runtime sweep over (c, k, HxW,
+                groups, batch): direct/im2col/conv_exp/GS-SOC layer vs
+                materialized dense operator; writes BENCH_conv.json
+                [--smoke --seed 7 --out PATH]
   list          list compiled artifacts
 
 Common options: --steps N --pretrain-steps N --eval-batches N --lr X

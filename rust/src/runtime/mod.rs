@@ -5,7 +5,12 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! Artifacts are compiled once and cached in the [`Runtime`] registry;
 //! train loops re-enter through [`Executable::run`] with host tensors.
+//!
+//! [`lipnet`] is the artifact-free sibling: the 1-Lipschitz GS-SOC
+//! network as a pure-Rust runtime type executing through the direct
+//! convolution kernels, with a power-iteration Lipschitz certifier.
 
+pub mod lipnet;
 pub mod meta;
 pub mod tensor;
 
@@ -15,6 +20,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
+pub use lipnet::{group_sort, LipschitzNet};
 pub use meta::{ArtifactMeta, TensorMeta};
 pub use tensor::Tensor;
 

@@ -108,6 +108,143 @@ impl<T> MicroBatcher<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
+
+    /// A replayable op sequence: pushes (tenant, at offset ms) and
+    /// deadline flushes, at non-decreasing times.
+    #[derive(Debug, Clone)]
+    struct BatcherCase {
+        max_batch: usize,
+        /// `(tenant, at_ms, is_flush)` — a flush op calls `flush_expired`.
+        ops: Vec<(TenantId, u64, bool)>,
+    }
+
+    fn shrink_batcher(c: &BatcherCase) -> Vec<BatcherCase> {
+        let mut out = Vec::new();
+        for max_batch in prop::shrink_usize(c.max_batch, 1) {
+            out.push(BatcherCase {
+                max_batch,
+                ops: c.ops.clone(),
+            });
+        }
+        if !c.ops.is_empty() {
+            let half = c.ops.len() / 2;
+            out.push(BatcherCase {
+                max_batch: c.max_batch,
+                ops: c.ops[..half].to_vec(),
+            });
+            out.push(BatcherCase {
+                max_batch: c.max_batch,
+                ops: c.ops[half..].to_vec(),
+            });
+            let mut tail = c.ops.clone();
+            tail.remove(0);
+            out.push(BatcherCase {
+                max_batch: c.max_batch,
+                ops: tail,
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn random_traffic_never_drops_duplicates_or_misflushes() {
+        // Conservation + flush invariants under arbitrary interleavings of
+        // pushes and deadline flushes:
+        //   * size flushes return exactly max_batch same-tenant items, in
+        //     FIFO order;
+        //   * deadline flushes only return batches aged ≥ max_wait, and
+        //     drain *every* expired batch;
+        //   * across the whole run + shutdown, every pushed item comes
+        //     back exactly once.
+        prop::check_shrunk(
+            "micro-batcher conservation",
+            601,
+            48,
+            |rng| {
+                let n = prop::size_in(rng, 1, 30);
+                let mut at = 0u64;
+                let ops = (0..n)
+                    .map(|_| {
+                        at += rng.below(4) as u64;
+                        (rng.below(3) as TenantId, at, rng.flip(0.25))
+                    })
+                    .collect();
+                BatcherCase {
+                    max_batch: prop::size_in(rng, 1, 4),
+                    ops,
+                }
+            },
+            shrink_batcher,
+            |c| {
+                let max_wait = Duration::from_millis(5);
+                let mut b: MicroBatcher<usize> = MicroBatcher::new(c.max_batch, max_wait);
+                let t0 = Instant::now();
+                let mut emitted: Vec<usize> = Vec::new();
+                let mut tenant_of: Vec<TenantId> = Vec::new();
+                let check = |batch: &Batch<usize>, size_flush: bool,
+                             tenant_of: &[TenantId]| {
+                    assert!(!batch.items.is_empty(), "empty batch flushed");
+                    assert!(batch.items.len() <= c.max_batch, "oversized batch");
+                    if size_flush {
+                        assert_eq!(
+                            batch.items.len(),
+                            c.max_batch,
+                            "size flush must return a full batch"
+                        );
+                    }
+                    for pair in batch.items.windows(2) {
+                        assert!(pair[0] < pair[1], "batch not FIFO: {:?}", batch.items);
+                    }
+                    for &id in &batch.items {
+                        assert_eq!(tenant_of[id], batch.tenant, "foreign item in batch");
+                    }
+                };
+                for &(tenant, at_ms, is_flush) in &c.ops {
+                    let now = t0 + Duration::from_millis(at_ms);
+                    if is_flush {
+                        for batch in b.flush_expired(now) {
+                            assert!(
+                                now.duration_since(batch.opened_at) >= max_wait,
+                                "flushed a batch younger than max_wait"
+                            );
+                            check(&batch, false, &tenant_of);
+                            emitted.extend(batch.items.iter().copied());
+                        }
+                        assert!(
+                            b.flush_expired(now).is_empty(),
+                            "flush_expired left an expired batch behind"
+                        );
+                    } else {
+                        let id = tenant_of.len();
+                        tenant_of.push(tenant);
+                        if let Some(batch) = b.push(tenant, id, now) {
+                            assert_eq!(batch.tenant, tenant);
+                            check(&batch, true, &tenant_of);
+                            emitted.extend(batch.items.iter().copied());
+                        }
+                    }
+                }
+                assert_eq!(
+                    emitted.len() + b.pending_items(),
+                    tenant_of.len(),
+                    "items lost before shutdown"
+                );
+                for batch in b.flush_all() {
+                    check(&batch, false, &tenant_of);
+                    emitted.extend(batch.items.iter().copied());
+                }
+                assert_eq!(b.pending_items(), 0, "flush_all left items behind");
+                let mut sorted = emitted.clone();
+                sorted.sort_unstable();
+                assert_eq!(
+                    sorted,
+                    (0..tenant_of.len()).collect::<Vec<_>>(),
+                    "dropped or duplicated item (emitted {emitted:?})"
+                );
+            },
+        );
+    }
 
     #[test]
     fn flushes_on_size() {

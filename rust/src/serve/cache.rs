@@ -190,6 +190,125 @@ impl MergedCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
+
+    /// One cache op: which tenant, what to do, and (for inserts) a size
+    /// class — 0: small (a quarter of the budget fits four), 1: half the
+    /// budget, 2: oversized (must be refused).
+    #[derive(Debug, Clone)]
+    struct CacheCase {
+        ops: Vec<(TenantId, u8, u8)>,
+    }
+
+    fn shrink_cache(c: &CacheCase) -> Vec<CacheCase> {
+        let mut out = Vec::new();
+        if !c.ops.is_empty() {
+            let half = c.ops.len() / 2;
+            out.push(CacheCase {
+                ops: c.ops[..half].to_vec(),
+            });
+            out.push(CacheCase {
+                ops: c.ops[half..].to_vec(),
+            });
+            let mut tail = c.ops.clone();
+            tail.remove(0);
+            out.push(CacheCase { ops: tail });
+        }
+        out
+    }
+
+    #[test]
+    fn random_ops_agree_with_a_reference_lru_model() {
+        // Model-based property: a straight-line Vec LRU (front = oldest)
+        // replayed alongside the real cache. After every op the live key
+        // set, byte accounting, and hit/miss/insert/eviction counters must
+        // match; the byte budget must never be exceeded.
+        const BUDGET: usize = 1 << 10; // 1 KiB = 256 f32s
+        let floats_of = |size_class: u8| match size_class {
+            0 => BUDGET / 4 / 4,     // 4 of these fit
+            1 => BUDGET / 2 / 4,     // 2 of these fit
+            _ => BUDGET / 4 + 1,     // bytes > budget: refused
+        };
+        prop::check_shrunk(
+            "MergedCache == reference LRU model",
+            701,
+            48,
+            |rng| CacheCase {
+                ops: (0..prop::size_in(rng, 1, 40))
+                    .map(|_| {
+                        (
+                            rng.below(5) as TenantId,
+                            rng.below(3) as u8, // 0: get, 1: insert, 2: peek
+                            rng.below(3) as u8, // size class
+                        )
+                    })
+                    .collect(),
+            },
+            shrink_cache,
+            |c| {
+                let mut cache = MergedCache::new(BUDGET);
+                // (tenant, bytes), most-recently-used last.
+                let mut lru: Vec<(TenantId, usize)> = Vec::new();
+                let mut want = CacheStats::default();
+                for &(tenant, op, size_class) in &c.ops {
+                    match op {
+                        0 => {
+                            let hit = cache.get(tenant).is_some();
+                            let pos = lru.iter().position(|&(t, _)| t == tenant);
+                            assert_eq!(hit, pos.is_some(), "get({tenant}) hit/miss");
+                            if let Some(p) = pos {
+                                let e = lru.remove(p);
+                                lru.push(e); // refresh recency
+                                want.hits += 1;
+                            } else {
+                                want.misses += 1;
+                            }
+                        }
+                        1 => {
+                            let floats = floats_of(size_class);
+                            let bytes = floats * 4;
+                            let inserted = cache.insert(tenant, model(floats));
+                            if bytes > BUDGET {
+                                assert!(!inserted, "oversized model must be refused");
+                                continue;
+                            }
+                            assert!(inserted);
+                            want.inserts += 1;
+                            if let Some(p) = lru.iter().position(|&(t, _)| t == tenant) {
+                                lru.remove(p); // replace: old bytes released first
+                            }
+                            let mut used: usize = lru.iter().map(|&(_, b)| b).sum();
+                            while used + bytes > BUDGET {
+                                let (_, evicted) = lru.remove(0); // strict LRU order
+                                used -= evicted;
+                                want.evictions += 1;
+                            }
+                            lru.push((tenant, bytes));
+                        }
+                        _ => {
+                            // peek must not touch recency or counters.
+                            let hit = cache.peek(tenant).is_some();
+                            assert_eq!(hit, lru.iter().any(|&(t, _)| t == tenant));
+                        }
+                    }
+                    // Invariants after every op.
+                    let used: usize = lru.iter().map(|&(_, b)| b).sum();
+                    assert!(
+                        cache.used_bytes() <= cache.budget_bytes(),
+                        "byte budget exceeded: {} > {}",
+                        cache.used_bytes(),
+                        cache.budget_bytes()
+                    );
+                    assert_eq!(cache.used_bytes(), used, "byte accounting drifted");
+                    assert_eq!(cache.len(), lru.len(), "live set size");
+                    for &(t, _) in &lru {
+                        assert!(cache.peek(t).is_some(), "model key {t} missing");
+                    }
+                    assert_eq!(cache.stats(), want, "counter drift");
+                }
+            },
+        );
+    }
 
     fn model(floats: usize) -> CachedModel {
         CachedModel {

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::merge::{gsoft_q, oft_q, AdapterKind};
+use crate::coordinator::merge::{conv_gssoc_layer, gsoft_q, oft_q, AdapterKind};
 use crate::gs::density::{chain_support, gs_min_factors, BitMatrix, PermFamily};
 use crate::gs::BlockDiag;
 use crate::kernel::{self, KernelCtx};
@@ -335,21 +335,43 @@ impl Engine {
         let policy = match opts.promote_after {
             Some(k) => Policy::fixed(k),
             None => {
-                // Infer the dominant block size from any registered GSOFT
-                // adapter; fall back to d/4.
-                let block = registry
+                let kinds: Vec<AdapterKind> = registry
                     .tenant_ids()
                     .into_iter()
-                    .find_map(|t| {
-                        registry.get(t).and_then(|e| match e.kind {
+                    .filter_map(|t| registry.get(t).map(|e| e.kind))
+                    .collect();
+                if kinds
+                    .iter()
+                    .all(|k| matches!(k, AdapterKind::ConvGsSoc { .. }))
+                    && !kinds.is_empty()
+                {
+                    // Conv-only registry: merging applies Q once to each of
+                    // W's d columns, factorized serving applies the same Q
+                    // once per request column — identical per-column cost,
+                    // so the break-even is d/B requests regardless of the
+                    // factor's nnz (the same cancellation as the Theorem-2
+                    // model below). The merged support is spatially banded
+                    // (k² taps widened by `terms` applications), not the
+                    // Theorem-2 dense guarantee, hence q_dense = false.
+                    let batch = opts.max_batch.div_ceil(2).max(1);
+                    Policy {
+                        promote_after: (d / batch).max(1) as u64,
+                        q_dense: false,
+                    }
+                } else {
+                    // Infer the dominant block size from any registered
+                    // GSOFT/OFT adapter; fall back to d/4.
+                    let block = kinds
+                        .iter()
+                        .find_map(|k| match k {
                             AdapterKind::Gsoft { block } | AdapterKind::Oft { block } => {
-                                Some(block)
+                                Some(*block)
                             }
-                            AdapterKind::Lora => None,
+                            AdapterKind::Lora | AdapterKind::ConvGsSoc { .. } => None,
                         })
-                    })
-                    .unwrap_or((d / 4).max(1));
-                Policy::from_cost_model(d, block, opts.max_batch.div_ceil(2))
+                        .unwrap_or((d / 4).max(1));
+                    Policy::from_cost_model(d, block, opts.max_batch.div_ceil(2))
+                }
             }
         };
 
@@ -500,6 +522,9 @@ enum LayerQ {
     Gs(kernel::GsOp),
     Block(BlockDiag),
     LowRank { a: Mat, b: Mat },
+    /// GS-SOC orthogonal conv: applied by the direct convolution runtime
+    /// (streaming exponential + channel-plane shuffles), never dense.
+    ConvGsSoc(kernel::GsSocLayer),
 }
 
 fn activate(m: &mut Mat) {
@@ -527,6 +552,7 @@ fn forward_factorized(sh: &Shared, ops: &[Option<LayerQ>], mut x: Mat) -> Mat {
             Some(LayerQ::Gs(op)) => op.apply(&base_y, ctx),
             Some(LayerQ::Block(bd)) => kernel::fused_apply(bd, None, None, &base_y, ctx),
             Some(LayerQ::LowRank { a, b }) => &base_y + &ctx.gemm(a, &ctx.gemm(b, &x)),
+            Some(LayerQ::ConvGsSoc(layer)) => layer.apply(&base_y, ctx),
             None => base_y,
         };
         x = y;
@@ -584,6 +610,28 @@ fn layer_q(entry: &AdapterEntry, layer: &str, d: usize) -> Result<Option<LayerQ>
             }
             let k_raw = entry.spec.view(&entry.params, &kname)?;
             Ok(Some(LayerQ::Block(oft_q(k_raw, d, block))))
+        }
+        AdapterKind::ConvGsSoc {
+            c,
+            k,
+            groups,
+            h,
+            w,
+            terms,
+        } => {
+            let sname = format!("{layer}.soc_k");
+            if entry.spec.locate(&sname).is_err() {
+                return Ok(None);
+            }
+            anyhow::ensure!(
+                c * h * w == d,
+                "conv_gssoc geometry c·h·w = {} does not match served dim {d}",
+                c * h * w
+            );
+            let raw = entry.spec.view(&entry.params, &sname)?;
+            Ok(Some(LayerQ::ConvGsSoc(conv_gssoc_layer(
+                raw, c, k, groups, h, w, terms,
+            ))))
         }
         AdapterKind::Lora => {
             let aname = format!("{layer}.lora_a");
@@ -845,6 +893,45 @@ mod tests {
         }
         let report = engine.finish();
         assert_eq!(report.metrics.merges, 4);
+    }
+
+    #[test]
+    fn conv_gssoc_tenant_agrees_across_serving_paths() {
+        use crate::serve::registry::synthetic_conv;
+        let reg = synthetic_conv(2, 2, 4, 3, 2, 2, 3, 13).unwrap();
+        let mut opts = quick_opts();
+        opts.promote_after = Some(2);
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        assert_eq!(d, 4 * 2 * 3);
+        let input: Vec<f32> = (0..d).map(|i| ((i * 3 % 7) as f32) * 0.1 - 0.3).collect();
+        let cold = engine.submit(0, input.clone()).unwrap().wait().unwrap();
+        assert_eq!(cold.path, ServePath::Factorized);
+        let merged = engine.submit(0, input.clone()).unwrap().wait().unwrap();
+        assert_eq!(merged.path, ServePath::ColdMerge);
+        for (a, b) in cold.output.iter().zip(merged.output.iter()) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "conv factorized {a} vs merged {b} must agree"
+            );
+        }
+        let hot = engine.submit(0, input).unwrap().wait().unwrap();
+        assert_eq!(hot.path, ServePath::CachedDense);
+        let report = engine.finish();
+        assert_eq!(report.metrics.merges, 1);
+    }
+
+    #[test]
+    fn conv_only_registry_derives_the_d_over_b_policy() {
+        use crate::serve::registry::synthetic_conv;
+        let reg = synthetic_conv(2, 1, 4, 3, 2, 2, 3, 14).unwrap(); // d = 24
+        let mut opts = quick_opts();
+        opts.promote_after = None;
+        opts.max_batch = 8; // expected batch 4 → break-even after 24/4 = 6
+        let engine = Engine::new(reg, opts).unwrap();
+        assert_eq!(engine.policy().promote_after, 6);
+        assert!(!engine.policy().q_dense, "conv merged support is banded, not dense");
+        engine.finish();
     }
 
     #[test]

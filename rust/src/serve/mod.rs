@@ -26,4 +26,4 @@ pub use engine::{
     Engine, EngineOpts, EngineReport, Handle, MetricsSnapshot, PathStats, Policy, ServeOutput,
     ServePath,
 };
-pub use registry::{synthetic, AdapterEntry, BaseModel, Registry, TenantId};
+pub use registry::{synthetic, synthetic_conv, AdapterEntry, BaseModel, Registry, TenantId};

@@ -151,6 +151,45 @@ impl Registry {
                         "tenant {tenant}: entry '{name}' does not belong to a LoRA adapter"
                     ),
                 },
+                AdapterKind::ConvGsSoc {
+                    c,
+                    k,
+                    groups,
+                    h,
+                    w,
+                    terms,
+                } => {
+                    anyhow::ensure!(
+                        suffix == "soc_k",
+                        "tenant {tenant}: entry '{name}' does not belong to a conv_gssoc adapter"
+                    );
+                    anyhow::ensure!(
+                        k % 2 == 1,
+                        "tenant {tenant}: same-padded conv needs an odd kernel (got k={k})"
+                    );
+                    anyhow::ensure!(
+                        terms >= 1,
+                        "tenant {tenant}: conv exponential needs at least one Taylor term"
+                    );
+                    anyhow::ensure!(
+                        groups > 0 && c % groups == 0,
+                        "tenant {tenant}: groups {groups} must divide channels {c}"
+                    );
+                    anyhow::ensure!(
+                        c * h * w == din,
+                        "tenant {tenant}: adapted layer '{layer}' has input dim {din}, \
+                         but the conv geometry gives c·h·w = {}·{}·{} = {}",
+                        c,
+                        h,
+                        w,
+                        c * h * w
+                    );
+                    anyhow::ensure!(
+                        *shape == [c, c / groups, k, k],
+                        "tenant {tenant}: '{name}' has shape {shape:?}, expected {:?}",
+                        [c, c / groups, k, k]
+                    );
+                }
             }
         }
         self.tenants.write().unwrap().insert(tenant, entry);
@@ -275,6 +314,73 @@ pub fn synthetic(
                 kind,
                 params: Arc::new(params),
                 spec,
+            },
+        )?;
+    }
+    Ok(registry)
+}
+
+/// Taylor terms used for synthetic GS-SOC conv tenants (matches the SOC
+/// practice of a short series; the small synthetic kernel magnitudes keep
+/// it converged).
+pub const SYNTHETIC_CONV_TERMS: usize = 8;
+
+/// Build a synthetic registry of GS-SOC orthogonal-convolution tenants
+/// (§6.3 served as adapters): `layers` square `d×d` base matrices with
+/// `d = c·h·w`, and one `ConvGsSoc` adapter per tenant holding a raw
+/// grouped kernel slab per layer.
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_conv(
+    tenants: usize,
+    layers: usize,
+    c: usize,
+    k: usize,
+    groups: usize,
+    h: usize,
+    w: usize,
+    seed: u64,
+) -> Result<Registry> {
+    anyhow::ensure!(groups > 0 && c % groups == 0, "groups must divide c");
+    anyhow::ensure!(k % 2 == 1, "same-padded conv needs odd k");
+    let d = c * h * w;
+    let mut rng = Rng::new(seed);
+
+    let mut base_entries: Vec<(String, Vec<usize>)> = synthetic_layer_names(layers)
+        .into_iter()
+        .map(|n| (n, vec![d, d]))
+        .collect();
+    base_entries.push(("head".to_string(), vec![d, 2]));
+    let base_spec = FlatSpec {
+        entries: base_entries,
+    };
+    let base: Vec<f32> = rng.normal_vec(base_spec.size(), (1.0 / d as f32).sqrt());
+    let registry = Registry::new(base, base_spec)?;
+
+    let spec = Arc::new(FlatSpec {
+        entries: synthetic_layer_names(layers)
+            .into_iter()
+            .map(|n| (format!("{n}.soc_k"), vec![c, c / groups, k, k]))
+            .collect(),
+    });
+    let kind = AdapterKind::ConvGsSoc {
+        c,
+        k,
+        groups,
+        h,
+        w,
+        terms: SYNTHETIC_CONV_TERMS,
+    };
+    for t in 0..tenants as TenantId {
+        let mut trng = rng.fork(t);
+        // Small kernel magnitude: keeps the truncated exponential
+        // converged so factorized and merged serving agree tightly.
+        let params = trng.normal_vec(spec.size(), 0.05);
+        registry.register(
+            t,
+            AdapterEntry {
+                kind,
+                params: Arc::new(params),
+                spec: Arc::clone(&spec),
             },
         )?;
     }
@@ -407,6 +513,106 @@ mod tests {
             spec,
         };
         assert!(reg.register(9, bad).is_err(), "lora_b without lora_a");
+        assert!(!reg.contains(9));
+    }
+
+    #[test]
+    fn synthetic_conv_registry_builds_and_merges() {
+        let reg = synthetic_conv(3, 2, 4, 3, 2, 2, 3, 21).unwrap();
+        assert_eq!(reg.len(), 3);
+        let d = 4 * 2 * 3;
+        for t in reg.tenant_ids() {
+            let merged = reg.merge(t).unwrap();
+            assert_eq!(merged.len(), reg.base().weights.len());
+            assert!(merged.iter().all(|x| x.is_finite()));
+            // Orthogonal conv Q preserves each layer's singular values.
+            let spec = &reg.base().spec;
+            let w0 = Mat::from_f32(d, d, spec.view(&reg.base().weights, "layer0.w").unwrap());
+            let w1 = Mat::from_f32(d, d, spec.view(&merged, "layer0.w").unwrap());
+            let s0 = crate::linalg::singular_values(&w0);
+            let s1 = crate::linalg::singular_values(&w1);
+            for (a, b) in s0.iter().zip(s1.iter()) {
+                assert!((a - b).abs() < 1e-3, "tenant {t}: {a} vs {b}");
+            }
+            // Head never adapted.
+            assert_eq!(
+                spec.view(&merged, "head").unwrap(),
+                spec.view(&reg.base().weights, "head").unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn register_rejects_malformed_conv_gssoc_entries() {
+        use crate::coordinator::merge::AdapterKind;
+        let reg = synthetic_conv(1, 1, 4, 3, 2, 2, 3, 22).unwrap();
+        let good_kind = AdapterKind::ConvGsSoc {
+            c: 4,
+            k: 3,
+            groups: 2,
+            h: 2,
+            w: 3,
+            terms: 8,
+        };
+        let slab = 4 * 2 * 3 * 3;
+
+        // Geometry c·h·w ≠ layer dim.
+        let spec = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.soc_k".to_string(), vec![4, 2, 3, 3])],
+        });
+        let bad = AdapterEntry {
+            kind: AdapterKind::ConvGsSoc {
+                c: 4,
+                k: 3,
+                groups: 2,
+                h: 3,
+                w: 3,
+                terms: 8,
+            },
+            params: Arc::new(vec![0.0; slab]),
+            spec: Arc::clone(&spec),
+        };
+        assert!(reg.register(9, bad).is_err(), "c·h·w = 36 vs layer dim 24");
+
+        // Slab shaped for the wrong group count.
+        let wrong = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.soc_k".to_string(), vec![4, 4, 3, 3])],
+        });
+        let bad = AdapterEntry {
+            kind: good_kind,
+            params: Arc::new(vec![0.0; 4 * 4 * 3 * 3]),
+            spec: wrong,
+        };
+        assert!(reg.register(9, bad).is_err(), "slab for groups=1, kind says 2");
+
+        // Foreign suffix under a conv kind.
+        let foreign = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.gs_l".to_string(), vec![4, 2, 3, 3])],
+        });
+        let bad = AdapterEntry {
+            kind: good_kind,
+            params: Arc::new(vec![0.0; slab]),
+            spec: foreign,
+        };
+        assert!(reg.register(9, bad).is_err(), "gs_l slab under a conv kind");
+
+        // Even kernel size.
+        let spec = Arc::new(FlatSpec {
+            entries: vec![("layer0.w.soc_k".to_string(), vec![4, 2, 2, 2])],
+        });
+        let bad = AdapterEntry {
+            kind: AdapterKind::ConvGsSoc {
+                c: 4,
+                k: 2,
+                groups: 2,
+                h: 2,
+                w: 3,
+                terms: 8,
+            },
+            params: Arc::new(vec![0.0; 4 * 2 * 2 * 2]),
+            spec,
+        };
+        assert!(reg.register(9, bad).is_err(), "even kernel size");
         assert!(!reg.contains(9));
     }
 }

@@ -88,6 +88,14 @@ impl Bench {
         self
     }
 
+    /// Override the warmup window. Lets threaded test binaries shorten
+    /// runs without the process-global `GSOFT_BENCH_QUICK` env mutation
+    /// (setenv races with concurrent getenv).
+    pub fn warmup_time(&mut self, d: Duration) -> &mut Self {
+        self.warmup = d;
+        self
+    }
+
     /// Run one benchmark case. `f` is the unit of work; its return value is
     /// black-boxed to prevent the optimizer from deleting the work.
     pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, f: F) -> &Summary {

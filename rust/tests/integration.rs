@@ -263,6 +263,142 @@ fn serving_engine_end_to_end_zipf_workload() {
 }
 
 #[test]
+fn gs_soc_scenario_random_kernel_to_orthogonal_jacobian() {
+    // End-to-end GS-SOC scenario, artifact-free: random grouped kernel →
+    // skew-symmetrize → streaming conv_exp through the direct runtime →
+    // the Jacobian agrees with the exact Eq. 2 `to_matrix` oracle and is
+    // orthogonal at converged truncation.
+    use gsoft::gs::conv::mat_exp;
+    use gsoft::kernel::{conv_exp_apply, GroupedConv, KernelCtx};
+
+    let ctx = KernelCtx::default();
+    let mut rng = Rng::new(71);
+    for &(c, k, groups, h, w) in &[(8usize, 3usize, 2usize, 3usize, 4usize), (6, 3, 3, 4, 3)] {
+        let kern = GroupedConv::randn(c, c, k, groups, 0.03, &mut rng).skew_symmetrize();
+        let d = c * h * w;
+        let x = Mat::randn(d, 3, 1.0, &mut rng);
+        let got = conv_exp_apply(&kern, &x, h, w, 18, &ctx);
+        // Oracle: dense matrix exponential of the exact Eq. 2 matrix.
+        let m = kern.to_dense().to_matrix(h, w);
+        let j = mat_exp(&m, 24);
+        assert!(
+            j.is_orthogonal(1e-8),
+            "skew Eq.2 exponential must be orthogonal: err={}",
+            j.orthogonality_error()
+        );
+        assert!(
+            got.fro_dist(&j.matmul(&x)) < 1e-7 * (1.0 + got.fro_norm()),
+            "streaming conv_exp diverged from the dense oracle"
+        );
+    }
+}
+
+#[test]
+fn gs_soc_layer_and_lipschitz_net_certify() {
+    // Full GS-SOC layers (shuffle → exp → shuffle) against their dense
+    // matrices, then a LipschitzNet stack certified ≤ 1 + 1e-6 by the
+    // power-iteration bound and empirically non-expansive.
+    use gsoft::kernel::{GsSocLayer, KernelCtx};
+    use gsoft::runtime::LipschitzNet;
+
+    let ctx = KernelCtx::default();
+    let mut rng = Rng::new(72);
+    let layer = GsSocLayer::random(8, 3, 2, 4, 3, 16, 0.03, &mut rng);
+    let x = Mat::randn(layer.d(), 2, 1.0, &mut rng);
+    let want = layer.to_matrix().matmul(&x);
+    assert!(layer.apply(&x, &ctx).fro_dist(&want) < 1e-9 * (1.0 + want.fro_norm()));
+
+    let net = LipschitzNet::random(3, 8, 3, 2, 4, 4, 16, 0.02, 99);
+    let bound = net.lipschitz_bound(10, 5, &ctx);
+    assert!(bound <= 1.0 + 1e-6, "certified bound {bound} exceeds 1");
+    assert!(bound >= 1.0 - 1e-3, "degenerate bound {bound}");
+    let a = Mat::randn(net.d(), 1, 1.0, &mut rng);
+    let b = Mat::randn(net.d(), 1, 1.0, &mut rng);
+    let num = (&net.forward(&a, &ctx) - &net.forward(&b, &ctx)).fro_norm();
+    let den = (&a - &b).fro_norm();
+    assert!(num <= den * (1.0 + 1e-6), "forward expanded: {num} vs {den}");
+}
+
+#[test]
+fn serving_engine_round_trips_a_conv_gssoc_tenant() {
+    // Serve-engine round trip for the ConvGsSoc adapter kind: the same
+    // tenant must agree across factorized, cold-merge and cached paths,
+    // and hot traffic must end on the cached path.
+    use gsoft::serve::{synthetic_conv, Engine, EngineOpts, ServePath};
+
+    let reg = synthetic_conv(3, 2, 4, 3, 2, 3, 3, 55).unwrap();
+    let engine = Engine::new(
+        reg,
+        EngineOpts {
+            workers: 2,
+            max_batch: 4,
+            max_wait: std::time::Duration::from_micros(200),
+            poll_interval: std::time::Duration::from_micros(200),
+            promote_after: Some(2),
+            ..EngineOpts::default()
+        },
+    )
+    .unwrap();
+    let d = engine.input_dim();
+    assert_eq!(d, 4 * 3 * 3);
+    let input: Vec<f32> = (0..d).map(|i| ((i * 5 % 11) as f32) * 0.05 - 0.2).collect();
+    let mut outputs = Vec::new();
+    let mut paths = Vec::new();
+    for _ in 0..4 {
+        let out = engine.submit(1, input.clone()).unwrap().wait().unwrap();
+        assert_eq!(out.output.len(), d);
+        assert!(out.output.iter().all(|v| v.is_finite()));
+        paths.push(out.path);
+        outputs.push(out.output);
+    }
+    assert_eq!(paths[0], ServePath::Factorized);
+    assert_eq!(paths[1], ServePath::ColdMerge);
+    assert_eq!(*paths.last().unwrap(), ServePath::CachedDense);
+    for out in &outputs[1..] {
+        for (a, b) in out.iter().zip(outputs[0].iter()) {
+            assert!((a - b).abs() < 1e-3, "serving paths disagree: {a} vs {b}");
+        }
+    }
+    let report = engine.finish();
+    assert_eq!(report.metrics.requests, 4);
+    assert_eq!(report.metrics.merges, 1);
+}
+
+#[test]
+fn conv_bench_record_is_deterministic_modulo_timing() {
+    // Same seed ⇒ bit-identical BENCH_conv.json content once the timing
+    // fields are stripped — configs, dimensions and numeric output
+    // checksums included (the kernels are deterministic even on the
+    // parallel paths).
+    use gsoft::kernel::convbench::{record, strip_timing, ConvBenchOpts};
+    use gsoft::kernel::KernelCtx;
+
+    // `measure` shortens both bench windows (no process-global env
+    // mutation — setenv races with getenv in a threaded test binary).
+    let opts = ConvBenchOpts {
+        smoke: true,
+        seed: 9,
+        measure: Some(std::time::Duration::from_millis(8)),
+    };
+    let ctx = KernelCtx::default();
+    let (_, r1) = record(&opts, &ctx);
+    let (_, r2) = record(&opts, &ctx);
+    assert_eq!(
+        strip_timing(&r1),
+        strip_timing(&r2),
+        "conv-bench record must be deterministic modulo timings"
+    );
+    // The stripped record still carries the meaningful payload.
+    let cfgs = strip_timing(&r1);
+    let cfgs = cfgs.get("configs").unwrap().as_arr().unwrap();
+    assert!(!cfgs.is_empty());
+    for c in cfgs {
+        assert!(c.get("checksum").unwrap().as_f64().unwrap().is_finite());
+        assert!(c.get("timings").is_none(), "timings must be stripped");
+    }
+}
+
+#[test]
 fn dn_predict_shapes_and_determinism() {
     let Some(rt) = runtime() else { return };
     let exe = rt.load("dn_gsoft8_predict").unwrap();
