@@ -55,6 +55,7 @@ fn main() {
         CachedModel {
             flat: Arc::new(merged.clone()),
             layers: layer_mats.clone(),
+            params_crc: 0,
         },
     );
     bench.bench("cache_hit_lookup", || black_box(cache.get(0)));

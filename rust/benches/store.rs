@@ -1,0 +1,90 @@
+//! Bench: the persistent tiered adapter store's primitives. Isolates what
+//! the `store-bench` CLI measures in vivo:
+//!   gsad_encode     — GSAD adapter record serialization
+//!   store_put       — durable (synced) append of one adapter
+//!   store_get       — indexed read + CRC verify of one adapter
+//!   log_replay      — cold-boot open of an N-tenant log
+//!   compaction      — rewrite of a half-garbage log
+//!   spill_round_trip— merged-weight spill write + read-back
+
+use gsoft::serve::synthetic;
+use gsoft::store::gsad;
+use gsoft::store::{AdapterStore, LogOpts, SegmentLog, SpillTier};
+use gsoft::util::bench::{black_box, Bench};
+use gsoft::util::tmp::unique_temp_dir;
+
+fn main() {
+    let mut bench = Bench::new("store");
+    let dir = unique_temp_dir("bench_store");
+
+    let (tenants, layers, d, block) = (64usize, 4usize, 64usize, 8usize);
+    let registry = synthetic(tenants, layers, d, block, 1).expect("synthetic registry");
+    let entries: Vec<_> = registry
+        .tenant_ids()
+        .into_iter()
+        .map(|t| (t, registry.get(t).unwrap()))
+        .collect();
+
+    bench.bench("gsad_encode/gsoft_d64_b8_l4", || {
+        black_box(gsad::encode_adapter(entries[0].0, &entries[0].1))
+    });
+
+    // Durable single-adapter append (the synced write is the cost).
+    let mut put_store = AdapterStore::open(dir.join("put")).unwrap();
+    let mut i = 0usize;
+    bench.bench("store_put/synced_append", || {
+        // Rotate tenants so compaction churn stays realistic.
+        let (t, e) = &entries[i % entries.len()];
+        i += 1;
+        put_store.put(*t, e).unwrap();
+    });
+
+    let mut get_store = AdapterStore::open(dir.join("get")).unwrap();
+    for (t, e) in &entries {
+        get_store.put(*t, e).unwrap();
+    }
+    bench.bench("store_get/indexed_read", || {
+        black_box(get_store.get(entries[7].0).unwrap())
+    });
+
+    // Cold-boot replay of the 64-tenant log.
+    bench.bench("log_replay/64t", || {
+        black_box(AdapterStore::open(dir.join("get")).unwrap().len())
+    });
+
+    // Compaction of a log that is half superseded versions.
+    bench.bench("compaction/64t_half_garbage", || {
+        let cdir = unique_temp_dir("bench_store_compact");
+        let opts = LogOpts {
+            garbage_threshold: 1.1, // manual trigger only
+            min_compact_bytes: u64::MAX,
+        };
+        let mut log = SegmentLog::open(cdir.join("adapters.log"), opts).unwrap();
+        for (t, e) in &entries {
+            let payload = gsad::encode_adapter(*t, e);
+            log.append(*t, &payload).unwrap();
+            log.append(*t, &payload).unwrap(); // superseded duplicate
+        }
+        log.compact().unwrap();
+        let bytes = log.file_bytes();
+        drop(log);
+        let _ = std::fs::remove_dir_all(&cdir);
+        black_box(bytes)
+    });
+
+    // Spill tier round trip at merged-model size.
+    let merged = registry.merge(0).unwrap();
+    let mut tier = SpillTier::open(dir.join("spill"), 1 << 30).unwrap();
+    let crc = gsad::params_crc(&entries[0].1);
+    bench.bench_with_elements(
+        "spill_round_trip/d64_l4",
+        Some(merged.len() as f64),
+        || {
+            tier.put(0, crc, &merged).unwrap();
+            black_box(tier.get(0, crc).unwrap())
+        },
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    bench.finish();
+}

@@ -1,16 +1,19 @@
 //! Checkpoints: flat buffers + optimizer state + step, with a JSON header
-//! and raw little-endian f32 payloads (a tiny self-describing container —
-//! no external serialization crates offline).
+//! and raw little-endian f32 payloads. The framing (magic + header +
+//! payload sections) is the shared [`crate::util::container`]
+//! implementation — the adapter store's `GSAD` files use the same one
+//! with a different schema.
 //!
 //! Layout: `GSCK` magic, u32 header length, JSON header
 //! `{"step":…, "sections": [{"name":…, "len":…}, …]}`, then the f32
-//! sections back to back.
+//! sections back to back (no per-section CRC — byte-compatible with
+//! checkpoints written before the framing was extracted).
 
-use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::util::container::{self, Container};
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 4] = b"GSCK";
@@ -32,102 +35,149 @@ impl Checkpoint {
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let header = Json::obj(vec![
-            ("step", Json::Num(self.step as f64)),
-            (
-                "sections",
-                Json::Arr(
-                    self.sections
-                        .iter()
-                        .map(|(n, v)| {
-                            Json::obj(vec![
-                                ("name", Json::Str(n.clone())),
-                                ("len", Json::Num(v.len() as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ])
-        .to_string();
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&(header.len() as u32).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for (_, v) in &self.sections {
-            for x in v {
-                f.write_all(&x.to_le_bytes())?;
-            }
-        }
-        Ok(())
+        // Streamed, clone-free: checkpoints hold several model-sized
+        // buffers, so buffering a fully encoded copy would transiently
+        // multiply their memory.
+        let sections: Vec<(&str, &[f32])> = self
+            .sections
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.as_slice()))
+            .collect();
+        container::write_file(
+            path,
+            MAGIC,
+            vec![("step", Json::Num(self.step as f64))],
+            &sections,
+            false,
+        )
     }
 
+    /// Load a checkpoint. Truncated files, absurd header lengths, and
+    /// section lengths that disagree with the actual file size all return
+    /// a clean `Err` (validated by the container layer before any payload
+    /// allocation) — a corrupt checkpoint must never panic or OOM the
+    /// trainer that tries to resume from it.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let path = path.as_ref();
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-        );
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
-        let mut len = [0u8; 4];
-        f.read_exact(&mut len)?;
-        let hlen = u32::from_le_bytes(len) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)
-            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
-        let step = header.req_usize("step").map_err(|e| anyhow!("{e}"))?;
-        let mut sections = Vec::new();
-        for s in header
-            .req("sections")
-            .map_err(|e| anyhow!("{e}"))?
-            .as_arr()
-            .ok_or_else(|| anyhow!("sections not an array"))?
-        {
-            let name = s.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string();
-            let n = s.req_usize("len").map_err(|e| anyhow!("{e}"))?;
-            let mut bytes = vec![0u8; n * 4];
-            f.read_exact(&mut bytes)?;
-            let data = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            sections.push((name, data));
-        }
-        Ok(Checkpoint { step, sections })
+        let c = Container::load(path.as_ref(), MAGIC)
+            .with_context(|| format!("loading checkpoint {}", path.as_ref().display()))?;
+        let step = c.meta_usize("step")?;
+        Ok(Checkpoint {
+            step,
+            sections: c.sections,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::tmp::unique_temp_dir;
 
-    #[test]
-    fn round_trip() {
-        let ck = Checkpoint {
+    fn sample() -> Checkpoint {
+        Checkpoint {
             step: 123,
             sections: vec![
                 ("trainable".into(), vec![1.0, -2.5, 3.25]),
                 ("adam_m".into(), vec![0.0; 5]),
             ],
-        };
-        let path = std::env::temp_dir().join("gsoft_ck_test.gsck");
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = unique_temp_dir("ck");
+        let path = dir.join("ck.gsck");
+        let ck = sample();
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
         assert_eq!(back.get("trainable").unwrap()[1], -2.5);
         assert!(back.get("missing").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_layout_is_unchanged() {
+        // The container refactor must keep the bytes identical to what the
+        // original hand-rolled writer produced: GSCK, u32 header len, the
+        // {"sections":[...],"step":N} header (BTreeMap key order), payload.
+        let dir = unique_temp_dir("ck_legacy");
+        let path = dir.join("ck.gsck");
+        sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], b"GSCK");
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).unwrap();
+        assert_eq!(
+            header,
+            r#"{"sections":[{"len":3,"name":"trainable"},{"len":5,"name":"adam_m"}],"step":123}"#
+        );
+        assert_eq!(bytes.len(), 8 + hlen + 4 * (3 + 5));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn rejects_garbage() {
-        let path = std::env::temp_dir().join("gsoft_ck_garbage.gsck");
+        let dir = unique_temp_dir("ck_garbage");
+        let path = dir.join("bad.gsck");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_file_is_a_clean_error_at_every_cut() {
+        // Regression for the old loader, which trusted the header's
+        // declared lengths: a truncated section ended in read_exact Err,
+        // but an absurd header length allocated first. Now every strict
+        // prefix must fail cleanly.
+        let dir = unique_temp_dir("ck_trunc");
+        let full_path = dir.join("full.gsck");
+        sample().save(&full_path).unwrap();
+        let bytes = std::fs::read(&full_path).unwrap();
+        let cut_path = dir.join("cut.gsck");
+        for cut in 0..bytes.len() {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            assert!(
+                Checkpoint::load(&cut_path).is_err(),
+                "prefix of {cut}/{} bytes loaded",
+                bytes.len()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn absurd_header_length_is_a_clean_error() {
+        // 4 GiB declared header in a 12-byte file: must not try to
+        // allocate or read 4 GiB.
+        let dir = unique_temp_dir("ck_hdr");
+        let path = dir.join("absurd.gsck");
+        let mut bytes = b"GSCK".to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(b"{}{}");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn section_length_beyond_file_size_is_a_clean_error() {
+        // Corrupt the header in place: bump a declared section length so
+        // it exceeds the payload actually present.
+        let dir = unique_temp_dir("ck_len");
+        let path = dir.join("len.gsck");
+        sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).unwrap();
+        let corrupt_header = header.replace("\"len\":3", "\"len\":3000000");
+        let mut corrupt = b"GSCK".to_vec();
+        corrupt.extend_from_slice(&(corrupt_header.len() as u32).to_le_bytes());
+        corrupt.extend_from_slice(corrupt_header.as_bytes());
+        corrupt.extend_from_slice(&bytes[8 + hlen..]);
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -29,6 +29,22 @@ impl FlatSpec {
         Ok(FlatSpec { entries })
     }
 
+    /// Inverse of [`FlatSpec::from_json`] — the schema the artifacts'
+    /// metadata and the adapter store's `GSAD` headers share.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|(n, s)| {
+                    Json::obj(vec![
+                        ("name", Json::Str(n.clone())),
+                        ("shape", Json::arr_usize(s)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     pub fn size(&self) -> usize {
         self.entries
             .iter()
@@ -88,6 +104,12 @@ mod tests {
             .unwrap(),
         )
         .unwrap()
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let s = spec();
+        assert_eq!(FlatSpec::from_json(&s.to_json()).unwrap(), s);
     }
 
     #[test]

@@ -18,7 +18,8 @@
 //!   ([`coordinator`]), synthetic workload generators ([`data`]), the
 //!   experiment/reporting harness ([`report`]) that regenerates every
 //!   table and figure of the paper, and the multi-tenant adapter serving
-//!   engine ([`serve`]).
+//!   engine ([`serve`]) backed by the persistent tiered adapter store
+//!   ([`store`]).
 //!
 //! See `DESIGN.md` for the systems inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -31,4 +32,5 @@ pub mod linalg;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod util;

@@ -13,6 +13,7 @@
 //! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8]
 //! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json]
 //! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json]
+//! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json]
 //! gsoft merge-demo
 //! gsoft list     # artifacts in the registry
 //! gsoft all      # every experiment, in order
@@ -86,6 +87,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve-bench" => serve_bench(args)?,
         "kernel-bench" => kernel_bench(args)?,
         "conv-bench" => conv_bench(args)?,
+        "store-bench" => store_bench(args)?,
         "merge-demo" => merge_demo(args)?,
         "compress-demo" => compress_demo(args)?,
         "list" => {
@@ -545,6 +547,178 @@ fn conv_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Persistent tiered adapter store benchmark: for each (tenant count ×
+/// adapter kind × hit ratio) config, measure durable-persist throughput,
+/// cold-boot open (log replay) latency, per-tenant lazy hydration
+/// latency, and — driving the store-backed engine with a hot/cold trace —
+/// the spill-hit vs re-merge service times the load-vs-remerge break-even
+/// trades between. Writes a machine-readable `BENCH_store.json`.
+/// `--smoke` runs one small config (the CI gate exercising persist →
+/// replay → hydrate → spill on every push).
+fn store_bench(args: &Args) -> Result<()> {
+    use gsoft::report::{emit_json_record, fmt, Table};
+    use gsoft::serve::{synthetic, synthetic_conv, Engine, EngineOpts, Registry, TenantId};
+    use gsoft::store::AdapterStore;
+    use gsoft::util::json::Json;
+    use gsoft::util::rng::Rng;
+    use gsoft::util::tmp::unique_temp_dir;
+    use std::time::Instant;
+
+    let smoke = args.flag("smoke");
+    let seed = args.opt_u64("seed", 7)?;
+    let out_path = args.opt_or("out", "BENCH_store.json").to_string();
+    let requests = args.opt_usize("requests", if smoke { 64 } else { 1024 })?;
+
+    // (adapter kind, tenant count, hot-set hit ratio)
+    let grid: Vec<(&str, usize, f64)> = if smoke {
+        vec![("mixed", 12, 0.7)]
+    } else {
+        let mut g = Vec::new();
+        for &tenants in &[64usize, 256] {
+            for kind in ["mixed", "conv_gssoc"] {
+                for &hit in &[0.5f64, 0.9] {
+                    g.push((kind, tenants, hit));
+                }
+            }
+        }
+        g
+    };
+
+    let layers = 2usize;
+    let mut table = Table::new(
+        "store-bench — persistent tiered adapter store",
+        &[
+            "config",
+            "persist (ms)",
+            "cold open (ms)",
+            "hydrate (µs/tenant)",
+            "re-merge p50 (ms)",
+            "spill-hit p50 (ms)",
+            "spill hits",
+        ],
+    );
+    let mut configs = Vec::new();
+    for &(kind, tenants, hit_ratio) in &grid {
+        let (donor, d) = match kind {
+            "mixed" => {
+                let d = if smoke { 16 } else { 32 };
+                (synthetic(tenants, layers, d, d / 4, seed)?, d)
+            }
+            _ => (synthetic_conv(tenants, layers, 4, 3, 2, 2, 3, seed)?, 4 * 2 * 3),
+        };
+        let base_w = donor.base().weights.as_ref().clone();
+        let base_spec = donor.base().spec.as_ref().clone();
+        let entries: Vec<_> = donor
+            .tenant_ids()
+            .into_iter()
+            .map(|t| (t, donor.get(t).unwrap()))
+            .collect();
+
+        let dir = unique_temp_dir("store_bench");
+        // Phase 1: durable persist (synced appends).
+        let t0 = Instant::now();
+        {
+            let mut store = AdapterStore::open(dir.join("factors"))?;
+            for (t, e) in &entries {
+                store.put(*t, e)?;
+            }
+        }
+        let persist = t0.elapsed();
+
+        // Phase 2: cold boot — log replay, then lazy hydration of the fleet.
+        let t0 = Instant::now();
+        let store = AdapterStore::open(dir.join("factors"))?;
+        let open = t0.elapsed();
+        let registry = Registry::with_store(base_w, base_spec, store)?;
+        let t0 = Instant::now();
+        let hydrated = registry.hydrate_all()?;
+        let hydrate = t0.elapsed();
+        anyhow::ensure!(hydrated == tenants, "hydrated {hydrated}/{tenants} tenants");
+
+        // Phase 3: spill-hit vs re-merge under a hot/cold trace. The RAM
+        // cache holds only the hot set; cold tenants merge once, spill on
+        // eviction, and later hits come back from disk.
+        let hot = (tenants / 8).max(1);
+        let model_bytes =
+            registry.base().weights.len() * 4 + layers * d * d * 8;
+        let engine = Engine::new(
+            registry,
+            EngineOpts {
+                workers: 2,
+                max_batch: 8,
+                cache_budget_bytes: model_bytes * hot + model_bytes / 2,
+                promote_after: Some(1),
+                spill_dir: Some(dir.join("spill")),
+                ..EngineOpts::default()
+            },
+        )?;
+        let mut rng = Rng::new(seed ^ 0x570e);
+        let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(d, 0.3)).collect();
+        let trace: Vec<TenantId> = (0..requests)
+            .map(|_| {
+                if rng.uniform() < hit_ratio {
+                    rng.below(hot) as TenantId
+                } else {
+                    (hot + rng.below(tenants - hot)) as TenantId
+                }
+            })
+            .collect();
+        let mut handles = Vec::with_capacity(requests);
+        for (tenant, input) in trace.iter().zip(inputs) {
+            handles.push(engine.submit(*tenant, input)?);
+        }
+        for h in handles {
+            h.wait()?;
+        }
+        let report = engine.finish();
+        let m = &report.metrics;
+        let spill = report.spill.unwrap_or_default();
+
+        let ns_ms = 1e-6;
+        let tag = format!("{kind}_{tenants}t_hit{hit_ratio}");
+        let hydrate_us = hydrate.as_secs_f64() * 1e6 / tenants as f64;
+        table.row(vec![
+            tag,
+            fmt(persist.as_secs_f64() * 1e3, 2),
+            fmt(open.as_secs_f64() * 1e3, 2),
+            fmt(hydrate_us, 1),
+            fmt(m.service_cold.p50_ns * ns_ms, 4),
+            fmt(m.service_spill.p50_ns * ns_ms, 4),
+            spill.hits.to_string(),
+        ]);
+        configs.push(Json::obj(vec![
+            ("kind", Json::Str(kind.to_string())),
+            ("tenants", Json::Num(tenants as f64)),
+            ("layers", Json::Num(layers as f64)),
+            ("d", Json::Num(d as f64)),
+            ("hit_ratio", Json::Num(hit_ratio)),
+            ("requests", Json::Num(requests as f64)),
+            ("persist_s", Json::Num(persist.as_secs_f64())),
+            ("cold_open_s", Json::Num(open.as_secs_f64())),
+            ("hydrate_us_per_tenant", Json::Num(hydrate_us)),
+            ("merges", Json::Num(m.merges as f64)),
+            ("spill_loads", Json::Num(m.spill_loads as f64)),
+            ("remerge_service_p50_ns", Json::Num(m.service_cold.p50_ns)),
+            ("spill_service_p50_ns", Json::Num(m.service_spill.p50_ns)),
+            ("spill_hits", Json::Num(spill.hits as f64)),
+            ("spill_evictions", Json::Num(spill.evictions as f64)),
+            ("cache_hit_rate", Json::Num(report.cache.hit_rate())),
+        ]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    table.emit("store_bench")?;
+    let record = Json::obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("seed", Json::Num(seed as f64)),
+        ("configs", Json::Arr(configs)),
+    ]);
+    emit_json_record(std::path::Path::new(&out_path), &record)?;
+    println!(
+        "[store-bench] durable persist → replay → lazy hydrate → spill round-trip complete"
+    );
+    Ok(())
+}
+
 /// Non-orthogonal GS compression (the concluding remarks' direction):
 /// project a pretrained attention weight onto the GS class at several
 /// block sizes and compare against budget-matched truncated SVD.
@@ -613,6 +787,10 @@ Utilities:
                 groups, batch): direct/im2col/conv_exp/GS-SOC layer vs
                 materialized dense operator; writes BENCH_conv.json
                 [--smoke --seed 7 --out PATH]
+  store-bench   persistent tiered adapter store sweep over (tenants x
+                adapter kind x hit ratio): durable persist, cold-boot
+                log replay, lazy hydration, spill-hit vs re-merge;
+                writes BENCH_store.json [--smoke --seed 7 --out PATH]
   list          list compiled artifacts
 
 Common options: --steps N --pretrain-steps N --eval-batches N --lr X

@@ -21,6 +21,11 @@ use crate::serve::registry::TenantId;
 pub struct CachedModel {
     pub flat: Arc<Vec<f32>>,
     pub layers: Vec<Mat>,
+    /// CRC32 of the adapter params this model was merged from, captured
+    /// at merge time — the spill tier's freshness tag. Re-reading the
+    /// registry at eviction time instead would tag old merged bytes with
+    /// a *newer* adapter's CRC and defeat the staleness guard.
+    pub params_crc: u32,
 }
 
 impl CachedModel {
@@ -33,6 +38,13 @@ impl CachedModel {
                 .map(|m| m.data.len() * 8)
                 .sum::<usize>()
     }
+}
+
+/// Outcome of [`MergedCache::insert`]: whether the model was cached, and
+/// which tenants were displaced (oldest first) to make room.
+pub struct Inserted {
+    pub inserted: bool,
+    pub evicted: Vec<(TenantId, Arc<CachedModel>)>,
 }
 
 /// Cache counters (monotonic; snapshot with [`MergedCache::stats`]).
@@ -120,19 +132,29 @@ impl MergedCache {
     }
 
     /// Insert a merged model, evicting least-recently-used tenants until
-    /// it fits. Returns `false` (and caches nothing) when the model alone
-    /// exceeds the whole budget.
-    pub fn insert(&mut self, tenant: TenantId, model: CachedModel) -> bool {
+    /// it fits. `inserted` is `false` (and nothing is cached) when the
+    /// model alone exceeds the whole budget; `evicted` hands the displaced
+    /// models back to the caller in LRU order, so a spill tier
+    /// ([`crate::store::SpillTier`]) can absorb them instead of the floor
+    /// — the cache itself stays pure bookkeeping, no I/O under its lock.
+    pub fn insert(&mut self, tenant: TenantId, model: CachedModel) -> Inserted {
         let bytes = model.bytes();
         if bytes > self.budget_bytes {
-            return false;
+            return Inserted {
+                inserted: false,
+                evicted: Vec::new(),
+            };
         }
         if let Some(old) = self.slots.remove(&tenant) {
+            // Replacement, not eviction: the caller's new version
+            // supersedes the old model, which must not be spilled.
             self.used_bytes -= old.bytes;
         }
+        let mut evicted = Vec::new();
         while self.used_bytes + bytes > self.budget_bytes {
-            if !self.evict_lru() {
-                break;
+            match self.evict_lru() {
+                Some(pair) => evicted.push(pair),
+                None => break,
             }
         }
         self.used_bytes += bytes;
@@ -146,11 +168,14 @@ impl MergedCache {
         );
         self.touch(tenant);
         self.stats.inserts += 1;
-        true
+        Inserted {
+            inserted: true,
+            evicted,
+        }
     }
 
-    /// Evict the least-recently-used entry. Returns `false` if empty.
-    fn evict_lru(&mut self) -> bool {
+    /// Evict the least-recently-used entry, returning it (`None` if empty).
+    fn evict_lru(&mut self) -> Option<(TenantId, Arc<CachedModel>)> {
         while let Some((tick, tenant)) = self.recency.pop_front() {
             let live = self
                 .slots
@@ -160,10 +185,10 @@ impl MergedCache {
                 let slot = self.slots.remove(&tenant).unwrap();
                 self.used_bytes -= slot.bytes;
                 self.stats.evictions += 1;
-                return true;
+                return Some((tenant, slot.model));
             }
         }
-        false
+        None
     }
 
     pub fn len(&self) -> usize {
@@ -267,23 +292,30 @@ mod tests {
                         1 => {
                             let floats = floats_of(size_class);
                             let bytes = floats * 4;
-                            let inserted = cache.insert(tenant, model(floats));
+                            let outcome = cache.insert(tenant, model(floats));
                             if bytes > BUDGET {
-                                assert!(!inserted, "oversized model must be refused");
+                                assert!(!outcome.inserted, "oversized model must be refused");
+                                assert!(outcome.evicted.is_empty(), "refusal must not evict");
                                 continue;
                             }
-                            assert!(inserted);
+                            assert!(outcome.inserted);
                             want.inserts += 1;
                             if let Some(p) = lru.iter().position(|&(t, _)| t == tenant) {
                                 lru.remove(p); // replace: old bytes released first
                             }
                             let mut used: usize = lru.iter().map(|&(_, b)| b).sum();
+                            let mut want_evicted = Vec::new();
                             while used + bytes > BUDGET {
-                                let (_, evicted) = lru.remove(0); // strict LRU order
+                                let (t, evicted) = lru.remove(0); // strict LRU order
                                 used -= evicted;
                                 want.evictions += 1;
+                                want_evicted.push(t);
                             }
                             lru.push((tenant, bytes));
+                            // The displaced models come back in LRU order.
+                            let got: Vec<TenantId> =
+                                outcome.evicted.iter().map(|&(t, _)| t).collect();
+                            assert_eq!(got, want_evicted, "evicted sequence diverged");
                         }
                         _ => {
                             // peek must not touch recency or counters.
@@ -314,6 +346,7 @@ mod tests {
         CachedModel {
             flat: Arc::new(vec![0.5; floats]),
             layers: Vec::new(),
+            params_crc: 0,
         }
     }
 
@@ -321,7 +354,7 @@ mod tests {
     fn hit_miss_and_hit_rate() {
         let mut c = MergedCache::new(1 << 20);
         assert!(c.get(1).is_none());
-        assert!(c.insert(1, model(10)));
+        assert!(c.insert(1, model(10)).inserted);
         assert!(c.get(1).is_some());
         assert!(c.get(2).is_none());
         let s = c.stats();
@@ -333,12 +366,15 @@ mod tests {
     fn byte_budget_evicts_lru_order() {
         // Budget fits exactly two 100-float models (400 bytes each).
         let mut c = MergedCache::new(800);
-        assert!(c.insert(1, model(100)));
-        assert!(c.insert(2, model(100)));
+        assert!(c.insert(1, model(100)).inserted);
+        assert!(c.insert(2, model(100)).inserted);
         assert_eq!(c.used_bytes(), 800);
         // Touch 1 so 2 becomes LRU.
         assert!(c.get(1).is_some());
-        assert!(c.insert(3, model(100)));
+        let outcome = c.insert(3, model(100));
+        assert!(outcome.inserted);
+        let evicted: Vec<TenantId> = outcome.evicted.iter().map(|&(t, _)| t).collect();
+        assert_eq!(evicted, vec![2], "displaced model handed back for spilling");
         assert_eq!(c.len(), 2);
         assert!(c.peek(1).is_some(), "recently used survives");
         assert!(c.peek(2).is_none(), "LRU evicted");
@@ -350,7 +386,7 @@ mod tests {
     #[test]
     fn oversized_model_is_refused() {
         let mut c = MergedCache::new(100);
-        assert!(!c.insert(1, model(1000)));
+        assert!(!c.insert(1, model(1000)).inserted);
         assert!(c.is_empty());
         assert_eq!(c.used_bytes(), 0);
     }
@@ -358,8 +394,13 @@ mod tests {
     #[test]
     fn reinsert_replaces_without_leaking_bytes() {
         let mut c = MergedCache::new(10_000);
-        assert!(c.insert(1, model(100)));
-        assert!(c.insert(1, model(200)));
+        assert!(c.insert(1, model(100)).inserted);
+        let outcome = c.insert(1, model(200));
+        assert!(outcome.inserted);
+        assert!(
+            outcome.evicted.is_empty(),
+            "replacing a tenant's own model is not an eviction"
+        );
         assert_eq!(c.len(), 1);
         assert_eq!(c.used_bytes(), 800);
     }

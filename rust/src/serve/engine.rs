@@ -12,11 +12,17 @@
 //!   serve `W'X = Q(WX)` with the structured GS/OFT apply (or the
 //!   low-rank `WX + A(BX)` for LoRA), paying a small per-request
 //!   overhead instead of a merge.
+//! - **spill load** (`SpillLoad`): with a spill tier mounted
+//!   ([`EngineOpts::spill_dir`]), a promoted tenant whose merged weights
+//!   were evicted to disk is rehydrated with one sequential read instead
+//!   of a re-merge — taken only when the Theorem-2 cost model says the
+//!   load beats the re-merge ([`Policy::spill_pays_off`]).
 //!
 //! The promotion threshold comes from the Theorem-2 density cost model
 //! ([`Policy::from_cost_model`]).
 
 use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -29,6 +35,8 @@ use crate::gs::density::{chain_support, gs_min_factors, BitMatrix, PermFamily};
 use crate::gs::BlockDiag;
 use crate::kernel::{self, KernelCtx};
 use crate::linalg::Mat;
+use crate::store::gsad::params_crc;
+use crate::store::{SpillStats, SpillTier};
 use crate::util::pool::{default_workers, WorkQueue};
 
 use super::batcher::{Batch, MicroBatcher};
@@ -41,6 +49,7 @@ pub enum ServePath {
     CachedDense,
     ColdMerge,
     Factorized,
+    SpillLoad,
 }
 
 impl ServePath {
@@ -49,6 +58,7 @@ impl ServePath {
             ServePath::CachedDense => "cached_dense",
             ServePath::ColdMerge => "cold_merge",
             ServePath::Factorized => "factorized",
+            ServePath::SpillLoad => "spill_load",
         }
     }
 }
@@ -68,7 +78,16 @@ pub struct Policy {
     /// `(d, block)` — Theorem 2 guarantees this for `m = 1 + ⌈log_b r⌉`,
     /// which is what makes the cached path a plain dense GEMM.
     pub q_dense: bool,
+    /// Theorem-2 merge cost for one adapted layer (flops) — what the
+    /// spill tier's load-vs-remerge break-even weighs a disk read
+    /// against.
+    pub merge_flops_per_layer: u64,
 }
+
+/// Load-vs-remerge calibration: how many merge-flops one spilled byte is
+/// worth. Sequential disk reads run ~1 GB/s while the merge arithmetic
+/// sustains a few Gflop/s, so a byte costs a handful of flop-equivalents.
+pub const SPILL_FLOPS_PER_BYTE: f64 = 4.0;
 
 impl Policy {
     pub fn from_cost_model(d: usize, block: usize, expected_batch: usize) -> Policy {
@@ -87,15 +106,33 @@ impl Policy {
         Policy {
             promote_after,
             q_dense,
+            merge_flops_per_layer: merge_flops as u64,
         }
     }
 
     /// Fixed threshold (tests, or deployments that know their traffic).
+    /// The merge is treated as arbitrarily expensive, so a mounted spill
+    /// tier is always preferred over re-merging.
     pub fn fixed(promote_after: u64) -> Policy {
         Policy {
             promote_after,
             q_dense: true,
+            merge_flops_per_layer: u64::MAX,
         }
+    }
+
+    /// Load-vs-remerge break-even (the spill extension of the Theorem-2
+    /// model): reading a `model_bytes` merged model back from disk costs
+    /// `bytes · SPILL_FLOPS_PER_BYTE` flop-equivalents; re-merging costs
+    /// `merge_flops_per_layer · layers`. The spill tier only runs when
+    /// the load wins — for GS adapters the merge side is `m·b·d²` flops
+    /// per layer while the model is `~12·d²` bytes (f32 flat + f64 mats),
+    /// so spilling wins once `m·b` clears a few dozen: true at production
+    /// block sizes (the paper's `d=1024, b=32`), false for toy
+    /// geometries, where re-merging really is cheaper than the disk.
+    pub fn spill_pays_off(&self, layers: usize, model_bytes: usize) -> bool {
+        model_bytes as f64 * SPILL_FLOPS_PER_BYTE
+            < self.merge_flops_per_layer as f64 * layers.max(1) as f64
     }
 }
 
@@ -115,6 +152,13 @@ pub struct EngineOpts {
     /// that know their dominant shape can pass
     /// [`KernelCtx::autotuned`].
     pub kernel: KernelCtx,
+    /// Mount a spill tier here: RAM-cache evictions write merged weights
+    /// to this directory and the cold path checks it before re-merging.
+    /// Only engaged when the load-vs-remerge break-even
+    /// ([`Policy::spill_pays_off`]) favors it at this model geometry.
+    pub spill_dir: Option<PathBuf>,
+    /// Byte cap on the spill tier's directory.
+    pub spill_budget_bytes: u64,
 }
 
 impl Default for EngineOpts {
@@ -127,6 +171,8 @@ impl Default for EngineOpts {
             cache_budget_bytes: 64 << 20,
             promote_after: None,
             kernel: KernelCtx::default(),
+            spill_dir: None,
+            spill_budget_bytes: 256 << 20,
         }
     }
 }
@@ -205,18 +251,23 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub merges: u64,
+    /// Merges avoided by loading spilled weights back from disk.
+    pub spill_loads: u64,
     pub overall: PathStats,
     pub cached: PathStats,
     pub cold: PathStats,
     pub factorized: PathStats,
+    pub spill: PathStats,
     pub service_cached: PathStats,
     pub service_cold: PathStats,
     pub service_factorized: PathStats,
+    pub service_spill: PathStats,
 }
 
 struct Metrics {
     batches: AtomicU64,
     merges: AtomicU64,
+    spill_loads: AtomicU64,
     latencies: Mutex<Vec<(ServePath, u64)>>,
     /// Per-batch worker compute time.
     service: Mutex<Vec<(ServePath, u64)>>,
@@ -227,6 +278,7 @@ impl Metrics {
         Metrics {
             batches: AtomicU64::new(0),
             merges: AtomicU64::new(0),
+            spill_loads: AtomicU64::new(0),
             latencies: Mutex::new(Vec::new()),
             service: Mutex::new(Vec::new()),
         }
@@ -261,13 +313,16 @@ impl Metrics {
             requests: lat.len() as u64,
             batches: self.batches.load(Ordering::Relaxed),
             merges: self.merges.load(Ordering::Relaxed),
+            spill_loads: self.spill_loads.load(Ordering::Relaxed),
             overall: path_stats(lat.iter().map(|&(_, ns)| ns).collect()),
             cached: by(&lat, ServePath::CachedDense),
             cold: by(&lat, ServePath::ColdMerge),
             factorized: by(&lat, ServePath::Factorized),
+            spill: by(&lat, ServePath::SpillLoad),
             service_cached: by(&service, ServePath::CachedDense),
             service_cold: by(&service, ServePath::ColdMerge),
             service_factorized: by(&service, ServePath::Factorized),
+            service_spill: by(&service, ServePath::SpillLoad),
         }
     }
 }
@@ -276,6 +331,8 @@ impl Metrics {
 pub struct EngineReport {
     pub metrics: MetricsSnapshot,
     pub cache: CacheStats,
+    /// Spill-tier counters, when a tier was mounted and engaged.
+    pub spill: Option<SpillStats>,
 }
 
 struct Shared {
@@ -286,6 +343,9 @@ struct Shared {
     policy: Policy,
     /// Kernel dispatch context for every worker's linear algebra.
     kernel: KernelCtx,
+    /// Disk tier for evicted merged weights — `Some` only when a spill
+    /// dir was configured *and* the load-vs-remerge break-even favors it.
+    spill: Option<Mutex<SpillTier>>,
     cache: Mutex<MergedCache>,
     seen: Mutex<HashMap<TenantId, u64>>,
     /// Tenants with a merge in flight — prevents two workers that both
@@ -335,10 +395,16 @@ impl Engine {
         let policy = match opts.promote_after {
             Some(k) => Policy::fixed(k),
             None => {
+                // Policy inference needs adapter *kinds*, not the fleet:
+                // sample a bounded prefix through the non-caching read so
+                // a store-backed registry keeps its lazy cold boot
+                // (O(log replay), never O(fleet) hydration).
+                const POLICY_KIND_SAMPLE: usize = 64;
                 let kinds: Vec<AdapterKind> = registry
                     .tenant_ids()
                     .into_iter()
-                    .filter_map(|t| registry.get(t).map(|e| e.kind))
+                    .take(POLICY_KIND_SAMPLE)
+                    .filter_map(|t| registry.kind_of(t))
                     .collect();
                 if kinds
                     .iter()
@@ -354,9 +420,23 @@ impl Engine {
                     // (k² taps widened by `terms` applications), not the
                     // Theorem-2 dense guarantee, hence q_dense = false.
                     let batch = opts.max_batch.div_ceil(2).max(1);
+                    // One Q·column is `terms` grouped convs over the
+                    // [c, h, w] plane; merging pays that for all d columns.
+                    let per_col = match kinds[0] {
+                        AdapterKind::ConvGsSoc {
+                            c,
+                            k,
+                            groups,
+                            h,
+                            w,
+                            terms,
+                        } => 2 * terms * c * (c / groups) * k * k * h * w,
+                        _ => unreachable!("conv-only branch"),
+                    };
                     Policy {
                         promote_after: (d / batch).max(1) as u64,
                         q_dense: false,
+                        merge_flops_per_layer: (per_col * d) as u64,
                     }
                 } else {
                     // Infer the dominant block size from any registered
@@ -375,12 +455,24 @@ impl Engine {
             }
         };
 
+        // Spill break-even: one merged model is the f32 flat buffer plus
+        // the f64 per-layer GEMM matrices (see `CachedModel::bytes`).
+        let model_bytes = base.weights.len() * 4 + base_layers.len() * d * d * 8;
+        let spill = match &opts.spill_dir {
+            Some(dir) if policy.spill_pays_off(base_layers.len(), model_bytes) => {
+                Some(Mutex::new(SpillTier::open(dir, opts.spill_budget_bytes)?))
+            }
+            Some(_) => None, // re-merging is cheaper than the disk here
+            None => None,
+        };
+
         let shared = Arc::new(Shared {
             registry,
             base_layers,
             d,
             policy,
             kernel: opts.kernel,
+            spill,
             cache: Mutex::new(MergedCache::new(opts.cache_budget_bytes)),
             seen: Mutex::new(HashMap::new()),
             merging: Mutex::new(HashSet::new()),
@@ -479,6 +571,16 @@ impl Engine {
         self.shared.cache.lock().unwrap().stats()
     }
 
+    /// Whether the spill tier is mounted and engaged (a configured dir
+    /// can still be declined by the load-vs-remerge break-even).
+    pub fn spill_enabled(&self) -> bool {
+        self.shared.spill.is_some()
+    }
+
+    pub fn spill_stats(&self) -> Option<SpillStats> {
+        self.shared.spill.as_ref().map(|s| s.lock().unwrap().stats())
+    }
+
     fn shutdown(&mut self) {
         if self.shared.shutting_down.swap(true, Ordering::SeqCst) {
             return;
@@ -502,6 +604,7 @@ impl Engine {
         EngineReport {
             metrics: self.metrics(),
             cache: self.cache_stats(),
+            spill: self.spill_stats(),
         }
     }
 }
@@ -650,6 +753,30 @@ fn layer_q(entry: &AdapterEntry, layer: &str, d: usize) -> Result<Option<LayerQ>
     }
 }
 
+/// Cache a merged model; displaced models ride to the spill tier (the
+/// I/O happens here, outside the cache lock), and a model too big for the
+/// whole budget pins its tenant to the factorized path.
+fn insert_cached(sh: &Shared, tenant: TenantId, model: CachedModel) {
+    let outcome = sh.cache.lock().unwrap().insert(tenant, model);
+    if outcome.inserted {
+        // The factorized operators are dead weight once cached.
+        sh.factored.lock().unwrap().remove(&tenant);
+    } else {
+        // Model alone exceeds the whole budget: never merge again,
+        // keep serving this tenant factorized.
+        sh.uncacheable.lock().unwrap().insert(tenant);
+    }
+    let Some(spill) = &sh.spill else { return };
+    for (t, m) in outcome.evicted {
+        // The freshness tag is the CRC captured when the model was
+        // merged — never a re-read of the registry, which could have a
+        // newer adapter by now.
+        if let Err(err) = spill.lock().unwrap().put(t, m.params_crc, &m.flat) {
+            eprintln!("[serve] spilling evicted tenant {t} failed: {err:#}");
+        }
+    }
+}
+
 fn layer_mats(sh: &Shared, flat: &[f32]) -> Result<Vec<Mat>> {
     let spec = &sh.registry.base().spec;
     sh.base_layers
@@ -706,27 +833,42 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
                 ServePath::CachedDense,
             ));
         }
+        // Spill tier first: an earlier eviction may have left this
+        // tenant's merged weights one sequential read away (the tier is
+        // only mounted when the cost model says the load beats the
+        // re-merge). The params-CRC tag guarantees freshness.
+        if let Some(spill) = &sh.spill {
+            let crc = params_crc(&entry);
+            let flat = spill.lock().unwrap().get(tenant, crc);
+            if let Some(flat) = flat {
+                let loaded = layer_mats(sh, &flat).map(|layers| CachedModel {
+                    flat: Arc::new(flat),
+                    layers,
+                    params_crc: crc,
+                });
+                sh.merging.lock().unwrap().remove(&tenant);
+                let model = loaded?;
+                let y = forward_dense(&sh.kernel, &model.layers, x);
+                sh.metrics.spill_loads.fetch_add(1, Ordering::Relaxed);
+                insert_cached(sh, tenant, model);
+                return Ok((y, ServePath::SpillLoad));
+            }
+        }
         let merged = (|| -> Result<CachedModel> {
             let flat = sh.registry.merge(tenant)?;
             let layers = layer_mats(sh, &flat)?;
             Ok(CachedModel {
                 flat: Arc::new(flat),
                 layers,
+                // Tag with the params this very merge consumed.
+                params_crc: params_crc(&entry),
             })
         })();
         sh.merging.lock().unwrap().remove(&tenant);
         let model = merged?;
         let y = forward_dense(&sh.kernel, &model.layers, x);
         sh.metrics.merges.fetch_add(1, Ordering::Relaxed);
-        let inserted = sh.cache.lock().unwrap().insert(tenant, model);
-        if inserted {
-            // The factorized operators are dead weight once cached.
-            sh.factored.lock().unwrap().remove(&tenant);
-        } else {
-            // Model alone exceeds the whole budget: never merge again,
-            // keep serving this tenant factorized.
-            sh.uncacheable.lock().unwrap().insert(tenant);
-        }
+        insert_cached(sh, tenant, model);
         return Ok((y, ServePath::ColdMerge));
     }
 
@@ -790,6 +932,8 @@ mod tests {
             cache_budget_bytes: 16 << 20,
             promote_after: Some(3),
             kernel: KernelCtx::default(),
+            spill_dir: None,
+            spill_budget_bytes: 16 << 20,
         }
     }
 
@@ -963,8 +1107,70 @@ mod tests {
         let p = Policy::from_cost_model(1024, 32, 8);
         assert!(p.q_dense);
         assert_eq!(p.promote_after, 128);
+        // m=2 factors of nnz d·b each, applied to d columns.
+        assert_eq!(p.merge_flops_per_layer, (2 * 1024 * 32 * 1024) as u64);
         // Tiny geometry still yields a positive threshold.
         let p = Policy::from_cost_model(8, 2, 16);
         assert!(p.promote_after >= 1);
+    }
+
+    #[test]
+    fn spill_break_even_follows_the_cost_model() {
+        // Paper geometry: per-layer merge is 2·32·1024² ≈ 67M flops; one
+        // layer's share of the model is ~12·1024² ≈ 12.6MB ≈ 50M
+        // flop-equivalents at 4 flops/byte — loading wins.
+        let p = Policy::from_cost_model(1024, 32, 8);
+        let model_bytes = 4 * (1024 * 1024 * 4) + 4 * (1024 * 1024 * 8); // 4 layers
+        assert!(p.spill_pays_off(4, model_bytes));
+        // Toy geometry (d=8, b=2): merging is a few hundred flops, far
+        // cheaper than any disk read — the tier must decline.
+        let p = Policy::from_cost_model(8, 2, 4);
+        assert!(!p.spill_pays_off(2, 1600));
+        // Fixed policies treat merges as arbitrarily expensive.
+        assert!(Policy::fixed(1).spill_pays_off(1, usize::MAX / 8));
+    }
+
+    #[test]
+    fn evicted_tenant_reloads_from_spill_instead_of_remerging() {
+        use crate::util::tmp::unique_temp_dir;
+        let spill_dir = unique_temp_dir("engine_spill");
+        let reg = synthetic(2, 2, 8, 2, 15).unwrap();
+        // Budget sized to hold exactly one merged model (f32 flat + two
+        // 8×8 f64 mats), so the second tenant's promotion evicts the first.
+        let one_model = reg.base().weights.len() * 4 + 2 * 8 * 8 * 8;
+        let mut opts = quick_opts();
+        opts.workers = 1; // deterministic path sequence
+        opts.promote_after = Some(1);
+        opts.cache_budget_bytes = one_model + one_model / 2;
+        opts.spill_dir = Some(spill_dir.clone());
+        let engine = Engine::new(reg, opts).unwrap();
+        assert!(engine.spill_enabled(), "fixed policy always engages the tier");
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| (i as f32).sin() * 0.3).collect();
+        let serve = |t: u64| engine.submit(t, input.clone()).unwrap().wait().unwrap();
+
+        let t0_merge = serve(0);
+        assert_eq!(t0_merge.path, ServePath::ColdMerge);
+        let t1_merge = serve(1); // evicts tenant 0 → spilled to disk
+        assert_eq!(t1_merge.path, ServePath::ColdMerge);
+        let t0_back = serve(0); // must come back from disk, not a re-merge
+        assert_eq!(t0_back.path, ServePath::SpillLoad);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(
+            bits(&t0_back.output),
+            bits(&t0_merge.output),
+            "spill-loaded weights must serve bit-identically to the merge"
+        );
+        let t0_hot = serve(0); // the spill load re-cached it
+        assert_eq!(t0_hot.path, ServePath::CachedDense);
+
+        let report = engine.finish();
+        assert_eq!(report.metrics.merges, 2, "exactly one merge per tenant");
+        assert_eq!(report.metrics.spill_loads, 1);
+        assert_eq!(report.metrics.spill.count, 1);
+        let spill = report.spill.expect("tier engaged");
+        assert_eq!(spill.hits, 1);
+        assert!(spill.puts >= 1);
+        let _ = std::fs::remove_dir_all(&spill_dir);
     }
 }

@@ -4,16 +4,20 @@
 //! mixed-tenant traffic.
 //!
 //! - [`registry`] — adapters keyed by tenant id over a shared base
-//!   [`crate::coordinator::FlatSpec`] buffer
-//! - [`cache`] — byte-budgeted LRU of merged (`W' = Q W`) weights
+//!   [`crate::coordinator::FlatSpec`] buffer; in-memory or backed by the
+//!   durable [`crate::store::AdapterStore`] with lazy hydration and
+//!   whole-fleet snapshot/restore
+//! - [`cache`] — byte-budgeted LRU of merged (`W' = Q W`) weights,
+//!   handing evicted models back for the disk spill tier
 //! - [`batcher`] — size/deadline micro-batching of same-tenant requests
 //! - [`engine`] — worker engine on [`crate::util::pool`]:
-//!   `submit(tenant, input) -> Handle`, three serving paths
-//!   (cached dense / cold merge / factorized GS apply), and
+//!   `submit(tenant, input) -> Handle`, four serving paths
+//!   (cached dense / cold merge / factorized GS apply / spill load), and
 //!   latency/throughput/hit-rate metrics
 //!
 //! Benchmarked by `gsoft serve-bench` and `rust/benches/serve.rs` with a
-//! Zipf tenant-popularity trace from [`crate::data::zipf`].
+//! Zipf tenant-popularity trace from [`crate::data::zipf`]; the
+//! store-backed tiers by `gsoft store-bench` and `rust/benches/store.rs`.
 
 pub mod batcher;
 pub mod cache;
@@ -21,9 +25,9 @@ pub mod engine;
 pub mod registry;
 
 pub use batcher::{Batch, MicroBatcher};
-pub use cache::{CacheStats, CachedModel, MergedCache};
+pub use cache::{CacheStats, CachedModel, Inserted, MergedCache};
 pub use engine::{
     Engine, EngineOpts, EngineReport, Handle, MetricsSnapshot, PathStats, Policy, ServeOutput,
-    ServePath,
+    ServePath, SPILL_FLOPS_PER_BYTE,
 };
 pub use registry::{synthetic, synthetic_conv, AdapterEntry, BaseModel, Registry, TenantId};

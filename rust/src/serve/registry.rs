@@ -2,14 +2,26 @@
 //! [`FlatSpec`]) shared by every tenant, plus per-tenant adapter parameters
 //! (GSOFT / OFT / LoRA — the §6.1 use-case of thousands of cheap
 //! orthogonal adapters over one pretrained model).
+//!
+//! Two modes share one API:
+//! - **in-memory** ([`Registry::new`]) — tenants live in a `HashMap`;
+//! - **store-backed** ([`Registry::with_store`]) — the durable
+//!   [`crate::store::AdapterStore`] is the source of truth;
+//!   registrations write through to the segment log before they are
+//!   acknowledged, lookups hydrate lazily from disk into the in-RAM map
+//!   (droppable again with [`Registry::drop_hydrated`]), and the whole
+//!   fleet can be [`Registry::snapshot`]ed to / [`Registry::restore`]d
+//!   from a single `GSAD` fleet file.
 
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::path::Path;
+use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::merge::{merge_adapter, AdapterKind};
 use crate::coordinator::FlatSpec;
+use crate::store::{gsad, AdapterStore};
 use crate::util::rng::Rng;
 
 /// Tenant identifier (subject / task / user id).
@@ -31,10 +43,14 @@ pub struct BaseModel {
 }
 
 /// Registry of adapters keyed by tenant id over one shared base.
-/// Registration is concurrent-safe (`RwLock`); lookups clone `Arc`s only.
+/// Registration is concurrent-safe (`RwLock`); lookups clone `Arc`s only
+/// (in store-backed mode a cold lookup additionally pays one disk read).
 pub struct Registry {
     base: BaseModel,
+    /// In-memory mode: the tenant set. Store-backed mode: the hydration
+    /// cache — always a subset of the store's live set.
     tenants: RwLock<HashMap<TenantId, AdapterEntry>>,
+    store: Option<Mutex<AdapterStore>>,
 }
 
 impl Registry {
@@ -51,20 +67,59 @@ impl Registry {
                 spec: Arc::new(base_spec),
             },
             tenants: RwLock::new(HashMap::new()),
+            store: None,
         })
+    }
+
+    /// Store-backed mode: mount a durable [`AdapterStore`] under the same
+    /// API. Tenants already in the store are served via lazy hydration
+    /// (nothing is loaded here — cold boot is O(log replay), not
+    /// O(fleet)); new registrations are durably appended before they are
+    /// acknowledged.
+    pub fn with_store(
+        base_weights: Vec<f32>,
+        base_spec: FlatSpec,
+        store: AdapterStore,
+    ) -> Result<Registry> {
+        let mut reg = Registry::new(base_weights, base_spec)?;
+        reg.store = Some(Mutex::new(store));
+        Ok(reg)
     }
 
     pub fn base(&self) -> &BaseModel {
         &self.base
     }
 
-    /// Register (or replace) a tenant's adapter. Validates the parameter
-    /// buffer against its spec, that every adapted layer exists in the
-    /// base spec, and that every slab's shape is consistent with the
-    /// adapter kind and the adapted layer's dimensions — a malformed
-    /// entry must be rejected here, not panic later inside a serving
-    /// worker.
+    /// Whether this registry is backed by a durable store.
+    pub fn is_store_backed(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// Register (or replace) a tenant's adapter. Validates
+    /// ([`Registry::validate`]), then — in store-backed mode — durably
+    /// appends to the segment log *before* the in-RAM insert, so an
+    /// acknowledged registration survives a crash.
+    /// Lock order everywhere in this type: `tenants` (write) before
+    /// `store` — holding the map lock across the durable append keeps
+    /// RAM and log in agreement under concurrent register / unregister /
+    /// hydrate (two racing re-registrations must not leave the map on
+    /// v1 while the log's live record is v2).
     pub fn register(&self, tenant: TenantId, entry: AdapterEntry) -> Result<()> {
+        self.validate(tenant, &entry)?;
+        let mut map = self.tenants.write().unwrap();
+        if let Some(store) = &self.store {
+            store.lock().unwrap().put(tenant, &entry)?;
+        }
+        map.insert(tenant, entry);
+        Ok(())
+    }
+
+    /// Validate an adapter entry: the parameter buffer against its spec,
+    /// that every adapted layer exists in the base spec, and that every
+    /// slab's shape is consistent with the adapter kind and the adapted
+    /// layer's dimensions — a malformed entry must be rejected here (and
+    /// at hydration time), not panic later inside a serving worker.
+    fn validate(&self, tenant: TenantId, entry: &AdapterEntry) -> Result<()> {
         anyhow::ensure!(
             entry.params.len() == entry.spec.size(),
             "tenant {tenant}: adapter buffer has {} floats but spec expects {}",
@@ -192,21 +247,107 @@ impl Registry {
                 }
             }
         }
-        self.tenants.write().unwrap().insert(tenant, entry);
         Ok(())
     }
 
-    /// Cheap lookup (Arc clones).
+    /// Cheap lookup (Arc clones); in store-backed mode a RAM miss
+    /// hydrates from disk (validated, then cached for later lookups). A
+    /// hydration I/O or validation failure is reported and served as
+    /// `None` — a corrupt store entry must degrade, not panic a worker.
     pub fn get(&self, tenant: TenantId) -> Option<AdapterEntry> {
-        self.tenants.read().unwrap().get(&tenant).cloned()
+        if let Some(e) = self.tenants.read().unwrap().get(&tenant).cloned() {
+            return Some(e);
+        }
+        match self.hydrate(tenant) {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!("[registry] hydrating tenant {tenant} failed: {err:#}");
+                None
+            }
+        }
+    }
+
+    fn hydrate(&self, tenant: TenantId) -> Result<Option<AdapterEntry>> {
+        let Some(store) = &self.store else {
+            return Ok(None);
+        };
+        // Map lock first (see `register` for the order), held across the
+        // disk read: a hydration must not resurrect a tenant that a
+        // concurrent `unregister` tombstones between our read and insert.
+        let mut map = self.tenants.write().unwrap();
+        if let Some(e) = map.get(&tenant) {
+            return Ok(Some(e.clone())); // raced hydrator landed first
+        }
+        let Some(entry) = store.lock().unwrap().get(tenant)? else {
+            return Ok(None);
+        };
+        self.validate(tenant, &entry)?;
+        map.insert(tenant, entry.clone());
+        Ok(Some(entry))
+    }
+
+    /// Read a tenant's entry *without* populating the hydration cache —
+    /// for maintenance reads (snapshots, policy inference) that must not
+    /// silently pin the whole fleet in RAM.
+    fn read_uncached(&self, tenant: TenantId) -> Result<Option<AdapterEntry>> {
+        if let Some(e) = self.tenants.read().unwrap().get(&tenant).cloned() {
+            return Ok(Some(e));
+        }
+        let Some(store) = &self.store else {
+            return Ok(None);
+        };
+        store.lock().unwrap().get(tenant)
+    }
+
+    /// A tenant's adapter kind without hydrating it (store-backed lookups
+    /// decode the record and drop it) — the engine's policy inference
+    /// must not defeat lazy cold boot.
+    pub fn kind_of(&self, tenant: TenantId) -> Option<AdapterKind> {
+        self.read_uncached(tenant).ok().flatten().map(|e| e.kind)
+    }
+
+    /// Drop a tenant's in-RAM hydration, keeping the durable record
+    /// (store-backed mode only — without a backing store this would lose
+    /// the adapter, so it is a no-op there).
+    pub fn drop_hydrated(&self, tenant: TenantId) {
+        if self.store.is_some() {
+            self.tenants.write().unwrap().remove(&tenant);
+        }
+    }
+
+    /// Number of tenants currently hydrated in RAM (== [`Registry::len`]
+    /// for in-memory registries).
+    pub fn hydrated_len(&self) -> usize {
+        self.tenants.read().unwrap().len()
+    }
+
+    /// Remove a tenant entirely (tombstoned in the store when backed).
+    /// Returns `false` if the tenant was unknown.
+    pub fn unregister(&self, tenant: TenantId) -> Result<bool> {
+        let mut map = self.tenants.write().unwrap();
+        let in_ram = map.remove(&tenant).is_some();
+        if let Some(store) = &self.store {
+            let in_store = store.lock().unwrap().delete(tenant)?;
+            return Ok(in_ram || in_store);
+        }
+        Ok(in_ram)
     }
 
     pub fn contains(&self, tenant: TenantId) -> bool {
-        self.tenants.read().unwrap().contains_key(&tenant)
+        if self.tenants.read().unwrap().contains_key(&tenant) {
+            return true;
+        }
+        self.store
+            .as_ref()
+            .is_some_and(|s| s.lock().unwrap().contains(tenant))
     }
 
     pub fn len(&self) -> usize {
-        self.tenants.read().unwrap().len()
+        match &self.store {
+            // Write-through keeps RAM ⊆ store, so the store is authoritative.
+            Some(s) => s.lock().unwrap().len(),
+            None => self.tenants.read().unwrap().len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -214,9 +355,68 @@ impl Registry {
     }
 
     pub fn tenant_ids(&self) -> Vec<TenantId> {
-        let mut ids: Vec<TenantId> = self.tenants.read().unwrap().keys().copied().collect();
-        ids.sort_unstable();
-        ids
+        match &self.store {
+            Some(s) => s.lock().unwrap().tenant_ids(),
+            None => {
+                let mut ids: Vec<TenantId> =
+                    self.tenants.read().unwrap().keys().copied().collect();
+                ids.sort_unstable();
+                ids
+            }
+        }
+    }
+
+    /// Eagerly hydrate every stored tenant (cold-boot warmup). Returns
+    /// the number of tenants hydrated from disk.
+    pub fn hydrate_all(&self) -> Result<usize> {
+        let mut n = 0;
+        for t in self.tenant_ids() {
+            if !self.tenants.read().unwrap().contains_key(&t) {
+                anyhow::ensure!(
+                    self.hydrate(t)?.is_some(),
+                    "tenant {t} listed by the store but not hydratable"
+                );
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Snapshot the whole fleet — base model plus every tenant's adapter —
+    /// into one `GSAD` fleet file. Store-backed tenants are read without
+    /// entering the hydration cache, so a backup does not permanently
+    /// inflate RAM from O(hot set) to O(fleet).
+    pub fn snapshot(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut tenants = Vec::new();
+        for t in self.tenant_ids() {
+            let e = self
+                .read_uncached(t)?
+                .ok_or_else(|| anyhow!("tenant {t} vanished during snapshot"))?;
+            tenants.push((t, e));
+        }
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, gsad::encode_fleet(&self.base, &tenants))
+            .with_context(|| format!("writing fleet snapshot {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Rebuild a registry (in-memory mode) from a fleet snapshot; every
+    /// adapter is re-validated on the way in.
+    pub fn restore(path: impl AsRef<Path>) -> Result<Registry> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading fleet snapshot {}", path.display()))?;
+        let (base, base_spec, tenants) = gsad::decode_fleet(&bytes)?;
+        let reg = Registry::new(base, base_spec)?;
+        for (t, e) in tenants {
+            reg.register(t, e)?;
+        }
+        Ok(reg)
     }
 
     /// Cold merge: produce the tenant's dense merged base buffer
@@ -614,5 +814,195 @@ mod tests {
         };
         assert!(reg.register(9, bad).is_err(), "even kernel size");
         assert!(!reg.contains(9));
+    }
+
+    use crate::store::gsad::tests::entries_equal;
+    use crate::store::AdapterStore;
+    use crate::util::prop;
+    use crate::util::tmp::unique_temp_dir;
+
+    /// Harvest a pool of valid adapter entries (mixed kinds) plus the
+    /// base they are valid for.
+    fn entry_pool(seed: u64) -> (Vec<f32>, FlatSpec, Vec<AdapterEntry>) {
+        let donor = synthetic(6, 2, 8, 2, seed).unwrap();
+        let pool: Vec<AdapterEntry> =
+            donor.tenant_ids().into_iter().map(|t| donor.get(t).unwrap()).collect();
+        (
+            donor.base().weights.as_ref().clone(),
+            donor.base().spec.as_ref().clone(),
+            pool,
+        )
+    }
+
+    #[derive(Debug, Clone)]
+    struct RegCase {
+        /// (tenant, op, pool index); op: 0 register, 1 get, 2 unregister,
+        /// 3 drop_hydrated, 4 register an invalid entry.
+        ops: Vec<(TenantId, u8, usize)>,
+    }
+
+    fn shrink_reg(c: &RegCase) -> Vec<RegCase> {
+        let mut out = Vec::new();
+        if !c.ops.is_empty() {
+            out.push(RegCase {
+                ops: c.ops[..c.ops.len() / 2].to_vec(),
+            });
+            let mut tail = c.ops.clone();
+            tail.remove(0);
+            out.push(RegCase { ops: tail });
+        }
+        out
+    }
+
+    #[test]
+    fn store_backed_registry_behaves_identically_to_in_memory() {
+        // Property (shrinking): under a random register / get /
+        // unregister / drop-hydration sequence, a store-backed registry
+        // is observationally identical to the plain in-memory one —
+        // same membership, same sizes, and bit-identical adapters.
+        let (base, spec, pool) = entry_pool(51);
+        prop::check_shrunk(
+            "store-backed registry == in-memory registry",
+            903,
+            16,
+            |rng| RegCase {
+                ops: (0..prop::size_in(rng, 1, 20))
+                    .map(|_| {
+                        (
+                            rng.below(4) as TenantId,
+                            rng.below(5) as u8,
+                            rng.below(6),
+                        )
+                    })
+                    .collect(),
+            },
+            shrink_reg,
+            |case| {
+                let dir = unique_temp_dir("reg_equiv");
+                let mem = Registry::new(base.clone(), spec.clone()).unwrap();
+                let sb = Registry::with_store(
+                    base.clone(),
+                    spec.clone(),
+                    AdapterStore::open(&dir).unwrap(),
+                )
+                .unwrap();
+                for &(tenant, op, pick) in &case.ops {
+                    match op {
+                        0 => {
+                            let e = pool[pick].clone();
+                            mem.register(tenant, e.clone()).unwrap();
+                            sb.register(tenant, e).unwrap();
+                        }
+                        1 => {
+                            let a = mem.get(tenant);
+                            let b = sb.get(tenant);
+                            match (&a, &b) {
+                                (None, None) => {}
+                                (Some(x), Some(y)) => {
+                                    assert!(entries_equal(x, y), "get({tenant}) diverged")
+                                }
+                                _ => panic!(
+                                    "get({tenant}): in-memory {:?} vs store-backed {:?}",
+                                    a.is_some(),
+                                    b.is_some()
+                                ),
+                            }
+                        }
+                        2 => {
+                            let a = mem.unregister(tenant).unwrap();
+                            let b = sb.unregister(tenant).unwrap();
+                            assert_eq!(a, b, "unregister({tenant}) diverged");
+                        }
+                        3 => {
+                            // Dehydration is a cache action: it must not
+                            // change observable state on either side.
+                            mem.drop_hydrated(tenant);
+                            sb.drop_hydrated(tenant);
+                        }
+                        _ => {
+                            let good = &pool[pick];
+                            let bad = AdapterEntry {
+                                kind: good.kind,
+                                params: Arc::new(vec![0.0; 3]),
+                                spec: Arc::clone(&good.spec),
+                            };
+                            assert!(mem.register(tenant, bad.clone()).is_err());
+                            assert!(sb.register(tenant, bad).is_err());
+                        }
+                    }
+                    assert_eq!(mem.len(), sb.len(), "len diverged");
+                    assert_eq!(mem.tenant_ids(), sb.tenant_ids(), "tenant set diverged");
+                    for t in 0..4u64 {
+                        assert_eq!(mem.contains(t), sb.contains(t), "contains({t}) diverged");
+                    }
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+            },
+        );
+    }
+
+    #[test]
+    fn store_backed_registry_hydrates_lazily_across_reopen() {
+        let (base, spec, pool) = entry_pool(52);
+        let dir = unique_temp_dir("reg_reopen");
+        {
+            let reg = Registry::with_store(
+                base.clone(),
+                spec.clone(),
+                AdapterStore::open(&dir).unwrap(),
+            )
+            .unwrap();
+            for (t, e) in pool.iter().enumerate() {
+                reg.register(t as TenantId, e.clone()).unwrap();
+            }
+            assert!(reg.is_store_backed());
+        } // drop all in-memory state
+        let reg =
+            Registry::with_store(base, spec, AdapterStore::open(&dir).unwrap()).unwrap();
+        assert_eq!(reg.len(), pool.len(), "membership survives reopen");
+        assert_eq!(reg.hydrated_len(), 0, "reopen must not eagerly load");
+        // Maintenance reads must not populate the hydration cache: kind
+        // inspection (engine policy inference) and fleet snapshots.
+        assert_eq!(reg.kind_of(0), Some(pool[0].kind));
+        reg.snapshot(dir.join("fleet.gsad")).unwrap();
+        assert_eq!(
+            reg.hydrated_len(),
+            0,
+            "kind_of/snapshot must read uncached, not hydrate the fleet"
+        );
+        let e0 = reg.get(0).expect("tenant 0 hydrates");
+        assert!(entries_equal(&e0, &pool[0]));
+        assert_eq!(reg.hydrated_len(), 1, "get() hydrated exactly one tenant");
+        reg.drop_hydrated(0);
+        assert_eq!(reg.hydrated_len(), 0);
+        assert!(reg.contains(0), "dehydration keeps the durable record");
+        // Merging a lazily hydrated tenant works end to end.
+        let merged = reg.merge(1).unwrap();
+        assert_eq!(merged.len(), reg.base().weights.len());
+        assert_eq!(reg.hydrate_all().unwrap(), pool.len() - 1);
+        assert_eq!(reg.hydrated_len(), pool.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fleet_snapshot_restores_bit_identically() {
+        let reg = synthetic(5, 2, 8, 2, 53).unwrap();
+        let dir = unique_temp_dir("reg_fleet");
+        let path = dir.join("fleet.gsad");
+        reg.snapshot(&path).unwrap();
+        let back = Registry::restore(&path).unwrap();
+        assert_eq!(back.tenant_ids(), reg.tenant_ids());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(
+            bits(&back.base().weights),
+            bits(&reg.base().weights),
+            "base weights must survive bit-exactly"
+        );
+        for t in reg.tenant_ids() {
+            assert!(entries_equal(&back.get(t).unwrap(), &reg.get(t).unwrap()));
+            // Merges (pure functions of base+adapter) are bit-identical.
+            assert_eq!(bits(&back.merge(t).unwrap()), bits(&reg.merge(t).unwrap()));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

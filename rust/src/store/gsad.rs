@@ -1,0 +1,477 @@
+//! `GSAD` — the versioned on-disk container for adapter-store records.
+//!
+//! Every record is one [`crate::util::container`] frame (the same
+//! magic + JSON header + raw little-endian f32 payload framing as
+//! `GSCK` checkpoints) with per-section CRC32, under the `GSAD` magic.
+//! Four record schemas share the format, discriminated by the header's
+//! `"record"` field:
+//!
+//! - `adapter`   — one tenant's adapter: kind + flat spec + params slab;
+//! - `merged`    — one tenant's merged dense weights (the spill tier's
+//!   unit), tagged with a CRC of the adapter params it was merged from so
+//!   a stale spill file can never serve a re-registered tenant;
+//! - `tombstone` — a deletion marker in the segment log;
+//! - `fleet`     — a whole-registry snapshot: base spec + weights plus
+//!   every tenant's adapter in one file.
+//!
+//! Unknown versions and unknown record types are rejected up front, so a
+//! future `v2` can change any schema without old readers misparsing it.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::merge::AdapterKind;
+use crate::coordinator::FlatSpec;
+use crate::serve::registry::{AdapterEntry, BaseModel, TenantId};
+use crate::util::container::{crc32_f32, Container};
+use crate::util::json::Json;
+
+/// Container magic for every adapter-store record.
+pub const MAGIC: &[u8; 4] = b"GSAD";
+
+/// Current format version; bump on any schema change.
+pub const VERSION: usize = 1;
+
+/// One decoded `GSAD` record (fleet snapshots decode via
+/// [`decode_fleet`] instead — they are files, never log records).
+pub enum Record {
+    Adapter {
+        tenant: TenantId,
+        entry: AdapterEntry,
+    },
+    Merged {
+        tenant: TenantId,
+        /// CRC32 of the adapter params this merge was computed from.
+        params_crc: u32,
+        flat: Vec<f32>,
+    },
+    Tombstone {
+        tenant: TenantId,
+    },
+}
+
+/// CRC32 of an adapter's flat parameter slab — the tag that ties a
+/// spilled merged model to the exact adapter version it came from.
+pub fn params_crc(entry: &AdapterEntry) -> u32 {
+    crc32_f32(&entry.params)
+}
+
+// ---- AdapterKind <-> JSON --------------------------------------------------
+
+pub fn kind_to_json(kind: &AdapterKind) -> Json {
+    match *kind {
+        AdapterKind::Gsoft { block } => Json::obj(vec![
+            ("kind", Json::Str("gsoft".into())),
+            ("block", Json::Num(block as f64)),
+        ]),
+        AdapterKind::Oft { block } => Json::obj(vec![
+            ("kind", Json::Str("oft".into())),
+            ("block", Json::Num(block as f64)),
+        ]),
+        AdapterKind::Lora => Json::obj(vec![("kind", Json::Str("lora".into()))]),
+        AdapterKind::ConvGsSoc {
+            c,
+            k,
+            groups,
+            h,
+            w,
+            terms,
+        } => Json::obj(vec![
+            ("kind", Json::Str("conv_gssoc".into())),
+            ("c", Json::Num(c as f64)),
+            ("k", Json::Num(k as f64)),
+            ("groups", Json::Num(groups as f64)),
+            ("h", Json::Num(h as f64)),
+            ("w", Json::Num(w as f64)),
+            ("terms", Json::Num(terms as f64)),
+        ]),
+    }
+}
+
+pub fn kind_from_json(v: &Json) -> Result<AdapterKind> {
+    let name = v.req_str("kind").map_err(|e| anyhow!("{e}"))?;
+    let usz = |key: &str| v.req_usize(key).map_err(|e| anyhow!("adapter kind: {e}"));
+    Ok(match name {
+        "gsoft" => AdapterKind::Gsoft { block: usz("block")? },
+        "oft" => AdapterKind::Oft { block: usz("block")? },
+        "lora" => AdapterKind::Lora,
+        "conv_gssoc" => AdapterKind::ConvGsSoc {
+            c: usz("c")?,
+            k: usz("k")?,
+            groups: usz("groups")?,
+            h: usz("h")?,
+            w: usz("w")?,
+            terms: usz("terms")?,
+        },
+        other => anyhow::bail!("unknown adapter kind '{other}'"),
+    })
+}
+
+// ---- record encode/decode --------------------------------------------------
+
+fn base_meta(record: &str, tenant: TenantId) -> Vec<(&'static str, Json)> {
+    vec![
+        ("v", Json::Num(VERSION as f64)),
+        ("record", Json::Str(record.to_string())),
+        ("tenant", Json::Num(tenant as f64)),
+    ]
+}
+
+/// Encode one tenant's adapter. Params round-trip bit-exactly (f32 LE
+/// bytes), which is what makes store-backed serving bit-identical to
+/// in-memory serving.
+pub fn encode_adapter(tenant: TenantId, entry: &AdapterEntry) -> Vec<u8> {
+    let mut meta = base_meta("adapter", tenant);
+    meta.push(("kind", kind_to_json(&entry.kind)));
+    meta.push(("spec", entry.spec.to_json()));
+    let mut c = Container::new(meta);
+    c.push("params", entry.params.as_ref().clone());
+    c.encode(MAGIC, true)
+}
+
+/// Encode one tenant's merged dense weights for the spill tier.
+pub fn encode_merged(tenant: TenantId, params_crc: u32, flat: &[f32]) -> Vec<u8> {
+    let mut meta = base_meta("merged", tenant);
+    meta.push(("params_crc", Json::Num(params_crc as f64)));
+    let mut c = Container::new(meta);
+    c.push("flat", flat.to_vec());
+    c.encode(MAGIC, true)
+}
+
+/// Encode a deletion marker for the segment log.
+pub fn encode_tombstone(tenant: TenantId) -> Vec<u8> {
+    Container::new(base_meta("tombstone", tenant)).encode(MAGIC, true)
+}
+
+fn decode_common(c: &Container) -> Result<(String, TenantId)> {
+    let v = c.meta_usize("v")?;
+    anyhow::ensure!(v == VERSION, "unsupported GSAD version {v} (this reader is v{VERSION})");
+    let record = c.meta_str("record")?.to_string();
+    let tenant = c
+        .meta_req("tenant")?
+        .as_f64()
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .ok_or_else(|| anyhow!("GSAD 'tenant' is not a non-negative integer"))?
+        as TenantId;
+    Ok((record, tenant))
+}
+
+/// Decode any single-tenant record (adapter / merged / tombstone).
+pub fn decode(bytes: &[u8]) -> Result<Record> {
+    let c = Container::decode(bytes, MAGIC)?;
+    let (record, tenant) = decode_common(&c)?;
+    match record.as_str() {
+        "adapter" => {
+            let kind = kind_from_json(c.meta_req("kind")?)?;
+            let spec = FlatSpec::from_json(c.meta_req("spec")?)?;
+            let params = c.get("params")?.to_vec();
+            anyhow::ensure!(
+                params.len() == spec.size(),
+                "GSAD adapter for tenant {tenant}: {} params but spec expects {}",
+                params.len(),
+                spec.size()
+            );
+            Ok(Record::Adapter {
+                tenant,
+                entry: AdapterEntry {
+                    kind,
+                    params: Arc::new(params),
+                    spec: Arc::new(spec),
+                },
+            })
+        }
+        "merged" => Ok(Record::Merged {
+            tenant,
+            params_crc: c.meta_usize("params_crc")? as u32,
+            flat: c.get("flat")?.to_vec(),
+        }),
+        "tombstone" => Ok(Record::Tombstone { tenant }),
+        other => Err(anyhow!("unknown GSAD record type '{other}'")),
+    }
+}
+
+// ---- fleet snapshot --------------------------------------------------------
+
+/// Encode a whole-registry snapshot: the base model plus every tenant's
+/// adapter, one self-contained file.
+pub fn encode_fleet(base: &BaseModel, tenants: &[(TenantId, AdapterEntry)]) -> Vec<u8> {
+    let adapters = Json::Arr(
+        tenants
+            .iter()
+            .map(|(t, e)| {
+                Json::obj(vec![
+                    ("tenant", Json::Num(*t as f64)),
+                    ("kind", kind_to_json(&e.kind)),
+                    ("spec", e.spec.to_json()),
+                ])
+            })
+            .collect(),
+    );
+    let mut c = Container::new(vec![
+        ("v", Json::Num(VERSION as f64)),
+        ("record", Json::Str("fleet".into())),
+        ("base_spec", base.spec.to_json()),
+        ("adapters", adapters),
+    ]);
+    c.push("base", base.weights.as_ref().clone());
+    for (t, e) in tenants {
+        c.push(&format!("t{t}"), e.params.as_ref().clone());
+    }
+    c.encode(MAGIC, true)
+}
+
+/// Decode a fleet snapshot into (base weights, base spec, adapters).
+#[allow(clippy::type_complexity)]
+pub fn decode_fleet(bytes: &[u8]) -> Result<(Vec<f32>, FlatSpec, Vec<(TenantId, AdapterEntry)>)> {
+    let c = Container::decode(bytes, MAGIC)?;
+    let v = c.meta_usize("v")?;
+    anyhow::ensure!(v == VERSION, "unsupported GSAD version {v} (this reader is v{VERSION})");
+    anyhow::ensure!(
+        c.meta_str("record")? == "fleet",
+        "not a fleet snapshot (record = '{}')",
+        c.meta_str("record")?
+    );
+    let base_spec = FlatSpec::from_json(c.meta_req("base_spec")?)?;
+    let base = c.get("base")?.to_vec();
+    let mut tenants = Vec::new();
+    for a in c
+        .meta_req("adapters")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("fleet 'adapters' is not an array"))?
+    {
+        let tenant = a
+            .req("tenant")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+            .ok_or_else(|| anyhow!("fleet tenant id is not a non-negative integer"))?
+            as TenantId;
+        let kind = kind_from_json(a.req("kind").map_err(|e| anyhow!("{e}"))?)?;
+        let spec = FlatSpec::from_json(a.req("spec").map_err(|e| anyhow!("{e}"))?)?;
+        let params = c.get(&format!("t{tenant}"))?.to_vec();
+        anyhow::ensure!(
+            params.len() == spec.size(),
+            "fleet adapter for tenant {tenant}: {} params but spec expects {}",
+            params.len(),
+            spec.size()
+        );
+        tenants.push((
+            tenant,
+            AdapterEntry {
+                kind,
+                params: Arc::new(params),
+                spec: Arc::new(spec),
+            },
+        ));
+    }
+    Ok((base, base_spec, tenants))
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// A random adapter entry of each kind, with structurally valid
+    /// (kind-consistent) spec shapes.
+    pub(crate) fn random_entry(rng: &mut Rng, which: usize) -> AdapterEntry {
+        let layers = prop::size_in(rng, 1, 3);
+        let names: Vec<String> = (0..layers).map(|i| format!("layer{i}.w")).collect();
+        match which % 4 {
+            0 | 3 => {
+                let b = [2usize, 4][rng.below(2)];
+                let r = prop::size_in(rng, 1, 4);
+                let gsoft = which % 4 == 0;
+                let entries = names
+                    .iter()
+                    .flat_map(|n| {
+                        if gsoft {
+                            vec![
+                                (format!("{n}.gs_l"), vec![r, b, b]),
+                                (format!("{n}.gs_r"), vec![r, b, b]),
+                            ]
+                        } else {
+                            vec![(format!("{n}.oft_k"), vec![r, b, b])]
+                        }
+                    })
+                    .collect();
+                let spec = FlatSpec { entries };
+                let params = rng.normal_vec(spec.size(), 0.4);
+                AdapterEntry {
+                    kind: if gsoft {
+                        AdapterKind::Gsoft { block: b }
+                    } else {
+                        AdapterKind::Oft { block: b }
+                    },
+                    params: Arc::new(params),
+                    spec: Arc::new(spec),
+                }
+            }
+            1 => {
+                let d = prop::size_in(rng, 2, 8);
+                let rank = prop::size_in(rng, 1, d);
+                let entries = names
+                    .iter()
+                    .flat_map(|n| {
+                        vec![
+                            (format!("{n}.lora_a"), vec![d, rank]),
+                            (format!("{n}.lora_b"), vec![rank, d]),
+                        ]
+                    })
+                    .collect();
+                let spec = FlatSpec { entries };
+                let params = rng.normal_vec(spec.size(), 0.1);
+                AdapterEntry {
+                    kind: AdapterKind::Lora,
+                    params: Arc::new(params),
+                    spec: Arc::new(spec),
+                }
+            }
+            _ => {
+                let groups = [1usize, 2][rng.below(2)];
+                let c = groups * prop::size_in(rng, 1, 3);
+                let k = [1usize, 3][rng.below(2)];
+                let entries = names
+                    .iter()
+                    .map(|n| (format!("{n}.soc_k"), vec![c, c / groups, k, k]))
+                    .collect();
+                let spec = FlatSpec { entries };
+                let params = rng.normal_vec(spec.size(), 0.05);
+                AdapterEntry {
+                    kind: AdapterKind::ConvGsSoc {
+                        c,
+                        k,
+                        groups,
+                        h: prop::size_in(rng, 1, 3),
+                        w: prop::size_in(rng, 1, 3),
+                        terms: prop::size_in(rng, 1, 8),
+                    },
+                    params: Arc::new(params),
+                    spec: Arc::new(spec),
+                }
+            }
+        }
+    }
+
+    pub(crate) fn entries_equal(a: &AdapterEntry, b: &AdapterEntry) -> bool {
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        a.kind == b.kind && a.spec == b.spec && bits(&a.params) == bits(&b.params)
+    }
+
+    #[test]
+    fn adapter_round_trip_is_identity_for_every_kind() {
+        // Property (shrinking on params): encode → decode is the identity
+        // for random adapters of every AdapterKind, bit-for-bit.
+        prop::check_shrunk(
+            "GSAD adapter round-trip",
+            901,
+            32,
+            |rng| {
+                let which = rng.below(4);
+                let entry = random_entry(rng, which);
+                let tenant = rng.below(1 << 20) as TenantId;
+                (tenant, entry.kind, entry.spec.as_ref().clone(), entry.params.as_ref().clone())
+            },
+            |(t, kind, spec, params)| {
+                prop::shrink_vec_f32(params)
+                    .into_iter()
+                    .map(|p| (*t, *kind, spec.clone(), p))
+                    .collect()
+            },
+            |(tenant, kind, spec, params)| {
+                let entry = AdapterEntry {
+                    kind: *kind,
+                    params: Arc::new(params.clone()),
+                    spec: Arc::new(spec.clone()),
+                };
+                let bytes = encode_adapter(*tenant, &entry);
+                match decode(&bytes).expect("decode") {
+                    Record::Adapter { tenant: t, entry: back } => {
+                        assert_eq!(t, *tenant);
+                        assert!(entries_equal(&entry, &back), "adapter drifted through GSAD");
+                    }
+                    _ => panic!("wrong record type"),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn merged_and_tombstone_round_trip() {
+        let flat = vec![1.5f32, -2.0, 0.0, 3.25];
+        let bytes = encode_merged(42, 0xDEAD_BEEF, &flat);
+        match decode(&bytes).unwrap() {
+            Record::Merged {
+                tenant,
+                params_crc,
+                flat: back,
+            } => {
+                assert_eq!(tenant, 42);
+                assert_eq!(params_crc, 0xDEAD_BEEF);
+                assert_eq!(back, flat);
+            }
+            _ => panic!("wrong record type"),
+        }
+        match decode(&encode_tombstone(7)).unwrap() {
+            Record::Tombstone { tenant } => assert_eq!(tenant, 7),
+            _ => panic!("wrong record type"),
+        }
+    }
+
+    /// Rewrite one substring of the JSON header region, adjusting the
+    /// declared header length; the binary payload is untouched.
+    fn with_patched_header(bytes: &[u8], from: &str, to: &str) -> Vec<u8> {
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).unwrap();
+        assert!(header.contains(from), "header lacks '{from}': {header}");
+        let patched = header.replacen(from, to, 1);
+        let mut out = bytes[..4].to_vec();
+        out.extend_from_slice(&(patched.len() as u32).to_le_bytes());
+        out.extend_from_slice(patched.as_bytes());
+        out.extend_from_slice(&bytes[8 + hlen..]);
+        out
+    }
+
+    #[test]
+    fn unknown_version_and_record_type_are_rejected() {
+        let mut rng = Rng::new(5);
+        let entry = random_entry(&mut rng, 0);
+        let bytes = encode_adapter(1, &entry);
+        let flipped = with_patched_header(
+            &bytes,
+            &format!("\"v\":{VERSION}"),
+            &format!("\"v\":{}", VERSION + 8),
+        );
+        assert!(decode(&flipped).is_err(), "future version must be rejected");
+        let flipped = with_patched_header(&bytes, "\"record\":\"adapter\"", "\"record\":\"zzz\"");
+        assert!(decode(&flipped).is_err(), "unknown record type must be rejected");
+    }
+
+    #[test]
+    fn fleet_round_trip() {
+        let mut rng = Rng::new(9);
+        let base_spec = FlatSpec {
+            entries: vec![("layer0.w".into(), vec![4, 4]), ("head".into(), vec![4, 2])],
+        };
+        let base = BaseModel {
+            weights: Arc::new(rng.normal_vec(base_spec.size(), 1.0)),
+            spec: Arc::new(base_spec),
+        };
+        let tenants: Vec<(TenantId, AdapterEntry)> = (0..5)
+            .map(|t| (t as TenantId, random_entry(&mut rng, t)))
+            .collect();
+        let bytes = encode_fleet(&base, &tenants);
+        let (bw, bs, back) = decode_fleet(&bytes).unwrap();
+        assert_eq!(&bw, base.weights.as_ref());
+        assert_eq!(&bs, base.spec.as_ref());
+        assert_eq!(back.len(), tenants.len());
+        for ((t0, e0), (t1, e1)) in tenants.iter().zip(back.iter()) {
+            assert_eq!(t0, t1);
+            assert!(entries_equal(e0, e1));
+        }
+        // A single-tenant record is not a fleet.
+        assert!(decode_fleet(&encode_tombstone(0)).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Persistent tiered adapter store (DESIGN.md §7).
+//!
+//! The paper's economics make a two-tier layout natural: GS-OFT adapter
+//! *factors* are tiny (O(d·b) floats per layer) while *merged* dense
+//! weights are O(d²) — so the store persists the cheap factors durably in
+//! an append-only segment log and spills the expensive merged products to
+//! a size-capped disk cache, hydrating either lazily:
+//!
+//! ```text
+//!            RAM                          disk
+//!   ┌─────────────────────┐   ┌─────────────────────────────┐
+//!   │ Registry tenant map │◄──│ factor tier: segment log of │
+//!   │ (hydrated entries)  │   │ GSAD adapter records + index│  durable
+//!   ├─────────────────────┤   ├─────────────────────────────┤
+//!   │ MergedCache (LRU of │◄──│ spill tier: t{id}.gsad      │  cache
+//!   │ merged weights)     │──►│ merged-weight files         │  (lossy)
+//!   └─────────────────────┘   └─────────────────────────────┘
+//! ```
+//!
+//! - [`gsad`] — the versioned `GSAD` record format (shared
+//!   [`crate::util::container`] framing, per-section CRC32);
+//! - [`log`] — the append-only segment log: synced appends, tombstone
+//!   deletes, torn-tail recovery, synchronous compaction past a garbage
+//!   ratio;
+//! - [`spill`] — the merged-weight disk tier, params-CRC-tagged so stale
+//!   spills can never serve a re-registered tenant;
+//! - [`AdapterStore`] — the facade the serving registry mounts
+//!   ([`crate::serve::Registry::with_store`]).
+//!
+//! Durability invariants: an acknowledged `put` survives crash+reopen; a
+//! torn tail loses only unacknowledged writes; the factor tier is the
+//! source of truth and the spill tier is a pure cache (safe to `rm -rf`).
+
+pub mod gsad;
+pub mod log;
+pub mod spill;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::registry::{AdapterEntry, TenantId};
+
+pub use log::{LogOpts, LogStats, SegmentLog};
+pub use spill::{SpillStats, SpillTier};
+
+/// File name of the factor-tier segment log inside a store directory.
+pub const LOG_FILE: &str = "adapters.log";
+
+/// The durable factor tier: tenant adapters in a segment log under one
+/// directory. (The spill tier is owned by the serving engine, which knows
+/// merged-model sizes and the load-vs-remerge break-even; see
+/// [`crate::serve::EngineOpts::spill_dir`].)
+pub struct AdapterStore {
+    dir: PathBuf,
+    log: SegmentLog,
+}
+
+impl AdapterStore {
+    /// Open (creating if needed) the store at `dir`, replaying its log.
+    pub fn open(dir: impl AsRef<Path>) -> Result<AdapterStore> {
+        AdapterStore::open_with(dir, LogOpts::default())
+    }
+
+    pub fn open_with(dir: impl AsRef<Path>, opts: LogOpts) -> Result<AdapterStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let log = SegmentLog::open(dir.join(LOG_FILE), opts)?;
+        Ok(AdapterStore { dir, log })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Durably persist (or overwrite) a tenant's adapter. On return the
+    /// record is synced to disk and will survive crash + reopen.
+    pub fn put(&mut self, tenant: TenantId, entry: &AdapterEntry) -> Result<()> {
+        self.log.append(tenant, &gsad::encode_adapter(tenant, entry))
+    }
+
+    /// Load a tenant's adapter (CRC-verified), or `None` if absent.
+    pub fn get(&mut self, tenant: TenantId) -> Result<Option<AdapterEntry>> {
+        let Some(payload) = self.log.get(tenant)? else {
+            return Ok(None);
+        };
+        match gsad::decode(&payload)? {
+            gsad::Record::Adapter { tenant: t, entry } => {
+                anyhow::ensure!(
+                    t == tenant,
+                    "store index points tenant {tenant} at a record for tenant {t}"
+                );
+                Ok(Some(entry))
+            }
+            _ => Err(anyhow!("store record for tenant {tenant} is not an adapter")),
+        }
+    }
+
+    /// Tombstone a tenant. Returns `false` if it was not present.
+    pub fn delete(&mut self, tenant: TenantId) -> Result<bool> {
+        self.log.delete(tenant)
+    }
+
+    pub fn contains(&self, tenant: TenantId) -> bool {
+        self.log.contains(tenant)
+    }
+
+    pub fn len(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty()
+    }
+
+    pub fn tenant_ids(&self) -> Vec<TenantId> {
+        self.log.tenant_ids()
+    }
+
+    /// Force a compaction (normally triggered automatically).
+    pub fn compact(&mut self) -> Result<()> {
+        self.log.compact()
+    }
+
+    pub fn garbage_ratio(&self) -> f64 {
+        self.log.garbage_ratio()
+    }
+
+    pub fn log_stats(&self) -> LogStats {
+        self.log.stats()
+    }
+
+    pub fn file_bytes(&self) -> u64 {
+        self.log.file_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::gsad::tests::{entries_equal, random_entry};
+    use crate::util::rng::Rng;
+    use crate::util::tmp::unique_temp_dir;
+
+    #[test]
+    fn put_get_delete_survive_reopen() {
+        let dir = unique_temp_dir("store_basic");
+        let mut rng = Rng::new(41);
+        let entries: Vec<_> = (0..4).map(|i| random_entry(&mut rng, i)).collect();
+        {
+            let mut store = AdapterStore::open(&dir).unwrap();
+            for (t, e) in entries.iter().enumerate() {
+                store.put(t as TenantId, e).unwrap();
+            }
+            assert!(store.delete(2).unwrap());
+            assert_eq!(store.len(), 3);
+        }
+        let mut store = AdapterStore::open(&dir).unwrap();
+        assert_eq!(store.tenant_ids(), vec![0, 1, 3]);
+        for t in [0usize, 1, 3] {
+            let back = store.get(t as TenantId).unwrap().expect("live tenant");
+            assert!(entries_equal(&back, &entries[t]), "tenant {t} drifted");
+        }
+        assert!(store.get(2).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overwrites_return_the_latest_version() {
+        let dir = unique_temp_dir("store_update");
+        let mut rng = Rng::new(42);
+        let v1 = random_entry(&mut rng, 0);
+        let v2 = random_entry(&mut rng, 0);
+        let mut store = AdapterStore::open(&dir).unwrap();
+        store.put(5, &v1).unwrap();
+        store.put(5, &v2).unwrap();
+        let back = store.get(5).unwrap().unwrap();
+        assert!(entries_equal(&back, &v2));
+        drop(store);
+        let mut store = AdapterStore::open(&dir).unwrap();
+        assert!(entries_equal(&store.get(5).unwrap().unwrap(), &v2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,299 @@
+//! Spill tier: a size-capped disk cache of *merged* dense weights.
+//!
+//! The RAM [`crate::serve::MergedCache`] holds the hot set; when it
+//! evicts a tenant, the merged flat buffer can be spilled here instead of
+//! discarded, so the next promotion pays a disk read (sequential, cheap)
+//! instead of a full re-merge (Cayley solves + structured `Q·W`). The
+//! engine consults the Theorem-2 load-vs-remerge break-even
+//! ([`crate::serve::Policy::spill_pays_off`]) before enabling the tier.
+//!
+//! Each entry is one `GSAD` `merged` file (`t{id}.gsad`), CRC-checked and
+//! tagged with a CRC of the adapter params it was merged from:
+//! [`SpillTier::get`] takes the *expected* params CRC, so a spill
+//! directory that outlives an adapter update (or is reused across
+//! restarts) can never serve stale weights — the stale file is deleted
+//! and the lookup is a miss. Eviction is oldest-first by insertion order
+//! (rebuilt as ascending tenant id on reopen — deterministic, and good
+//! enough for a cold tier whose hit pattern the RAM LRU already shapes).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::serve::registry::TenantId;
+
+use super::gsad;
+
+/// Monotonic counters (snapshot with [`SpillTier::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub puts: u64,
+    pub evictions: u64,
+    /// Files dropped because their CRC failed or their params tag was
+    /// stale.
+    pub invalidations: u64,
+}
+
+/// The size-capped disk tier.
+pub struct SpillTier {
+    dir: PathBuf,
+    budget_bytes: u64,
+    used_bytes: u64,
+    /// Tenant → file size in bytes.
+    index: HashMap<TenantId, u64>,
+    /// Insertion order, oldest first (each tenant appears at most once).
+    order: Vec<TenantId>,
+    stats: SpillStats,
+}
+
+impl SpillTier {
+    /// Open the tier at `dir` (created if absent), rebuilding the index
+    /// from the `t{id}.gsad` files already present. Files over budget are
+    /// evicted oldest-first immediately, so a shrunk budget takes effect
+    /// on open.
+    pub fn open(dir: impl AsRef<Path>, budget_bytes: u64) -> Result<SpillTier> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let mut entries: Vec<(TenantId, u64)> = Vec::new();
+        for e in std::fs::read_dir(&dir)? {
+            let e = e?;
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            // A crash between tmp-write and rename strands a `.gsad.tmp`
+            // file the index would never see; reap it here so leaked
+            // bytes cannot accumulate outside the budget accounting.
+            if name.ends_with(".gsad.tmp") {
+                let _ = std::fs::remove_file(e.path());
+                continue;
+            }
+            let Some(id) = name
+                .strip_prefix('t')
+                .and_then(|s| s.strip_suffix(".gsad"))
+                .and_then(|s| s.parse::<TenantId>().ok())
+            else {
+                continue;
+            };
+            entries.push((id, e.metadata()?.len()));
+        }
+        entries.sort_unstable_by_key(|&(id, _)| id);
+        let mut tier = SpillTier {
+            dir,
+            budget_bytes,
+            used_bytes: entries.iter().map(|&(_, b)| b).sum(),
+            order: entries.iter().map(|&(id, _)| id).collect(),
+            index: entries.into_iter().collect(),
+            stats: SpillStats::default(),
+        };
+        while tier.used_bytes > tier.budget_bytes {
+            if !tier.evict_oldest() {
+                break;
+            }
+        }
+        Ok(tier)
+    }
+
+    fn path_of(&self, tenant: TenantId) -> PathBuf {
+        self.dir.join(format!("t{tenant}.gsad"))
+    }
+
+    fn remove_entry(&mut self, tenant: TenantId) {
+        if let Some(bytes) = self.index.remove(&tenant) {
+            self.used_bytes -= bytes;
+            self.order.retain(|&t| t != tenant);
+            let _ = std::fs::remove_file(self.path_of(tenant));
+        }
+    }
+
+    fn evict_oldest(&mut self) -> bool {
+        let Some(&oldest) = self.order.first() else {
+            return false;
+        };
+        self.remove_entry(oldest);
+        self.stats.evictions += 1;
+        true
+    }
+
+    /// Write a tenant's merged weights, evicting oldest entries until the
+    /// tier fits its budget. Returns `false` (storing nothing) when the
+    /// single file would exceed the whole budget. The write is
+    /// tmp-then-rename, so a crash mid-write leaves no torn entry.
+    pub fn put(&mut self, tenant: TenantId, params_crc: u32, flat: &[f32]) -> Result<bool> {
+        let bytes = gsad::encode_merged(tenant, params_crc, flat);
+        let size = bytes.len() as u64;
+        if size > self.budget_bytes {
+            return Ok(false);
+        }
+        self.remove_entry(tenant);
+        while self.used_bytes + size > self.budget_bytes {
+            if !self.evict_oldest() {
+                break;
+            }
+        }
+        let path = self.path_of(tenant);
+        let tmp = self.dir.join(format!("t{tenant}.gsad.tmp"));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming spill file {}", path.display()))?;
+        self.used_bytes += size;
+        self.index.insert(tenant, size);
+        self.order.push(tenant);
+        self.stats.puts += 1;
+        Ok(true)
+    }
+
+    /// Load a tenant's merged weights if present, fresh (the stored
+    /// params CRC matches `expected_params_crc`), and intact (container
+    /// CRC passes). Corrupt or stale entries are deleted and count as
+    /// misses.
+    pub fn get(&mut self, tenant: TenantId, expected_params_crc: u32) -> Option<Vec<f32>> {
+        if !self.index.contains_key(&tenant) {
+            self.stats.misses += 1;
+            return None;
+        }
+        let loaded = std::fs::read(self.path_of(tenant))
+            .ok()
+            .and_then(|bytes| gsad::decode(&bytes).ok());
+        match loaded {
+            Some(gsad::Record::Merged {
+                tenant: t,
+                params_crc,
+                flat,
+            }) if t == tenant && params_crc == expected_params_crc => {
+                self.stats.hits += 1;
+                Some(flat)
+            }
+            _ => {
+                // Corrupt, stale, or mislabeled: drop it.
+                self.remove_entry(tenant);
+                self.stats.invalidations += 1;
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn contains(&self, tenant: TenantId) -> bool {
+        self.index.contains_key(&tenant)
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn stats(&self) -> SpillStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::unique_temp_dir;
+
+    #[test]
+    fn put_get_round_trip_and_stats() {
+        let dir = unique_temp_dir("spill_basic");
+        let mut tier = SpillTier::open(&dir, 1 << 20).unwrap();
+        let flat = vec![0.25f32, -1.0, 3.5];
+        assert!(tier.put(4, 0xAB, &flat).unwrap());
+        assert_eq!(tier.get(4, 0xAB).as_deref(), Some(flat.as_slice()));
+        assert!(tier.get(5, 0xAB).is_none(), "absent tenant");
+        let s = tier.stats();
+        assert_eq!((s.puts, s.hits, s.misses), (1, 1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_params_crc_invalidates_the_file() {
+        // The adapter was updated after this merge was spilled: the tier
+        // must refuse to serve the stale weights and delete the file.
+        let dir = unique_temp_dir("spill_stale");
+        let mut tier = SpillTier::open(&dir, 1 << 20).unwrap();
+        tier.put(1, 0x11, &[1.0, 2.0]).unwrap();
+        assert!(tier.get(1, 0x22).is_none(), "stale entry must miss");
+        assert!(!tier.contains(1), "stale entry must be dropped");
+        assert_eq!(tier.stats().invalidations, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_file_is_dropped_not_served() {
+        let dir = unique_temp_dir("spill_corrupt");
+        let mut tier = SpillTier::open(&dir, 1 << 20).unwrap();
+        tier.put(2, 0x11, &[1.0; 16]).unwrap();
+        // Flip a payload byte behind the tier's back.
+        let path = dir.join("t2.gsad");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(tier.get(2, 0x11).is_none());
+        assert!(!tier.contains(2));
+        assert_eq!(tier.stats().invalidations, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_evicts_oldest_and_refuses_oversized() {
+        let dir = unique_temp_dir("spill_budget");
+        // Size one entry, then budget for about two.
+        let mut probe = SpillTier::open(dir.join("probe"), u64::MAX).unwrap();
+        probe.put(0, 0, &[0.0; 64]).unwrap();
+        let one = probe.used_bytes();
+        let mut tier = SpillTier::open(dir.join("tier"), 2 * one + one / 2).unwrap();
+        assert!(tier.put(1, 0, &[1.0; 64]).unwrap());
+        assert!(tier.put(2, 0, &[2.0; 64]).unwrap());
+        assert!(tier.put(3, 0, &[3.0; 64]).unwrap());
+        assert!(!tier.contains(1), "oldest evicted");
+        assert!(tier.contains(2) && tier.contains(3));
+        assert!(tier.used_bytes() <= tier.budget_bytes());
+        assert_eq!(tier.stats().evictions, 1);
+        // A single entry larger than the whole budget is refused.
+        let mut tiny = SpillTier::open(dir.join("tiny"), 16).unwrap();
+        assert!(!tiny.put(9, 0, &[0.0; 1024]).unwrap());
+        assert!(tiny.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_rebuilds_the_index_from_disk() {
+        let dir = unique_temp_dir("spill_reopen");
+        {
+            let mut tier = SpillTier::open(&dir, 1 << 20).unwrap();
+            tier.put(7, 0x77, &[7.0; 8]).unwrap();
+            tier.put(8, 0x88, &[8.0; 8]).unwrap();
+        }
+        // An orphaned tmp file (crash between write and rename) must be
+        // reaped by the scan, not leak outside the budget accounting.
+        std::fs::write(dir.join("t9.gsad.tmp"), b"torn").unwrap();
+        let mut tier = SpillTier::open(&dir, 1 << 20).unwrap();
+        assert_eq!(tier.len(), 2);
+        assert!(
+            !dir.join("t9.gsad.tmp").exists(),
+            "orphaned tmp files must be deleted on open"
+        );
+        assert_eq!(tier.get(7, 0x77).as_deref(), Some(&[7.0f32; 8][..]));
+        assert_eq!(tier.get(8, 0x88).as_deref(), Some(&[8.0f32; 8][..]));
+        // Reopen with a tiny budget drops entries to fit.
+        drop(tier);
+        let tier = SpillTier::open(&dir, 8).unwrap();
+        assert!(tier.used_bytes() <= 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

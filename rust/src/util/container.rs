@@ -1,0 +1,444 @@
+//! Self-describing on-disk container framing, shared by every durable
+//! format in this repo (checkpoints' `GSCK`, the adapter store's `GSAD`).
+//!
+//! Layout: 4-byte magic, u32 (LE) header length, JSON header, then raw
+//! little-endian f32 payload sections back to back. The header is the
+//! caller's schema plus a framing-owned `"sections"` array
+//! (`[{"name":…, "len":…, "crc"?:…}, …]`); when a section declares a
+//! `crc`, the payload is verified against CRC32 (IEEE) on decode. No
+//! external serialization crates — the offline environment has none.
+//!
+//! Decoding is hardened: magic, header length, and every declared section
+//! length are validated against the actual byte count *before* any
+//! allocation, so a truncated file or an absurd header length returns a
+//! clean `Err` instead of panicking or attempting a huge allocation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::json::Json;
+
+/// Upper bound on a sane JSON header — enforced on BOTH sides: decode
+/// rejects it (alongside the actual-byte-count check, which is the
+/// binding limit for small files), and encode refuses to produce a
+/// container its own reader could not load. 1 GiB of header is a few
+/// million fleet-snapshot tenants; past that the fleet needs a streamed
+/// format, not a bigger JSON blob (see ROADMAP).
+pub const MAX_HEADER_BYTES: usize = 1 << 30;
+
+/// Streaming CRC32 (IEEE 802.3, reflected, poly 0xEDB88320).
+///
+/// Table-driven (one lazily built 256-entry table) rather than bitwise:
+/// this runs on the spill tier's serving path over multi-MB merged
+/// models, where a shift-loop CRC alone would eat the entire
+/// flop-per-byte budget the load-vs-remerge break-even assumes.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32(u32);
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = (c >> 1) ^ (0xEDB8_8320 & (0u32.wrapping_sub(c & 1)));
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let table = crc_table();
+        let mut c = self.0;
+        for &b in bytes {
+            c = (c >> 8) ^ table[((c ^ b as u32) & 0xFF) as usize];
+        }
+        self.0 = c;
+    }
+
+    pub fn finish(self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+/// CRC32 of one byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// CRC32 of an f32 buffer's little-endian byte image — the checksum the
+/// container stores for its payload sections.
+pub fn crc32_f32(data: &[f32]) -> u32 {
+    let mut c = Crc32::new();
+    for x in data {
+        c.update(&x.to_le_bytes());
+    }
+    c.finish()
+}
+
+/// The framing-owned header: the caller's meta plus the `sections`
+/// declaration array. Refuses (loudly, at write time) a header the
+/// decoder could not load — a snapshot that silently cannot be restored
+/// is worse than a failed save.
+fn header_string(
+    meta: &BTreeMap<String, Json>,
+    sections: &[(&str, &[f32])],
+    with_crc: bool,
+) -> String {
+    let mut header = meta.clone();
+    header.insert(
+        "sections".to_string(),
+        Json::Arr(
+            sections
+                .iter()
+                .map(|&(n, v)| {
+                    let mut fields = vec![
+                        ("name", Json::Str(n.to_string())),
+                        ("len", Json::Num(v.len() as f64)),
+                    ];
+                    if with_crc {
+                        fields.push(("crc", Json::Num(crc32_f32(v) as f64)));
+                    }
+                    Json::obj(fields)
+                })
+                .collect(),
+        ),
+    );
+    let header = Json::Obj(header).to_string();
+    assert!(
+        header.len() <= MAX_HEADER_BYTES,
+        "container header of {} bytes exceeds MAX_HEADER_BYTES ({MAX_HEADER_BYTES}); \
+         this fleet needs a streamed format",
+        header.len()
+    );
+    header
+}
+
+/// Stream a container straight to disk without cloning any payload — the
+/// writer-side twin of [`Container::save`] for large section sets
+/// (checkpoints hold several full model-sized buffers; buffering the
+/// whole encoded file would transiently triple their memory).
+pub fn write_file(
+    path: impl AsRef<Path>,
+    magic: &[u8; 4],
+    meta: Vec<(&str, Json)>,
+    sections: &[(&str, &[f32])],
+    with_crc: bool,
+) -> Result<()> {
+    use std::io::Write;
+    let meta: BTreeMap<String, Json> =
+        meta.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    let header = header_string(&meta, sections, with_crc);
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("writing {}", path.display()))?,
+    );
+    f.write_all(magic)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for &(_, v) in sections {
+        for x in v {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// A decoded (or to-be-encoded) container: the caller's header object
+/// (without the framing-owned `"sections"` key) plus named f32 sections.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Container {
+    pub meta: BTreeMap<String, Json>,
+    pub sections: Vec<(String, Vec<f32>)>,
+}
+
+impl Container {
+    pub fn new(meta: Vec<(&str, Json)>) -> Container {
+        Container {
+            meta: meta.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            sections: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, name: &str, data: Vec<f32>) {
+        self.sections.push((name.to_string(), data));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+            .ok_or_else(|| anyhow!("container has no section '{name}'"))
+    }
+
+    pub fn meta_req(&self, key: &str) -> Result<&Json> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow!("container header missing field '{key}'"))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta_req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("container header field '{key}' is not a non-negative integer"))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Result<&str> {
+        self.meta_req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow!("container header field '{key}' is not a string"))
+    }
+
+    /// Serialize to bytes. `with_crc` stores a CRC32 per section (the
+    /// durable `GSAD` formats set this; checkpoints keep the legacy
+    /// CRC-less layout byte-identical to what older files contain).
+    pub fn encode(&self, magic: &[u8; 4], with_crc: bool) -> Vec<u8> {
+        let views: Vec<(&str, &[f32])> = self
+            .sections
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.as_slice()))
+            .collect();
+        let header = header_string(&self.meta, &views, with_crc);
+        let payload_len: usize = self.sections.iter().map(|(_, v)| v.len() * 4).sum();
+        let mut out = Vec::with_capacity(8 + header.len() + payload_len);
+        out.extend_from_slice(magic);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for (_, v) in &self.sections {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse a container from bytes, validating magic, header length, and
+    /// every declared section length against `bytes.len()` before
+    /// allocating payload buffers. Sections that declare a `crc` are
+    /// checksum-verified.
+    pub fn decode(bytes: &[u8], magic: &[u8; 4]) -> Result<Container> {
+        anyhow::ensure!(
+            bytes.len() >= 8,
+            "container too short: {} bytes, need at least 8",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            &bytes[..4] == magic,
+            "bad container magic: expected {:?}, got {:?}",
+            std::str::from_utf8(magic).unwrap_or("?"),
+            &bytes[..4]
+        );
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        anyhow::ensure!(
+            hlen <= MAX_HEADER_BYTES && hlen <= bytes.len() - 8,
+            "container header declares {hlen} bytes but only {} remain",
+            bytes.len() - 8
+        );
+        let header = Json::parse(
+            std::str::from_utf8(&bytes[8..8 + hlen]).context("container header is not UTF-8")?,
+        )
+        .map_err(|e| anyhow!("container header: {e}"))?;
+        let mut meta = header
+            .as_obj()
+            .ok_or_else(|| anyhow!("container header is not a JSON object"))?
+            .clone();
+        let sections_decl = meta
+            .remove("sections")
+            .ok_or_else(|| anyhow!("container header has no 'sections' array"))?;
+        let sections_decl = sections_decl
+            .as_arr()
+            .ok_or_else(|| anyhow!("container 'sections' is not an array"))?;
+
+        let payload = &bytes[8 + hlen..];
+        let mut off = 0usize;
+        let mut sections = Vec::with_capacity(sections_decl.len());
+        for s in sections_decl {
+            let name = s.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string();
+            let n = s.req_usize("len").map_err(|e| anyhow!("{e}"))?;
+            // Checked end-offset: a crafted length must not wrap around
+            // usize and sneak past the bounds test.
+            let end = n
+                .checked_mul(4)
+                .and_then(|nb| off.checked_add(nb))
+                .filter(|&e| e <= payload.len())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "section '{name}' declares {n} floats but only {} payload bytes \
+                         remain (truncated file?)",
+                        payload.len() - off
+                    )
+                })?;
+            let data: Vec<f32> = payload[off..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            if let Some(want) = s.get("crc").and_then(|v| v.as_f64()) {
+                let got = crc32(&payload[off..end]);
+                anyhow::ensure!(
+                    got as f64 == want,
+                    "section '{name}' failed its CRC32 check (corrupt payload)"
+                );
+            }
+            off = end;
+            sections.push((name, data));
+        }
+        anyhow::ensure!(
+            off == payload.len(),
+            "container has {} trailing payload bytes beyond the declared sections",
+            payload.len() - off
+        );
+        Ok(Container { meta, sections })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>, magic: &[u8; 4], with_crc: bool) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.encode(magic, with_crc))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>, magic: &[u8; 4]) -> Result<Container> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        Container::decode(&bytes, magic).with_context(|| format!("decoding {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::unique_temp_dir;
+
+    const MAGIC: &[u8; 4] = b"GSTC";
+
+    fn sample() -> Container {
+        let mut c = Container::new(vec![("v", Json::Num(1.0)), ("tag", Json::Str("x".into()))]);
+        c.push("a", vec![1.0, -2.5, 3.25]);
+        c.push("b", vec![0.0; 5]);
+        c
+    }
+
+    #[test]
+    fn round_trip_with_and_without_crc() {
+        for with_crc in [false, true] {
+            let c = sample();
+            let bytes = c.encode(MAGIC, with_crc);
+            let back = Container::decode(&bytes, MAGIC).unwrap();
+            assert_eq!(back, c);
+            assert_eq!(back.meta_usize("v").unwrap(), 1);
+            assert_eq!(back.meta_str("tag").unwrap(), "x");
+            assert_eq!(back.get("a").unwrap()[1], -2.5);
+            assert!(back.get("missing").is_err());
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = unique_temp_dir("container");
+        let path = dir.join("sub/c.bin");
+        let c = sample();
+        c.save(&path, MAGIC, true).unwrap();
+        assert_eq!(Container::load(&path, MAGIC).unwrap(), c);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_garbage() {
+        let bytes = sample().encode(MAGIC, false);
+        assert!(Container::decode(&bytes, b"NOPE").is_err());
+        assert!(Container::decode(b"", MAGIC).is_err());
+        assert!(Container::decode(b"GST", MAGIC).is_err());
+        assert!(Container::decode(b"GSTCxxxx", MAGIC).is_err());
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_clean_error() {
+        // Every strict prefix must fail decode without panicking — the
+        // durability story depends on torn writes being detectable.
+        let bytes = sample().encode(MAGIC, true);
+        for cut in 0..bytes.len() {
+            assert!(
+                Container::decode(&bytes[..cut], MAGIC).is_err(),
+                "prefix of {cut}/{} bytes decoded",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn absurd_header_length_is_rejected_before_allocating() {
+        // Declare a 4 GiB header in an 8+4-byte file: must be a clean Err.
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(b"{}{}");
+        assert!(Container::decode(&bytes, MAGIC).is_err());
+    }
+
+    #[test]
+    fn oversized_section_declaration_is_rejected() {
+        // Header claims more floats than the payload holds: encode, then
+        // chop payload bytes only (the header still declares full lengths).
+        let full = sample().encode(MAGIC, false);
+        let chopped = &full[..full.len() - 4];
+        assert!(Container::decode(chopped, MAGIC).is_err());
+        // And trailing extra payload is rejected too.
+        let mut padded = full.clone();
+        padded.extend_from_slice(&[0u8; 4]);
+        assert!(Container::decode(&padded, MAGIC).is_err());
+    }
+
+    #[test]
+    fn crc_detects_payload_corruption() {
+        let mut bytes = sample().encode(MAGIC, true);
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x40; // flip a payload bit
+        let err = Container::decode(&bytes, MAGIC).unwrap_err();
+        assert!(err.to_string().contains("CRC32"), "{err}");
+        // Without CRC the same corruption goes unnoticed by framing.
+        let mut bytes = sample().encode(MAGIC, false);
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x40;
+        assert!(Container::decode(&bytes, MAGIC).is_ok());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC32 of "123456789" is 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+}

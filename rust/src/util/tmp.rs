@@ -1,0 +1,34 @@
+//! Unique temporary directories for tests and benches.
+//!
+//! `cargo test` runs test binaries (and threads within them) in parallel;
+//! any two tests sharing a fixed temp path flake. Every filesystem-touching
+//! test takes a fresh directory from here instead: pid + a process-wide
+//! counter make collisions impossible within a machine's temp dir.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Create (and return) a directory unique to this call.
+pub fn unique_temp_dir(tag: &str) -> PathBuf {
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("gsoft_{tag}_{}_{n}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create unique temp dir");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirs_are_distinct_and_exist() {
+        let a = unique_temp_dir("tmptest");
+        let b = unique_temp_dir("tmptest");
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+}

@@ -420,3 +420,103 @@ fn dn_predict_shapes_and_determinism() {
     assert_eq!(a[0], b[0], "PJRT CPU must be deterministic");
     assert_eq!(a[0].shape(), &[batch, dim]);
 }
+
+#[test]
+fn store_backed_engine_round_trips_bit_identically() {
+    // Acceptance scenario for the persistent tiered adapter store: a
+    // fleet registered through the store, with every in-memory structure
+    // dropped and the store re-opened from disk, must serve bit-identical
+    // outputs to the pre-restart in-memory engine on both the factorized
+    // and the merged-dense path — for the mixed GSOFT/OFT/LoRA registry
+    // and for ConvGsSoc orthogonal-conv tenants.
+    use gsoft::serve::{
+        synthetic, synthetic_conv, Engine, EngineOpts, Registry, ServePath, TenantId,
+    };
+    use gsoft::store::AdapterStore;
+    use gsoft::util::tmp::unique_temp_dir;
+
+    let opts = || EngineOpts {
+        workers: 1, // deterministic path sequence
+        max_batch: 2,
+        max_wait: std::time::Duration::from_micros(200),
+        promote_after: Some(2),
+        ..EngineOpts::default()
+    };
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+    let registries = vec![
+        ("mixed", synthetic(4, 2, 8, 2, 61).unwrap()),
+        ("conv", synthetic_conv(2, 2, 4, 3, 2, 2, 3, 62).unwrap()),
+    ];
+    for (label, donor) in registries {
+        let base_w = donor.base().weights.as_ref().clone();
+        let base_spec = donor.base().spec.as_ref().clone();
+        let tenants: Vec<TenantId> = donor.tenant_ids();
+        let entries: Vec<_> = tenants
+            .iter()
+            .map(|&t| (t, donor.get(t).unwrap()))
+            .collect();
+
+        // Pre-restart, in-memory engine: factorized (request 1) then
+        // cold-merged dense (request 2) per tenant.
+        let engine = Engine::new(donor, opts()).unwrap();
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| ((i * 5 % 11) as f32) * 0.07 - 0.3).collect();
+        let mut before = Vec::new();
+        for &t in &tenants {
+            let a = engine.submit(t, input.clone()).unwrap().wait().unwrap();
+            let b = engine.submit(t, input.clone()).unwrap().wait().unwrap();
+            assert_eq!(
+                (a.path, b.path),
+                (ServePath::Factorized, ServePath::ColdMerge),
+                "{label} tenant {t}: unexpected pre-restart paths"
+            );
+            before.push((bits(&a.output), bits(&b.output)));
+        }
+        engine.finish();
+
+        // Register the fleet through the store, then drop every
+        // in-memory structure.
+        let dir = unique_temp_dir("itest_store");
+        {
+            let mut store = AdapterStore::open(&dir).unwrap();
+            for (t, e) in &entries {
+                store.put(*t, e).unwrap();
+            }
+        }
+        drop(entries);
+
+        // Re-open from disk: the store-backed registry hydrates lazily as
+        // the engine touches tenants.
+        let registry = Registry::with_store(
+            base_w,
+            base_spec,
+            AdapterStore::open(&dir).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(registry.hydrated_len(), 0, "{label}: cold boot must be lazy");
+        assert_eq!(registry.len(), tenants.len());
+        let engine = Engine::new(registry, opts()).unwrap();
+        for (i, &t) in tenants.iter().enumerate() {
+            let a = engine.submit(t, input.clone()).unwrap().wait().unwrap();
+            let b = engine.submit(t, input.clone()).unwrap().wait().unwrap();
+            assert_eq!(
+                (a.path, b.path),
+                (ServePath::Factorized, ServePath::ColdMerge),
+                "{label} tenant {t}: unexpected post-restart paths"
+            );
+            assert_eq!(
+                bits(&a.output),
+                before[i].0,
+                "{label} tenant {t}: factorized output drifted across restart"
+            );
+            assert_eq!(
+                bits(&b.output),
+                before[i].1,
+                "{label} tenant {t}: merged-dense output drifted across restart"
+            );
+        }
+        engine.finish();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
