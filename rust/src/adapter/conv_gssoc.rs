@@ -1,0 +1,193 @@
+//! The GS-SOC orthogonal-convolution family (§6.3): `W' = Q W` with
+//! `Q = P⁻¹ · exp(grouped skew conv) · P` acting on activations viewed as
+//! `[c, h, w]` tensors (`d = c·h·w`). The slab per layer is the raw
+//! grouped kernel `<layer>.soc_k` `[c, c/groups, k, k]`;
+//! skew-symmetrization and the `P_(groups, c)` channel shuffles are
+//! applied at build time, so `Q` is orthogonal by construction (up to the
+//! `terms`-term series truncation).
+//!
+//! The factorized operator is the direct convolution runtime's
+//! [`crate::kernel::GsSocLayer`] (streaming exponential + channel-plane
+//! shuffles) — the dense `(c·h·w)²` operator is never materialized.
+
+use anyhow::Result;
+
+use crate::coordinator::flatspec::FlatSpec;
+use crate::coordinator::merge::{conv_gssoc_layer, merge_conv_gssoc};
+use crate::kernel::{GsSocLayer, KernelCtx};
+use crate::linalg::Mat;
+
+use super::{AdapterFamily, Config, CostModel, LayerOp, SlabCx};
+
+/// The process-wide GS-SOC conv family instance.
+pub static CONV_GSSOC: ConvGsSocFamily = ConvGsSocFamily;
+
+pub struct ConvGsSocFamily;
+
+struct SocLayerOp(GsSocLayer);
+
+impl LayerOp for SocLayerOp {
+    fn apply(&self, base_y: Mat, _x: &Mat, ctx: &KernelCtx) -> Mat {
+        self.0.apply(&base_y, ctx)
+    }
+}
+
+/// The conv geometry, pulled from a config in one shot.
+struct Geo {
+    c: usize,
+    k: usize,
+    groups: usize,
+    h: usize,
+    w: usize,
+    terms: usize,
+}
+
+fn geo(cfg: &Config) -> Result<Geo> {
+    Ok(Geo {
+        c: cfg.req("c")?,
+        k: cfg.req("k")?,
+        groups: cfg.req("groups")?,
+        h: cfg.req("h")?,
+        w: cfg.req("w")?,
+        terms: cfg.req("terms")?,
+    })
+}
+
+impl AdapterFamily for ConvGsSocFamily {
+    fn tag(&self) -> &'static str {
+        "conv_gssoc"
+    }
+
+    fn hp_keys(&self) -> &'static [&'static str] {
+        &["c", "k", "groups", "h", "w", "terms"]
+    }
+
+    fn suffixes(&self) -> &'static [&'static str] {
+        &["soc_k"]
+    }
+
+    fn validate_slab(&self, cfg: &Config, cx: &SlabCx) -> Result<()> {
+        let g = geo(cfg)?;
+        anyhow::ensure!(
+            g.k % 2 == 1,
+            "tenant {}: same-padded conv needs an odd kernel (got k={})",
+            cx.tenant,
+            g.k
+        );
+        anyhow::ensure!(
+            g.terms >= 1,
+            "tenant {}: conv exponential needs at least one Taylor term",
+            cx.tenant
+        );
+        anyhow::ensure!(
+            g.groups > 0 && g.c % g.groups == 0,
+            "tenant {}: groups {} must divide channels {}",
+            cx.tenant,
+            g.groups,
+            g.c
+        );
+        anyhow::ensure!(
+            g.c * g.h * g.w == cx.din,
+            "tenant {}: adapted layer '{}' has input dim {}, but the conv geometry gives \
+             c·h·w = {}·{}·{} = {}",
+            cx.tenant,
+            cx.layer,
+            cx.din,
+            g.c,
+            g.h,
+            g.w,
+            g.c * g.h * g.w
+        );
+        anyhow::ensure!(
+            *cx.shape == [g.c, g.c / g.groups, g.k, g.k],
+            "tenant {}: '{}' has shape {:?}, expected {:?}",
+            cx.tenant,
+            cx.name,
+            cx.shape,
+            [g.c, g.c / g.groups, g.k, g.k]
+        );
+        Ok(())
+    }
+
+    fn synthetic_spec(
+        &self,
+        cfg: &Config,
+        layers: &[String],
+        _d: usize,
+        _hint: usize,
+    ) -> Result<FlatSpec> {
+        let g = geo(cfg)?;
+        anyhow::ensure!(g.groups > 0 && g.c % g.groups == 0, "groups must divide c");
+        Ok(FlatSpec {
+            entries: layers
+                .iter()
+                .map(|n| (format!("{n}.soc_k"), vec![g.c, g.c / g.groups, g.k, g.k]))
+                .collect(),
+        })
+    }
+
+    fn synthetic_std(&self, _cfg: &Config) -> f32 {
+        // Small kernel magnitude keeps the truncated exponential
+        // converged, so factorized and merged serving agree tightly.
+        0.05
+    }
+
+    fn merge(
+        &self,
+        cfg: &Config,
+        base: &[f32],
+        adapter: &[f32],
+        base_spec: &FlatSpec,
+        adapter_spec: &FlatSpec,
+    ) -> Result<Vec<f32>> {
+        let g = geo(cfg)?;
+        merge_conv_gssoc(
+            base,
+            adapter,
+            base_spec,
+            adapter_spec,
+            g.c,
+            g.k,
+            g.groups,
+            g.h,
+            g.w,
+            g.terms,
+        )
+    }
+
+    fn plan_layer(
+        &self,
+        cfg: &Config,
+        params: &[f32],
+        spec: &FlatSpec,
+        layer: &str,
+        d: usize,
+    ) -> Result<Option<Box<dyn LayerOp>>> {
+        let sname = format!("{layer}.soc_k");
+        if spec.locate(&sname).is_err() {
+            return Ok(None);
+        }
+        let g = geo(cfg)?;
+        anyhow::ensure!(
+            g.c * g.h * g.w == d,
+            "conv_gssoc geometry c·h·w = {} does not match served dim {d}",
+            g.c * g.h * g.w
+        );
+        let raw = spec.view(params, &sname)?;
+        Ok(Some(Box::new(SocLayerOp(conv_gssoc_layer(
+            raw, g.c, g.k, g.groups, g.h, g.w, g.terms,
+        )))))
+    }
+
+    fn cost_model(&self, cfg: &Config, _d: usize) -> Option<CostModel> {
+        // One Q·column is `terms` grouped convs over the [c, h, w] plane.
+        // The merged support is spatially banded (k² taps widened by
+        // `terms` applications), not the Theorem-2 dense guarantee.
+        let g = geo(cfg).ok()?;
+        Some(CostModel {
+            q_col_flops: (2 * g.terms * g.c * (g.c / g.groups.max(1)) * g.k * g.k * g.h * g.w)
+                as u64,
+            q_dense: false,
+        })
+    }
+}

@@ -1,0 +1,163 @@
+//! The GSOFT family (§6.1): `W' = Q W` with `Q = P^T L P R` — two Cayley
+//! block-diagonal factors of block size `block`, shuffled by `P_(r,d)`.
+//!
+//! Slabs: `<layer>.gs_l` and `<layer>.gs_r`, each `[d/block, block,
+//! block]` (they must come in pairs). The factorized operator is a
+//! prepared [`crate::kernel::GsOp`] (two fused passes with the relayouts
+//! planned once per tenant layer).
+
+use anyhow::Result;
+
+use crate::coordinator::flatspec::FlatSpec;
+use crate::coordinator::merge::{gsoft_q, merge_gsoft};
+use crate::gs::density::{chain_support, gs_min_factors, BitMatrix, PermFamily};
+use crate::kernel::{GsOp, KernelCtx};
+use crate::linalg::Mat;
+
+use super::{AdapterFamily, Config, CostModel, LayerOp, SlabCx};
+
+/// The process-wide GSOFT family instance.
+pub static GSOFT: GsoftFamily = GsoftFamily;
+
+pub struct GsoftFamily;
+
+/// A prepared GS operator as a [`LayerOp`] — shared with every family
+/// whose `Q` is a two-factor GS matrix (e.g. [`super::monarch`]).
+pub struct GsLayerOp(pub GsOp);
+
+impl LayerOp for GsLayerOp {
+    fn apply(&self, base_y: Mat, _x: &Mat, ctx: &KernelCtx) -> Mat {
+        self.0.apply(&base_y, ctx)
+    }
+}
+
+/// Theorem-2 cost model for an `m`-factor group-and-shuffle `Q` at
+/// `(d, block)`: one block-diagonal factor has `nnz = d·b`, GS applies
+/// `m = 1 + ⌈log_b r⌉` of them per column; the merged support is dense
+/// exactly when the chain support analysis says so.
+pub(crate) fn gs_cost_model(d: usize, block: usize) -> CostModel {
+    let b = block.clamp(2, d.max(2));
+    let r = (d / b).max(1);
+    let m = gs_min_factors(b, r);
+    let factor_nnz = BitMatrix::block_diag(r, b, b).nnz();
+    CostModel {
+        q_col_flops: (m * factor_nnz).max(1) as u64,
+        q_dense: chain_support(r * b, b, m, PermFamily::GsKn).is_dense(),
+    }
+}
+
+/// Shared GSOFT/OFT/Monarch slab shape check: `[din/block, block, block]`
+/// with `block | din`.
+pub(crate) fn validate_block_slab(cfg: &Config, cx: &SlabCx) -> Result<usize> {
+    let block = cfg.req("block")?;
+    anyhow::ensure!(
+        block > 0 && cx.din % block == 0,
+        "tenant {}: block {block} does not divide layer dim {}",
+        cx.tenant,
+        cx.din
+    );
+    anyhow::ensure!(
+        *cx.shape == [cx.din / block, block, block],
+        "tenant {}: '{}' has shape {:?}, expected {:?}",
+        cx.tenant,
+        cx.name,
+        cx.shape,
+        [cx.din / block, block, block]
+    );
+    Ok(block)
+}
+
+/// Shared pairing check for families whose factors come in L/R pairs
+/// (a lone left slab errors at serve time, a lone right slab is silently
+/// ignored — both must be rejected at validation).
+pub(crate) fn validate_paired_slab(cx: &SlabCx, left: &str, right: &str) -> Result<()> {
+    let other = if cx.suffix == left { right } else { left };
+    let paired = cx
+        .spec
+        .locate(&format!("{}.{other}", cx.layer))
+        .map(|(_, s)| s == cx.shape)
+        .unwrap_or(false);
+    anyhow::ensure!(
+        paired,
+        "tenant {}: '{}' has no matching '{}.{other}'",
+        cx.tenant,
+        cx.name,
+        cx.layer
+    );
+    Ok(())
+}
+
+impl AdapterFamily for GsoftFamily {
+    fn tag(&self) -> &'static str {
+        "gsoft"
+    }
+
+    fn hp_keys(&self) -> &'static [&'static str] {
+        &["block"]
+    }
+
+    fn suffixes(&self) -> &'static [&'static str] {
+        &["gs_l", "gs_r"]
+    }
+
+    fn validate_slab(&self, cfg: &Config, cx: &SlabCx) -> Result<()> {
+        validate_block_slab(cfg, cx)?;
+        validate_paired_slab(cx, "gs_l", "gs_r")
+    }
+
+    fn synthetic_spec(
+        &self,
+        cfg: &Config,
+        layers: &[String],
+        d: usize,
+        _hint: usize,
+    ) -> Result<FlatSpec> {
+        let block = cfg.req("block")?;
+        anyhow::ensure!(block > 0 && d % block == 0, "block must divide d");
+        let r = d / block;
+        Ok(FlatSpec {
+            entries: layers
+                .iter()
+                .flat_map(|n| {
+                    [
+                        (format!("{n}.gs_l"), vec![r, block, block]),
+                        (format!("{n}.gs_r"), vec![r, block, block]),
+                    ]
+                })
+                .collect(),
+        })
+    }
+
+    fn merge(
+        &self,
+        cfg: &Config,
+        base: &[f32],
+        adapter: &[f32],
+        base_spec: &FlatSpec,
+        adapter_spec: &FlatSpec,
+    ) -> Result<Vec<f32>> {
+        merge_gsoft(base, adapter, base_spec, adapter_spec, cfg.req("block")?)
+    }
+
+    fn plan_layer(
+        &self,
+        cfg: &Config,
+        params: &[f32],
+        spec: &FlatSpec,
+        layer: &str,
+        d: usize,
+    ) -> Result<Option<Box<dyn LayerOp>>> {
+        let lname = format!("{layer}.gs_l");
+        if spec.locate(&lname).is_err() {
+            return Ok(None);
+        }
+        let l_raw = spec.view(params, &lname)?;
+        let r_raw = spec.view(params, &format!("{layer}.gs_r"))?;
+        let q = gsoft_q(l_raw, r_raw, d, cfg.req("block")?);
+        Ok(Some(Box::new(GsLayerOp(GsOp::new(q)))))
+    }
+
+    fn cost_model(&self, cfg: &Config, d: usize) -> Option<CostModel> {
+        cfg.req("block").ok().map(|b| gs_cost_model(d, b))
+    }
+}

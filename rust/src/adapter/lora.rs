@@ -1,0 +1,142 @@
+//! The LoRA family: `W' = W + A B` — the additive low-rank baseline the
+//! paper compares against. Not orthogonal (singular values move), and no
+//! structured Theorem-2 cost model (the engine's generic default
+//! applies).
+//!
+//! Slabs: `<layer>.lora_a` `[d, rank]` and `<layer>.lora_b` `[rank, d]`
+//! (paired). The factorized path serves `W X + A (B X)`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::flatspec::FlatSpec;
+use crate::coordinator::merge::merge_lora;
+use crate::kernel::KernelCtx;
+use crate::linalg::Mat;
+
+use super::{AdapterFamily, Config, LayerOp, SlabCx};
+
+/// The process-wide LoRA family instance.
+pub static LORA: LoraFamily = LoraFamily;
+
+pub struct LoraFamily;
+
+struct LowRankOp {
+    a: Mat,
+    b: Mat,
+}
+
+impl LayerOp for LowRankOp {
+    fn apply(&self, base_y: Mat, x: &Mat, ctx: &KernelCtx) -> Mat {
+        &base_y + &ctx.gemm(&self.a, &ctx.gemm(&self.b, x))
+    }
+}
+
+impl AdapterFamily for LoraFamily {
+    fn tag(&self) -> &'static str {
+        "lora"
+    }
+
+    fn is_orthogonal(&self) -> bool {
+        false
+    }
+
+    fn suffixes(&self) -> &'static [&'static str] {
+        &["lora_a", "lora_b"]
+    }
+
+    fn validate_slab(&self, _cfg: &Config, cx: &SlabCx) -> Result<()> {
+        match cx.suffix {
+            "lora_a" => {
+                anyhow::ensure!(
+                    cx.shape.len() == 2 && cx.shape[0] == cx.din,
+                    "tenant {}: '{}' has shape {:?}, expected [{}, rank]",
+                    cx.tenant,
+                    cx.name,
+                    cx.shape,
+                    cx.din
+                );
+                let (_, bshape) = cx
+                    .spec
+                    .locate(&format!("{}.lora_b", cx.layer))
+                    .map_err(|_| {
+                        anyhow!("tenant {}: '{}' has no paired lora_b", cx.tenant, cx.name)
+                    })?;
+                anyhow::ensure!(
+                    bshape.len() == 2 && bshape[0] == cx.shape[1] && bshape[1] == cx.dout,
+                    "tenant {}: '{}.lora_b' has shape {bshape:?}, expected [{}, {}]",
+                    cx.tenant,
+                    cx.layer,
+                    cx.shape[1],
+                    cx.dout
+                );
+            }
+            _ => {
+                // Shape details are checked from the lora_a side; here
+                // just reject an unpaired lora_b (it would be silently
+                // ignored by merge and serve).
+                anyhow::ensure!(
+                    cx.spec.locate(&format!("{}.lora_a", cx.layer)).is_ok(),
+                    "tenant {}: '{}' has no matching '{}.lora_a'",
+                    cx.tenant,
+                    cx.name,
+                    cx.layer
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn synthetic_spec(
+        &self,
+        _cfg: &Config,
+        layers: &[String],
+        d: usize,
+        hint: usize,
+    ) -> Result<FlatSpec> {
+        let rank = hint.min(d / 2).max(1);
+        Ok(FlatSpec {
+            entries: layers
+                .iter()
+                .flat_map(|n| {
+                    [
+                        (format!("{n}.lora_a"), vec![d, rank]),
+                        (format!("{n}.lora_b"), vec![rank, d]),
+                    ]
+                })
+                .collect(),
+        })
+    }
+
+    fn synthetic_std(&self, _cfg: &Config) -> f32 {
+        0.05
+    }
+
+    fn merge(
+        &self,
+        _cfg: &Config,
+        base: &[f32],
+        adapter: &[f32],
+        base_spec: &FlatSpec,
+        adapter_spec: &FlatSpec,
+    ) -> Result<Vec<f32>> {
+        merge_lora(base, adapter, base_spec, adapter_spec)
+    }
+
+    fn plan_layer(
+        &self,
+        _cfg: &Config,
+        params: &[f32],
+        spec: &FlatSpec,
+        layer: &str,
+        d: usize,
+    ) -> Result<Option<Box<dyn LayerOp>>> {
+        let aname = format!("{layer}.lora_a");
+        let Ok((_, ashape)) = spec.locate(&aname) else {
+            return Ok(None);
+        };
+        let rank = ashape[1];
+        let a = Mat::from_f32(d, rank, spec.view(params, &aname)?);
+        let b = Mat::from_f32(rank, d, spec.view(params, &format!("{layer}.lora_b"))?);
+        Ok(Some(Box::new(LowRankOp { a, b })))
+    }
+}

@@ -1,0 +1,413 @@
+//! The open adapter-family API (DESIGN.md §8).
+//!
+//! The paper's central claim is that GS matrices *unify* prior structured
+//! classes (OFT block-diagonals, Monarch `P_1 L P_2 R`, butterfly/BOFT
+//! chains) — so the serving stack must not hard-code a closed enum of
+//! adapter kinds. This module turns the adapter abstraction into a
+//! capability trait plus a process-wide registry:
+//!
+//! - [`AdapterFamily`] — everything the serving/store stack needs from a
+//!   structured adapter class: slab validation, synthetic generation,
+//!   dense merge (`W' = Q W`), a *planned* factorized-apply operator
+//!   (prepared [`crate::kernel::FusedPlan`]/[`crate::kernel::GsOp`]-style
+//!   state built once per tenant layer), the Theorem-2 density/FLOP cost
+//!   model that drives [`crate::serve::Policy`] promotion, and a stable
+//!   GSAD wire tag + version;
+//! - [`Config`] — a family's per-tenant hyperparameters (block size, conv
+//!   geometry, …) as an ordered `key → usize` list, encoded generically
+//!   into the GSAD header (byte-identical to the v1 enum encoding);
+//! - [`AdapterDesc`] — a resolved `(family, config)` pair; this is what
+//!   [`crate::serve::AdapterEntry`] carries instead of the old enum;
+//! - [`FamilyRegistry`] — tag → `&'static dyn AdapterFamily`, seeded with
+//!   the built-ins; external families join with one
+//!   [`FamilyRegistry::register`] call and need **zero** edits in
+//!   `serve/engine.rs`, `serve/registry.rs`, or `store/gsad.rs` (proven
+//!   by [`monarch`], which lives entirely in its own module).
+//!
+//! Built-in families: [`gsoft`], [`oft`], [`lora`], [`conv_gssoc`],
+//! [`monarch`].
+
+pub mod conv_gssoc;
+pub mod gsoft;
+pub mod lora;
+pub mod monarch;
+pub mod oft;
+
+use std::collections::HashMap;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::flatspec::FlatSpec;
+use crate::kernel::KernelCtx;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+
+/// A family's per-tenant hyperparameters: an ordered list of
+/// `key → usize` pairs (keys come from the family's
+/// [`AdapterFamily::hp_keys`], so they are `'static`). Encodes
+/// generically to/from the GSAD `"kind"` JSON object.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Config {
+    hp: Vec<(&'static str, usize)>,
+}
+
+impl Config {
+    /// Canonicalize a caller-supplied hyperparameter list against a
+    /// family: unknown keys are rejected, missing keys are rejected, and
+    /// the stored order is the family's [`AdapterFamily::hp_keys`] order
+    /// regardless of how the caller wrote them — so `Config` equality is
+    /// order-insensitive in practice and `decode(encode(desc))` is the
+    /// identity for *every* construction, not just the canonical one.
+    fn canonical(family: &dyn AdapterFamily, hp: &[(&'static str, usize)]) -> Result<Config> {
+        for (k, _) in hp {
+            anyhow::ensure!(
+                family.hp_keys().contains(k),
+                "adapter family '{}' has no hyperparameter '{k}'",
+                family.tag()
+            );
+        }
+        let mut out = Vec::with_capacity(family.hp_keys().len());
+        for &key in family.hp_keys() {
+            let val = hp
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|&(_, v)| v)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "adapter family '{}' requires hyperparameter '{key}'",
+                        family.tag()
+                    )
+                })?;
+            out.push((key, val));
+        }
+        Ok(Config { hp: out })
+    }
+
+    /// Look up a hyperparameter; families call this with their own keys,
+    /// so a miss is a construction bug, reported as an error (never a
+    /// panic — configs can come off the wire).
+    pub fn req(&self, key: &str) -> Result<usize> {
+        self.hp
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|&(_, v)| v)
+            .ok_or_else(|| anyhow!("adapter config is missing hyperparameter '{key}'"))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, usize)> + '_ {
+        self.hp.iter().copied()
+    }
+}
+
+/// Context handed to [`AdapterFamily::validate_slab`] for one entry of an
+/// adapter's [`FlatSpec`]: the slab plus the base layer it adapts. The
+/// generic scaffolding (buffer length, layer existence, 2-D base entry,
+/// suffix ownership) is already checked by the caller.
+pub struct SlabCx<'a> {
+    /// Tenant id, for error messages.
+    pub tenant: u64,
+    /// Full entry name, e.g. `layer0.w.gs_l`.
+    pub name: &'a str,
+    /// Adapted base layer, e.g. `layer0.w`.
+    pub layer: &'a str,
+    /// Entry suffix, e.g. `gs_l` (guaranteed ∈ the family's
+    /// [`AdapterFamily::suffixes`]).
+    pub suffix: &'a str,
+    /// The slab's declared shape.
+    pub shape: &'a [usize],
+    /// Base layer input dimension.
+    pub din: usize,
+    /// Base layer output dimension.
+    pub dout: usize,
+    /// The whole adapter spec (for pairing checks like `gs_l`/`gs_r`).
+    pub spec: &'a FlatSpec,
+}
+
+/// A prepared per-layer operator for the factorized (unmerged) serving
+/// path. Built once per tenant layer by [`AdapterFamily::plan_layer`]
+/// (the expensive part — Cayley solves, relayout planning — happens
+/// there), then applied per batch.
+pub trait LayerOp: Send + Sync {
+    /// Combine the base product `base_y = W·x` with the adapter:
+    /// orthogonal families return `Q·base_y`; additive families (LoRA)
+    /// also need the layer input `x`.
+    fn apply(&self, base_y: Mat, x: &Mat, ctx: &KernelCtx) -> Mat;
+}
+
+/// Theorem-2 style cost-model inputs for the engine's promotion policy:
+/// merging one layer costs `q_col_flops · d` (apply Q to every column of
+/// W), the factorized path costs `q_col_flops` per served column.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Flops to apply the structured `Q` to one column.
+    pub q_col_flops: u64,
+    /// Whether the merged `Q` support is fully dense at this config
+    /// (Theorem 2) — what makes the cached path a plain dense GEMM.
+    pub q_dense: bool,
+}
+
+/// One structured adapter class. Implementations are stateless statics
+/// (per-tenant state lives in [`Config`] + the flat parameter slabs), so
+/// the registry hands out `&'static dyn AdapterFamily`.
+pub trait AdapterFamily: Send + Sync {
+    /// Stable wire tag — the GSAD `"kind"` discriminator and the
+    /// [`FamilyRegistry`] key. Never reuse a tag for a different layout.
+    fn tag(&self) -> &'static str;
+
+    /// Hyperparameter keys, in canonical order.
+    fn hp_keys(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Family wire version; bump on any slab-layout change. Records
+    /// written at version 1 omit the field, keeping the v1 byte format.
+    fn wire_version(&self) -> usize {
+        1
+    }
+
+    /// Whether `W' = Q W` preserves the singular values of every adapted
+    /// layer (true for every orthogonal parametrization; false for
+    /// additive families like LoRA).
+    fn is_orthogonal(&self) -> bool {
+        true
+    }
+
+    /// Adapter-spec entry suffixes this family owns (e.g.
+    /// `["gs_l", "gs_r"]`); foreign suffixes are rejected generically.
+    fn suffixes(&self) -> &'static [&'static str];
+
+    /// Config-only sanity checks (key presence beyond [`Config::req`],
+    /// cross-key constraints that need no base layer).
+    fn validate_config(&self, _cfg: &Config) -> Result<()> {
+        Ok(())
+    }
+
+    /// Validate one slab against the base layer it adapts — a malformed
+    /// entry must be rejected at registration/hydration, never panic
+    /// inside a serving worker.
+    fn validate_slab(&self, cfg: &Config, cx: &SlabCx) -> Result<()>;
+
+    /// Adapter [`FlatSpec`] adapting `layers` square `d×d` base layers —
+    /// the synthetic-registry generator for benches and tests.
+    /// `hint` carries the caller's block-size hint for families whose
+    /// config does not determine every shape (e.g. the LoRA rank).
+    fn synthetic_spec(
+        &self,
+        cfg: &Config,
+        layers: &[String],
+        d: usize,
+        hint: usize,
+    ) -> Result<FlatSpec>;
+
+    /// Parameter-init std for synthetic adapters (families with truncated
+    /// series or additive updates want smaller magnitudes).
+    fn synthetic_std(&self, _cfg: &Config) -> f32 {
+        0.3
+    }
+
+    /// Merge the adapter into a copy of the base buffer
+    /// (`W' = Q W` per adapted layer, or the family's equivalent).
+    fn merge(
+        &self,
+        cfg: &Config,
+        base: &[f32],
+        adapter: &[f32],
+        base_spec: &FlatSpec,
+        adapter_spec: &FlatSpec,
+    ) -> Result<Vec<f32>>;
+
+    /// Build the prepared factorized operator for one layer, or `None`
+    /// if this adapter does not touch the layer.
+    fn plan_layer(
+        &self,
+        cfg: &Config,
+        params: &[f32],
+        spec: &FlatSpec,
+        layer: &str,
+        d: usize,
+    ) -> Result<Option<Box<dyn LayerOp>>>;
+
+    /// Density/FLOP cost model for [`crate::serve::Policy`] promotion,
+    /// or `None` when the family has no structured model (the engine
+    /// falls back to its generic Theorem-2 default).
+    fn cost_model(&self, _cfg: &Config, _d: usize) -> Option<CostModel> {
+        None
+    }
+}
+
+/// A resolved `(family, config)` pair — what an adapter entry carries.
+#[derive(Clone)]
+pub struct AdapterDesc {
+    family: &'static dyn AdapterFamily,
+    cfg: Config,
+}
+
+impl AdapterDesc {
+    /// Resolve `tag` in the [`FamilyRegistry`] and build a validated
+    /// descriptor. Hyperparameters are canonicalized (family key order;
+    /// unknown or missing keys are clean errors), so equal descriptors
+    /// compare equal however they were written.
+    pub fn new(tag: &str, hp: &[(&'static str, usize)]) -> Result<AdapterDesc> {
+        let family = FamilyRegistry::family(tag)?;
+        let cfg = Config::canonical(family, hp)?;
+        family.validate_config(&cfg)?;
+        Ok(AdapterDesc { family, cfg })
+    }
+
+    pub fn family(&self) -> &'static dyn AdapterFamily {
+        self.family
+    }
+
+    pub fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn tag(&self) -> &'static str {
+        self.family.tag()
+    }
+
+    pub fn is_orthogonal(&self) -> bool {
+        self.family.is_orthogonal()
+    }
+
+    /// Convenience hyperparameter lookup.
+    pub fn hp(&self, key: &str) -> Result<usize> {
+        self.cfg.req(key)
+    }
+}
+
+impl PartialEq for AdapterDesc {
+    fn eq(&self, other: &Self) -> bool {
+        self.tag() == other.tag() && self.cfg == other.cfg
+    }
+}
+
+impl Eq for AdapterDesc {}
+
+impl std::fmt::Debug for AdapterDesc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AdapterDesc")
+            .field("tag", &self.tag())
+            .field("cfg", &self.cfg)
+            .finish()
+    }
+}
+
+// ---- family registry -------------------------------------------------------
+
+/// Process-wide tag → family map. Built-ins are seeded on first access;
+/// external families join at runtime with [`FamilyRegistry::register`].
+pub struct FamilyRegistry;
+
+type FamilyMap = HashMap<&'static str, &'static dyn AdapterFamily>;
+
+fn registry() -> &'static RwLock<FamilyMap> {
+    static REG: OnceLock<RwLock<FamilyMap>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let builtins: [&'static dyn AdapterFamily; 5] = [
+            &gsoft::GSOFT,
+            &oft::OFT,
+            &lora::LORA,
+            &conv_gssoc::CONV_GSSOC,
+            &monarch::MONARCH, // the one registration line a new family needs
+        ];
+        RwLock::new(builtins.into_iter().map(|f| (f.tag(), f)).collect())
+    })
+}
+
+impl FamilyRegistry {
+    /// Register an external family. Errors on a tag collision (tags are
+    /// wire-stable identifiers; shadowing one would corrupt decode).
+    pub fn register(family: &'static dyn AdapterFamily) -> Result<()> {
+        let mut map = registry().write().unwrap();
+        anyhow::ensure!(
+            !map.contains_key(family.tag()),
+            "adapter family tag '{}' is already registered",
+            family.tag()
+        );
+        map.insert(family.tag(), family);
+        Ok(())
+    }
+
+    /// Resolve a tag, with a clean error for unknown families — this is
+    /// what turns a foreign GSAD record into an error instead of a
+    /// panic.
+    pub fn family(tag: &str) -> Result<&'static dyn AdapterFamily> {
+        registry()
+            .read()
+            .unwrap()
+            .get(tag)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown adapter family '{tag}'"))
+    }
+
+    /// Registered tags, sorted (for help text and reports).
+    pub fn tags() -> Vec<&'static str> {
+        let mut tags: Vec<&'static str> = registry().read().unwrap().keys().copied().collect();
+        tags.sort_unstable();
+        tags
+    }
+}
+
+// ---- GSAD wire form --------------------------------------------------------
+
+/// Encode a descriptor as the GSAD `"kind"` JSON object:
+/// `{"kind": tag, <hp…>}`, plus `"fv"` when the family's wire version is
+/// past 1 — byte-identical to the legacy enum encoding for v1 families
+/// (JSON objects serialize with sorted keys).
+pub fn desc_to_json(desc: &AdapterDesc) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("kind", Json::Str(desc.tag().into()))];
+    for (k, v) in desc.cfg.iter() {
+        fields.push((k, Json::Num(v as f64)));
+    }
+    let fv = desc.family.wire_version();
+    if fv != 1 {
+        fields.push(("fv", Json::Num(fv as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Decode a GSAD `"kind"` object back into a descriptor. Unknown tags
+/// and future family versions are clean errors.
+pub fn desc_from_json(v: &Json) -> Result<AdapterDesc> {
+    let tag = v.req_str("kind").map_err(|e| anyhow!("{e}"))?;
+    let family = FamilyRegistry::family(tag)?;
+    let fv = match v.get("fv") {
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| anyhow!("adapter family '{tag}': 'fv' is not an integer"))?,
+        None => 1,
+    };
+    anyhow::ensure!(
+        fv == family.wire_version(),
+        "adapter family '{tag}' record is wire version {fv}, this build reads v{}",
+        family.wire_version()
+    );
+    let mut hp = Vec::with_capacity(family.hp_keys().len());
+    for &key in family.hp_keys() {
+        let val = v
+            .req_usize(key)
+            .map_err(|e| anyhow!("adapter family '{tag}': {e}"))?;
+        hp.push((key, val));
+    }
+    let cfg = Config { hp };
+    family.validate_config(&cfg)?;
+    Ok(AdapterDesc { family, cfg })
+}
+
+/// Merge an adapter through trait dispatch — the single entry point the
+/// registry, engine, and `merge-demo` share.
+pub fn merge_entry(
+    desc: &AdapterDesc,
+    base: &[f32],
+    adapter: &[f32],
+    base_spec: &FlatSpec,
+    adapter_spec: &FlatSpec,
+) -> Result<Vec<f32>> {
+    desc.family()
+        .merge(desc.cfg(), base, adapter, base_spec, adapter_spec)
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,100 @@
+//! The OFT family: `W' = Q W` with a single Cayley block-diagonal `Q`
+//! (the `P = I` degenerate point of the GS class).
+//!
+//! Slab: `<layer>.oft_k`, `[d/block, block, block]`. The factorized
+//! operator is a bare block-diagonal fused pass (no relayouts to plan).
+
+use anyhow::Result;
+
+use crate::coordinator::flatspec::FlatSpec;
+use crate::coordinator::merge::{merge_oft, oft_q};
+use crate::gs::BlockDiag;
+use crate::kernel::{fused_apply, KernelCtx};
+use crate::linalg::Mat;
+
+use super::gsoft::{gs_cost_model, validate_block_slab};
+use super::{AdapterFamily, Config, CostModel, LayerOp, SlabCx};
+
+/// The process-wide OFT family instance.
+pub static OFT: OftFamily = OftFamily;
+
+pub struct OftFamily;
+
+struct BlockLayerOp(BlockDiag);
+
+impl LayerOp for BlockLayerOp {
+    fn apply(&self, base_y: Mat, _x: &Mat, ctx: &KernelCtx) -> Mat {
+        fused_apply(&self.0, None, None, &base_y, ctx)
+    }
+}
+
+impl AdapterFamily for OftFamily {
+    fn tag(&self) -> &'static str {
+        "oft"
+    }
+
+    fn hp_keys(&self) -> &'static [&'static str] {
+        &["block"]
+    }
+
+    fn suffixes(&self) -> &'static [&'static str] {
+        &["oft_k"]
+    }
+
+    fn validate_slab(&self, cfg: &Config, cx: &SlabCx) -> Result<()> {
+        validate_block_slab(cfg, cx).map(|_| ())
+    }
+
+    fn synthetic_spec(
+        &self,
+        cfg: &Config,
+        layers: &[String],
+        d: usize,
+        _hint: usize,
+    ) -> Result<FlatSpec> {
+        let block = cfg.req("block")?;
+        anyhow::ensure!(block > 0 && d % block == 0, "block must divide d");
+        let r = d / block;
+        Ok(FlatSpec {
+            entries: layers
+                .iter()
+                .map(|n| (format!("{n}.oft_k"), vec![r, block, block]))
+                .collect(),
+        })
+    }
+
+    fn merge(
+        &self,
+        cfg: &Config,
+        base: &[f32],
+        adapter: &[f32],
+        base_spec: &FlatSpec,
+        adapter_spec: &FlatSpec,
+    ) -> Result<Vec<f32>> {
+        merge_oft(base, adapter, base_spec, adapter_spec, cfg.req("block")?)
+    }
+
+    fn plan_layer(
+        &self,
+        cfg: &Config,
+        params: &[f32],
+        spec: &FlatSpec,
+        layer: &str,
+        d: usize,
+    ) -> Result<Option<Box<dyn LayerOp>>> {
+        let kname = format!("{layer}.oft_k");
+        if spec.locate(&kname).is_err() {
+            return Ok(None);
+        }
+        let k_raw = spec.view(params, &kname)?;
+        Ok(Some(Box::new(BlockLayerOp(oft_q(
+            k_raw,
+            d,
+            cfg.req("block")?,
+        )))))
+    }
+
+    fn cost_model(&self, cfg: &Config, d: usize) -> Option<CostModel> {
+        cfg.req("block").ok().map(|b| gs_cost_model(d, b))
+    }
+}

@@ -1,0 +1,406 @@
+//! Dispatch-equivalence tests: the open-trait API must be *bit-identical*
+//! to the legacy closed-enum behavior for every pre-existing kind (merge
+//! output, factorized operators, GSAD wire form — the wire form is pinned
+//! in `store/gsad.rs` tests), and the registry itself must behave like a
+//! proper open set (unknown tags are clean errors, duplicate tags are
+//! rejected).
+
+use crate::coordinator::flatspec::FlatSpec;
+use crate::coordinator::merge::{
+    conv_gssoc_layer, gsoft_q, merge_conv_gssoc, merge_gsoft, merge_lora, merge_oft, oft_q,
+    AdapterKind,
+};
+use crate::kernel::{fused_apply, GsOp, KernelCtx};
+use crate::linalg::Mat;
+use crate::util::prop;
+use crate::util::rng::Rng;
+
+use super::{monarch, AdapterDesc, AdapterFamily, FamilyRegistry};
+
+/// One randomized scenario: a family descriptor, a base the adapter is
+/// valid for, and the adapter layout (params drawn separately so the
+/// shrinker can minimize them).
+#[derive(Clone, Debug)]
+struct Setup {
+    desc: AdapterDesc,
+    d: usize,
+    base_spec: FlatSpec,
+    adapter_spec: FlatSpec,
+}
+
+fn random_setup(rng: &mut Rng, which: usize) -> Setup {
+    let layers = prop::size_in(rng, 1, 2);
+    let names: Vec<String> = (0..layers).map(|i| format!("layer{i}.w")).collect();
+    let (desc, d, hint) = match which % 5 {
+        0 => {
+            let b = 2usize;
+            let r = prop::size_in(rng, 2, 4);
+            (AdapterKind::Gsoft { block: b }.desc(), b * r, b)
+        }
+        1 => {
+            let b = 2usize;
+            let r = prop::size_in(rng, 2, 4);
+            (AdapterKind::Oft { block: b }.desc(), b * r, b)
+        }
+        2 => {
+            let d = prop::size_in(rng, 2, 8);
+            (AdapterKind::Lora.desc(), d, prop::size_in(rng, 1, d))
+        }
+        3 => {
+            let groups = [1usize, 2][rng.below(2)];
+            let c = 2 * groups;
+            let (h, w) = (prop::size_in(rng, 1, 3), prop::size_in(rng, 1, 3));
+            (
+                AdapterKind::ConvGsSoc {
+                    c,
+                    k: 3,
+                    groups,
+                    h,
+                    w,
+                    terms: prop::size_in(rng, 2, 8),
+                }
+                .desc(),
+                c * h * w,
+                0,
+            )
+        }
+        _ => {
+            let b = [2usize, 3][rng.below(2)];
+            (monarch::desc(b), b * b, b)
+        }
+    };
+    let mut base_entries: Vec<(String, Vec<usize>)> =
+        names.iter().cloned().map(|n| (n, vec![d, d])).collect();
+    base_entries.push(("head".to_string(), vec![d, 2]));
+    let adapter_spec = desc
+        .family()
+        .synthetic_spec(desc.cfg(), &names, d, hint)
+        .expect("synthetic spec");
+    Setup {
+        desc,
+        d,
+        base_spec: FlatSpec {
+            entries: base_entries,
+        },
+        adapter_spec,
+    }
+}
+
+fn param_std(desc: &AdapterDesc) -> f32 {
+    desc.family().synthetic_std(desc.cfg())
+}
+
+/// The pre-trait closed-enum dispatch, reproduced verbatim: one match arm
+/// per legacy kind, calling the kind-specific merge function directly.
+fn legacy_merge(s: &Setup, base: &[f32], params: &[f32]) -> Vec<f32> {
+    let (bs, asp) = (&s.base_spec, &s.adapter_spec);
+    match s.desc.tag() {
+        "gsoft" => merge_gsoft(base, params, bs, asp, s.desc.hp("block").unwrap()),
+        "oft" => merge_oft(base, params, bs, asp, s.desc.hp("block").unwrap()),
+        "lora" => merge_lora(base, params, bs, asp),
+        "conv_gssoc" => merge_conv_gssoc(
+            base,
+            params,
+            bs,
+            asp,
+            s.desc.hp("c").unwrap(),
+            s.desc.hp("k").unwrap(),
+            s.desc.hp("groups").unwrap(),
+            s.desc.hp("h").unwrap(),
+            s.desc.hp("w").unwrap(),
+            s.desc.hp("terms").unwrap(),
+        ),
+        other => panic!("no legacy dispatch for family '{other}'"),
+    }
+    .expect("legacy merge")
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn trait_merge_is_bit_identical_to_legacy_dispatch() {
+    // Property (shrinking on params): for every legacy kind,
+    // `merge_entry` through the family trait produces the same bytes the
+    // closed-enum `match` produced — hyperparameters must survive the
+    // Config round-trip exactly.
+    prop::check_shrunk(
+        "trait merge == legacy enum merge",
+        1301,
+        24,
+        |rng| {
+            let which = rng.below(4);
+            let s = random_setup(rng, which);
+            let base = rng.normal_vec(s.base_spec.size(), 1.0);
+            let params = rng.normal_vec(s.adapter_spec.size(), param_std(&s.desc));
+            (s, base, params)
+        },
+        |(s, base, params)| {
+            prop::shrink_vec_f32(params)
+                .into_iter()
+                .map(|p| (s.clone(), base.clone(), p))
+                .collect()
+        },
+        |(s, base, params)| {
+            let via_trait =
+                super::merge_entry(&s.desc, base, params, &s.base_spec, &s.adapter_spec)
+                    .expect("trait merge");
+            assert_eq!(
+                bits(&via_trait),
+                bits(&legacy_merge(s, base, params)),
+                "family '{}' drifted from the legacy enum dispatch",
+                s.desc.tag()
+            );
+        },
+    );
+}
+
+#[test]
+fn trait_plan_is_bit_identical_to_legacy_operators() {
+    // Property (shrinking on params): the factorized operator each family
+    // plans applies exactly like the legacy per-kind `LayerQ`
+    // construction (GsOp / bare block-diagonal / low-rank / GS-SOC conv).
+    prop::check_shrunk(
+        "trait layer op == legacy factorized operator",
+        1302,
+        24,
+        |rng| {
+            let which = rng.below(4);
+            let s = random_setup(rng, which);
+            let t = prop::size_in(rng, 1, 3);
+            let params = rng.normal_vec(s.adapter_spec.size(), param_std(&s.desc));
+            let x = (0..s.d * t).map(|_| rng.normal()).collect::<Vec<f64>>();
+            let base_y = (0..s.d * t).map(|_| rng.normal()).collect::<Vec<f64>>();
+            (s, params, x, base_y)
+        },
+        |(s, params, x, base_y)| {
+            prop::shrink_vec_f32(params)
+                .into_iter()
+                .map(|p| (s.clone(), p, x.clone(), base_y.clone()))
+                .collect()
+        },
+        |(s, params, x, base_y)| {
+            let ctx = KernelCtx::default();
+            let t = x.len() / s.d;
+            let x = Mat::from_rows(s.d, t, x);
+            let base_y = Mat::from_rows(s.d, t, base_y);
+            let layer = "layer0.w";
+            let op = s
+                .desc
+                .family()
+                .plan_layer(s.desc.cfg(), params, &s.adapter_spec, layer, s.d)
+                .expect("plan")
+                .expect("layer0 is adapted");
+            let got = op.apply(base_y.clone(), &x, &ctx);
+
+            // Legacy construction, one arm per pre-trait kind.
+            let spec = &s.adapter_spec;
+            let want = match s.desc.tag() {
+                "gsoft" => {
+                    let l = spec.view(params, &format!("{layer}.gs_l")).unwrap();
+                    let r = spec.view(params, &format!("{layer}.gs_r")).unwrap();
+                    GsOp::new(gsoft_q(l, r, s.d, s.desc.hp("block").unwrap()))
+                        .apply(&base_y, &ctx)
+                }
+                "oft" => {
+                    let k = spec.view(params, &format!("{layer}.oft_k")).unwrap();
+                    let bd = oft_q(k, s.d, s.desc.hp("block").unwrap());
+                    fused_apply(&bd, None, None, &base_y, &ctx)
+                }
+                "lora" => {
+                    let (_, ashape) = spec.locate(&format!("{layer}.lora_a")).unwrap();
+                    let a = Mat::from_f32(
+                        s.d,
+                        ashape[1],
+                        spec.view(params, &format!("{layer}.lora_a")).unwrap(),
+                    );
+                    let b = Mat::from_f32(
+                        ashape[1],
+                        s.d,
+                        spec.view(params, &format!("{layer}.lora_b")).unwrap(),
+                    );
+                    &base_y + &ctx.gemm(&a, &ctx.gemm(&b, &x))
+                }
+                "conv_gssoc" => {
+                    let raw = spec.view(params, &format!("{layer}.soc_k")).unwrap();
+                    let soc = conv_gssoc_layer(
+                        raw,
+                        s.desc.hp("c").unwrap(),
+                        s.desc.hp("k").unwrap(),
+                        s.desc.hp("groups").unwrap(),
+                        s.desc.hp("h").unwrap(),
+                        s.desc.hp("w").unwrap(),
+                        s.desc.hp("terms").unwrap(),
+                    );
+                    soc.apply(&base_y, &ctx)
+                }
+                other => panic!("no legacy operator for family '{other}'"),
+            };
+            assert_eq!(
+                got.data, want.data,
+                "family '{}' factorized apply drifted",
+                s.desc.tag()
+            );
+        },
+    );
+}
+
+#[test]
+fn monarch_merge_and_plan_match_the_dense_oracle() {
+    // Monarch has no legacy arm to compare against; its correctness
+    // oracle is the dense `Q W` / `Q y` product of the materialized
+    // `P_1 L P_2 R`.
+    prop::check_shrunk(
+        "monarch trait dispatch == dense oracle",
+        1303,
+        16,
+        |rng| {
+            let s = random_setup(rng, 4);
+            let base = rng.normal_vec(s.base_spec.size(), 1.0);
+            let params = rng.normal_vec(s.adapter_spec.size(), 0.4);
+            (s, base, params)
+        },
+        |(s, base, params)| {
+            prop::shrink_vec_f32(params)
+                .into_iter()
+                .map(|p| (s.clone(), base.clone(), p))
+                .collect()
+        },
+        |(s, base, params)| {
+            let b = s.desc.hp("block").unwrap();
+            let merged = super::merge_entry(&s.desc, base, params, &s.base_spec, &s.adapter_spec)
+                .expect("monarch merge");
+            let spec = &s.adapter_spec;
+            for (name, _) in &s.base_spec.entries {
+                if s.base_spec.locate(name).unwrap().1 != [s.d, s.d].as_slice() {
+                    continue; // head
+                }
+                let w = Mat::from_f32(s.d, s.d, s.base_spec.view(base, name).unwrap());
+                let got = Mat::from_f32(s.d, s.d, s.base_spec.view(&merged, name).unwrap());
+                if spec.locate(&format!("{name}.mon_l")).is_err() {
+                    assert_eq!(got.data, w.data, "unadapted layer must be untouched");
+                    continue;
+                }
+                let l = spec.view(params, &format!("{name}.mon_l")).unwrap();
+                let r = spec.view(params, &format!("{name}.mon_r")).unwrap();
+                let q = monarch::monarch_q(l, r, s.d, b).to_dense();
+                let want = q.matmul(&w);
+                assert!(
+                    got.fro_dist(&want) < 1e-5,
+                    "monarch merged layer '{name}' off by {}",
+                    got.fro_dist(&want)
+                );
+            }
+            // Planned operator vs the same dense oracle.
+            let ctx = KernelCtx::default();
+            let y = Mat::from_f32(s.d, 1, &base[..s.d]);
+            let op = s
+                .desc
+                .family()
+                .plan_layer(s.desc.cfg(), params, spec, "layer0.w", s.d)
+                .unwrap()
+                .unwrap();
+            let l = spec.view(params, "layer0.w.mon_l").unwrap();
+            let r = spec.view(params, "layer0.w.mon_r").unwrap();
+            let q = monarch::monarch_q(l, r, s.d, b).to_dense();
+            let got = op.apply(y.clone(), &y, &ctx);
+            assert!(got.fro_dist(&q.matmul(&y)) < 1e-9);
+        },
+    );
+}
+
+#[test]
+fn registry_resolves_builtins_and_rejects_junk() {
+    for tag in ["gsoft", "oft", "lora", "conv_gssoc", "monarch"] {
+        let family = FamilyRegistry::family(tag).expect("builtin registered");
+        assert_eq!(family.tag(), tag);
+        assert!(FamilyRegistry::tags().contains(&tag));
+    }
+    let err = FamilyRegistry::family("butterfly").expect_err("unknown tag");
+    assert!(format!("{err:#}").contains("unknown adapter family 'butterfly'"));
+    // Tags are wire-stable: shadowing a registered one is refused.
+    assert!(FamilyRegistry::register(&super::gsoft::GSOFT).is_err());
+    // Descriptor constructor surfaces the same clean error.
+    assert!(AdapterDesc::new("butterfly", &[]).is_err());
+    // Missing and unknown hyperparameters are errors, not panics.
+    assert!(AdapterDesc::new("gsoft", &[]).is_err(), "missing 'block'");
+    assert!(
+        AdapterDesc::new("gsoft", &[("blok", 2)]).is_err(),
+        "misspelled key must be rejected at construction, not at the wire"
+    );
+    assert!(
+        AdapterDesc::new("lora", &[("rank", 4)]).is_err(),
+        "lora has no hyperparameters"
+    );
+}
+
+#[test]
+fn desc_construction_is_canonical_in_key_order() {
+    // Caller-supplied hp order must not leak into equality or the wire:
+    // a shuffled construction equals the canonical one and survives a
+    // wire round-trip as the identity.
+    let shuffled = AdapterDesc::new(
+        "conv_gssoc",
+        &[("terms", 8), ("k", 3), ("w", 3), ("c", 4), ("groups", 2), ("h", 2)],
+    )
+    .unwrap();
+    let canonical = AdapterKind::ConvGsSoc {
+        c: 4,
+        k: 3,
+        groups: 2,
+        h: 2,
+        w: 3,
+        terms: 8,
+    }
+    .desc();
+    assert_eq!(shuffled, canonical);
+    let back = super::desc_from_json(&super::desc_to_json(&shuffled)).unwrap();
+    assert_eq!(back, shuffled, "decode must invert encode for any construction");
+}
+
+#[test]
+fn adapter_kind_constructors_resolve_to_their_families() {
+    let mut rng = Rng::new(3);
+    let cases = [
+        AdapterKind::Gsoft { block: 4 },
+        AdapterKind::Oft { block: 8 },
+        AdapterKind::Lora,
+        AdapterKind::ConvGsSoc {
+            c: 4,
+            k: 3,
+            groups: 2,
+            h: 2,
+            w: 3,
+            terms: 6,
+        },
+    ];
+    for kind in cases {
+        let desc = kind.desc();
+        assert_eq!(desc.tag(), kind.name());
+        assert_eq!(desc.is_orthogonal(), kind.is_orthogonal());
+        assert_eq!(desc, kind.desc(), "desc construction is deterministic");
+    }
+    assert_eq!(
+        AdapterKind::Gsoft { block: 4 }.desc().hp("block").unwrap(),
+        4
+    );
+    // Distinct configs compare unequal even within a family.
+    assert_ne!(
+        AdapterKind::Gsoft { block: 4 }.desc(),
+        AdapterKind::Gsoft { block: 8 }.desc()
+    );
+    assert_ne!(
+        AdapterKind::Gsoft { block: 4 }.desc(),
+        AdapterKind::Oft { block: 4 }.desc()
+    );
+    // And a smoke check that the resolved family actually works.
+    let s = random_setup(&mut rng, 0);
+    let base = rng.normal_vec(s.base_spec.size(), 1.0);
+    let params = vec![0.0; s.adapter_spec.size()];
+    let merged =
+        super::merge_entry(&s.desc, &base, &params, &s.base_spec, &s.adapter_spec).unwrap();
+    for (a, b) in merged.iter().zip(base.iter()) {
+        assert!((a - b).abs() < 1e-6, "zero adapter must be a no-op");
+    }
+}

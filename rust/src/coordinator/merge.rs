@@ -16,9 +16,14 @@ use crate::linalg::{cayley_unconstrained, Mat};
 
 use super::flatspec::FlatSpec;
 
-/// Which adapter family a flat parameter buffer encodes — the reusable
-/// merge API shared by the experiment harnesses, `merge-demo`, and the
-/// multi-tenant serving engine ([`crate::serve`]).
+use crate::adapter::{merge_entry, AdapterDesc};
+
+/// Thin constructor enum over the built-in adapter-family tags — kept for
+/// CLI ergonomics and back-compat with the pre-trait API. All real
+/// dispatch happens through [`crate::adapter::AdapterFamily`] via
+/// [`AdapterKind::desc`]; families added at runtime (e.g.
+/// [`crate::adapter::monarch`]) have no variant here and are constructed
+/// as [`AdapterDesc`]s directly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdapterKind {
     /// GSOFT (§6.1): `W' = Q W` with `Q = P^T L P R` (two Cayley
@@ -46,24 +51,50 @@ pub enum AdapterKind {
 }
 
 impl AdapterKind {
+    /// Resolve this constructor into its family descriptor — the value
+    /// every dispatching layer (registry, engine, store) actually
+    /// carries.
+    pub fn desc(&self) -> AdapterDesc {
+        let built = match *self {
+            AdapterKind::Gsoft { block } => AdapterDesc::new("gsoft", &[("block", block)]),
+            AdapterKind::Oft { block } => AdapterDesc::new("oft", &[("block", block)]),
+            AdapterKind::Lora => AdapterDesc::new("lora", &[]),
+            AdapterKind::ConvGsSoc {
+                c,
+                k,
+                groups,
+                h,
+                w,
+                terms,
+            } => AdapterDesc::new(
+                "conv_gssoc",
+                &[
+                    ("c", c),
+                    ("k", k),
+                    ("groups", groups),
+                    ("h", h),
+                    ("w", w),
+                    ("terms", terms),
+                ],
+            ),
+        };
+        built.expect("built-in adapter families are always registered")
+    }
+
     pub fn name(&self) -> &'static str {
-        match self {
-            AdapterKind::Gsoft { .. } => "gsoft",
-            AdapterKind::Oft { .. } => "oft",
-            AdapterKind::Lora => "lora",
-            AdapterKind::ConvGsSoc { .. } => "conv_gssoc",
-        }
+        self.desc().tag()
     }
 
     /// Orthogonal adapters preserve the singular values of every adapted
     /// layer; LoRA does not.
     pub fn is_orthogonal(&self) -> bool {
-        !matches!(self, AdapterKind::Lora)
+        self.desc().is_orthogonal()
     }
 }
 
 /// Merge any supported adapter kind into a copy of the base buffer —
-/// single entry point dispatching to the kind-specific mergers below.
+/// back-compat front for [`crate::adapter::merge_entry`] (which is the
+/// open-family entry point the registry and engine use).
 pub fn merge_adapter(
     kind: AdapterKind,
     base: &[f32],
@@ -71,19 +102,7 @@ pub fn merge_adapter(
     base_spec: &FlatSpec,
     adapter_spec: &FlatSpec,
 ) -> Result<Vec<f32>> {
-    match kind {
-        AdapterKind::Gsoft { block } => merge_gsoft(base, adapter, base_spec, adapter_spec, block),
-        AdapterKind::Oft { block } => merge_oft(base, adapter, base_spec, adapter_spec, block),
-        AdapterKind::Lora => merge_lora(base, adapter, base_spec, adapter_spec),
-        AdapterKind::ConvGsSoc {
-            c,
-            k,
-            groups,
-            h,
-            w,
-            terms,
-        } => merge_conv_gssoc(base, adapter, base_spec, adapter_spec, c, k, groups, h, w, terms),
-    }
+    merge_entry(&kind.desc(), base, adapter, base_spec, adapter_spec)
 }
 
 /// Cayley blocks from a flat `(r, b, b)` parameter slab.

@@ -19,11 +19,13 @@
 //!   experiment/reporting harness ([`report`]) that regenerates every
 //!   table and figure of the paper, and the multi-tenant adapter serving
 //!   engine ([`serve`]) backed by the persistent tiered adapter store
-//!   ([`store`]).
+//!   ([`store`]), both dispatching through the open adapter-family API
+//!   ([`adapter`]).
 //!
 //! See `DESIGN.md` for the systems inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod adapter;
 pub mod coordinator;
 pub mod data;
 pub mod gs;

@@ -10,7 +10,8 @@
 //! gsoft density  [--d 1024 --b 32]
 //! gsoft params-table
 //! gsoft perms
-//! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8]
+//! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8
+//!                    --store DIR --reg-every 16 --smoke]
 //! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json]
 //! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json]
 //! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json]
@@ -197,40 +198,79 @@ fn merge_demo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-tenant serving benchmark: a synthetic registry of GSOFT/OFT/LoRA
-/// adapters over one frozen base, driven by a Zipf-popularity request
-/// trace through the `serve::Engine`. Reports end-to-end p50/p99 latency,
-/// throughput, cache hit-rate, and per-path worker service times, and
-/// writes a machine-readable `BENCH_serve.json` perf record.
+/// Multi-tenant serving benchmark: a synthetic registry of adapters over
+/// one frozen base, driven by a Zipf-popularity request trace through the
+/// `serve::Engine`. With `--store DIR` the registry is durably
+/// store-backed and the query trace is *mixed with registration traffic*
+/// (every `--reg-every`-th request durably registers a brand-new tenant
+/// and immediately queries it cold), measuring write/read contention on
+/// the store. Reports end-to-end p50/p99 latency, throughput, cache
+/// hit-rate, and per-path worker service times, and writes a
+/// machine-readable `BENCH_serve.json` perf record.
 fn serve_bench(args: &Args) -> Result<()> {
+    use gsoft::adapter::AdapterFamily;
     use gsoft::data::zipf::Zipf;
     use gsoft::report::{emit_json_record, fmt, Table};
-    use gsoft::serve::{synthetic, Engine, EngineOpts, TenantId};
+    use gsoft::serve::{synthetic, AdapterEntry, Engine, EngineOpts, Registry, TenantId};
+    use gsoft::store::AdapterStore;
     use gsoft::util::json::Json;
     use gsoft::util::rng::Rng;
+    use std::sync::Arc;
     use std::time::Instant;
 
-    let tenants = args.opt_usize("tenants", 256)?;
-    let requests = args.opt_usize("requests", 4096)?;
-    let layers = args.opt_usize("layers", 4)?;
-    let d = args.opt_usize("d", 64)?;
-    let block = args.opt_usize("block", 8)?;
+    let smoke = args.flag("smoke");
+    let tenants = args.opt_usize("tenants", if smoke { 24 } else { 256 })?;
+    let requests = args.opt_usize("requests", if smoke { 192 } else { 4096 })?;
+    let layers = args.opt_usize("layers", if smoke { 2 } else { 4 })?;
+    let d = args.opt_usize("d", if smoke { 16 } else { 64 })?;
+    let block = args.opt_usize("block", if smoke { 4 } else { 8 })?;
     let zipf_s = args.opt_f64("zipf-s", 1.1)?;
     let workers = args.opt_usize("workers", gsoft::util::pool::default_workers().min(8))?;
     let max_batch = args.opt_usize("max-batch", 16)?;
     let cache_mb = args.opt_usize("cache-mb", 64)?;
     let seed = args.opt_u64("seed", 42)?;
+    let reg_every = args.opt_usize("reg-every", 16)?.max(1);
+    let store_dir = args.opt("store").map(std::path::PathBuf::from);
 
     println!(
         "[serve-bench] registry: {tenants} tenants over {layers} layers of {d}x{d} (block {block})"
     );
-    let registry = synthetic(tenants, layers, d, block, seed)?;
+    let donor = synthetic(tenants, layers, d, block, seed)?;
+    // Store mode: persist the fleet through a durable store-backed
+    // registry (write-through segment log) and keep an entry pool to
+    // clone fresh registrations from during the trace.
+    let (registry, reg_pool) = match &store_dir {
+        Some(dir) => {
+            let pool: Vec<AdapterEntry> = donor
+                .tenant_ids()
+                .into_iter()
+                .map(|t| donor.get(t).expect("donor tenant"))
+                .collect();
+            let reg = Registry::with_store(
+                donor.base().weights.as_ref().clone(),
+                donor.base().spec.as_ref().clone(),
+                AdapterStore::open(dir.join("factors"))?,
+            )?;
+            let t0 = Instant::now();
+            for (t, e) in pool.iter().enumerate() {
+                reg.register(t as TenantId, e.clone())?;
+            }
+            println!(
+                "[serve-bench] store mode: fleet durably persisted to {} in {:.1} ms",
+                dir.display(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            (reg, Some(pool))
+        }
+        None => (donor, None),
+    };
     let engine = Engine::new(
         registry,
         EngineOpts {
             workers,
             max_batch,
             cache_budget_bytes: cache_mb << 20,
+            spill_dir: store_dir.as_ref().map(|dir| dir.join("spill")),
             ..EngineOpts::default()
         },
     )?;
@@ -247,10 +287,32 @@ fn serve_bench(args: &Args) -> Result<()> {
     let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(d, 0.5)).collect();
 
     println!("[serve-bench] submitting {requests} requests (zipf s={zipf_s}, {workers} workers)…");
+    let mut reg_ns: Vec<u64> = Vec::new();
+    let mut next_new = tenants as TenantId;
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(requests);
-    for (tenant, input) in trace.iter().zip(inputs) {
-        handles.push(engine.submit(*tenant as TenantId, input)?);
+    for (i, (tenant, input)) in trace.iter().zip(inputs).enumerate() {
+        let mut target = *tenant as TenantId;
+        if let Some(pool) = &reg_pool {
+            if (i + 1) % reg_every == 0 {
+                // Registration traffic interleaved with queries: a durable
+                // append on the same store the workers hydrate from, then
+                // an immediate cold query of the fresh tenant.
+                let template = &pool[(next_new as usize) % pool.len()];
+                let std = template.desc.family().synthetic_std(template.desc.cfg());
+                let entry = AdapterEntry {
+                    desc: template.desc.clone(),
+                    params: Arc::new(rng.normal_vec(template.spec.size(), std)),
+                    spec: Arc::clone(&template.spec),
+                };
+                let r0 = Instant::now();
+                engine.registry().register(next_new, entry)?;
+                reg_ns.push(r0.elapsed().as_nanos() as u64);
+                target = next_new;
+                next_new += 1;
+            }
+        }
+        handles.push(engine.submit(target, input)?);
     }
     for h in handles {
         h.wait()?;
@@ -298,6 +360,30 @@ fn serve_bench(args: &Args) -> Result<()> {
             fmt(m.service_factorized.p50_ns * ns_ms, 4)
         ),
     ]);
+    // Store-mode extras: registration traffic + spill activity.
+    let pct = |ns: &[u64], q: f64| -> f64 {
+        if ns.is_empty() {
+            return 0.0;
+        }
+        let mut v = ns.to_vec();
+        v.sort_unstable();
+        v[((v.len() as f64 - 1.0) * q).round() as usize] as f64
+    };
+    if reg_pool.is_some() {
+        table.row(vec![
+            "registrations / p50 / p99 (ms)".into(),
+            format!(
+                "{} / {} / {}",
+                reg_ns.len(),
+                fmt(pct(&reg_ns, 0.50) * ns_ms, 3),
+                fmt(pct(&reg_ns, 0.99) * ns_ms, 3)
+            ),
+        ]);
+        table.row(vec![
+            "spill loads".into(),
+            report.metrics.spill_loads.to_string(),
+        ]);
+    }
     table.emit("serve_bench")?;
 
     if m.service_cached.count > 0 && m.service_cold.count > 0 {
@@ -319,7 +405,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             ("p99_ns", Json::Num(s.p99_ns)),
         ])
     };
-    let record = Json::obj(vec![
+    let mut fields = vec![
         (
             "config",
             Json::obj(vec![
@@ -334,6 +420,7 @@ fn serve_bench(args: &Args) -> Result<()> {
                 ("cache_mb", Json::Num(cache_mb as f64)),
                 ("seed", Json::Num(seed as f64)),
                 ("promote_after", Json::Num(policy.promote_after as f64)),
+                ("smoke", Json::Bool(smoke)),
             ]),
         ),
         ("wall_s", Json::Num(wall.as_secs_f64())),
@@ -350,8 +437,24 @@ fn serve_bench(args: &Args) -> Result<()> {
         ("service_cached", path_stats_json(&m.service_cached)),
         ("service_cold_merge", path_stats_json(&m.service_cold)),
         ("service_factorized", path_stats_json(&m.service_factorized)),
-    ]);
-    emit_json_record(std::path::Path::new("BENCH_serve.json"), &record)?;
+    ];
+    if reg_pool.is_some() {
+        fields.push((
+            "store",
+            Json::obj(vec![
+                ("reg_every", Json::Num(reg_every as f64)),
+                ("registrations", Json::Num(reg_ns.len() as f64)),
+                ("reg_p50_ns", Json::Num(pct(&reg_ns, 0.50))),
+                ("reg_p99_ns", Json::Num(pct(&reg_ns, 0.99))),
+                ("spill_loads", Json::Num(m.spill_loads as f64)),
+                (
+                    "latency_spill_load",
+                    path_stats_json(&m.spill),
+                ),
+            ]),
+        ));
+    }
+    emit_json_record(std::path::Path::new("BENCH_serve.json"), &Json::obj(fields))?;
     Ok(())
 }
 
@@ -780,6 +883,15 @@ Utilities:
   serve-bench   multi-tenant adapter serving engine benchmark
                 [--tenants 256 --requests 4096 --layers 4 --d 64
                  --block 8 --zipf-s 1.1 --max-batch 16 --cache-mb 64]
+                with --store DIR: durable store-backed registry, and the
+                Zipf query trace is mixed with registration traffic
+                (every --reg-every-th request durably registers a new
+                tenant, then queries it cold — write/read contention);
+                --smoke shrinks the run for CI
+                Adapter families are an open set (gsoft, oft, lora,
+                conv_gssoc, monarch, ... — see gsoft::adapter): new
+                families serve, persist, and merge with zero engine or
+                store edits.
   kernel-bench  CPU kernel sweep over (d, b, m, batch): fused
                 group-and-shuffle apply vs dense merged GEMM; writes
                 BENCH_kernels.json   [--smoke --seed 7 --out PATH]

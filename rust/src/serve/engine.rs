@@ -9,9 +9,12 @@
 //!   threshold → pay `merge` once (Cayley solves + structured `Q·W`),
 //!   cache the result, serve this batch from it.
 //! - **factorized** (`Factorized`): cold-tail tenants skip merging —
-//!   serve `W'X = Q(WX)` with the structured GS/OFT apply (or the
-//!   low-rank `WX + A(BX)` for LoRA), paying a small per-request
-//!   overhead instead of a merge.
+//!   serve `W'X = Q(WX)` with the family's prepared
+//!   [`crate::adapter::LayerOp`] (structured GS/OFT apply, low-rank
+//!   `WX + A(BX)` for LoRA, direct GS-SOC conv, …), paying a small
+//!   per-request overhead instead of a merge. Fully family-agnostic:
+//!   new [`crate::adapter::AdapterFamily`]s serve here with no engine
+//!   edits.
 //! - **spill load** (`SpillLoad`): with a spill tier mounted
 //!   ([`EngineOpts::spill_dir`]), a promoted tenant whose merged weights
 //!   were evicted to disk is rehydrated with one sequential read instead
@@ -30,13 +33,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::merge::{conv_gssoc_layer, gsoft_q, oft_q, AdapterKind};
-use crate::gs::density::{chain_support, gs_min_factors, BitMatrix, PermFamily};
-use crate::gs::BlockDiag;
-use crate::kernel::{self, KernelCtx};
+use crate::adapter::gsoft::gs_cost_model;
+use crate::adapter::{AdapterFamily, CostModel, LayerOp};
+use crate::kernel::KernelCtx;
 use crate::linalg::Mat;
-use crate::store::gsad::params_crc;
-use crate::store::{SpillStats, SpillTier};
+use crate::store::gsad::{self, params_crc};
+use crate::store::{spill, SpillStats, SpillTier};
 use crate::util::pool::{default_workers, WorkQueue};
 
 use super::batcher::{Batch, MicroBatcher};
@@ -90,24 +92,24 @@ pub struct Policy {
 pub const SPILL_FLOPS_PER_BYTE: f64 = 4.0;
 
 impl Policy {
-    pub fn from_cost_model(d: usize, block: usize, expected_batch: usize) -> Policy {
-        let b = block.clamp(2, d.max(2));
-        let r = (d / b).max(1);
-        let m = gs_min_factors(b, r);
-        // Exact per-column structured cost from the support model: one
-        // block-diagonal factor has nnz = r·b² = d·b; GSOFT applies m of
-        // them. Merge applies the same to all d columns of W.
-        let factor_nnz = BitMatrix::block_diag(r, b, b).nnz();
-        let q_apply_flops = (m * factor_nnz).max(1);
-        let merge_flops = q_apply_flops * d;
-        let batch = expected_batch.max(1);
-        let promote_after = (merge_flops / (q_apply_flops * batch)).max(1) as u64;
-        let q_dense = chain_support(r * b, b, m, PermFamily::GsKn).is_dense();
+    /// Derive a policy from a family [`CostModel`] at served dimension
+    /// `d`: merging pays `q_col_flops · d` once, factorized serving pays
+    /// `q_col_flops` per column — break-even after `d/B` requests at
+    /// expected batch size `B`, for every structured family.
+    pub fn from_family_model(cm: CostModel, d: usize, expected_batch: usize) -> Policy {
         Policy {
-            promote_after,
-            q_dense,
-            merge_flops_per_layer: merge_flops as u64,
+            promote_after: (d / expected_batch.max(1)).max(1) as u64,
+            q_dense: cm.q_dense,
+            merge_flops_per_layer: cm.q_col_flops * d as u64,
         }
+    }
+
+    /// The GS/Theorem-2 instance of [`Policy::from_family_model`] — the
+    /// generic default when no structured family is registered. The
+    /// support-model math itself lives in one place,
+    /// [`crate::adapter::gsoft::gs_cost_model`].
+    pub fn from_cost_model(d: usize, block: usize, expected_batch: usize) -> Policy {
+        Policy::from_family_model(gs_cost_model(d, block), d, expected_batch)
     }
 
     /// Fixed threshold (tests, or deployments that know their traffic).
@@ -359,7 +361,7 @@ struct Shared {
     /// tenant, not per batch); entries are dropped on promotion. Adapters
     /// are immutable once the engine owns the registry, so this cannot go
     /// stale.
-    factored: Mutex<HashMap<TenantId, Arc<Vec<Option<LayerQ>>>>>,
+    factored: Mutex<HashMap<TenantId, Arc<Vec<Option<Box<dyn LayerOp>>>>>>,
     batcher: Mutex<MicroBatcher<Job>>,
     queue: WorkQueue<Batch<Job>>,
     metrics: Metrics,
@@ -395,62 +397,30 @@ impl Engine {
         let policy = match opts.promote_after {
             Some(k) => Policy::fixed(k),
             None => {
-                // Policy inference needs adapter *kinds*, not the fleet:
-                // sample a bounded prefix through the non-caching read so
-                // a store-backed registry keeps its lazy cold boot
-                // (O(log replay), never O(fleet) hydration).
-                const POLICY_KIND_SAMPLE: usize = 64;
-                let kinds: Vec<AdapterKind> = registry
+                // Policy inference needs adapter *descriptors*, not the
+                // fleet: sample a bounded prefix through the non-caching
+                // read so a store-backed registry keeps its lazy cold
+                // boot (O(log replay), never O(fleet) hydration). The
+                // first sampled family with a structured cost model wins
+                // (merging applies Q to each of W's d columns, the
+                // factorized path applies the same Q once per served
+                // column — identical per-column cost, so the break-even
+                // is d/B requests for *every* family; only
+                // `merge_flops_per_layer` and the Theorem-2 density bit
+                // are family-specific).
+                const POLICY_DESC_SAMPLE: usize = 64;
+                let batch = opts.max_batch.div_ceil(2).max(1);
+                let model = registry
                     .tenant_ids()
                     .into_iter()
-                    .take(POLICY_KIND_SAMPLE)
-                    .filter_map(|t| registry.kind_of(t))
-                    .collect();
-                if kinds
-                    .iter()
-                    .all(|k| matches!(k, AdapterKind::ConvGsSoc { .. }))
-                    && !kinds.is_empty()
-                {
-                    // Conv-only registry: merging applies Q once to each of
-                    // W's d columns, factorized serving applies the same Q
-                    // once per request column — identical per-column cost,
-                    // so the break-even is d/B requests regardless of the
-                    // factor's nnz (the same cancellation as the Theorem-2
-                    // model below). The merged support is spatially banded
-                    // (k² taps widened by `terms` applications), not the
-                    // Theorem-2 dense guarantee, hence q_dense = false.
-                    let batch = opts.max_batch.div_ceil(2).max(1);
-                    // One Q·column is `terms` grouped convs over the
-                    // [c, h, w] plane; merging pays that for all d columns.
-                    let per_col = match kinds[0] {
-                        AdapterKind::ConvGsSoc {
-                            c,
-                            k,
-                            groups,
-                            h,
-                            w,
-                            terms,
-                        } => 2 * terms * c * (c / groups) * k * k * h * w,
-                        _ => unreachable!("conv-only branch"),
-                    };
-                    Policy {
-                        promote_after: (d / batch).max(1) as u64,
-                        q_dense: false,
-                        merge_flops_per_layer: (per_col * d) as u64,
-                    }
-                } else {
-                    // Infer the dominant block size from any registered
-                    // GSOFT/OFT adapter; fall back to d/4.
-                    let block = kinds
-                        .iter()
-                        .find_map(|k| match k {
-                            AdapterKind::Gsoft { block } | AdapterKind::Oft { block } => {
-                                Some(*block)
-                            }
-                            AdapterKind::Lora | AdapterKind::ConvGsSoc { .. } => None,
-                        })
-                        .unwrap_or((d / 4).max(1));
-                    Policy::from_cost_model(d, block, opts.max_batch.div_ceil(2))
+                    .take(POLICY_DESC_SAMPLE)
+                    .filter_map(|t| registry.desc_of(t))
+                    .find_map(|desc| desc.family().cost_model(desc.cfg(), d));
+                match model {
+                    Some(cm) => Policy::from_family_model(cm, d, batch),
+                    // No structured family sampled (e.g. all-LoRA):
+                    // generic Theorem-2 default at block d/4.
+                    None => Policy::from_cost_model(d, (d / 4).max(1), batch),
                 }
             }
         };
@@ -519,6 +489,16 @@ impl Engine {
     /// Input/output dimension of the served model.
     pub fn input_dim(&self) -> usize {
         self.shared.d
+    }
+
+    /// The registry this engine serves from. Registration is
+    /// concurrent-safe, so *new* tenants can join while traffic flows
+    /// (`serve-bench --store` drives exactly that contention); replacing
+    /// an existing tenant's adapter under live traffic is not supported —
+    /// merged-cache entries and factorized operators are keyed by tenant
+    /// and assume immutable adapters.
+    pub fn registry(&self) -> &Registry {
+        &self.shared.registry
     }
 
     pub fn policy(&self) -> Policy {
@@ -617,19 +597,6 @@ impl Drop for Engine {
 
 // ---- batch serving ---------------------------------------------------------
 
-/// Per-layer structured operator for the factorized (unmerged) path.
-/// GS operators are stored as prepared [`kernel::GsOp`]s so the relayout
-/// planning (inverse permutations, block offsets) is paid once per tenant
-/// layer, not per batch.
-enum LayerQ {
-    Gs(kernel::GsOp),
-    Block(BlockDiag),
-    LowRank { a: Mat, b: Mat },
-    /// GS-SOC orthogonal conv: applied by the direct convolution runtime
-    /// (streaming exponential + channel-plane shuffles), never dense.
-    ConvGsSoc(kernel::GsSocLayer),
-}
-
 fn activate(m: &mut Mat) {
     for v in m.data.iter_mut() {
         *v = v.tanh();
@@ -645,17 +612,15 @@ fn forward_dense(ctx: &KernelCtx, layers: &[Mat], mut x: Mat) -> Mat {
 }
 
 /// `W' X = Q (W X)` per layer without ever forming `W' = Q W` — the base
-/// GEMM plus one fused group-and-shuffle apply, both through the engine's
-/// [`KernelCtx`].
-fn forward_factorized(sh: &Shared, ops: &[Option<LayerQ>], mut x: Mat) -> Mat {
+/// GEMM plus the family's prepared [`LayerOp`], both through the engine's
+/// [`KernelCtx`]. Fully family-agnostic: the operator was planned by
+/// [`crate::adapter::AdapterFamily::plan_layer`].
+fn forward_factorized(sh: &Shared, ops: &[Option<Box<dyn LayerOp>>], mut x: Mat) -> Mat {
     let ctx = &sh.kernel;
     for ((_, w), q) in sh.base_layers.iter().zip(ops) {
         let base_y = ctx.gemm(w, &x);
         let y = match q {
-            Some(LayerQ::Gs(op)) => op.apply(&base_y, ctx),
-            Some(LayerQ::Block(bd)) => kernel::fused_apply(bd, None, None, &base_y, ctx),
-            Some(LayerQ::LowRank { a, b }) => &base_y + &ctx.gemm(a, &ctx.gemm(b, &x)),
-            Some(LayerQ::ConvGsSoc(layer)) => layer.apply(&base_y, ctx),
+            Some(op) => op.apply(base_y, &x, ctx),
             None => base_y,
         };
         x = y;
@@ -664,20 +629,22 @@ fn forward_factorized(sh: &Shared, ops: &[Option<LayerQ>], mut x: Mat) -> Mat {
     x
 }
 
-/// Per-tenant factorized operators, built once (the Cayley solves are the
-/// expensive part) and reused across batches until the tenant is promoted.
+/// Per-tenant factorized operators, built once (the Cayley solves and
+/// relayout planning are the expensive part) and reused across batches
+/// until the tenant is promoted.
 fn factored_ops(
     sh: &Shared,
     tenant: TenantId,
     entry: &AdapterEntry,
-) -> Result<Arc<Vec<Option<LayerQ>>>> {
+) -> Result<Arc<Vec<Option<Box<dyn LayerOp>>>>> {
     if let Some(ops) = sh.factored.lock().unwrap().get(&tenant) {
         return Ok(Arc::clone(ops));
     }
-    let ops: Vec<Option<LayerQ>> = sh
+    let family = entry.desc.family();
+    let ops: Vec<Option<Box<dyn LayerOp>>> = sh
         .base_layers
         .iter()
-        .map(|(name, _)| layer_q(entry, name, sh.d))
+        .map(|(name, _)| family.plan_layer(entry.desc.cfg(), &entry.params, &entry.spec, name, sh.d))
         .collect::<Result<_>>()?;
     let ops = Arc::new(ops);
     // Racing builders both produce identical operators; keep whichever
@@ -689,68 +656,6 @@ fn factored_ops(
             .entry(tenant)
             .or_insert_with(|| Arc::clone(&ops)),
     ))
-}
-
-/// Build the structured operator for one layer of one tenant's adapter,
-/// or `None` if the adapter does not touch this layer.
-fn layer_q(entry: &AdapterEntry, layer: &str, d: usize) -> Result<Option<LayerQ>> {
-    match entry.kind {
-        AdapterKind::Gsoft { block } => {
-            let lname = format!("{layer}.gs_l");
-            if entry.spec.locate(&lname).is_err() {
-                return Ok(None);
-            }
-            let l_raw = entry.spec.view(&entry.params, &lname)?;
-            let r_raw = entry.spec.view(&entry.params, &format!("{layer}.gs_r"))?;
-            Ok(Some(LayerQ::Gs(kernel::GsOp::new(gsoft_q(
-                l_raw, r_raw, d, block,
-            )))))
-        }
-        AdapterKind::Oft { block } => {
-            let kname = format!("{layer}.oft_k");
-            if entry.spec.locate(&kname).is_err() {
-                return Ok(None);
-            }
-            let k_raw = entry.spec.view(&entry.params, &kname)?;
-            Ok(Some(LayerQ::Block(oft_q(k_raw, d, block))))
-        }
-        AdapterKind::ConvGsSoc {
-            c,
-            k,
-            groups,
-            h,
-            w,
-            terms,
-        } => {
-            let sname = format!("{layer}.soc_k");
-            if entry.spec.locate(&sname).is_err() {
-                return Ok(None);
-            }
-            anyhow::ensure!(
-                c * h * w == d,
-                "conv_gssoc geometry c·h·w = {} does not match served dim {d}",
-                c * h * w
-            );
-            let raw = entry.spec.view(&entry.params, &sname)?;
-            Ok(Some(LayerQ::ConvGsSoc(conv_gssoc_layer(
-                raw, c, k, groups, h, w, terms,
-            ))))
-        }
-        AdapterKind::Lora => {
-            let aname = format!("{layer}.lora_a");
-            let Ok((_, ashape)) = entry.spec.locate(&aname) else {
-                return Ok(None);
-            };
-            let rank = ashape[1];
-            let a = Mat::from_f32(d, rank, entry.spec.view(&entry.params, &aname)?);
-            let b = Mat::from_f32(
-                rank,
-                d,
-                entry.spec.view(&entry.params, &format!("{layer}.lora_b"))?,
-            );
-            Ok(Some(LayerQ::LowRank { a, b }))
-        }
-    }
 }
 
 /// Cache a merged model; displaced models ride to the spill tier (the
@@ -771,8 +676,50 @@ fn insert_cached(sh: &Shared, tenant: TenantId, model: CachedModel) {
         // The freshness tag is the CRC captured when the model was
         // merged — never a re-read of the registry, which could have a
         // newer adapter by now.
-        if let Err(err) = spill.lock().unwrap().put(t, m.params_crc, &m.flat) {
+        if let Err(err) = spill_put(spill, t, m.params_crc, &m.flat) {
             eprintln!("[serve] spilling evicted tenant {t} failed: {err:#}");
+        }
+    }
+}
+
+/// Spill a merged model with the bulk disk I/O (encode + write + rename)
+/// *outside* the tier mutex: the lock is held only for the metadata
+/// phases — budget reservation and index commit — so concurrent workers'
+/// cold-path reads/writes no longer serialize on one file transfer
+/// (ROADMAP item from PR 4).
+fn spill_put(spill: &Mutex<SpillTier>, tenant: TenantId, crc: u32, flat: &[f32]) -> Result<bool> {
+    let bytes = gsad::encode_merged(tenant, crc, flat); // CPU-bound, lock-free
+    let Some(pending) = spill.lock().unwrap().reserve(tenant, bytes.len() as u64) else {
+        return Ok(false); // larger than the whole budget
+    };
+    match pending.write(&bytes) {
+        Ok(()) => {
+            spill.lock().unwrap().commit(pending);
+            Ok(true)
+        }
+        Err(e) => {
+            spill.lock().unwrap().abort(pending);
+            Err(e)
+        }
+    }
+}
+
+/// Load a spilled model with the read + CRC/staleness check *outside*
+/// the tier mutex (see [`spill_put`]). The generation from `begin_get`
+/// makes the invalidation safe against racing re-puts: a failed read of
+/// an already-replaced entry must not drop the replacement.
+fn spill_get(spill: &Mutex<SpillTier>, tenant: TenantId, expected_crc: u32) -> Option<Vec<f32>> {
+    let (path, gen) = spill.lock().unwrap().begin_get(tenant)?;
+    match spill::read_merged(&path, tenant, expected_crc) {
+        Some(flat) => {
+            spill.lock().unwrap().record_hit();
+            Some(flat)
+        }
+        None => {
+            // Corrupt, stale, or vanished — drop it (same-generation
+            // entries only).
+            spill.lock().unwrap().invalidate(tenant, gen);
+            None
         }
     }
 }
@@ -839,7 +786,7 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
         // re-merge). The params-CRC tag guarantees freshness.
         if let Some(spill) = &sh.spill {
             let crc = params_crc(&entry);
-            let flat = spill.lock().unwrap().get(tenant, crc);
+            let flat = spill_get(spill, tenant, crc);
             if let Some(flat) = flat {
                 let loaded = layer_mats(sh, &flat).map(|layers| CachedModel {
                     flat: Arc::new(flat),

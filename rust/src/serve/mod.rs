@@ -30,4 +30,6 @@ pub use engine::{
     Engine, EngineOpts, EngineReport, Handle, MetricsSnapshot, PathStats, Policy, ServeOutput,
     ServePath, SPILL_FLOPS_PER_BYTE,
 };
-pub use registry::{synthetic, synthetic_conv, AdapterEntry, BaseModel, Registry, TenantId};
+pub use registry::{
+    synthetic, synthetic_conv, synthetic_of, AdapterEntry, BaseModel, Registry, TenantId,
+};

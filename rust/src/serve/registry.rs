@@ -1,7 +1,7 @@
 //! Multi-tenant adapter registry: one frozen base model (flat f32 buffer +
 //! [`FlatSpec`]) shared by every tenant, plus per-tenant adapter parameters
-//! (GSOFT / OFT / LoRA — the §6.1 use-case of thousands of cheap
-//! orthogonal adapters over one pretrained model).
+//! (any registered [`crate::adapter::AdapterFamily`] — the §6.1 use-case
+//! of thousands of cheap orthogonal adapters over one pretrained model).
 //!
 //! Two modes share one API:
 //! - **in-memory** ([`Registry::new`]) — tenants live in a `HashMap`;
@@ -12,6 +12,11 @@
 //!   (droppable again with [`Registry::drop_hydrated`]), and the whole
 //!   fleet can be [`Registry::snapshot`]ed to / [`Registry::restore`]d
 //!   from a single `GSAD` fleet file.
+//!
+//! This module contains no per-family code: validation, synthetic
+//! generation, and merging all dispatch through
+//! [`crate::adapter::AdapterDesc`], so new families (e.g.
+//! [`crate::adapter::monarch`]) serve here without edits.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -19,7 +24,8 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::merge::{merge_adapter, AdapterKind};
+use crate::adapter::{merge_entry, AdapterDesc, AdapterFamily, SlabCx};
+use crate::coordinator::merge::AdapterKind;
 use crate::coordinator::FlatSpec;
 use crate::store::{gsad, AdapterStore};
 use crate::util::rng::Rng;
@@ -27,10 +33,11 @@ use crate::util::rng::Rng;
 /// Tenant identifier (subject / task / user id).
 pub type TenantId = u64;
 
-/// One tenant's adapter: kind + flat parameters + their layout.
+/// One tenant's adapter: family descriptor + flat parameters + their
+/// layout.
 #[derive(Clone)]
 pub struct AdapterEntry {
-    pub kind: AdapterKind,
+    pub desc: AdapterDesc,
     pub params: Arc<Vec<f32>>,
     pub spec: Arc<FlatSpec>,
 }
@@ -115,9 +122,11 @@ impl Registry {
     }
 
     /// Validate an adapter entry: the parameter buffer against its spec,
-    /// that every adapted layer exists in the base spec, and that every
-    /// slab's shape is consistent with the adapter kind and the adapted
-    /// layer's dimensions — a malformed entry must be rejected here (and
+    /// that every adapted layer exists in the base spec, that every slab
+    /// suffix belongs to the entry's family, and — via
+    /// [`crate::adapter::AdapterFamily::validate_slab`] — that each
+    /// slab's shape is consistent with the family config and the adapted
+    /// layer's dimensions. A malformed entry must be rejected here (and
     /// at hydration time), not panic later inside a serving worker.
     fn validate(&self, tenant: TenantId, entry: &AdapterEntry) -> Result<()> {
         anyhow::ensure!(
@@ -126,6 +135,8 @@ impl Registry {
             entry.params.len(),
             entry.spec.size()
         );
+        let family = entry.desc.family();
+        family.validate_config(entry.desc.cfg())?;
         for (name, shape) in &entry.spec.entries {
             let (layer, suffix) = name
                 .rsplit_once('.')
@@ -139,113 +150,24 @@ impl Registry {
                 wshape.len() == 2,
                 "tenant {tenant}: adapted base entry '{layer}' is not a matrix"
             );
-            let (din, dout) = (wshape[0], wshape[1]);
-            match entry.kind {
-                AdapterKind::Gsoft { block } | AdapterKind::Oft { block } => {
-                    let suffix_ok = match entry.kind {
-                        AdapterKind::Gsoft { .. } => suffix == "gs_l" || suffix == "gs_r",
-                        _ => suffix == "oft_k",
-                    };
-                    anyhow::ensure!(
-                        suffix_ok,
-                        "tenant {tenant}: entry '{name}' does not belong to a {} adapter",
-                        entry.kind.name()
-                    );
-                    anyhow::ensure!(
-                        block > 0 && din % block == 0,
-                        "tenant {tenant}: block {block} does not divide layer dim {din}"
-                    );
-                    anyhow::ensure!(
-                        *shape == [din / block, block, block],
-                        "tenant {tenant}: '{name}' has shape {shape:?}, expected {:?}",
-                        [din / block, block, block]
-                    );
-                    // GSOFT factors come in pairs: a lone gs_l errors at
-                    // serve time, a lone gs_r is silently ignored — both
-                    // must be rejected here.
-                    if suffix == "gs_l" || suffix == "gs_r" {
-                        let other = if suffix == "gs_l" { "gs_r" } else { "gs_l" };
-                        let paired = entry
-                            .spec
-                            .locate(&format!("{layer}.{other}"))
-                            .map(|(_, s)| s == &shape[..])
-                            .unwrap_or(false);
-                        anyhow::ensure!(
-                            paired,
-                            "tenant {tenant}: '{name}' has no matching '{layer}.{other}'"
-                        );
-                    }
-                }
-                AdapterKind::Lora => match suffix {
-                    "lora_a" => {
-                        anyhow::ensure!(
-                            shape.len() == 2 && shape[0] == din,
-                            "tenant {tenant}: '{name}' has shape {shape:?}, expected [{din}, rank]"
-                        );
-                        let (_, bshape) = entry
-                            .spec
-                            .locate(&format!("{layer}.lora_b"))
-                            .map_err(|_| anyhow!("tenant {tenant}: '{name}' has no paired lora_b"))?;
-                        anyhow::ensure!(
-                            bshape.len() == 2 && bshape[0] == shape[1] && bshape[1] == dout,
-                            "tenant {tenant}: '{layer}.lora_b' has shape {bshape:?}, \
-                             expected [{}, {dout}]",
-                            shape[1]
-                        );
-                    }
-                    "lora_b" => {
-                        // Shape details are checked from the lora_a side;
-                        // here just reject an unpaired lora_b (it would be
-                        // silently ignored by merge and serve).
-                        anyhow::ensure!(
-                            entry.spec.locate(&format!("{layer}.lora_a")).is_ok(),
-                            "tenant {tenant}: '{name}' has no matching '{layer}.lora_a'"
-                        );
-                    }
-                    _ => anyhow::bail!(
-                        "tenant {tenant}: entry '{name}' does not belong to a LoRA adapter"
-                    ),
+            anyhow::ensure!(
+                family.suffixes().contains(&suffix),
+                "tenant {tenant}: entry '{name}' does not belong to a {} adapter",
+                entry.desc.tag()
+            );
+            family.validate_slab(
+                entry.desc.cfg(),
+                &SlabCx {
+                    tenant,
+                    name,
+                    layer,
+                    suffix,
+                    shape,
+                    din: wshape[0],
+                    dout: wshape[1],
+                    spec: entry.spec.as_ref(),
                 },
-                AdapterKind::ConvGsSoc {
-                    c,
-                    k,
-                    groups,
-                    h,
-                    w,
-                    terms,
-                } => {
-                    anyhow::ensure!(
-                        suffix == "soc_k",
-                        "tenant {tenant}: entry '{name}' does not belong to a conv_gssoc adapter"
-                    );
-                    anyhow::ensure!(
-                        k % 2 == 1,
-                        "tenant {tenant}: same-padded conv needs an odd kernel (got k={k})"
-                    );
-                    anyhow::ensure!(
-                        terms >= 1,
-                        "tenant {tenant}: conv exponential needs at least one Taylor term"
-                    );
-                    anyhow::ensure!(
-                        groups > 0 && c % groups == 0,
-                        "tenant {tenant}: groups {groups} must divide channels {c}"
-                    );
-                    anyhow::ensure!(
-                        c * h * w == din,
-                        "tenant {tenant}: adapted layer '{layer}' has input dim {din}, \
-                         but the conv geometry gives c·h·w = {}·{}·{} = {}",
-                        c,
-                        h,
-                        w,
-                        c * h * w
-                    );
-                    anyhow::ensure!(
-                        *shape == [c, c / groups, k, k],
-                        "tenant {tenant}: '{name}' has shape {shape:?}, expected {:?}",
-                        [c, c / groups, k, k]
-                    );
-                }
-            }
+            )?;
         }
         Ok(())
     }
@@ -299,11 +221,11 @@ impl Registry {
         store.lock().unwrap().get(tenant)
     }
 
-    /// A tenant's adapter kind without hydrating it (store-backed lookups
-    /// decode the record and drop it) — the engine's policy inference
-    /// must not defeat lazy cold boot.
-    pub fn kind_of(&self, tenant: TenantId) -> Option<AdapterKind> {
-        self.read_uncached(tenant).ok().flatten().map(|e| e.kind)
+    /// A tenant's family descriptor without hydrating it (store-backed
+    /// lookups decode the record and drop it) — the engine's policy
+    /// inference must not defeat lazy cold boot.
+    pub fn desc_of(&self, tenant: TenantId) -> Option<AdapterDesc> {
+        self.read_uncached(tenant).ok().flatten().map(|e| e.desc)
     }
 
     /// Drop a tenant's in-RAM hydration, keeping the durable record
@@ -426,8 +348,8 @@ impl Registry {
         let entry = self
             .get(tenant)
             .ok_or_else(|| anyhow!("unknown tenant {tenant}"))?;
-        merge_adapter(
-            entry.kind,
+        merge_entry(
+            &entry.desc,
             &self.base.weights,
             &entry.params,
             &self.base.spec,
@@ -441,22 +363,9 @@ pub fn synthetic_layer_names(layers: usize) -> Vec<String> {
     (0..layers).map(|i| format!("layer{i}.w")).collect()
 }
 
-/// Build a synthetic many-tenant registry for benchmarks and tests:
-/// `layers` square `d×d` base matrices (plus an unadapted head), and one
-/// adapter per tenant — GSOFT for most tenants, OFT and LoRA sprinkled in
-/// (tenant id mod 4) to exercise every merge path.
-pub fn synthetic(
-    tenants: usize,
-    layers: usize,
-    d: usize,
-    block: usize,
-    seed: u64,
-) -> Result<Registry> {
-    anyhow::ensure!(d % block == 0, "block must divide d");
-    let r = d / block;
-    let mut rng = Rng::new(seed);
-
-    // Base spec: layer{i}.w [d,d] + head [d,2].
+/// Square `d×d` base (plus an unadapted head) shared by the synthetic
+/// registry builders.
+fn synthetic_base(layers: usize, d: usize, rng: &mut Rng) -> Result<Registry> {
     let mut base_entries: Vec<(String, Vec<usize>)> = synthetic_layer_names(layers)
         .into_iter()
         .map(|n| (n, vec![d, d]))
@@ -466,54 +375,81 @@ pub fn synthetic(
         entries: base_entries,
     };
     let base: Vec<f32> = rng.normal_vec(base_spec.size(), (1.0 / d as f32).sqrt());
-    let registry = Registry::new(base, base_spec)?;
+    Registry::new(base, base_spec)
+}
 
-    // Per-kind adapter specs are shared across tenants.
-    let gsoft_spec = Arc::new(FlatSpec {
-        entries: synthetic_layer_names(layers)
-            .into_iter()
-            .flat_map(|n| {
-                [
-                    (format!("{n}.gs_l"), vec![r, block, block]),
-                    (format!("{n}.gs_r"), vec![r, block, block]),
-                ]
-            })
-            .collect(),
-    });
-    let oft_spec = Arc::new(FlatSpec {
-        entries: synthetic_layer_names(layers)
-            .into_iter()
-            .map(|n| (format!("{n}.oft_k"), vec![r, block, block]))
-            .collect(),
-    });
-    let lora_rank = block.min(d / 2).max(1);
-    let lora_spec = Arc::new(FlatSpec {
-        entries: synthetic_layer_names(layers)
-            .into_iter()
-            .flat_map(|n| {
-                [
-                    (format!("{n}.lora_a"), vec![d, lora_rank]),
-                    (format!("{n}.lora_b"), vec![lora_rank, d]),
-                ]
-            })
-            .collect(),
-    });
+/// Build a synthetic many-tenant registry for benchmarks and tests:
+/// `layers` square `d×d` base matrices (plus an unadapted head), and one
+/// adapter per tenant — GSOFT for most tenants, OFT and LoRA sprinkled in
+/// (tenant id mod 4) to exercise every merge path. Specs and init scales
+/// come from the families themselves.
+pub fn synthetic(
+    tenants: usize,
+    layers: usize,
+    d: usize,
+    block: usize,
+    seed: u64,
+) -> Result<Registry> {
+    anyhow::ensure!(d % block == 0, "block must divide d");
+    let mut rng = Rng::new(seed);
+    let registry = synthetic_base(layers, d, &mut rng)?;
+    let names = synthetic_layer_names(layers);
+
+    // Per-kind descriptors + shared specs, generated by the families.
+    let mk = |kind: AdapterKind| -> Result<(AdapterDesc, Arc<FlatSpec>)> {
+        let desc = kind.desc();
+        let spec = desc.family().synthetic_spec(desc.cfg(), &names, d, block)?;
+        Ok((desc, Arc::new(spec)))
+    };
+    let gsoft = mk(AdapterKind::Gsoft { block })?;
+    let lora = mk(AdapterKind::Lora)?;
+    let oft = mk(AdapterKind::Oft { block })?;
+    let mix = [&gsoft, &gsoft, &lora, &oft];
 
     for t in 0..tenants as TenantId {
         let mut trng = rng.fork(t);
-        let (kind, spec) = match t % 4 {
-            3 => (AdapterKind::Oft { block }, Arc::clone(&oft_spec)),
-            2 => (AdapterKind::Lora, Arc::clone(&lora_spec)),
-            _ => (AdapterKind::Gsoft { block }, Arc::clone(&gsoft_spec)),
-        };
-        let std = if kind == AdapterKind::Lora { 0.05 } else { 0.3 };
+        let (desc, spec) = mix[(t % 4) as usize];
+        let std = desc.family().synthetic_std(desc.cfg());
         let params = trng.normal_vec(spec.size(), std);
         registry.register(
             t,
             AdapterEntry {
-                kind,
+                desc: desc.clone(),
                 params: Arc::new(params),
-                spec,
+                spec: Arc::clone(spec),
+            },
+        )?;
+    }
+    Ok(registry)
+}
+
+/// Build a synthetic registry where every tenant runs one family — fully
+/// generic over the open family set, so external families (e.g.
+/// [`crate::adapter::monarch`]) get bench/test coverage with zero edits
+/// here. `hint` is forwarded to
+/// [`crate::adapter::AdapterFamily::synthetic_spec`].
+pub fn synthetic_of(
+    desc: &AdapterDesc,
+    tenants: usize,
+    layers: usize,
+    d: usize,
+    hint: usize,
+    seed: u64,
+) -> Result<Registry> {
+    let mut rng = Rng::new(seed);
+    let registry = synthetic_base(layers, d, &mut rng)?;
+    let names = synthetic_layer_names(layers);
+    let spec = Arc::new(desc.family().synthetic_spec(desc.cfg(), &names, d, hint)?);
+    let std = desc.family().synthetic_std(desc.cfg());
+    for t in 0..tenants as TenantId {
+        let mut trng = rng.fork(t);
+        let params = trng.normal_vec(spec.size(), std);
+        registry.register(
+            t,
+            AdapterEntry {
+                desc: desc.clone(),
+                params: Arc::new(params),
+                spec: Arc::clone(&spec),
             },
         )?;
     }
@@ -542,49 +478,16 @@ pub fn synthetic_conv(
 ) -> Result<Registry> {
     anyhow::ensure!(groups > 0 && c % groups == 0, "groups must divide c");
     anyhow::ensure!(k % 2 == 1, "same-padded conv needs odd k");
-    let d = c * h * w;
-    let mut rng = Rng::new(seed);
-
-    let mut base_entries: Vec<(String, Vec<usize>)> = synthetic_layer_names(layers)
-        .into_iter()
-        .map(|n| (n, vec![d, d]))
-        .collect();
-    base_entries.push(("head".to_string(), vec![d, 2]));
-    let base_spec = FlatSpec {
-        entries: base_entries,
-    };
-    let base: Vec<f32> = rng.normal_vec(base_spec.size(), (1.0 / d as f32).sqrt());
-    let registry = Registry::new(base, base_spec)?;
-
-    let spec = Arc::new(FlatSpec {
-        entries: synthetic_layer_names(layers)
-            .into_iter()
-            .map(|n| (format!("{n}.soc_k"), vec![c, c / groups, k, k]))
-            .collect(),
-    });
-    let kind = AdapterKind::ConvGsSoc {
+    let desc = AdapterKind::ConvGsSoc {
         c,
         k,
         groups,
         h,
         w,
         terms: SYNTHETIC_CONV_TERMS,
-    };
-    for t in 0..tenants as TenantId {
-        let mut trng = rng.fork(t);
-        // Small kernel magnitude: keeps the truncated exponential
-        // converged so factorized and merged serving agree tightly.
-        let params = trng.normal_vec(spec.size(), 0.05);
-        registry.register(
-            t,
-            AdapterEntry {
-                kind,
-                params: Arc::new(params),
-                spec: Arc::clone(&spec),
-            },
-        )?;
     }
-    Ok(registry)
+    .desc();
+    synthetic_of(&desc, tenants, layers, c * h * w, 0, seed)
 }
 
 #[cfg(test)]
@@ -602,7 +505,7 @@ mod tests {
             assert!(merged.iter().all(|x| x.is_finite()));
             // Orthogonal kinds preserve the base layer's singular values.
             let entry = reg.get(t).unwrap();
-            if entry.kind.is_orthogonal() {
+            if entry.desc.is_orthogonal() {
                 let spec = &reg.base().spec;
                 let w0 = Mat::from_f32(8, 8, spec.view(&reg.base().weights, "layer0.w").unwrap());
                 let w1 = Mat::from_f32(8, 8, spec.view(&merged, "layer0.w").unwrap());
@@ -627,7 +530,7 @@ mod tests {
         let good = reg.get(0).unwrap();
         // Wrong buffer length.
         let bad = AdapterEntry {
-            kind: good.kind,
+            desc: good.desc.clone(),
             params: Arc::new(vec![0.0; 3]),
             spec: Arc::clone(&good.spec),
         };
@@ -637,7 +540,7 @@ mod tests {
             entries: vec![("nope.gs_l".to_string(), vec![4, 2, 2])],
         });
         let bad = AdapterEntry {
-            kind: good.kind,
+            desc: good.desc.clone(),
             params: Arc::new(vec![0.0; 16]),
             spec: bad_spec,
         };
@@ -656,13 +559,13 @@ mod tests {
             entries: vec![("layer0.w.oft_k".to_string(), vec![2, 4, 4])],
         });
         let bad = AdapterEntry {
-            kind: AdapterKind::Oft { block: 3 },
+            desc: AdapterKind::Oft { block: 3 }.desc(),
             params: Arc::new(vec![0.0; 32]),
             spec: Arc::clone(&spec),
         };
         assert!(reg.register(9, bad).is_err(), "block 3 does not divide 8");
         let bad = AdapterEntry {
-            kind: AdapterKind::Oft { block: 2 },
+            desc: AdapterKind::Oft { block: 2 }.desc(),
             params: Arc::new(vec![0.0; 32]),
             spec,
         };
@@ -673,7 +576,7 @@ mod tests {
             entries: vec![("layer0.w.gs_l".to_string(), vec![4, 2, 2])],
         });
         let bad = AdapterEntry {
-            kind: AdapterKind::Oft { block: 2 },
+            desc: AdapterKind::Oft { block: 2 }.desc(),
             params: Arc::new(vec![0.0; 16]),
             spec,
         };
@@ -687,7 +590,7 @@ mod tests {
             ],
         });
         let bad = AdapterEntry {
-            kind: AdapterKind::Lora,
+            desc: AdapterKind::Lora.desc(),
             params: Arc::new(vec![0.0; 16 + 24]),
             spec,
         };
@@ -699,7 +602,7 @@ mod tests {
             entries: vec![("layer0.w.gs_r".to_string(), vec![4, 2, 2])],
         });
         let bad = AdapterEntry {
-            kind: AdapterKind::Gsoft { block: 2 },
+            desc: AdapterKind::Gsoft { block: 2 }.desc(),
             params: Arc::new(vec![0.0; 16]),
             spec,
         };
@@ -708,7 +611,7 @@ mod tests {
             entries: vec![("layer0.w.lora_b".to_string(), vec![2, 8])],
         });
         let bad = AdapterEntry {
-            kind: AdapterKind::Lora,
+            desc: AdapterKind::Lora.desc(),
             params: Arc::new(vec![0.0; 16]),
             spec,
         };
@@ -746,14 +649,15 @@ mod tests {
     fn register_rejects_malformed_conv_gssoc_entries() {
         use crate::coordinator::merge::AdapterKind;
         let reg = synthetic_conv(1, 1, 4, 3, 2, 2, 3, 22).unwrap();
-        let good_kind = AdapterKind::ConvGsSoc {
+        let good_desc = AdapterKind::ConvGsSoc {
             c: 4,
             k: 3,
             groups: 2,
             h: 2,
             w: 3,
             terms: 8,
-        };
+        }
+        .desc();
         let slab = 4 * 2 * 3 * 3;
 
         // Geometry c·h·w ≠ layer dim.
@@ -761,14 +665,15 @@ mod tests {
             entries: vec![("layer0.w.soc_k".to_string(), vec![4, 2, 3, 3])],
         });
         let bad = AdapterEntry {
-            kind: AdapterKind::ConvGsSoc {
+            desc: AdapterKind::ConvGsSoc {
                 c: 4,
                 k: 3,
                 groups: 2,
                 h: 3,
                 w: 3,
                 terms: 8,
-            },
+            }
+            .desc(),
             params: Arc::new(vec![0.0; slab]),
             spec: Arc::clone(&spec),
         };
@@ -779,7 +684,7 @@ mod tests {
             entries: vec![("layer0.w.soc_k".to_string(), vec![4, 4, 3, 3])],
         });
         let bad = AdapterEntry {
-            kind: good_kind,
+            desc: good_desc.clone(),
             params: Arc::new(vec![0.0; 4 * 4 * 3 * 3]),
             spec: wrong,
         };
@@ -790,7 +695,7 @@ mod tests {
             entries: vec![("layer0.w.gs_l".to_string(), vec![4, 2, 3, 3])],
         });
         let bad = AdapterEntry {
-            kind: good_kind,
+            desc: good_desc,
             params: Arc::new(vec![0.0; slab]),
             spec: foreign,
         };
@@ -801,19 +706,49 @@ mod tests {
             entries: vec![("layer0.w.soc_k".to_string(), vec![4, 2, 2, 2])],
         });
         let bad = AdapterEntry {
-            kind: AdapterKind::ConvGsSoc {
+            desc: AdapterKind::ConvGsSoc {
                 c: 4,
                 k: 2,
                 groups: 2,
                 h: 2,
                 w: 3,
                 terms: 8,
-            },
+            }
+            .desc(),
             params: Arc::new(vec![0.0; 4 * 2 * 2 * 2]),
             spec,
         };
         assert!(reg.register(9, bad).is_err(), "even kernel size");
         assert!(!reg.contains(9));
+    }
+
+    #[test]
+    fn external_family_registers_and_merges_through_the_open_api() {
+        // Monarch exists only as a family module + one registration line:
+        // the registry must validate, persist, and merge it with zero
+        // family-specific code here.
+        let desc = crate::adapter::monarch::desc(4);
+        let reg = synthetic_of(&desc, 3, 2, 16, 4, 77).unwrap();
+        assert_eq!(reg.len(), 3);
+        for t in reg.tenant_ids() {
+            let entry = reg.get(t).unwrap();
+            assert_eq!(entry.desc.tag(), "monarch");
+            assert!(entry.desc.is_orthogonal());
+            let merged = reg.merge(t).unwrap();
+            let spec = &reg.base().spec;
+            let w0 = Mat::from_f32(16, 16, spec.view(&reg.base().weights, "layer0.w").unwrap());
+            let w1 = Mat::from_f32(16, 16, spec.view(&merged, "layer0.w").unwrap());
+            let s0 = crate::linalg::singular_values(&w0);
+            let s1 = crate::linalg::singular_values(&w1);
+            for (a, b) in s0.iter().zip(s1.iter()) {
+                assert!((a - b).abs() < 1e-4, "tenant {t}: {a} vs {b}");
+            }
+        }
+        // The Monarch coupling (d = block²) is enforced at registration.
+        assert!(
+            synthetic_of(&desc, 1, 1, 8, 4, 78).is_err(),
+            "d=8 with block=4 violates d = block²"
+        );
     }
 
     use crate::store::gsad::tests::entries_equal;
@@ -922,7 +857,7 @@ mod tests {
                         _ => {
                             let good = &pool[pick];
                             let bad = AdapterEntry {
-                                kind: good.kind,
+                                desc: good.desc.clone(),
                                 params: Arc::new(vec![0.0; 3]),
                                 spec: Arc::clone(&good.spec),
                             };
@@ -961,14 +896,15 @@ mod tests {
             Registry::with_store(base, spec, AdapterStore::open(&dir).unwrap()).unwrap();
         assert_eq!(reg.len(), pool.len(), "membership survives reopen");
         assert_eq!(reg.hydrated_len(), 0, "reopen must not eagerly load");
-        // Maintenance reads must not populate the hydration cache: kind
-        // inspection (engine policy inference) and fleet snapshots.
-        assert_eq!(reg.kind_of(0), Some(pool[0].kind));
+        // Maintenance reads must not populate the hydration cache:
+        // family inspection (engine policy inference) and fleet
+        // snapshots.
+        assert_eq!(reg.desc_of(0), Some(pool[0].desc.clone()));
         reg.snapshot(dir.join("fleet.gsad")).unwrap();
         assert_eq!(
             reg.hydrated_len(),
             0,
-            "kind_of/snapshot must read uncached, not hydrate the fleet"
+            "desc_of/snapshot must read uncached, not hydrate the fleet"
         );
         let e0 = reg.get(0).expect("tenant 0 hydrates");
         assert!(entries_equal(&e0, &pool[0]));

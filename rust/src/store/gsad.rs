@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::merge::AdapterKind;
+use crate::adapter::{desc_from_json, desc_to_json};
 use crate::coordinator::FlatSpec;
 use crate::serve::registry::{AdapterEntry, BaseModel, TenantId};
 use crate::util::container::{crc32_f32, Container};
@@ -57,58 +57,14 @@ pub fn params_crc(entry: &AdapterEntry) -> u32 {
     crc32_f32(&entry.params)
 }
 
-// ---- AdapterKind <-> JSON --------------------------------------------------
-
-pub fn kind_to_json(kind: &AdapterKind) -> Json {
-    match *kind {
-        AdapterKind::Gsoft { block } => Json::obj(vec![
-            ("kind", Json::Str("gsoft".into())),
-            ("block", Json::Num(block as f64)),
-        ]),
-        AdapterKind::Oft { block } => Json::obj(vec![
-            ("kind", Json::Str("oft".into())),
-            ("block", Json::Num(block as f64)),
-        ]),
-        AdapterKind::Lora => Json::obj(vec![("kind", Json::Str("lora".into()))]),
-        AdapterKind::ConvGsSoc {
-            c,
-            k,
-            groups,
-            h,
-            w,
-            terms,
-        } => Json::obj(vec![
-            ("kind", Json::Str("conv_gssoc".into())),
-            ("c", Json::Num(c as f64)),
-            ("k", Json::Num(k as f64)),
-            ("groups", Json::Num(groups as f64)),
-            ("h", Json::Num(h as f64)),
-            ("w", Json::Num(w as f64)),
-            ("terms", Json::Num(terms as f64)),
-        ]),
-    }
-}
-
-pub fn kind_from_json(v: &Json) -> Result<AdapterKind> {
-    let name = v.req_str("kind").map_err(|e| anyhow!("{e}"))?;
-    let usz = |key: &str| v.req_usize(key).map_err(|e| anyhow!("adapter kind: {e}"));
-    Ok(match name {
-        "gsoft" => AdapterKind::Gsoft { block: usz("block")? },
-        "oft" => AdapterKind::Oft { block: usz("block")? },
-        "lora" => AdapterKind::Lora,
-        "conv_gssoc" => AdapterKind::ConvGsSoc {
-            c: usz("c")?,
-            k: usz("k")?,
-            groups: usz("groups")?,
-            h: usz("h")?,
-            w: usz("w")?,
-            terms: usz("terms")?,
-        },
-        other => anyhow::bail!("unknown adapter kind '{other}'"),
-    })
-}
-
 // ---- record encode/decode --------------------------------------------------
+//
+// The `"kind"` header object is the family's wire form
+// ([`crate::adapter::desc_to_json`] / [`crate::adapter::desc_from_json`]):
+// `{"kind": <tag>, <hp…>}`, byte-identical to the pre-trait enum encoding
+// for the v1 families. There is no per-family code in this module — an
+// unknown tag decodes to a clean "unknown adapter family" error, and new
+// families persist here with zero edits.
 
 fn base_meta(record: &str, tenant: TenantId) -> Vec<(&'static str, Json)> {
     vec![
@@ -123,7 +79,7 @@ fn base_meta(record: &str, tenant: TenantId) -> Vec<(&'static str, Json)> {
 /// in-memory serving.
 pub fn encode_adapter(tenant: TenantId, entry: &AdapterEntry) -> Vec<u8> {
     let mut meta = base_meta("adapter", tenant);
-    meta.push(("kind", kind_to_json(&entry.kind)));
+    meta.push(("kind", desc_to_json(&entry.desc)));
     meta.push(("spec", entry.spec.to_json()));
     let mut c = Container::new(meta);
     c.push("params", entry.params.as_ref().clone());
@@ -163,7 +119,7 @@ pub fn decode(bytes: &[u8]) -> Result<Record> {
     let (record, tenant) = decode_common(&c)?;
     match record.as_str() {
         "adapter" => {
-            let kind = kind_from_json(c.meta_req("kind")?)?;
+            let desc = desc_from_json(c.meta_req("kind")?)?;
             let spec = FlatSpec::from_json(c.meta_req("spec")?)?;
             let params = c.get("params")?.to_vec();
             anyhow::ensure!(
@@ -175,7 +131,7 @@ pub fn decode(bytes: &[u8]) -> Result<Record> {
             Ok(Record::Adapter {
                 tenant,
                 entry: AdapterEntry {
-                    kind,
+                    desc,
                     params: Arc::new(params),
                     spec: Arc::new(spec),
                 },
@@ -202,7 +158,7 @@ pub fn encode_fleet(base: &BaseModel, tenants: &[(TenantId, AdapterEntry)]) -> V
             .map(|(t, e)| {
                 Json::obj(vec![
                     ("tenant", Json::Num(*t as f64)),
-                    ("kind", kind_to_json(&e.kind)),
+                    ("kind", desc_to_json(&e.desc)),
                     ("spec", e.spec.to_json()),
                 ])
             })
@@ -247,7 +203,7 @@ pub fn decode_fleet(bytes: &[u8]) -> Result<(Vec<f32>, FlatSpec, Vec<(TenantId, 
             .filter(|x| *x >= 0.0 && x.fract() == 0.0)
             .ok_or_else(|| anyhow!("fleet tenant id is not a non-negative integer"))?
             as TenantId;
-        let kind = kind_from_json(a.req("kind").map_err(|e| anyhow!("{e}"))?)?;
+        let desc = desc_from_json(a.req("kind").map_err(|e| anyhow!("{e}"))?)?;
         let spec = FlatSpec::from_json(a.req("spec").map_err(|e| anyhow!("{e}"))?)?;
         let params = c.get(&format!("t{tenant}"))?.to_vec();
         anyhow::ensure!(
@@ -259,7 +215,7 @@ pub fn decode_fleet(bytes: &[u8]) -> Result<(Vec<f32>, FlatSpec, Vec<(TenantId, 
         tenants.push((
             tenant,
             AdapterEntry {
-                kind,
+                desc,
                 params: Arc::new(params),
                 spec: Arc::new(spec),
             },
@@ -274,16 +230,20 @@ pub(crate) mod tests {
     use crate::util::prop;
     use crate::util::rng::Rng;
 
-    /// A random adapter entry of each kind, with structurally valid
-    /// (kind-consistent) spec shapes.
+    use crate::adapter::AdapterDesc;
+    use crate::coordinator::merge::AdapterKind;
+
+    /// A random adapter entry of each registered family (the four legacy
+    /// kinds plus Monarch), with structurally valid (family-consistent)
+    /// spec shapes.
     pub(crate) fn random_entry(rng: &mut Rng, which: usize) -> AdapterEntry {
         let layers = prop::size_in(rng, 1, 3);
         let names: Vec<String> = (0..layers).map(|i| format!("layer{i}.w")).collect();
-        match which % 4 {
+        match which % 5 {
             0 | 3 => {
                 let b = [2usize, 4][rng.below(2)];
                 let r = prop::size_in(rng, 1, 4);
-                let gsoft = which % 4 == 0;
+                let gsoft = which % 5 == 0;
                 let entries = names
                     .iter()
                     .flat_map(|n| {
@@ -300,10 +260,10 @@ pub(crate) mod tests {
                 let spec = FlatSpec { entries };
                 let params = rng.normal_vec(spec.size(), 0.4);
                 AdapterEntry {
-                    kind: if gsoft {
-                        AdapterKind::Gsoft { block: b }
+                    desc: if gsoft {
+                        AdapterKind::Gsoft { block: b }.desc()
                     } else {
-                        AdapterKind::Oft { block: b }
+                        AdapterKind::Oft { block: b }.desc()
                     },
                     params: Arc::new(params),
                     spec: Arc::new(spec),
@@ -324,12 +284,12 @@ pub(crate) mod tests {
                 let spec = FlatSpec { entries };
                 let params = rng.normal_vec(spec.size(), 0.1);
                 AdapterEntry {
-                    kind: AdapterKind::Lora,
+                    desc: AdapterKind::Lora.desc(),
                     params: Arc::new(params),
                     spec: Arc::new(spec),
                 }
             }
-            _ => {
+            2 => {
                 let groups = [1usize, 2][rng.below(2)];
                 let c = groups * prop::size_in(rng, 1, 3);
                 let k = [1usize, 3][rng.below(2)];
@@ -340,14 +300,37 @@ pub(crate) mod tests {
                 let spec = FlatSpec { entries };
                 let params = rng.normal_vec(spec.size(), 0.05);
                 AdapterEntry {
-                    kind: AdapterKind::ConvGsSoc {
+                    desc: AdapterKind::ConvGsSoc {
                         c,
                         k,
                         groups,
                         h: prop::size_in(rng, 1, 3),
                         w: prop::size_in(rng, 1, 3),
                         terms: prop::size_in(rng, 1, 8),
-                    },
+                    }
+                    .desc(),
+                    params: Arc::new(params),
+                    spec: Arc::new(spec),
+                }
+            }
+            _ => {
+                // Monarch: an external family with no AdapterKind
+                // variant — it must persist through the same generic
+                // wire path.
+                let b = [2usize, 3][rng.below(2)];
+                let entries = names
+                    .iter()
+                    .flat_map(|n| {
+                        vec![
+                            (format!("{n}.mon_l"), vec![b, b, b]),
+                            (format!("{n}.mon_r"), vec![b, b, b]),
+                        ]
+                    })
+                    .collect();
+                let spec = FlatSpec { entries };
+                let params = rng.normal_vec(spec.size(), 0.4);
+                AdapterEntry {
+                    desc: AdapterDesc::new("monarch", &[("block", b)]).unwrap(),
                     params: Arc::new(params),
                     spec: Arc::new(spec),
                 }
@@ -357,32 +340,38 @@ pub(crate) mod tests {
 
     pub(crate) fn entries_equal(a: &AdapterEntry, b: &AdapterEntry) -> bool {
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
-        a.kind == b.kind && a.spec == b.spec && bits(&a.params) == bits(&b.params)
+        a.desc == b.desc && a.spec == b.spec && bits(&a.params) == bits(&b.params)
     }
 
     #[test]
     fn adapter_round_trip_is_identity_for_every_kind() {
         // Property (shrinking on params): encode → decode is the identity
-        // for random adapters of every AdapterKind, bit-for-bit.
+        // for random adapters of every registered family (the four
+        // legacy kinds plus Monarch), bit-for-bit.
         prop::check_shrunk(
             "GSAD adapter round-trip",
             901,
             32,
             |rng| {
-                let which = rng.below(4);
+                let which = rng.below(5);
                 let entry = random_entry(rng, which);
                 let tenant = rng.below(1 << 20) as TenantId;
-                (tenant, entry.kind, entry.spec.as_ref().clone(), entry.params.as_ref().clone())
+                (
+                    tenant,
+                    entry.desc.clone(),
+                    entry.spec.as_ref().clone(),
+                    entry.params.as_ref().clone(),
+                )
             },
-            |(t, kind, spec, params)| {
+            |(t, desc, spec, params)| {
                 prop::shrink_vec_f32(params)
                     .into_iter()
-                    .map(|p| (*t, *kind, spec.clone(), p))
+                    .map(|p| (*t, desc.clone(), spec.clone(), p))
                     .collect()
             },
-            |(tenant, kind, spec, params)| {
+            |(tenant, desc, spec, params)| {
                 let entry = AdapterEntry {
-                    kind: *kind,
+                    desc: desc.clone(),
                     params: Arc::new(params.clone()),
                     spec: Arc::new(spec.clone()),
                 };
@@ -447,6 +436,82 @@ pub(crate) mod tests {
         assert!(decode(&flipped).is_err(), "future version must be rejected");
         let flipped = with_patched_header(&bytes, "\"record\":\"adapter\"", "\"record\":\"zzz\"");
         assert!(decode(&flipped).is_err(), "unknown record type must be rejected");
+    }
+
+    #[test]
+    fn unregistered_family_tag_is_a_clean_error_not_a_panic() {
+        // A record written by a build with an extra family must decode to
+        // an "unknown adapter family" error here — both as a log record
+        // and inside a fleet snapshot.
+        let mut rng = Rng::new(6);
+        let entry = random_entry(&mut rng, 0);
+        let bytes = encode_adapter(3, &entry);
+        let foreign = with_patched_header(&bytes, "\"kind\":\"gsoft\"", "\"kind\":\"butterfly\"");
+        let err = decode(&foreign).expect_err("unknown family must not decode");
+        assert!(
+            format!("{err:#}").contains("unknown adapter family 'butterfly'"),
+            "unexpected error: {err:#}"
+        );
+
+        let base_spec = FlatSpec {
+            entries: vec![("layer0.w".into(), vec![4, 4])],
+        };
+        let base = BaseModel {
+            weights: Arc::new(rng.normal_vec(base_spec.size(), 1.0)),
+            spec: Arc::new(base_spec),
+        };
+        let fleet = encode_fleet(&base, &[(0, entry)]);
+        let foreign = with_patched_header(&fleet, "\"kind\":\"gsoft\"", "\"kind\":\"butterfly\"");
+        let err = decode_fleet(&foreign).expect_err("unknown family in a fleet");
+        assert!(format!("{err:#}").contains("unknown adapter family 'butterfly'"));
+    }
+
+    #[test]
+    fn wire_form_is_byte_identical_to_the_legacy_enum_encoding() {
+        // The generic family encoder must reproduce the exact v1 header
+        // bytes the closed-enum encoder wrote (JSON objects serialize
+        // with sorted keys), so stores written before the trait refactor
+        // replay unchanged. Pin the `"kind"` object per family.
+        let cases: &[(AdapterDesc, &str)] = &[
+            (
+                AdapterKind::Gsoft { block: 2 }.desc(),
+                r#"{"block":2,"kind":"gsoft"}"#,
+            ),
+            (
+                AdapterKind::Oft { block: 4 }.desc(),
+                r#"{"block":4,"kind":"oft"}"#,
+            ),
+            (AdapterKind::Lora.desc(), r#"{"kind":"lora"}"#),
+            (
+                AdapterKind::ConvGsSoc {
+                    c: 4,
+                    k: 3,
+                    groups: 2,
+                    h: 2,
+                    w: 3,
+                    terms: 8,
+                }
+                .desc(),
+                r#"{"c":4,"groups":2,"h":2,"k":3,"kind":"conv_gssoc","terms":8,"w":3}"#,
+            ),
+            (
+                AdapterDesc::new("monarch", &[("block", 3)]).unwrap(),
+                r#"{"block":3,"kind":"monarch"}"#,
+            ),
+        ];
+        for (desc, want) in cases {
+            assert_eq!(
+                crate::adapter::desc_to_json(desc).to_string(),
+                *want,
+                "wire form drifted for family '{}'",
+                desc.tag()
+            );
+            let back = crate::adapter::desc_from_json(
+                &Json::parse(want).expect("pinned wire form parses"),
+            )
+            .expect("pinned wire form decodes");
+            assert_eq!(&back, desc, "decode must invert encode");
+        }
     }
 
     #[test]

@@ -42,7 +42,7 @@ use anyhow::{anyhow, Result};
 use crate::serve::registry::{AdapterEntry, TenantId};
 
 pub use log::{LogOpts, LogStats, SegmentLog};
-pub use spill::{SpillStats, SpillTier};
+pub use spill::{read_merged, PendingSpill, SpillStats, SpillTier};
 
 /// File name of the factor-tier segment log inside a store directory.
 pub const LOG_FILE: &str = "adapters.log";

@@ -38,15 +38,58 @@ pub struct SpillStats {
 }
 
 /// The size-capped disk tier.
+///
+/// The API is split so callers behind a mutex can keep the *bulk* file
+/// I/O — encoding, `fs::write`, `fs::read` — outside the lock:
+/// [`SpillTier::reserve`] → [`PendingSpill::write`] →
+/// [`SpillTier::commit`] / [`SpillTier::abort`] for puts, and
+/// [`SpillTier::begin_get`] → [`read_merged`] →
+/// [`SpillTier::record_hit`] / [`SpillTier::invalidate`] for gets.
+/// File *unlinks* stay inside the lock-held phases (they are O(1)
+/// metadata operations), which is what makes the concurrent interleaving
+/// safe: a file is only ever deleted while the index provably still
+/// points at that exact entry — a racing writer's freshly renamed file
+/// can never be unlinked by a stale observer. Each committed entry
+/// carries a generation tag; [`SpillTier::invalidate`] is a no-op when
+/// the observed generation no longer matches (the entry was replaced
+/// between the observation and the failed read, so the new entry must
+/// survive). [`SpillTier::put`] / [`SpillTier::get`] remain as
+/// single-threaded conveniences composed from the same phases.
 pub struct SpillTier {
     dir: PathBuf,
     budget_bytes: u64,
     used_bytes: u64,
-    /// Tenant → file size in bytes.
-    index: HashMap<TenantId, u64>,
+    /// Tenant → (file size in bytes, commit generation).
+    index: HashMap<TenantId, (u64, u64)>,
     /// Insertion order, oldest first (each tenant appears at most once).
     order: Vec<TenantId>,
+    /// Monotonic counter: unique tmp-file names for in-flight writes and
+    /// generation tags for committed entries.
+    seq: u64,
     stats: SpillStats,
+}
+
+/// A budget reservation handed out by [`SpillTier::reserve`]: the caller
+/// performs the write (lock-free), then hands the ticket back to
+/// [`SpillTier::commit`] or [`SpillTier::abort`].
+pub struct PendingSpill {
+    tenant: TenantId,
+    size: u64,
+    gen: u64,
+    tmp: PathBuf,
+    dst: PathBuf,
+}
+
+impl PendingSpill {
+    /// The I/O half of a put: tmp-write then rename, so a crash mid-write
+    /// leaves no torn entry. The rename atomically replaces any previous
+    /// file for this tenant, so the reservation never needs to unlink it.
+    pub fn write(&self, bytes: &[u8]) -> Result<()> {
+        std::fs::write(&self.tmp, bytes)
+            .with_context(|| format!("writing {}", self.tmp.display()))?;
+        std::fs::rename(&self.tmp, &self.dst)
+            .with_context(|| format!("renaming spill file {}", self.dst.display()))
+    }
 }
 
 impl SpillTier {
@@ -85,9 +128,15 @@ impl SpillTier {
             budget_bytes,
             used_bytes: entries.iter().map(|&(_, b)| b).sum(),
             order: entries.iter().map(|&(id, _)| id).collect(),
-            index: entries.into_iter().collect(),
+            index: entries
+                .into_iter()
+                .enumerate()
+                .map(|(gen, (id, bytes))| (id, (bytes, gen as u64)))
+                .collect(),
+            seq: 0,
             stats: SpillStats::default(),
         };
+        tier.seq = tier.index.len() as u64;
         while tier.used_bytes > tier.budget_bytes {
             if !tier.evict_oldest() {
                 break;
@@ -100,10 +149,22 @@ impl SpillTier {
         self.dir.join(format!("t{tenant}.gsad"))
     }
 
+    /// Drop a tenant from the index and budget accounting. Does NOT
+    /// unlink the file — callers decide (a same-tenant re-put leaves the
+    /// old file in place for the rename to replace atomically).
+    fn detach(&mut self, tenant: TenantId) -> bool {
+        let Some((bytes, _)) = self.index.remove(&tenant) else {
+            return false;
+        };
+        self.used_bytes -= bytes;
+        self.order.retain(|&t| t != tenant);
+        true
+    }
+
+    /// Detach + unlink, while the entry is provably still this tenant's
+    /// live one (call only with the tier lock held).
     fn remove_entry(&mut self, tenant: TenantId) {
-        if let Some(bytes) = self.index.remove(&tenant) {
-            self.used_bytes -= bytes;
-            self.order.retain(|&t| t != tenant);
+        if self.detach(tenant) {
             let _ = std::fs::remove_file(self.path_of(tenant));
         }
     }
@@ -117,60 +178,123 @@ impl SpillTier {
         true
     }
 
-    /// Write a tenant's merged weights, evicting oldest entries until the
-    /// tier fits its budget. Returns `false` (storing nothing) when the
-    /// single file would exceed the whole budget. The write is
-    /// tmp-then-rename, so a crash mid-write leaves no torn entry.
-    pub fn put(&mut self, tenant: TenantId, params_crc: u32, flat: &[f32]) -> Result<bool> {
-        let bytes = gsad::encode_merged(tenant, params_crc, flat);
-        let size = bytes.len() as u64;
+    /// Phase 1 of a put (lock-held, metadata-only): admit `size` bytes
+    /// for `tenant`, detaching the tenant's old entry (its file stays on
+    /// disk — the commit rename replaces it atomically) and evicting
+    /// oldest entries until the tier fits its budget. Returns `None`
+    /// (storing nothing) when the single file would exceed the whole
+    /// budget. The budget is charged immediately so concurrent
+    /// reservations cannot oversubscribe it.
+    pub fn reserve(&mut self, tenant: TenantId, size: u64) -> Option<PendingSpill> {
         if size > self.budget_bytes {
-            return Ok(false);
+            return None;
         }
-        self.remove_entry(tenant);
+        self.detach(tenant);
         while self.used_bytes + size > self.budget_bytes {
             if !self.evict_oldest() {
                 break;
             }
         }
-        let path = self.path_of(tenant);
-        let tmp = self.dir.join(format!("t{tenant}.gsad.tmp"));
-        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("renaming spill file {}", path.display()))?;
         self.used_bytes += size;
-        self.index.insert(tenant, size);
-        self.order.push(tenant);
+        self.seq += 1;
+        Some(PendingSpill {
+            tenant,
+            size,
+            gen: self.seq,
+            // Unique per reservation (concurrent same-tenant writers must
+            // not share a tmp path); the suffix stays `.gsad.tmp` so
+            // crash-orphans are reaped by the `open` scan.
+            tmp: self.dir.join(format!("t{tenant}.{}.gsad.tmp", self.seq)),
+            dst: self.path_of(tenant),
+        })
+    }
+
+    /// Phase 2 of a put after [`PendingSpill::write`] landed: index the
+    /// entry under its generation tag. If a racing put for the same
+    /// tenant committed in between, its accounting is released (both
+    /// renamed onto the same final path, so exactly one file exists).
+    pub fn commit(&mut self, p: PendingSpill) {
+        if let Some((old, _)) = self.index.insert(p.tenant, (p.size, p.gen)) {
+            self.used_bytes -= old;
+            self.order.retain(|&t| t != p.tenant);
+        }
+        self.order.push(p.tenant);
         self.stats.puts += 1;
-        Ok(true)
+    }
+
+    /// Phase 2 of a put whose write failed: release the reservation.
+    /// Any pre-existing file was left on disk (detached); a later `open`
+    /// rescan re-indexes it, and the params-CRC guard keeps it safe.
+    pub fn abort(&mut self, p: PendingSpill) {
+        self.used_bytes -= p.size;
+    }
+
+    /// Phase 1 of a get (lock-held, metadata-only): the tenant's file
+    /// path and current generation if indexed (read it with
+    /// [`read_merged`], then report back with [`SpillTier::record_hit`]
+    /// or [`SpillTier::invalidate`]); a miss is counted here.
+    pub fn begin_get(&mut self, tenant: TenantId) -> Option<(PathBuf, u64)> {
+        match self.index.get(&tenant) {
+            Some(&(_, gen)) => Some((self.path_of(tenant), gen)),
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Phase 2 of a get whose read verified fresh and intact.
+    pub fn record_hit(&mut self) {
+        self.stats.hits += 1;
+    }
+
+    /// Phase 2 of a get whose read came back corrupt, stale, or missing:
+    /// drop the entry — but only if it is still the generation observed
+    /// at [`SpillTier::begin_get`]. If a racing put replaced the entry in
+    /// between, the failed read says nothing about the *new* file, which
+    /// must survive; the lookup is just a miss then.
+    pub fn invalidate(&mut self, tenant: TenantId, observed_gen: u64) {
+        self.stats.misses += 1;
+        if self.index.get(&tenant).is_some_and(|&(_, gen)| gen == observed_gen) {
+            self.stats.invalidations += 1;
+            self.remove_entry(tenant);
+        }
+    }
+
+    /// Write a tenant's merged weights (single-threaded convenience:
+    /// [`SpillTier::reserve`] → [`PendingSpill::write`] →
+    /// [`SpillTier::commit`]). Returns `false` when the file exceeds the
+    /// whole budget.
+    pub fn put(&mut self, tenant: TenantId, params_crc: u32, flat: &[f32]) -> Result<bool> {
+        let bytes = gsad::encode_merged(tenant, params_crc, flat);
+        let Some(pending) = self.reserve(tenant, bytes.len() as u64) else {
+            return Ok(false);
+        };
+        match pending.write(&bytes) {
+            Ok(()) => {
+                self.commit(pending);
+                Ok(true)
+            }
+            Err(e) => {
+                self.abort(pending);
+                Err(e)
+            }
+        }
     }
 
     /// Load a tenant's merged weights if present, fresh (the stored
     /// params CRC matches `expected_params_crc`), and intact (container
     /// CRC passes). Corrupt or stale entries are deleted and count as
-    /// misses.
+    /// misses. (Single-threaded convenience over the split-phase API.)
     pub fn get(&mut self, tenant: TenantId, expected_params_crc: u32) -> Option<Vec<f32>> {
-        if !self.index.contains_key(&tenant) {
-            self.stats.misses += 1;
-            return None;
-        }
-        let loaded = std::fs::read(self.path_of(tenant))
-            .ok()
-            .and_then(|bytes| gsad::decode(&bytes).ok());
-        match loaded {
-            Some(gsad::Record::Merged {
-                tenant: t,
-                params_crc,
-                flat,
-            }) if t == tenant && params_crc == expected_params_crc => {
-                self.stats.hits += 1;
+        let (path, gen) = self.begin_get(tenant)?;
+        match read_merged(&path, tenant, expected_params_crc) {
+            Some(flat) => {
+                self.record_hit();
                 Some(flat)
             }
             _ => {
-                // Corrupt, stale, or mislabeled: drop it.
-                self.remove_entry(tenant);
-                self.stats.invalidations += 1;
-                self.stats.misses += 1;
+                self.invalidate(tenant, gen);
                 None
             }
         }
@@ -198,6 +322,25 @@ impl SpillTier {
 
     pub fn stats(&self) -> SpillStats {
         self.stats
+    }
+}
+
+/// The I/O half of a spill lookup: read and decode one merged file,
+/// verifying the container CRC, the tenant label, and the adapter-params
+/// freshness tag. `None` for anything corrupt, stale, or mislabeled —
+/// the caller decides whether to [`SpillTier::invalidate`]. Lock-free by
+/// design (takes a path, not the tier).
+pub fn read_merged(path: &Path, tenant: TenantId, expected_params_crc: u32) -> Option<Vec<f32>> {
+    let record = std::fs::read(path)
+        .ok()
+        .and_then(|bytes| gsad::decode(&bytes).ok())?;
+    match record {
+        gsad::Record::Merged {
+            tenant: t,
+            params_crc,
+            flat,
+        } if t == tenant && params_crc == expected_params_crc => Some(flat),
+        _ => None,
     }
 }
 
@@ -268,6 +411,60 @@ mod tests {
         let mut tiny = SpillTier::open(dir.join("tiny"), 16).unwrap();
         assert!(!tiny.put(9, 0, &[0.0; 1024]).unwrap());
         assert!(tiny.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn split_phase_put_matches_the_convenience_path() {
+        // The engine runs reserve → write → commit with the bulk I/O
+        // outside the tier lock; the composed phases must be
+        // observationally identical to `put`, and an abort must release
+        // the reservation.
+        use crate::store::gsad::encode_merged;
+        let dir = unique_temp_dir("spill_phases");
+        let mut tier = SpillTier::open(&dir, 1 << 20).unwrap();
+        let flat = vec![1.0f32; 32];
+        let bytes = encode_merged(3, 0x33, &flat);
+        let pending = tier.reserve(3, bytes.len() as u64).unwrap();
+        assert_eq!(tier.used_bytes(), bytes.len() as u64, "budget charged up front");
+        assert!(!tier.contains(3), "not indexed until commit");
+        pending.write(&bytes).unwrap();
+        tier.commit(pending);
+        assert!(tier.contains(3));
+        assert_eq!(tier.get(3, 0x33).as_deref(), Some(flat.as_slice()));
+        assert_eq!(tier.stats().puts, 1);
+
+        // Overwrite: the reservation detaches the old entry; the rename
+        // replaces its file atomically, with no double accounting.
+        let flat2 = vec![2.0f32; 32];
+        let bytes2 = encode_merged(3, 0x44, &flat2);
+        let pending = tier.reserve(3, bytes2.len() as u64).unwrap();
+        pending.write(&bytes2).unwrap();
+        tier.commit(pending);
+        assert_eq!(tier.used_bytes(), bytes2.len() as u64, "no double accounting");
+        assert_eq!(tier.get(3, 0x44).as_deref(), Some(flat2.as_slice()));
+
+        // Abort releases the reserved bytes.
+        let before = tier.used_bytes();
+        let pending = tier.reserve(4, 64).unwrap();
+        assert_eq!(tier.used_bytes(), before + 64);
+        tier.abort(pending);
+        assert_eq!(tier.used_bytes(), before);
+        assert!(!tier.contains(4));
+
+        // A failed read of a *replaced* generation must not drop the
+        // replacement: observe gen, replace the entry, then invalidate
+        // with the stale generation — the fresh entry survives.
+        let (path, stale_gen) = tier.begin_get(3).unwrap();
+        assert!(read_merged(&path, 3, 0x44).is_some());
+        tier.put(3, 0x55, &flat).unwrap(); // replaces, new generation
+        tier.invalidate(3, stale_gen);
+        assert!(tier.contains(3), "stale-gen invalidation must not drop the fresh entry");
+        assert_eq!(tier.get(3, 0x55).as_deref(), Some(flat.as_slice()));
+        // With the live generation it does drop.
+        let (_, live_gen) = tier.begin_get(3).unwrap();
+        tier.invalidate(3, live_gen);
+        assert!(!tier.contains(3));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -365,6 +365,64 @@ fn serving_engine_round_trips_a_conv_gssoc_tenant() {
 }
 
 #[test]
+fn monarch_family_serves_through_the_open_adapter_api() {
+    // Acceptance scenario for the open AdapterFamily API: Monarch
+    // (`P_1 L P_2 R`) exists only as `gsoft::adapter::monarch` plus one
+    // registration line — yet the full serving ladder (factorized →
+    // cold merge → cached dense) runs it, all paths agree, and the
+    // GSAD fleet snapshot round-trips it bit-exactly.
+    use gsoft::adapter::monarch;
+    use gsoft::serve::{synthetic_of, Engine, EngineOpts, Registry, ServePath};
+    use gsoft::util::tmp::unique_temp_dir;
+
+    let reg = synthetic_of(&monarch::desc(4), 3, 2, 16, 4, 91).unwrap();
+    // Fleet snapshot round-trip before the engine consumes the registry.
+    let dir = unique_temp_dir("itest_monarch");
+    reg.snapshot(dir.join("fleet.gsad")).unwrap();
+    let restored = Registry::restore(dir.join("fleet.gsad")).unwrap();
+    assert_eq!(restored.tenant_ids(), reg.tenant_ids());
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    for t in reg.tenant_ids() {
+        assert_eq!(bits(&restored.merge(t).unwrap()), bits(&reg.merge(t).unwrap()));
+    }
+
+    let engine = Engine::new(
+        reg,
+        EngineOpts {
+            workers: 2,
+            max_batch: 4,
+            max_wait: std::time::Duration::from_micros(200),
+            poll_interval: std::time::Duration::from_micros(200),
+            promote_after: Some(2),
+            ..EngineOpts::default()
+        },
+    )
+    .unwrap();
+    let d = engine.input_dim();
+    assert_eq!(d, 16);
+    let input: Vec<f32> = (0..d).map(|i| ((i * 7 % 9) as f32) * 0.1 - 0.4).collect();
+    let mut outputs = Vec::new();
+    let mut paths = Vec::new();
+    for _ in 0..4 {
+        let out = engine.submit(1, input.clone()).unwrap().wait().unwrap();
+        assert!(out.output.iter().all(|v| v.is_finite()));
+        paths.push(out.path);
+        outputs.push(out.output);
+    }
+    assert_eq!(paths[0], ServePath::Factorized);
+    assert_eq!(paths[1], ServePath::ColdMerge);
+    assert_eq!(*paths.last().unwrap(), ServePath::CachedDense);
+    for out in &outputs[1..] {
+        for (a, b) in out.iter().zip(outputs[0].iter()) {
+            assert!((a - b).abs() < 1e-3, "monarch serving paths disagree: {a} vs {b}");
+        }
+    }
+    let report = engine.finish();
+    assert_eq!(report.metrics.merges, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn conv_bench_record_is_deterministic_modulo_timing() {
     // Same seed ⇒ bit-identical BENCH_conv.json content once the timing
     // fields are stripped — configs, dimensions and numeric output
@@ -429,8 +487,10 @@ fn store_backed_engine_round_trips_bit_identically() {
     // outputs to the pre-restart in-memory engine on both the factorized
     // and the merged-dense path — for the mixed GSOFT/OFT/LoRA registry
     // and for ConvGsSoc orthogonal-conv tenants.
+    use gsoft::adapter::monarch;
     use gsoft::serve::{
-        synthetic, synthetic_conv, Engine, EngineOpts, Registry, ServePath, TenantId,
+        synthetic, synthetic_conv, synthetic_of, Engine, EngineOpts, Registry, ServePath,
+        TenantId,
     };
     use gsoft::store::AdapterStore;
     use gsoft::util::tmp::unique_temp_dir;
@@ -447,6 +507,10 @@ fn store_backed_engine_round_trips_bit_identically() {
     let registries = vec![
         ("mixed", synthetic(4, 2, 8, 2, 61).unwrap()),
         ("conv", synthetic_conv(2, 2, 4, 3, 2, 2, 3, 62).unwrap()),
+        // Monarch: registered via the open AdapterFamily API only — the
+        // whole store/serve restart loop below runs it with zero
+        // family-specific code anywhere in serve/ or store/.
+        ("monarch", synthetic_of(&monarch::desc(3), 2, 2, 9, 3, 63).unwrap()),
     ];
     for (label, donor) in registries {
         let base_w = donor.base().weights.as_ref().clone();
