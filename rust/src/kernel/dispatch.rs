@@ -31,6 +31,23 @@ pub enum GemmKind {
     BlockedParallel,
 }
 
+impl GemmKind {
+    /// Index into the `kernel_gemm_*` metric arrays (see
+    /// [`crate::obs::GEMM_KINDS`]).
+    pub fn index(self) -> usize {
+        match self {
+            GemmKind::Naive => 0,
+            GemmKind::Blocked => 1,
+            GemmKind::BlockedParallel => 2,
+        }
+    }
+
+    /// Wire name used as the `kind` label on `kernel_gemm_*` metrics.
+    pub fn name(self) -> &'static str {
+        crate::obs::GEMM_KINDS[self.index()]
+    }
+}
+
 /// Which convolution kernel a shape dispatches to (see
 /// [`crate::kernel::conv`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +56,22 @@ pub enum ConvKind {
     Direct,
     /// Patch gather into the cache-blocked (optionally parallel) GEMM.
     Im2col,
+}
+
+impl ConvKind {
+    /// Index into the `kernel_conv_plans_total` metric array (see
+    /// [`crate::obs::CONV_KINDS`]).
+    pub fn index(self) -> usize {
+        match self {
+            ConvKind::Direct => 0,
+            ConvKind::Im2col => 1,
+        }
+    }
+
+    /// Wire name used as the `kind` label on conv-plan metrics.
+    pub fn name(self) -> &'static str {
+        crate::obs::CONV_KINDS[self.index()]
+    }
 }
 
 /// Kernel-dispatch context: tile shape, dispatch thresholds, worker cap.
@@ -79,8 +112,24 @@ impl KernelCtx {
     }
 
     /// Dispatching matrix product (the `Mat::matmul` backend).
+    ///
+    /// Instrumentation is behind [`crate::obs::enabled`]: the disabled
+    /// path adds exactly one relaxed atomic load to the product — no
+    /// clock reads, no allocation.
     pub fn gemm(&self, a: &Mat, b: &Mat) -> Mat {
-        match self.plan_gemm(a.rows, a.cols, b.cols) {
+        let kind = self.plan_gemm(a.rows, a.cols, b.cols);
+        if !crate::obs::enabled() {
+            return self.run_gemm(kind, a, b);
+        }
+        let t0 = Instant::now();
+        let out = self.run_gemm(kind, a, b);
+        let flops = (a.rows.saturating_mul(a.cols).saturating_mul(b.cols)) as u64;
+        crate::obs::kernel().record_gemm(kind.index(), flops, t0.elapsed());
+        out
+    }
+
+    fn run_gemm(&self, kind: GemmKind, a: &Mat, b: &Mat) -> Mat {
+        match kind {
             GemmKind::Naive => gemm::gemm_naive(a, b),
             GemmKind::Blocked => gemm::gemm_blocked(a, b, self.tile, 1),
             GemmKind::BlockedParallel => gemm::gemm_blocked(a, b, self.tile, self.workers),
@@ -88,6 +137,7 @@ impl KernelCtx {
     }
 
     /// Dispatching matrix-vector product (the `Mat::matvec` backend).
+    /// Same [`crate::obs::enabled`] contract as [`KernelCtx::gemm`].
     pub fn gemv(&self, a: &Mat, x: &[f64]) -> Vec<f64> {
         let flops = a.rows.saturating_mul(a.cols);
         let workers = if flops >= self.parallel_above_flops {
@@ -95,7 +145,13 @@ impl KernelCtx {
         } else {
             1
         };
-        gemm::gemv(a, x, workers)
+        if !crate::obs::enabled() {
+            return gemm::gemv(a, x, workers);
+        }
+        let t0 = Instant::now();
+        let out = gemm::gemv(a, x, workers);
+        crate::obs::kernel().record_gemv(t0.elapsed());
+        out
     }
 
     /// Pick the convolution path for a grouped same-padded conv of
@@ -119,11 +175,15 @@ impl KernelCtx {
             .saturating_mul(k * k)
             .saturating_mul(hw)
             .saturating_mul(t);
-        if flops < self.naive_below_flops {
+        let kind = if flops < self.naive_below_flops {
             ConvKind::Direct
         } else {
             ConvKind::Im2col
+        };
+        if crate::obs::enabled() {
+            crate::obs::kernel().record_conv_plan(kind.index());
         }
+        kind
     }
 
     /// Worker count for a fused block-diagonal apply over `t` RHS columns.
@@ -238,6 +298,48 @@ mod tests {
         let b = Mat::randn(29, 31, 1.0, &mut rng);
         let want = gemm_naive(&a, &b);
         assert!(gemm::gemm_blocked(&a, &b, ctx.tile, 1).fro_dist(&want) < 1e-9);
+    }
+
+    #[test]
+    fn obs_records_gemm_dispatch_when_enabled() {
+        let _g = crate::obs::test_enable_lock();
+        let ctx = KernelCtx {
+            naive_below_flops: 1,
+            parallel_above_flops: usize::MAX,
+            ..KernelCtx::default()
+        };
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(8, 8, 1.0, &mut rng);
+        let b = Mat::randn(8, 8, 1.0, &mut rng);
+
+        let name = "kernel_gemm_total{kind=\"blocked\"}";
+        let count = |snap: &crate::obs::RegistrySnapshot| snap.counters.get(name).copied().unwrap_or(0);
+
+        crate::obs::set_enabled(false);
+        let before = crate::obs::global().snapshot();
+        black_box(ctx.gemm(&a, &b));
+        assert_eq!(
+            count(&crate::obs::global().snapshot()),
+            count(&before),
+            "disabled path must not record"
+        );
+
+        crate::obs::set_enabled(true);
+        black_box(ctx.gemm(&a, &b));
+        black_box(ctx.gemv(&a, a.row(0)));
+        ctx.plan_conv(64, 64, 3, 1024, 32);
+        crate::obs::set_enabled(false);
+
+        // The global registry is shared across concurrently running
+        // tests, so assert deltas (≥), never absolute counts.
+        let after = crate::obs::global().snapshot();
+        assert!(count(&after) >= count(&before) + 1, "gemm dispatch counted");
+        let gemv = after.counters.get("kernel_gemv_total").copied().unwrap_or(0);
+        assert!(gemv >= 1, "gemv counted");
+        let conv = "kernel_conv_plans_total{kind=\"im2col\"}";
+        assert!(after.counters.get(conv).copied().unwrap_or(0) >= 1, "conv plan counted");
+        assert_eq!(GemmKind::Blocked.name(), "blocked");
+        assert_eq!(ConvKind::Im2col.name(), "im2col");
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //!   table and figure of the paper, and the multi-tenant adapter serving
 //!   engine ([`serve`]) backed by the persistent tiered adapter store
 //!   ([`store`]), both dispatching through the open adapter-family API
-//!   ([`adapter`]).
+//!   ([`adapter`]) and instrumented by the fleet telemetry subsystem
+//!   ([`obs`]: metrics registry, latency histograms, request traces).
 //!
 //! See `DESIGN.md` for the systems inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -31,6 +32,7 @@ pub mod data;
 pub mod gs;
 pub mod kernel;
 pub mod linalg;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

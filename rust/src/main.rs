@@ -11,10 +11,11 @@
 //! gsoft params-table
 //! gsoft perms
 //! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8
-//!                    --store DIR --reg-every 16 --smoke]
-//! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json]
-//! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json]
-//! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json]
+//!                    --store DIR --reg-every 16 --smoke --obs]
+//! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json --obs]
+//! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json --obs]
+//! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json --obs]
+//! gsoft metrics  [--requests 128 --format text|json]
 //! gsoft merge-demo
 //! gsoft list     # artifacts in the registry
 //! gsoft all      # every experiment, in order
@@ -26,7 +27,7 @@ use gsoft::coordinator::config::RunOpts;
 use gsoft::coordinator::experiments::{statics, table1, table2, table3};
 use gsoft::util::cli::Args;
 
-const FLAGS: &[&str] = &["no-cache", "help", "smoke"];
+const FLAGS: &[&str] = &["no-cache", "help", "smoke", "obs"];
 
 fn main() {
     let args = Args::from_env(FLAGS);
@@ -37,6 +38,12 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // `--obs` turns on the process-wide kernel/store instrumentation for
+    // any subcommand; benches then append an `obs` section to their JSON
+    // records (see DESIGN.md §9).
+    if args.flag("obs") {
+        gsoft::obs::set_enabled(true);
+    }
     let sub = args.subcommand.as_deref().unwrap_or("help");
     match sub {
         "table1" => {
@@ -89,6 +96,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "kernel-bench" => kernel_bench(args)?,
         "conv-bench" => conv_bench(args)?,
         "store-bench" => store_bench(args)?,
+        "metrics" => metrics_cmd(args)?,
         "merge-demo" => merge_demo(args)?,
         "compress-demo" => compress_demo(args)?,
         "list" => {
@@ -114,6 +122,61 @@ fn dispatch(args: &Args) -> Result<()> {
         _ => {
             println!("{HELP}");
         }
+    }
+    Ok(())
+}
+
+/// Append the process-wide (kernel + store) telemetry snapshot as an
+/// `obs` section when `--obs` is on. Histograms land under a `timings`
+/// key, so `strip_timing` keeps the record comparable across runs.
+fn attach_global_obs(mut record: gsoft::util::json::Json) -> gsoft::util::json::Json {
+    use gsoft::util::json::Json;
+    if gsoft::obs::enabled() {
+        if let Json::Obj(m) = &mut record {
+            m.insert("obs".into(), gsoft::obs::global().snapshot().to_json());
+        }
+    }
+    record
+}
+
+/// Exercise the serving engine on a tiny synthetic fleet with full
+/// telemetry on, then dump the merged metrics registry — per-engine
+/// serve_* metrics plus the process-wide kernel_*/store_* metrics — as
+/// Prometheus text (default) or JSON (`--format json`). This is the same
+/// exporter a future `/metrics` scrape endpoint would serve (DESIGN.md
+/// §9).
+fn metrics_cmd(args: &Args) -> Result<()> {
+    use gsoft::report::{emit_json_record, emit_text};
+    use gsoft::serve::{synthetic, Engine, EngineOpts, TenantId};
+    use gsoft::util::rng::Rng;
+
+    gsoft::obs::set_enabled(true);
+    let tenants = args.opt_usize("tenants", 8)?;
+    let requests = args.opt_usize("requests", 128)?;
+    let d = args.opt_usize("d", 16)?;
+    let seed = args.opt_u64("seed", 42)?;
+    let registry = synthetic(tenants, 2, d, 4, seed)?;
+    let engine = Engine::new(
+        registry,
+        EngineOpts {
+            workers: 2,
+            max_batch: 8,
+            ..EngineOpts::default()
+        },
+    )?;
+    let mut rng = Rng::new(seed ^ 0xb5);
+    for i in 0..requests {
+        let input = rng.normal_vec(d, 0.5);
+        engine.submit((i % tenants) as TenantId, input)?.wait()?;
+    }
+    let report = engine.finish();
+    let mut snap = report.obs;
+    snap.merge(&gsoft::obs::global().snapshot());
+    match args.opt_or("format", "text") {
+        "json" => {
+            emit_json_record(std::path::Path::new("results/metrics.json"), &snap.to_json())?
+        }
+        _ => emit_text("metrics", &snap.prometheus())?,
     }
     Ok(())
 }
@@ -438,6 +501,17 @@ fn serve_bench(args: &Args) -> Result<()> {
         ("service_cold_merge", path_stats_json(&m.service_cold)),
         ("service_factorized", path_stats_json(&m.service_factorized)),
     ];
+    // Fleet telemetry: per-path/per-family request counters, policy
+    // gauges, batcher/cache metrics and stage-latency histograms from the
+    // engine's registry; with --obs the process-wide kernel_*/store_*
+    // metrics are merged in. Histograms live under "timings" so
+    // strip_timing keeps the record comparable.
+    let mut obs_snap = report.obs.clone();
+    if gsoft::obs::enabled() {
+        obs_snap.merge(&gsoft::obs::global().snapshot());
+    }
+    fields.push(("obs", obs_snap.to_json()));
+    fields.push(("traces_recorded", Json::Num(report.traces.len() as f64)));
     if reg_pool.is_some() {
         fields.push((
             "store",
@@ -596,7 +670,7 @@ fn kernel_bench(args: &Args) -> Result<()> {
         ("configs", Json::Arr(configs)),
         ("best_fused_speedup_vs_dense", Json::Num(best_speedup)),
     ]);
-    emit_json_record(std::path::Path::new(&out_path), &record)?;
+    emit_json_record(std::path::Path::new(&out_path), &attach_global_obs(record))?;
     if best_speedup > 1.0 {
         println!(
             "[kernel-bench] fused factorized apply beats the dense merged GEMM: best {}x",
@@ -645,7 +719,7 @@ fn conv_bench(args: &Args) -> Result<()> {
     };
     let (table, rec) = record(&opts, &ctx);
     table.emit("conv_bench")?;
-    emit_json_record(std::path::Path::new(&out_path), &rec)?;
+    emit_json_record(std::path::Path::new(&out_path), &attach_global_obs(rec))?;
     println!("[conv-bench] record is deterministic modulo 'timings' fields (same seed ⇒ same checksums)");
     Ok(())
 }
@@ -815,7 +889,7 @@ fn store_bench(args: &Args) -> Result<()> {
         ("seed", Json::Num(seed as f64)),
         ("configs", Json::Arr(configs)),
     ]);
-    emit_json_record(std::path::Path::new(&out_path), &record)?;
+    emit_json_record(std::path::Path::new(&out_path), &attach_global_obs(record))?;
     println!(
         "[store-bench] durable persist → replay → lazy hydrate → spill round-trip complete"
     );
@@ -903,8 +977,18 @@ Utilities:
                 adapter kind x hit ratio): durable persist, cold-boot
                 log replay, lazy hydration, spill-hit vs re-merge;
                 writes BENCH_store.json [--smoke --seed 7 --out PATH]
+  metrics       drive a tiny synthetic fleet with full telemetry on and
+                dump the unified metrics registry (serve_* + kernel_* +
+                store_* counters/gauges/latency histograms) as
+                Prometheus text, or results/metrics.json with
+                --format json   [--tenants 8 --requests 128 --d 16]
   list          list compiled artifacts
 
+Observability (DESIGN.md §9): every bench JSON record carries an "obs"
+section from the fleet telemetry subsystem; serve-bench always includes
+its engine's registry, and the global kernel_*/store_* metrics join in
+under --obs (one relaxed atomic load on the hot path when off).
+
 Common options: --steps N --pretrain-steps N --eval-batches N --lr X
-                --workers N --seed N --artifacts DIR --no-cache
+                --workers N --seed N --artifacts DIR --no-cache --obs
 "#;

@@ -1,0 +1,369 @@
+//! Lock-free log-bucketed latency histograms.
+//!
+//! Values (nanoseconds, bytes, batch sizes — any `u64`) are binned into a
+//! fixed array of [`BUCKETS`] `AtomicU64` counters: values below
+//! `2^SUB_BITS` get an exact bucket each; above that, every power-of-two
+//! octave splits into `2^SUB_BITS` log-linear sub-buckets, so the
+//! quantile read back from a snapshot overshoots the true sample by at
+//! most `2^-SUB_BITS` (12.5%) relative — and never undershoots, because
+//! [`HistoSnapshot::quantile`] returns the *upper* bound of the bucket
+//! holding the ranked sample (clamped to the observed max). Recording is
+//! three relaxed atomic ops, no locks, no allocation; snapshots are plain
+//! `Vec<u64>` and merge associatively (the substrate for per-shard
+//! registries folding into one fleet view).
+//!
+//! The quantile-vs-sorted-oracle bound and merge associativity are
+//! property-tested below (DESIGN.md §9).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Sub-bucket resolution: each octave splits into `2^SUB_BITS` buckets,
+/// bounding the relative quantile overshoot by `2^-SUB_BITS`.
+pub const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS;
+
+/// Total bucket count; the last bucket's upper bound is `u64::MAX`.
+pub const BUCKETS: usize = ((64 - SUB_BITS as usize) << SUB_BITS) + SUB;
+
+/// Bucket index for a value (total order, contiguous from 0).
+pub fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= SUB_BITS
+    let shift = msb - SUB_BITS as usize;
+    let sub = (v >> shift) as usize & (SUB - 1);
+    ((msb - SUB_BITS as usize + 1) << SUB_BITS) + sub
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `i` (inverse of
+/// [`bucket_of`]: `lo <= v <= hi` ⇔ `bucket_of(v) == i`).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB {
+        return (i as u64, i as u64);
+    }
+    let g = (i >> SUB_BITS) as u64; // octave group, >= 1
+    let sub = (i & (SUB - 1)) as u64;
+    let shift = g - 1;
+    let lo = (1u64 << (shift + SUB_BITS as u64)) + (sub << shift);
+    (lo, lo + (1u64 << shift) - 1)
+}
+
+/// A live histogram: a fixed array of atomic bucket counters plus running
+/// sum and max. All methods take `&self`; record from any thread.
+pub struct Histo {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histo {
+    fn default() -> Histo {
+        Histo::new()
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample: three relaxed atomic RMWs, no allocation.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record an elapsed time in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Point-in-time copy of the bucket array. The *count* of a snapshot
+    /// is derived from the bucket components (never a separately-read
+    /// total), so a snapshot taken mid-record can never show
+    /// `sum-of-parts != total` read-skew.
+    pub fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned, mergeable histogram snapshot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for HistoSnapshot {
+    fn default() -> HistoSnapshot {
+        HistoSnapshot {
+            buckets: vec![0; BUCKETS],
+            sum: 0,
+            max: 0,
+        }
+    }
+}
+
+impl HistoSnapshot {
+    /// Sample count, derived from the bucket components (see
+    /// [`Histo::snapshot`] for why this is not a separate atomic).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|&c| c == 0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Quantile estimate: the upper bound of the bucket holding the
+    /// sample of rank `round((n-1)·q)` (the same rank convention the
+    /// engine's sorted-vector stats used), clamped to the observed max.
+    /// Never undershoots the true sample; overshoots by < `2^-SUB_BITS`
+    /// relative. Returns 0 on an empty snapshot.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((n - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_bounds(i).1.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another snapshot in. Bucket-wise addition is exact and
+    /// associative (wrapping, like the counters themselves), so shard
+    /// snapshots can merge in any grouping.
+    pub fn merge(&mut self, other: &HistoSnapshot) {
+        for (a, &b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a = a.wrapping_add(b);
+        }
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Values spanning the full bucket range: exact small buckets, every
+    /// octave, and the saturating top bucket (`u64::MAX`).
+    fn gen_values(rng: &mut Rng, max_len: usize) -> Vec<u64> {
+        (0..rng.below(max_len + 1))
+            .map(|_| match rng.below(8) {
+                0 => rng.below(SUB) as u64,        // exact buckets
+                1 => 0,                            // zero edge
+                2 => u64::MAX,                     // saturating bucket
+                3 => u64::MAX - rng.below(9) as u64,
+                _ => {
+                    let e = rng.below(63) as u32;
+                    (1u64 << e) | (rng.next_u64() >> (64 - e.max(1)))
+                }
+            })
+            .collect()
+    }
+
+    fn shrink_values(v: &[u64]) -> Vec<Vec<u64>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+            let mut tail = v.to_vec();
+            tail.remove(0);
+            out.push(tail);
+        }
+        if v.iter().any(|&x| x > 1) {
+            out.push(v.iter().map(|&x| x / 2).collect());
+        }
+        out
+    }
+
+    fn oracle(sorted: &[u64], q: f64) -> u64 {
+        sorted[((sorted.len() as f64 - 1.0) * q).round() as usize]
+    }
+
+    #[test]
+    fn bucket_of_and_bounds_are_inverse_and_total() {
+        // Exhaustive near the small/exact boundary, then probes across
+        // every octave including the extremes.
+        let mut probes: Vec<u64> = (0..1024).collect();
+        for e in 4..64u32 {
+            probes.extend([1u64 << e, (1 << e) + 1, (1u64 << e) - 1]);
+        }
+        probes.extend([u64::MAX, u64::MAX - 1]);
+        let mut prev = None;
+        for &v in &probes {
+            let i = bucket_of(v);
+            assert!(i < BUCKETS, "index {i} out of range for {v}");
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "{v} outside bucket {i} = [{lo}, {hi}]");
+            if let Some((pv, pi)) = prev {
+                if pv < v {
+                    assert!(pi <= i, "bucket index must be monotone in value");
+                }
+            }
+            prev = Some((v, i));
+        }
+        // Buckets tile the line: bucket i+1 starts right after bucket i.
+        for i in 0..BUCKETS - 1 {
+            assert_eq!(bucket_bounds(i).1 + 1, bucket_bounds(i + 1).0, "gap after bucket {i}");
+        }
+        assert_eq!(bucket_bounds(BUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn quantiles_bound_the_sorted_oracle() {
+        // For every q, the histogram quantile must sit in
+        // [oracle, bucket_hi(oracle)]: never below the true sample, and
+        // within one bucket width above it. Covers empty (→ 0), single
+        // sample, and u64::MAX saturating-bucket inputs by construction.
+        prop::check_shrunk(
+            "histogram quantile vs sorted oracle",
+            901,
+            96,
+            |rng| gen_values(rng, 200),
+            |v| shrink_values(v),
+            |vals| {
+                let h = Histo::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                let snap = h.snapshot();
+                assert_eq!(snap.count(), vals.len() as u64, "count drifted");
+                if vals.is_empty() {
+                    assert_eq!(snap.quantile(0.5), 0, "empty snapshot quantile");
+                    return;
+                }
+                let mut sorted = vals.clone();
+                sorted.sort_unstable();
+                for q in [0.0, 0.5, 0.95, 0.99, 0.999, 1.0] {
+                    let want = oracle(&sorted, q);
+                    let got = snap.quantile(q);
+                    let (_, hi) = bucket_bounds(bucket_of(want));
+                    assert!(
+                        want <= got && got <= hi,
+                        "q={q}: got {got} outside [oracle {want}, bucket hi {hi}]"
+                    );
+                }
+                // Monotone: p50 <= p95 <= p99 <= p999 <= max.
+                let qs: Vec<u64> =
+                    [0.5, 0.95, 0.99, 0.999].iter().map(|&q| snap.quantile(q)).collect();
+                for w in qs.windows(2) {
+                    assert!(w[0] <= w[1], "quantiles not monotone: {qs:?}");
+                }
+                assert!(*qs.last().unwrap() <= snap.max);
+                assert_eq!(snap.max, *sorted.last().unwrap());
+            },
+        );
+    }
+
+    #[test]
+    fn merge_is_associative_and_counts_add() {
+        prop::check_shrunk(
+            "snapshot merge associativity",
+            902,
+            64,
+            |rng| {
+                (0..3)
+                    .map(|_| gen_values(rng, 40))
+                    .collect::<Vec<Vec<u64>>>()
+            },
+            |triple| {
+                let mut out = Vec::new();
+                for i in 0..triple.len() {
+                    if !triple[i].is_empty() {
+                        let mut t = triple.clone();
+                        t[i] = triple[i][..triple[i].len() / 2].to_vec();
+                        out.push(t);
+                    }
+                }
+                out
+            },
+            |triple| {
+                let snaps: Vec<HistoSnapshot> = triple
+                    .iter()
+                    .map(|vals| {
+                        let h = Histo::new();
+                        for &v in vals {
+                            h.record(v);
+                        }
+                        h.snapshot()
+                    })
+                    .collect();
+                let (a, b, c) = (&snaps[0], &snaps[1], &snaps[2]);
+                // (a ⊕ b) ⊕ c
+                let mut left = a.clone();
+                left.merge(b);
+                left.merge(c);
+                // a ⊕ (b ⊕ c)
+                let mut bc = b.clone();
+                bc.merge(c);
+                let mut right = a.clone();
+                right.merge(&bc);
+                assert_eq!(left, right, "merge grouping changed the result");
+                assert_eq!(
+                    left.count(),
+                    a.count() + b.count() + c.count(),
+                    "merged count must be the sum of parts"
+                );
+                // Commutative too: b ⊕ a == a ⊕ b.
+                let mut ab = a.clone();
+                ab.merge(b);
+                let mut ba = b.clone();
+                ba.merge(a);
+                assert_eq!(ab, ba, "merge must commute");
+            },
+        );
+    }
+
+    #[test]
+    fn single_sample_is_exact_in_small_buckets() {
+        let h = Histo::new();
+        h.record(5);
+        let s = h.snapshot();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), 5, "values below 2^SUB_BITS bin exactly");
+        }
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.mean(), 5.0);
+    }
+
+    #[test]
+    fn saturating_bucket_clamps_to_observed_max() {
+        let h = Histo::new();
+        h.record(u64::MAX - 3);
+        let s = h.snapshot();
+        // The top bucket's hi is u64::MAX; the clamp keeps the estimate
+        // at the observed maximum instead.
+        assert_eq!(s.quantile(0.999), u64::MAX - 3);
+    }
+}

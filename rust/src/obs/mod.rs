@@ -1,0 +1,200 @@
+//! Fleet telemetry: metrics registry, latency histograms, request traces.
+//!
+//! Zero-dependency observability substrate shared by the serving engine,
+//! the kernel dispatcher and the tiered store:
+//!
+//! - [`hist`] — log-bucketed latency histograms (lock-free `AtomicU64`
+//!   buckets, ≤12.5 % relative quantile error, mergeable snapshots);
+//! - [`registry`] — named counters/gauges/histograms with Prometheus-text
+//!   and JSON exporters ([`RegistrySnapshot::to_json`] is the `obs`
+//!   section of every `BENCH_*.json`);
+//! - [`trace`] — per-request stage spans in a newest-N ring buffer.
+//!
+//! Two scopes exist. The serving engine owns a *per-engine*
+//! [`MetricsRegistry`] (isolated per instance, snapshotted into
+//! [`crate::serve::EngineReport`]). Kernel and store instrumentation has
+//! no engine handle to thread through (`KernelCtx` is `Copy`), so it
+//! writes to the process-wide [`global`] registry — and is gated on
+//! [`enabled`], a single relaxed atomic load, so the disabled hot path
+//! performs no timing, no allocation and no registry access. Enable via
+//! `gsoft <bench> --obs` or [`set_enabled`].
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{Histo, HistoSnapshot};
+pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use trace::{Stage, Trace, TraceRing};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is process-wide (kernel/store) instrumentation on? One relaxed load —
+/// this is the entire cost of the disabled path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The process-wide registry (kernel + store metrics). Engine metrics
+/// live in per-engine registries instead; exporters merge the two views.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Pre-resolved handles for the kernel dispatcher (`kernel_*` metrics).
+/// Indexed by the dispatcher's own kind indices so the record calls stay
+/// allocation-free.
+pub struct KernelObs {
+    gemm_count: [Arc<Counter>; 3],
+    gemm_ns: [Arc<Histo>; 3],
+    gemm_flops: Arc<Histo>,
+    gemv_count: Arc<Counter>,
+    gemv_ns: Arc<Histo>,
+    conv_plans: [Arc<Counter>; 2],
+}
+
+/// `GemmKind` wire names, indexed like [`KernelObs::record_gemm`]'s
+/// `kind` argument.
+pub const GEMM_KINDS: [&str; 3] = ["naive", "blocked", "blocked_parallel"];
+/// `ConvKind` wire names, indexed like [`KernelObs::record_conv_plan`]'s
+/// `kind` argument.
+pub const CONV_KINDS: [&str; 2] = ["direct", "im2col"];
+
+impl KernelObs {
+    fn new(reg: &MetricsRegistry) -> KernelObs {
+        let counter = |k: &str| reg.counter(&format!("kernel_gemm_total{{kind=\"{k}\"}}"));
+        let histo = |k: &str| reg.histogram(&format!("kernel_gemm_ns{{kind=\"{k}\"}}"));
+        let conv = |k: &str| reg.counter(&format!("kernel_conv_plans_total{{kind=\"{k}\"}}"));
+        KernelObs {
+            gemm_count: GEMM_KINDS.map(counter),
+            gemm_ns: GEMM_KINDS.map(histo),
+            gemm_flops: reg.histogram("kernel_gemm_flops"),
+            gemv_count: reg.counter("kernel_gemv_total"),
+            gemv_ns: reg.histogram("kernel_gemv_ns"),
+            conv_plans: CONV_KINDS.map(conv),
+        }
+    }
+
+    pub fn record_gemm(&self, kind: usize, flops: u64, elapsed: Duration) {
+        self.gemm_count[kind].inc();
+        self.gemm_ns[kind].record_duration(elapsed);
+        self.gemm_flops.record(flops);
+    }
+
+    pub fn record_gemv(&self, elapsed: Duration) {
+        self.gemv_count.inc();
+        self.gemv_ns.record_duration(elapsed);
+    }
+
+    pub fn record_conv_plan(&self, kind: usize) {
+        self.conv_plans[kind].inc();
+    }
+}
+
+/// Kernel-side handles into [`global`]. Callers must check [`enabled`]
+/// first — that keeps the disabled path at one relaxed load.
+pub fn kernel() -> &'static KernelObs {
+    static KERNEL: OnceLock<KernelObs> = OnceLock::new();
+    KERNEL.get_or_init(|| KernelObs::new(global()))
+}
+
+/// Pre-resolved handles for the tiered store (`store_*` timings).
+pub struct StoreObs {
+    append_ns: Arc<Histo>,
+    fsync_ns: Arc<Histo>,
+    compact_ns: Arc<Histo>,
+    spill_read_ns: Arc<Histo>,
+    spill_write_ns: Arc<Histo>,
+}
+
+impl StoreObs {
+    fn new(reg: &MetricsRegistry) -> StoreObs {
+        StoreObs {
+            append_ns: reg.histogram("store_append_ns"),
+            fsync_ns: reg.histogram("store_fsync_ns"),
+            compact_ns: reg.histogram("store_compaction_ns"),
+            spill_read_ns: reg.histogram("store_spill_read_ns"),
+            spill_write_ns: reg.histogram("store_spill_write_ns"),
+        }
+    }
+
+    pub fn record_append(&self, elapsed: Duration) {
+        self.append_ns.record_duration(elapsed);
+    }
+
+    pub fn record_fsync(&self, elapsed: Duration) {
+        self.fsync_ns.record_duration(elapsed);
+    }
+
+    pub fn record_compaction(&self, elapsed: Duration) {
+        self.compact_ns.record_duration(elapsed);
+    }
+
+    pub fn record_spill_read(&self, elapsed: Duration) {
+        self.spill_read_ns.record_duration(elapsed);
+    }
+
+    pub fn record_spill_write(&self, elapsed: Duration) {
+        self.spill_write_ns.record_duration(elapsed);
+    }
+}
+
+/// Store-side handles into [`global`]; same [`enabled`] contract as
+/// [`kernel`].
+pub fn store() -> &'static StoreObs {
+    static STORE: OnceLock<StoreObs> = OnceLock::new();
+    STORE.get_or_init(|| StoreObs::new(global()))
+}
+
+/// Serializes tests that toggle the process-wide [`ENABLED`] flag, so a
+/// concurrently running test cannot flip instrumentation off mid-assert.
+#[cfg(test)]
+pub(crate) fn test_enable_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_handles_feed_the_global_registry() {
+        // The global registry is process-wide and shared with other
+        // tests, so assert deltas, never absolute values.
+        let before = global().snapshot();
+        kernel().record_gemm(1, 1000, Duration::from_nanos(250));
+        store().record_append(Duration::from_nanos(90));
+        let after = global().snapshot();
+        let gemm = "kernel_gemm_ns{kind=\"blocked\"}";
+        let d = after.histograms[gemm].count()
+            - before.histograms.get(gemm).map(|h| h.count()).unwrap_or(0);
+        assert_eq!(d, 1);
+        let d = after.histograms["store_append_ns"].count()
+            - before
+                .histograms
+                .get("store_append_ns")
+                .map(|h| h.count())
+                .unwrap_or(0);
+        assert_eq!(d, 1);
+    }
+
+    #[test]
+    fn enabled_toggles() {
+        let _g = test_enable_lock();
+        let was = enabled();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(was);
+    }
+}

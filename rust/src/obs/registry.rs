@@ -1,0 +1,409 @@
+//! Named metrics registry: counters, gauges, and histograms keyed by a
+//! flat name, with mergeable snapshots and two exporters.
+//!
+//! Names follow the DESIGN.md §9 taxonomy (`serve_*`, `kernel_*`,
+//! `store_*`) and may carry an inline Prometheus-style label set, quotes
+//! included — e.g. `serve_requests_total{path="cached_dense"}`. The
+//! registry map is only locked at registration and snapshot time;
+//! recording goes through pre-resolved `Arc` handles (pure relaxed
+//! atomics, no lock, no allocation on any hot path).
+//!
+//! Exporters:
+//! - [`RegistrySnapshot::prometheus`] — the text format a future
+//!   `serve --listen` `/metrics` endpoint will serve verbatim;
+//! - [`RegistrySnapshot::to_json`] — the `obs` section of the
+//!   `BENCH_*.json` records, with every latency distribution under a
+//!   `timings` sub-object so the records stay deterministic modulo
+//!   timings under the `strip_timing` convention
+//!   ([`crate::kernel::convbench::strip_timing`]).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+use super::hist::{Histo, HistoSnapshot};
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value (queue depth, resident bytes, policy thresholds).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histo(Arc<Histo>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histo(_) => "histogram",
+        }
+    }
+}
+
+/// A registry of named metrics. `counter`/`gauge`/`histogram` get or
+/// create (same name ⇒ same underlying handle, so instrumentation sites
+/// can resolve independently); registering one name as two different
+/// kinds is a programming error and panics.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MetricsRegistry({} metrics)", self.metrics.lock().unwrap().len())
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())));
+        match metric {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())));
+        match metric {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histo> {
+        let mut m = self.metrics.lock().unwrap();
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histo(Arc::new(Histo::new())));
+        match metric {
+            Metric::Histo(h) => Arc::clone(h),
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    /// All registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.metrics.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Consistent point-in-time view: every per-metric total is derived
+    /// from its components (histogram counts from bucket arrays), never
+    /// from a second independent atomic read.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let m = self.metrics.lock().unwrap();
+        let mut snap = RegistrySnapshot::default();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    snap.counters.insert(name.clone(), c.get());
+                }
+                Metric::Gauge(g) => {
+                    snap.gauges.insert(name.clone(), g.get());
+                }
+                Metric::Histo(h) => {
+                    snap.histograms.insert(name.clone(), h.snapshot());
+                }
+            }
+        }
+        snap
+    }
+}
+
+/// Owned snapshot of a whole registry; merges associatively (counters and
+/// histogram buckets add, gauges are point-in-time so the right operand
+/// wins on a name collision).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, HistoSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Fold `other` in (e.g. a per-engine registry plus the process-wide
+    /// kernel/store registry into one export).
+    pub fn merge(&mut self, other: &RegistrySnapshot) {
+        for (name, &v) in &other.counters {
+            let e = self.counters.entry(name.clone()).or_insert(0);
+            *e = e.wrapping_add(v);
+        }
+        for (name, &v) in &other.gauges {
+            self.gauges.insert(name.clone(), v);
+        }
+        for (name, h) in &other.histograms {
+            match self.histograms.get_mut(name) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(name.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// The `obs` JSON section: counters and gauges at the top (stable
+    /// given a fixed trace), every histogram under `timings` so
+    /// `strip_timing` leaves a deterministic record.
+    pub fn to_json(&self) -> Json {
+        let nums =
+            |m: &BTreeMap<String, u64>| Json::Obj(m.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect());
+        let timings = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count() as f64)),
+                            ("mean", Json::Num(h.mean())),
+                            ("p50", Json::Num(h.quantile(0.50) as f64)),
+                            ("p95", Json::Num(h.quantile(0.95) as f64)),
+                            ("p99", Json::Num(h.quantile(0.99) as f64)),
+                            ("p999", Json::Num(h.quantile(0.999) as f64)),
+                            ("max", Json::Num(h.max as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", nums(&self.counters)),
+            ("gauges", nums(&self.gauges)),
+            ("timings", timings),
+        ])
+    }
+
+    /// Prometheus text exposition: counters and gauges verbatim,
+    /// histograms as cumulative `_bucket{le="..."}` series (non-empty
+    /// buckets only) plus `_sum`/`_count`. This string is what the
+    /// planned `serve --listen` `/metrics` endpoint will return.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = String::new();
+        let mut typ = |out: &mut String, name: &str, kind: &str, last: &mut String| {
+            let base = split_labels(name).0;
+            if base != *last {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                *last = base.to_string();
+            }
+        };
+        for (name, v) in &self.counters {
+            typ(&mut out, name, "counter", &mut last_base);
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            typ(&mut out, name, "gauge", &mut last_base);
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            let (base, labels) = split_labels(name);
+            typ(&mut out, name, "histogram", &mut last_base);
+            let lbl = |extra: &str| match labels {
+                Some(inner) => format!("{{{inner},{extra}}}"),
+                None => format!("{{{extra}}}"),
+            };
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                let hi = super::hist::bucket_bounds(i).1;
+                out.push_str(&format!("{base}_bucket{} {cum}\n", lbl(&format!("le=\"{hi}\""))));
+            }
+            out.push_str(&format!("{base}_bucket{} {cum}\n", lbl("le=\"+Inf\"")));
+            let tail = match labels {
+                Some(inner) => format!("{{{inner}}}"),
+                None => String::new(),
+            };
+            out.push_str(&format!("{base}_sum{tail} {}\n", h.sum));
+            out.push_str(&format!("{base}_count{tail} {}\n", h.count()));
+        }
+        out
+    }
+}
+
+/// Split `base{labels}` into `(base, Some(labels))`; names without an
+/// inline label set return `(name, None)`.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match (name.find('{'), name.ends_with('}')) {
+        (Some(i), true) => (&name[..i], Some(&name[i + 1..name.len() - 1])),
+        _ => (name, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn same_name_returns_the_same_handle() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("x_total");
+        let b = reg.counter("x_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "both handles hit one underlying counter");
+        assert_eq!(reg.names(), vec!["x_total".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_clash_panics() {
+        let reg = MetricsRegistry::new();
+        reg.counter("clash");
+        reg.gauge("clash");
+    }
+
+    #[test]
+    fn snapshot_totals_derive_from_components() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve_x_total").add(7);
+        reg.gauge("serve_depth").set(3);
+        let h = reg.histogram("serve_ns");
+        h.record(10);
+        h.record(300);
+        let s = reg.snapshot();
+        assert_eq!(s.counters["serve_x_total"], 7);
+        assert_eq!(s.gauges["serve_depth"], 3);
+        // Histogram count is the bucket-array sum, not a separate atomic.
+        assert_eq!(s.histograms["serve_ns"].count(), 2);
+        assert_eq!(
+            s.histograms["serve_ns"].buckets.iter().sum::<u64>(),
+            s.histograms["serve_ns"].count()
+        );
+    }
+
+    fn random_snapshot(rng: &mut Rng) -> RegistrySnapshot {
+        let mut s = RegistrySnapshot::default();
+        let names = ["a_total", "b_total", "c_total"];
+        for name in names {
+            if rng.flip(0.7) {
+                s.counters.insert(name.to_string(), rng.below(1000) as u64);
+            }
+        }
+        for name in ["depth", "bytes"] {
+            if rng.flip(0.5) {
+                s.gauges.insert(name.to_string(), rng.below(100) as u64);
+            }
+        }
+        for name in ["x_ns", "y_ns"] {
+            if rng.flip(0.7) {
+                let h = Histo::new();
+                for _ in 0..rng.below(50) {
+                    h.record(rng.below(1 << 20) as u64);
+                }
+                s.histograms.insert(name.to_string(), h.snapshot());
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn registry_snapshot_merge_is_associative() {
+        // Counter/histogram merges add; gauge merges are right-biased
+        // ("latest wins") — all three are associative, so folding shard
+        // snapshots in any grouping yields one fleet view.
+        prop::check_named("registry snapshot merge associativity", 903, 64, |rng| {
+            let (a, b, c) = (random_snapshot(rng), random_snapshot(rng), random_snapshot(rng));
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "(a+b)+c != a+(b+c)");
+        });
+    }
+
+    #[test]
+    fn prometheus_export_shape() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve_requests_total{path=\"cached_dense\"}").add(5);
+        reg.gauge("serve_queue_depth").set(2);
+        let h = reg.histogram("serve_request_ns{path=\"cached_dense\"}");
+        h.record(100);
+        h.record(200);
+        let text = reg.snapshot().prometheus();
+        assert!(text.contains("# TYPE serve_requests_total counter"), "{text}");
+        assert!(text.contains("serve_requests_total{path=\"cached_dense\"} 5"), "{text}");
+        assert!(text.contains("# TYPE serve_queue_depth gauge"), "{text}");
+        assert!(text.contains("# TYPE serve_request_ns histogram"), "{text}");
+        assert!(
+            text.contains("serve_request_ns_bucket{path=\"cached_dense\",le=\"+Inf\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("serve_request_ns_sum{path=\"cached_dense\"} 300"), "{text}");
+        assert!(text.contains("serve_request_ns_count{path=\"cached_dense\"} 2"), "{text}");
+        // Cumulative bucket counts are monotone.
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "bucket series not cumulative: {text}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn json_export_keeps_timings_separable() {
+        let reg = MetricsRegistry::new();
+        reg.counter("k_total").add(2);
+        let h = reg.histogram("k_ns");
+        h.record(50);
+        let j = reg.snapshot().to_json();
+        let counters = j.get("counters").and_then(|c| c.get("k_total"));
+        assert!(counters.is_some(), "counters section");
+        let t = j.get("timings").and_then(|t| t.get("k_ns"));
+        let p50 = t.and_then(|h| h.get("p50")).and_then(|v| v.as_f64()).unwrap();
+        let p99 = t.and_then(|h| h.get("p99")).and_then(|v| v.as_f64()).unwrap();
+        assert!(p50 >= 50.0 && p99 >= p50, "quantiles in timings, monotone");
+    }
+}

@@ -1,0 +1,227 @@
+//! Per-request stage traces and a fixed-size ring of the most recent ones.
+//!
+//! Each served request is decomposed into the pipeline stages below
+//! (enqueue→batch→plan→kernel→merge/spill→reply); the engine records a
+//! nanosecond figure per stage and pushes the completed [`Trace`] into a
+//! [`TraceRing`]. The ring keeps the newest N traces under concurrent
+//! writers — a tail-latency request is still inspectable after the fact
+//! (`gsoft metrics` dumps the ring) without logging every request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Pipeline stage of a served request. `Queue` and `Reply` are measured
+/// per request; the middle stages are measured once per micro-batch and
+/// attributed to every request in it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Submit → service start (micro-batcher queue wait).
+    Queue,
+    /// Cache lookup + per-family cost-model policy decision.
+    Plan,
+    /// Dense merge of the factor chain (cold/promotion path).
+    Merge,
+    /// Spill-store read of a previously merged matrix.
+    Spill,
+    /// The matmul itself (dense or factorized forward).
+    Kernel,
+    /// Service end → caller handoff (channel send, bookkeeping).
+    Reply,
+}
+
+impl Stage {
+    pub const COUNT: usize = 6;
+    pub const ALL: [Stage; Stage::COUNT] =
+        [Stage::Queue, Stage::Plan, Stage::Merge, Stage::Spill, Stage::Kernel, Stage::Reply];
+
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Queue => 0,
+            Stage::Plan => 1,
+            Stage::Merge => 2,
+            Stage::Spill => 3,
+            Stage::Kernel => 4,
+            Stage::Reply => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Plan => "plan",
+            Stage::Merge => "merge",
+            Stage::Spill => "spill",
+            Stage::Kernel => "kernel",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// One completed request trace. Fixed-size (no heap) so pushing into the
+/// ring never allocates.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// Monotone per-ring sequence number (assigned by `push`).
+    pub seq: u64,
+    pub tenant: u64,
+    /// `ServePath` wire name the request took.
+    pub path: &'static str,
+    pub total_ns: u64,
+    /// Nanoseconds per stage, indexed by [`Stage::index`]; 0 = stage not
+    /// entered.
+    pub stage_ns: [u64; Stage::COUNT],
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        let stages = Json::Obj(
+            Stage::ALL
+                .iter()
+                .filter(|s| self.stage_ns[s.index()] > 0)
+                .map(|s| (s.name().to_string(), Json::Num(self.stage_ns[s.index()] as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("path", Json::Str(self.path.to_string())),
+            ("total_ns", Json::Num(self.total_ns as f64)),
+            ("stage_ns", stages),
+        ])
+    }
+}
+
+/// Lossy ring of the most recent traces. Writers claim a global sequence
+/// number with one `fetch_add`, then write slot `seq % capacity`; a slot
+/// only ever moves forward in sequence, so after any quiescent point the
+/// ring holds exactly the newest `capacity` traces regardless of write
+/// interleaving.
+pub struct TraceRing {
+    seq: AtomicU64,
+    slots: Vec<Mutex<Option<Trace>>>,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing {
+            seq: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total traces ever pushed (not the resident count).
+    pub fn pushed(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Record a trace, stamping its `seq`. Returns the assigned sequence
+    /// number.
+    pub fn push(&self, mut trace: Trace) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        trace.seq = seq;
+        let mut slot = self.slots[(seq % self.slots.len() as u64) as usize].lock().unwrap();
+        // Two writers racing on the same slot resolve by sequence: the
+        // newer trace wins, so the newest-N invariant survives any
+        // interleaving of lock acquisitions.
+        let stale = match slot.as_ref() {
+            Some(t) => t.seq < seq,
+            None => true,
+        };
+        if stale {
+            *slot = Some(trace);
+        }
+        seq
+    }
+
+    /// Resident traces, newest first.
+    pub fn snapshot(&self) -> Vec<Trace> {
+        let mut out: Vec<Trace> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        out.sort_by(|a, b| b.seq.cmp(&a.seq));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(Trace::to_json).collect())
+    }
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceRing(cap {}, pushed {})", self.slots.len(), self.pushed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn trace(tenant: u64) -> Trace {
+        Trace {
+            seq: 0,
+            tenant,
+            path: "cached_dense",
+            total_ns: 10 * tenant + 1,
+            stage_ns: [tenant, 0, 0, 0, 1, 2],
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_n_single_threaded() {
+        let ring = TraceRing::new(4);
+        for i in 0..10 {
+            ring.push(trace(i));
+        }
+        let snap = ring.snapshot();
+        let seqs: Vec<u64> = snap.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![9, 8, 7, 6], "newest first, exactly capacity");
+        assert_eq!(ring.pushed(), 10);
+    }
+
+    #[test]
+    fn ring_keeps_newest_n_under_concurrent_writers() {
+        const CAP: usize = 8;
+        const THREADS: u64 = 4;
+        const PER: u64 = 100;
+        let ring = Arc::new(TraceRing::new(CAP));
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        ring.push(trace(t * PER + i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = THREADS * PER;
+        let snap = ring.snapshot();
+        let seqs: Vec<u64> = snap.iter().map(|t| t.seq).collect();
+        let want: Vec<u64> = (0..CAP as u64).map(|i| total - 1 - i).collect();
+        assert_eq!(seqs, want, "ring must retain exactly the newest {CAP} seqs");
+    }
+
+    #[test]
+    fn trace_json_skips_unentered_stages() {
+        let ring = TraceRing::new(2);
+        ring.push(trace(3));
+        let j = ring.to_json();
+        let t = &j.as_arr().unwrap()[0];
+        let stages = t.get("stage_ns").unwrap().as_obj().unwrap();
+        assert!(stages.contains_key("queue") && stages.contains_key("reply"));
+        assert!(!stages.contains_key("merge"), "zero stages omitted");
+    }
+}

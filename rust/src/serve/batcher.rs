@@ -8,9 +8,26 @@
 //! is deterministic under test.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::obs::{Counter, Gauge, Histo};
 use crate::serve::registry::TenantId;
+
+/// Pre-resolved batcher metrics (`serve_queue_*`, `serve_batch_size`,
+/// `serve_deadline_miss_total`). Installed by the engine via
+/// [`MicroBatcher::set_obs`]; a bare batcher records nothing.
+pub struct BatcherObs {
+    /// Items waiting across all tenants (gauge, updated on every
+    /// push/flush).
+    pub queue_depth: Arc<Gauge>,
+    /// Items per flushed batch.
+    pub batch_size: Arc<Histo>,
+    /// Age of a batch's oldest item at flush time, ns.
+    pub queue_wait_ns: Arc<Histo>,
+    /// Batches that waited > 2× `max_wait` — the ticker fell behind.
+    pub deadline_miss: Arc<Counter>,
+}
 
 /// A flushed group of same-tenant items.
 pub struct Batch<T> {
@@ -31,6 +48,7 @@ pub struct MicroBatcher<T> {
     max_batch: usize,
     max_wait: Duration,
     pending: HashMap<TenantId, Pending<T>>,
+    obs: Option<BatcherObs>,
 }
 
 impl<T> MicroBatcher<T> {
@@ -40,6 +58,33 @@ impl<T> MicroBatcher<T> {
             max_batch,
             max_wait,
             pending: HashMap::new(),
+            obs: None,
+        }
+    }
+
+    /// Install metric handles; every subsequent push/flush records into
+    /// them.
+    pub fn set_obs(&mut self, obs: BatcherObs) {
+        self.obs = Some(obs);
+    }
+
+    /// Record a flushed batch and refresh the depth gauge. `now = None`
+    /// on the shutdown path, where wait times are not meaningful.
+    fn observe(&self, batch: &Batch<T>, now: Option<Instant>) {
+        let Some(obs) = &self.obs else { return };
+        obs.batch_size.record(batch.items.len() as u64);
+        if let Some(now) = now {
+            let wait = now.duration_since(batch.opened_at);
+            obs.queue_wait_ns.record_duration(wait);
+            if wait > self.max_wait * 2 {
+                obs.deadline_miss.inc();
+            }
+        }
+    }
+
+    fn set_depth_gauge(&self) {
+        if let Some(obs) = &self.obs {
+            obs.queue_depth.set(self.pending_items() as u64);
         }
     }
 
@@ -50,16 +95,20 @@ impl<T> MicroBatcher<T> {
             opened_at: now,
         });
         p.items.push(item);
-        if p.items.len() >= self.max_batch {
+        let out = if p.items.len() >= self.max_batch {
             let p = self.pending.remove(&tenant).unwrap();
-            Some(Batch {
+            let batch = Batch {
                 tenant,
                 items: p.items,
                 opened_at: p.opened_at,
-            })
+            };
+            self.observe(&batch, Some(now));
+            Some(batch)
         } else {
             None
-        }
+        };
+        self.set_depth_gauge();
+        out
     }
 
     /// Flush every batch whose oldest item has waited at least `max_wait`.
@@ -70,13 +119,23 @@ impl<T> MicroBatcher<T> {
             .filter(|(_, p)| now.duration_since(p.opened_at) >= self.max_wait)
             .map(|(&t, _)| t)
             .collect();
-        self.drain(expired)
+        let out = self.drain(expired);
+        for batch in &out {
+            self.observe(batch, Some(now));
+        }
+        self.set_depth_gauge();
+        out
     }
 
     /// Flush everything (shutdown path).
     pub fn flush_all(&mut self) -> Vec<Batch<T>> {
         let all: Vec<TenantId> = self.pending.keys().copied().collect();
-        self.drain(all)
+        let out = self.drain(all);
+        for batch in &out {
+            self.observe(batch, None);
+        }
+        self.set_depth_gauge();
+        out
     }
 
     fn drain(&mut self, tenants: Vec<TenantId>) -> Vec<Batch<T>> {
@@ -287,6 +346,39 @@ mod tests {
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].tenant, 2);
         assert_eq!(b.pending_items(), 0);
+    }
+
+    #[test]
+    fn obs_records_depth_sizes_waits_and_misses() {
+        let reg = crate::obs::MetricsRegistry::new();
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(2, Duration::from_millis(10));
+        b.set_obs(BatcherObs {
+            queue_depth: reg.gauge("serve_queue_depth"),
+            batch_size: reg.histogram("serve_batch_size"),
+            queue_wait_ns: reg.histogram("serve_queue_wait_ns"),
+            deadline_miss: reg.counter("serve_deadline_miss_total"),
+        });
+        let t0 = Instant::now();
+        b.push(1, 1, t0);
+        assert_eq!(reg.snapshot().gauges["serve_queue_depth"], 1);
+        // Size flush at +1ms: wait 1ms, no deadline miss.
+        assert!(b.push(1, 2, t0 + Duration::from_millis(1)).is_some());
+        b.push(2, 3, t0);
+        // Deadline flush at +25ms: 25ms > 2×10ms ⇒ a miss.
+        assert_eq!(b.flush_expired(t0 + Duration::from_millis(25)).len(), 1);
+        let s = reg.snapshot();
+        assert_eq!(s.gauges["serve_queue_depth"], 0);
+        assert_eq!(s.counters["serve_deadline_miss_total"], 1);
+        assert_eq!(s.histograms["serve_batch_size"].count(), 2);
+        let waits = &s.histograms["serve_queue_wait_ns"];
+        assert_eq!(waits.count(), 2);
+        assert_eq!(waits.max, 25_000_000, "explicit Instants make waits exact");
+        // Shutdown flush records size but no (meaningless) wait.
+        b.push(3, 4, t0);
+        b.flush_all();
+        let s = reg.snapshot();
+        assert_eq!(s.histograms["serve_batch_size"].count(), 3);
+        assert_eq!(s.histograms["serve_queue_wait_ns"].count(), 2);
     }
 
     #[test]

@@ -13,7 +13,21 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use crate::linalg::Mat;
+use crate::obs::{Counter, Gauge};
 use crate::serve::registry::TenantId;
+
+/// Pre-resolved cache metrics (`serve_cache_*`). Installed by the engine
+/// via [`MergedCache::set_obs`]; mirrors [`CacheStats`] exactly (the
+/// stats struct stays the source of truth the model-based property test
+/// pins down).
+pub struct CacheObs {
+    pub hits: Arc<Counter>,
+    pub misses: Arc<Counter>,
+    pub inserts: Arc<Counter>,
+    pub evictions: Arc<Counter>,
+    pub used_bytes: Arc<Gauge>,
+    pub budget_bytes: Arc<Gauge>,
+}
 
 /// A merged tenant model, ready for the dense hot path: the flat merged
 /// buffer (bit-identical to what a cold `merge` returns — tested) plus the
@@ -84,6 +98,7 @@ pub struct MergedCache {
     recency: VecDeque<(u64, TenantId)>,
     clock: u64,
     stats: CacheStats,
+    obs: Option<CacheObs>,
 }
 
 impl MergedCache {
@@ -95,7 +110,16 @@ impl MergedCache {
             recency: VecDeque::new(),
             clock: 0,
             stats: CacheStats::default(),
+            obs: None,
         }
+    }
+
+    /// Install metric handles mirroring the [`CacheStats`] counters plus
+    /// byte gauges. The budget gauge is set once here (it never changes).
+    pub fn set_obs(&mut self, obs: CacheObs) {
+        obs.budget_bytes.set(self.budget_bytes as u64);
+        obs.used_bytes.set(self.used_bytes as u64);
+        self.obs = Some(obs);
     }
 
     fn touch(&mut self, tenant: TenantId) {
@@ -118,10 +142,16 @@ impl MergedCache {
     pub fn get(&mut self, tenant: TenantId) -> Option<Arc<CachedModel>> {
         if let Some(model) = self.slots.get(&tenant).map(|s| Arc::clone(&s.model)) {
             self.stats.hits += 1;
+            if let Some(obs) = &self.obs {
+                obs.hits.inc();
+            }
             self.touch(tenant);
             Some(model)
         } else {
             self.stats.misses += 1;
+            if let Some(obs) = &self.obs {
+                obs.misses.inc();
+            }
             None
         }
     }
@@ -168,6 +198,10 @@ impl MergedCache {
         );
         self.touch(tenant);
         self.stats.inserts += 1;
+        if let Some(obs) = &self.obs {
+            obs.inserts.inc();
+            obs.used_bytes.set(self.used_bytes as u64);
+        }
         Inserted {
             inserted: true,
             evicted,
@@ -185,6 +219,9 @@ impl MergedCache {
                 let slot = self.slots.remove(&tenant).unwrap();
                 self.used_bytes -= slot.bytes;
                 self.stats.evictions += 1;
+                if let Some(obs) = &self.obs {
+                    obs.evictions.inc();
+                }
                 return Some((tenant, slot.model));
             }
         }
@@ -381,6 +418,34 @@ mod tests {
         assert!(c.peek(3).is_some());
         assert_eq!(c.stats().evictions, 1);
         assert!(c.used_bytes() <= c.budget_bytes());
+    }
+
+    #[test]
+    fn obs_mirrors_stats_and_byte_gauges() {
+        let reg = crate::obs::MetricsRegistry::new();
+        let mut c = MergedCache::new(800);
+        c.set_obs(CacheObs {
+            hits: reg.counter("serve_cache_hits_total"),
+            misses: reg.counter("serve_cache_misses_total"),
+            inserts: reg.counter("serve_cache_inserts_total"),
+            evictions: reg.counter("serve_cache_evictions_total"),
+            used_bytes: reg.gauge("serve_cache_used_bytes"),
+            budget_bytes: reg.gauge("serve_cache_budget_bytes"),
+        });
+        assert!(c.get(1).is_none());
+        assert!(c.insert(1, model(100)).inserted);
+        assert!(c.insert(2, model(100)).inserted);
+        assert!(c.get(1).is_some());
+        assert!(c.insert(3, model(100)).inserted); // evicts tenant 2
+        let s = c.stats();
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters["serve_cache_hits_total"], s.hits);
+        assert_eq!(snap.counters["serve_cache_misses_total"], s.misses);
+        assert_eq!(snap.counters["serve_cache_inserts_total"], s.inserts);
+        assert_eq!(snap.counters["serve_cache_evictions_total"], s.evictions);
+        assert_eq!(snap.gauges["serve_cache_used_bytes"], c.used_bytes() as u64);
+        assert_eq!(snap.gauges["serve_cache_budget_bytes"], 800);
+        assert_eq!(s.evictions, 1);
     }
 
     #[test]

@@ -24,9 +24,9 @@
 //! The promotion threshold comes from the Theorem-2 density cost model
 //! ([`Policy::from_cost_model`]).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -37,12 +37,15 @@ use crate::adapter::gsoft::gs_cost_model;
 use crate::adapter::{AdapterFamily, CostModel, LayerOp};
 use crate::kernel::KernelCtx;
 use crate::linalg::Mat;
+use crate::obs::{
+    Counter, Histo, HistoSnapshot, MetricsRegistry, RegistrySnapshot, Stage, Trace, TraceRing,
+};
 use crate::store::gsad::{self, params_crc};
 use crate::store::{spill, SpillStats, SpillTier};
 use crate::util::pool::{default_workers, WorkQueue};
 
-use super::batcher::{Batch, MicroBatcher};
-use super::cache::{CacheStats, CachedModel, MergedCache};
+use super::batcher::{Batch, BatcherObs, MicroBatcher};
+use super::cache::{CacheObs, CacheStats, CachedModel, MergedCache};
 use super::registry::{AdapterEntry, Registry, TenantId};
 
 /// Which path served a request.
@@ -217,7 +220,9 @@ struct Job {
     slot: Arc<Slot>,
 }
 
-/// Latency statistics for one path (or overall).
+/// Latency statistics for one path (or overall). Quantiles come from the
+/// log-bucketed [`crate::obs::Histo`] (≤12.5 % relative overshoot,
+/// clamped to the observed max), not a sorted sample vector.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PathStats {
     pub count: u64,
@@ -226,18 +231,14 @@ pub struct PathStats {
     pub p99_ns: f64,
 }
 
-fn path_stats(mut ns: Vec<u64>) -> PathStats {
-    if ns.is_empty() {
-        return PathStats::default();
-    }
-    ns.sort_unstable();
-    let n = ns.len();
-    let pct = |q: f64| ns[((n as f64 - 1.0) * q).round() as usize] as f64;
-    PathStats {
-        count: n as u64,
-        mean_ns: ns.iter().sum::<u64>() as f64 / n as f64,
-        p50_ns: pct(0.50),
-        p99_ns: pct(0.99),
+impl PathStats {
+    fn from_histo(h: &HistoSnapshot) -> PathStats {
+        PathStats {
+            count: h.count(),
+            mean_ns: h.mean(),
+            p50_ns: h.quantile(0.50) as f64,
+            p99_ns: h.quantile(0.99) as f64,
+        }
     }
 }
 
@@ -248,6 +249,12 @@ fn path_stats(mut ns: Vec<u64>) -> PathStats {
 /// `service_*` are *per-batch worker compute times*, which isolate the
 /// cached-GEMM vs cold-merge vs factorized cost difference from queue
 /// depth under bursty load.
+///
+/// The snapshot is monotonic-consistent: `requests` and every per-path
+/// `count` are derived from the same histogram bucket arrays, so
+/// `requests` always equals the sum of the per-path counts (the old
+/// ad-hoc counters read each atomic independently and could disagree
+/// mid-flight).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MetricsSnapshot {
     pub requests: u64,
@@ -266,66 +273,170 @@ pub struct MetricsSnapshot {
     pub service_spill: PathStats,
 }
 
-struct Metrics {
-    batches: AtomicU64,
-    merges: AtomicU64,
-    spill_loads: AtomicU64,
-    latencies: Mutex<Vec<(ServePath, u64)>>,
-    /// Per-batch worker compute time.
-    service: Mutex<Vec<(ServePath, u64)>>,
+/// All four serve paths, indexed by [`path_index`].
+const PATHS: [ServePath; 4] = [
+    ServePath::CachedDense,
+    ServePath::ColdMerge,
+    ServePath::Factorized,
+    ServePath::SpillLoad,
+];
+
+fn path_index(p: ServePath) -> usize {
+    match p {
+        ServePath::CachedDense => 0,
+        ServePath::ColdMerge => 1,
+        ServePath::Factorized => 2,
+        ServePath::SpillLoad => 3,
+    }
 }
 
-impl Metrics {
-    fn new() -> Metrics {
-        Metrics {
-            batches: AtomicU64::new(0),
-            merges: AtomicU64::new(0),
-            spill_loads: AtomicU64::new(0),
-            latencies: Mutex::new(Vec::new()),
-            service: Mutex::new(Vec::new()),
+/// Recent request traces retained for post-hoc tail inspection
+/// ([`Engine::traces`], `gsoft metrics`).
+pub const TRACE_RING_CAP: usize = 256;
+
+struct PathObs {
+    count: Arc<Counter>,
+    latency: Arc<Histo>,
+    service: Arc<Histo>,
+}
+
+/// Per-engine telemetry: a private [`MetricsRegistry`] (so concurrent
+/// engines — and tests — never share counters), pre-resolved handles for
+/// every hot-path metric, and the trace ring. Replaces the ad-hoc
+/// `Metrics` struct of unbounded latency `Vec`s: recording is now O(1)
+/// and allocation-free per request.
+struct EngineObs {
+    registry: Arc<MetricsRegistry>,
+    batches: Arc<Counter>,
+    merges: Arc<Counter>,
+    spill_loads: Arc<Counter>,
+    /// Indexed by [`path_index`].
+    paths: [PathObs; 4],
+    /// Indexed by [`Stage::index`].
+    stages: [Arc<Histo>; Stage::COUNT],
+    /// Lazily created per-family handles, keyed by the family wire-tag.
+    family_requests: Mutex<HashMap<&'static str, Arc<Counter>>>,
+    family_service: Mutex<HashMap<&'static str, Arc<Histo>>>,
+    /// Which family each tenant serves — recorded on the first cold
+    /// serve, read on the cached hot path (where no registry entry is in
+    /// hand).
+    family_of: Mutex<HashMap<TenantId, &'static str>>,
+    traces: TraceRing,
+}
+
+impl EngineObs {
+    fn new() -> EngineObs {
+        let registry = Arc::new(MetricsRegistry::new());
+        let paths = PATHS.map(|p| PathObs {
+            count: registry.counter(&format!("serve_requests_total{{path=\"{}\"}}", p.name())),
+            latency: registry.histogram(&format!("serve_request_ns{{path=\"{}\"}}", p.name())),
+            service: registry.histogram(&format!("serve_service_ns{{path=\"{}\"}}", p.name())),
+        });
+        let stages = Stage::ALL
+            .map(|s| registry.histogram(&format!("serve_stage_ns{{stage=\"{}\"}}", s.name())));
+        EngineObs {
+            batches: registry.counter("serve_batches_total"),
+            merges: registry.counter("serve_merges_total"),
+            spill_loads: registry.counter("serve_spill_loads_total"),
+            paths,
+            stages,
+            family_requests: Mutex::new(HashMap::new()),
+            family_service: Mutex::new(HashMap::new()),
+            family_of: Mutex::new(HashMap::new()),
+            traces: TraceRing::new(TRACE_RING_CAP),
+            registry,
         }
     }
 
-    fn record(&self, path: ServePath, latency: Duration) {
-        self.latencies
-            .lock()
-            .unwrap()
-            .push((path, latency.as_nanos() as u64));
+    fn note_family(&self, tenant: TenantId, tag: &'static str) {
+        self.family_of.lock().unwrap().entry(tenant).or_insert(tag);
     }
 
-    fn record_service(&self, path: ServePath, elapsed: Duration) {
-        self.service
+    fn family_of(&self, tenant: TenantId) -> &'static str {
+        self.family_of
             .lock()
             .unwrap()
-            .push((path, elapsed.as_nanos() as u64));
+            .get(&tenant)
+            .copied()
+            .unwrap_or("unknown")
     }
 
-    fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latencies.lock().unwrap().clone();
-        let service = self.service.lock().unwrap().clone();
-        let by = |v: &[(ServePath, u64)], p: ServePath| {
-            path_stats(
-                v.iter()
-                    .filter(|(q, _)| *q == p)
-                    .map(|&(_, ns)| ns)
-                    .collect(),
-            )
-        };
+    fn family_requests(&self, tag: &'static str) -> Arc<Counter> {
+        let mut m = self.family_requests.lock().unwrap();
+        Arc::clone(m.entry(tag).or_insert_with(|| {
+            self.registry
+                .counter(&format!("serve_requests_total{{family=\"{tag}\"}}"))
+        }))
+    }
+
+    fn family_service(&self, tag: &'static str) -> Arc<Histo> {
+        let mut m = self.family_service.lock().unwrap();
+        Arc::clone(m.entry(tag).or_insert_with(|| {
+            self.registry
+                .histogram(&format!("serve_family_service_ns{{family=\"{tag}\"}}"))
+        }))
+    }
+
+    /// Export the inferred Theorem-2 thresholds (satellite of ROADMAP
+    /// item 4): the blended policy plus each sampled family's share.
+    fn set_policy_gauges(&self, policy: &Policy, families: &[(&'static str, u64, u64)]) {
+        let g = |name: &str, v: u64| self.registry.gauge(name).set(v);
+        g("serve_policy_promote_after", policy.promote_after);
+        g("serve_policy_q_dense", policy.q_dense as u64);
+        g("serve_policy_merge_flops_per_layer", policy.merge_flops_per_layer);
+        for &(tag, sampled, merge_flops) in families {
+            g(&format!("serve_policy_family_sampled{{family=\"{tag}\"}}"), sampled);
+            g(
+                &format!("serve_policy_family_merge_flops{{family=\"{tag}\"}}"),
+                merge_flops,
+            );
+        }
+    }
+
+    /// Rebuild the back-compat [`MetricsSnapshot`] from histogram
+    /// snapshots — totals derived from components, never skewed reads.
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let lat: Vec<HistoSnapshot> = self.paths.iter().map(|p| p.latency.snapshot()).collect();
+        let svc: Vec<HistoSnapshot> = self.paths.iter().map(|p| p.service.snapshot()).collect();
+        let mut overall = lat[0].clone();
+        for h in &lat[1..] {
+            overall.merge(h);
+        }
         MetricsSnapshot {
-            requests: lat.len() as u64,
-            batches: self.batches.load(Ordering::Relaxed),
-            merges: self.merges.load(Ordering::Relaxed),
-            spill_loads: self.spill_loads.load(Ordering::Relaxed),
-            overall: path_stats(lat.iter().map(|&(_, ns)| ns).collect()),
-            cached: by(&lat, ServePath::CachedDense),
-            cold: by(&lat, ServePath::ColdMerge),
-            factorized: by(&lat, ServePath::Factorized),
-            spill: by(&lat, ServePath::SpillLoad),
-            service_cached: by(&service, ServePath::CachedDense),
-            service_cold: by(&service, ServePath::ColdMerge),
-            service_factorized: by(&service, ServePath::Factorized),
-            service_spill: by(&service, ServePath::SpillLoad),
+            requests: overall.count(),
+            batches: self.batches.get(),
+            merges: self.merges.get(),
+            spill_loads: self.spill_loads.get(),
+            overall: PathStats::from_histo(&overall),
+            cached: PathStats::from_histo(&lat[0]),
+            cold: PathStats::from_histo(&lat[1]),
+            factorized: PathStats::from_histo(&lat[2]),
+            spill: PathStats::from_histo(&lat[3]),
+            service_cached: PathStats::from_histo(&svc[0]),
+            service_cold: PathStats::from_histo(&svc[1]),
+            service_factorized: PathStats::from_histo(&svc[2]),
+            service_spill: PathStats::from_histo(&svc[3]),
         }
+    }
+}
+
+/// Accumulates wall time into per-stage slots while a batch is served.
+struct StageTimer {
+    ns: [u64; Stage::COUNT],
+}
+
+impl StageTimer {
+    fn new() -> StageTimer {
+        StageTimer {
+            ns: [0; Stage::COUNT],
+        }
+    }
+
+    fn time<T>(&mut self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.ns[stage.index()] += t0.elapsed().as_nanos() as u64;
+        out
     }
 }
 
@@ -335,6 +446,11 @@ pub struct EngineReport {
     pub cache: CacheStats,
     /// Spill-tier counters, when a tier was mounted and engaged.
     pub spill: Option<SpillStats>,
+    /// Full metric dump (`serve_*` taxonomy) — the `obs` section of
+    /// `BENCH_serve.json` and the engine's share of `gsoft metrics`.
+    pub obs: RegistrySnapshot,
+    /// The newest [`TRACE_RING_CAP`] request traces, newest first.
+    pub traces: Vec<Trace>,
 }
 
 struct Shared {
@@ -364,7 +480,7 @@ struct Shared {
     factored: Mutex<HashMap<TenantId, Arc<Vec<Option<Box<dyn LayerOp>>>>>>,
     batcher: Mutex<MicroBatcher<Job>>,
     queue: WorkQueue<Batch<Job>>,
-    metrics: Metrics,
+    obs: EngineObs,
     shutting_down: AtomicBool,
 }
 
@@ -394,6 +510,11 @@ impl Engine {
             }
         }
         let d = d.ok_or_else(|| anyhow!("base model has no square layers to serve"))?;
+        // Per-family Theorem-2 samples: wire-tag → (tenants sampled,
+        // Σ q_col_flops, tenants with dense merged support). Kept past
+        // policy inference so the per-family shares can be exported as
+        // gauges.
+        let mut per_family: BTreeMap<&'static str, (u64, u64, u64)> = BTreeMap::new();
         let policy = match opts.promote_after {
             Some(k) => Policy::fixed(k),
             None => {
@@ -401,26 +522,43 @@ impl Engine {
                 // fleet: sample a bounded prefix through the non-caching
                 // read so a store-backed registry keeps its lazy cold
                 // boot (O(log replay), never O(fleet) hydration). The
-                // first sampled family with a structured cost model wins
-                // (merging applies Q to each of W's d columns, the
-                // factorized path applies the same Q once per served
-                // column — identical per-column cost, so the break-even
-                // is d/B requests for *every* family; only
-                // `merge_flops_per_layer` and the Theorem-2 density bit
-                // are family-specific).
+                // break-even is d/B requests for *every* family (merging
+                // applies Q to each of W's d columns, the factorized path
+                // applies the same Q once per served column — identical
+                // per-column cost); only `merge_flops_per_layer` and the
+                // Theorem-2 density bit are family-specific, so those are
+                // *blended* across every sampled family weighted by how
+                // often it appears — not taken winner-takes-all from the
+                // first sampled descriptor, which misjudged mixed fleets.
                 const POLICY_DESC_SAMPLE: usize = 64;
                 let batch = opts.max_batch.div_ceil(2).max(1);
-                let model = registry
-                    .tenant_ids()
-                    .into_iter()
-                    .take(POLICY_DESC_SAMPLE)
-                    .filter_map(|t| registry.desc_of(t))
-                    .find_map(|desc| desc.family().cost_model(desc.cfg(), d));
-                match model {
-                    Some(cm) => Policy::from_family_model(cm, d, batch),
+                for t in registry.tenant_ids().into_iter().take(POLICY_DESC_SAMPLE) {
+                    let Some(desc) = registry.desc_of(t) else { continue };
+                    let Some(cm) = desc.family().cost_model(desc.cfg(), d) else {
+                        continue;
+                    };
+                    let e = per_family.entry(desc.family().tag()).or_insert((0, 0, 0));
+                    e.0 += 1;
+                    e.1 += cm.q_col_flops;
+                    e.2 += u64::from(cm.q_dense);
+                }
+                let total: u64 = per_family.values().map(|v| v.0).sum();
+                if total == 0 {
                     // No structured family sampled (e.g. all-LoRA):
                     // generic Theorem-2 default at block d/4.
-                    None => Policy::from_cost_model(d, (d / 4).max(1), batch),
+                    Policy::from_cost_model(d, (d / 4).max(1), batch)
+                } else {
+                    let sum_q: u64 = per_family.values().map(|v| v.1).sum();
+                    let n_dense: u64 = per_family.values().map(|v| v.2).sum();
+                    Policy {
+                        promote_after: (d / batch.max(1)).max(1) as u64,
+                        // Count-weighted majority; ties go dense (the
+                        // cached path is a plain GEMM either way — the
+                        // bit only gates reporting and spill sizing).
+                        q_dense: 2 * n_dense >= total,
+                        // Count-weighted mean merge cost, rounded.
+                        merge_flops_per_layer: ((sum_q + total / 2) / total) * d as u64,
+                    }
                 }
             }
         };
@@ -436,6 +574,30 @@ impl Engine {
             None => None,
         };
 
+        let obs = EngineObs::new();
+        let families: Vec<(&'static str, u64, u64)> = per_family
+            .iter()
+            .map(|(&tag, &(n, sum_q, _))| (tag, n, ((sum_q + n / 2) / n.max(1)) * d as u64))
+            .collect();
+        obs.set_policy_gauges(&policy, &families);
+
+        let mut cache = MergedCache::new(opts.cache_budget_bytes);
+        cache.set_obs(CacheObs {
+            hits: obs.registry.counter("serve_cache_hits_total"),
+            misses: obs.registry.counter("serve_cache_misses_total"),
+            inserts: obs.registry.counter("serve_cache_inserts_total"),
+            evictions: obs.registry.counter("serve_cache_evictions_total"),
+            used_bytes: obs.registry.gauge("serve_cache_used_bytes"),
+            budget_bytes: obs.registry.gauge("serve_cache_budget_bytes"),
+        });
+        let mut batcher = MicroBatcher::new(opts.max_batch, opts.max_wait);
+        batcher.set_obs(BatcherObs {
+            queue_depth: obs.registry.gauge("serve_queue_depth"),
+            batch_size: obs.registry.histogram("serve_batch_size"),
+            queue_wait_ns: obs.registry.histogram("serve_queue_wait_ns"),
+            deadline_miss: obs.registry.counter("serve_deadline_miss_total"),
+        });
+
         let shared = Arc::new(Shared {
             registry,
             base_layers,
@@ -443,14 +605,14 @@ impl Engine {
             policy,
             kernel: opts.kernel,
             spill,
-            cache: Mutex::new(MergedCache::new(opts.cache_budget_bytes)),
+            cache: Mutex::new(cache),
             seen: Mutex::new(HashMap::new()),
             merging: Mutex::new(HashSet::new()),
             uncacheable: Mutex::new(HashSet::new()),
             factored: Mutex::new(HashMap::new()),
-            batcher: Mutex::new(MicroBatcher::new(opts.max_batch, opts.max_wait)),
+            batcher: Mutex::new(batcher),
             queue: WorkQueue::new(),
-            metrics: Metrics::new(),
+            obs,
             shutting_down: AtomicBool::new(false),
         });
 
@@ -544,7 +706,17 @@ impl Engine {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        self.shared.obs.metrics_snapshot()
+    }
+
+    /// Full dump of this engine's metric registry (`serve_*` taxonomy).
+    pub fn obs_snapshot(&self) -> RegistrySnapshot {
+        self.shared.obs.registry.snapshot()
+    }
+
+    /// The newest retained request traces, newest first.
+    pub fn traces(&self) -> Vec<Trace> {
+        self.shared.obs.traces.snapshot()
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -585,6 +757,8 @@ impl Engine {
             metrics: self.metrics(),
             cache: self.cache_stats(),
             spill: self.spill_stats(),
+            obs: self.obs_snapshot(),
+            traces: self.traces(),
         }
     }
 }
@@ -732,8 +906,16 @@ fn layer_mats(sh: &Shared, flat: &[f32]) -> Result<Vec<Mat>> {
         .collect()
 }
 
-fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, ServePath)> {
+/// Serve one micro-batch. Returns the outputs, the path taken, and the
+/// per-stage wall-time attribution ([`Stage::index`]-indexed; `Queue` and
+/// `Reply` are filled in per request by [`process_batch`]).
+fn serve_batch(
+    sh: &Shared,
+    tenant: TenantId,
+    jobs: &[Job],
+) -> Result<(Mat, ServePath, [u64; Stage::COUNT])> {
     let d = sh.d;
+    let mut timer = StageTimer::new();
     let mut x = Mat::zeros(d, jobs.len());
     for (j, job) in jobs.iter().enumerate() {
         for i in 0..d {
@@ -742,18 +924,17 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
     }
 
     // Hot path: merged weights already cached.
-    let cached = sh.cache.lock().unwrap().get(tenant);
+    let cached = timer.time(Stage::Plan, || sh.cache.lock().unwrap().get(tenant));
     if let Some(model) = cached {
-        return Ok((
-            forward_dense(&sh.kernel, &model.layers, x),
-            ServePath::CachedDense,
-        ));
+        let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
+        return Ok((y, ServePath::CachedDense, timer.ns));
     }
 
     let entry = sh
         .registry
         .get(tenant)
         .ok_or_else(|| anyhow!("tenant {tenant} disappeared from the registry"))?;
+    sh.obs.note_family(tenant, entry.desc.family().tag());
 
     // Promotion: merge once the tenant has proven hot enough to amortize.
     let total_seen = {
@@ -772,13 +953,11 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
         // Double-check: a peer may have finished merging between our
         // cache miss and the claim. Bind the lookup so the cache mutex
         // is released before the forward pass.
-        let recheck = sh.cache.lock().unwrap().get(tenant);
+        let recheck = timer.time(Stage::Plan, || sh.cache.lock().unwrap().get(tenant));
         if let Some(model) = recheck {
             sh.merging.lock().unwrap().remove(&tenant);
-            return Ok((
-                forward_dense(&sh.kernel, &model.layers, x),
-                ServePath::CachedDense,
-            ));
+            let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
+            return Ok((y, ServePath::CachedDense, timer.ns));
         }
         // Spill tier first: an earlier eviction may have left this
         // tenant's merged weights one sequential read away (the tier is
@@ -786,22 +965,24 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
         // re-merge). The params-CRC tag guarantees freshness.
         if let Some(spill) = &sh.spill {
             let crc = params_crc(&entry);
-            let flat = spill_get(spill, tenant, crc);
+            let flat = timer.time(Stage::Spill, || spill_get(spill, tenant, crc));
             if let Some(flat) = flat {
-                let loaded = layer_mats(sh, &flat).map(|layers| CachedModel {
-                    flat: Arc::new(flat),
-                    layers,
-                    params_crc: crc,
+                let loaded = timer.time(Stage::Spill, || {
+                    layer_mats(sh, &flat).map(|layers| CachedModel {
+                        flat: Arc::new(flat),
+                        layers,
+                        params_crc: crc,
+                    })
                 });
                 sh.merging.lock().unwrap().remove(&tenant);
                 let model = loaded?;
-                let y = forward_dense(&sh.kernel, &model.layers, x);
-                sh.metrics.spill_loads.fetch_add(1, Ordering::Relaxed);
+                let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
+                sh.obs.spill_loads.inc();
                 insert_cached(sh, tenant, model);
-                return Ok((y, ServePath::SpillLoad));
+                return Ok((y, ServePath::SpillLoad, timer.ns));
             }
         }
-        let merged = (|| -> Result<CachedModel> {
+        let merged = timer.time(Stage::Merge, || -> Result<CachedModel> {
             let flat = sh.registry.merge(tenant)?;
             let layers = layer_mats(sh, &flat)?;
             Ok(CachedModel {
@@ -810,22 +991,23 @@ fn serve_batch(sh: &Shared, tenant: TenantId, jobs: &[Job]) -> Result<(Mat, Serv
                 // Tag with the params this very merge consumed.
                 params_crc: params_crc(&entry),
             })
-        })();
+        });
         sh.merging.lock().unwrap().remove(&tenant);
         let model = merged?;
-        let y = forward_dense(&sh.kernel, &model.layers, x);
-        sh.metrics.merges.fetch_add(1, Ordering::Relaxed);
+        let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
+        sh.obs.merges.inc();
         insert_cached(sh, tenant, model);
-        return Ok((y, ServePath::ColdMerge));
+        return Ok((y, ServePath::ColdMerge, timer.ns));
     }
 
     // Cold tail: factorized apply, no merge.
-    let ops = factored_ops(sh, tenant, &entry)?;
-    Ok((forward_factorized(sh, &ops, x), ServePath::Factorized))
+    let ops = timer.time(Stage::Plan, || factored_ops(sh, tenant, &entry))?;
+    let y = timer.time(Stage::Kernel, || forward_factorized(sh, &ops, x));
+    Ok((y, ServePath::Factorized, timer.ns))
 }
 
 fn process_batch(sh: &Shared, batch: Batch<Job>) {
-    sh.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    sh.obs.batches.inc();
     let service_start = Instant::now();
     // Contain panics from the linear algebra: a poisoned batch must fail
     // its handles (and leave the worker alive), never hang `wait()`.
@@ -833,12 +1015,43 @@ fn process_batch(sh: &Shared, batch: Batch<Job>) {
         serve_batch(sh, batch.tenant, &batch.items)
     }));
     match outcome {
-        Ok(Ok((y, path))) => {
-            sh.metrics.record_service(path, service_start.elapsed());
+        Ok(Ok((y, path, stage_ns))) => {
+            let service = service_start.elapsed();
+            let service_ns = service.as_nanos() as u64;
+            let path_obs = &sh.obs.paths[path_index(path)];
+            path_obs.service.record(service_ns);
+            let family = sh.obs.family_of(batch.tenant);
+            sh.obs.family_service(family).record(service_ns);
+            let family_requests = sh.obs.family_requests(family);
+            // Per-batch stages; zero means the stage was not entered.
+            for (i, &ns) in stage_ns.iter().enumerate() {
+                if ns > 0 {
+                    sh.obs.stages[i].record(ns);
+                }
+            }
             for (j, job) in batch.items.into_iter().enumerate() {
                 let output: Vec<f32> = (0..sh.d).map(|i| y[(i, j)] as f32).collect();
                 let latency = job.submitted_at.elapsed();
-                sh.metrics.record(path, latency);
+                let total_ns = latency.as_nanos() as u64;
+                // Per-request stages: queue is submit → service start,
+                // reply is whatever the service window doesn't cover.
+                let queue_ns = service_start.duration_since(job.submitted_at).as_nanos() as u64;
+                let reply_ns = total_ns.saturating_sub(queue_ns).saturating_sub(service_ns);
+                path_obs.count.inc();
+                path_obs.latency.record(total_ns);
+                family_requests.inc();
+                sh.obs.stages[Stage::Queue.index()].record(queue_ns);
+                sh.obs.stages[Stage::Reply.index()].record(reply_ns);
+                let mut trace_ns = stage_ns;
+                trace_ns[Stage::Queue.index()] = queue_ns;
+                trace_ns[Stage::Reply.index()] = reply_ns;
+                sh.obs.traces.push(Trace {
+                    seq: 0, // stamped by the ring
+                    tenant: batch.tenant,
+                    path: path.name(),
+                    total_ns,
+                    stage_ns: trace_ns,
+                });
                 fulfill(
                     &job.slot,
                     Ok(ServeOutput {
@@ -1023,6 +1236,128 @@ mod tests {
         assert_eq!(engine.policy().promote_after, 6);
         assert!(!engine.policy().q_dense, "conv merged support is banded, not dense");
         engine.finish();
+    }
+
+    #[test]
+    fn mixed_fleet_policy_blends_per_family_thresholds() {
+        use crate::coordinator::merge::AdapterKind;
+        use crate::serve::registry::synthetic_layer_names;
+        use crate::util::rng::Rng;
+        // Tenant 0: GSOFT at block 2. Tenant 1: OFT at block 4 — a
+        // different Theorem-2 model, so winner-takes-all from the first
+        // sampled desc would ignore it.
+        let d = 8usize;
+        let reg = synthetic(1, 1, d, 2, 21).unwrap();
+        let names = synthetic_layer_names(1);
+        let desc = AdapterKind::Oft { block: 4 }.desc();
+        let spec = Arc::new(
+            desc.family()
+                .synthetic_spec(desc.cfg(), &names, d, 4)
+                .unwrap(),
+        );
+        let std = desc.family().synthetic_std(desc.cfg());
+        let params = Rng::new(99).normal_vec(spec.size(), std);
+        reg.register(
+            1,
+            AdapterEntry {
+                desc,
+                params: Arc::new(params),
+                spec,
+            },
+        )
+        .unwrap();
+
+        let mut opts = quick_opts();
+        opts.promote_after = None; // max_batch 4 → expected batch 2
+        let engine = Engine::new(reg, opts).unwrap();
+        let p = engine.policy();
+        assert_eq!(p.promote_after, (d / 2) as u64);
+
+        let g = gs_cost_model(d, 2);
+        let o = gs_cost_model(d, 4);
+        assert_ne!(g.q_col_flops, o.q_col_flops, "families must differ for this test");
+        // Count-weighted blend (rounded mean × d), not either family alone.
+        let want = (g.q_col_flops + o.q_col_flops).div_ceil(2) * d as u64;
+        assert_eq!(p.merge_flops_per_layer, want);
+        let n_dense = u64::from(g.q_dense) + u64::from(o.q_dense);
+        assert_eq!(p.q_dense, 2 * n_dense >= 2);
+
+        // The chosen thresholds and per-family shares are exported as
+        // gauges through the engine registry.
+        let snap = engine.obs_snapshot();
+        assert_eq!(snap.gauges["serve_policy_promote_after"], p.promote_after);
+        assert_eq!(snap.gauges["serve_policy_merge_flops_per_layer"], want);
+        assert_eq!(snap.gauges["serve_policy_family_sampled{family=\"gsoft\"}"], 1);
+        assert_eq!(snap.gauges["serve_policy_family_sampled{family=\"oft\"}"], 1);
+        assert_eq!(
+            snap.gauges["serve_policy_family_merge_flops{family=\"oft\"}"],
+            o.q_col_flops * d as u64
+        );
+        engine.finish();
+    }
+
+    #[test]
+    fn obs_counts_sum_to_requests_and_quantiles_are_monotone() {
+        // Tenants 0,1 gsoft; 2 lora; 3 oft — three families, four serve
+        // paths exercised across promotion.
+        let reg = synthetic(4, 2, 8, 2, 31).unwrap();
+        let engine = Engine::new(reg, quick_opts()).unwrap();
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| (i as f32 * 0.7).sin() * 0.2).collect();
+        let requests = 12u64;
+        for r in 0..requests {
+            let t = r % 4;
+            engine.submit(t, input.clone()).unwrap().wait().unwrap();
+        }
+        let report = engine.finish();
+        assert_eq!(report.metrics.requests, requests);
+        let snap = &report.obs;
+
+        // Per-path and per-family request counts both partition the total.
+        let count = |name: &str| snap.counters.get(name).copied().unwrap_or(0);
+        let by_path: u64 = PATHS
+            .iter()
+            .map(|p| count(&format!("serve_requests_total{{path=\"{}\"}}", p.name())))
+            .sum();
+        assert_eq!(by_path, requests, "per-path counts must sum to total");
+        let by_family: u64 = snap
+            .counters
+            .iter()
+            .filter(|(k, _)| k.starts_with("serve_requests_total{family="))
+            .map(|(_, &v)| v)
+            .sum();
+        assert_eq!(by_family, requests, "per-family counts must sum to total");
+        assert!(
+            !snap.counters.contains_key("serve_requests_total{family=\"unknown\"}"),
+            "every tenant's family is known after its cold serve"
+        );
+
+        // Every exported latency histogram has monotone quantiles.
+        for (name, h) in &snap.histograms {
+            let (p50, p95, p99) = (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99));
+            assert!(
+                p50 <= p95 && p95 <= p99 && p99 <= h.max.max(p99),
+                "{name}: p50={p50} p95={p95} p99={p99}"
+            );
+        }
+
+        // Stage histograms: queue is per request, kernel per batch.
+        assert_eq!(
+            snap.histograms["serve_stage_ns{stage=\"queue\"}"].count(),
+            requests
+        );
+        let kernel = &snap.histograms["serve_stage_ns{stage=\"kernel\"}"];
+        assert!(kernel.count() >= 1 && kernel.count() <= report.metrics.batches);
+        assert_eq!(
+            snap.histograms["serve_stage_ns{stage=\"merge\"}"].count(),
+            report.metrics.merges
+        );
+
+        // The trace ring retained every request (12 < TRACE_RING_CAP),
+        // newest first.
+        assert_eq!(report.traces.len() as u64, requests);
+        assert!(report.traces.windows(2).all(|w| w[0].seq > w[1].seq));
+        assert!(report.traces.iter().all(|t| t.total_ns > 0));
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //! - [`batcher`] — size/deadline micro-batching of same-tenant requests
 //! - [`engine`] — worker engine on [`crate::util::pool`]:
 //!   `submit(tenant, input) -> Handle`, four serving paths
-//!   (cached dense / cold merge / factorized GS apply / spill load), and
-//!   latency/throughput/hit-rate metrics
+//!   (cached dense / cold merge / factorized GS apply / spill load), fully
+//!   instrumented through [`crate::obs`]: per-path/per-family request
+//!   counters, stage-latency histograms, and a ring of recent request
+//!   traces ([`engine::TRACE_RING_CAP`])
 //!
 //! Benchmarked by `gsoft serve-bench` and `rust/benches/serve.rs` with a
 //! Zipf tenant-popularity trace from [`crate::data::zipf`]; the
@@ -24,11 +26,11 @@ pub mod cache;
 pub mod engine;
 pub mod registry;
 
-pub use batcher::{Batch, MicroBatcher};
-pub use cache::{CacheStats, CachedModel, Inserted, MergedCache};
+pub use batcher::{Batch, BatcherObs, MicroBatcher};
+pub use cache::{CacheObs, CacheStats, CachedModel, Inserted, MergedCache};
 pub use engine::{
     Engine, EngineOpts, EngineReport, Handle, MetricsSnapshot, PathStats, Policy, ServeOutput,
-    ServePath, SPILL_FLOPS_PER_BYTE,
+    ServePath, SPILL_FLOPS_PER_BYTE, TRACE_RING_CAP,
 };
 pub use registry::{
     synthetic, synthetic_conv, synthetic_of, AdapterEntry, BaseModel, Registry, TenantId,

@@ -85,10 +85,15 @@ impl PendingSpill {
     /// leaves no torn entry. The rename atomically replaces any previous
     /// file for this tenant, so the reservation never needs to unlink it.
     pub fn write(&self, bytes: &[u8]) -> Result<()> {
+        let t0 = crate::obs::enabled().then(std::time::Instant::now);
         std::fs::write(&self.tmp, bytes)
             .with_context(|| format!("writing {}", self.tmp.display()))?;
         std::fs::rename(&self.tmp, &self.dst)
-            .with_context(|| format!("renaming spill file {}", self.dst.display()))
+            .with_context(|| format!("renaming spill file {}", self.dst.display()))?;
+        if let Some(t0) = t0 {
+            crate::obs::store().record_spill_write(t0.elapsed());
+        }
+        Ok(())
     }
 }
 
@@ -331,9 +336,13 @@ impl SpillTier {
 /// the caller decides whether to [`SpillTier::invalidate`]. Lock-free by
 /// design (takes a path, not the tier).
 pub fn read_merged(path: &Path, tenant: TenantId, expected_params_crc: u32) -> Option<Vec<f32>> {
+    let t0 = crate::obs::enabled().then(std::time::Instant::now);
     let record = std::fs::read(path)
         .ok()
         .and_then(|bytes| gsad::decode(&bytes).ok())?;
+    if let Some(t0) = t0 {
+        crate::obs::store().record_spill_read(t0.elapsed());
+    }
     match record {
         gsad::Record::Merged {
             tenant: t,

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Sanity-check the `obs` telemetry section of a BENCH_*.json record.
+
+Usage: check_obs.py BENCH_serve.json [BENCH_kernels.json ...]
+
+For each record this asserts that the obs section is well-formed:
+  - `obs` exists with `counters` / `gauges` / `timings` objects;
+  - the declared serve-side metric names are present (first file only is
+    expected to be a serve-bench record; other records just need a
+    structurally valid obs section);
+  - per-path and per-family `serve_requests_total` counters each sum to
+    the configured request count;
+  - every histogram summary has monotone quantiles
+    (p50 <= p95 <= p99 <= p999 <= max) and a non-negative count.
+
+Exits non-zero with a message on the first violation, so CI fails loudly
+instead of uploading a malformed artifact.
+"""
+
+import json
+import sys
+
+SERVE_COUNTERS = [
+    'serve_requests_total{path="cached_dense"}',
+    'serve_requests_total{path="cold_merge"}',
+    'serve_requests_total{path="factorized"}',
+    'serve_requests_total{path="spill_load"}',
+    "serve_batches_total",
+    "serve_merges_total",
+]
+SERVE_GAUGES = [
+    "serve_policy_promote_after",
+    "serve_policy_merge_flops_per_layer",
+    "serve_cache_budget_bytes",
+]
+SERVE_TIMINGS = [
+    'serve_stage_ns{stage="queue"}',
+    'serve_stage_ns{stage="kernel"}',
+]
+QUANTS = ["p50", "p95", "p99", "p999"]
+
+
+def fail(path, msg):
+    print(f"[check_obs] {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_timings(path, timings):
+    for name, h in sorted(timings.items()):
+        for key in ["count", "max"] + QUANTS:
+            if key not in h:
+                fail(path, f"timing {name!r} is missing {key!r}")
+        if h["count"] < 0:
+            fail(path, f"timing {name!r} has negative count")
+        qs = [h[q] for q in QUANTS] + [h["max"]]
+        if h["count"] > 0 and any(a > b for a, b in zip(qs, qs[1:])):
+            fail(path, f"timing {name!r} quantiles not monotone: {qs}")
+
+
+def check_serve(path, record, obs):
+    for name in SERVE_COUNTERS:
+        if name not in obs["counters"]:
+            fail(path, f"declared counter {name!r} missing")
+    for name in SERVE_GAUGES:
+        if name not in obs["gauges"]:
+            fail(path, f"declared gauge {name!r} missing")
+    for name in SERVE_TIMINGS:
+        if name not in obs["timings"]:
+            fail(path, f"declared timing {name!r} missing")
+    requests = int(record["config"]["requests"])
+    # Store mode registers extra tenants mid-trace and queries each once.
+    extra = obs["counters"].get('serve_requests_total{family="unknown"}', 0)
+    by_path = sum(
+        v
+        for k, v in obs["counters"].items()
+        if k.startswith("serve_requests_total{path=")
+    )
+    by_family = sum(
+        v
+        for k, v in obs["counters"].items()
+        if k.startswith("serve_requests_total{family=")
+    )
+    if by_path != requests:
+        fail(path, f"per-path requests sum to {by_path}, expected {requests}")
+    if by_family != requests:
+        fail(path, f"per-family requests sum to {by_family}, expected {requests}")
+    if extra:
+        fail(path, f"{extra} requests attributed to family 'unknown'")
+    queue = obs["timings"]['serve_stage_ns{stage="queue"}']
+    if queue["count"] != requests:
+        fail(path, f"queue stage count {queue['count']} != requests {requests}")
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for i, path in enumerate(argv[1:]):
+        with open(path) as f:
+            record = json.load(f)
+        obs = record.get("obs")
+        if obs is None:
+            fail(path, "no 'obs' section in record")
+        for section in ("counters", "gauges", "timings"):
+            if not isinstance(obs.get(section), dict):
+                fail(path, f"obs.{section} missing or not an object")
+        check_timings(path, obs["timings"])
+        if i == 0:
+            check_serve(path, record, obs)
+        n = len(obs["counters"]) + len(obs["gauges"]) + len(obs["timings"])
+        print(f"[check_obs] {path}: OK ({n} metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
