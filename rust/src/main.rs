@@ -11,10 +11,13 @@
 //! gsoft params-table
 //! gsoft perms
 //! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8
-//!                    --store DIR --reg-every 16 --smoke --obs]
-//! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json --obs]
-//! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json --obs]
-//! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json --obs]
+//!                    --store DIR --reg-every 16 --smoke --obs
+//!                    --listen ADDR --hold-ms N --trace-cap N]
+//! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json --obs --listen ADDR]
+//! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json --obs --listen ADDR]
+//! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json --obs --listen ADDR]
+//! gsoft obs-serve [--listen 127.0.0.1:9100 --hold-ms N]
+//! gsoft trace    [--out results/trace.json --requests 128]
 //! gsoft metrics  [--requests 128 --format text|json]
 //! gsoft merge-demo
 //! gsoft list     # artifacts in the registry
@@ -96,6 +99,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "kernel-bench" => kernel_bench(args)?,
         "conv-bench" => conv_bench(args)?,
         "store-bench" => store_bench(args)?,
+        "obs-serve" => obs_serve(args)?,
+        "trace" => trace_cmd(args)?,
         "metrics" => metrics_cmd(args)?,
         "merge-demo" => merge_demo(args)?,
         "compress-demo" => compress_demo(args)?,
@@ -127,16 +132,144 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 /// Append the process-wide (kernel + store) telemetry snapshot as an
-/// `obs` section when `--obs` is on. Histograms land under a `timings`
-/// key, so `strip_timing` keeps the record comparable across runs.
+/// `obs` section — plus the [`gsoft::obs::SloSet::global_default`]
+/// verdict as a `slo` section — when `--obs` is on. Histograms land
+/// under a `timings` key, so `strip_timing` keeps the record comparable
+/// across runs.
 fn attach_global_obs(mut record: gsoft::util::json::Json) -> gsoft::util::json::Json {
     use gsoft::util::json::Json;
     if gsoft::obs::enabled() {
         if let Json::Obj(m) = &mut record {
-            m.insert("obs".into(), gsoft::obs::global().snapshot().to_json());
+            let snap = gsoft::obs::global().snapshot();
+            let slo =
+                gsoft::obs::SloSet::global_default().eval_total(&snap, std::time::Duration::ZERO);
+            m.insert("obs".into(), snap.to_json());
+            m.insert("slo".into(), slo.to_json());
         }
     }
     record
+}
+
+/// `--listen ADDR` support for benches with no serving engine: scrape
+/// the process-wide registry live while the sweep runs. Listening
+/// implies `--obs` (a live scrape of a dark registry is useless).
+fn bind_global_listener(args: &Args) -> Result<Option<gsoft::obs::ObsServer>> {
+    let Some(addr) = args.opt("listen") else {
+        return Ok(None);
+    };
+    gsoft::obs::set_enabled(true);
+    let server = gsoft::obs::ObsServer::bind(addr, gsoft::obs::ObsSources::global_only())?;
+    println!(
+        "[obs] scrape endpoints live at {} (process-wide kernel_*/store_* registry)",
+        server.url()
+    );
+    Ok(Some(server))
+}
+
+/// Optionally hold the exporter open past the end of the run
+/// (`--hold-ms N`), then shut it down.
+fn release_listener(args: &Args, server: Option<gsoft::obs::ObsServer>) -> Result<()> {
+    if let Some(server) = server {
+        let hold_ms = args.opt_u64("hold-ms", 0)?;
+        if hold_ms > 0 {
+            println!("[obs] holding {hold_ms} ms for live scrapes at {}", server.url());
+            std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+        }
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// Serve the live scrape endpoints over a small synthetic engine — the
+/// standing exporter (`/metrics`, `/metrics.json`, `/healthz`,
+/// `/tracez`, `/slo`; DESIGN.md §10). Primes the fleet with demo
+/// traffic so every endpoint has data, then stays up for `--hold-ms`
+/// milliseconds (0 = until the process is killed).
+fn obs_serve(args: &Args) -> Result<()> {
+    use gsoft::obs::ObsServer;
+    use gsoft::serve::{synthetic, Engine, EngineOpts, TenantId};
+    use gsoft::util::rng::Rng;
+
+    gsoft::obs::set_enabled(true);
+    let listen = args.opt_or("listen", "127.0.0.1:9100").to_string();
+    let tenants = args.opt_usize("tenants", 8)?;
+    let requests = args.opt_usize("requests", 128)?;
+    let d = args.opt_usize("d", 16)?;
+    let seed = args.opt_u64("seed", 42)?;
+    let hold_ms = args.opt_u64("hold-ms", 0)?;
+
+    let registry = synthetic(tenants, 2, d, 4, seed)?;
+    let engine = Engine::new(
+        registry,
+        EngineOpts {
+            workers: 2,
+            max_batch: 8,
+            ..EngineOpts::default()
+        },
+    )?;
+    let server = ObsServer::bind(&listen, engine.obs_sources())?;
+    println!(
+        "[obs-serve] live at {} — /metrics /metrics.json /healthz /tracez /slo",
+        server.url()
+    );
+    let mut rng = Rng::new(seed ^ 0xb5);
+    for i in 0..requests {
+        let input = rng.normal_vec(d, 0.5);
+        engine.submit((i % tenants) as TenantId, input)?.wait()?;
+    }
+    println!("[obs-serve] primed with {requests} demo requests; registry is hot");
+    if hold_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    } else {
+        println!("[obs-serve] serving until killed (Ctrl-C)…");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(1));
+        }
+    }
+    server.shutdown();
+    engine.finish();
+    Ok(())
+}
+
+/// Drive a small synthetic fleet and export its request traces as
+/// Chrome trace-event JSON — one pid for the engine, one tid per
+/// worker, stage spans nested in request spans. Load the output in
+/// chrome://tracing or Perfetto.
+fn trace_cmd(args: &Args) -> Result<()> {
+    use gsoft::report::emit_json_record;
+    use gsoft::serve::{synthetic, Engine, EngineOpts, TenantId};
+    use gsoft::util::rng::Rng;
+
+    let tenants = args.opt_usize("tenants", 8)?;
+    let requests = args.opt_usize("requests", 128)?;
+    let d = args.opt_usize("d", 16)?;
+    let seed = args.opt_u64("seed", 42)?;
+    let trace_cap = args.opt_usize("trace-cap", gsoft::serve::TRACE_RING_CAP)?;
+    let out_path = args.opt_or("out", "results/trace.json").to_string();
+
+    let registry = synthetic(tenants, 2, d, 4, seed)?;
+    let engine = Engine::new(
+        registry,
+        EngineOpts {
+            workers: 2,
+            max_batch: 8,
+            trace_ring_cap: trace_cap,
+            ..EngineOpts::default()
+        },
+    )?;
+    let mut rng = Rng::new(seed ^ 0xb5);
+    for i in 0..requests {
+        let input = rng.normal_vec(d, 0.5);
+        engine.submit((i % tenants) as TenantId, input)?.wait()?;
+    }
+    let report = engine.finish();
+    let doc = gsoft::obs::chrome_trace(&report.traces, 1);
+    emit_json_record(std::path::Path::new(&out_path), &doc)?;
+    println!(
+        "[trace] {} traces exported to {out_path} — load in chrome://tracing or Perfetto",
+        report.traces.len()
+    );
+    Ok(())
 }
 
 /// Exercise the serving engine on a tiny synthetic fleet with full
@@ -294,6 +427,8 @@ fn serve_bench(args: &Args) -> Result<()> {
     let seed = args.opt_u64("seed", 42)?;
     let reg_every = args.opt_usize("reg-every", 16)?.max(1);
     let store_dir = args.opt("store").map(std::path::PathBuf::from);
+    let trace_cap = args.opt_usize("trace-cap", gsoft::serve::TRACE_RING_CAP)?;
+    let listen = args.opt("listen").map(String::from);
 
     println!(
         "[serve-bench] registry: {tenants} tenants over {layers} layers of {d}x{d} (block {block})"
@@ -334,9 +469,20 @@ fn serve_bench(args: &Args) -> Result<()> {
             max_batch,
             cache_budget_bytes: cache_mb << 20,
             spill_dir: store_dir.as_ref().map(|dir| dir.join("spill")),
+            trace_ring_cap: trace_cap,
             ..EngineOpts::default()
         },
     )?;
+    // Live scrape endpoints over this engine's registry/traces/health
+    // for the duration of the sweep (`--listen ADDR`; DESIGN.md §10).
+    let server = match &listen {
+        Some(addr) => {
+            let s = gsoft::obs::ObsServer::bind(addr, engine.obs_sources())?;
+            println!("[serve-bench] scrape endpoints live at {}", s.url());
+            Some(s)
+        }
+        None => None,
+    };
     let policy = engine.policy();
     println!(
         "[serve-bench] policy: promote after {} requests/tenant (Theorem-2 density model; Q dense: {})",
@@ -381,6 +527,10 @@ fn serve_bench(args: &Args) -> Result<()> {
         h.wait()?;
     }
     let wall = t0.elapsed();
+    // Hold the exporter open while the engine is still live (workers
+    // parked, health green) so CI can scrape mid-flight state, then shut
+    // it down before finish() tears the fleet down.
+    release_listener(args, server)?;
     let report = engine.finish();
     let m = &report.metrics;
     let throughput = m.requests as f64 / wall.as_secs_f64();
@@ -511,6 +661,10 @@ fn serve_bench(args: &Args) -> Result<()> {
         obs_snap.merge(&gsoft::obs::global().snapshot());
     }
     fields.push(("obs", obs_snap.to_json()));
+    // Pass/fail SLO verdict over the whole run (serve_default objectives
+    // evaluated on the final snapshot; burn rates also land in the obs
+    // gauges as slo_*).
+    fields.push(("slo", report.slo.to_json()));
     fields.push(("traces_recorded", Json::Num(report.traces.len() as f64)));
     if reg_pool.is_some() {
         fields.push((
@@ -555,6 +709,7 @@ fn kernel_bench(args: &Args) -> Result<()> {
     }
     let seed = args.opt_u64("seed", 7)?;
     let out_path = args.opt_or("out", "BENCH_kernels.json").to_string();
+    let server = bind_global_listener(args)?;
 
     // Autotune the tile on a representative shape — the same dispatch
     // layer Mat::matmul and the serving engine front.
@@ -680,6 +835,7 @@ fn kernel_bench(args: &Args) -> Result<()> {
         println!("[kernel-bench] WARNING: fused apply did not beat the dense GEMM on this sweep");
     }
     bench.finish();
+    release_listener(args, server)?;
     Ok(())
 }
 
@@ -703,6 +859,7 @@ fn conv_bench(args: &Args) -> Result<()> {
     }
     let seed = args.opt_u64("seed", 7)?;
     let out_path = args.opt_or("out", "BENCH_conv.json").to_string();
+    let server = bind_global_listener(args)?;
     let ctx = if smoke {
         KernelCtx::autotuned(64, 16)
     } else {
@@ -721,6 +878,7 @@ fn conv_bench(args: &Args) -> Result<()> {
     table.emit("conv_bench")?;
     emit_json_record(std::path::Path::new(&out_path), &attach_global_obs(rec))?;
     println!("[conv-bench] record is deterministic modulo 'timings' fields (same seed ⇒ same checksums)");
+    release_listener(args, server)?;
     Ok(())
 }
 
@@ -744,6 +902,7 @@ fn store_bench(args: &Args) -> Result<()> {
     let smoke = args.flag("smoke");
     let seed = args.opt_u64("seed", 7)?;
     let out_path = args.opt_or("out", "BENCH_store.json").to_string();
+    let server = bind_global_listener(args)?;
     let requests = args.opt_usize("requests", if smoke { 64 } else { 1024 })?;
 
     // (adapter kind, tenant count, hot-set hit ratio)
@@ -893,6 +1052,7 @@ fn store_bench(args: &Args) -> Result<()> {
     println!(
         "[store-bench] durable persist → replay → lazy hydrate → spill round-trip complete"
     );
+    release_listener(args, server)?;
     Ok(())
 }
 
@@ -982,13 +1142,30 @@ Utilities:
                 store_* counters/gauges/latency histograms) as
                 Prometheus text, or results/metrics.json with
                 --format json   [--tenants 8 --requests 128 --d 16]
+  obs-serve     stand up the live scrape endpoints over a small
+                synthetic engine: /metrics (Prometheus text),
+                /metrics.json, /healthz, /tracez, /slo
+                [--listen 127.0.0.1:9100 --hold-ms N (0 = forever)
+                 --tenants 8 --requests 128 --d 16]
+  trace         drive a small synthetic fleet and export its request
+                traces as Chrome trace-event JSON (open in
+                chrome://tracing or Perfetto); one pid per engine, one
+                tid per worker, stage spans nested in request spans
+                [--out results/trace.json --requests 128 --trace-cap N]
   list          list compiled artifacts
 
-Observability (DESIGN.md §9): every bench JSON record carries an "obs"
-section from the fleet telemetry subsystem; serve-bench always includes
-its engine's registry, and the global kernel_*/store_* metrics join in
-under --obs (one relaxed atomic load on the hot path when off).
+Observability (DESIGN.md §9-§10): every bench JSON record carries an
+"obs" section (metrics registry snapshot) and an "slo" section
+(multi-window burn-rate verdict over p99 latency, deadline-miss ratio
+and cache hit-rate objectives). serve-bench always includes its
+engine's registry; the global kernel_*/store_* metrics join in under
+--obs (one relaxed atomic load on the hot path when off). Every bench
+also takes --listen ADDR to serve the live scrape endpoints during the
+run (serve-bench: that engine's metrics/traces/health; other benches:
+the process-wide registry) and --hold-ms N to keep them up after the
+sweep. serve-bench --trace-cap N resizes the recent-trace ring.
 
 Common options: --steps N --pretrain-steps N --eval-batches N --lr X
                 --workers N --seed N --artifacts DIR --no-cache --obs
+                --listen ADDR --hold-ms N
 "#;

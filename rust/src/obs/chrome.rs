@@ -1,0 +1,181 @@
+//! Chrome trace-event export for [`TraceRing`] contents.
+//!
+//! Converts the engine's per-request stage traces into the Chrome
+//! trace-event JSON format — the `{"traceEvents": [...]}` array of
+//! complete (`"ph": "X"`) events — loadable directly in
+//! `chrome://tracing` or Perfetto (`gsoft trace --out trace.json`).
+//!
+//! Mapping (DESIGN.md §10):
+//! - one **pid** per engine (callers pick; the CLI uses 1);
+//! - one **tid** per worker thread (`worker + 1`, so tid 0 never
+//!   collides with a real worker's lane);
+//! - each request is an enclosing `X` span named by its serve path,
+//!   starting at the trace's `start_ns` on the engine epoch timeline and
+//!   lasting `total_ns`;
+//! - each non-zero stage is a nested `X` span laid out sequentially
+//!   inside the request span, in [`Stage::ALL`] pipeline order.
+//!
+//! Timestamps (`ts`) and durations (`dur`) are microseconds per the
+//! format spec; nanosecond figures are divided by 1000 as `f64` so
+//! sub-microsecond stages stay visible instead of rounding to zero.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::Json;
+
+use super::trace::{Stage, Trace};
+
+const NS_PER_US: f64 = 1000.0;
+
+fn meta_event(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::Str(value.to_string()))])),
+    ])
+}
+
+fn span_event(name: &str, cat: &str, pid: u64, tid: u64, ts_ns: u64, dur_ns: u64, args: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts_ns as f64 / NS_PER_US)),
+        ("dur", Json::Num(dur_ns as f64 / NS_PER_US)),
+        ("args", args),
+    ])
+}
+
+/// Build a Chrome trace-event document from ring traces. `pid`
+/// identifies the engine (a multi-engine process exports one call per
+/// engine and concatenates the event arrays).
+pub fn chrome_trace(traces: &[Trace], pid: u64) -> Json {
+    let mut events = Vec::new();
+    events.push(meta_event("process_name", pid, 0, "gsoft-engine"));
+    let workers: BTreeSet<u32> = traces.iter().map(|t| t.worker).collect();
+    for w in &workers {
+        events.push(meta_event("thread_name", pid, *w as u64 + 1, &format!("worker-{w}")));
+    }
+
+    // Ring snapshots are newest-first; emit oldest-first so the event
+    // array reads in timeline order.
+    let mut ordered: Vec<&Trace> = traces.iter().collect();
+    ordered.sort_by_key(|t| (t.start_ns, t.seq));
+    for t in ordered {
+        let tid = t.worker as u64 + 1;
+        let args = Json::obj(vec![
+            ("tenant", Json::Num(t.tenant as f64)),
+            ("seq", Json::Num(t.seq as f64)),
+        ]);
+        events.push(span_event(t.path, "request", pid, tid, t.start_ns, t.total_ns, args));
+        // Stages laid out back-to-back from the request start, pipeline
+        // order. Stage sums can undershoot total_ns (untimed gaps stay
+        // visible as slack inside the request span).
+        let mut cursor = t.start_ns;
+        for s in Stage::ALL {
+            let ns = t.stage_ns[s.index()];
+            if ns == 0 {
+                continue;
+            }
+            events.push(span_event(s.name(), "stage", pid, tid, cursor, ns, Json::obj(vec![])));
+            cursor = cursor.saturating_add(ns);
+        }
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(seq: u64, worker: u32, start_ns: u64) -> Trace {
+        Trace {
+            seq,
+            tenant: 7,
+            path: "cached_dense",
+            start_ns,
+            worker,
+            total_ns: 5_000,
+            stage_ns: [1_000, 500, 0, 0, 3_000, 250],
+        }
+    }
+
+    #[test]
+    fn export_has_metadata_and_one_lane_per_worker() {
+        let traces = vec![trace(1, 0, 10_000), trace(2, 2, 20_000)];
+        let j = chrome_trace(&traces, 1);
+        assert_eq!(j.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+        let events = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let metas: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .collect();
+        // process_name + one thread_name per distinct worker.
+        assert_eq!(metas.len(), 3);
+        let tids: Vec<f64> = metas
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+            .map(|e| e.get("tid").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(tids, vec![1.0, 3.0], "tid = worker + 1");
+    }
+
+    #[test]
+    fn stage_spans_nest_sequentially_inside_the_request_span() {
+        let j = chrome_trace(&[trace(4, 1, 100_000)], 1);
+        let events = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        // 1 request span + 4 non-zero stages (merge/spill omitted).
+        assert_eq!(spans.len(), 5);
+        let req = spans[0];
+        assert_eq!(req.get("name").and_then(|n| n.as_str()), Some("cached_dense"));
+        assert_eq!(req.get("ts").unwrap().as_f64().unwrap(), 100.0, "ns→µs");
+        assert_eq!(req.get("dur").unwrap().as_f64().unwrap(), 5.0);
+        let req_end = 100.0 + 5.0;
+        let mut cursor = 100.0;
+        let names: Vec<&str> =
+            spans[1..].iter().map(|s| s.get("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(names, vec!["queue", "plan", "kernel", "reply"]);
+        for s in &spans[1..] {
+            let ts = s.get("ts").unwrap().as_f64().unwrap();
+            let dur = s.get("dur").unwrap().as_f64().unwrap();
+            assert_eq!(ts, cursor, "stages are laid out back-to-back");
+            assert!(ts + dur <= req_end + 1e-9, "stage stays inside the request span");
+            assert_eq!(s.get("tid").unwrap().as_f64().unwrap(), 2.0);
+            cursor = ts + dur;
+        }
+    }
+
+    #[test]
+    fn newest_first_input_exports_in_timeline_order() {
+        // Ring snapshots arrive newest-first; the event array must come
+        // out oldest-first.
+        let j = chrome_trace(&[trace(9, 0, 90_000), trace(3, 0, 30_000)], 1);
+        let events = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let req_ts: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("request"))
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(req_ts, vec![30.0, 90.0]);
+    }
+
+    #[test]
+    fn empty_ring_still_produces_a_loadable_document() {
+        let j = chrome_trace(&[], 42);
+        let events = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(events.len(), 1, "just the process_name metadata");
+        assert_eq!(events[0].get("pid").unwrap().as_f64().unwrap(), 42.0);
+    }
+}

@@ -167,6 +167,28 @@ impl HistoSnapshot {
         self.sum = self.sum.wrapping_add(other.sum);
         self.max = self.max.max(other.max);
     }
+
+    /// The samples recorded between `earlier` and `self`, where `earlier`
+    /// is a previous snapshot of the *same* histogram (buckets only ever
+    /// grow, so the bucket-wise difference is itself a valid histogram —
+    /// the substrate for SLO burn-rate windows). Wrapping subtraction
+    /// mirrors [`HistoSnapshot::merge`]'s wrapping addition exactly:
+    /// `merge(a.delta(&b), b) == a` bucket-wise whenever `b` preceded
+    /// `a`. The delta keeps the later `max` (the true window max is not
+    /// recoverable from two endpoint snapshots; the kept value is a
+    /// correct upper bound and the quantile clamp stays sound).
+    pub fn delta(&self, earlier: &HistoSnapshot) -> HistoSnapshot {
+        HistoSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .zip(&earlier.buckets)
+                .map(|(&a, &b)| a.wrapping_sub(b))
+                .collect(),
+            sum: self.sum.wrapping_sub(earlier.sum),
+            max: self.max,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +363,65 @@ mod tests {
                 let mut ba = b.clone();
                 ba.merge(a);
                 assert_eq!(ab, ba, "merge must commute");
+            },
+        );
+    }
+
+    #[test]
+    fn delta_inverts_merge_and_stays_a_valid_histogram() {
+        // For any sample sequence split at any point: take snapshot `b`
+        // after the prefix, `a` after the whole sequence. Then
+        // `merge(a.delta(&b), b) == a` bucket-wise, the delta's count is
+        // exactly the suffix length, and the delta's quantiles are
+        // monotone (it is itself a valid histogram over the suffix).
+        prop::check_shrunk(
+            "snapshot delta inverts merge",
+            904,
+            96,
+            |rng| {
+                let vals = gen_values(rng, 120);
+                let split = rng.below(vals.len() + 1);
+                (vals, split)
+            },
+            |(vals, split)| {
+                shrink_values(vals)
+                    .into_iter()
+                    .map(|v| {
+                        let s = (*split).min(v.len());
+                        (v, s)
+                    })
+                    .chain((*split > 0).then(|| (vals.clone(), split / 2)))
+                    .collect()
+            },
+            |(vals, split)| {
+                let h = Histo::new();
+                for &v in &vals[..*split] {
+                    h.record(v);
+                }
+                let b = h.snapshot();
+                for &v in &vals[*split..] {
+                    h.record(v);
+                }
+                let a = h.snapshot();
+                let d = a.delta(&b);
+                assert_eq!(
+                    d.count(),
+                    (vals.len() - *split) as u64,
+                    "delta count must be the suffix length"
+                );
+                let mut rebuilt = d.clone();
+                rebuilt.merge(&b);
+                // merge takes max(d.max, b.max) = max(a.max, b.max) =
+                // a.max since b preceded a — so full equality holds.
+                assert_eq!(rebuilt, a, "merge(delta(a,b), b) != a");
+                // The delta is a valid histogram: monotone quantiles,
+                // bounded by its (upper-bound) max.
+                let qs: Vec<u64> =
+                    [0.5, 0.95, 0.99, 0.999].iter().map(|&q| d.quantile(q)).collect();
+                for w in qs.windows(2) {
+                    assert!(w[0] <= w[1], "delta quantiles not monotone: {qs:?}");
+                }
+                assert!(*qs.last().unwrap() <= d.max);
             },
         );
     }

@@ -1,0 +1,617 @@
+//! Pure-std HTTP scrape exporter (DESIGN.md §10).
+//!
+//! One background thread on a `TcpListener` serves keep-alive-less
+//! HTTP/1.1 GETs — no new dependencies, no async runtime. Endpoints:
+//!
+//! | path            | payload                                           |
+//! |-----------------|---------------------------------------------------|
+//! | `/metrics`      | Prometheus text ([`RegistrySnapshot::prometheus`])|
+//! | `/metrics.json` | the same snapshot as JSON                         |
+//! | `/healthz`      | liveness probes, HTTP 200/503                     |
+//! | `/tracez`       | newest ring traces, JSON                          |
+//! | `/slo`          | multi-window SLO burn-rate report                 |
+//!
+//! The server scrapes through [`ObsSources`] — boxed closures over
+//! whatever owns the telemetry (an engine's shared state via
+//! [`crate::serve::Engine::obs_sources`], or the process-wide registry
+//! via [`ObsSources::global_only`]) — so the exporter thread is
+//! `'static` and shuts down independently of the scraped object.
+//!
+//! Robustness contract (tested below): requests are read with a bound
+//! ([`MAX_REQUEST_BYTES`]) and a timeout; malformed or oversized
+//! requests get a 400 and never panic or kill the exporter thread
+//! (handler panics are caught and answered with a 500); connections
+//! that close without sending anything are dropped silently — that is
+//! also how [`ObsServer::shutdown`] wakes the accept loop. Handling is
+//! intentionally serial: scrape traffic is a few requests per second,
+//! and a serial loop cannot be wedged open by a slow client holding a
+//! worker.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::registry::{MetricsRegistry, RegistrySnapshot};
+use super::slo::{SloSet, SloTracker};
+use super::trace::Trace;
+
+/// Upper bound on the bytes read from one request (line + headers). A
+/// scrape GET is well under 1 KiB; anything larger is a 400.
+pub const MAX_REQUEST_BYTES: usize = 8192;
+
+/// Per-connection socket timeouts — a stalled client cannot hold the
+/// serial accept loop for longer than this.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// One named health probe.
+#[derive(Clone, Debug)]
+pub struct HealthCheck {
+    pub name: String,
+    pub ok: bool,
+    pub detail: String,
+}
+
+/// The `/healthz` payload: overall ok iff every probe passes.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    pub checks: Vec<HealthCheck>,
+}
+
+impl HealthReport {
+    pub fn ok(&self) -> bool {
+        self.checks.iter().all(|c| c.ok)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            (
+                "checks",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("name", Json::Str(c.name.clone())),
+                                ("ok", Json::Bool(c.ok)),
+                                ("detail", Json::Str(c.detail.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// What the exporter scrapes. Closures (not references) so the server
+/// thread owns its world: the scraped object can be dropped or finished
+/// on its own schedule after [`ObsServer::shutdown`].
+pub struct ObsSources {
+    pub metrics: Box<dyn Fn() -> RegistrySnapshot + Send + Sync>,
+    pub traces: Box<dyn Fn() -> Vec<Trace> + Send + Sync>,
+    pub health: Box<dyn Fn() -> HealthReport + Send + Sync>,
+    /// Burn-rate tracker fed lazily by `/slo` requests — scraping IS the
+    /// tick, no dedicated timer thread.
+    pub slo: SloTracker,
+}
+
+impl ObsSources {
+    /// Sources for a process with no serving engine (kernel / conv /
+    /// store benches): the process-wide registry, no traces, and a
+    /// liveness-only health report.
+    pub fn global_only() -> ObsSources {
+        ObsSources {
+            metrics: Box::new(|| super::global().snapshot()),
+            traces: Box::new(Vec::new),
+            health: Box::new(|| HealthReport {
+                checks: vec![HealthCheck {
+                    name: "process".to_string(),
+                    ok: true,
+                    detail: "alive".to_string(),
+                }],
+            }),
+            slo: SloTracker::new(SloSet::global_default(), Vec::new()),
+        }
+    }
+}
+
+/// Routable paths; anything else is a 404 (and counted under the
+/// `other` label so metric names never embed attacker-chosen strings).
+const ROUTES: [&str; 6] = ["/", "/metrics", "/metrics.json", "/healthz", "/tracez", "/slo"];
+
+struct ServerState {
+    sources: ObsSources,
+    /// Server-local `http_requests_total{path=...}` counters, merged
+    /// into the `/metrics` output — the exporter observes itself.
+    requests: MetricsRegistry,
+}
+
+/// Handle to the running exporter thread. Dropping it (or calling
+/// [`ObsServer::shutdown`]) stops the listener and joins the thread.
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`, port 0 for ephemeral) and
+    /// start the exporter thread.
+    pub fn bind(addr: &str, sources: ObsSources) -> Result<ObsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding obs exporter on {addr}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(ServerState {
+            sources,
+            requests: MetricsRegistry::new(),
+        });
+        let thread = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    handle_conn(stream, &state);
+                }
+            })
+        };
+        Ok(ObsServer {
+            addr,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop accepting, wake the blocked accept loop with a self-connect,
+    /// and join the exporter thread.
+    pub fn shutdown(mut self) {
+        self.stop_now();
+    }
+
+    fn stop_now(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // The accept loop blocks in `incoming()`; an empty connection is
+        // read as zero bytes and dropped silently.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.stop_now();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, state: &ServerState) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let line = match read_request_line(&mut stream) {
+        Ok(Some(line)) => line,
+        // Nothing sent (shutdown wake, port probe): close silently.
+        Ok(None) => return,
+        Err(status) => {
+            write_response(&mut stream, status, "text/plain", "bad request\n");
+            return;
+        }
+    };
+    let path = match parse_request_line(&line) {
+        Ok(p) => p,
+        Err(status) => {
+            let body = if status == 405 { "GET only\n" } else { "bad request\n" };
+            write_response(&mut stream, status, "text/plain", body);
+            return;
+        }
+    };
+    let label = if ROUTES.contains(&path.as_str()) { path.as_str() } else { "other" };
+    state
+        .requests
+        .counter(&format!("http_requests_total{{path=\"{label}\"}}"))
+        .inc();
+    // A panicking source must answer 500 and leave the exporter alive.
+    let outcome =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| route(state, &path)));
+    match outcome {
+        Ok(Some((status, ctype, body))) => write_response(&mut stream, status, ctype, &body),
+        Ok(None) => write_response(&mut stream, 404, "text/plain", "not found\n"),
+        Err(_) => write_response(&mut stream, 500, "text/plain", "internal error\n"),
+    }
+}
+
+/// Read until the header terminator, EOF, or the size bound; return the
+/// request line. `Ok(None)` = the peer sent nothing at all.
+fn read_request_line(stream: &mut TcpStream) -> Result<Option<String>, u16> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.len() > MAX_REQUEST_BYTES {
+                    return Err(400);
+                }
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+            // Timed out / reset mid-request: answer 400 if anything
+            // arrived, otherwise just drop the connection.
+            Err(_) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(400);
+            }
+        }
+    }
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    let text = String::from_utf8_lossy(&buf);
+    Ok(Some(text.lines().next().unwrap_or("").to_string()))
+}
+
+/// `GET /path?query HTTP/1.1` → `/path`. 400 on shape violations, 405
+/// on non-GET methods.
+fn parse_request_line(line: &str) -> Result<String, u16> {
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(400);
+    };
+    if !version.starts_with("HTTP/") || !target.starts_with('/') {
+        return Err(400);
+    }
+    if method != "GET" {
+        return Err(405);
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    Ok(path.to_string())
+}
+
+fn route(state: &ServerState, path: &str) -> Option<(u16, &'static str, String)> {
+    match path {
+        "/" => Some((
+            200,
+            "text/plain",
+            "gsoft obs exporter\n\n/metrics\n/metrics.json\n/healthz\n/tracez\n/slo\n"
+                .to_string(),
+        )),
+        "/metrics" => {
+            let mut snap = (state.sources.metrics)();
+            snap.merge(&state.requests.snapshot());
+            Some((200, "text/plain; version=0.0.4", snap.prometheus()))
+        }
+        "/metrics.json" => {
+            let mut snap = (state.sources.metrics)();
+            snap.merge(&state.requests.snapshot());
+            Some((200, "application/json", snap.to_json().pretty()))
+        }
+        "/healthz" => {
+            let h = (state.sources.health)();
+            let status = if h.ok() { 200 } else { 503 };
+            Some((status, "application/json", h.to_json().pretty()))
+        }
+        "/tracez" => {
+            let traces = (state.sources.traces)();
+            let body = Json::Arr(traces.iter().map(Trace::to_json).collect()).pretty();
+            Some((200, "application/json", body))
+        }
+        "/slo" => {
+            let report = state.sources.slo.observe_and_report((state.sources.metrics)());
+            Some((200, "application/json", report.to_json().pretty()))
+        }
+        _ => None,
+    }
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body.as_bytes()))
+        .and_then(|_| stream.flush());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::HistoSnapshot;
+
+    /// Minimal HTTP client: one GET, read to EOF (the server always
+    /// closes), split status and body.
+    fn get(addr: SocketAddr, target: &str) -> (u16, String) {
+        raw(addr, &format!("GET {target} HTTP/1.1\r\nHost: t\r\n\r\n"))
+    }
+
+    fn raw(addr: SocketAddr, request: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        let status: u16 = text
+            .split_whitespace()
+            .nth(1)
+            .and_then(|t| t.parse().ok())
+            .unwrap_or_else(|| panic!("no status line in {text:?}"));
+        let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    fn test_trace(seq: u64) -> Trace {
+        Trace {
+            seq,
+            tenant: 1,
+            path: "cached_dense",
+            start_ns: seq * 1000,
+            worker: 0,
+            total_ns: 500,
+            stage_ns: [100, 0, 0, 0, 300, 50],
+        }
+    }
+
+    fn test_sources(reg: &Arc<MetricsRegistry>, healthy: bool) -> ObsSources {
+        let m = Arc::clone(reg);
+        ObsSources {
+            metrics: Box::new(move || m.snapshot()),
+            traces: Box::new(|| vec![test_trace(5), test_trace(4)]),
+            health: Box::new(move || HealthReport {
+                checks: vec![HealthCheck {
+                    name: "probe".to_string(),
+                    ok: healthy,
+                    detail: "test".to_string(),
+                }],
+            }),
+            slo: SloTracker::new(SloSet::serve_default(), Vec::new()),
+        }
+    }
+
+    #[test]
+    fn endpoints_serve_metrics_health_traces_and_slo() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.counter("serve_requests_total{path=\"cached_dense\"}").add(7);
+        reg.histogram("serve_request_ns{path=\"cached_dense\"}").record(1_000_000);
+        let server = ObsServer::bind("127.0.0.1:0", test_sources(&reg, true)).unwrap();
+        let addr = server.addr();
+
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("serve_requests_total{path=\"cached_dense\"} 7"), "{body}");
+        assert!(
+            body.contains("http_requests_total{path=\"/metrics\"}"),
+            "exporter observes itself: {body}"
+        );
+
+        let (status, body) = get(addr, "/metrics.json");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(
+            j.get("counters")
+                .and_then(|c| c.get("serve_requests_total{path=\"cached_dense\"}"))
+                .and_then(|v| v.as_f64()),
+            Some(7.0)
+        );
+
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+
+        let (status, body) = get(addr, "/tracez");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        let traces = j.as_arr().unwrap();
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].get("seq").and_then(|v| v.as_f64()), Some(5.0), "newest first");
+
+        let (status, body) = get(addr, "/slo");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert!(j.get("ok").is_some());
+        assert_eq!(j.get("objectives").and_then(|o| o.as_arr()).unwrap().len(), 3);
+
+        let (status, _) = get(addr, "/metrics?debug=1");
+        assert_eq!(status, 200, "query strings are stripped");
+        let (status, _) = get(addr, "/nope");
+        assert_eq!(status, 404);
+        let (status, _) = raw(addr, "POST /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status, 405);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unhealthy_sources_answer_503() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let server = ObsServer::bind("127.0.0.1:0", test_sources(&reg, false)).unwrap();
+        let (status, body) = get(server.addr(), "/healthz");
+        assert_eq!(status, 503);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_and_oversized_requests_get_400_and_the_server_survives() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let server = ObsServer::bind("127.0.0.1:0", test_sources(&reg, true)).unwrap();
+        let addr = server.addr();
+
+        let (status, _) = raw(addr, "GARBAGE\r\n\r\n");
+        assert_eq!(status, 400);
+        let (status, _) = raw(addr, "GET nopath HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 400, "target must start with /");
+        let (status, _) = raw(addr, "GET /metrics NOTHTTP\r\n\r\n");
+        assert_eq!(status, 400, "version must start with HTTP/");
+        let oversized = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(2 * MAX_REQUEST_BYTES));
+        let (status, _) = raw(addr, &oversized);
+        assert_eq!(status, 400, "request over the byte bound");
+        // A silent connect-and-close (what shutdown's wake does) must
+        // not produce a response or kill the loop.
+        drop(TcpStream::connect(addr).unwrap());
+
+        let (status, _) = get(addr, "/healthz");
+        assert_eq!(status, 200, "exporter survived every malformed request");
+        server.shutdown();
+    }
+
+    #[test]
+    fn handler_panic_answers_500_and_the_exporter_lives_on() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let mut sources = test_sources(&reg, true);
+        let flip = Arc::new(AtomicBool::new(true));
+        let f = Arc::clone(&flip);
+        sources.traces = Box::new(move || {
+            if f.load(Ordering::SeqCst) {
+                panic!("poisoned trace source");
+            }
+            Vec::new()
+        });
+        let server = ObsServer::bind("127.0.0.1:0", sources).unwrap();
+        let (status, _) = get(server.addr(), "/tracez");
+        assert_eq!(status, 500);
+        flip.store(false, Ordering::SeqCst);
+        let (status, _) = get(server.addr(), "/tracez");
+        assert_eq!(status, 200, "same endpoint recovers once the source stops panicking");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_scrapes_see_monotone_consistent_snapshots() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let server = ObsServer::bind("127.0.0.1:0", test_sources(&reg, true)).unwrap();
+        let addr = server.addr();
+        let writing = Arc::new(AtomicBool::new(true));
+
+        let writer = {
+            let reg = Arc::clone(&reg);
+            let writing = Arc::clone(&writing);
+            std::thread::spawn(move || {
+                let c = reg.counter("serve_requests_total{path=\"cached_dense\"}");
+                let h = reg.histogram("serve_request_ns{path=\"cached_dense\"}");
+                while writing.load(Ordering::SeqCst) {
+                    c.inc();
+                    h.record(1_000);
+                }
+            })
+        };
+
+        let scrapers: Vec<_> = (0..3)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut last = 0.0;
+                    for _ in 0..15 {
+                        let (status, body) = get(addr, "/metrics.json");
+                        assert_eq!(status, 200);
+                        let j = Json::parse(&body).unwrap();
+                        let count = j
+                            .get("counters")
+                            .and_then(|c| c.get("serve_requests_total{path=\"cached_dense\"}"))
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(0.0);
+                        assert!(count >= last, "counter went backwards: {count} < {last}");
+                        last = count;
+                        // Read-skew-free invariant: the histogram's count
+                        // is derived from its buckets, so mid-record
+                        // scrapes still satisfy count == Σ buckets (the
+                        // JSON count equals the quantile source's mass).
+                        if let Some(t) = j
+                            .get("timings")
+                            .and_then(|t| t.get("serve_request_ns{path=\"cached_dense\"}"))
+                        {
+                            assert!(t.get("count").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for s in scrapers {
+            s.join().unwrap();
+        }
+        writing.store(false, Ordering::SeqCst);
+        writer.join().unwrap();
+
+        // Direct snapshot-level monotonicity of the same invariant the
+        // scrapers observed over HTTP.
+        let a = reg.snapshot();
+        let b = reg.snapshot();
+        let name = "serve_request_ns{path=\"cached_dense\"}";
+        let (ha, hb): (&HistoSnapshot, &HistoSnapshot) =
+            (&a.histograms[name], &b.histograms[name]);
+        assert!(hb.count() >= ha.count());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_and_releases_the_port() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let server = ObsServer::bind("127.0.0.1:0", test_sources(&reg, true)).unwrap();
+        let addr = server.addr();
+        let (status, _) = get(addr, "/");
+        assert_eq!(status, 200);
+        server.shutdown();
+        // The listener is gone: a fresh connect is refused (or, at
+        // worst, connects to nothing and reads EOF).
+        match TcpStream::connect(addr) {
+            Err(_) => {}
+            Ok(mut s) => {
+                let mut buf = String::new();
+                let _ = s.read_to_string(&mut buf);
+                assert!(buf.is_empty(), "no server should answer after shutdown");
+            }
+        }
+    }
+
+    #[test]
+    fn global_only_sources_serve_the_process_registry() {
+        let sources = ObsSources::global_only();
+        let server = ObsServer::bind("127.0.0.1:0", sources).unwrap();
+        let (status, body) = get(server.addr(), "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("http_requests_total"), "{body}");
+        let (status, body) = get(server.addr(), "/slo");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "idle process passes");
+        let (status, _) = get(server.addr(), "/tracez");
+        assert_eq!(status, 200);
+        server.shutdown();
+    }
+}

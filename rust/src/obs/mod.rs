@@ -8,7 +8,13 @@
 //! - [`registry`] — named counters/gauges/histograms with Prometheus-text
 //!   and JSON exporters ([`RegistrySnapshot::to_json`] is the `obs`
 //!   section of every `BENCH_*.json`);
-//! - [`trace`] — per-request stage spans in a newest-N ring buffer.
+//! - [`trace`] — per-request stage spans in a newest-N ring buffer;
+//! - [`http`] — the pure-std live scrape exporter (`/metrics`,
+//!   `/healthz`, `/tracez`, `/slo`; DESIGN.md §10);
+//! - [`slo`] — declarative SLO objectives with multi-window burn rates
+//!   over snapshot deltas;
+//! - [`chrome`] — Chrome trace-event export of ring traces
+//!   (`gsoft trace`, loadable in `chrome://tracing`/Perfetto).
 //!
 //! Two scopes exist. The serving engine owns a *per-engine*
 //! [`MetricsRegistry`] (isolated per instance, snapshotted into
@@ -19,12 +25,18 @@
 //! performs no timing, no allocation and no registry access. Enable via
 //! `gsoft <bench> --obs` or [`set_enabled`].
 
+pub mod chrome;
 pub mod hist;
+pub mod http;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
+pub use chrome::chrome_trace;
 pub use hist::{Histo, HistoSnapshot};
+pub use http::{HealthCheck, HealthReport, ObsServer, ObsSources};
 pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use slo::{SloReport, SloSet, SloTracker};
 pub use trace::{Stage, Trace, TraceRing};
 
 use std::sync::atomic::{AtomicBool, Ordering};

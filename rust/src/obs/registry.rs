@@ -186,6 +186,29 @@ impl RegistrySnapshot {
         }
     }
 
+    /// The activity between `earlier` and `self`, where `earlier` is a
+    /// previous snapshot of the same registry: counters and histograms
+    /// subtract ([`HistoSnapshot::delta`]), gauges are point-in-time so
+    /// the later value is kept. Metrics absent from `earlier` (registered
+    /// mid-window) delta against zero. The substrate for SLO burn-rate
+    /// windows ([`crate::obs::slo`]).
+    pub fn delta(&self, earlier: &RegistrySnapshot) -> RegistrySnapshot {
+        let mut out = RegistrySnapshot::default();
+        for (name, &v) in &self.counters {
+            let prev = earlier.counters.get(name).copied().unwrap_or(0);
+            out.counters.insert(name.clone(), v.wrapping_sub(prev));
+        }
+        out.gauges = self.gauges.clone();
+        for (name, h) in &self.histograms {
+            let d = match earlier.histograms.get(name) {
+                Some(prev) => h.delta(prev),
+                None => h.clone(),
+            };
+            out.histograms.insert(name.clone(), d);
+        }
+        out
+    }
+
     /// The `obs` JSON section: counters and gauges at the top (stable
     /// given a fixed trace), every histogram under `timings` so
     /// `strip_timing` leaves a deterministic record.
@@ -362,6 +385,31 @@ mod tests {
             right.merge(&bc);
             assert_eq!(left, right, "(a+b)+c != a+(b+c)");
         });
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_window_activity() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("serve_x_total");
+        let h = reg.histogram("serve_x_ns");
+        c.add(3);
+        h.record(10);
+        let earlier = reg.snapshot();
+        c.add(4);
+        h.record(100);
+        h.record(200);
+        // A histogram registered mid-window deltas against zero.
+        reg.histogram("serve_y_ns").record(7);
+        let later = reg.snapshot();
+        let d = later.delta(&earlier);
+        assert_eq!(d.counters["serve_x_total"], 4);
+        assert_eq!(d.histograms["serve_x_ns"].count(), 2);
+        assert_eq!(d.histograms["serve_x_ns"].sum, 300);
+        assert_eq!(d.histograms["serve_y_ns"].count(), 1);
+        // delta then merge-back round-trips to the later snapshot.
+        let mut rebuilt = d.clone();
+        rebuilt.merge(&earlier);
+        assert_eq!(rebuilt, later);
     }
 
     #[test]

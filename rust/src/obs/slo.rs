@@ -1,0 +1,584 @@
+//! Declarative SLO objectives evaluated over metric-snapshot *deltas*
+//! with multi-window burn rates (DESIGN.md §10).
+//!
+//! An [`SloObjective`] names a target over the metrics taxonomy — a
+//! latency-quantile ceiling, an error-ratio budget, or a hit-rate floor —
+//! and is evaluated against a [`RegistrySnapshot`] *window*: the
+//! [`RegistrySnapshot::delta`] between two points in time, so a burst an
+//! hour ago cannot mask a violation happening now. The [`SloTracker`]
+//! retains a short snapshot history and evaluates every objective over
+//! several look-back windows at once (the classic multi-window burn-rate
+//! alerting shape): a short window catches fast burns, a long window
+//! catches slow ones.
+//!
+//! **Burn rate** is "how fast the error budget is being consumed",
+//! normalized so `1.0` = exactly at target:
+//! - quantile ceilings: `observed_quantile / max`;
+//! - ratio budgets (e.g. deadline misses): `bad_ratio / budget`;
+//! - rate floors (e.g. cache hit-rate): `(1 - rate) / (1 - floor)`.
+//!
+//! A window with no eligible samples is `no_data`, never a failure —
+//! an idle engine is not out of SLO. Reports export as JSON (the `slo`
+//! section of `BENCH_*.json` and the `/slo` endpoint) and as gauges
+//! (`slo_ok`, `slo_status{slo=...}`, `slo_burn_milli{slo=...,window=...}`)
+//! so a scraper can alert on them directly.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::hist::HistoSnapshot;
+use super::registry::{MetricsRegistry, RegistrySnapshot};
+
+/// Burn rates are capped here so a JSON export never carries an
+/// infinity (e.g. a miss ratio against a zero budget).
+pub const BURN_CAP: f64 = 1e6;
+
+/// What an objective measures over a snapshot window. Metric selectors
+/// are *prefixes* into the flat metric namespace, so one objective can
+/// aggregate a labeled family (`serve_request_ns{` merges every path's
+/// latency histogram).
+#[derive(Clone, Debug)]
+pub enum SloKind {
+    /// `quantile(q)` of the merged histograms matching `histo_prefix`
+    /// must stay at or below `max`.
+    QuantileMax { histo_prefix: String, q: f64, max: u64 },
+    /// `Σ num / Σ den` (counter prefix sums) must stay at or below
+    /// `budget`.
+    RatioMax { num: Vec<String>, den: Vec<String>, budget: f64 },
+    /// `Σ num / Σ den` must stay at or above `floor` (< 1.0).
+    RatioMin { num: Vec<String>, den: Vec<String>, floor: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct SloObjective {
+    pub name: String,
+    pub kind: SloKind,
+}
+
+/// A named set of objectives — what a deployment declares once and every
+/// exporter (EngineReport, bench records, `/slo`) evaluates.
+#[derive(Clone, Debug, Default)]
+pub struct SloSet {
+    pub objectives: Vec<SloObjective>,
+}
+
+impl SloSet {
+    /// Default objectives for the serving engine's `serve_*` taxonomy.
+    /// Targets are generous enough for shared CI runners; deployments
+    /// with real latency contracts should declare their own set.
+    pub fn serve_default() -> SloSet {
+        let s = |x: &str| x.to_string();
+        SloSet {
+            objectives: vec![
+                SloObjective {
+                    name: s("serve_p99_latency"),
+                    kind: SloKind::QuantileMax {
+                        histo_prefix: s("serve_request_ns{"),
+                        q: 0.99,
+                        max: 250_000_000, // 250 ms end-to-end
+                    },
+                },
+                SloObjective {
+                    name: s("serve_deadline_miss"),
+                    kind: SloKind::RatioMax {
+                        num: vec![s("serve_deadline_miss_total")],
+                        den: vec![s("serve_requests_total{path=")],
+                        budget: 0.05,
+                    },
+                },
+                SloObjective {
+                    name: s("serve_cache_hit_rate"),
+                    kind: SloKind::RatioMin {
+                        num: vec![s("serve_cache_hits_total")],
+                        den: vec![s("serve_cache_hits_total"), s("serve_cache_misses_total")],
+                        floor: 0.25,
+                    },
+                },
+            ],
+        }
+    }
+
+    /// Default objectives over the process-wide `kernel_*`/`store_*`
+    /// taxonomy (the benches that have no serving engine). Objectives
+    /// whose metrics were never recorded report `no_data`.
+    pub fn global_default() -> SloSet {
+        let s = |x: &str| x.to_string();
+        SloSet {
+            objectives: vec![
+                SloObjective {
+                    name: s("store_append_p99"),
+                    kind: SloKind::QuantileMax {
+                        histo_prefix: s("store_append_ns"),
+                        q: 0.99,
+                        max: 100_000_000, // 100 ms per synced append
+                    },
+                },
+                SloObjective {
+                    name: s("store_spill_read_p99"),
+                    kind: SloKind::QuantileMax {
+                        histo_prefix: s("store_spill_read_ns"),
+                        q: 0.99,
+                        max: 250_000_000,
+                    },
+                },
+                SloObjective {
+                    name: s("kernel_gemm_p99"),
+                    kind: SloKind::QuantileMax {
+                        histo_prefix: s("kernel_gemm_ns{"),
+                        q: 0.99,
+                        max: 500_000_000,
+                    },
+                },
+            ],
+        }
+    }
+
+    /// Evaluate every objective over one whole-run window (the delta
+    /// from an empty registry, i.e. the run's full activity). This is
+    /// the `slo` section of [`crate::serve::EngineReport`] and the bench
+    /// records.
+    pub fn eval_total(&self, snap: &RegistrySnapshot, wall: Duration) -> SloReport {
+        let windows = vec![("total".to_string(), wall.as_secs_f64(), snap.clone())];
+        eval_windows(self, &windows)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloStatus {
+    Pass,
+    Fail,
+    /// No eligible samples in the window — idle is not a violation.
+    NoData,
+}
+
+impl SloStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloStatus::Pass => "pass",
+            SloStatus::Fail => "fail",
+            SloStatus::NoData => "no_data",
+        }
+    }
+
+    /// Gauge encoding: pass=1, fail=0, no_data=2.
+    fn code(self) -> u64 {
+        match self {
+            SloStatus::Pass => 1,
+            SloStatus::Fail => 0,
+            SloStatus::NoData => 2,
+        }
+    }
+}
+
+/// One objective × one look-back window.
+#[derive(Clone, Debug)]
+pub struct WindowEval {
+    /// Window label (`"10s"`, `"60s"`, `"total"`).
+    pub window: String,
+    /// Actual covered span in seconds (a young tracker covers less than
+    /// the nominal window).
+    pub seconds: f64,
+    pub status: SloStatus,
+    pub burn_rate: f64,
+    pub observed: f64,
+    pub target: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ObjectiveReport {
+    pub name: String,
+    /// Fail if any window fails; no_data only if every window is.
+    pub status: SloStatus,
+    pub windows: Vec<WindowEval>,
+}
+
+/// Pass/fail summary across a whole [`SloSet`].
+#[derive(Clone, Debug, Default)]
+pub struct SloReport {
+    pub objectives: Vec<ObjectiveReport>,
+}
+
+impl SloReport {
+    /// True when no objective failed (no_data counts as ok).
+    pub fn ok(&self) -> bool {
+        self.objectives.iter().all(|o| o.status != SloStatus::Fail)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let objectives = self
+            .objectives
+            .iter()
+            .map(|o| {
+                let windows = o
+                    .windows
+                    .iter()
+                    .map(|w| {
+                        Json::obj(vec![
+                            ("window", Json::Str(w.window.clone())),
+                            ("seconds", Json::Num(w.seconds)),
+                            ("status", Json::Str(w.status.name().to_string())),
+                            ("burn_rate", Json::Num(w.burn_rate)),
+                            ("observed", Json::Num(w.observed)),
+                            ("target", Json::Num(w.target)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("name", Json::Str(o.name.clone())),
+                    ("status", Json::Str(o.status.name().to_string())),
+                    ("windows", Json::Arr(windows)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("objectives", Json::Arr(objectives)),
+        ])
+    }
+
+    /// Export the summary as gauges so `/metrics` scrapers can alert on
+    /// SLO state without parsing JSON: `slo_ok`, per-objective
+    /// `slo_status{slo=...}` (1 pass / 0 fail / 2 no_data) and
+    /// per-window `slo_burn_milli{slo=...,window=...}`.
+    pub fn export_gauges(&self, reg: &MetricsRegistry) {
+        reg.gauge("slo_ok").set(self.ok() as u64);
+        for o in &self.objectives {
+            reg.gauge(&format!("slo_status{{slo=\"{}\"}}", o.name)).set(o.status.code());
+            for w in &o.windows {
+                let milli = (w.burn_rate * 1000.0).min(BURN_CAP) as u64;
+                reg.gauge(&format!("slo_burn_milli{{slo=\"{}\",window=\"{}\"}}", o.name, w.window))
+                    .set(milli);
+            }
+        }
+    }
+}
+
+fn sum_matching(snap: &RegistrySnapshot, prefixes: &[String]) -> u64 {
+    snap.counters
+        .iter()
+        .filter(|(k, _)| prefixes.iter().any(|p| k.starts_with(p.as_str())))
+        .map(|(_, &v)| v)
+        .sum()
+}
+
+fn merged_matching(snap: &RegistrySnapshot, prefix: &str) -> HistoSnapshot {
+    let mut out = HistoSnapshot::default();
+    for (name, h) in &snap.histograms {
+        if name.starts_with(prefix) {
+            out.merge(h);
+        }
+    }
+    out
+}
+
+/// Evaluate one objective over one window delta. Returns
+/// `(status, burn_rate, observed, target)`.
+fn eval_objective(obj: &SloObjective, window: &RegistrySnapshot) -> (SloStatus, f64, f64, f64) {
+    let (burn, observed, target, has_data) = match &obj.kind {
+        SloKind::QuantileMax { histo_prefix, q, max } => {
+            let h = merged_matching(window, histo_prefix);
+            let observed = h.quantile(*q) as f64;
+            let target = *max as f64;
+            (observed / target.max(1.0), observed, target, !h.is_empty())
+        }
+        SloKind::RatioMax { num, den, budget } => {
+            let n = sum_matching(window, num) as f64;
+            let d = sum_matching(window, den) as f64;
+            let ratio = if d > 0.0 { n / d } else { 0.0 };
+            let burn = if *budget > 0.0 {
+                ratio / budget
+            } else if ratio > 0.0 {
+                BURN_CAP
+            } else {
+                0.0
+            };
+            (burn, ratio, *budget, d > 0.0)
+        }
+        SloKind::RatioMin { num, den, floor } => {
+            let n = sum_matching(window, num) as f64;
+            let d = sum_matching(window, den) as f64;
+            let rate = if d > 0.0 { n / d } else { 0.0 };
+            let slack = (1.0 - floor).max(f64::EPSILON);
+            ((1.0 - rate) / slack, rate, *floor, d > 0.0)
+        }
+    };
+    let burn = burn.min(BURN_CAP);
+    if !has_data {
+        (SloStatus::NoData, 0.0, observed, target)
+    } else if burn > 1.0 {
+        (SloStatus::Fail, burn, observed, target)
+    } else {
+        (SloStatus::Pass, burn, observed, target)
+    }
+}
+
+/// Evaluate a set over pre-computed `(label, seconds, delta)` windows.
+fn eval_windows(set: &SloSet, windows: &[(String, f64, RegistrySnapshot)]) -> SloReport {
+    let objectives = set
+        .objectives
+        .iter()
+        .map(|obj| {
+            let evals: Vec<WindowEval> = windows
+                .iter()
+                .map(|(label, seconds, delta)| {
+                    let (status, burn_rate, observed, target) = eval_objective(obj, delta);
+                    WindowEval {
+                        window: label.clone(),
+                        seconds: *seconds,
+                        status,
+                        burn_rate,
+                        observed,
+                        target,
+                    }
+                })
+                .collect();
+            let status = if evals.iter().any(|w| w.status == SloStatus::Fail) {
+                SloStatus::Fail
+            } else if evals.iter().all(|w| w.status == SloStatus::NoData) {
+                SloStatus::NoData
+            } else {
+                SloStatus::Pass
+            };
+            ObjectiveReport {
+                name: obj.name.clone(),
+                status,
+                windows: evals,
+            }
+        })
+        .collect();
+    SloReport { objectives }
+}
+
+fn window_label(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 && s.fract() == 0.0 {
+        format!("{}s", s as u64)
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+/// Multi-window burn-rate tracker: feed it registry snapshots over time
+/// ([`SloTracker::observe`]), read back per-window evaluations
+/// ([`SloTracker::report`]). The `/slo` endpoint observes lazily on each
+/// request — no dedicated ticker thread. History is pruned to the
+/// longest window, so memory is bounded by scrape frequency × horizon.
+pub struct SloTracker {
+    set: SloSet,
+    /// Nominal look-back windows, e.g. `[10s, 60s]`.
+    windows: Vec<Duration>,
+    history: Mutex<VecDeque<(Instant, RegistrySnapshot)>>,
+}
+
+impl SloTracker {
+    pub fn new(set: SloSet, windows: Vec<Duration>) -> SloTracker {
+        SloTracker {
+            set,
+            windows: if windows.is_empty() {
+                vec![Duration::from_secs(10), Duration::from_secs(60)]
+            } else {
+                windows
+            },
+            history: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn set(&self) -> &SloSet {
+        &self.set
+    }
+
+    /// Record a snapshot at `now` and prune history past the longest
+    /// window (one entry at-or-before the horizon is retained so the
+    /// longest window always has a baseline).
+    pub fn observe(&self, now: Instant, snap: RegistrySnapshot) {
+        let horizon = self.windows.iter().copied().max().unwrap_or(Duration::from_secs(60));
+        let mut h = self.history.lock().unwrap();
+        h.push_back((now, snap));
+        while h.len() >= 2 {
+            let second_age = now.saturating_duration_since(h[1].0);
+            if second_age >= horizon {
+                h.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Evaluate every objective over every window ending at the newest
+    /// observation. A window whose nominal span predates the oldest
+    /// retained snapshot evaluates over what is covered (its `seconds`
+    /// says how much); with fewer than two observations everything is
+    /// `no_data`.
+    pub fn report(&self, now: Instant) -> SloReport {
+        let h = self.history.lock().unwrap();
+        let Some((newest_t, newest)) = h.back() else {
+            return eval_windows(&self.set, &[]);
+        };
+        let windows: Vec<(String, f64, RegistrySnapshot)> = self
+            .windows
+            .iter()
+            .map(|&w| {
+                let start = now.checked_sub(w);
+                // Newest observation at-or-before the window start; falls
+                // back to the oldest retained one.
+                let base = h
+                    .iter()
+                    .rev()
+                    .find(|(t, _)| start.map(|s| *t <= s).unwrap_or(false))
+                    .or_else(|| h.front())
+                    .expect("history is non-empty");
+                let seconds = newest_t.saturating_duration_since(base.0).as_secs_f64();
+                (window_label(w), seconds, newest.delta(&base.1))
+            })
+            .collect();
+        eval_windows(&self.set, &windows)
+    }
+
+    /// Convenience for endpoint handlers: observe `snap` now, then
+    /// report.
+    pub fn observe_and_report(&self, snap: RegistrySnapshot) -> SloReport {
+        let now = Instant::now();
+        self.observe(now, snap);
+        self.report(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_like_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        let lat = reg.histogram("serve_request_ns{path=\"cached_dense\"}");
+        for i in 0..100u64 {
+            lat.record(1_000_000 + i); // ~1 ms, far under the 250 ms ceiling
+        }
+        reg.counter("serve_requests_total{path=\"cached_dense\"}").add(100);
+        reg.counter("serve_deadline_miss_total").add(1); // 1% < 5% budget
+        reg.counter("serve_cache_hits_total").add(80);
+        reg.counter("serve_cache_misses_total").add(20);
+        reg
+    }
+
+    #[test]
+    fn total_eval_passes_a_healthy_run_and_fails_a_burned_budget() {
+        let set = SloSet::serve_default();
+        let reg = serve_like_registry();
+        let report = set.eval_total(&reg.snapshot(), Duration::from_secs(1));
+        assert!(report.ok(), "healthy run must pass: {:?}", report.objectives);
+        for o in &report.objectives {
+            assert_eq!(o.status, SloStatus::Pass, "{}", o.name);
+            assert_eq!(o.windows.len(), 1);
+            assert!(o.windows[0].burn_rate <= 1.0, "{}: {}", o.name, o.windows[0].burn_rate);
+        }
+
+        // Burn the deadline budget: 20/120 misses > 5%.
+        reg.counter("serve_deadline_miss_total").add(19);
+        reg.counter("serve_requests_total{path=\"cached_dense\"}").add(20);
+        let report = set.eval_total(&reg.snapshot(), Duration::from_secs(1));
+        assert!(!report.ok());
+        let miss = report.objectives.iter().find(|o| o.name == "serve_deadline_miss").unwrap();
+        assert_eq!(miss.status, SloStatus::Fail);
+        assert!(miss.windows[0].burn_rate > 1.0);
+    }
+
+    #[test]
+    fn empty_window_is_no_data_not_a_failure() {
+        let set = SloSet::serve_default();
+        let report = set.eval_total(&RegistrySnapshot::default(), Duration::from_secs(1));
+        assert!(report.ok(), "idle is never out of SLO");
+        for o in &report.objectives {
+            assert_eq!(o.status, SloStatus::NoData, "{}", o.name);
+        }
+    }
+
+    #[test]
+    fn tracker_windows_isolate_recent_burns() {
+        // Timeline (fabricated instants, no sleeping): a healthy minute,
+        // then a 10-second burst of deadline misses. The short window
+        // fails; the long window has absorbed enough good traffic that
+        // its budget holds.
+        let set = SloSet {
+            objectives: vec![SloObjective {
+                name: "miss".into(),
+                kind: SloKind::RatioMax {
+                    num: vec!["serve_deadline_miss_total".into()],
+                    den: vec!["serve_requests_total{path=".into()],
+                    budget: 0.10,
+                },
+            }],
+        };
+        let tracker =
+            SloTracker::new(set, vec![Duration::from_secs(10), Duration::from_secs(120)]);
+        let reg = MetricsRegistry::new();
+        let req = reg.counter("serve_requests_total{path=\"cached_dense\"}");
+        let miss = reg.counter("serve_deadline_miss_total");
+
+        let t0 = Instant::now();
+        tracker.observe(t0, reg.snapshot());
+        req.add(1000); // 60 s of clean traffic
+        let t1 = t0 + Duration::from_secs(60);
+        tracker.observe(t1, reg.snapshot());
+        req.add(100);
+        miss.add(50); // 50% misses in the last 10 s
+        let t2 = t1 + Duration::from_secs(10);
+        tracker.observe(t2, reg.snapshot());
+
+        let report = tracker.report(t2);
+        let obj = &report.objectives[0];
+        let short = obj.windows.iter().find(|w| w.window == "10s").unwrap();
+        let long = obj.windows.iter().find(|w| w.window == "120s").unwrap();
+        assert_eq!(short.status, SloStatus::Fail, "burst must trip the short window");
+        assert!(short.burn_rate > 1.0);
+        assert_eq!(long.status, SloStatus::Pass, "long window absorbs the burst");
+        assert!(!report.ok(), "any failing window fails the report");
+    }
+
+    #[test]
+    fn report_json_and_gauge_export_shapes() {
+        let set = SloSet::serve_default();
+        let reg = serve_like_registry();
+        let report = set.eval_total(&reg.snapshot(), Duration::from_secs(2));
+        let j = report.to_json();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+        let objs = j.get("objectives").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(objs.len(), 3);
+        for o in objs {
+            assert!(o.get("name").is_some());
+            let status = o.get("status").and_then(|s| s.as_str()).unwrap();
+            assert!(["pass", "fail", "no_data"].contains(&status));
+            let ws = o.get("windows").and_then(|w| w.as_arr()).unwrap();
+            assert!(!ws.is_empty());
+            for w in ws {
+                assert!(w.get("burn_rate").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+                assert!(w.get("target").is_some());
+            }
+        }
+        let out = MetricsRegistry::new();
+        report.export_gauges(&out);
+        let snap = out.snapshot();
+        assert_eq!(snap.gauges["slo_ok"], 1);
+        assert_eq!(snap.gauges["slo_status{slo=\"serve_p99_latency\"}"], 1);
+        assert!(snap
+            .gauges
+            .contains_key("slo_burn_milli{slo=\"serve_p99_latency\",window=\"total\"}"));
+    }
+
+    #[test]
+    fn young_tracker_reports_no_data() {
+        let tracker = SloTracker::new(SloSet::serve_default(), vec![Duration::from_secs(10)]);
+        let report = tracker.report(Instant::now());
+        assert!(report.ok());
+        // One observation: every window's delta is empty.
+        let reg = serve_like_registry();
+        let now = Instant::now();
+        tracker.observe(now, reg.snapshot());
+        let report = tracker.report(now);
+        for o in &report.objectives {
+            assert_eq!(o.status, SloStatus::NoData, "{}", o.name);
+        }
+    }
+}

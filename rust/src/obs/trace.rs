@@ -68,6 +68,13 @@ pub struct Trace {
     pub tenant: u64,
     /// `ServePath` wire name the request took.
     pub path: &'static str,
+    /// Submit time in nanoseconds since the owning engine's epoch —
+    /// what places the request on a common timeline in the Chrome-trace
+    /// export ([`crate::obs::chrome`]).
+    pub start_ns: u64,
+    /// Index of the worker thread that served the batch (one Chrome
+    /// `tid` per worker).
+    pub worker: u32,
     pub total_ns: u64,
     /// Nanoseconds per stage, indexed by [`Stage::index`]; 0 = stage not
     /// entered.
@@ -87,6 +94,8 @@ impl Trace {
             ("seq", Json::Num(self.seq as f64)),
             ("tenant", Json::Num(self.tenant as f64)),
             ("path", Json::Str(self.path.to_string())),
+            ("start_ns", Json::Num(self.start_ns as f64)),
+            ("worker", Json::Num(self.worker as f64)),
             ("total_ns", Json::Num(self.total_ns as f64)),
             ("stage_ns", stages),
         ])
@@ -171,6 +180,8 @@ mod tests {
             seq: 0,
             tenant,
             path: "cached_dense",
+            start_ns: 100 * tenant,
+            worker: (tenant % 3) as u32,
             total_ns: 10 * tenant + 1,
             stage_ns: [tenant, 0, 0, 0, 1, 2],
         }

@@ -26,7 +26,7 @@
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -37,6 +37,8 @@ use crate::adapter::gsoft::gs_cost_model;
 use crate::adapter::{AdapterFamily, CostModel, LayerOp};
 use crate::kernel::KernelCtx;
 use crate::linalg::Mat;
+use crate::obs::http::{HealthCheck, HealthReport, ObsSources};
+use crate::obs::slo::{SloReport, SloSet, SloTracker};
 use crate::obs::{
     Counter, Histo, HistoSnapshot, MetricsRegistry, RegistrySnapshot, Stage, Trace, TraceRing,
 };
@@ -164,6 +166,11 @@ pub struct EngineOpts {
     pub spill_dir: Option<PathBuf>,
     /// Byte cap on the spill tier's directory.
     pub spill_budget_bytes: u64,
+    /// Capacity of the recent-trace ring ([`Engine::traces`], the
+    /// `/tracez` endpoint, `gsoft trace`). Deployments chasing tail
+    /// latency raise it; memory cost is one fixed-size [`Trace`] per
+    /// slot.
+    pub trace_ring_cap: usize,
 }
 
 impl Default for EngineOpts {
@@ -178,6 +185,7 @@ impl Default for EngineOpts {
             kernel: KernelCtx::default(),
             spill_dir: None,
             spill_budget_bytes: 256 << 20,
+            trace_ring_cap: TRACE_RING_CAP,
         }
     }
 }
@@ -290,8 +298,9 @@ fn path_index(p: ServePath) -> usize {
     }
 }
 
-/// Recent request traces retained for post-hoc tail inspection
-/// ([`Engine::traces`], `gsoft metrics`).
+/// Default capacity of the recent-trace ring
+/// ([`EngineOpts::trace_ring_cap`]): traces retained for post-hoc tail
+/// inspection ([`Engine::traces`], `gsoft metrics`, `/tracez`).
 pub const TRACE_RING_CAP: usize = 256;
 
 struct PathObs {
@@ -325,7 +334,7 @@ struct EngineObs {
 }
 
 impl EngineObs {
-    fn new() -> EngineObs {
+    fn new(trace_cap: usize) -> EngineObs {
         let registry = Arc::new(MetricsRegistry::new());
         let paths = PATHS.map(|p| PathObs {
             count: registry.counter(&format!("serve_requests_total{{path=\"{}\"}}", p.name())),
@@ -343,7 +352,7 @@ impl EngineObs {
             family_requests: Mutex::new(HashMap::new()),
             family_service: Mutex::new(HashMap::new()),
             family_of: Mutex::new(HashMap::new()),
-            traces: TraceRing::new(TRACE_RING_CAP),
+            traces: TraceRing::new(trace_cap),
             registry,
         }
     }
@@ -449,7 +458,11 @@ pub struct EngineReport {
     /// Full metric dump (`serve_*` taxonomy) — the `obs` section of
     /// `BENCH_serve.json` and the engine's share of `gsoft metrics`.
     pub obs: RegistrySnapshot,
-    /// The newest [`TRACE_RING_CAP`] request traces, newest first.
+    /// Whole-run SLO verdict ([`SloSet::serve_default`] evaluated over
+    /// the final metric dump) — the `slo` section of `BENCH_serve.json`.
+    pub slo: SloReport,
+    /// The newest [`EngineOpts::trace_ring_cap`] request traces, newest
+    /// first.
     pub traces: Vec<Trace>,
 }
 
@@ -482,6 +495,24 @@ struct Shared {
     queue: WorkQueue<Batch<Job>>,
     obs: EngineObs,
     shutting_down: AtomicBool,
+    /// Engine birth — the zero point of every trace's `start_ns`
+    /// timeline (what the Chrome export plots against).
+    epoch: Instant,
+    /// Live worker-thread count for the `/healthz` probe; incremented
+    /// before each spawn, decremented by [`WorkerAlive`] on any exit.
+    workers_alive: AtomicUsize,
+    workers_spawned: usize,
+}
+
+/// Decrements `workers_alive` when a worker exits for *any* reason —
+/// normal queue close or an unwinding panic — so the `/healthz` worker
+/// probe can never overcount.
+struct WorkerAlive(Arc<Shared>);
+
+impl Drop for WorkerAlive {
+    fn drop(&mut self) {
+        self.0.workers_alive.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// The serving engine. `submit` is thread-safe; drop or [`Engine::finish`]
@@ -574,7 +605,7 @@ impl Engine {
             None => None,
         };
 
-        let obs = EngineObs::new();
+        let obs = EngineObs::new(opts.trace_ring_cap);
         let families: Vec<(&'static str, u64, u64)> = per_family
             .iter()
             .map(|(&tag, &(n, sum_q, _))| (tag, n, ((sum_q + n / 2) / n.max(1)) * d as u64))
@@ -614,14 +645,19 @@ impl Engine {
             queue: WorkQueue::new(),
             obs,
             shutting_down: AtomicBool::new(false),
+            epoch: Instant::now(),
+            workers_alive: AtomicUsize::new(0),
+            workers_spawned: opts.workers.max(1),
         });
 
         let workers = (0..opts.workers.max(1))
-            .map(|_| {
+            .map(|w| {
+                shared.workers_alive.fetch_add(1, Ordering::SeqCst);
                 let sh = Arc::clone(&shared);
                 std::thread::spawn(move || {
+                    let _alive = WorkerAlive(Arc::clone(&sh));
                     while let Some(batch) = sh.queue.pop() {
-                        process_batch(&sh, batch);
+                        process_batch(&sh, batch, w as u32);
                     }
                 })
             })
@@ -733,6 +769,38 @@ impl Engine {
         self.shared.spill.as_ref().map(|s| s.lock().unwrap().stats())
     }
 
+    /// Point-in-time health probes — the `/healthz` payload: still
+    /// accepting, worker pool alive, spill dir writable, store log tail
+    /// acked.
+    pub fn health(&self) -> HealthReport {
+        health_of(&self.shared)
+    }
+
+    /// Scrape sources for the HTTP exporter
+    /// ([`crate::obs::http::ObsServer::bind`]). Each closure captures the
+    /// shared engine state, so the exporter thread is independent of
+    /// `&self` lifetimes and can be shut down separately from the engine.
+    /// The metrics source merges the process-wide registry when `--obs`
+    /// is on, so one scrape sees the `serve_*`, `kernel_*` and `store_*`
+    /// taxonomies together.
+    pub fn obs_sources(&self) -> ObsSources {
+        let m = Arc::clone(&self.shared);
+        let t = Arc::clone(&self.shared);
+        let h = Arc::clone(&self.shared);
+        ObsSources {
+            metrics: Box::new(move || {
+                let mut snap = m.obs.registry.snapshot();
+                if crate::obs::enabled() {
+                    snap.merge(&crate::obs::global().snapshot());
+                }
+                snap
+            }),
+            traces: Box::new(move || t.obs.traces.snapshot()),
+            health: Box::new(move || health_of(&h)),
+            slo: SloTracker::new(SloSet::serve_default(), Vec::new()),
+        }
+    }
+
     fn shutdown(&mut self) {
         if self.shared.shutting_down.swap(true, Ordering::SeqCst) {
             return;
@@ -753,14 +821,70 @@ impl Engine {
     /// Drain pending work, join workers, and return the final report.
     pub fn finish(mut self) -> EngineReport {
         self.shutdown();
+        // Evaluate the whole-run SLO verdict over the final metric dump,
+        // export it as gauges, then take the report's dump — so `obs`
+        // carries the `slo_*` gauges a scraper would have seen.
+        let wall = self.shared.epoch.elapsed();
+        let slo = SloSet::serve_default().eval_total(&self.obs_snapshot(), wall);
+        slo.export_gauges(&self.shared.obs.registry);
         EngineReport {
             metrics: self.metrics(),
             cache: self.cache_stats(),
             spill: self.spill_stats(),
             obs: self.obs_snapshot(),
+            slo,
             traces: self.traces(),
         }
     }
+}
+
+/// `/healthz` probes, shared by [`Engine::health`] and the exporter's
+/// health source (which outlives the `Engine` handle).
+fn health_of(sh: &Shared) -> HealthReport {
+    let mut checks = Vec::new();
+    let accepting = !sh.shutting_down.load(Ordering::SeqCst);
+    checks.push(HealthCheck {
+        name: "accepting".to_string(),
+        ok: accepting,
+        detail: if accepting { "accepting submissions" } else { "shutting down" }.to_string(),
+    });
+    let alive = sh.workers_alive.load(Ordering::SeqCst);
+    checks.push(HealthCheck {
+        name: "workers".to_string(),
+        ok: alive > 0,
+        detail: format!("{alive}/{} alive", sh.workers_spawned),
+    });
+    let (ok, detail) = match &sh.spill {
+        Some(tier) => {
+            let ok = tier.lock().unwrap().probe_writable();
+            (ok, if ok { "spill dir writable" } else { "spill dir NOT writable" }.to_string())
+        }
+        None => (true, "no spill tier mounted".to_string()),
+    };
+    checks.push(HealthCheck {
+        name: "spill_dir".to_string(),
+        ok,
+        detail,
+    });
+    let (ok, detail) = match sh.registry.store_health() {
+        Some(h) => (
+            h.ok(),
+            format!(
+                "{} tenants, {:.0}% garbage, torn tail {} B, dir {}",
+                h.tenants,
+                h.garbage_ratio * 100.0,
+                h.truncated_tail_bytes,
+                if h.dir_writable { "writable" } else { "NOT writable" },
+            ),
+        ),
+        None => (true, "in-memory registry (no store)".to_string()),
+    };
+    checks.push(HealthCheck {
+        name: "store_log".to_string(),
+        ok,
+        detail,
+    });
+    HealthReport { checks }
 }
 
 impl Drop for Engine {
@@ -1006,7 +1130,7 @@ fn serve_batch(
     Ok((y, ServePath::Factorized, timer.ns))
 }
 
-fn process_batch(sh: &Shared, batch: Batch<Job>) {
+fn process_batch(sh: &Shared, batch: Batch<Job>, worker: u32) {
     sh.obs.batches.inc();
     let service_start = Instant::now();
     // Contain panics from the linear algebra: a poisoned batch must fail
@@ -1049,6 +1173,9 @@ fn process_batch(sh: &Shared, batch: Batch<Job>) {
                     seq: 0, // stamped by the ring
                     tenant: batch.tenant,
                     path: path.name(),
+                    start_ns: job.submitted_at.saturating_duration_since(sh.epoch).as_nanos()
+                        as u64,
+                    worker,
                     total_ns,
                     stage_ns: trace_ns,
                 });
@@ -1094,6 +1221,7 @@ mod tests {
             kernel: KernelCtx::default(),
             spill_dir: None,
             spill_budget_bytes: 16 << 20,
+            trace_ring_cap: TRACE_RING_CAP,
         }
     }
 
@@ -1172,6 +1300,61 @@ mod tests {
         let engine = Engine::new(reg, quick_opts()).unwrap();
         assert!(engine.submit(99, vec![0.0; 8]).is_err(), "unknown tenant");
         assert!(engine.submit(0, vec![0.0; 5]).is_err(), "wrong dimension");
+    }
+
+    #[test]
+    fn trace_ring_cap_is_configurable_and_traces_carry_worker_and_start() {
+        let reg = synthetic(2, 1, 8, 2, 21).unwrap();
+        let mut opts = quick_opts();
+        opts.trace_ring_cap = 4;
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        for _ in 0..12 {
+            engine.submit(0, vec![0.2; d]).unwrap().wait().unwrap();
+        }
+        let report = engine.finish();
+        assert_eq!(report.traces.len(), 4, "ring holds exactly the configured cap");
+        let newest = &report.traces[0];
+        assert!(newest.seq >= 8, "newest-first snapshot");
+        assert!((newest.worker as usize) < 2, "worker index within the pool");
+        // Sequential submissions: later seq ⇒ later start on the epoch
+        // timeline (what the Chrome export plots).
+        for w in report.traces.windows(2) {
+            assert!(w[0].seq > w[1].seq);
+            assert!(w[0].start_ns >= w[1].start_ns);
+        }
+    }
+
+    #[test]
+    fn health_is_ok_on_a_live_engine() {
+        let reg = synthetic(2, 1, 8, 2, 22).unwrap();
+        let engine = Engine::new(reg, quick_opts()).unwrap();
+        let d = engine.input_dim();
+        engine.submit(0, vec![0.1; d]).unwrap().wait().unwrap();
+        let health = engine.health();
+        assert!(health.ok(), "{:?}", health.checks);
+        let names: Vec<&str> = health.checks.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["accepting", "workers", "spill_dir", "store_log"]);
+        assert!(health.checks.iter().all(|c| !c.detail.is_empty()));
+    }
+
+    #[test]
+    fn finish_report_carries_a_slo_verdict_and_gauges() {
+        use crate::obs::slo::SloStatus;
+        let reg = synthetic(2, 1, 8, 2, 23).unwrap();
+        let engine = Engine::new(reg, quick_opts()).unwrap();
+        let d = engine.input_dim();
+        for _ in 0..4 {
+            engine.submit(0, vec![0.1; d]).unwrap().wait().unwrap();
+        }
+        let report = engine.finish();
+        assert_eq!(report.slo.objectives.len(), 3);
+        let p99 =
+            report.slo.objectives.iter().find(|o| o.name == "serve_p99_latency").unwrap();
+        assert_ne!(p99.status, SloStatus::NoData, "requests flowed");
+        // The verdict is exported into the final metric dump as gauges.
+        assert!(report.obs.gauges.contains_key("slo_ok"));
+        assert!(report.obs.gauges.contains_key("slo_status{slo=\"serve_deadline_miss\"}"));
     }
 
     #[test]

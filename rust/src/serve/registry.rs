@@ -102,6 +102,12 @@ impl Registry {
         self.store.is_some()
     }
 
+    /// Health probe of the backing store, if any (`/healthz`). `None`
+    /// for in-memory registries — which are vacuously healthy.
+    pub fn store_health(&self) -> Option<crate::store::StoreHealth> {
+        self.store.as_ref().map(|s| s.lock().unwrap().health())
+    }
+
     /// Register (or replace) a tenant's adapter. Validates
     /// ([`Registry::validate`]), then — in store-backed mode — durably
     /// appends to the segment log *before* the in-RAM insert, so an

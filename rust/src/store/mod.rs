@@ -132,6 +132,46 @@ impl AdapterStore {
     pub fn file_bytes(&self) -> u64 {
         self.log.file_bytes()
     }
+
+    /// Point-in-time health probe for the `/healthz` endpoint.
+    pub fn health(&self) -> StoreHealth {
+        let probe = self.dir.join(".gsoft.healthz.probe");
+        let dir_writable = match std::fs::write(&probe, b"ok") {
+            Ok(()) => {
+                let _ = std::fs::remove_file(&probe);
+                true
+            }
+            Err(_) => false,
+        };
+        StoreHealth {
+            tenants: self.len(),
+            file_bytes: self.file_bytes(),
+            garbage_ratio: self.garbage_ratio(),
+            truncated_tail_bytes: self.log_stats().truncated_tail_bytes,
+            dir_writable,
+        }
+    }
+}
+
+/// Factor-tier health snapshot ([`AdapterStore::health`]).
+#[derive(Clone, Copy, Debug)]
+pub struct StoreHealth {
+    pub tenants: usize,
+    pub file_bytes: u64,
+    pub garbage_ratio: f64,
+    /// Bytes dropped at the last replay because the tail record was torn.
+    /// Non-zero means the *previous* process lost unacknowledged writes —
+    /// surfaced so operators notice crashy restarts, and treated as
+    /// unhealthy until a clean reopen clears it.
+    pub truncated_tail_bytes: u64,
+    /// Whether the store directory still accepts new files.
+    pub dir_writable: bool,
+}
+
+impl StoreHealth {
+    pub fn ok(&self) -> bool {
+        self.dir_writable && self.truncated_tail_bytes == 0
+    }
 }
 
 #[cfg(test)]

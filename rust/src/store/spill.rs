@@ -154,6 +154,21 @@ impl SpillTier {
         self.dir.join(format!("t{tenant}.gsad"))
     }
 
+    /// Health probe for `/healthz`: can the tier still create files in
+    /// its directory? Writes and removes a throwaway probe file (named so
+    /// neither the index rebuild nor the tmp-reaper on reopen would ever
+    /// pick it up); touches no index or budget state.
+    pub fn probe_writable(&self) -> bool {
+        let probe = self.dir.join(".gsoft.healthz.probe");
+        match std::fs::write(&probe, b"ok") {
+            Ok(()) => {
+                let _ = std::fs::remove_file(&probe);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
     /// Drop a tenant from the index and budget accounting. Does NOT
     /// unlink the file — callers decide (a same-tenant re-put leaves the
     /// old file in place for the rename to replace atomically).

@@ -1,0 +1,249 @@
+#!/usr/bin/env python
+"""Bench-regression gate: diff a fresh BENCH_*.json against a baseline.
+
+Usage:
+  bench_diff.py BASE.json FRESH.json [--update-out DIR]
+  bench_diff.py --self-test
+
+Walks both records in parallel and compares every leaf under per-metric
+noise rules, keyed on the dotted path of the leaf (first matching rule
+wins):
+
+  config.workers        ignored (machine-dependent core count)
+  config.* / smoke      exact match — a config drift is a different
+                        benchmark, not a regression
+  *_ns *_s *_us wall_s  noisy timing/throughput metrics: fresh may
+  throughput_rps mean   differ from base by up to 10x (relative) or
+  max p50 p95 p99 ...   1e6 absolute, whichever is larger — CI boxes
+  *_flops us_per*       are shared and slow, the gate catches order-of-
+                        magnitude regressions, not jitter
+  batches merges count  scheduling-dependent tallies: same 10x relative
+  *_evictions ...       band, but a floor of 16 instead of 1e6 (these
+                        live at count scale, not nanosecond scale)
+  other numbers         near-exact: |fresh - base| <= max(8, 1.0*|base|)
+                        (counts may drift slightly under batching races)
+  strings / booleans    exact
+
+Tolerance never blocks *improvement* reporting — both directions beyond
+the threshold fail, because an impossible 10x "speedup" on an unchanged
+workload usually means the benchmark broke.
+
+A baseline leaf of null is "unseeded": the committed skeleton doesn't
+pin that machine-dependent value yet. Unseeded leaves warn (never
+fail), and --update-out DIR writes the fresh record next to the
+skeleton's name for a human to review and commit as the new baseline.
+Keys present in the base but missing from the fresh record fail; new
+keys in the fresh record warn (additions need a baseline refresh, not a
+red build).
+
+--self-test runs a hermetic in-memory check of the rule table and exits.
+"""
+
+import json
+import os
+import re
+import sys
+
+# (pattern, kind) — first match on the dotted path wins.
+RULES = [
+    (re.compile(r"(^|\.)config\.workers$"), "ignore"),
+    (re.compile(r"(^|\.)tile\."), "ignore"),  # autotuned per machine
+    (re.compile(r"(^|\.)workers$"), "ignore"),
+    # Telemetry sections are structure-checked by check_obs.py; their
+    # hundreds of noisy leaves are not regression-gate material.
+    (re.compile(r"(^|\.)obs\."), "ignore"),
+    (re.compile(r"(^|\.)slo\."), "ignore"),
+    # Adaptive measurement-loop internals, not results.
+    (re.compile(r"(^|\.)(iters|elements)$"), "ignore"),
+    (re.compile(r"(^|\.)config\."), "exact"),
+    (re.compile(r"(^|\.)smoke$"), "exact"),
+    (re.compile(r"(^|\.)seed$"), "exact"),
+    # Sweep-grid dimensions inside configs[i] entries (kernel/conv/store
+    # benches): shape drift is a different benchmark.
+    (
+        re.compile(r"(^|\.)(d|b|m|batch|c|k|hw|groups|kind|tenants|hit_ratio|layers|block)$"),
+        "exact",
+    ),
+    (
+        re.compile(
+            r"(_ns|_s|_us|_rps|_flops|mean|max|p50|p95|p99|p999|us_per\w*|burn_rate|observed)$"
+        ),
+        "noisy",
+    ),
+    # Scheduling-dependent tallies: batch formation, cache residency and
+    # the cached/cold path split all move with worker timing. Same 10x
+    # relative band as timings but a small absolute floor — these live
+    # at count scale, not nanosecond scale.
+    (
+        re.compile(
+            r"(^|\.)(batches|merges|count|traces_recorded|spill_loads|spill_hits"
+            r"|spill_evictions|cache_evictions|cache_hit_rate)$"
+        ),
+        "tally",
+    ),
+    (re.compile(r"speedup"), "tally"),
+    (re.compile(r""), "count"),
+]
+TOLERANCES = {
+    "noisy": (10.0, 1e6),
+    "tally": (10.0, 16),
+    "count": (1.0, 8),
+}
+
+
+def classify(path):
+    for pat, kind in RULES:
+        if pat.search(path):
+            return kind
+    return "count"
+
+
+def leaves(node, prefix=""):
+    """Yield (dotted_path, leaf_value) pairs, recursing into dicts/lists."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from leaves(v, f"{prefix}.{k}" if prefix else k)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from leaves(v, f"{prefix}[{i}]")
+    else:
+        yield prefix, node
+
+
+def compare(base, fresh):
+    """Returns (failures, warnings) as lists of messages."""
+    failures, warnings = [], []
+    base_leaves = dict(leaves(base))
+    fresh_leaves = dict(leaves(fresh))
+    for path, bval in sorted(base_leaves.items()):
+        kind = classify(path)
+        if kind == "ignore":
+            continue
+        if path not in fresh_leaves:
+            failures.append(f"{path}: present in base, missing from fresh record")
+            continue
+        fval = fresh_leaves[path]
+        if bval is None:
+            warnings.append(f"{path}: unseeded in baseline (fresh = {fval!r})")
+            continue
+        if isinstance(bval, bool) or isinstance(bval, str):
+            if fval != bval:
+                failures.append(f"{path}: {bval!r} -> {fval!r} (exact field changed)")
+            continue
+        if not isinstance(fval, (int, float)) or isinstance(fval, bool):
+            failures.append(f"{path}: type changed ({bval!r} -> {fval!r})")
+            continue
+        if kind == "exact":
+            if fval != bval:
+                failures.append(f"{path}: {bval} -> {fval} (config/exact field changed)")
+            continue
+        rel, absolute = TOLERANCES[kind]
+        tol = max(absolute, rel * abs(bval))
+        if abs(fval - bval) > tol:
+            failures.append(
+                f"{path}: {bval} -> {fval} exceeds tolerance {tol:g} ({kind} metric)"
+            )
+    for path in sorted(set(fresh_leaves) - set(base_leaves)):
+        if classify(path) != "ignore":
+            warnings.append(f"{path}: new in fresh record (baseline refresh needed)")
+    return failures, warnings
+
+
+def self_test():
+    base = {
+        "config": {"requests": 192, "workers": 8, "smoke": True},
+        "wall_s": 1.0,
+        "p99_latency_ns": 4e6,
+        "batches": 30,
+        "registrations": 12,
+        "cache_evictions": 2,
+        "unseeded_metric": None,
+        "tag": "zipf",
+    }
+    ok = dict(base, wall_s=3.0, p99_latency_ns=3.5e7, batches=33, unseeded_metric=17)
+    ok["config"] = dict(base["config"], workers=2)
+    f, w = compare(base, ok)
+    assert not f, f"clean rerun flagged: {f}"
+    assert any("unseeded" in m for m in w), w
+
+    bad_cfg = dict(ok, config=dict(base["config"], requests=4096))
+    f, _ = compare(base, bad_cfg)
+    assert any("config.requests" in m for m in f), f
+
+    bad_time = dict(ok, p99_latency_ns=4e6 * 11 + 2e6)
+    f, _ = compare(base, bad_time)
+    assert any("p99_latency_ns" in m for m in f), f
+
+    bad_count = dict(ok, registrations=300)
+    f, _ = compare(base, bad_count)
+    assert any("registrations" in m for m in f), f
+
+    bad_batches = dict(ok, batches=30 * 10 + 100)  # beyond even the 10x noisy band
+    f, _ = compare(base, bad_batches)
+    assert any("batches" in m for m in f), f
+
+    missing = {k: v for k, v in ok.items() if k != "batches"}
+    f, _ = compare(base, missing)
+    assert any("missing from fresh" in m for m in f), f
+
+    extra = dict(ok, brand_new=1)
+    f, w = compare(base, extra)
+    assert not f and any("brand_new" in m for m in w), (f, w)
+
+    bad_str = dict(ok, tag="uniform")
+    f, _ = compare(base, bad_str)
+    assert any("tag" in m for m in f), f
+
+    nested = {"configs": [{"d": 64, "gemm_p50_us": 100.0}]}
+    f, _ = compare(nested, {"configs": [{"d": 64, "gemm_p50_us": 900.0}]})
+    assert not f, f
+    f, _ = compare(nested, {"configs": [{"d": 128, "gemm_p50_us": 100.0}]})
+    assert f, "config drift inside an array must fail"
+
+    print("[bench_diff] self-test PASS")
+    return 0
+
+
+def main(argv):
+    if "--self-test" in argv:
+        return self_test()
+    paths = [a for a in argv[1:] if not a.startswith("--")]
+    if len(paths) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    base_path, fresh_path = paths
+    update_out = None
+    if "--update-out" in argv:
+        update_out = argv[argv.index("--update-out") + 1]
+    if not os.path.exists(base_path):
+        print(f"[bench_diff] WARNING: baseline {base_path} missing, skipping", file=sys.stderr)
+        return 0
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    failures, warnings = compare(base, fresh)
+    for msg in warnings:
+        print(f"[bench_diff] WARNING {msg}", file=sys.stderr)
+    for msg in failures:
+        print(f"[bench_diff] FAIL {msg}", file=sys.stderr)
+    if update_out and not failures:
+        os.makedirs(update_out, exist_ok=True)
+        out = os.path.join(update_out, os.path.basename(base_path))
+        with open(out, "w") as f:
+            json.dump(fresh, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[bench_diff] refreshed baseline candidate written to {out}")
+    n = len(dict(leaves(base)))
+    if failures:
+        print(f"[bench_diff] {base_path} vs {fresh_path}: {len(failures)} regression(s)")
+        return 1
+    print(
+        f"[bench_diff] {base_path} vs {fresh_path}: OK "
+        f"({n} baseline leaves, {len(warnings)} warnings)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

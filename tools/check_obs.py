@@ -1,23 +1,37 @@
 #!/usr/bin/env python
-"""Sanity-check the `obs` telemetry section of a BENCH_*.json record.
+"""Sanity-check the `obs`/`slo` telemetry sections of BENCH_*.json records
+and (with --chrome) a Chrome trace-event export.
 
-Usage: check_obs.py BENCH_serve.json [BENCH_kernels.json ...]
+Usage: check_obs.py [--chrome trace.json] BENCH_serve.json [BENCH_*.json ...]
 
-For each record this asserts that the obs section is well-formed:
+For each record this asserts that the telemetry is well-formed:
   - `obs` exists with `counters` / `gauges` / `timings` objects;
   - the declared serve-side metric names are present (first file only is
     expected to be a serve-bench record; other records just need a
     structurally valid obs section);
+  - every `serve_stage_ns{stage="X"}` timing uses a stage name from the
+    fixed pipeline taxonomy (queue/plan/merge/spill/kernel/reply);
   - per-path and per-family `serve_requests_total` counters each sum to
     the configured request count;
   - every histogram summary has monotone quantiles
-    (p50 <= p95 <= p99 <= p999 <= max) and a non-negative count.
+    (p50 <= p95 <= p99 <= p999 <= max) and a non-negative count;
+  - an `slo` section, when present, carries a boolean `ok` and
+    objectives whose window statuses are pass/fail/no_data with numeric
+    burn rates. The verdict itself is NOT gated on — a loaded CI box may
+    legitimately burn the latency budget; structure must still hold.
 
-Exits non-zero with a message on the first violation, so CI fails loudly
-instead of uploading a malformed artifact.
+With `--chrome PATH` the trace-event JSON from `gsoft trace` is also
+validated: a traceEvents array of M/X events with pid/tid/ts fields,
+process+thread metadata, and every stage span inside a request span.
+
+A listed record file that does not exist is skipped with a warning (the
+bench that writes it may be disabled in this CI lane); any other
+violation exits non-zero so CI fails loudly instead of uploading a
+malformed artifact.
 """
 
 import json
+import os
 import sys
 
 SERVE_COUNTERS = [
@@ -38,6 +52,10 @@ SERVE_TIMINGS = [
     'serve_stage_ns{stage="kernel"}',
 ]
 QUANTS = ["p50", "p95", "p99", "p999"]
+# The engine's fixed stage pipeline (obs::trace::Stage::ALL). A new stage
+# must be added here, in DESIGN.md §10 and in the Chrome exporter at once.
+STAGES = {"queue", "plan", "merge", "spill", "kernel", "reply"}
+SLO_STATUSES = {"pass", "fail", "no_data"}
 
 
 def fail(path, msg):
@@ -55,6 +73,37 @@ def check_timings(path, timings):
         qs = [h[q] for q in QUANTS] + [h["max"]]
         if h["count"] > 0 and any(a > b for a, b in zip(qs, qs[1:])):
             fail(path, f"timing {name!r} quantiles not monotone: {qs}")
+        if name.startswith('serve_stage_ns{stage="'):
+            stage = name[len('serve_stage_ns{stage="'):].rstrip('"}')
+            if stage not in STAGES:
+                fail(path, f"stage {stage!r} not in taxonomy {sorted(STAGES)}")
+
+
+def check_slo(path, slo):
+    if not isinstance(slo.get("ok"), bool):
+        fail(path, "slo.ok missing or not a boolean")
+    objectives = slo.get("objectives")
+    if not isinstance(objectives, list) or not objectives:
+        fail(path, "slo.objectives missing or empty")
+    for obj in objectives:
+        name = obj.get("name")
+        if not isinstance(name, str) or not name:
+            fail(path, "slo objective with missing name")
+        if obj.get("status") not in SLO_STATUSES:
+            fail(path, f"slo {name!r} status {obj.get('status')!r} invalid")
+        windows = obj.get("windows")
+        if not isinstance(windows, list) or not windows:
+            fail(path, f"slo {name!r} has no windows")
+        for w in windows:
+            if w.get("status") not in SLO_STATUSES:
+                fail(path, f"slo {name!r} window status {w.get('status')!r} invalid")
+            for key in ("burn_rate", "target"):
+                if not isinstance(w.get(key), (int, float)):
+                    fail(path, f"slo {name!r} window {key} not numeric")
+            if w["status"] == "fail" and w["burn_rate"] <= 1.0:
+                fail(path, f"slo {name!r} failed with burn_rate {w['burn_rate']} <= 1")
+    summary = "ok" if slo["ok"] else "BURNED (informational, not gated)"
+    print(f"[check_obs] {path}: slo {summary} ({len(objectives)} objectives)")
 
 
 def check_serve(path, record, obs):
@@ -89,13 +138,72 @@ def check_serve(path, record, obs):
     queue = obs["timings"]['serve_stage_ns{stage="queue"}']
     if queue["count"] != requests:
         fail(path, f"queue stage count {queue['count']} != requests {requests}")
+    if "slo" not in record:
+        fail(path, "serve record has no 'slo' section")
+
+
+def check_chrome(path):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(path, "traceEvents missing or empty")
+    metas = [e for e in events if e.get("ph") == "M"]
+    spans = [e for e in events if e.get("ph") == "X"]
+    if len(metas) + len(spans) != len(events):
+        fail(path, "unexpected event phase (only M and X are emitted)")
+    if not any(m.get("name") == "process_name" for m in metas):
+        fail(path, "no process_name metadata event")
+    if not any(m.get("name") == "thread_name" for m in metas):
+        fail(path, "no thread_name metadata event")
+    for e in events:
+        for key in ("pid", "tid", "name"):
+            if key not in e:
+                fail(path, f"event missing {key!r}: {e}")
+    requests = [e for e in spans if e.get("cat") == "request"]
+    stages = [e for e in spans if e.get("cat") == "stage"]
+    if not requests:
+        fail(path, "no request spans")
+    for e in requests + stages:
+        for key in ("ts", "dur"):
+            if not isinstance(e.get(key), (int, float)) or e[key] < 0:
+                fail(path, f"span {e.get('name')!r} has bad {key}")
+    for s in stages:
+        if s["name"] not in STAGES:
+            fail(path, f"stage span {s['name']!r} not in taxonomy {sorted(STAGES)}")
+        # Every stage span must nest (with float slack) inside a request
+        # span on the same thread lane.
+        inside = any(
+            r["tid"] == s["tid"]
+            and r["ts"] - 1e-3 <= s["ts"]
+            and s["ts"] + s["dur"] <= r["ts"] + r["dur"] + 1e-3
+            for r in requests
+        )
+        if not inside:
+            fail(path, f"stage span {s['name']!r} at ts={s['ts']} outside any request span")
+    print(
+        f"[check_obs] {path}: chrome trace OK "
+        f"({len(requests)} request spans, {len(stages)} stage spans)"
+    )
 
 
 def main(argv):
-    if len(argv) < 2:
+    args = argv[1:]
+    chrome = None
+    if "--chrome" in args:
+        at = args.index("--chrome")
+        if at + 1 >= len(args):
+            print("[check_obs] --chrome needs a path", file=sys.stderr)
+            return 2
+        chrome = args[at + 1]
+        args = args[:at] + args[at + 2:]
+    if not args and chrome is None:
         print(__doc__.strip(), file=sys.stderr)
         return 2
-    for i, path in enumerate(argv[1:]):
+    for i, path in enumerate(args):
+        if not os.path.exists(path):
+            print(f"[check_obs] WARNING: {path} not found, skipping", file=sys.stderr)
+            continue
         with open(path) as f:
             record = json.load(f)
         obs = record.get("obs")
@@ -107,8 +215,15 @@ def main(argv):
         check_timings(path, obs["timings"])
         if i == 0:
             check_serve(path, record, obs)
+        if "slo" in record:
+            check_slo(path, record["slo"])
         n = len(obs["counters"]) + len(obs["gauges"]) + len(obs["timings"])
         print(f"[check_obs] {path}: OK ({n} metrics)")
+    if chrome is not None:
+        if os.path.exists(chrome):
+            check_chrome(chrome)
+        else:
+            print(f"[check_obs] WARNING: {chrome} not found, skipping", file=sys.stderr)
     return 0
 
 

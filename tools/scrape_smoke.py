@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Live-scrape smoke test against a running `gsoft ... --listen` exporter.
+
+Usage: scrape_smoke.py HOST:PORT [--expect-requests N] [--timeout SECS]
+
+Polls the exporter until it answers (the bench may still be binding),
+then asserts the full endpoint surface documented in DESIGN.md §10:
+  - /metrics        Prometheus text; per-path serve_requests_total lines
+                    sum to --expect-requests (when given);
+  - /metrics.json   same registry as JSON; counters agree with /metrics;
+  - /healthz        HTTP 200 with "ok": true and named checks;
+  - /tracez         newest-first JSON array of request traces (seq
+                    non-increasing), non-empty once traffic has run;
+  - /slo            burn-rate report with per-objective windows;
+  - a malformed request line gets HTTP 400 without killing the server;
+  - an unknown path gets HTTP 404.
+
+Only the standard library is used (no requests/urllib3), matching the
+zero-dependency exporter on the other side of the socket.
+"""
+
+import json
+import re
+import socket
+import sys
+import time
+
+
+def http_get(host, port, target, timeout=2.0):
+    """One HTTP/1.1 GET over a raw socket. Returns (status, body_str)."""
+    with socket.create_connection((host, port), timeout=timeout) as s:
+        s.sendall(f"GET {target} HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+        chunks = []
+        while True:
+            data = s.recv(65536)
+            if not data:
+                break
+            chunks.append(data)
+    raw = b"".join(chunks).decode("utf-8", "replace")
+    head, _, body = raw.partition("\r\n\r\n")
+    status = int(head.split(None, 2)[1])
+    return status, body
+
+
+def http_raw(host, port, payload, timeout=2.0):
+    """Send raw bytes, return the status code (0 = connection dropped)."""
+    with socket.create_connection((host, port), timeout=timeout) as s:
+        s.sendall(payload)
+        data = s.recv(65536)
+    if not data:
+        return 0
+    return int(data.split(None, 2)[1])
+
+
+def fail(msg):
+    print(f"[scrape_smoke] FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def wait_up(host, port, deadline):
+    while time.time() < deadline:
+        try:
+            status, _ = http_get(host, port, "/healthz")
+            print(f"[scrape_smoke] exporter up, /healthz -> {status}")
+            return
+        except OSError:
+            time.sleep(0.25)
+    fail(f"exporter at {host}:{port} did not come up in time")
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    host, _, port = argv[1].partition(":")
+    port = int(port or "9100")
+    expect = None
+    timeout = 30.0
+    if "--expect-requests" in argv:
+        expect = int(argv[argv.index("--expect-requests") + 1])
+    if "--timeout" in argv:
+        timeout = float(argv[argv.index("--timeout") + 1])
+    deadline = time.time() + timeout
+    wait_up(host, port, deadline)
+
+    # The bench may still be mid-sweep when we connect; poll /metrics
+    # until the per-path counters account for the whole configured trace.
+    pat = re.compile(r'^serve_requests_total\{path="[a-z_]+"\} (\d+)$', re.M)
+    text = ""
+    while True:
+        status, text = http_get(host, port, "/metrics")
+        if status != 200:
+            fail(f"/metrics -> HTTP {status}")
+        total = sum(int(m) for m in pat.findall(text))
+        if expect is None or total >= expect:
+            break
+        if time.time() > deadline:
+            fail(f"per-path requests reached {total}, expected {expect}")
+        time.sleep(0.25)
+    if expect is not None and total != expect:
+        fail(f"per-path requests sum to {total}, expected exactly {expect}")
+    print(f"[scrape_smoke] /metrics ok ({total} requests across paths)")
+
+    status, body = http_get(host, port, "/metrics.json")
+    if status != 200:
+        fail(f"/metrics.json -> HTTP {status}")
+    snap = json.loads(body)
+    json_total = sum(
+        v
+        for k, v in snap.get("counters", {}).items()
+        if k.startswith("serve_requests_total{path=")
+    )
+    if json_total != total:
+        fail(f"/metrics.json disagrees with /metrics: {json_total} != {total}")
+    print("[scrape_smoke] /metrics.json agrees with the text exposition")
+
+    status, body = http_get(host, port, "/healthz")
+    health = json.loads(body)
+    if status != 200 or health.get("ok") is not True:
+        fail(f"/healthz -> HTTP {status}, body {body!r}")
+    names = [c.get("name") for c in health.get("checks", [])]
+    for required in ("accepting", "workers"):
+        if required not in names:
+            fail(f"/healthz missing check {required!r} (got {names})")
+    print(f"[scrape_smoke] /healthz ok, checks: {', '.join(names)}")
+
+    status, body = http_get(host, port, "/tracez")
+    traces = json.loads(body)
+    if status != 200 or not isinstance(traces, list) or not traces:
+        fail(f"/tracez -> HTTP {status} with {len(traces)} traces")
+    seqs = [t["seq"] for t in traces]
+    if seqs != sorted(seqs, reverse=True):
+        fail(f"/tracez not newest-first: {seqs[:8]}...")
+    print(f"[scrape_smoke] /tracez ok ({len(traces)} traces, newest first)")
+
+    status, body = http_get(host, port, "/slo")
+    slo = json.loads(body)
+    if status != 200 or "ok" not in slo or not slo.get("objectives"):
+        fail(f"/slo -> HTTP {status}, body {body[:200]!r}")
+    print(f"[scrape_smoke] /slo ok ({len(slo['objectives'])} objectives)")
+
+    status = http_raw(host, port, b"NONSENSE\r\n\r\n")
+    if status != 400:
+        fail(f"malformed request line -> HTTP {status}, expected 400")
+    status, _ = http_get(host, port, "/no-such-endpoint")
+    if status != 404:
+        fail(f"unknown path -> HTTP {status}, expected 404")
+    # And the exporter must have survived both.
+    status, _ = http_get(host, port, "/healthz")
+    if status != 200:
+        fail(f"exporter unhealthy after bad requests: HTTP {status}")
+    print("[scrape_smoke] error paths ok (400 on garbage, 404 on unknown, still alive)")
+    print("[scrape_smoke] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
