@@ -10,6 +10,8 @@
 //! gsoft density  [--d 1024 --b 32]
 //! gsoft params-table
 //! gsoft perms
+//! gsoft serve    [--listen 127.0.0.1:9200 --tenants 8 --d 16
+//!                 --rate 50 --burst 100 --max-inflight 256 --hold-ms N]
 //! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8
 //!                    --store DIR --reg-every 16 --smoke --obs
 //!                    --listen ADDR --hold-ms N --trace-cap N]
@@ -95,6 +97,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "perms" => {
             gsoft::report::emit_text("fig3_perms", &statics::perms_figure())?;
         }
+        "serve" => serve_cmd(args)?,
         "serve-bench" => serve_bench(args)?,
         "kernel-bench" => kernel_bench(args)?,
         "conv-bench" => conv_bench(args)?,
@@ -228,6 +231,70 @@ fn obs_serve(args: &Args) -> Result<()> {
     }
     server.shutdown();
     engine.finish();
+    Ok(())
+}
+
+/// `gsoft serve --listen ADDR` — the network request front (DESIGN.md
+/// §11): an HTTP/1.1 JSON API over a serving engine, behind admission
+/// control. Starts from a synthetic fleet; new adapters arrive over the
+/// wire (`POST /v1/register`), queries hit `POST /v1/query` (with
+/// optional `deadline_ms`), and the obs scrape endpoints share the
+/// listener. Stays up for `--hold-ms` milliseconds (0 = until killed).
+fn serve_cmd(args: &Args) -> Result<()> {
+    use gsoft::serve::{synthetic, AdmissionCfg, Engine, EngineOpts, FrontOpts, ServeFront};
+    use std::sync::Arc;
+
+    let listen = args.opt_or("listen", "127.0.0.1:9200").to_string();
+    let tenants = args.opt_usize("tenants", 8)?;
+    let layers = args.opt_usize("layers", 2)?;
+    let d = args.opt_usize("d", 16)?;
+    let block = args.opt_usize("block", 4)?;
+    let seed = args.opt_u64("seed", 42)?;
+    let workers = args.opt_usize("workers", 2)?;
+    let rate = args.opt_f64("rate", AdmissionCfg::default().rate_per_sec)?;
+    let burst = args.opt_f64("burst", AdmissionCfg::default().burst)?;
+    let max_inflight = args.opt_usize("max-inflight", AdmissionCfg::default().max_inflight)?;
+    let hold_ms = args.opt_u64("hold-ms", 0)?;
+
+    let registry = synthetic(tenants, layers, d, block, seed)?;
+    let engine = Arc::new(Engine::new(
+        registry,
+        EngineOpts {
+            workers,
+            ..EngineOpts::default()
+        },
+    )?);
+    let opts = FrontOpts {
+        admission: AdmissionCfg {
+            rate_per_sec: rate,
+            burst,
+            max_inflight,
+        },
+        ..FrontOpts::default()
+    };
+    let front = ServeFront::bind(&listen, Arc::clone(&engine), opts)?;
+    println!(
+        "[serve] request front live at {} — POST /v1/register /v1/query /v1/evict, \
+         GET /v1/tenants (+ /metrics /metrics.json /healthz /tracez /slo)",
+        front.url()
+    );
+    println!(
+        "[serve] fleet: {tenants} synthetic tenants over {layers} layers of {d}x{d} \
+         (input dim {d}); admission: {rate}/s per tenant, burst {burst}, \
+         {max_inflight} in flight"
+    );
+    if hold_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    } else {
+        println!("[serve] serving until killed (Ctrl-C)…");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(1));
+        }
+    }
+    front.shutdown();
+    if let Ok(engine) = Arc::try_unwrap(engine) {
+        engine.finish();
+    }
     Ok(())
 }
 
@@ -527,6 +594,11 @@ fn serve_bench(args: &Args) -> Result<()> {
         h.wait()?;
     }
     let wall = t0.elapsed();
+    // Front-end request latency (DESIGN.md §11): stand the network front
+    // up on a loopback ephemeral port over the still-hot engine and time
+    // end-to-end HTTP queries — parse, admission, batcher, JSON response.
+    let front_requests = args.opt_usize("front-requests", if smoke { 32 } else { 256 })?;
+    let (front_json, engine) = front_probe(engine, tenants, d, front_requests, seed)?;
     // Hold the exporter open while the engine is still live (workers
     // parked, health green) so CI can scrape mid-flight state, then shut
     // it down before finish() tears the fleet down.
@@ -650,6 +722,7 @@ fn serve_bench(args: &Args) -> Result<()> {
         ("service_cached", path_stats_json(&m.service_cached)),
         ("service_cold_merge", path_stats_json(&m.service_cold)),
         ("service_factorized", path_stats_json(&m.service_factorized)),
+        ("front", front_json),
     ];
     // Fleet telemetry: per-path/per-family request counters, policy
     // gauges, batcher/cache metrics and stage-latency histograms from the
@@ -684,6 +757,74 @@ fn serve_bench(args: &Args) -> Result<()> {
     }
     emit_json_record(std::path::Path::new("BENCH_serve.json"), &Json::obj(fields))?;
     Ok(())
+}
+
+/// Measure the network front's end-to-end request latency over a hot
+/// engine: bind [`gsoft::serve::ServeFront`] on a loopback ephemeral
+/// port, issue `requests` sequential `POST /v1/query` calls, and return
+/// a `front` section for the bench record. Admission is opened wide —
+/// the probe measures the wire path, not the gate. Hands the engine
+/// back once the front's threads are joined.
+fn front_probe(
+    engine: gsoft::serve::Engine,
+    tenants: usize,
+    d: usize,
+    requests: usize,
+    seed: u64,
+) -> Result<(gsoft::util::json::Json, gsoft::serve::Engine)> {
+    use gsoft::serve::{AdmissionCfg, FrontOpts, ServeFront, TenantId};
+    use gsoft::util::json::Json;
+    use gsoft::util::net::http_request;
+    use gsoft::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let requests = requests.max(1);
+    let engine = Arc::new(engine);
+    let opts = FrontOpts {
+        admission: AdmissionCfg {
+            rate_per_sec: 1e9,
+            burst: 1e9,
+            max_inflight: 1024,
+        },
+        ..FrontOpts::default()
+    };
+    let front = ServeFront::bind("127.0.0.1:0", Arc::clone(&engine), opts)?;
+    let addr = front.addr();
+    let mut rng = Rng::new(seed ^ 0xf207);
+    let mut ns: Vec<u64> = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let tenant = (i % tenants) as TenantId;
+        let input: Vec<f64> = rng.normal_vec(d, 0.5).iter().map(|&x| x as f64).collect();
+        let body = Json::obj(vec![
+            ("tenant", Json::Num(tenant as f64)),
+            ("input", Json::arr_f64(&input)),
+        ])
+        .to_string();
+        let t0 = Instant::now();
+        let (status, resp) = http_request(addr, "POST", "/v1/query", Some(&body))?;
+        anyhow::ensure!(status == 200, "front query failed ({status}): {resp}");
+        ns.push(t0.elapsed().as_nanos() as u64);
+    }
+    front.shutdown();
+    let engine = Arc::try_unwrap(engine)
+        .map_err(|_| anyhow::anyhow!("front still holds the engine after shutdown"))?;
+
+    ns.sort_unstable();
+    let q = |f: f64| ns[((ns.len() as f64 - 1.0) * f).round() as usize] as f64;
+    let mean = ns.iter().sum::<u64>() as f64 / ns.len() as f64;
+    println!(
+        "[serve-bench] front: {requests} loopback queries, p50 {:.3} ms, p99 {:.3} ms",
+        q(0.50) * 1e-6,
+        q(0.99) * 1e-6
+    );
+    let json = Json::obj(vec![
+        ("requests", Json::Num(requests as f64)),
+        ("mean_ns", Json::Num(mean)),
+        ("p50_ns", Json::Num(q(0.50))),
+        ("p99_ns", Json::Num(q(0.99))),
+    ]);
+    Ok((json, engine))
 }
 
 /// CPU kernel sweep: for each (d, b, m, batch) config, time the dense
@@ -1114,6 +1255,17 @@ Experiments (regenerate the paper's tables/figures into results/):
 Utilities:
   merge-demo    fine-tune, merge Q into W in Rust, verify zero overhead
   compress-demo non-orthogonal GS layer compression vs truncated SVD
+  serve         network request front over a serving engine
+                (DESIGN.md §11): POST /v1/register /v1/query /v1/evict
+                and GET /v1/tenants as JSON over HTTP/1.1, plus the obs
+                scrape endpoints on the same listener. Every request
+                passes admission control: per-tenant token buckets
+                (429 past --rate/--burst), a global --max-inflight cap
+                (503), and client deadlines (`deadline_ms` in the query
+                body; expired work is shed before compute, 504)
+                [--listen 127.0.0.1:9200 --tenants 8 --layers 2 --d 16
+                 --block 4 --workers 2 --rate 50 --burst 100
+                 --max-inflight 256 --hold-ms N (0 = forever)]
   serve-bench   multi-tenant adapter serving engine benchmark
                 [--tenants 256 --requests 4096 --layers 4 --d 64
                  --block 8 --zipf-s 1.1 --max-batch 16 --cache-mb 64]

@@ -1,7 +1,8 @@
 //! Pure-std HTTP scrape exporter (DESIGN.md §10).
 //!
-//! One background thread on a `TcpListener` serves keep-alive-less
-//! HTTP/1.1 GETs — no new dependencies, no async runtime. Endpoints:
+//! Serves keep-alive-less HTTP/1.1 GETs over the shared listener in
+//! [`crate::util::net`] — no new dependencies, no async runtime.
+//! Endpoints:
 //!
 //! | path            | payload                                           |
 //! |-----------------|---------------------------------------------------|
@@ -17,38 +18,32 @@
 //! via [`ObsSources::global_only`]) — so the exporter thread is
 //! `'static` and shuts down independently of the scraped object.
 //!
-//! Robustness contract (tested below): requests are read with a bound
-//! ([`MAX_REQUEST_BYTES`]) and a timeout; malformed or oversized
-//! requests get a 400 and never panic or kill the exporter thread
-//! (handler panics are caught and answered with a 500); connections
-//! that close without sending anything are dropped silently — that is
-//! also how [`ObsServer::shutdown`] wakes the accept loop. Handling is
-//! intentionally serial: scrape traffic is a few requests per second,
-//! and a serial loop cannot be wedged open by a slow client holding a
-//! worker.
+//! Robustness contract: the transport is the shared hardened listener
+//! ([`crate::util::net::HttpServer`], DESIGN.md §11) — bounded reads
+//! ([`MAX_REQUEST_BYTES`] head cap), a **wall-clock per-request
+//! deadline** (a 1-byte-per-second trickler is cut off at the budget,
+//! not granted a fresh timeout per read), worker-pool connection
+//! handling (a slow client pins one pool worker, not the listener),
+//! and panic isolation (a panicking source answers 500 and the
+//! exporter lives on). The tests below pin the exporter-level contract;
+//! the transport-level cases (trickler 408, split bodies, pool
+//! liveness) are tested where they live, in `util::net`.
 
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::SocketAddr;
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::util::json::Json;
+use crate::util::net::{Handler, HttpServer, Request, Response, ServerOpts};
 
 use super::registry::{MetricsRegistry, RegistrySnapshot};
 use super::slo::{SloSet, SloTracker};
 use super::trace::Trace;
 
-/// Upper bound on the bytes read from one request (line + headers). A
-/// scrape GET is well under 1 KiB; anything larger is a 400.
-pub const MAX_REQUEST_BYTES: usize = 8192;
-
-/// Per-connection socket timeouts — a stalled client cannot hold the
-/// serial accept loop for longer than this.
-const IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Upper bound on the bytes read from one request head (line + headers).
+/// A scrape GET is well under 1 KiB; anything larger is a 400.
+pub const MAX_REQUEST_BYTES: usize = crate::util::net::DEFAULT_MAX_HEAD_BYTES;
 
 /// One named health probe.
 #[derive(Clone, Debug)]
@@ -134,165 +129,96 @@ struct ServerState {
     requests: MetricsRegistry,
 }
 
-/// Handle to the running exporter thread. Dropping it (or calling
-/// [`ObsServer::shutdown`]) stops the listener and joins the thread.
+/// The obs endpoint set as a reusable component, for mounting on a
+/// listener that also serves other routes — the request front
+/// ([`crate::serve::front::ServeFront`]) mounts these next to its
+/// `/v1/*` endpoints so one port serves traffic *and* its telemetry.
+pub struct ObsRoutes {
+    state: Arc<ServerState>,
+}
+
+impl ObsRoutes {
+    pub fn new(sources: ObsSources) -> ObsRoutes {
+        ObsRoutes {
+            state: Arc::new(ServerState {
+                sources,
+                requests: MetricsRegistry::new(),
+            }),
+        }
+    }
+
+    /// Answer `req` if its path is an obs endpoint; `None` hands routing
+    /// back to the embedding server.
+    pub fn handle(&self, req: &Request) -> Option<Response> {
+        if !ROUTES.contains(&req.path.as_str()) {
+            return None;
+        }
+        Some(obs_handler(&self.state, req))
+    }
+}
+
+/// Handle to the running exporter. Dropping it (or calling
+/// [`ObsServer::shutdown`]) stops the listener and joins its threads.
 pub struct ObsServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    thread: Option<JoinHandle<()>>,
+    inner: HttpServer,
 }
 
 impl ObsServer {
     /// Bind `addr` (e.g. `127.0.0.1:9100`, port 0 for ephemeral) and
-    /// start the exporter thread.
+    /// start the exporter on the shared hardened listener.
     pub fn bind(addr: &str, sources: ObsSources) -> Result<ObsServer> {
-        let listener =
-            TcpListener::bind(addr).with_context(|| format!("binding obs exporter on {addr}"))?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
         let state = Arc::new(ServerState {
             sources,
             requests: MetricsRegistry::new(),
         });
-        let thread = {
-            let stop = Arc::clone(&stop);
-            std::thread::spawn(move || {
-                for conn in listener.incoming() {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(stream) = conn else { continue };
-                    handle_conn(stream, &state);
-                }
-            })
+        let handler: Handler = Arc::new(move |req: &Request| obs_handler(&state, req));
+        // Scrape traffic is a few requests per second: two workers keep
+        // one slow scraper from blocking liveness probes, and scrape
+        // heads are tiny (no bodies to speak of).
+        let opts = ServerOpts {
+            workers: 2,
+            max_body_bytes: 4096,
+            ..ServerOpts::default()
         };
-        Ok(ObsServer {
-            addr,
-            stop,
-            thread: Some(thread),
-        })
+        let inner = HttpServer::bind(addr, "obs exporter", opts, handler)?;
+        Ok(ObsServer { inner })
     }
 
     /// The bound address (resolves port 0 to the ephemeral port).
     pub fn addr(&self) -> SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
     pub fn url(&self) -> String {
-        format!("http://{}", self.addr)
+        self.inner.url()
     }
 
-    /// Stop accepting, wake the blocked accept loop with a self-connect,
-    /// and join the exporter thread.
-    pub fn shutdown(mut self) {
-        self.stop_now();
-    }
-
-    fn stop_now(&mut self) {
-        if self.stop.swap(true, Ordering::SeqCst) {
-            return;
-        }
-        // The accept loop blocks in `incoming()`; an empty connection is
-        // read as zero bytes and dropped silently.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
-        }
+    /// Stop accepting, wake the blocked accept loop, and join the
+    /// exporter threads.
+    pub fn shutdown(self) {
+        self.inner.shutdown();
     }
 }
 
-impl Drop for ObsServer {
-    fn drop(&mut self) {
-        self.stop_now();
+/// Per-request exporter logic; transport hardening (bounds, deadline,
+/// panic isolation) is `util::net`'s job.
+fn obs_handler(state: &ServerState, req: &Request) -> Response {
+    if req.method != "GET" {
+        return Response::text(405, "GET only\n");
     }
-}
-
-fn handle_conn(mut stream: TcpStream, state: &ServerState) {
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let line = match read_request_line(&mut stream) {
-        Ok(Some(line)) => line,
-        // Nothing sent (shutdown wake, port probe): close silently.
-        Ok(None) => return,
-        Err(status) => {
-            write_response(&mut stream, status, "text/plain", "bad request\n");
-            return;
-        }
-    };
-    let path = match parse_request_line(&line) {
-        Ok(p) => p,
-        Err(status) => {
-            let body = if status == 405 { "GET only\n" } else { "bad request\n" };
-            write_response(&mut stream, status, "text/plain", body);
-            return;
-        }
-    };
-    let label = if ROUTES.contains(&path.as_str()) { path.as_str() } else { "other" };
+    let label = if ROUTES.contains(&req.path.as_str()) { req.path.as_str() } else { "other" };
     state
         .requests
         .counter(&format!("http_requests_total{{path=\"{label}\"}}"))
         .inc();
-    // A panicking source must answer 500 and leave the exporter alive.
-    let outcome =
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| route(state, &path)));
-    match outcome {
-        Ok(Some((status, ctype, body))) => write_response(&mut stream, status, ctype, &body),
-        Ok(None) => write_response(&mut stream, 404, "text/plain", "not found\n"),
-        Err(_) => write_response(&mut stream, 500, "text/plain", "internal error\n"),
+    match route(state, &req.path) {
+        Some((status, ctype, body)) => Response {
+            status,
+            content_type: ctype,
+            body,
+        },
+        None => Response::text(404, "not found\n"),
     }
-}
-
-/// Read until the header terminator, EOF, or the size bound; return the
-/// request line. `Ok(None)` = the peer sent nothing at all.
-fn read_request_line(stream: &mut TcpStream) -> Result<Option<String>, u16> {
-    let mut buf: Vec<u8> = Vec::new();
-    let mut chunk = [0u8; 1024];
-    loop {
-        match stream.read(&mut chunk) {
-            Ok(0) => break,
-            Ok(n) => {
-                buf.extend_from_slice(&chunk[..n]);
-                if buf.len() > MAX_REQUEST_BYTES {
-                    return Err(400);
-                }
-                if buf.windows(4).any(|w| w == b"\r\n\r\n") {
-                    break;
-                }
-            }
-            // Timed out / reset mid-request: answer 400 if anything
-            // arrived, otherwise just drop the connection.
-            Err(_) => {
-                if buf.is_empty() {
-                    return Ok(None);
-                }
-                return Err(400);
-            }
-        }
-    }
-    if buf.is_empty() {
-        return Ok(None);
-    }
-    let text = String::from_utf8_lossy(&buf);
-    Ok(Some(text.lines().next().unwrap_or("").to_string()))
-}
-
-/// `GET /path?query HTTP/1.1` → `/path`. 400 on shape violations, 405
-/// on non-GET methods.
-fn parse_request_line(line: &str) -> Result<String, u16> {
-    let mut parts = line.split_whitespace();
-    let (Some(method), Some(target), Some(version), None) =
-        (parts.next(), parts.next(), parts.next(), parts.next())
-    else {
-        return Err(400);
-    };
-    if !version.starts_with("HTTP/") || !target.starts_with('/') {
-        return Err(400);
-    }
-    if method != "GET" {
-        return Err(405);
-    }
-    let path = target.split('?').next().unwrap_or(target);
-    Ok(path.to_string())
 }
 
 fn route(state: &ServerState, path: &str) -> Option<(u16, &'static str, String)> {
@@ -331,30 +257,13 @@ fn route(state: &ServerState, path: &str) -> Option<(u16, &'static str, String)>
     }
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) {
-    let reason = match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        500 => "Internal Server Error",
-        503 => "Service Unavailable",
-        _ => "",
-    };
-    let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
-    );
-    let _ = stream
-        .write_all(head.as_bytes())
-        .and_then(|_| stream.write_all(body.as_bytes()))
-        .and_then(|_| stream.flush());
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::obs::hist::HistoSnapshot;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
 
     /// Minimal HTTP client: one GET, read to EOF (the server always
     /// closes), split status and body.

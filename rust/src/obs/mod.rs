@@ -34,7 +34,7 @@ pub mod trace;
 
 pub use chrome::chrome_trace;
 pub use hist::{Histo, HistoSnapshot};
-pub use http::{HealthCheck, HealthReport, ObsServer, ObsSources};
+pub use http::{HealthCheck, HealthReport, ObsRoutes, ObsServer, ObsSources};
 pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
 pub use slo::{SloReport, SloSet, SloTracker};
 pub use trace::{Stage, Trace, TraceRing};

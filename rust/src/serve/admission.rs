@@ -1,0 +1,273 @@
+//! Admission control for the network serving front (DESIGN.md §11).
+//!
+//! Three gates run before a request touches the engine, each with its
+//! own rejection label on `serve_admission_rejected_total{reason}`:
+//!
+//! - **Per-tenant token bucket** (`reason="rate"` → 429): each tenant
+//!   accrues [`AdmissionCfg::rate_per_sec`] tokens per second up to
+//!   [`AdmissionCfg::burst`]; one query spends one token. A new tenant
+//!   starts with a full bucket, so burst-then-sustain traffic is
+//!   admitted up to the configured shape and an aggressive tenant
+//!   cannot starve the others.
+//! - **Global in-flight cap** (`reason="inflight"` → 503): at most
+//!   [`AdmissionCfg::max_inflight`] admitted queries may be between
+//!   admission and response at once — a memory bound independent of any
+//!   single tenant's rate. Admission returns an RAII
+//!   [`InflightGuard`]; dropping it (response written, or the
+//!   connection handler unwinding) releases the slot.
+//! - **Deadline** (`reason="deadline"` → 504): requests carrying a
+//!   `deadline_ms` that expires before execution are counted here by
+//!   the front, whether they expire at admission or are shed later in
+//!   the batch pipeline.
+//!
+//! Time is passed in explicitly (`now: Instant`) so the bucket
+//! arithmetic is deterministic under test.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::{Counter, Gauge, MetricsRegistry};
+use crate::serve::TenantId;
+
+/// Token-bucket and in-flight parameters for [`Admission`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionCfg {
+    /// Steady-state queries per second each tenant may issue.
+    pub rate_per_sec: f64,
+    /// Bucket capacity: how far above the steady rate a tenant may
+    /// burst after idling.
+    pub burst: f64,
+    /// Global cap on admitted-but-unanswered queries.
+    pub max_inflight: usize,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> AdmissionCfg {
+        AdmissionCfg {
+            rate_per_sec: 50.0,
+            burst: 100.0,
+            max_inflight: 256,
+        }
+    }
+}
+
+/// Why a request was refused; maps to a status code and a metric label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejection {
+    /// Tenant token bucket empty → 429.
+    Rate,
+    /// Global in-flight cap reached → 503.
+    Inflight,
+    /// Client deadline expired before execution → 504.
+    Deadline,
+}
+
+impl Rejection {
+    pub fn reason(self) -> &'static str {
+        match self {
+            Rejection::Rate => "rate",
+            Rejection::Inflight => "inflight",
+            Rejection::Deadline => "deadline",
+        }
+    }
+
+    pub fn status(self) -> u16 {
+        match self {
+            Rejection::Rate => 429,
+            Rejection::Inflight => 503,
+            Rejection::Deadline => 504,
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// The admission gate. Shared by every front worker (`Arc`).
+pub struct Admission {
+    cfg: AdmissionCfg,
+    buckets: Mutex<HashMap<TenantId, Bucket>>,
+    inflight: Arc<AtomicUsize>,
+    inflight_gauge: Arc<Gauge>,
+    rejected: [Arc<Counter>; 3],
+}
+
+impl Admission {
+    /// Build a gate whose rejection counters and in-flight gauge live in
+    /// `registry` (the front's own registry, merged into `/metrics`).
+    pub fn new(cfg: AdmissionCfg, registry: &MetricsRegistry) -> Admission {
+        let rejected = [Rejection::Rate, Rejection::Inflight, Rejection::Deadline].map(|r| {
+            registry.counter(&format!(
+                "serve_admission_rejected_total{{reason=\"{}\"}}",
+                r.reason()
+            ))
+        });
+        Admission {
+            cfg,
+            buckets: Mutex::new(HashMap::new()),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            inflight_gauge: registry.gauge("serve_front_inflight"),
+            rejected,
+        }
+    }
+
+    pub fn cfg(&self) -> AdmissionCfg {
+        self.cfg
+    }
+
+    /// Try to admit one query for `tenant` at time `now`. On success the
+    /// returned guard holds an in-flight slot until dropped; on
+    /// rejection the matching counter has been incremented.
+    pub fn admit(&self, tenant: TenantId, now: Instant) -> Result<InflightGuard, Rejection> {
+        if !self.take_token(tenant, now) {
+            return Err(self.reject(Rejection::Rate));
+        }
+        // Reserve optimistically; back out if the cap was hit. The
+        // token already spent stays spent — a rejected-at-capacity
+        // request still consumed front work.
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.cfg.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(self.reject(Rejection::Inflight));
+        }
+        self.inflight_gauge.set((prev + 1) as u64);
+        Ok(InflightGuard {
+            inflight: Arc::clone(&self.inflight),
+            gauge: Arc::clone(&self.inflight_gauge),
+        })
+    }
+
+    /// Count a deadline rejection (expired at admission or shed in the
+    /// batcher) and hand the caller its status code.
+    pub fn reject(&self, r: Rejection) -> Rejection {
+        let idx = match r {
+            Rejection::Rate => 0,
+            Rejection::Inflight => 1,
+            Rejection::Deadline => 2,
+        };
+        self.rejected[idx].inc();
+        r
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    fn take_token(&self, tenant: TenantId, now: Instant) -> bool {
+        let mut buckets = self.buckets.lock().unwrap();
+        let b = buckets.entry(tenant).or_insert(Bucket {
+            tokens: self.cfg.burst,
+            last: now,
+        });
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.last = now;
+        b.tokens = (b.tokens + dt * self.cfg.rate_per_sec).min(self.cfg.burst);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// RAII in-flight slot: dropping it releases the global cap.
+pub struct InflightGuard {
+    inflight: Arc<AtomicUsize>,
+    gauge: Arc<Gauge>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        let prev = self.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.gauge.set(prev.saturating_sub(1) as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn gate(rate: f64, burst: f64, max_inflight: usize) -> (Admission, MetricsRegistry) {
+        let reg = MetricsRegistry::new();
+        let adm = Admission::new(
+            AdmissionCfg {
+                rate_per_sec: rate,
+                burst,
+                max_inflight,
+            },
+            &reg,
+        );
+        (adm, reg)
+    }
+
+    fn rejected(reg: &MetricsRegistry, reason: &str) -> u64 {
+        reg.counter(&format!("serve_admission_rejected_total{{reason=\"{reason}\"}}")).get()
+    }
+
+    #[test]
+    fn bucket_admits_burst_then_refills_at_the_configured_rate() {
+        let (adm, reg) = gate(10.0, 3.0, 100);
+        let t0 = Instant::now();
+        // Full bucket: exactly `burst` admissions at one instant.
+        for _ in 0..3 {
+            assert!(adm.admit(7, t0).is_ok());
+        }
+        assert_eq!(adm.admit(7, t0).unwrap_err(), Rejection::Rate);
+        assert_eq!(rejected(&reg, "rate"), 1);
+
+        // 100 ms at 10 tokens/s = exactly one fresh token.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(adm.admit(7, t1).is_ok());
+        assert_eq!(adm.admit(7, t1).unwrap_err(), Rejection::Rate);
+
+        // A long idle refills to burst, not beyond.
+        let t2 = t1 + Duration::from_secs(60);
+        for _ in 0..3 {
+            assert!(adm.admit(7, t2).is_ok());
+        }
+        assert_eq!(adm.admit(7, t2).unwrap_err(), Rejection::Rate);
+        assert_eq!(rejected(&reg, "rate"), 3);
+    }
+
+    #[test]
+    fn buckets_are_per_tenant() {
+        let (adm, _reg) = gate(1.0, 1.0, 100);
+        let t0 = Instant::now();
+        assert!(adm.admit(1, t0).is_ok());
+        assert!(adm.admit(1, t0).is_err(), "tenant 1 spent its bucket");
+        assert!(adm.admit(2, t0).is_ok(), "tenant 2 has its own bucket");
+    }
+
+    #[test]
+    fn inflight_cap_is_global_and_released_by_guard_drop() {
+        let (adm, reg) = gate(1000.0, 1000.0, 2);
+        let t0 = Instant::now();
+        let g1 = adm.admit(1, t0).unwrap();
+        let _g2 = adm.admit(2, t0).unwrap();
+        assert_eq!(adm.inflight(), 2);
+        assert_eq!(adm.admit(3, t0).unwrap_err(), Rejection::Inflight);
+        assert_eq!(rejected(&reg, "inflight"), 1);
+        assert_eq!(adm.inflight(), 2, "rejected request does not leak a slot");
+        drop(g1);
+        assert_eq!(adm.inflight(), 1);
+        assert!(adm.admit(3, t0).is_ok(), "slot freed by the guard drop");
+        assert_eq!(reg.gauge("serve_front_inflight").get(), 2);
+    }
+
+    #[test]
+    fn deadline_rejections_are_counted() {
+        let (adm, reg) = gate(1.0, 1.0, 1);
+        assert_eq!(adm.reject(Rejection::Deadline), Rejection::Deadline);
+        adm.reject(Rejection::Deadline);
+        assert_eq!(rejected(&reg, "deadline"), 2);
+        assert_eq!(Rejection::Deadline.status(), 504);
+        assert_eq!(Rejection::Rate.status(), 429);
+        assert_eq!(Rejection::Inflight.status(), 503);
+    }
+}

@@ -222,9 +222,18 @@ fn fulfill(slot: &Slot, result: Result<ServeOutput, String>) {
     slot.done.notify_all();
 }
 
+/// Marker embedded in the error string of a request shed for missing its
+/// client deadline — the network front matches on it to answer 504
+/// instead of 500.
+pub const DEADLINE_EXCEEDED: &str = "deadline exceeded before execution";
+
 struct Job {
     input: Vec<f32>,
     submitted_at: Instant,
+    /// Client-propagated deadline: past this instant the caller has
+    /// given up, so the batch worker sheds the job instead of computing
+    /// a result nobody will read.
+    deadline: Option<Instant>,
     slot: Arc<Slot>,
 }
 
@@ -319,6 +328,9 @@ struct EngineObs {
     batches: Arc<Counter>,
     merges: Arc<Counter>,
     spill_loads: Arc<Counter>,
+    /// Jobs dropped unserved because their client deadline passed
+    /// before a worker reached them.
+    deadline_shed: Arc<Counter>,
     /// Indexed by [`path_index`].
     paths: [PathObs; 4],
     /// Indexed by [`Stage::index`].
@@ -347,6 +359,7 @@ impl EngineObs {
             batches: registry.counter("serve_batches_total"),
             merges: registry.counter("serve_merges_total"),
             spill_loads: registry.counter("serve_spill_loads_total"),
+            deadline_shed: registry.counter("serve_deadline_shed_total"),
             paths,
             stages,
             family_requests: Mutex::new(HashMap::new()),
@@ -706,6 +719,19 @@ impl Engine {
     /// Enqueue one request. The returned handle resolves once a worker has
     /// served the micro-batch the request lands in.
     pub fn submit(&self, tenant: TenantId, input: Vec<f32>) -> Result<Handle> {
+        self.submit_with_deadline(tenant, input, None)
+    }
+
+    /// [`Engine::submit`] with a client deadline attached. A job whose
+    /// deadline has passed by the time a worker picks up its batch is
+    /// shed before compute: its handle fails with a message containing
+    /// [`DEADLINE_EXCEEDED`] and `serve_deadline_shed_total` increments.
+    pub fn submit_with_deadline(
+        &self,
+        tenant: TenantId,
+        input: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Handle> {
         anyhow::ensure!(
             !self.shared.shutting_down.load(Ordering::SeqCst),
             "engine is shutting down"
@@ -727,6 +753,7 @@ impl Engine {
         let job = Job {
             input,
             submitted_at: Instant::now(),
+            deadline,
             slot: Arc::clone(&slot),
         };
         let full = self
@@ -1130,7 +1157,25 @@ fn serve_batch(
     Ok((y, ServePath::Factorized, timer.ns))
 }
 
-fn process_batch(sh: &Shared, batch: Batch<Job>, worker: u32) {
+fn process_batch(sh: &Shared, mut batch: Batch<Job>, worker: u32) {
+    // Shed jobs whose client deadline has already passed: the caller is
+    // gone, so computing their share of the batch is pure waste. They
+    // fail fast with the DEADLINE_EXCEEDED marker (→ 504 at the front).
+    let now = Instant::now();
+    if batch.items.iter().any(|j| j.deadline.is_some_and(|d| d <= now)) {
+        let (expired, live): (Vec<Job>, Vec<Job>) = batch
+            .items
+            .into_iter()
+            .partition(|j| j.deadline.is_some_and(|d| d <= now));
+        for job in expired {
+            sh.obs.deadline_shed.inc();
+            fulfill(&job.slot, Err(DEADLINE_EXCEEDED.to_string()));
+        }
+        if live.is_empty() {
+            return;
+        }
+        batch.items = live;
+    }
     sh.obs.batches.inc();
     let service_start = Instant::now();
     // Contain panics from the linear algebra: a poisoned batch must fail
@@ -1223,6 +1268,35 @@ mod tests {
             spill_budget_bytes: 16 << 20,
             trace_ring_cap: TRACE_RING_CAP,
         }
+    }
+
+    #[test]
+    fn expired_deadline_jobs_are_shed_before_compute() {
+        let reg = synthetic(2, 2, 8, 2, 11).unwrap();
+        let engine = Engine::new(reg, quick_opts()).unwrap();
+        let d = engine.input_dim();
+        let input: Vec<f32> = vec![0.1; d];
+
+        // A deadline of "now" is already expired by the time any worker
+        // reaches the batch: the handle must fail with the marker, not
+        // hang or return a result.
+        let h = engine
+            .submit_with_deadline(0, input.clone(), Some(Instant::now()))
+            .unwrap();
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains(DEADLINE_EXCEEDED), "{err}");
+
+        // A generous deadline serves normally.
+        let far = Instant::now() + Duration::from_secs(60);
+        let h = engine.submit_with_deadline(0, input.clone(), Some(far)).unwrap();
+        assert_eq!(h.wait().unwrap().output.len(), d);
+
+        let report = engine.finish();
+        assert!(
+            report.obs.counters["serve_deadline_shed_total"] >= 1,
+            "shed counter must record the expired job"
+        );
+        assert_eq!(report.metrics.requests, 1, "shed jobs never count as served");
     }
 
     #[test]

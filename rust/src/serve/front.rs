@@ -1,0 +1,607 @@
+//! Network request front for the serving engine (DESIGN.md §11):
+//! `gsoft serve --listen` — the adapt-then-deploy story on a socket.
+//!
+//! A pure-std HTTP/1.1 surface over [`Engine`] on the shared hardened
+//! listener ([`crate::util::net::HttpServer`]), speaking
+//! [`crate::util::json`] both ways:
+//!
+//! | endpoint            | payload                                      |
+//! |---------------------|----------------------------------------------|
+//! | `POST /v1/register` | `{tenant, desc, spec, params}` → register    |
+//! | `POST /v1/query`    | `{tenant, input, deadline_ms?}` → output     |
+//! | `POST /v1/evict`    | `{tenant}` → unregister                      |
+//! | `GET /v1/tenants`   | live tenant ids                              |
+//! | obs endpoints       | `/metrics(.json) /healthz /tracez /slo`      |
+//!
+//! `desc` is the GSAD wire object ([`crate::adapter::desc_from_json`]),
+//! `spec` the [`FlatSpec`] schema, `params` a flat JSON float array —
+//! the same codec the durable store speaks, so anything persistable is
+//! registrable over the wire and validation is the registry's
+//! ([`crate::serve::Registry::register`] rejects malformed entries
+//! before they can reach a worker).
+//!
+//! Every request passes the admission gate
+//! ([`crate::serve::admission::Admission`]) before touching the engine:
+//! per-tenant token buckets (429), a global in-flight cap (503), and
+//! client deadlines (`deadline_ms`, measured from arrival) propagated
+//! into the micro-batcher so expired work is shed before compute (504,
+//! [`DEADLINE_EXCEEDED`]). Rejections land on
+//! `serve_admission_rejected_total{reason}` in the front's registry,
+//! which `/metrics` merges with the engine's own.
+//!
+//! Outputs cross the wire bit-identically: `f32 → f64` widening is
+//! exact, and the JSON number writer emits shortest-round-trip floats.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::adapter::desc_from_json;
+use crate::coordinator::FlatSpec;
+use crate::obs::http::ObsRoutes;
+use crate::obs::{MetricsRegistry, ObsSources};
+use crate::serve::admission::{Admission, AdmissionCfg, Rejection};
+use crate::serve::engine::DEADLINE_EXCEEDED;
+use crate::serve::{AdapterEntry, Engine, TenantId};
+use crate::util::json::Json;
+use crate::util::net::{Handler, HttpServer, Request, Response, ServerOpts};
+
+/// Front configuration: admission shape + listener hardening bounds.
+#[derive(Clone, Copy, Default)]
+pub struct FrontOpts {
+    pub admission: AdmissionCfg,
+    pub net: ServerOpts,
+}
+
+/// Request endpoints, used as metric labels so attacker-chosen paths
+/// never become metric names.
+const ENDPOINTS: [&str; 5] = ["/", "/v1/register", "/v1/query", "/v1/evict", "/v1/tenants"];
+
+struct FrontState {
+    engine: Arc<Engine>,
+    admission: Admission,
+    obs: ObsRoutes,
+    /// Front-local registry (admission + request metrics), merged into
+    /// the `/metrics` scrape alongside the engine's registry.
+    registry: Arc<MetricsRegistry>,
+}
+
+/// Handle to the running front. Dropping it (or calling
+/// [`ServeFront::shutdown`]) stops the listener and joins its threads;
+/// the engine behind it is left running.
+pub struct ServeFront {
+    inner: HttpServer,
+}
+
+impl ServeFront {
+    /// Bind `addr` (port 0 for ephemeral) and serve `engine` behind the
+    /// admission gate. The engine's obs sources are mounted on the same
+    /// listener, with the front's own registry merged into `/metrics`.
+    pub fn bind(addr: &str, engine: Arc<Engine>, opts: FrontOpts) -> Result<ServeFront> {
+        let registry = Arc::new(MetricsRegistry::new());
+        let admission = Admission::new(opts.admission, &registry);
+        let ObsSources {
+            metrics,
+            traces,
+            health,
+            slo,
+        } = engine.obs_sources();
+        let front_reg = Arc::clone(&registry);
+        let sources = ObsSources {
+            metrics: Box::new(move || {
+                let mut snap = metrics();
+                snap.merge(&front_reg.snapshot());
+                snap
+            }),
+            traces,
+            health,
+            slo,
+        };
+        let state = Arc::new(FrontState {
+            engine,
+            admission,
+            obs: ObsRoutes::new(sources),
+            registry,
+        });
+        let handler: Handler = Arc::new(move |req: &Request| front_handler(&state, req));
+        let inner = HttpServer::bind(addr, "serve front", opts.net, handler)?;
+        Ok(ServeFront { inner })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr()
+    }
+
+    pub fn url(&self) -> String {
+        self.inner.url()
+    }
+
+    /// Stop accepting and join the listener threads.
+    pub fn shutdown(self) {
+        self.inner.shutdown();
+    }
+}
+
+fn front_handler(state: &FrontState, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let label = if ENDPOINTS.contains(&req.path.as_str()) {
+        req.path.as_str()
+    } else {
+        "other"
+    };
+    let resp = route(state, req);
+    state
+        .registry
+        .counter(&format!(
+            "serve_front_requests_total{{path=\"{label}\",status=\"{}\"}}",
+            resp.status
+        ))
+        .inc();
+    state
+        .registry
+        .histogram(&format!("serve_front_request_ns{{path=\"{label}\"}}"))
+        .record(t0.elapsed().as_nanos() as u64);
+    resp
+}
+
+fn route(state: &FrontState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/") => Response::text(
+            200,
+            "gsoft serve front\n\nPOST /v1/register\nPOST /v1/query\nPOST /v1/evict\n\
+             GET /v1/tenants\n\n/metrics\n/metrics.json\n/healthz\n/tracez\n/slo\n",
+        ),
+        ("POST", "/v1/register") => register(state, req),
+        ("POST", "/v1/query") => query(state, req),
+        ("POST", "/v1/evict") => evict(state, req),
+        ("GET", "/v1/tenants") => tenants(state),
+        _ => {
+            if let Some(resp) = state.obs.handle(req) {
+                return resp;
+            }
+            if ENDPOINTS.contains(&req.path.as_str()) {
+                return Response::text(405, "wrong method for this endpoint\n");
+            }
+            Response::text(404, "not found\n")
+        }
+    }
+}
+
+fn bad_request(msg: &str) -> Response {
+    Response::text(400, &format!("bad request: {msg}\n"))
+}
+
+fn rejection(r: Rejection) -> Response {
+    let msg = match r {
+        Rejection::Rate => "rate limit exceeded for tenant\n",
+        Rejection::Inflight => "too many requests in flight\n",
+        Rejection::Deadline => "deadline exceeded\n",
+    };
+    Response::text(r.status(), msg)
+}
+
+/// `{tenant, desc, spec, params}` → validated [`AdapterEntry`] →
+/// registry. All decode and validation errors are client errors (400).
+fn register(state: &FrontState, req: &Request) -> Response {
+    let body = match req.body_json() {
+        Ok(b) => b,
+        Err(e) => return bad_request(&e),
+    };
+    match try_register(state, &body) {
+        Ok(tenant) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("registered", Json::Bool(true)),
+                ("tenant", Json::Num(tenant as f64)),
+            ]),
+        ),
+        Err(e) => bad_request(&format!("{e:#}")),
+    }
+}
+
+fn try_register(state: &FrontState, body: &Json) -> Result<TenantId> {
+    let tenant = tenant_of(body)?;
+    let desc = desc_from_json(body.req("desc").map_err(|e| anyhow!("{e}"))?)
+        .context("decoding 'desc'")?;
+    let spec = FlatSpec::from_json(body.req("spec").map_err(|e| anyhow!("{e}"))?)
+        .context("decoding 'spec'")?;
+    let params = float_vec(body.req("params").map_err(|e| anyhow!("{e}"))?)
+        .context("decoding 'params'")?;
+    state
+        .engine
+        .registry()
+        .register(
+            tenant,
+            AdapterEntry {
+                desc,
+                params: Arc::new(params),
+                spec: Arc::new(spec),
+            },
+        )
+        .context("registering adapter")?;
+    Ok(tenant)
+}
+
+/// `{tenant, input, deadline_ms?}` → admission → engine → output JSON.
+fn query(state: &FrontState, req: &Request) -> Response {
+    let body = match req.body_json() {
+        Ok(b) => b,
+        Err(e) => return bad_request(&e),
+    };
+    let (tenant, input, deadline_ms) = match decode_query(&body) {
+        Ok(q) => q,
+        Err(e) => return bad_request(&format!("{e:#}")),
+    };
+    let now = Instant::now();
+    let _guard = match state.admission.admit(tenant, now) {
+        Ok(g) => g,
+        Err(r) => return rejection(r),
+    };
+    let deadline = deadline_ms.map(|ms| now + Duration::from_millis(ms));
+    if deadline.is_some_and(|d| d <= Instant::now()) {
+        return rejection(state.admission.reject(Rejection::Deadline));
+    }
+    let handle = match state.engine.submit_with_deadline(tenant, input, deadline) {
+        Ok(h) => h,
+        Err(e) => return bad_request(&format!("{e:#}")),
+    };
+    match handle.wait() {
+        Ok(out) => {
+            let output: Vec<f64> = out.output.iter().map(|&x| x as f64).collect();
+            Response::json(
+                200,
+                &Json::obj(vec![
+                    ("tenant", Json::Num(tenant as f64)),
+                    ("path", Json::Str(out.path.name().to_string())),
+                    ("latency_ns", Json::Num(out.latency.as_nanos() as f64)),
+                    ("output", Json::arr_f64(&output)),
+                ]),
+            )
+        }
+        Err(e) if e.to_string().contains(DEADLINE_EXCEEDED) => {
+            rejection(state.admission.reject(Rejection::Deadline))
+        }
+        Err(e) => Response::text(500, &format!("serve failed: {e:#}\n")),
+    }
+}
+
+fn decode_query(body: &Json) -> Result<(TenantId, Vec<f32>, Option<u64>)> {
+    let tenant = tenant_of(body)?;
+    let input = float_vec(body.req("input").map_err(|e| anyhow!("{e}"))?)
+        .context("decoding 'input'")?;
+    let deadline_ms = match body.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_i64()
+                .filter(|&ms| ms >= 0)
+                .ok_or_else(|| anyhow!("'deadline_ms' is not a non-negative integer"))?
+                as u64,
+        ),
+    };
+    Ok((tenant, input, deadline_ms))
+}
+
+/// `{tenant}` → unregister. Cached merged weights for the tenant may
+/// linger until LRU eviction, but the tenant is unservable immediately
+/// (submit checks the registry).
+fn evict(state: &FrontState, req: &Request) -> Response {
+    let body = match req.body_json() {
+        Ok(b) => b,
+        Err(e) => return bad_request(&e),
+    };
+    let tenant = match tenant_of(&body) {
+        Ok(t) => t,
+        Err(e) => return bad_request(&format!("{e:#}")),
+    };
+    match state.engine.registry().unregister(tenant) {
+        Ok(true) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("evicted", Json::Bool(true)),
+                ("tenant", Json::Num(tenant as f64)),
+            ]),
+        ),
+        Ok(false) => Response::text(404, "unknown tenant\n"),
+        Err(e) => Response::text(500, &format!("evict failed: {e:#}\n")),
+    }
+}
+
+fn tenants(state: &FrontState) -> Response {
+    let ids = state.engine.registry().tenant_ids();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("count", Json::Num(ids.len() as f64)),
+            (
+                "tenants",
+                Json::Arr(ids.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+        ]),
+    )
+}
+
+fn tenant_of(body: &Json) -> Result<TenantId> {
+    body.req("tenant")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_i64()
+        .filter(|&t| t >= 0)
+        .map(|t| t as TenantId)
+        .ok_or_else(|| anyhow!("'tenant' is not a non-negative integer"))
+}
+
+/// Decode a JSON array of numbers into f32s. Non-finite entries are
+/// rejected: they cannot round-trip JSON and would poison the kernels.
+fn float_vec(v: &Json) -> Result<Vec<f32>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("expected a number array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        let x = x
+            .as_f64()
+            .filter(|x| x.is_finite())
+            .ok_or_else(|| anyhow!("entry {i} is not a finite number"))?;
+        out.push(x as f32);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::desc_to_json;
+    use crate::serve::{synthetic, EngineOpts};
+    use crate::util::net::http_request;
+
+    fn quick_opts() -> EngineOpts {
+        EngineOpts {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            promote_after: Some(3),
+            ..EngineOpts::default()
+        }
+    }
+
+    fn front_with(admission: AdmissionCfg) -> (Arc<Engine>, ServeFront) {
+        let reg = synthetic(4, 2, 8, 2, 21).unwrap();
+        let engine = Arc::new(Engine::new(reg, quick_opts()).unwrap());
+        let opts = FrontOpts {
+            admission,
+            ..FrontOpts::default()
+        };
+        let front = ServeFront::bind("127.0.0.1:0", Arc::clone(&engine), opts).unwrap();
+        (engine, front)
+    }
+
+    fn open_admission() -> AdmissionCfg {
+        AdmissionCfg {
+            rate_per_sec: 1e6,
+            burst: 1e6,
+            max_inflight: 64,
+        }
+    }
+
+    fn post(addr: SocketAddr, target: &str, body: &Json) -> (u16, String) {
+        http_request(addr, "POST", target, Some(&body.to_string())).unwrap()
+    }
+
+    fn get(addr: SocketAddr, target: &str) -> (u16, String) {
+        http_request(addr, "GET", target, None).unwrap()
+    }
+
+    fn output_bits(body: &str) -> Vec<u32> {
+        Json::parse(body)
+            .unwrap()
+            .get("output")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+            .collect()
+    }
+
+    #[test]
+    fn register_query_evict_round_trip_is_bit_identical_to_in_process() {
+        let (engine, front) = front_with(open_admission());
+        let addr = front.addr();
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| (i as f32 / d as f32) - 0.4).collect();
+
+        // Clone tenant 0's adapter and register it over the wire as a
+        // fresh tenant: identical desc/spec/params, untouched caches on
+        // both sides, so the first query takes the same path.
+        let entry = engine.registry().get(0).unwrap();
+        let body = Json::obj(vec![
+            ("tenant", Json::Num(1000.0)),
+            ("desc", desc_to_json(&entry.desc)),
+            ("spec", entry.spec.to_json()),
+            (
+                "params",
+                Json::arr_f64(&entry.params.iter().map(|&x| x as f64).collect::<Vec<f64>>()),
+            ),
+        ]);
+        let (status, resp) = post(addr, "/v1/register", &body);
+        assert_eq!(status, 200, "{resp}");
+        let ack = Json::parse(&resp).unwrap();
+        assert_eq!(ack.get("registered").and_then(|v| v.as_bool()), Some(true));
+
+        let (status, resp) = get(addr, "/v1/tenants");
+        assert_eq!(status, 200);
+        let listed = Json::parse(&resp).unwrap();
+        let ids = listed.get("tenants").unwrap().as_arr().unwrap();
+        assert!(ids.contains(&Json::Num(1000.0)), "{resp}");
+
+        // Wire query of the clone vs in-process query of the original.
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(1000.0)),
+            (
+                "input",
+                Json::arr_f64(&input.iter().map(|&x| x as f64).collect::<Vec<f64>>()),
+            ),
+        ]);
+        let (status, resp) = post(addr, "/v1/query", &q);
+        assert_eq!(status, 200, "{resp}");
+        let wire_bits = output_bits(&resp);
+        assert_eq!(wire_bits.len(), d);
+
+        let local = engine.submit(0, input.clone()).unwrap().wait().unwrap();
+        let local_bits: Vec<u32> = local.output.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(wire_bits, local_bits, "wire and in-process outputs must be bit-identical");
+
+        // Evict, then the tenant is gone from list and query.
+        let ev = Json::obj(vec![("tenant", Json::Num(1000.0))]);
+        let (status, resp) = post(addr, "/v1/evict", &ev);
+        assert_eq!(status, 200, "{resp}");
+        let (status, _) = post(addr, "/v1/evict", &ev);
+        assert_eq!(status, 404, "double evict");
+        let (status, resp) = post(addr, "/v1/query", &q);
+        assert_eq!(status, 400, "evicted tenant is unservable: {resp}");
+
+        front.shutdown();
+    }
+
+    #[test]
+    fn malformed_bodies_and_wrong_methods_are_client_errors() {
+        let (_engine, front) = front_with(open_admission());
+        let addr = front.addr();
+
+        let (status, _) = http_request(addr, "POST", "/v1/query", Some("{not json")).unwrap();
+        assert_eq!(status, 400);
+        let (status, _) = post(addr, "/v1/query", &Json::obj(vec![("tenant", Json::Num(0.0))]));
+        assert_eq!(status, 400, "missing input field");
+        let (status, _) = post(
+            addr,
+            "/v1/query",
+            &Json::obj(vec![
+                ("tenant", Json::Str("zero".into())),
+                ("input", Json::arr_f64(&[0.0])),
+            ]),
+        );
+        assert_eq!(status, 400, "non-numeric tenant");
+        let (status, _) = post(addr, "/v1/register", &Json::obj(vec![("tenant", Json::Num(1.0))]));
+        assert_eq!(status, 400, "register without desc/spec/params");
+        let (status, _) = get(addr, "/v1/query");
+        assert_eq!(status, 405, "query is POST-only");
+        let (status, _) = http_request(addr, "POST", "/v1/tenants", Some("{}")).unwrap();
+        assert_eq!(status, 405, "tenants is GET-only");
+        let (status, _) = get(addr, "/v1/nope");
+        assert_eq!(status, 404);
+
+        // A deeply nested body must error cleanly, not overflow the
+        // parser stack inside a worker.
+        let hostile = "[".repeat(50_000);
+        let (status, _) = http_request(addr, "POST", "/v1/query", Some(&hostile)).unwrap();
+        assert_eq!(status, 400);
+
+        front.shutdown();
+    }
+
+    #[test]
+    fn over_rate_tenant_gets_429_and_the_rejection_counter_increments() {
+        let (engine, front) = front_with(AdmissionCfg {
+            rate_per_sec: 0.001, // no refill at test timescale
+            burst: 2.0,
+            max_inflight: 64,
+        });
+        let addr = front.addr();
+        let d = engine.input_dim();
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.25; d])),
+        ]);
+
+        let mut statuses = Vec::new();
+        for _ in 0..4 {
+            statuses.push(post(addr, "/v1/query", &q).0);
+        }
+        assert_eq!(&statuses[..2], &[200, 200], "burst admitted: {statuses:?}");
+        assert_eq!(&statuses[2..], &[429, 429], "past burst rejected: {statuses:?}");
+
+        // Another tenant still gets through (per-tenant buckets)...
+        let q2 = Json::obj(vec![
+            ("tenant", Json::Num(1.0)),
+            ("input", Json::arr_f64(&vec![0.25; d])),
+        ]);
+        assert_eq!(post(addr, "/v1/query", &q2).0, 200);
+
+        // ...and the scrape shows the rejections on the same listener.
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(
+            body.contains("serve_admission_rejected_total{reason=\"rate\"} 2"),
+            "{body}"
+        );
+
+        front.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_gets_504_and_counts_as_deadline_rejection() {
+        let (engine, front) = front_with(open_admission());
+        let addr = front.addr();
+        let d = engine.input_dim();
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.5; d])),
+            ("deadline_ms", Json::Num(0.0)),
+        ]);
+        let (status, _) = post(addr, "/v1/query", &q);
+        assert_eq!(status, 504);
+
+        // A generous deadline is served.
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.5; d])),
+            ("deadline_ms", Json::Num(60_000.0)),
+        ]);
+        let (status, resp) = post(addr, "/v1/query", &q);
+        assert_eq!(status, 200, "{resp}");
+
+        let (_, body) = get(addr, "/metrics");
+        assert!(
+            body.contains("serve_admission_rejected_total{reason=\"deadline\"} 1"),
+            "{body}"
+        );
+        front.shutdown();
+    }
+
+    #[test]
+    fn obs_endpoints_ride_the_same_listener() {
+        let (engine, front) = front_with(open_admission());
+        let addr = front.addr();
+        let d = engine.input_dim();
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.1; d])),
+        ]);
+        assert_eq!(post(addr, "/v1/query", &q).0, 200);
+
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        assert_eq!(Json::parse(&body).unwrap().get("ok").and_then(|v| v.as_bool()), Some(true));
+
+        let (status, body) = get(addr, "/metrics.json");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        let counters = j.get("counters").unwrap().as_obj().unwrap();
+        // Engine metrics and front metrics in one scrape.
+        assert!(
+            counters.keys().any(|k| k.starts_with("serve_requests_total")),
+            "{body}"
+        );
+        assert!(
+            counters.keys().any(|k| k.starts_with("serve_front_requests_total")),
+            "{body}"
+        );
+
+        let (status, _) = get(addr, "/slo");
+        assert_eq!(status, 200);
+        let (status, body) = get(addr, "/");
+        assert_eq!(status, 200);
+        assert!(body.contains("/v1/register"), "{body}");
+        front.shutdown();
+    }
+}

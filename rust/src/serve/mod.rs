@@ -16,22 +16,31 @@
 //!   instrumented through [`crate::obs`]: per-path/per-family request
 //!   counters, stage-latency histograms, and a ring of recent request
 //!   traces ([`engine::TRACE_RING_CAP`])
+//! - [`admission`] — request gating for the network front: per-tenant
+//!   token buckets, a global in-flight cap, deadline accounting
+//! - [`front`] — `gsoft serve --listen`: HTTP/1.1 request front over the
+//!   engine ([`crate::util::net`] listener), JSON in/out, obs endpoints
+//!   on the same socket (DESIGN.md §11)
 //!
 //! Benchmarked by `gsoft serve-bench` and `rust/benches/serve.rs` with a
 //! Zipf tenant-popularity trace from [`crate::data::zipf`]; the
 //! store-backed tiers by `gsoft store-bench` and `rust/benches/store.rs`.
 
+pub mod admission;
 pub mod batcher;
 pub mod cache;
 pub mod engine;
+pub mod front;
 pub mod registry;
 
+pub use admission::{Admission, AdmissionCfg, InflightGuard, Rejection};
 pub use batcher::{Batch, BatcherObs, MicroBatcher};
 pub use cache::{CacheObs, CacheStats, CachedModel, Inserted, MergedCache};
 pub use engine::{
     Engine, EngineOpts, EngineReport, Handle, MetricsSnapshot, PathStats, Policy, ServeOutput,
-    ServePath, SPILL_FLOPS_PER_BYTE, TRACE_RING_CAP,
+    ServePath, DEADLINE_EXCEEDED, SPILL_FLOPS_PER_BYTE, TRACE_RING_CAP,
 };
+pub use front::{FrontOpts, ServeFront};
 pub use registry::{
     synthetic, synthetic_conv, synthetic_of, AdapterEntry, BaseModel, Registry, TenantId,
 };

@@ -29,6 +29,7 @@ impl Json {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -206,7 +207,12 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
 }
 
 fn write_num(out: &mut String, x: f64) {
-    if x.fract() == 0.0 && x.abs() < 1e15 {
+    // JSON has no NaN/Infinity literals; emitting them (as `{x}` would)
+    // produces a document our own parser rejects. Non-finite values come
+    // from empty-histogram quantiles and 0/0 SLO ratios — degrade to null.
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
         out.push_str(&format!("{}", x as i64));
     } else {
         out.push_str(&format!("{x}"));
@@ -241,9 +247,17 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Maximum container nesting accepted by [`Json::parse`]. The parser is
+/// recursive-descent, so without a cap a short `[[[[…` document drives the
+/// call stack as deep as the input is long — a stack overflow (abort, not
+/// unwind) reachable from any untrusted body. 128 is far beyond any document
+/// this codebase produces.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -288,8 +302,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Parser::object),
+            Some(b'[') => self.nested(Parser::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -297,6 +311,21 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("unexpected character")),
         }
+    }
+
+    /// Run a container parser one nesting level down, erroring (not
+    /// overflowing the stack) past [`MAX_PARSE_DEPTH`].
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> Result<Json, JsonError>,
+    ) -> Result<Json, JsonError> {
+        if self.depth >= MAX_PARSE_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
@@ -515,5 +544,71 @@ mod tests {
     fn object_key_order_is_stable() {
         let v = Json::parse(r#"{"z":1,"a":2}"#).unwrap();
         assert_eq!(v.to_string(), r#"{"a":2,"z":1}"#);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = Json::obj(vec![("q", Json::Num(x))]);
+            assert_eq!(v.to_string(), r#"{"q":null}"#);
+            // The acceptance case: a snapshot containing NaN must re-parse.
+            let back = Json::parse(&v.pretty()).unwrap();
+            assert_eq!(back.get("q").unwrap(), &Json::Null);
+        }
+    }
+
+    #[test]
+    fn encode_parse_round_trip_over_arbitrary_f64() {
+        crate::util::prop::check_named("json_num_round_trip", 17, 256, |rng| {
+            // Mix magnitudes: subnormals through 1e300, exact integers,
+            // and the non-finite specials.
+            let x = match rng.below(6) {
+                0 => f64::NAN,
+                1 => f64::INFINITY * if rng.flip(0.5) { 1.0 } else { -1.0 },
+                2 => (rng.normal() * 1e15).trunc(),
+                3 => rng.normal() * 10f64.powi(rng.below(600) as i32 - 300),
+                4 => rng.normal(),
+                _ => f64::from_bits(rng.next_u64()),
+            };
+            let text = Json::Num(x).to_string();
+            let parsed = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("encode of {x:?} produced invalid JSON {text:?}: {e}"));
+            match parsed {
+                Json::Null => assert!(!x.is_finite(), "{x:?} encoded as null"),
+                Json::Num(y) => {
+                    assert!(x.is_finite());
+                    assert!(
+                        y == x || (y - x).abs() <= x.abs() * 1e-15,
+                        "round trip {x:?} -> {text} -> {y:?}"
+                    );
+                }
+                other => panic!("number {x:?} round-tripped to {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // Well past any real document, and far past what a recursive
+        // parse could survive without the cap (~100k frames).
+        let hostile = "[".repeat(100_000);
+        let err = Json::parse(&hostile).unwrap_err();
+        assert!(err.0.contains("nesting too deep"), "{err}");
+        let hostile_obj = r#"{"a":"#.repeat(100_000);
+        assert!(Json::parse(&hostile_obj).is_err());
+
+        // At and just under the cap both directions behave.
+        let ok = format!(
+            "{}1{}",
+            "[".repeat(MAX_PARSE_DEPTH),
+            "]".repeat(MAX_PARSE_DEPTH)
+        );
+        assert!(Json::parse(&ok).is_ok());
+        let over = format!(
+            "{}1{}",
+            "[".repeat(MAX_PARSE_DEPTH + 1),
+            "]".repeat(MAX_PARSE_DEPTH + 1)
+        );
+        assert!(Json::parse(&over).is_err());
     }
 }

@@ -6,6 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod container;
 pub mod json;
+pub mod net;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,576 @@
+//! Shared hardened HTTP/1.1 plumbing (DESIGN.md §11).
+//!
+//! One pure-std listener implementation behind both wire surfaces — the
+//! telemetry exporter ([`crate::obs::http::ObsServer`]) and the request
+//! front ([`crate::serve::front::ServeFront`]). Handlers get a parsed
+//! [`Request`] (method, path, body) and return a [`Response`]; everything
+//! untrusted-input-shaped lives here, once:
+//!
+//! - **Bounded reads.** Head (request line + headers) is capped at
+//!   [`ServerOpts::max_head_bytes`] → 400; the body is read only up to a
+//!   `Content-Length` that must not exceed
+//!   [`ServerOpts::max_body_bytes`] → 413.
+//! - **Wall-clock request deadline.** Every read is clamped to the time
+//!   remaining until `accept + request_deadline`, so a client trickling
+//!   one byte per second cannot hold a connection open indefinitely
+//!   (each successful read no longer resets the budget) → 408.
+//! - **O(n) head scanning.** The `\r\n\r\n` terminator search resumes
+//!   where the previous chunk left off instead of rescanning the whole
+//!   buffer per read.
+//! - **Worker-pool handling.** Connections are fanned out over a
+//!   [`WorkQueue`] to a fixed pool, so one slow peer stalls one worker,
+//!   not the accept loop.
+//! - **Panic isolation.** A panicking handler answers 500 and the worker
+//!   lives on.
+//!
+//! Connections that close without sending anything are dropped silently —
+//! that is also how [`HttpServer::shutdown`] wakes the accept loop.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::pool::WorkQueue;
+
+/// Default bound on the request head (line + headers). A scrape GET or a
+/// JSON POST preamble is well under 1 KiB; anything larger is a 400.
+pub const DEFAULT_MAX_HEAD_BYTES: usize = 8192;
+
+/// Default bound on a request body. Register payloads carry whole adapter
+/// parameter buffers as JSON arrays, so this is generous; past it is 413.
+pub const DEFAULT_MAX_BODY_BYTES: usize = 16 << 20;
+
+/// Default wall-clock budget for reading one request.
+pub const DEFAULT_REQUEST_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Per-read socket timeout ceiling (the effective timeout is the minimum
+/// of this and the time left until the request deadline).
+const CHUNK_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A parsed inbound request.
+pub struct Request {
+    pub method: String,
+    /// Target with any `?query` stripped.
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Parse the body as a JSON document (depth-capped, see
+    /// [`crate::util::json::MAX_PARSE_DEPTH`]). `Err` carries a
+    /// client-facing message for a 400.
+    pub fn body_json(&self) -> std::result::Result<Json, String> {
+        let text = std::str::from_utf8(&self.body).map_err(|_| "body is not UTF-8".to_string())?;
+        Json::parse(text).map_err(|e| e.to_string())
+    }
+}
+
+/// What a handler answers with.
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.to_string(),
+        }
+    }
+
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.pretty(),
+        }
+    }
+}
+
+/// Handler invoked per request on a pool worker. Panics are caught and
+/// answered with a 500.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Listener configuration; [`ServerOpts::default`] matches the exporter's
+/// historical hardening bounds.
+#[derive(Clone, Copy)]
+pub struct ServerOpts {
+    pub workers: usize,
+    pub max_head_bytes: usize,
+    pub max_body_bytes: usize,
+    pub request_deadline: Duration,
+}
+
+impl Default for ServerOpts {
+    fn default() -> ServerOpts {
+        ServerOpts {
+            workers: 4,
+            max_head_bytes: DEFAULT_MAX_HEAD_BYTES,
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+            request_deadline: DEFAULT_REQUEST_DEADLINE,
+        }
+    }
+}
+
+/// A running listener: accept thread + handler pool. Dropping it (or
+/// calling [`HttpServer::shutdown`]) stops the listener and joins every
+/// thread.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (port 0 for ephemeral) and start serving `handler`
+    /// on `opts.workers` pool threads. `what` names the surface in bind
+    /// errors.
+    pub fn bind(addr: &str, what: &str, opts: ServerOpts, handler: Handler) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {what} on {addr}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue: Arc<WorkQueue<TcpStream>> = Arc::new(WorkQueue::new());
+        let workers: Vec<JoinHandle<()>> = (0..opts.workers.max(1))
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                let handler = Arc::clone(&handler);
+                std::thread::spawn(move || {
+                    while let Some(stream) = queue.pop() {
+                        handle_conn(stream, &opts, &handler);
+                    }
+                })
+            })
+            .collect();
+        let accept = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    queue.push(stream);
+                }
+                // Drain-and-join so shutdown returns only once every
+                // in-flight request has been answered.
+                queue.close();
+                for w in workers {
+                    let _ = w.join();
+                }
+            })
+        };
+        Ok(HttpServer {
+            addr,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop accepting, wake the blocked accept loop with a self-connect,
+    /// and join the accept thread (which joins the pool).
+    pub fn shutdown(mut self) {
+        self.stop_now();
+    }
+
+    fn stop_now(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // The accept loop blocks in `incoming()`; an empty connection is
+        // read as zero bytes by whichever worker pops it and dropped
+        // silently.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_now();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, opts: &ServerOpts, handler: &Handler) {
+    let deadline = Instant::now() + opts.request_deadline;
+    let _ = stream.set_write_timeout(Some(CHUNK_TIMEOUT));
+    let req = match read_request(&mut stream, opts, deadline) {
+        Ok(Some(req)) => req,
+        // Nothing sent (shutdown wake, port probe): close silently.
+        Ok(None) => return,
+        Err(status) => {
+            let body = match status {
+                408 => "request deadline exceeded\n",
+                413 => "body too large\n",
+                _ => "bad request\n",
+            };
+            write_response(&mut stream, status, "text/plain", body);
+            return;
+        }
+    };
+    // A panicking handler must answer 500 and leave the worker alive.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)));
+    match outcome {
+        Ok(resp) => write_response(&mut stream, resp.status, resp.content_type, &resp.body),
+        Err(_) => write_response(&mut stream, 500, "text/plain", "internal error\n"),
+    }
+}
+
+/// Read one chunk, clamping the socket timeout to the time left before
+/// `deadline`. `Err(408)` once the wall-clock budget is spent.
+fn read_chunk(
+    stream: &mut TcpStream,
+    chunk: &mut [u8],
+    deadline: Instant,
+) -> std::result::Result<usize, u16> {
+    let now = Instant::now();
+    if now >= deadline {
+        return Err(408);
+    }
+    let _ = stream.set_read_timeout(Some((deadline - now).min(CHUNK_TIMEOUT)));
+    stream.read(chunk).map_err(|_| 408)
+}
+
+/// Read and parse one full request (head + Content-Length body).
+/// `Ok(None)` = the peer sent nothing at all.
+fn read_request(
+    stream: &mut TcpStream,
+    opts: &ServerOpts,
+    deadline: Instant,
+) -> std::result::Result<Option<Request>, u16> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut scanned = 0usize; // head bytes already checked for \r\n\r\n
+    let head_end = loop {
+        // Resume the terminator scan 3 bytes back: a split "\r\n\r\n"
+        // straddling a chunk boundary is still found, without rescanning
+        // the whole head per read.
+        let from = scanned.saturating_sub(3);
+        if let Some(i) = buf[from..].windows(4).position(|w| w == b"\r\n\r\n") {
+            break from + i + 4;
+        }
+        scanned = buf.len();
+        if buf.len() > opts.max_head_bytes {
+            return Err(400);
+        }
+        match read_chunk(stream, &mut chunk, deadline) {
+            Ok(0) if buf.is_empty() => return Ok(None),
+            Ok(0) => return Err(400), // EOF mid-head
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) if buf.is_empty() => return Ok(None),
+            Err(status) => return Err(status),
+        }
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| 400u16)?;
+    let mut lines = head.split("\r\n");
+    let (method, path) = parse_request_line(lines.next().unwrap_or(""))?;
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().map_err(|_| 400u16)?;
+            }
+        }
+    }
+    if content_length > opts.max_body_bytes {
+        return Err(413);
+    }
+
+    let mut body = buf[head_end..].to_vec();
+    if body.len() > content_length {
+        return Err(400); // more bytes than the declared body
+    }
+    while body.len() < content_length {
+        match read_chunk(stream, &mut chunk, deadline)? {
+            0 => return Err(400), // EOF before the declared length
+            n => body.extend_from_slice(&chunk[..n]),
+        }
+        if body.len() > content_length {
+            return Err(400);
+        }
+    }
+    Ok(Some(Request { method, path, body }))
+}
+
+/// `METHOD /path?query HTTP/1.1` → `(METHOD, /path)`. 400 on shape
+/// violations; method policy (405) is the handler's call.
+fn parse_request_line(line: &str) -> std::result::Result<(String, String), u16> {
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(400);
+    };
+    if !version.starts_with("HTTP/") || !target.starts_with('/') {
+        return Err(400);
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    Ok((method.to_string(), path.to_string()))
+}
+
+/// Minimal one-shot HTTP client for loopback benches, smoke drivers and
+/// tests: write one request, read to EOF (our servers always close the
+/// connection), return `(status, body)`.
+pub fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    target: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let _ = s.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = s.set_write_timeout(Some(Duration::from_secs(30)));
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {target} HTTP/1.1\r\nHost: gsoft\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)?;
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("no HTTP status line in response: {text:?}"))?;
+    let resp_body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, resp_body))
+}
+
+pub(crate) fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_reason(status),
+        body.len()
+    );
+    let _ = stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body.as_bytes()))
+        .and_then(|_| stream.flush());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server(opts: ServerOpts) -> HttpServer {
+        let handler: Handler = Arc::new(|req: &Request| {
+            Response::text(
+                200,
+                &format!("{} {} {}b\n", req.method, req.path, req.body.len()),
+            )
+        });
+        HttpServer::bind("127.0.0.1:0", "test server", opts, handler).unwrap()
+    }
+
+    fn raw(addr: SocketAddr, request: &[u8]) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request).unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        let status: u16 = text
+            .split_whitespace()
+            .nth(1)
+            .and_then(|t| t.parse().ok())
+            .unwrap_or_else(|| panic!("no status line in {text:?}"));
+        let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn parses_method_path_and_content_length_body() {
+        let server = echo_server(ServerOpts::default());
+        let (status, body) = raw(
+            server.addr(),
+            b"POST /v1/query?x=1 HTTP/1.1\r\nHost: t\r\nContent-Length: 5\r\n\r\nhello",
+        );
+        assert_eq!(status, 200);
+        assert_eq!(body, "POST /v1/query 5b\n");
+        let (status, body) = raw(server.addr(), b"GET / HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert_eq!(body, "GET / 0b\n");
+        server.shutdown();
+    }
+
+    #[test]
+    fn body_split_across_reads_is_reassembled() {
+        let server = echo_server(ServerOpts::default());
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\n12345").unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        s.write_all(b"67890").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        assert!(text.contains("POST /x 10b"), "{text}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_head_and_body_are_rejected() {
+        let server = echo_server(ServerOpts::default());
+        let oversized = format!(
+            "GET /{} HTTP/1.1\r\n\r\n",
+            "a".repeat(2 * DEFAULT_MAX_HEAD_BYTES)
+        );
+        let (status, _) = raw(server.addr(), oversized.as_bytes());
+        assert_eq!(status, 400);
+        let huge = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            DEFAULT_MAX_BODY_BYTES + 1
+        );
+        let (status, _) = raw(server.addr(), huge.as_bytes());
+        assert_eq!(status, 413, "declared body over the bound is refused unread");
+        let (status, _) = raw(server.addr(), b"POST /x HTTP/1.1\r\nContent-Length: pony\r\n\r\n");
+        assert_eq!(status, 400);
+        server.shutdown();
+    }
+
+    #[test]
+    fn slow_trickling_client_is_cut_off_at_the_wall_clock_deadline() {
+        let opts = ServerOpts {
+            request_deadline: Duration::from_millis(300),
+            ..ServerOpts::default()
+        };
+        let server = echo_server(opts);
+        let start = Instant::now();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // Keep every individual read fast (defeating a per-read timeout)
+        // while never finishing the request.
+        let mut text = String::new();
+        let mut buf = [0u8; 1024];
+        for _ in 0..100 {
+            let dead_peer = s.write_all(b"G").is_err();
+            std::thread::sleep(Duration::from_millis(20));
+            // Poll for the server's answer without blocking forever.
+            s.set_read_timeout(Some(Duration::from_millis(5))).unwrap();
+            match s.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => text.push_str(&String::from_utf8_lossy(&buf[..n])),
+                Err(_) if dead_peer => break,
+                Err(_) => {}
+            }
+            if text.contains("\r\n\r\n") {
+                break;
+            }
+        }
+        // Drain whatever the server sent before closing on us.
+        s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        while let Ok(n) = s.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+            text.push_str(&String::from_utf8_lossy(&buf[..n]));
+        }
+        let elapsed = start.elapsed();
+        assert!(
+            text.starts_with("HTTP/1.1 408"),
+            "trickler should get 408, got {text:?}"
+        );
+        assert!(
+            elapsed < Duration::from_secs(2),
+            "deadline must be wall-clock, not per-read: took {elapsed:?}"
+        );
+        // The pool survives and other clients are served.
+        let (status, _) = raw(server.addr(), b"GET /ok HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn worker_pool_serves_while_one_connection_stalls() {
+        let opts = ServerOpts {
+            workers: 4,
+            request_deadline: Duration::from_secs(5),
+            ..ServerOpts::default()
+        };
+        let server = echo_server(opts);
+        // Open a connection and send nothing: it pins one worker until
+        // its deadline, but the pool keeps answering.
+        let stall = TcpStream::connect(server.addr()).unwrap();
+        for _ in 0..4 {
+            let (status, _) = raw(server.addr(), b"GET /live HTTP/1.1\r\n\r\n");
+            assert_eq!(status, 200);
+        }
+        // Release the pinned worker (silent EOF) before shutdown joins
+        // the pool, so the join does not wait out the request deadline.
+        drop(stall);
+        server.shutdown();
+    }
+
+    #[test]
+    fn handler_panic_answers_500_and_the_worker_survives() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            if req.path == "/boom" {
+                panic!("handler exploded");
+            }
+            Response::text(200, "ok\n")
+        });
+        let server =
+            HttpServer::bind("127.0.0.1:0", "test server", ServerOpts::default(), handler)
+                .unwrap();
+        let (status, _) = raw(server.addr(), b"GET /boom HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 500);
+        let (status, _) = raw(server.addr(), b"GET /fine HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_and_releases_the_port() {
+        let server = echo_server(ServerOpts::default());
+        let addr = server.addr();
+        let (status, _) = raw(addr, b"GET / HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        server.shutdown();
+        match TcpStream::connect(addr) {
+            Err(_) => {}
+            Ok(mut s) => {
+                let mut buf = String::new();
+                let _ = s.read_to_string(&mut buf);
+                assert!(buf.is_empty(), "no server should answer after shutdown");
+            }
+        }
+    }
+}

@@ -117,6 +117,10 @@ def check_serve(path, record, obs):
         if name not in obs["timings"]:
             fail(path, f"declared timing {name!r} missing")
     requests = int(record["config"]["requests"])
+    # The network-front probe (DESIGN.md §11) serves extra loopback
+    # queries through the same engine after the trace; they land in the
+    # same per-path/per-family counters and queue-stage timings.
+    requests += int(record.get("front", {}).get("requests", 0))
     # Store mode registers extra tenants mid-trace and queries each once.
     extra = obs["counters"].get('serve_requests_total{family="unknown"}', 0)
     by_path = sum(

@@ -2,6 +2,7 @@
 """Live-scrape smoke test against a running `gsoft ... --listen` exporter.
 
 Usage: scrape_smoke.py HOST:PORT [--expect-requests N] [--timeout SECS]
+                       [--serve-api --d N]
 
 Polls the exporter until it answers (the bench may still be binding),
 then asserts the full endpoint surface documented in DESIGN.md §10:
@@ -14,6 +15,13 @@ then asserts the full endpoint surface documented in DESIGN.md §10:
   - /slo            burn-rate report with per-objective windows;
   - a malformed request line gets HTTP 400 without killing the server;
   - an unknown path gets HTTP 404.
+
+With --serve-api the target is a `gsoft serve --listen` request front
+(DESIGN.md §11) rather than a bare exporter, and the request endpoints
+are driven first: GET /v1/tenants lists the fleet, POST /v1/query
+serves an input of dimension --d (default 16), a malformed body answers
+400, and an already-expired `deadline_ms` answers 504 — that traffic is
+then visible in the obs assertions above (same listener, one registry).
 
 Only the standard library is used (no requests/urllib3), matching the
 zero-dependency exporter on the other side of the socket.
@@ -42,6 +50,27 @@ def http_get(host, port, target, timeout=2.0):
     return status, body
 
 
+def http_post(host, port, target, body, timeout=10.0):
+    """One HTTP/1.1 POST with a JSON body. Returns (status, body_str)."""
+    encoded = body.encode()
+    head = (
+        f"POST {target} HTTP/1.1\r\nHost: {host}\r\n"
+        f"Content-Type: application/json\r\n"
+        f"Content-Length: {len(encoded)}\r\n\r\n"
+    ).encode()
+    with socket.create_connection((host, port), timeout=timeout) as s:
+        s.sendall(head + encoded)
+        chunks = []
+        while True:
+            data = s.recv(65536)
+            if not data:
+                break
+            chunks.append(data)
+    raw = b"".join(chunks).decode("utf-8", "replace")
+    head, _, body = raw.partition("\r\n\r\n")
+    return int(head.split(None, 2)[1]), body
+
+
 def http_raw(host, port, payload, timeout=2.0):
     """Send raw bytes, return the status code (0 = connection dropped)."""
     with socket.create_connection((host, port), timeout=timeout) as s:
@@ -68,6 +97,39 @@ def wait_up(host, port, deadline):
     fail(f"exporter at {host}:{port} did not come up in time")
 
 
+def drive_serve_api(host, port, d):
+    """Exercise the request front's endpoints (DESIGN.md §11)."""
+    status, body = http_get(host, port, "/v1/tenants")
+    if status != 200:
+        fail(f"/v1/tenants -> HTTP {status}")
+    tenants = json.loads(body).get("tenants", [])
+    if not tenants:
+        fail("/v1/tenants returned an empty fleet")
+    tenant = tenants[0]
+    print(f"[scrape_smoke] /v1/tenants ok ({len(tenants)} tenants)")
+
+    query = json.dumps({"tenant": tenant, "input": [0.5] * d})
+    status, body = http_post(host, port, "/v1/query", query)
+    if status != 200:
+        fail(f"/v1/query -> HTTP {status}: {body[:200]}")
+    out = json.loads(body)
+    if len(out.get("output", [])) != d or "path" not in out:
+        fail(f"/v1/query malformed response: {body[:200]}")
+    print(f"[scrape_smoke] /v1/query ok (path {out['path']}, {d} outputs)")
+
+    status, _ = http_post(host, port, "/v1/query", "{not json")
+    if status != 400:
+        fail(f"malformed query body -> HTTP {status}, expected 400")
+    expired = json.dumps({"tenant": tenant, "input": [0.5] * d, "deadline_ms": 0})
+    status, _ = http_post(host, port, "/v1/query", expired)
+    if status != 504:
+        fail(f"expired deadline -> HTTP {status}, expected 504")
+    status, _ = http_post(host, port, "/v1/tenants", "{}")
+    if status != 405:
+        fail(f"POST /v1/tenants -> HTTP {status}, expected 405")
+    print("[scrape_smoke] serve API error paths ok (400 / 504 / 405)")
+
+
 def main(argv):
     if len(argv) < 2:
         print(__doc__.strip(), file=sys.stderr)
@@ -80,8 +142,14 @@ def main(argv):
         expect = int(argv[argv.index("--expect-requests") + 1])
     if "--timeout" in argv:
         timeout = float(argv[argv.index("--timeout") + 1])
+    d = int(argv[argv.index("--d") + 1]) if "--d" in argv else 16
     deadline = time.time() + timeout
     wait_up(host, port, deadline)
+
+    # Request-front mode: drive the /v1 endpoints before the scrape
+    # assertions so the traffic they generate is visible below.
+    if "--serve-api" in argv:
+        drive_serve_api(host, port, d)
 
     # The bench may still be mid-sweep when we connect; poll /metrics
     # until the per-path counters account for the whole configured trace.
