@@ -11,10 +11,12 @@
 //! gsoft params-table
 //! gsoft perms
 //! gsoft serve    [--listen 127.0.0.1:9200 --tenants 8 --d 16
-//!                 --rate 50 --burst 100 --max-inflight 256 --hold-ms N]
+//!                 --rate 50 --burst 100 --max-inflight 256 --hold-ms N
+//!                 --capture-slow-ms N --topk K]
 //! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8
 //!                    --store DIR --reg-every 16 --smoke --obs
-//!                    --listen ADDR --hold-ms N --trace-cap N]
+//!                    --listen ADDR --hold-ms N --trace-cap N
+//!                    --capture-slow-ms N --topk K]
 //! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json --obs --listen ADDR]
 //! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json --obs --listen ADDR]
 //! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json --obs --listen ADDR]
@@ -185,7 +187,7 @@ fn release_listener(args: &Args, server: Option<gsoft::obs::ObsServer>) -> Resul
 
 /// Serve the live scrape endpoints over a small synthetic engine — the
 /// standing exporter (`/metrics`, `/metrics.json`, `/healthz`,
-/// `/tracez`, `/slo`; DESIGN.md §10). Primes the fleet with demo
+/// `/tracez`, `/tenantz`, `/slo`; DESIGN.md §10, §12). Primes the fleet with demo
 /// traffic so every endpoint has data, then stays up for `--hold-ms`
 /// milliseconds (0 = until the process is killed).
 fn obs_serve(args: &Args) -> Result<()> {
@@ -212,7 +214,7 @@ fn obs_serve(args: &Args) -> Result<()> {
     )?;
     let server = ObsServer::bind(&listen, engine.obs_sources())?;
     println!(
-        "[obs-serve] live at {} — /metrics /metrics.json /healthz /tracez /slo",
+        "[obs-serve] live at {} — /metrics /metrics.json /healthz /tracez /tenantz /slo",
         server.url()
     );
     let mut rng = Rng::new(seed ^ 0xb5);
@@ -255,12 +257,19 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let burst = args.opt_f64("burst", AdmissionCfg::default().burst)?;
     let max_inflight = args.opt_usize("max-inflight", AdmissionCfg::default().max_inflight)?;
     let hold_ms = args.opt_u64("hold-ms", 0)?;
+    // Per-tenant observability plane (DESIGN.md §12): requests slower
+    // than --capture-slow-ms land in the capture ring (default: the SLO
+    // p99 target); --topk bounds the heavy-hitter sketches.
+    let capture_slow_ms = args.opt_u64_opt("capture-slow-ms")?;
+    let topk = args.opt_usize("topk", gsoft::obs::DEFAULT_TENANT_TOPK)?;
 
     let registry = synthetic(tenants, layers, d, block, seed)?;
     let engine = Arc::new(Engine::new(
         registry,
         EngineOpts {
             workers,
+            capture_slow_ns: capture_slow_ms.map(|ms| ms.saturating_mul(1_000_000)),
+            tenant_topk: topk,
             ..EngineOpts::default()
         },
     )?);
@@ -275,7 +284,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let front = ServeFront::bind(&listen, Arc::clone(&engine), opts)?;
     println!(
         "[serve] request front live at {} — POST /v1/register /v1/query /v1/evict, \
-         GET /v1/tenants (+ /metrics /metrics.json /healthz /tracez /slo)",
+         GET /v1/tenants (+ /metrics /metrics.json /healthz /tracez /tenantz /slo)",
         front.url()
     );
     println!(
@@ -495,6 +504,8 @@ fn serve_bench(args: &Args) -> Result<()> {
     let reg_every = args.opt_usize("reg-every", 16)?.max(1);
     let store_dir = args.opt("store").map(std::path::PathBuf::from);
     let trace_cap = args.opt_usize("trace-cap", gsoft::serve::TRACE_RING_CAP)?;
+    let capture_slow_ms = args.opt_u64_opt("capture-slow-ms")?;
+    let topk = args.opt_usize("topk", gsoft::obs::DEFAULT_TENANT_TOPK)?;
     let listen = args.opt("listen").map(String::from);
 
     println!(
@@ -537,6 +548,8 @@ fn serve_bench(args: &Args) -> Result<()> {
             cache_budget_bytes: cache_mb << 20,
             spill_dir: store_dir.as_ref().map(|dir| dir.join("spill")),
             trace_ring_cap: trace_cap,
+            capture_slow_ns: capture_slow_ms.map(|ms| ms.saturating_mul(1_000_000)),
+            tenant_topk: topk,
             ..EngineOpts::default()
         },
     )?;
@@ -738,6 +751,10 @@ fn serve_bench(args: &Args) -> Result<()> {
     // evaluated on the final snapshot; burn rates also land in the obs
     // gauges as slo_*).
     fields.push(("slo", report.slo.to_json()));
+    // Per-tenant heavy hitters (DESIGN.md §12): bounded top-K sketches
+    // per dimension. Latency sums are run-dependent, so bench_diff
+    // ignores the whole "tenants." subtree like "obs."/"slo.".
+    fields.push(("tenants", report.tenants.to_json()));
     fields.push(("traces_recorded", Json::Num(report.traces.len() as f64)));
     if reg_pool.is_some() {
         fields.push((
@@ -1262,10 +1279,15 @@ Utilities:
                 passes admission control: per-tenant token buckets
                 (429 past --rate/--burst), a global --max-inflight cap
                 (503), and client deadlines (`deadline_ms` in the query
-                body; expired work is shed before compute, 504)
+                body; expired work is shed before compute, 504). Every
+                response carries a `req_id` (client-supplied or minted)
+                that `/tracez?req=ID` resolves to its stage trace even
+                after the main ring wraps; `/tenantz` serves the
+                per-tenant heavy hitters (DESIGN.md §12)
                 [--listen 127.0.0.1:9200 --tenants 8 --layers 2 --d 16
                  --block 4 --workers 2 --rate 50 --burst 100
-                 --max-inflight 256 --hold-ms N (0 = forever)]
+                 --max-inflight 256 --hold-ms N (0 = forever)
+                 --capture-slow-ms N --topk K]
   serve-bench   multi-tenant adapter serving engine benchmark
                 [--tenants 256 --requests 4096 --layers 4 --d 64
                  --block 8 --zipf-s 1.1 --max-batch 16 --cache-mb 64]
@@ -1296,7 +1318,7 @@ Utilities:
                 --format json   [--tenants 8 --requests 128 --d 16]
   obs-serve     stand up the live scrape endpoints over a small
                 synthetic engine: /metrics (Prometheus text),
-                /metrics.json, /healthz, /tracez, /slo
+                /metrics.json, /healthz, /tracez, /tenantz, /slo
                 [--listen 127.0.0.1:9100 --hold-ms N (0 = forever)
                  --tenants 8 --requests 128 --d 16]
   trace         drive a small synthetic fleet and export its request
@@ -1316,6 +1338,16 @@ also takes --listen ADDR to serve the live scrape endpoints during the
 run (serve-bench: that engine's metrics/traces/health; other benches:
 the process-wide registry) and --hold-ms N to keep them up after the
 sweep. serve-bench --trace-cap N resizes the recent-trace ring.
+
+Per-tenant plane (DESIGN.md §12): serve and serve-bench track heavy
+hitters per tenant in bounded top-K sketches (--topk K, default 32 —
+at most K metric series per dimension no matter how many tenants) and
+capture slow/shed/errored request traces in a separate ring
+(--capture-slow-ms N; default: the serve p99 SLO target). /tenantz
+serves the sketches (?format=text for a table); /tracez grows
+?req=ID / ?tenant=T / ?min_total_ns=N / ?captured=1 filters, and
+serve-bench records the sketch summary under "tenants" in
+BENCH_serve.json.
 
 Common options: --steps N --pretrain-steps N --eval-batches N --lr X
                 --workers N --seed N --artifacts DIR --no-cache --obs

@@ -1,0 +1,215 @@
+//! Slow/error request capture: a second, smaller trace ring that only
+//! admits *interesting* requests (DESIGN.md §12).
+//!
+//! The main [`TraceRing`](super::trace::TraceRing) keeps the newest N
+//! traces of *all* traffic, so a tail-latency event is overwritten
+//! within milliseconds under load. The [`CaptureRing`] holds full
+//! [`Trace`]s that crossed a threshold — `total_ns` over the slow bar,
+//! shed at the deadline, or errored — each tagged with its
+//! [`CaptureReason`]. Because only exceptional requests enter, an
+//! incident survives long after the main ring has wrapped; `/tracez?
+//! captured=1` reads it back and the Chrome exporter renders it like
+//! any other trace set.
+//!
+//! Same lock-free-claim slot discipline as the main ring: writers take
+//! a capture sequence with one `fetch_add`, write slot `seq % cap`, and
+//! newer sequence wins a slot race — the ring holds exactly the newest
+//! `capacity` captures after any quiescent point.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+use super::trace::Trace;
+
+/// Default capture-ring capacity. Captures are rare by construction, so
+/// a small ring covers a long incident window.
+pub const CAPTURE_RING_CAP: usize = 64;
+
+/// Why a trace was retained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaptureReason {
+    /// `total_ns` exceeded the slow threshold (explicit
+    /// `EngineOpts::capture_slow_ns` or the serve-SLO p99 objective).
+    Slow,
+    /// Shed at its deadline before compute.
+    DeadlineShed,
+    /// The batch errored or its worker panicked.
+    Error,
+}
+
+impl CaptureReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            CaptureReason::Slow => "slow",
+            CaptureReason::DeadlineShed => "deadline_shed",
+            CaptureReason::Error => "error",
+        }
+    }
+}
+
+/// A retained trace plus why it was retained. `cap_seq` orders captures
+/// within this ring (independent of the trace's main-ring `seq`).
+#[derive(Clone, Debug)]
+pub struct Captured {
+    pub cap_seq: u64,
+    pub reason: CaptureReason,
+    pub trace: Trace,
+}
+
+impl Captured {
+    /// The trace's JSON with capture fields spliced in — one shape for
+    /// both `/tracez` variants, so consumers parse a single schema.
+    pub fn to_json(&self) -> Json {
+        let mut j = self.trace.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("captured".to_string(), Json::u64(self.cap_seq));
+            map.insert("reason".to_string(), Json::Str(self.reason.name().to_string()));
+        }
+        j
+    }
+}
+
+/// Lossy newest-N ring of [`Captured`] records.
+pub struct CaptureRing {
+    seq: AtomicU64,
+    slots: Vec<Mutex<Option<Captured>>>,
+}
+
+impl CaptureRing {
+    pub fn new(capacity: usize) -> CaptureRing {
+        CaptureRing {
+            seq: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total captures ever pushed (not the resident count).
+    pub fn captured(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Retain a trace. Returns the assigned capture sequence.
+    pub fn push(&self, reason: CaptureReason, trace: Trace) -> u64 {
+        let cap_seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut slot = self.slots[(cap_seq % self.slots.len() as u64) as usize].lock().unwrap();
+        let stale = match slot.as_ref() {
+            Some(c) => c.cap_seq < cap_seq,
+            None => true,
+        };
+        if stale {
+            *slot = Some(Captured {
+                cap_seq,
+                reason,
+                trace,
+            });
+        }
+        cap_seq
+    }
+
+    /// Resident captures, newest first.
+    pub fn snapshot(&self) -> Vec<Captured> {
+        let mut out: Vec<Captured> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        out.sort_by(|a, b| b.cap_seq.cmp(&a.cap_seq));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(Captured::to_json).collect())
+    }
+}
+
+impl std::fmt::Debug for CaptureRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CaptureRing(cap {}, captured {})", self.slots.len(), self.captured())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Stage;
+    use std::sync::Arc;
+
+    fn trace(req_id: u64) -> Trace {
+        Trace {
+            seq: 0,
+            req_id,
+            tenant: req_id % 5,
+            path: "cold_merge",
+            start_ns: 10 * req_id,
+            worker: 0,
+            total_ns: 1_000_000 + req_id,
+            stage_ns: [1, 0, 2, 0, 3, 4],
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_n_single_threaded() {
+        let ring = CaptureRing::new(3);
+        for i in 0..7 {
+            let reason = if i % 2 == 0 { CaptureReason::Slow } else { CaptureReason::Error };
+            ring.push(reason, trace(i));
+        }
+        let snap = ring.snapshot();
+        let seqs: Vec<u64> = snap.iter().map(|c| c.cap_seq).collect();
+        assert_eq!(seqs, vec![6, 5, 4], "newest first, exactly capacity");
+        assert_eq!(ring.captured(), 7);
+        assert_eq!(snap[0].reason, CaptureReason::Slow);
+        assert_eq!(snap[1].reason, CaptureReason::Error);
+    }
+
+    #[test]
+    fn ring_keeps_newest_n_under_concurrent_writers() {
+        // Mirrors the TraceRing retention test: any interleaving of
+        // writers must leave exactly the newest CAP capture sequences.
+        const CAP: usize = 8;
+        const THREADS: u64 = 4;
+        const PER: u64 = 100;
+        let ring = Arc::new(CaptureRing::new(CAP));
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        ring.push(CaptureReason::DeadlineShed, trace(t * PER + i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = THREADS * PER;
+        let seqs: Vec<u64> = ring.snapshot().iter().map(|c| c.cap_seq).collect();
+        let want: Vec<u64> = (0..CAP as u64).map(|i| total - 1 - i).collect();
+        assert_eq!(seqs, want, "ring must retain exactly the newest {CAP} captures");
+    }
+
+    #[test]
+    fn captured_json_carries_reason_and_trace_fields() {
+        let ring = CaptureRing::new(2);
+        ring.push(CaptureReason::Slow, trace(77));
+        let j = ring.to_json();
+        let c = &j.as_arr().unwrap()[0];
+        assert_eq!(c.get("reason").unwrap().as_str(), Some("slow"));
+        assert_eq!(c.get("req_id").unwrap().as_u64(), Some(77));
+        assert_eq!(c.get("captured").unwrap().as_u64(), Some(0));
+        let stages = c.get("stage_ns").unwrap().as_obj().unwrap();
+        assert!(stages.contains_key(Stage::Kernel.name()));
+        assert_eq!(
+            [CaptureReason::Slow, CaptureReason::DeadlineShed, CaptureReason::Error]
+                .map(CaptureReason::name),
+            ["slow", "deadline_shed", "error"]
+        );
+    }
+}

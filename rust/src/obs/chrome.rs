@@ -69,7 +69,10 @@ pub fn chrome_trace(traces: &[Trace], pid: u64) -> Json {
         let tid = t.worker as u64 + 1;
         let args = Json::obj(vec![
             ("tenant", Json::Num(t.tenant as f64)),
-            ("seq", Json::Num(t.seq as f64)),
+            ("seq", Json::u64(t.seq)),
+            // Correlation key: the same id the `/v1/query` response and
+            // `/tracez?req=` carry.
+            ("req", Json::u64(t.req_id)),
         ]);
         events.push(span_event(t.path, "request", pid, tid, t.start_ns, t.total_ns, args));
         // Stages laid out back-to-back from the request start, pipeline
@@ -99,6 +102,7 @@ mod tests {
     fn trace(seq: u64, worker: u32, start_ns: u64) -> Trace {
         Trace {
             seq,
+            req_id: 10 + seq,
             tenant: 7,
             path: "cached_dense",
             start_ns,
@@ -142,6 +146,8 @@ mod tests {
         assert_eq!(req.get("name").and_then(|n| n.as_str()), Some("cached_dense"));
         assert_eq!(req.get("ts").unwrap().as_f64().unwrap(), 100.0, "ns→µs");
         assert_eq!(req.get("dur").unwrap().as_f64().unwrap(), 5.0);
+        let args = req.get("args").unwrap();
+        assert_eq!(args.get("req").unwrap().as_u64(), Some(14), "req_id rides in span args");
         let req_end = 100.0 + 5.0;
         let mut cursor = 100.0;
         let names: Vec<&str> =

@@ -9,8 +9,16 @@
 //! | `/metrics`      | Prometheus text ([`RegistrySnapshot::prometheus`])|
 //! | `/metrics.json` | the same snapshot as JSON                         |
 //! | `/healthz`      | liveness probes, HTTP 200/503                     |
-//! | `/tracez`       | newest ring traces, JSON                          |
+//! | `/tracez`       | newest ring traces, JSON (filterable, see below)  |
+//! | `/tenantz`      | per-tenant heavy hitters (JSON or `?format=text`) |
 //! | `/slo`          | multi-window SLO burn-rate report                 |
+//!
+//! `/tracez` accepts query filters — `req=<id>` (request-ID lookup,
+//! searched in the main ring *and* the capture ring so an interesting
+//! request stays findable after the main ring wraps), `tenant=<id>`,
+//! `min_total_ns=<ns>`, and `captured=1` (only retained slow/shed/error
+//! traces, each carrying its `reason`). Unknown keys or non-numeric
+//! values are a 400, never silently ignored (DESIGN.md §12).
 //!
 //! The server scrapes through [`ObsSources`] — boxed closures over
 //! whatever owns the telemetry (an engine's shared state via
@@ -37,8 +45,10 @@ use anyhow::Result;
 use crate::util::json::Json;
 use crate::util::net::{Handler, HttpServer, Request, Response, ServerOpts};
 
+use super::capture::Captured;
 use super::registry::{MetricsRegistry, RegistrySnapshot};
 use super::slo::{SloSet, SloTracker};
+use super::tenantstats::{TenantStats, TenantSummary, DEFAULT_TENANT_TOPK};
 use super::trace::Trace;
 
 /// Upper bound on the bytes read from one request head (line + headers).
@@ -92,6 +102,11 @@ impl HealthReport {
 pub struct ObsSources {
     pub metrics: Box<dyn Fn() -> RegistrySnapshot + Send + Sync>,
     pub traces: Box<dyn Fn() -> Vec<Trace> + Send + Sync>,
+    /// Retained slow/shed/error traces (the capture ring) — backs
+    /// `/tracez?captured=1` and `req=` lookups past the main ring.
+    pub captured: Box<dyn Fn() -> Vec<Captured> + Send + Sync>,
+    /// Per-tenant heavy-hitter summary — the `/tenantz` payload.
+    pub tenants: Box<dyn Fn() -> TenantSummary + Send + Sync>,
     pub health: Box<dyn Fn() -> HealthReport + Send + Sync>,
     /// Burn-rate tracker fed lazily by `/slo` requests — scraping IS the
     /// tick, no dedicated timer thread.
@@ -106,6 +121,8 @@ impl ObsSources {
         ObsSources {
             metrics: Box::new(|| super::global().snapshot()),
             traces: Box::new(Vec::new),
+            captured: Box::new(Vec::new),
+            tenants: Box::new(|| TenantStats::new(DEFAULT_TENANT_TOPK).summary()),
             health: Box::new(|| HealthReport {
                 checks: vec![HealthCheck {
                     name: "process".to_string(),
@@ -120,7 +137,8 @@ impl ObsSources {
 
 /// Routable paths; anything else is a 404 (and counted under the
 /// `other` label so metric names never embed attacker-chosen strings).
-const ROUTES: [&str; 6] = ["/", "/metrics", "/metrics.json", "/healthz", "/tracez", "/slo"];
+const ROUTES: [&str; 7] =
+    ["/", "/metrics", "/metrics.json", "/healthz", "/tracez", "/tenantz", "/slo"];
 
 struct ServerState {
     sources: ObsSources,
@@ -211,7 +229,7 @@ fn obs_handler(state: &ServerState, req: &Request) -> Response {
         .requests
         .counter(&format!("http_requests_total{{path=\"{label}\"}}"))
         .inc();
-    match route(state, &req.path) {
+    match route(state, req) {
         Some((status, ctype, body)) => Response {
             status,
             content_type: ctype,
@@ -221,12 +239,92 @@ fn obs_handler(state: &ServerState, req: &Request) -> Response {
     }
 }
 
-fn route(state: &ServerState, path: &str) -> Option<(u16, &'static str, String)> {
-    match path {
+/// Parse one numeric query value; the error text names the key so a 400
+/// tells the caller exactly which parameter was bad.
+fn parse_u64(key: &str, value: &str) -> Result<u64, String> {
+    value
+        .parse()
+        .map_err(|_| format!("parameter '{key}' must be an unsigned integer, got '{value}'\n"))
+}
+
+/// `/tracez` with filters. Returns the JSON body, or a 400 message for
+/// an unknown key / malformed value.
+fn tracez(state: &ServerState, req: &Request) -> Result<String, String> {
+    let mut captured_only = false;
+    let mut want_req: Option<u64> = None;
+    let mut want_tenant: Option<u64> = None;
+    let mut min_total_ns: Option<u64> = None;
+    for (k, v) in req.query_params()? {
+        match k.as_str() {
+            "captured" => {
+                captured_only = match v.as_str() {
+                    "1" => true,
+                    "0" => false,
+                    _ => return Err(format!("parameter 'captured' must be 0 or 1, got '{v}'\n")),
+                }
+            }
+            "req" => want_req = Some(parse_u64("req", &v)?),
+            "tenant" => want_tenant = Some(parse_u64("tenant", &v)?),
+            "min_total_ns" => min_total_ns = Some(parse_u64("min_total_ns", &v)?),
+            _ => return Err(format!("unknown /tracez parameter '{k}'\n")),
+        }
+    }
+    let keep = |t: &Trace| {
+        want_req.is_none_or(|r| t.req_id == r)
+            && want_tenant.is_none_or(|x| t.tenant == x)
+            && min_total_ns.is_none_or(|m| t.total_ns >= m)
+    };
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    if !captured_only {
+        for t in (state.sources.traces)() {
+            if keep(&t) {
+                seen.insert(t.seq);
+                out.push(t.to_json());
+            }
+        }
+    }
+    // The capture ring answers `captured=1` directly and backs every
+    // `req=` lookup: an interesting request outlives the main ring here.
+    // Capture seqs are main-ring seqs, so resident duplicates dedupe.
+    if captured_only || want_req.is_some() {
+        for c in (state.sources.captured)() {
+            if keep(&c.trace) && seen.insert(c.trace.seq) {
+                out.push(c.to_json());
+            }
+        }
+    }
+    Ok(Json::Arr(out).pretty())
+}
+
+/// `/tenantz`: the heavy-hitter summary, JSON by default or a terminal
+/// table with `?format=text`.
+fn tenantz(state: &ServerState, req: &Request) -> Result<(&'static str, String), String> {
+    let mut text = false;
+    for (k, v) in req.query_params()? {
+        match (k.as_str(), v.as_str()) {
+            ("format", "text") => text = true,
+            ("format", "json") => text = false,
+            ("format", _) => {
+                return Err(format!("parameter 'format' must be json or text, got '{v}'\n"))
+            }
+            _ => return Err(format!("unknown /tenantz parameter '{k}'\n")),
+        }
+    }
+    let summary = (state.sources.tenants)();
+    Ok(if text {
+        ("text/plain", summary.text_table())
+    } else {
+        ("application/json", summary.to_json().pretty())
+    })
+}
+
+fn route(state: &ServerState, req: &Request) -> Option<(u16, &'static str, String)> {
+    match req.path.as_str() {
         "/" => Some((
             200,
             "text/plain",
-            "gsoft obs exporter\n\n/metrics\n/metrics.json\n/healthz\n/tracez\n/slo\n"
+            "gsoft obs exporter\n\n/metrics\n/metrics.json\n/healthz\n/tracez\n/tenantz\n/slo\n"
                 .to_string(),
         )),
         "/metrics" => {
@@ -244,11 +342,14 @@ fn route(state: &ServerState, path: &str) -> Option<(u16, &'static str, String)>
             let status = if h.ok() { 200 } else { 503 };
             Some((status, "application/json", h.to_json().pretty()))
         }
-        "/tracez" => {
-            let traces = (state.sources.traces)();
-            let body = Json::Arr(traces.iter().map(Trace::to_json).collect()).pretty();
-            Some((200, "application/json", body))
-        }
+        "/tracez" => Some(match tracez(state, req) {
+            Ok(body) => (200, "application/json", body),
+            Err(msg) => (400, "text/plain", msg),
+        }),
+        "/tenantz" => Some(match tenantz(state, req) {
+            Ok((ctype, body)) => (200, ctype, body),
+            Err(msg) => (400, "text/plain", msg),
+        }),
         "/slo" => {
             let report = state.sources.slo.observe_and_report((state.sources.metrics)());
             Some((200, "application/json", report.to_json().pretty()))
@@ -288,6 +389,7 @@ mod tests {
     fn test_trace(seq: u64) -> Trace {
         Trace {
             seq,
+            req_id: 100 + seq,
             tenant: 1,
             path: "cached_dense",
             start_ns: seq * 1000,
@@ -297,11 +399,32 @@ mod tests {
         }
     }
 
+    /// One retained slow trace, far outside the main ring's seq range.
+    fn test_captured() -> Captured {
+        let mut t = test_trace(99);
+        t.req_id = 777;
+        t.tenant = 2;
+        t.total_ns = 9_000;
+        Captured {
+            cap_seq: 0,
+            reason: crate::obs::CaptureReason::Slow,
+            trace: t,
+        }
+    }
+
     fn test_sources(reg: &Arc<MetricsRegistry>, healthy: bool) -> ObsSources {
         let m = Arc::clone(reg);
         ObsSources {
             metrics: Box::new(move || m.snapshot()),
             traces: Box::new(|| vec![test_trace(5), test_trace(4)]),
+            captured: Box::new(|| vec![test_captured()]),
+            tenants: Box::new(|| {
+                let stats = TenantStats::new(4);
+                stats.record_request(7, 1_000);
+                stats.record_request(7, 2_000);
+                stats.record_request(9, 500);
+                stats.summary()
+            }),
             health: Box::new(move || HealthReport {
                 checks: vec![HealthCheck {
                     name: "probe".to_string(),
@@ -358,11 +481,86 @@ mod tests {
         assert_eq!(j.get("objectives").and_then(|o| o.as_arr()).unwrap().len(), 3);
 
         let (status, _) = get(addr, "/metrics?debug=1");
-        assert_eq!(status, 200, "query strings are stripped");
+        assert_eq!(status, 200, "non-filtering routes ignore query strings");
         let (status, _) = get(addr, "/nope");
         assert_eq!(status, 404);
         let (status, _) = raw(addr, "POST /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
         assert_eq!(status, 405);
+        server.shutdown();
+    }
+
+    #[test]
+    fn tracez_filters_by_req_tenant_total_and_captured() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let server = ObsServer::bind("127.0.0.1:0", test_sources(&reg, true)).unwrap();
+        let addr = server.addr();
+        let entries = |target: &str| -> Vec<Json> {
+            let (status, body) = get(addr, target);
+            assert_eq!(status, 200, "{target}: {body}");
+            Json::parse(&body).unwrap().as_arr().unwrap().to_vec()
+        };
+
+        // Request-ID lookup in the main ring.
+        let hit = entries("/tracez?req=105");
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].get("seq").unwrap().as_u64(), Some(5));
+
+        // Request-ID lookup that only the capture ring can answer.
+        let hit = entries("/tracez?req=777");
+        assert_eq!(hit.len(), 1, "req= must search the capture ring too");
+        assert_eq!(hit[0].get("reason").unwrap().as_str(), Some("slow"));
+
+        // captured=1: only retained traces, each with a reason.
+        let cap = entries("/tracez?captured=1");
+        assert_eq!(cap.len(), 1);
+        assert_eq!(cap[0].get("req_id").unwrap().as_u64(), Some(777));
+
+        // Tenant and latency filters over the main ring.
+        assert_eq!(entries("/tracez?tenant=1").len(), 2);
+        assert_eq!(entries("/tracez?tenant=6").len(), 0);
+        assert_eq!(entries("/tracez?min_total_ns=400").len(), 2);
+        assert_eq!(entries("/tracez?min_total_ns=501").len(), 0);
+        assert_eq!(entries("/tracez?captured=1&tenant=2&min_total_ns=600").len(), 1);
+
+        // Unknown keys and malformed values are 400s, never ignored.
+        for bad in [
+            "/tracez?bogus=1",
+            "/tracez?req=abc",
+            "/tracez?tenant=-3",
+            "/tracez?min_total_ns=",
+            "/tracez?captured=maybe",
+            "/tracez?req",
+        ] {
+            let (status, _) = get(addr, bad);
+            assert_eq!(status, 400, "{bad} must be rejected");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn tenantz_serves_json_and_text_with_strict_params() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let server = ObsServer::bind("127.0.0.1:0", test_sources(&reg, true)).unwrap();
+        let addr = server.addr();
+
+        let (status, body) = get(addr, "/tenantz");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("k").unwrap().as_u64(), Some(4));
+        let reqs = j.get("dims").unwrap().get("requests").unwrap();
+        assert_eq!(reqs.get("total").unwrap().as_u64(), Some(3));
+        let top = &reqs.get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(top.get("tenant").unwrap().as_u64(), Some(7), "hottest tenant first");
+
+        let (status, body) = get(addr, "/tenantz?format=text");
+        assert_eq!(status, 200);
+        assert!(body.contains("heavy hitters") && body.contains("latency_ns_sum"), "{body}");
+        let (status, _) = get(addr, "/tenantz?format=json");
+        assert_eq!(status, 200);
+        for bad in ["/tenantz?format=yaml", "/tenantz?k=5"] {
+            let (status, _) = get(addr, bad);
+            assert_eq!(status, 400, "{bad} must be rejected");
+        }
         server.shutdown();
     }
 

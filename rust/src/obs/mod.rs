@@ -14,7 +14,12 @@
 //! - [`slo`] — declarative SLO objectives with multi-window burn rates
 //!   over snapshot deltas;
 //! - [`chrome`] — Chrome trace-event export of ring traces
-//!   (`gsoft trace`, loadable in `chrome://tracing`/Perfetto).
+//!   (`gsoft trace`, loadable in `chrome://tracing`/Perfetto);
+//! - [`tenantstats`] — per-tenant heavy hitters in K-slot SpaceSaving
+//!   sketches (`/tenantz`, `serve_tenant_topk_*`; cardinality is capped
+//!   at K per dimension regardless of fleet size, DESIGN.md §12);
+//! - [`capture`] — a small second ring retaining slow/shed/errored
+//!   request traces long after the main ring wraps (`/tracez?captured=1`).
 //!
 //! Two scopes exist. The serving engine owns a *per-engine*
 //! [`MetricsRegistry`] (isolated per instance, snapshotted into
@@ -25,18 +30,22 @@
 //! performs no timing, no allocation and no registry access. Enable via
 //! `gsoft <bench> --obs` or [`set_enabled`].
 
+pub mod capture;
 pub mod chrome;
 pub mod hist;
 pub mod http;
 pub mod registry;
 pub mod slo;
+pub mod tenantstats;
 pub mod trace;
 
+pub use capture::{CaptureReason, CaptureRing, Captured, CAPTURE_RING_CAP};
 pub use chrome::chrome_trace;
 pub use hist::{Histo, HistoSnapshot};
 pub use http::{HealthCheck, HealthReport, ObsRoutes, ObsServer, ObsSources};
 pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
 pub use slo::{SloReport, SloSet, SloTracker};
+pub use tenantstats::{SpaceSaving, TenantStats, TenantSummary, DEFAULT_TENANT_TOPK};
 pub use trace::{Stage, Trace, TraceRing};
 
 use std::sync::atomic::{AtomicBool, Ordering};

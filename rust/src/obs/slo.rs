@@ -36,6 +36,12 @@ use super::registry::{MetricsRegistry, RegistrySnapshot};
 /// infinity (e.g. a miss ratio against a zero budget).
 pub const BURN_CAP: f64 = 1e6;
 
+/// The `serve_p99_latency` objective ceiling in [`SloSet::serve_default`]
+/// (250 ms end-to-end). Also the default slow-request capture threshold:
+/// when `EngineOpts::capture_slow_ns` is unset, any request at or past
+/// the SLO objective is retained in the capture ring.
+pub const SERVE_P99_TARGET_NS: u64 = 250_000_000;
+
 /// What an objective measures over a snapshot window. Metric selectors
 /// are *prefixes* into the flat metric namespace, so one objective can
 /// aggregate a labeled family (`serve_request_ns{` merges every path's
@@ -78,7 +84,7 @@ impl SloSet {
                     kind: SloKind::QuantileMax {
                         histo_prefix: s("serve_request_ns{"),
                         q: 0.99,
-                        max: 250_000_000, // 250 ms end-to-end
+                        max: SERVE_P99_TARGET_NS, // 250 ms end-to-end
                     },
                 },
                 SloObjective {

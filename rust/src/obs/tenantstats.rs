@@ -1,0 +1,534 @@
+//! Bounded-cardinality per-tenant telemetry (DESIGN.md §12).
+//!
+//! The fleet-global registries (§9) cannot answer "*which tenant* is
+//! hot/slow/shedding" — and naive per-tenant labels would grow the
+//! registry linearly with the fleet (millions of tenants is the north
+//! star). This module keeps per-tenant telemetry at **fixed size**: a
+//! SpaceSaving top-K sketch (Metwally, Agrawal, El Abbadi 2005) per
+//! dimension, K slots each, regardless of how many tenants exist.
+//!
+//! Guarantees (property-tested against an exact-count oracle):
+//! - every tracked count **overestimates** the true count by at most the
+//!   slot's recorded `err`, and `err ≤ N/K` (N = total weight observed);
+//! - any tenant whose true count exceeds `N/K` **is tracked** (top-K
+//!   superset guarantee);
+//! - the sum of tracked counts equals N exactly (each observation lands
+//!   in exactly one slot), so top-K counts can never claim more traffic
+//!   than was served;
+//! - two sketches merge into one with the same bounds over the combined
+//!   stream (fleet views fold shard-by-shard).
+//!
+//! [`TenantStats`] bundles one sketch per dimension — request count,
+//! latency sum, deadline sheds, admission rejections — behind cheap
+//! mutexes (`observe` is an O(K) scan, K ≈ 32). Snapshots export as the
+//! `tenants` section of `EngineReport`/`BENCH_serve.json`, the
+//! `/tenantz` endpoint (JSON + text table), and `serve_tenant_topk_*`
+//! gauges whose series count is capped at K per dimension.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+use super::registry::RegistrySnapshot;
+
+/// Default K: slots per dimension. 32 tracked tenants per dimension is
+/// plenty to name an abuser while keeping `/metrics` cardinality flat.
+pub const DEFAULT_TENANT_TOPK: usize = 32;
+
+/// One tracked heavy hitter: `count` overestimates the tenant's true
+/// total by at most `err`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TopEntry {
+    pub tenant: u64,
+    pub count: u64,
+    pub err: u64,
+}
+
+/// SpaceSaving top-K sketch over `(tenant, weight)` observations.
+#[derive(Clone, Debug)]
+pub struct SpaceSaving {
+    k: usize,
+    total: u64,
+    slots: Vec<TopEntry>,
+}
+
+impl SpaceSaving {
+    pub fn new(k: usize) -> SpaceSaving {
+        SpaceSaving {
+            k: k.max(1),
+            total: 0,
+            slots: Vec::new(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Total weight observed (the N in the `err ≤ N/K` bound).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The minimum tracked count once full — an upper bound on the true
+    /// count of *any* untracked tenant (0 while slots remain).
+    fn floor(&self) -> u64 {
+        if self.slots.len() < self.k {
+            0
+        } else {
+            self.slots.iter().map(|e| e.count).min().unwrap_or(0)
+        }
+    }
+
+    /// Record `weight` for `tenant`. Tracked tenants accumulate; a new
+    /// tenant either takes a free slot or evicts the current minimum,
+    /// inheriting its count as the new slot's error bound.
+    pub fn observe(&mut self, tenant: u64, weight: u64) {
+        self.total = self.total.saturating_add(weight);
+        if let Some(e) = self.slots.iter_mut().find(|e| e.tenant == tenant) {
+            e.count = e.count.saturating_add(weight);
+            return;
+        }
+        if self.slots.len() < self.k {
+            self.slots.push(TopEntry {
+                tenant,
+                count: weight,
+                err: 0,
+            });
+            return;
+        }
+        let min = self.slots.iter_mut().min_by_key(|e| e.count).unwrap();
+        let inherited = min.count;
+        *min = TopEntry {
+            tenant,
+            count: inherited.saturating_add(weight),
+            err: inherited,
+        };
+    }
+
+    /// The tracked entry for `tenant`, if it survived in the top-K.
+    pub fn estimate(&self, tenant: u64) -> Option<&TopEntry> {
+        self.slots.iter().find(|e| e.tenant == tenant)
+    }
+
+    /// Tracked entries, highest count first (ties broken by tenant id
+    /// for deterministic output).
+    pub fn entries(&self) -> Vec<TopEntry> {
+        let mut out = self.slots.clone();
+        out.sort_by(|a, b| b.count.cmp(&a.count).then(a.tenant.cmp(&b.tenant)));
+        out
+    }
+
+    /// Merge two sketches over disjoint streams into one covering the
+    /// combined stream. A tenant tracked on only one side may hold up to
+    /// the other side's `floor()` unseen weight there, so that floor is
+    /// added to both its count and its error — estimates stay
+    /// overestimates and `err` stays ≤ (N₁+N₂)/K.
+    pub fn merge(&self, other: &SpaceSaving) -> SpaceSaving {
+        let (fa, fb) = (self.floor(), other.floor());
+        let mut by_tenant: BTreeMap<u64, TopEntry> = BTreeMap::new();
+        for e in &self.slots {
+            by_tenant.insert(e.tenant, e.clone());
+        }
+        for e in &other.slots {
+            match by_tenant.get_mut(&e.tenant) {
+                Some(mine) => {
+                    mine.count = mine.count.saturating_add(e.count);
+                    mine.err = mine.err.saturating_add(e.err);
+                }
+                None => {
+                    by_tenant.insert(
+                        e.tenant,
+                        TopEntry {
+                            tenant: e.tenant,
+                            count: e.count.saturating_add(fa),
+                            err: e.err.saturating_add(fa),
+                        },
+                    );
+                }
+            }
+        }
+        // Tenants absent from `other` may still hold up to fb there.
+        for e in &self.slots {
+            if other.estimate(e.tenant).is_none() {
+                let m = by_tenant.get_mut(&e.tenant).unwrap();
+                m.count = m.count.saturating_add(fb);
+                m.err = m.err.saturating_add(fb);
+            }
+        }
+        let mut merged: Vec<TopEntry> = by_tenant.into_values().collect();
+        merged.sort_by(|a, b| b.count.cmp(&a.count).then(a.tenant.cmp(&b.tenant)));
+        let k = self.k.max(other.k);
+        merged.truncate(k);
+        SpaceSaving {
+            k,
+            total: self.total.saturating_add(other.total),
+            slots: merged,
+        }
+    }
+}
+
+/// The fixed per-tenant dimension set. A new dimension must also be
+/// added to `tools/check_obs.py` and DESIGN.md §12.
+pub const TENANT_DIMS: [&str; 4] =
+    ["requests", "latency_ns_sum", "deadline_sheds", "admission_rejected"];
+
+/// One sketch per dimension, shared by the engine hot path (request
+/// completion, deadline sheds) and the front (admission rejections).
+#[derive(Debug)]
+pub struct TenantStats {
+    k: usize,
+    requests: Mutex<SpaceSaving>,
+    latency_ns: Mutex<SpaceSaving>,
+    deadline_sheds: Mutex<SpaceSaving>,
+    rejections: Mutex<SpaceSaving>,
+}
+
+impl TenantStats {
+    pub fn new(k: usize) -> TenantStats {
+        let k = k.max(1);
+        TenantStats {
+            k,
+            requests: Mutex::new(SpaceSaving::new(k)),
+            latency_ns: Mutex::new(SpaceSaving::new(k)),
+            deadline_sheds: Mutex::new(SpaceSaving::new(k)),
+            rejections: Mutex::new(SpaceSaving::new(k)),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// A completed request: counts once, adds its latency to the sum.
+    pub fn record_request(&self, tenant: u64, latency_ns: u64) {
+        self.requests.lock().unwrap().observe(tenant, 1);
+        self.latency_ns.lock().unwrap().observe(tenant, latency_ns);
+    }
+
+    /// A job shed at its deadline before compute.
+    pub fn record_shed(&self, tenant: u64) {
+        self.deadline_sheds.lock().unwrap().observe(tenant, 1);
+    }
+
+    /// An admission-gate rejection (429/503/504 before the engine).
+    pub fn record_rejection(&self, tenant: u64) {
+        self.rejections.lock().unwrap().observe(tenant, 1);
+    }
+
+    /// Point-in-time view of all dimensions.
+    pub fn summary(&self) -> TenantSummary {
+        let dim = |name: &'static str, s: &Mutex<SpaceSaving>| {
+            let s = s.lock().unwrap();
+            DimSummary {
+                name,
+                total: s.total(),
+                entries: s.entries(),
+            }
+        };
+        TenantSummary {
+            k: self.k,
+            dims: vec![
+                dim(TENANT_DIMS[0], &self.requests),
+                dim(TENANT_DIMS[1], &self.latency_ns),
+                dim(TENANT_DIMS[2], &self.deadline_sheds),
+                dim(TENANT_DIMS[3], &self.rejections),
+            ],
+        }
+    }
+}
+
+/// One dimension's tracked entries (already sorted, highest first).
+#[derive(Clone, Debug)]
+pub struct DimSummary {
+    pub name: &'static str,
+    pub total: u64,
+    pub entries: Vec<TopEntry>,
+}
+
+/// Snapshot of a [`TenantStats`]: the `tenants` section of
+/// `EngineReport` / `BENCH_serve.json` and the `/tenantz` payload.
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub k: usize,
+    pub dims: Vec<DimSummary>,
+}
+
+impl TenantSummary {
+    pub fn to_json(&self) -> Json {
+        let dims = Json::Obj(
+            self.dims
+                .iter()
+                .map(|d| {
+                    let entries = Json::Arr(
+                        d.entries
+                            .iter()
+                            .map(|e| {
+                                Json::obj(vec![
+                                    ("tenant", Json::u64(e.tenant)),
+                                    ("count", Json::u64(e.count)),
+                                    ("err", Json::u64(e.err)),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    (
+                        d.name.to_string(),
+                        Json::obj(vec![
+                            ("total", Json::u64(d.total)),
+                            ("entries", entries),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("k", Json::Num(self.k as f64)), ("dims", dims)])
+    }
+
+    /// Plain-text table for terminal scrapes of `/tenantz?format=text`.
+    pub fn text_table(&self) -> String {
+        let mut out = format!("per-tenant heavy hitters (K={} slots per dimension)\n", self.k);
+        for d in &self.dims {
+            out.push_str(&format!("\n{} (total {}):\n", d.name, d.total));
+            if d.entries.is_empty() {
+                out.push_str("  (no observations)\n");
+                continue;
+            }
+            out.push_str(&format!("  {:>20} {:>16} {:>12}\n", "tenant", "count", "err"));
+            for e in &d.entries {
+                out.push_str(&format!("  {:>20} {:>16} {:>12}\n", e.tenant, e.count, e.err));
+            }
+        }
+        out
+    }
+
+    /// `serve_tenant_topk_<dim>{tenant="..."}` gauges — at most K series
+    /// per dimension by construction, plus the `serve_tenant_topk_k`
+    /// contract gauge. Merged into scrape snapshots at snapshot time, so
+    /// the live registry itself never grows with the fleet.
+    pub fn metrics(&self) -> RegistrySnapshot {
+        let mut snap = RegistrySnapshot::default();
+        snap.gauges.insert("serve_tenant_topk_k".to_string(), self.k as u64);
+        for d in &self.dims {
+            for e in &d.entries {
+                snap.gauges.insert(
+                    format!("serve_tenant_topk_{}{{tenant=\"{}\"}}", d.name, e.tenant),
+                    e.count,
+                );
+            }
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+
+    /// A skewed stream over a tenant universe much larger than K.
+    fn stream(rng: &mut Rng, len: usize, universe: u64) -> Vec<u64> {
+        (0..len)
+            .map(|_| {
+                if rng.flip(0.5) {
+                    // Hot set: a few tenants take half the traffic.
+                    rng.below(4) as u64
+                } else {
+                    rng.below(universe as usize) as u64
+                }
+            })
+            .collect()
+    }
+
+    fn exact(stream: &[u64]) -> HashMap<u64, u64> {
+        let mut m = HashMap::new();
+        for &t in stream {
+            *m.entry(t).or_insert(0u64) += 1;
+        }
+        m
+    }
+
+    fn shrink_stream(s: &Vec<u64>) -> Vec<Vec<u64>> {
+        if s.len() <= 1 {
+            return Vec::new();
+        }
+        let half = s.len() / 2;
+        vec![s[..half].to_vec(), s[half..].to_vec(), s[..s.len() - 1].to_vec()]
+    }
+
+    #[test]
+    fn spacesaving_error_bound_and_count_conservation_vs_oracle() {
+        prop::check_shrunk(
+            "spacesaving count error <= N/K",
+            11,
+            48,
+            |rng| stream(rng, 64 + rng.below(512), 200),
+            shrink_stream,
+            |s| {
+                let k = 8;
+                let mut sk = SpaceSaving::new(k);
+                for &t in s {
+                    sk.observe(t, 1);
+                }
+                let truth = exact(s);
+                let n = s.len() as u64;
+                assert_eq!(sk.total(), n);
+                // Each observation adds its weight to exactly one slot
+                // (eviction replaces min with min+w): counts sum to N.
+                let sum: u64 = sk.entries().iter().map(|e| e.count).sum();
+                assert_eq!(sum, n, "tracked counts must sum to N exactly");
+                for e in sk.entries() {
+                    let true_count = truth.get(&e.tenant).copied().unwrap_or(0);
+                    assert!(
+                        e.count >= true_count,
+                        "tenant {} estimate {} underestimates true {}",
+                        e.tenant,
+                        e.count,
+                        true_count
+                    );
+                    assert!(
+                        e.count - true_count <= n / k as u64,
+                        "tenant {} overestimate {} beyond N/K = {}",
+                        e.tenant,
+                        e.count - true_count,
+                        n / k as u64
+                    );
+                    assert!(e.err <= n / k as u64, "recorded err beyond N/K");
+                    assert!(e.count - true_count <= e.err, "err must bound the overestimate");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn spacesaving_topk_superset_guarantee() {
+        prop::check_shrunk(
+            "any tenant with true count > N/K is tracked",
+            13,
+            48,
+            |rng| stream(rng, 64 + rng.below(512), 100),
+            shrink_stream,
+            |s| {
+                let k = 8u64;
+                let mut sk = SpaceSaving::new(k as usize);
+                for &t in s {
+                    sk.observe(t, 1);
+                }
+                let n = s.len() as u64;
+                for (&tenant, &count) in &exact(s) {
+                    if count > n / k {
+                        assert!(
+                            sk.estimate(tenant).is_some(),
+                            "tenant {tenant} with {count} > N/K = {} evicted",
+                            n / k
+                        );
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn spacesaving_merge_preserves_bounds_over_combined_stream() {
+        prop::check_named("sketch merge stays a valid sketch", 17, 48, |rng| {
+            let k = 8;
+            let sa = stream(rng, 32 + rng.below(256), 64);
+            let sb = stream(rng, 32 + rng.below(256), 64);
+            let mut a = SpaceSaving::new(k);
+            let mut b = SpaceSaving::new(k);
+            for &t in &sa {
+                a.observe(t, 1);
+            }
+            for &t in &sb {
+                b.observe(t, 1);
+            }
+            let m = a.merge(&b);
+            let combined: Vec<u64> = sa.iter().chain(sb.iter()).copied().collect();
+            let truth = exact(&combined);
+            let n = combined.len() as u64;
+            assert_eq!(m.total(), n, "totals add");
+            assert!(m.entries().len() <= k, "merge respects K");
+            for e in m.entries() {
+                let true_count = truth.get(&e.tenant).copied().unwrap_or(0);
+                assert!(e.count >= true_count, "merged estimate underestimates");
+                assert!(
+                    e.count - true_count <= e.err,
+                    "merged err {} must bound overestimate {}",
+                    e.err,
+                    e.count - true_count
+                );
+                assert!(e.err <= 2 * (n / k as u64) + 2, "merged err beyond (Na+Nb)/K");
+            }
+        });
+    }
+
+    #[test]
+    fn cardinality_capped_at_k_for_a_10k_tenant_fleet() {
+        // The acceptance case: 10k distinct tenants, K=32 — every export
+        // surface holds at most K tenant-labelled entries per dimension.
+        let stats = TenantStats::new(32);
+        let mut rng = Rng::new(7);
+        for i in 0..10_000u64 {
+            stats.record_request(i, 1_000 + (i % 97));
+            if rng.flip(0.1) {
+                stats.record_shed(i);
+            }
+            if rng.flip(0.1) {
+                stats.record_rejection(i);
+            }
+        }
+        // A hot tenant on top so the ranking is non-trivial.
+        for _ in 0..5_000 {
+            stats.record_request(42, 2_000);
+        }
+        let summary = stats.summary();
+        assert_eq!(summary.k, 32);
+        assert_eq!(summary.dims.len(), TENANT_DIMS.len());
+        for d in &summary.dims {
+            assert!(d.entries.len() <= 32, "{}: {} entries", d.name, d.entries.len());
+            let counts: Vec<u64> = d.entries.iter().map(|e| e.count).collect();
+            assert!(counts.windows(2).all(|w| w[0] >= w[1]), "{} sorted desc", d.name);
+            assert!(counts.iter().sum::<u64>() <= d.total, "{} counts exceed total", d.name);
+        }
+        let requests = &summary.dims[0];
+        assert_eq!(requests.total, 15_000);
+        assert_eq!(requests.entries[0].tenant, 42, "hot tenant ranks first");
+        assert!(requests.entries[0].count >= 5_000);
+
+        let metrics = summary.metrics();
+        for dim in TENANT_DIMS {
+            let prefix = format!("serve_tenant_topk_{dim}{{");
+            let series = metrics.gauges.keys().filter(|k| k.starts_with(&prefix)).count();
+            assert!(series <= 32, "{dim}: {series} series leaked past K");
+        }
+        assert_eq!(metrics.gauges["serve_tenant_topk_k"], 32);
+        // And the text/JSON exports stay parseable and K-bounded.
+        let j = crate::util::json::Json::parse(&summary.to_json().pretty()).unwrap();
+        assert_eq!(j.get("k").unwrap().as_usize(), Some(32));
+        let dims = j.get("dims").unwrap().as_obj().unwrap();
+        for (name, d) in dims {
+            let entries = d.get("entries").unwrap().as_arr().unwrap();
+            assert!(entries.len() <= 32, "{name} JSON entries exceed K");
+        }
+        assert!(summary.text_table().contains("K=32"));
+    }
+
+    #[test]
+    fn zero_and_small_fleets_export_cleanly() {
+        let stats = TenantStats::new(4);
+        let empty = stats.summary();
+        assert!(empty.dims.iter().all(|d| d.entries.is_empty() && d.total == 0));
+        assert!(empty.text_table().contains("(no observations)"));
+        stats.record_request(9, 500);
+        stats.record_rejection(9);
+        let s = stats.summary();
+        assert_eq!(s.dims[0].entries, vec![TopEntry { tenant: 9, count: 1, err: 0 }]);
+        assert_eq!(s.dims[3].total, 1);
+        let m = s.metrics();
+        assert_eq!(m.gauges["serve_tenant_topk_requests{tenant=\"9\"}"], 1);
+        assert_eq!(m.gauges["serve_tenant_topk_latency_ns_sum{tenant=\"9\"}"], 500);
+    }
+}

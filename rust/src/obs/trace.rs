@@ -65,6 +65,10 @@ impl Stage {
 pub struct Trace {
     /// Monotone per-ring sequence number (assigned by `push`).
     pub seq: u64,
+    /// Caller-visible request id (client-supplied or minted by the
+    /// front/engine), the correlation key for `/tracez?req=` lookups.
+    /// 0 = unattributed (in-process submit paths that skip minting).
+    pub req_id: u64,
     pub tenant: u64,
     /// `ServePath` wire name the request took.
     pub path: &'static str,
@@ -90,11 +94,15 @@ impl Trace {
                 .map(|s| (s.name().to_string(), Json::Num(self.stage_ns[s.index()] as f64)))
                 .collect(),
         );
+        // seq / req_id / start_ns are u64 identifiers and epoch
+        // nanoseconds — `Json::u64` keeps them exact past 2^53 (start_ns
+        // crosses it after ~104 days of engine uptime).
         Json::obj(vec![
-            ("seq", Json::Num(self.seq as f64)),
+            ("seq", Json::u64(self.seq)),
+            ("req_id", Json::u64(self.req_id)),
             ("tenant", Json::Num(self.tenant as f64)),
             ("path", Json::Str(self.path.to_string())),
-            ("start_ns", Json::Num(self.start_ns as f64)),
+            ("start_ns", Json::u64(self.start_ns)),
             ("worker", Json::Num(self.worker as f64)),
             ("total_ns", Json::Num(self.total_ns as f64)),
             ("stage_ns", stages),
@@ -178,6 +186,7 @@ mod tests {
     fn trace(tenant: u64) -> Trace {
         Trace {
             seq: 0,
+            req_id: 1000 + tenant,
             tenant,
             path: "cached_dense",
             start_ns: 100 * tenant,
@@ -223,6 +232,24 @@ mod tests {
         let seqs: Vec<u64> = snap.iter().map(|t| t.seq).collect();
         let want: Vec<u64> = (0..CAP as u64).map(|i| total - 1 - i).collect();
         assert_eq!(seqs, want, "ring must retain exactly the newest {CAP} seqs");
+    }
+
+    #[test]
+    fn trace_json_round_trips_u64_fields_past_2_53() {
+        // seq/start_ns/req_id above 2^53 used to go through Json::Num
+        // (an f64) and come back corrupted; pin the lossless path.
+        let mut t = trace(1);
+        t.seq = (1 << 53) + 12345;
+        t.req_id = u64::MAX - 7;
+        t.start_ns = (1 << 60) + 99; // ~36 years of uptime in ns
+        let parsed = crate::util::json::Json::parse(&t.to_json().pretty()).unwrap();
+        assert_eq!(parsed.get("seq").unwrap().as_u64(), Some(t.seq));
+        assert_eq!(parsed.get("req_id").unwrap().as_u64(), Some(t.req_id));
+        assert_eq!(parsed.get("start_ns").unwrap().as_u64(), Some(t.start_ns));
+        // Small values still read back through the same accessor.
+        let small = crate::util::json::Json::parse(&trace(2).to_json().to_string()).unwrap();
+        assert_eq!(small.get("req_id").unwrap().as_u64(), Some(1002));
+        assert_eq!(small.get("seq").unwrap().as_u64(), Some(0));
     }
 
     #[test]

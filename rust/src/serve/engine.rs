@@ -26,7 +26,7 @@
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,9 +38,11 @@ use crate::adapter::{AdapterFamily, CostModel, LayerOp};
 use crate::kernel::KernelCtx;
 use crate::linalg::Mat;
 use crate::obs::http::{HealthCheck, HealthReport, ObsSources};
-use crate::obs::slo::{SloReport, SloSet, SloTracker};
+use crate::obs::slo::{SloReport, SloSet, SloTracker, SERVE_P99_TARGET_NS};
 use crate::obs::{
-    Counter, Histo, HistoSnapshot, MetricsRegistry, RegistrySnapshot, Stage, Trace, TraceRing,
+    CaptureReason, CaptureRing, Captured, Counter, Histo, HistoSnapshot, MetricsRegistry,
+    RegistrySnapshot, Stage, TenantStats, TenantSummary, Trace, TraceRing, CAPTURE_RING_CAP,
+    DEFAULT_TENANT_TOPK,
 };
 use crate::store::gsad::{self, params_crc};
 use crate::store::{spill, SpillStats, SpillTier};
@@ -171,6 +173,17 @@ pub struct EngineOpts {
     /// latency raise it; memory cost is one fixed-size [`Trace`] per
     /// slot.
     pub trace_ring_cap: usize,
+    /// Slow-request capture threshold in nanoseconds: a served request
+    /// whose end-to-end latency reaches it is retained in the capture
+    /// ring ([`Engine::captured`], `/tracez?captured=1`). `None` derives
+    /// the bar from the serve-SLO p99 objective
+    /// ([`SERVE_P99_TARGET_NS`]) — anything that would burn the SLO is
+    /// kept.
+    pub capture_slow_ns: Option<u64>,
+    /// K of the per-tenant heavy-hitter sketches ([`Engine::tenant_summary`],
+    /// `/tenantz`, `serve_tenant_topk_*`): telemetry cardinality is
+    /// capped at K entries per dimension regardless of fleet size.
+    pub tenant_topk: usize,
 }
 
 impl Default for EngineOpts {
@@ -186,6 +199,8 @@ impl Default for EngineOpts {
             spill_dir: None,
             spill_budget_bytes: 256 << 20,
             trace_ring_cap: TRACE_RING_CAP,
+            capture_slow_ns: None,
+            tenant_topk: DEFAULT_TENANT_TOPK,
         }
     }
 }
@@ -234,6 +249,9 @@ struct Job {
     /// given up, so the batch worker sheds the job instead of computing
     /// a result nobody will read.
     deadline: Option<Instant>,
+    /// Caller-visible correlation id carried into the request's
+    /// [`Trace`]; 0 = unattributed (bare [`Engine::submit`]).
+    req_id: u64,
     slot: Arc<Slot>,
 }
 
@@ -343,10 +361,15 @@ struct EngineObs {
     /// hand).
     family_of: Mutex<HashMap<TenantId, &'static str>>,
     traces: TraceRing,
+    /// Per-tenant heavy hitters: bounded K-slot sketches per dimension,
+    /// never one series per tenant (DESIGN.md §12).
+    tenants: TenantStats,
+    /// Slow/shed/error traces, retained past the main ring's wrap.
+    captures: CaptureRing,
 }
 
 impl EngineObs {
-    fn new(trace_cap: usize) -> EngineObs {
+    fn new(trace_cap: usize, tenant_topk: usize) -> EngineObs {
         let registry = Arc::new(MetricsRegistry::new());
         let paths = PATHS.map(|p| PathObs {
             count: registry.counter(&format!("serve_requests_total{{path=\"{}\"}}", p.name())),
@@ -366,7 +389,21 @@ impl EngineObs {
             family_service: Mutex::new(HashMap::new()),
             family_of: Mutex::new(HashMap::new()),
             traces: TraceRing::new(trace_cap),
+            tenants: TenantStats::new(tenant_topk),
+            captures: CaptureRing::new(CAPTURE_RING_CAP),
             registry,
+        }
+    }
+
+    /// Push a trace to the main ring (stamping its seq) and, when
+    /// `reason` says it is interesting, retain a copy in the capture
+    /// ring under the *same* seq — so a `/tracez?req=` hit resolves to
+    /// one request no matter which ring answered.
+    fn push_trace(&self, mut trace: Trace, reason: Option<CaptureReason>) {
+        let seq = self.traces.push(trace.clone());
+        if let Some(reason) = reason {
+            trace.seq = seq;
+            self.captures.push(reason, trace);
         }
     }
 
@@ -477,6 +514,11 @@ pub struct EngineReport {
     /// The newest [`EngineOpts::trace_ring_cap`] request traces, newest
     /// first.
     pub traces: Vec<Trace>,
+    /// Per-tenant heavy-hitter summary (≤ K entries per dimension) — the
+    /// `tenants` section of `BENCH_serve.json` and the `/tenantz` payload.
+    pub tenants: TenantSummary,
+    /// Slow/shed/error traces retained in the capture ring, newest first.
+    pub captured: Vec<Captured>,
 }
 
 struct Shared {
@@ -507,6 +549,11 @@ struct Shared {
     batcher: Mutex<MicroBatcher<Job>>,
     queue: WorkQueue<Batch<Job>>,
     obs: EngineObs,
+    /// Resolved slow-capture bar ([`EngineOpts::capture_slow_ns`] or the
+    /// serve-SLO p99 objective).
+    capture_slow_ns: u64,
+    /// Request-id mint; starts at 1 so id 0 stays "unattributed".
+    req_seq: AtomicU64,
     shutting_down: AtomicBool,
     /// Engine birth — the zero point of every trace's `start_ns`
     /// timeline (what the Chrome export plots against).
@@ -618,7 +665,7 @@ impl Engine {
             None => None,
         };
 
-        let obs = EngineObs::new(opts.trace_ring_cap);
+        let obs = EngineObs::new(opts.trace_ring_cap, opts.tenant_topk);
         let families: Vec<(&'static str, u64, u64)> = per_family
             .iter()
             .map(|(&tag, &(n, sum_q, _))| (tag, n, ((sum_q + n / 2) / n.max(1)) * d as u64))
@@ -657,6 +704,8 @@ impl Engine {
             batcher: Mutex::new(batcher),
             queue: WorkQueue::new(),
             obs,
+            capture_slow_ns: opts.capture_slow_ns.unwrap_or(SERVE_P99_TARGET_NS),
+            req_seq: AtomicU64::new(1),
             shutting_down: AtomicBool::new(false),
             epoch: Instant::now(),
             workers_alive: AtomicUsize::new(0),
@@ -719,7 +768,7 @@ impl Engine {
     /// Enqueue one request. The returned handle resolves once a worker has
     /// served the micro-batch the request lands in.
     pub fn submit(&self, tenant: TenantId, input: Vec<f32>) -> Result<Handle> {
-        self.submit_with_deadline(tenant, input, None)
+        self.submit_traced(tenant, input, None, 0)
     }
 
     /// [`Engine::submit`] with a client deadline attached. A job whose
@@ -731,6 +780,28 @@ impl Engine {
         tenant: TenantId,
         input: Vec<f32>,
         deadline: Option<Instant>,
+    ) -> Result<Handle> {
+        self.submit_traced(tenant, input, deadline, 0)
+    }
+
+    /// Mint a fresh request id from this engine's sequence — unique for
+    /// the engine's lifetime, never 0 (0 marks unattributed traces). The
+    /// front mints *before* submitting so even a rejected request's
+    /// error body can echo its id.
+    pub fn next_req_id(&self) -> u64 {
+        self.shared.req_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// [`Engine::submit_with_deadline`] carrying a caller-visible
+    /// request id ([`Engine::next_req_id`] or client-supplied): the id
+    /// rides the job into its [`Trace`], making the request findable via
+    /// `/tracez?req=`.
+    pub fn submit_traced(
+        &self,
+        tenant: TenantId,
+        input: Vec<f32>,
+        deadline: Option<Instant>,
+        req_id: u64,
     ) -> Result<Handle> {
         anyhow::ensure!(
             !self.shared.shutting_down.load(Ordering::SeqCst),
@@ -754,6 +825,7 @@ impl Engine {
             input,
             submitted_at: Instant::now(),
             deadline,
+            req_id,
             slot: Arc::clone(&slot),
         };
         let full = self
@@ -780,6 +852,26 @@ impl Engine {
     /// The newest retained request traces, newest first.
     pub fn traces(&self) -> Vec<Trace> {
         self.shared.obs.traces.snapshot()
+    }
+
+    /// Slow/shed/error traces retained in the capture ring, newest first.
+    pub fn captured(&self) -> Vec<Captured> {
+        self.shared.obs.captures.snapshot()
+    }
+
+    /// Per-tenant heavy-hitter summary: at most
+    /// [`EngineOpts::tenant_topk`] entries per dimension, whatever the
+    /// fleet size.
+    pub fn tenant_summary(&self) -> TenantSummary {
+        self.shared.obs.tenants.summary()
+    }
+
+    /// Record an admission-plane rejection (429/503) against the
+    /// tenant's heavy-hitter sketch. Lives here because the engine owns
+    /// the sketches; the network front calls it when it bounces a
+    /// request before submit.
+    pub fn note_rejection(&self, tenant: TenantId) {
+        self.shared.obs.tenants.record_rejection(tenant);
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -813,16 +905,25 @@ impl Engine {
     pub fn obs_sources(&self) -> ObsSources {
         let m = Arc::clone(&self.shared);
         let t = Arc::clone(&self.shared);
+        let c = Arc::clone(&self.shared);
+        let ten = Arc::clone(&self.shared);
         let h = Arc::clone(&self.shared);
         ObsSources {
             metrics: Box::new(move || {
                 let mut snap = m.obs.registry.snapshot();
+                // Tenant gauges are synthesized per scrape from the
+                // K-slot sketches — the live registry never grows a
+                // per-tenant series, so cardinality stays ≤ K even for
+                // a 10k-tenant fleet.
+                snap.merge(&m.obs.tenants.summary().metrics());
                 if crate::obs::enabled() {
                     snap.merge(&crate::obs::global().snapshot());
                 }
                 snap
             }),
             traces: Box::new(move || t.obs.traces.snapshot()),
+            captured: Box::new(move || c.obs.captures.snapshot()),
+            tenants: Box::new(move || ten.obs.tenants.summary()),
             health: Box::new(move || health_of(&h)),
             slo: SloTracker::new(SloSet::serve_default(), Vec::new()),
         }
@@ -854,13 +955,20 @@ impl Engine {
         let wall = self.shared.epoch.elapsed();
         let slo = SloSet::serve_default().eval_total(&self.obs_snapshot(), wall);
         slo.export_gauges(&self.shared.obs.registry);
+        let tenants = self.tenant_summary();
+        // The report's metric dump carries the same synthesized tenant
+        // gauges a live scrape would have seen.
+        let mut obs = self.obs_snapshot();
+        obs.merge(&tenants.metrics());
         EngineReport {
             metrics: self.metrics(),
             cache: self.cache_stats(),
             spill: self.spill_stats(),
-            obs: self.obs_snapshot(),
+            obs,
             slo,
             traces: self.traces(),
+            tenants,
+            captured: self.captured(),
         }
     }
 }
@@ -1157,6 +1265,31 @@ fn serve_batch(
     Ok((y, ServePath::Factorized, timer.ns))
 }
 
+/// Trace for a request that never produced an output (shed or errored):
+/// all elapsed time is attributed to `Queue`, and the synthetic `path`
+/// names the outcome so `/tracez` readers can tell it from a serve.
+fn terminal_trace(
+    sh: &Shared,
+    job: &Job,
+    tenant: TenantId,
+    path: &'static str,
+    worker: u32,
+) -> Trace {
+    let total_ns = job.submitted_at.elapsed().as_nanos() as u64;
+    let mut stage_ns = [0u64; Stage::COUNT];
+    stage_ns[Stage::Queue.index()] = total_ns;
+    Trace {
+        seq: 0, // stamped by the ring
+        req_id: job.req_id,
+        tenant,
+        path,
+        start_ns: job.submitted_at.saturating_duration_since(sh.epoch).as_nanos() as u64,
+        worker,
+        total_ns,
+        stage_ns,
+    }
+}
+
 fn process_batch(sh: &Shared, mut batch: Batch<Job>, worker: u32) {
     // Shed jobs whose client deadline has already passed: the caller is
     // gone, so computing their share of the batch is pure waste. They
@@ -1169,6 +1302,11 @@ fn process_batch(sh: &Shared, mut batch: Batch<Job>, worker: u32) {
             .partition(|j| j.deadline.is_some_and(|d| d <= now));
         for job in expired {
             sh.obs.deadline_shed.inc();
+            sh.obs.tenants.record_shed(batch.tenant);
+            sh.obs.push_trace(
+                terminal_trace(sh, &job, batch.tenant, "shed", worker),
+                Some(CaptureReason::DeadlineShed),
+            );
             fulfill(&job.slot, Err(DEADLINE_EXCEEDED.to_string()));
         }
         if live.is_empty() {
@@ -1214,16 +1352,24 @@ fn process_batch(sh: &Shared, mut batch: Batch<Job>, worker: u32) {
                 let mut trace_ns = stage_ns;
                 trace_ns[Stage::Queue.index()] = queue_ns;
                 trace_ns[Stage::Reply.index()] = reply_ns;
-                sh.obs.traces.push(Trace {
-                    seq: 0, // stamped by the ring
-                    tenant: batch.tenant,
-                    path: path.name(),
-                    start_ns: job.submitted_at.saturating_duration_since(sh.epoch).as_nanos()
-                        as u64,
-                    worker,
-                    total_ns,
-                    stage_ns: trace_ns,
-                });
+                sh.obs.tenants.record_request(batch.tenant, total_ns);
+                // A request at or past the slow bar is retained in the
+                // capture ring, where the main ring's wrap can't evict it.
+                let reason = (total_ns >= sh.capture_slow_ns).then_some(CaptureReason::Slow);
+                sh.obs.push_trace(
+                    Trace {
+                        seq: 0, // stamped by the ring
+                        req_id: job.req_id,
+                        tenant: batch.tenant,
+                        path: path.name(),
+                        start_ns: job.submitted_at.saturating_duration_since(sh.epoch).as_nanos()
+                            as u64,
+                        worker,
+                        total_ns,
+                        stage_ns: trace_ns,
+                    },
+                    reason,
+                );
                 fulfill(
                     &job.slot,
                     Ok(ServeOutput {
@@ -1237,6 +1383,10 @@ fn process_batch(sh: &Shared, mut batch: Batch<Job>, worker: u32) {
         Ok(Err(e)) => {
             let msg = format!("serve failed for tenant {}: {e:#}", batch.tenant);
             for job in batch.items {
+                sh.obs.push_trace(
+                    terminal_trace(sh, &job, batch.tenant, "error", worker),
+                    Some(CaptureReason::Error),
+                );
                 fulfill(&job.slot, Err(msg.clone()));
             }
         }
@@ -1244,6 +1394,10 @@ fn process_batch(sh: &Shared, mut batch: Batch<Job>, worker: u32) {
             let detail = crate::util::prop::panic_message(panic.as_ref());
             let msg = format!("serve panicked for tenant {}: {detail}", batch.tenant);
             for job in batch.items {
+                sh.obs.push_trace(
+                    terminal_trace(sh, &job, batch.tenant, "error", worker),
+                    Some(CaptureReason::Error),
+                );
                 fulfill(&job.slot, Err(msg.clone()));
             }
         }
@@ -1267,6 +1421,8 @@ mod tests {
             spill_dir: None,
             spill_budget_bytes: 16 << 20,
             trace_ring_cap: TRACE_RING_CAP,
+            capture_slow_ns: None,
+            tenant_topk: DEFAULT_TENANT_TOPK,
         }
     }
 
@@ -1397,6 +1553,80 @@ mod tests {
             assert!(w[0].seq > w[1].seq);
             assert!(w[0].start_ns >= w[1].start_ns);
         }
+    }
+
+    #[test]
+    fn slow_bar_at_zero_captures_every_request_under_its_ring_seq() {
+        let reg = synthetic(2, 1, 8, 2, 41).unwrap();
+        let mut opts = quick_opts();
+        opts.capture_slow_ns = Some(0); // every serve is "slow"
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        let req_id = engine.next_req_id();
+        assert!(req_id >= 1, "id 0 is reserved for unattributed submits");
+        engine.submit_traced(0, vec![0.1; d], None, req_id).unwrap().wait().unwrap();
+        engine.submit(0, vec![0.2; d]).unwrap().wait().unwrap();
+
+        let report = engine.finish();
+        assert_eq!(report.captured.len(), 2);
+        assert!(report.captured.iter().all(|c| c.reason == crate::obs::CaptureReason::Slow));
+        // The captured copy carries the main-ring seq, so both rings
+        // resolve a req= lookup to the same request.
+        let cap = report.captured.iter().find(|c| c.trace.req_id == req_id).unwrap();
+        let main = report.traces.iter().find(|t| t.req_id == req_id).unwrap();
+        assert_eq!(cap.trace.seq, main.seq);
+        assert_eq!(report.traces.iter().filter(|t| t.req_id == 0).count(), 1, "bare submit");
+    }
+
+    #[test]
+    fn shed_requests_are_captured_with_their_reason() {
+        let reg = synthetic(2, 2, 8, 2, 42).unwrap();
+        let engine = Engine::new(reg, quick_opts()).unwrap();
+        let d = engine.input_dim();
+        let req_id = engine.next_req_id();
+        let h = engine
+            .submit_traced(0, vec![0.1; d], Some(Instant::now()), req_id)
+            .unwrap();
+        assert!(h.wait().unwrap_err().to_string().contains(DEADLINE_EXCEEDED));
+        let report = engine.finish();
+        let cap = report
+            .captured
+            .iter()
+            .find(|c| c.trace.req_id == req_id)
+            .expect("shed request must be captured");
+        assert_eq!(cap.reason, crate::obs::CaptureReason::DeadlineShed);
+        assert_eq!(cap.trace.path, "shed");
+        let sheds = report.tenants.dims.iter().find(|d| d.name == "deadline_sheds").unwrap();
+        assert_eq!(sheds.total, 1);
+        assert_eq!(sheds.entries[0].tenant, 0);
+    }
+
+    #[test]
+    fn report_tenant_summary_and_gauges_stay_within_k() {
+        let reg = synthetic(4, 1, 8, 2, 43).unwrap();
+        let mut opts = quick_opts();
+        opts.tenant_topk = 2; // fewer slots than tenants
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        for r in 0..12u64 {
+            engine.submit(r % 4, vec![0.1; d]).unwrap().wait().unwrap();
+        }
+        engine.note_rejection(3);
+        let report = engine.finish();
+        let reqs = report.tenants.dims.iter().find(|d| d.name == "requests").unwrap();
+        assert_eq!(reqs.total, 12, "sketch total counts every request exactly");
+        assert!(reqs.entries.len() <= 2);
+        let rej = report.tenants.dims.iter().find(|d| d.name == "admission_rejected").unwrap();
+        assert_eq!((rej.total, rej.entries[0].tenant), (1, 3));
+        // Synthesized gauges ride in the report's metric dump, ≤ K per dim.
+        assert_eq!(report.obs.gauges["serve_tenant_topk_k"], 2);
+        let topk_series = report
+            .obs
+            .gauges
+            .keys()
+            .filter(|k| k.starts_with("serve_tenant_topk_requests{"))
+            .count();
+        assert!(topk_series <= 2, "{topk_series} series for K=2");
     }
 
     #[test]

@@ -8,10 +8,16 @@
 //! | endpoint            | payload                                      |
 //! |---------------------|----------------------------------------------|
 //! | `POST /v1/register` | `{tenant, desc, spec, params}` → register    |
-//! | `POST /v1/query`    | `{tenant, input, deadline_ms?}` → output     |
+//! | `POST /v1/query`    | `{tenant, input, deadline_ms?, req_id?}` → output |
 //! | `POST /v1/evict`    | `{tenant}` → unregister                      |
 //! | `GET /v1/tenants`   | live tenant ids                              |
-//! | obs endpoints       | `/metrics(.json) /healthz /tracez /slo`      |
+//! | obs endpoints       | `/metrics(.json) /healthz /tracez /tenantz /slo` |
+//!
+//! Request correlation (DESIGN.md §12): every `/v1/query` resolves to a
+//! `req_id` — the client's own (any nonzero unsigned integer) or one
+//! minted from the engine's sequence — echoed in the success payload
+//! *and* every admission/serve error body, and stamped into the
+//! request's [`crate::obs::Trace`] so `/tracez?req=<id>` finds it later.
 //!
 //! `desc` is the GSAD wire object ([`crate::adapter::desc_from_json`]),
 //! `spec` the [`FlatSpec`] schema, `params` a flat JSON float array —
@@ -85,6 +91,8 @@ impl ServeFront {
         let ObsSources {
             metrics,
             traces,
+            captured,
+            tenants: tenant_stats,
             health,
             slo,
         } = engine.obs_sources();
@@ -96,6 +104,8 @@ impl ServeFront {
                 snap
             }),
             traces,
+            captured,
+            tenants: tenant_stats,
             health,
             slo,
         };
@@ -152,7 +162,7 @@ fn route(state: &FrontState, req: &Request) -> Response {
         ("GET", "/") => Response::text(
             200,
             "gsoft serve front\n\nPOST /v1/register\nPOST /v1/query\nPOST /v1/evict\n\
-             GET /v1/tenants\n\n/metrics\n/metrics.json\n/healthz\n/tracez\n/slo\n",
+             GET /v1/tenants\n\n/metrics\n/metrics.json\n/healthz\n/tracez\n/tenantz\n/slo\n",
         ),
         ("POST", "/v1/register") => register(state, req),
         ("POST", "/v1/query") => query(state, req),
@@ -174,13 +184,26 @@ fn bad_request(msg: &str) -> Response {
     Response::text(400, &format!("bad request: {msg}\n"))
 }
 
-fn rejection(r: Rejection) -> Response {
+/// JSON error body carrying the request's correlation id — a rejected or
+/// failed request is still findable in `/tracez?req=` (when it reached
+/// the engine) and attributable in a client's logs.
+fn error_response(status: u16, msg: &str, req_id: u64) -> Response {
+    Response::json(
+        status,
+        &Json::obj(vec![
+            ("error", Json::Str(msg.to_string())),
+            ("req_id", Json::u64(req_id)),
+        ]),
+    )
+}
+
+fn rejection(r: Rejection, req_id: u64) -> Response {
     let msg = match r {
-        Rejection::Rate => "rate limit exceeded for tenant\n",
-        Rejection::Inflight => "too many requests in flight\n",
-        Rejection::Deadline => "deadline exceeded\n",
+        Rejection::Rate => "rate limit exceeded for tenant",
+        Rejection::Inflight => "too many requests in flight",
+        Rejection::Deadline => "deadline exceeded",
     };
-    Response::text(r.status(), msg)
+    error_response(r.status(), msg, req_id)
 }
 
 /// `{tenant, desc, spec, params}` → validated [`AdapterEntry`] →
@@ -225,28 +248,37 @@ fn try_register(state: &FrontState, body: &Json) -> Result<TenantId> {
     Ok(tenant)
 }
 
-/// `{tenant, input, deadline_ms?}` → admission → engine → output JSON.
+/// `{tenant, input, deadline_ms?, req_id?}` → admission → engine →
+/// output JSON carrying the request's correlation id.
 fn query(state: &FrontState, req: &Request) -> Response {
     let body = match req.body_json() {
         Ok(b) => b,
         Err(e) => return bad_request(&e),
     };
-    let (tenant, input, deadline_ms) = match decode_query(&body) {
+    let (tenant, input, deadline_ms, client_req) = match decode_query(&body) {
         Ok(q) => q,
         Err(e) => return bad_request(&format!("{e:#}")),
     };
+    // Resolve the correlation id before admission: even a 429/503/504
+    // error body names the request. Client 0 (= unattributed) is
+    // replaced by a minted id so the echo is always meaningful.
+    let req_id = client_req.filter(|&id| id != 0).unwrap_or_else(|| state.engine.next_req_id());
     let now = Instant::now();
     let _guard = match state.admission.admit(tenant, now) {
         Ok(g) => g,
-        Err(r) => return rejection(r),
+        Err(r) => {
+            state.engine.note_rejection(tenant);
+            return rejection(r, req_id);
+        }
     };
     let deadline = deadline_ms.map(|ms| now + Duration::from_millis(ms));
     if deadline.is_some_and(|d| d <= Instant::now()) {
-        return rejection(state.admission.reject(Rejection::Deadline));
+        state.engine.note_rejection(tenant);
+        return rejection(state.admission.reject(Rejection::Deadline), req_id);
     }
-    let handle = match state.engine.submit_with_deadline(tenant, input, deadline) {
+    let handle = match state.engine.submit_traced(tenant, input, deadline, req_id) {
         Ok(h) => h,
-        Err(e) => return bad_request(&format!("{e:#}")),
+        Err(e) => return error_response(400, &format!("bad request: {e:#}"), req_id),
     };
     match handle.wait() {
         Ok(out) => {
@@ -255,6 +287,7 @@ fn query(state: &FrontState, req: &Request) -> Response {
                 200,
                 &Json::obj(vec![
                     ("tenant", Json::Num(tenant as f64)),
+                    ("req_id", Json::u64(req_id)),
                     ("path", Json::Str(out.path.name().to_string())),
                     ("latency_ns", Json::Num(out.latency.as_nanos() as f64)),
                     ("output", Json::arr_f64(&output)),
@@ -262,13 +295,13 @@ fn query(state: &FrontState, req: &Request) -> Response {
             )
         }
         Err(e) if e.to_string().contains(DEADLINE_EXCEEDED) => {
-            rejection(state.admission.reject(Rejection::Deadline))
+            rejection(state.admission.reject(Rejection::Deadline), req_id)
         }
-        Err(e) => Response::text(500, &format!("serve failed: {e:#}\n")),
+        Err(e) => error_response(500, &format!("serve failed: {e:#}"), req_id),
     }
 }
 
-fn decode_query(body: &Json) -> Result<(TenantId, Vec<f32>, Option<u64>)> {
+fn decode_query(body: &Json) -> Result<(TenantId, Vec<f32>, Option<u64>, Option<u64>)> {
     let tenant = tenant_of(body)?;
     let input = float_vec(body.req("input").map_err(|e| anyhow!("{e}"))?)
         .context("decoding 'input'")?;
@@ -281,7 +314,14 @@ fn decode_query(body: &Json) -> Result<(TenantId, Vec<f32>, Option<u64>)> {
                 as u64,
         ),
     };
-    Ok((tenant, input, deadline_ms))
+    let req_id = match body.get("req_id") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_u64()
+                .ok_or_else(|| anyhow!("'req_id' is not an unsigned integer"))?,
+        ),
+    };
+    Ok((tenant, input, deadline_ms, req_id))
 }
 
 /// `{tenant}` → unregister. Cached merged weights for the tenant may
@@ -535,6 +575,15 @@ mod tests {
             "{body}"
         );
 
+        // The heavy-hitter plane attributes both rejections to tenant 0.
+        let (status, body) = get(addr, "/tenantz");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        let rej = j.get("dims").unwrap().get("admission_rejected").unwrap();
+        assert_eq!(rej.get("total").unwrap().as_u64(), Some(2), "{body}");
+        let top = &rej.get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(top.get("tenant").unwrap().as_u64(), Some(0));
+
         front.shutdown();
     }
 
@@ -602,6 +651,127 @@ mod tests {
         let (status, body) = get(addr, "/");
         assert_eq!(status, 200);
         assert!(body.contains("/v1/register"), "{body}");
+        front.shutdown();
+    }
+
+    #[test]
+    fn known_req_id_is_retrievable_after_the_main_ring_wraps() {
+        // The acceptance path for request correlation: a query with a
+        // client-chosen req_id stays findable via /tracez?req= even
+        // after enough traffic has flooded the main ring to evict it —
+        // the capture ring (slow bar at 0 here) holds it.
+        let reg = synthetic(4, 2, 8, 2, 21).unwrap();
+        let mut eopts = quick_opts();
+        eopts.trace_ring_cap = 2;
+        eopts.capture_slow_ns = Some(0);
+        let engine = Arc::new(Engine::new(reg, eopts).unwrap());
+        let opts = FrontOpts {
+            admission: open_admission(),
+            ..FrontOpts::default()
+        };
+        let front = ServeFront::bind("127.0.0.1:0", Arc::clone(&engine), opts).unwrap();
+        let addr = front.addr();
+        let d = engine.input_dim();
+
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.1; d])),
+            ("req_id", Json::Num(424242.0)),
+        ]);
+        let (status, resp) = post(addr, "/v1/query", &q);
+        assert_eq!(status, 200, "{resp}");
+        let echoed = Json::parse(&resp).unwrap();
+        assert_eq!(echoed.get("req_id").unwrap().as_u64(), Some(424242), "client id echoed");
+
+        // Flood the 2-slot main ring well past capacity.
+        for t in 1..4u64 {
+            for _ in 0..3 {
+                let flood = Json::obj(vec![
+                    ("tenant", Json::Num(t as f64)),
+                    ("input", Json::arr_f64(&vec![0.2; d])),
+                ]);
+                assert_eq!(post(addr, "/v1/query", &flood).0, 200);
+            }
+        }
+        assert!(
+            engine.traces().iter().all(|t| t.req_id != 424242),
+            "flood must have evicted the target from the main ring"
+        );
+
+        let (status, body) = get(addr, "/tracez?req=424242");
+        assert_eq!(status, 200);
+        let hits = Json::parse(&body).unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(hits.len(), 1, "capture ring must still hold the request: {body}");
+        assert_eq!(hits[0].get("req_id").unwrap().as_u64(), Some(424242));
+        assert_eq!(hits[0].get("tenant").unwrap().as_f64(), Some(0.0));
+        assert_eq!(hits[0].get("reason").unwrap().as_str(), Some("slow"));
+        let stages = hits[0].get("stage_ns").unwrap().as_obj().unwrap();
+        assert!(stages.contains_key("queue"), "stage trace rides along: {body}");
+
+        // A query without req_id gets a minted, nonzero id echoed.
+        let bare = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.3; d])),
+        ]);
+        let (status, resp) = post(addr, "/v1/query", &bare);
+        assert_eq!(status, 200, "{resp}");
+        let minted = Json::parse(&resp).unwrap().get("req_id").unwrap().as_u64().unwrap();
+        assert!(minted >= 1, "minted ids are never 0");
+        front.shutdown();
+    }
+
+    #[test]
+    fn tracez_filters_and_rejection_bodies_work_over_the_live_listener() {
+        let (engine, front) = front_with(open_admission());
+        let addr = front.addr();
+        let d = engine.input_dim();
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(2.0)),
+            ("input", Json::arr_f64(&vec![0.1; d])),
+        ]);
+        assert_eq!(post(addr, "/v1/query", &q).0, 200);
+
+        // Match: tenant 2 served at least once, every hit is tenant 2.
+        let (status, body) = get(addr, "/tracez?tenant=2");
+        assert_eq!(status, 200);
+        let hits = Json::parse(&body).unwrap().as_arr().unwrap().to_vec();
+        assert!(!hits.is_empty(), "{body}");
+        assert!(hits.iter().all(|t| t.get("tenant").unwrap().as_f64() == Some(2.0)));
+
+        // No match: tenant 3 never queried; latency bar nothing clears.
+        let (status, body) = get(addr, "/tracez?tenant=3");
+        assert_eq!(status, 200);
+        assert!(Json::parse(&body).unwrap().as_arr().unwrap().is_empty());
+        let (status, body) = get(addr, "/tracez?tenant=2&min_total_ns=999999999999");
+        assert_eq!(status, 200);
+        assert!(Json::parse(&body).unwrap().as_arr().unwrap().is_empty());
+
+        // Malformed: unknown key and non-numeric value are 400s.
+        for bad in ["/tracez?owner=2", "/tracez?tenant=zebra", "/tracez?tenant"] {
+            let (status, _) = get(addr, bad);
+            assert_eq!(status, 400, "{bad}");
+        }
+
+        // A malformed req_id is a 400 before any submit.
+        let bad_q = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.1; d])),
+            ("req_id", Json::Str("abc".into())),
+        ]);
+        assert_eq!(post(addr, "/v1/query", &bad_q).0, 400);
+
+        // Deadline-expired queries answer 504 with the id in the body.
+        let q = Json::obj(vec![
+            ("tenant", Json::Num(0.0)),
+            ("input", Json::arr_f64(&vec![0.5; d])),
+            ("deadline_ms", Json::Num(0.0)),
+            ("req_id", Json::Num(777.0)),
+        ]);
+        let (status, resp) = post(addr, "/v1/query", &q);
+        assert_eq!(status, 504);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("req_id").unwrap().as_u64(), Some(777), "{resp}");
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("deadline"));
         front.shutdown();
     }
 }

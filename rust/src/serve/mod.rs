@@ -14,8 +14,11 @@
 //!   `submit(tenant, input) -> Handle`, four serving paths
 //!   (cached dense / cold merge / factorized GS apply / spill load), fully
 //!   instrumented through [`crate::obs`]: per-path/per-family request
-//!   counters, stage-latency histograms, and a ring of recent request
-//!   traces ([`engine::TRACE_RING_CAP`])
+//!   counters, stage-latency histograms, a ring of recent request traces
+//!   ([`engine::TRACE_RING_CAP`]), per-tenant heavy-hitter sketches
+//!   (bounded at [`crate::obs::DEFAULT_TENANT_TOPK`] entries per
+//!   dimension), and a capture ring of slow/shed/errored requests with
+//!   request-id correlation (`submit_traced`, DESIGN.md §12)
 //! - [`admission`] — request gating for the network front: per-tenant
 //!   token buckets, a global in-flight cap, deadline accounting
 //! - [`front`] — `gsoft serve --listen`: HTTP/1.1 request front over the

@@ -85,6 +85,17 @@ impl Args {
                 .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
         }
     }
+
+    /// Optional integer option with no default: `Ok(None)` when absent,
+    /// so callers can distinguish "not given" from any in-band value.
+    pub fn opt_u64_opt(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        self.opt(name)
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'"))
+            })
+            .transpose()
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +123,15 @@ mod tests {
         assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
         let bad = parse("run --n x", &[]);
         assert!(bad.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn optional_typed_option_distinguishes_absent_from_given() {
+        let a = parse("serve --capture-slow-ms 40", &[]);
+        assert_eq!(a.opt_u64_opt("capture-slow-ms").unwrap(), Some(40));
+        assert_eq!(a.opt_u64_opt("topk").unwrap(), None);
+        let bad = parse("serve --capture-slow-ms soon", &[]);
+        assert!(bad.opt_u64_opt("capture-slow-ms").is_err());
     }
 
     #[test]

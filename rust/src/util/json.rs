@@ -63,6 +63,19 @@ impl Json {
         self.as_f64().and_then(|x| if x.fract() == 0.0 { Some(x as i64) } else { None })
     }
 
+    /// Read a u64 written by [`Json::u64`]: a non-negative integral
+    /// number inside the exact-f64 range, or a decimal string for
+    /// values beyond it.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= U64_EXACT_MAX as f64 => {
+                Some(*x as u64)
+            }
+            Json::Str(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -125,6 +138,18 @@ impl Json {
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Lossless u64 emission. `Json::Num` is an f64, so identifiers above
+    /// 2^53 (ring sequence numbers, epoch nanoseconds past ~104 days,
+    /// request ids) would silently round; those are emitted as decimal
+    /// strings instead. [`Json::as_u64`] reads both shapes back.
+    pub fn u64(v: u64) -> Json {
+        if v <= U64_EXACT_MAX {
+            Json::Num(v as f64)
+        } else {
+            Json::Str(v.to_string())
+        }
     }
 
     pub fn arr_f64(xs: &[f64]) -> Json {
@@ -196,6 +221,10 @@ impl Json {
         }
     }
 }
+
+/// Largest u64 that round-trips exactly through an f64 (2^53). Above it,
+/// [`Json::u64`] switches to string emission.
+pub const U64_EXACT_MAX: u64 = 1 << 53;
 
 fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
@@ -585,6 +614,33 @@ mod tests {
                 other => panic!("number {x:?} round-tripped to {other:?}"),
             }
         });
+    }
+
+    #[test]
+    fn u64_encode_parse_round_trip_is_lossless() {
+        // The f64 path silently corrupts integers above 2^53; Json::u64
+        // must round-trip every u64 exactly, including the corruption
+        // zone the old `as f64` cast lived in.
+        crate::util::prop::check_named("json_u64_round_trip", 23, 256, |rng| {
+            let v = match rng.below(4) {
+                0 => rng.next_u64() % 1000,
+                1 => U64_EXACT_MAX - rng.next_u64() % 3,
+                2 => U64_EXACT_MAX + 1 + rng.next_u64() % 1000,
+                _ => rng.next_u64(),
+            };
+            let text = Json::u64(v).to_string();
+            let back = Json::parse(&text).unwrap().as_u64();
+            assert_eq!(back, Some(v), "u64 {v} -> {text} -> {back:?}");
+        });
+        // Pin the boundary: 2^53 is the last numeric emission, 2^53 + 1
+        // is the first value an f64 cannot represent.
+        assert_eq!(Json::u64(U64_EXACT_MAX), Json::Num(U64_EXACT_MAX as f64));
+        assert_eq!(Json::u64(U64_EXACT_MAX + 1), Json::Str("9007199254740993".into()));
+        assert_eq!(Json::u64(u64::MAX).as_u64(), Some(u64::MAX));
+        // Non-integers and negatives are not u64s.
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(-2.0).as_u64(), None);
+        assert_eq!(Json::Str("pony".into()).as_u64(), None);
     }
 
     #[test]

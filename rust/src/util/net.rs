@@ -58,6 +58,9 @@ pub struct Request {
     pub method: String,
     /// Target with any `?query` stripped.
     pub path: String,
+    /// Raw query string after the first `?` (empty if the target had
+    /// none). Parse with [`Request::query_params`].
+    pub query: String,
     pub body: Vec<u8>,
 }
 
@@ -68,6 +71,22 @@ impl Request {
     pub fn body_json(&self) -> std::result::Result<Json, String> {
         let text = std::str::from_utf8(&self.body).map_err(|_| "body is not UTF-8".to_string())?;
         Json::parse(text).map_err(|e| e.to_string())
+    }
+
+    /// Parse the query string as `key=value` pairs. Strict on shape —
+    /// every non-empty `&`-separated piece must contain `=` with a
+    /// non-empty key — so handlers can answer a clean 400 instead of
+    /// silently ignoring a mistyped filter. No percent-decoding: the
+    /// obs/serve query surface is numeric ids and flags only.
+    pub fn query_params(&self) -> std::result::Result<Vec<(String, String)>, String> {
+        let mut out = Vec::new();
+        for piece in self.query.split('&').filter(|p| !p.is_empty()) {
+            match piece.split_once('=') {
+                Some((k, v)) if !k.is_empty() => out.push((k.to_string(), v.to_string())),
+                _ => return Err(format!("malformed query parameter '{piece}'")),
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -284,7 +303,7 @@ fn read_request(
 
     let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| 400u16)?;
     let mut lines = head.split("\r\n");
-    let (method, path) = parse_request_line(lines.next().unwrap_or(""))?;
+    let (method, path, query) = parse_request_line(lines.next().unwrap_or(""))?;
     let mut content_length = 0usize;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
@@ -310,12 +329,17 @@ fn read_request(
             return Err(400);
         }
     }
-    Ok(Some(Request { method, path, body }))
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        body,
+    }))
 }
 
-/// `METHOD /path?query HTTP/1.1` → `(METHOD, /path)`. 400 on shape
-/// violations; method policy (405) is the handler's call.
-fn parse_request_line(line: &str) -> std::result::Result<(String, String), u16> {
+/// `METHOD /path?query HTTP/1.1` → `(METHOD, /path, query)`. 400 on
+/// shape violations; method policy (405) is the handler's call.
+fn parse_request_line(line: &str) -> std::result::Result<(String, String, String), u16> {
     let mut parts = line.split_whitespace();
     let (Some(method), Some(target), Some(version), None) =
         (parts.next(), parts.next(), parts.next(), parts.next())
@@ -325,8 +349,11 @@ fn parse_request_line(line: &str) -> std::result::Result<(String, String), u16> 
     if !version.starts_with("HTTP/") || !target.starts_with('/') {
         return Err(400);
     }
-    let path = target.split('?').next().unwrap_or(target);
-    Ok((method.to_string(), path.to_string()))
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    Ok((method.to_string(), path.to_string(), query.to_string()))
 }
 
 /// Minimal one-shot HTTP client for loopback benches, smoke drivers and
@@ -430,6 +457,35 @@ mod tests {
         let (status, body) = raw(server.addr(), b"GET / HTTP/1.1\r\n\r\n");
         assert_eq!(status, 200);
         assert_eq!(body, "GET / 0b\n");
+        server.shutdown();
+    }
+
+    #[test]
+    fn query_string_is_carried_and_parses_strictly() {
+        let handler: Handler = Arc::new(|req: &Request| match req.query_params() {
+            Ok(params) => {
+                let rendered: Vec<String> =
+                    params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                Response::text(200, &format!("{}|{}\n", req.path, rendered.join(",")))
+            }
+            Err(e) => Response::text(400, &e),
+        });
+        let server =
+            HttpServer::bind("127.0.0.1:0", "test server", ServerOpts::default(), handler)
+                .unwrap();
+        let (status, body) = raw(server.addr(), b"GET /tracez?req=7&tenant=3 HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert_eq!(body, "/tracez|req=7,tenant=3\n");
+        let (status, body) = raw(server.addr(), b"GET /tracez HTTP/1.1\r\n\r\n");
+        assert_eq!((status, body.as_str()), (200, "/tracez|\n"), "no query = no params");
+        // Only the first '?' splits; later ones belong to the value.
+        let (status, body) = raw(server.addr(), b"GET /a?k=v?w HTTP/1.1\r\n\r\n");
+        assert_eq!((status, body.as_str()), (200, "/a|k=v?w\n"));
+        for bad in ["/tracez?req", "/tracez?=5", "/tracez?a=1&bare"] {
+            let line = format!("GET {bad} HTTP/1.1\r\n\r\n");
+            let (status, _) = raw(server.addr(), line.as_bytes());
+            assert_eq!(status, 400, "{bad} must parse as malformed");
+        }
         server.shutdown();
     }
 

@@ -50,9 +50,12 @@ RULES = [
     (re.compile(r"(^|\.)tile\."), "ignore"),  # autotuned per machine
     (re.compile(r"(^|\.)workers$"), "ignore"),
     # Telemetry sections are structure-checked by check_obs.py; their
-    # hundreds of noisy leaves are not regression-gate material.
+    # hundreds of noisy leaves are not regression-gate material. The
+    # trailing dot keeps scalar config fields (config.tenants) gated
+    # while skipping the per-tenant heavy-hitter subtree ("tenants.").
     (re.compile(r"(^|\.)obs\."), "ignore"),
     (re.compile(r"(^|\.)slo\."), "ignore"),
+    (re.compile(r"(^|\.)tenants\."), "ignore"),
     # Adaptive measurement-loop internals, not results.
     (re.compile(r"(^|\.)(iters|elements)$"), "ignore"),
     (re.compile(r"(^|\.)config\."), "exact"),
@@ -193,6 +196,20 @@ def self_test():
     bad_str = dict(ok, tag="uniform")
     f, _ = compare(base, bad_str)
     assert any("tag" in m for m in f), f
+
+    # The per-tenant heavy-hitter section is run-dependent (latency sums,
+    # sketch order) — the whole subtree is ignored, but a scalar
+    # config.tenants drift must still gate.
+    hitters = lambda total: {  # noqa: E731 — shape of TenantSummary::to_json
+        "k": 32,
+        "dims": {"requests": {"total": total, "entries": [{"tenant": 0, "count": total, "err": 0}]}},
+    }
+    tbase = {"config": {"tenants": 24}, "tenants": hitters(192)}
+    tfresh = {"config": {"tenants": 24}, "tenants": hitters(7)}
+    f, w = compare(tbase, tfresh)
+    assert not f and not w, (f, w)
+    f, _ = compare(tbase, dict(tfresh, config={"tenants": 48}))
+    assert any("config.tenants" in m for m in f), f
 
     nested = {"configs": [{"d": 64, "gemm_p50_us": 100.0}]}
     f, _ = compare(nested, {"configs": [{"d": 64, "gemm_p50_us": 900.0}]})

@@ -18,7 +18,14 @@ For each record this asserts that the telemetry is well-formed:
   - an `slo` section, when present, carries a boolean `ok` and
     objectives whose window statuses are pass/fail/no_data with numeric
     burn rates. The verdict itself is NOT gated on — a loaded CI box may
-    legitimately burn the latency budget; structure must still hold.
+    legitimately burn the latency budget; structure must still hold;
+  - the serve record's `tenants` section (per-tenant heavy hitters,
+    DESIGN.md §12) stays within its cardinality contract: every tracked
+    dimension is present, holds at most K entries sorted by descending
+    count, conserves its total (SpaceSaving counts sum exactly to the
+    observed total), bounds each entry's error by its count, and the
+    requests dimension totals the configured request count. The
+    synthesized serve_tenant_topk_* gauges obey the same <= K cap.
 
 With `--chrome PATH` the trace-event JSON from `gsoft trace` is also
 validated: a traceEvents array of M/X events with pid/tid/ts fields,
@@ -56,6 +63,14 @@ QUANTS = ["p50", "p95", "p99", "p999"]
 # must be added here, in DESIGN.md §10 and in the Chrome exporter at once.
 STAGES = {"queue", "plan", "merge", "spill", "kernel", "reply"}
 SLO_STATUSES = {"pass", "fail", "no_data"}
+# Heavy-hitter dimensions (obs::tenantstats::TENANT_DIMS). Keep in sync
+# with DESIGN.md §12.
+TENANT_DIMS = ["requests", "latency_ns_sum", "deadline_sheds", "admission_rejected"]
+
+
+def as_int(v):
+    """u64 leaves above 2^53 travel as decimal strings (Json::u64)."""
+    return int(v)
 
 
 def fail(path, msg):
@@ -106,6 +121,55 @@ def check_slo(path, slo):
     print(f"[check_obs] {path}: slo {summary} ({len(objectives)} objectives)")
 
 
+def check_tenants(path, record, obs, requests):
+    tenants = record.get("tenants")
+    if tenants is None:
+        fail(path, "serve record has no 'tenants' section")
+    k = as_int(tenants.get("k", 0))
+    if k <= 0:
+        fail(path, f"tenants.k must be a positive sketch capacity, got {tenants.get('k')!r}")
+    dims = tenants.get("dims")
+    if not isinstance(dims, dict):
+        fail(path, "tenants.dims missing or not an object")
+    for name in TENANT_DIMS:
+        if name not in dims:
+            fail(path, f"tenant dimension {name!r} missing from tenants.dims")
+    for name, d in sorted(dims.items()):
+        total = as_int(d.get("total", -1))
+        entries = d.get("entries")
+        if total < 0 or not isinstance(entries, list):
+            fail(path, f"tenant dim {name!r} needs a total and an entries array")
+        if len(entries) > k:
+            fail(path, f"tenant dim {name!r} has {len(entries)} entries, cap is K={k}")
+        counts = []
+        for e in entries:
+            count, err = as_int(e["count"]), as_int(e["err"])
+            as_int(e["tenant"])
+            if err > count:
+                fail(path, f"tenant dim {name!r} entry err {err} exceeds count {count}")
+            counts.append(count)
+        if any(a < b for a, b in zip(counts, counts[1:])):
+            fail(path, f"tenant dim {name!r} entries not sorted by descending count")
+        # SpaceSaving conserves mass: tracked counts sum exactly to the
+        # number of observations (every increment lands on one slot).
+        if sum(counts) != total:
+            fail(path, f"tenant dim {name!r} counts sum to {sum(counts)}, total says {total}")
+    if as_int(dims["requests"]["total"]) != requests:
+        fail(
+            path,
+            f"tenants requests total {dims['requests']['total']} != {requests} requests served",
+        )
+    # Synthesized gauges carry the same cardinality contract.
+    gauges = obs["gauges"]
+    if as_int(gauges.get("serve_tenant_topk_k", 0)) != k:
+        fail(path, f"serve_tenant_topk_k gauge != tenants.k ({k})")
+    for name in TENANT_DIMS:
+        prefix = f"serve_tenant_topk_{name}{{"
+        series = [g for g in gauges if g.startswith(prefix)]
+        if len(series) > k:
+            fail(path, f"{len(series)} {prefix}...}} gauge series exceed the K={k} cap")
+
+
 def check_serve(path, record, obs):
     for name in SERVE_COUNTERS:
         if name not in obs["counters"]:
@@ -144,6 +208,7 @@ def check_serve(path, record, obs):
         fail(path, f"queue stage count {queue['count']} != requests {requests}")
     if "slo" not in record:
         fail(path, "serve record has no 'slo' section")
+    check_tenants(path, record, obs, requests)
 
 
 def check_chrome(path):

@@ -12,6 +12,10 @@ then asserts the full endpoint surface documented in DESIGN.md §10:
   - /healthz        HTTP 200 with "ok": true and named checks;
   - /tracez         newest-first JSON array of request traces (seq
                     non-increasing), non-empty once traffic has run;
+                    unknown or malformed filter params answer 400;
+  - /tenantz        per-tenant heavy hitters (DESIGN.md §12): JSON with
+                    a sketch capacity k and per-dimension entries;
+                    ?format=text renders a table, other formats 400;
   - /slo            burn-rate report with per-objective windows;
   - a malformed request line gets HTTP 400 without killing the server;
   - an unknown path gets HTTP 404.
@@ -22,6 +26,9 @@ are driven first: GET /v1/tenants lists the fleet, POST /v1/query
 serves an input of dimension --d (default 16), a malformed body answers
 400, and an already-expired `deadline_ms` answers 504 — that traffic is
 then visible in the obs assertions above (same listener, one registry).
+Request-ID correlation is driven end to end: a query posted with a
+client `req_id` echoes it in the 200 response, the 504 shed body echoes
+it too, and `/tracez?req=ID` resolves the id to its stage trace.
 
 Only the standard library is used (no requests/urllib3), matching the
 zero-dependency exporter on the other side of the socket.
@@ -115,19 +122,39 @@ def drive_serve_api(host, port, d):
     out = json.loads(body)
     if len(out.get("output", [])) != d or "path" not in out:
         fail(f"/v1/query malformed response: {body[:200]}")
+    if int(out.get("req_id", 0)) < 1:
+        fail(f"/v1/query did not mint a req_id: {body[:200]}")
     print(f"[scrape_smoke] /v1/query ok (path {out['path']}, {d} outputs)")
+
+    # Request-ID correlation (DESIGN.md §12): a client-supplied id is
+    # echoed in the response and resolvable through /tracez?req=.
+    marked = json.dumps({"tenant": tenant, "input": [0.5] * d, "req_id": 424242})
+    status, body = http_post(host, port, "/v1/query", marked)
+    if status != 200 or int(json.loads(body).get("req_id", 0)) != 424242:
+        fail(f"client req_id not echoed -> HTTP {status}: {body[:200]}")
+    status, body = http_get(host, port, "/tracez?req=424242")
+    hits = json.loads(body) if status == 200 else []
+    if status != 200 or len(hits) != 1 or int(hits[0]["req_id"]) != 424242:
+        fail(f"/tracez?req=424242 -> HTTP {status} with {body[:200]}")
+    if "stage_ns" not in hits[0]:
+        fail(f"correlated trace has no stage breakdown: {hits[0]}")
+    print("[scrape_smoke] req_id round-trip ok (echoed in 200, found by /tracez?req=)")
 
     status, _ = http_post(host, port, "/v1/query", "{not json")
     if status != 400:
         fail(f"malformed query body -> HTTP {status}, expected 400")
-    expired = json.dumps({"tenant": tenant, "input": [0.5] * d, "deadline_ms": 0})
-    status, _ = http_post(host, port, "/v1/query", expired)
+    expired = json.dumps(
+        {"tenant": tenant, "input": [0.5] * d, "deadline_ms": 0, "req_id": 515151}
+    )
+    status, body = http_post(host, port, "/v1/query", expired)
     if status != 504:
         fail(f"expired deadline -> HTTP {status}, expected 504")
+    if int(json.loads(body).get("req_id", 0)) != 515151:
+        fail(f"504 shed body does not echo req_id: {body[:200]}")
     status, _ = http_post(host, port, "/v1/tenants", "{}")
     if status != 405:
         fail(f"POST /v1/tenants -> HTTP {status}, expected 405")
-    print("[scrape_smoke] serve API error paths ok (400 / 504 / 405)")
+    print("[scrape_smoke] serve API error paths ok (400 / 504 with req_id / 405)")
 
 
 def main(argv):
@@ -196,10 +223,31 @@ def main(argv):
     traces = json.loads(body)
     if status != 200 or not isinstance(traces, list) or not traces:
         fail(f"/tracez -> HTTP {status} with {len(traces)} traces")
-    seqs = [t["seq"] for t in traces]
+    # u64 fields above 2^53 travel as decimal strings; int() reads both.
+    seqs = [int(t["seq"]) for t in traces]
     if seqs != sorted(seqs, reverse=True):
         fail(f"/tracez not newest-first: {seqs[:8]}...")
-    print(f"[scrape_smoke] /tracez ok ({len(traces)} traces, newest first)")
+    status, _ = http_get(host, port, "/tracez?bogus=1")
+    if status != 400:
+        fail(f"/tracez with unknown filter -> HTTP {status}, expected 400")
+    print(f"[scrape_smoke] /tracez ok ({len(traces)} traces, newest first, strict params)")
+
+    status, body = http_get(host, port, "/tenantz")
+    hitters = json.loads(body) if status == 200 else {}
+    dims = hitters.get("dims", {})
+    if status != 200 or int(hitters.get("k", 0)) < 1 or "requests" not in dims:
+        fail(f"/tenantz -> HTTP {status}, body {body[:200]!r}")
+    k = int(hitters["k"])
+    for name, dim in dims.items():
+        if len(dim.get("entries", [])) > k:
+            fail(f"/tenantz dim {name!r} exceeds its K={k} entry cap")
+    status, body = http_get(host, port, "/tenantz?format=text")
+    if status != 200 or "heavy hitters" not in body:
+        fail(f"/tenantz?format=text -> HTTP {status}, body {body[:200]!r}")
+    status, _ = http_get(host, port, "/tenantz?format=yaml")
+    if status != 400:
+        fail(f"/tenantz with unknown format -> HTTP {status}, expected 400")
+    print(f"[scrape_smoke] /tenantz ok (K={k}, {len(dims)} dimensions, strict params)")
 
     status, body = http_get(host, port, "/slo")
     slo = json.loads(body)
