@@ -234,6 +234,30 @@ pub trait AdapterFamily: Send + Sync {
     fn cost_model(&self, _cfg: &Config, _d: usize) -> Option<CostModel> {
         None
     }
+
+    /// Upgrade a persisted record written at wire version `old_fv`
+    /// (strictly below the current [`AdapterFamily::wire_version`]) to
+    /// the current slab layout, rewriting `params`/`spec` in place. The
+    /// store calls this during decode, so a family that bumps its wire
+    /// version keeps reading every tenant it ever persisted — live
+    /// re-registration then rewrites the record at the new version on the
+    /// next `put`. The default declines: a family that bumps its version
+    /// without a migration path fails loudly at hydration, not silently
+    /// at serve time. Hyperparameter keys must stay decodable across
+    /// versions (layout changes go in the slabs, not the header).
+    fn migrate(
+        &self,
+        _cfg: &Config,
+        old_fv: usize,
+        _params: &mut Vec<f32>,
+        _spec: &mut FlatSpec,
+    ) -> Result<()> {
+        Err(anyhow!(
+            "adapter family '{}' has no migration path from wire version {old_fv} to v{}",
+            self.tag(),
+            self.wire_version()
+        ))
+    }
 }
 
 /// A resolved `(family, config)` pair — what an adapter entry carries.
@@ -369,8 +393,19 @@ pub fn desc_to_json(desc: &AdapterDesc) -> Json {
 }
 
 /// Decode a GSAD `"kind"` object back into a descriptor. Unknown tags
-/// and future family versions are clean errors.
+/// and future family versions are clean errors; older versions decode
+/// fine here (the slab migration, if any, is the store decoder's job via
+/// [`desc_from_json_versioned`] + [`AdapterFamily::migrate`]).
 pub fn desc_from_json(v: &Json) -> Result<AdapterDesc> {
+    Ok(desc_from_json_versioned(v)?.0)
+}
+
+/// [`desc_from_json`], but also returning the record's wire version so
+/// store decoders can route `fv < wire_version()` records through the
+/// family's [`AdapterFamily::migrate`] hook. Versions *above* the
+/// build's are rejected here — a layout we have never seen must not be
+/// guessed at.
+pub fn desc_from_json_versioned(v: &Json) -> Result<(AdapterDesc, usize)> {
     let tag = v.req_str("kind").map_err(|e| anyhow!("{e}"))?;
     let family = FamilyRegistry::family(tag)?;
     let fv = match v.get("fv") {
@@ -380,8 +415,8 @@ pub fn desc_from_json(v: &Json) -> Result<AdapterDesc> {
         None => 1,
     };
     anyhow::ensure!(
-        fv == family.wire_version(),
-        "adapter family '{tag}' record is wire version {fv}, this build reads v{}",
+        fv <= family.wire_version(),
+        "adapter family '{tag}' record is wire version {fv}, this build reads up to v{}",
         family.wire_version()
     );
     let mut hp = Vec::with_capacity(family.hp_keys().len());
@@ -393,7 +428,7 @@ pub fn desc_from_json(v: &Json) -> Result<AdapterDesc> {
     }
     let cfg = Config { hp };
     family.validate_config(&cfg)?;
-    Ok(AdapterDesc { family, cfg })
+    Ok((AdapterDesc { family, cfg }, fv))
 }
 
 /// Merge an adapter through trait dispatch — the single entry point the

@@ -14,12 +14,14 @@
 //!                 --rate 50 --burst 100 --max-inflight 256 --hold-ms N
 //!                 --capture-slow-ms N --topk K]
 //! gsoft serve-bench [--tenants 256 --requests 4096 --d 64 --block 8
-//!                    --store DIR --reg-every 16 --smoke --obs
+//!                    --store DIR --shards 4 --maint-interval-ms 200
+//!                    --reg-every 16 --smoke --obs
 //!                    --listen ADDR --hold-ms N --trace-cap N
 //!                    --capture-slow-ms N --topk K]
 //! gsoft kernel-bench [--smoke --seed 7 --out BENCH_kernels.json --obs --listen ADDR]
 //! gsoft conv-bench [--smoke --seed 7 --out BENCH_conv.json --obs --listen ADDR]
-//! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json --obs --listen ADDR]
+//! gsoft store-bench [--smoke --seed 7 --out BENCH_store.json --obs --listen ADDR
+//!                    --shards N --maint-interval-ms 200]
 //! gsoft obs-serve [--listen 127.0.0.1:9100 --hold-ms N]
 //! gsoft trace    [--out results/trace.json --requests 128]
 //! gsoft metrics  [--requests 128 --format text|json]
@@ -503,6 +505,8 @@ fn serve_bench(args: &Args) -> Result<()> {
     let seed = args.opt_u64("seed", 42)?;
     let reg_every = args.opt_usize("reg-every", 16)?.max(1);
     let store_dir = args.opt("store").map(std::path::PathBuf::from);
+    let shards = args.opt_usize("shards", gsoft::store::DEFAULT_SHARDS)?;
+    let maint_ms = args.opt_u64("maint-interval-ms", gsoft::store::DEFAULT_MAINT_INTERVAL_MS)?;
     let trace_cap = args.opt_usize("trace-cap", gsoft::serve::TRACE_RING_CAP)?;
     let capture_slow_ms = args.opt_u64_opt("capture-slow-ms")?;
     let topk = args.opt_usize("topk", gsoft::obs::DEFAULT_TENANT_TOPK)?;
@@ -525,7 +529,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             let reg = Registry::with_store(
                 donor.base().weights.as_ref().clone(),
                 donor.base().spec.as_ref().clone(),
-                AdapterStore::open(dir.join("factors"))?,
+                AdapterStore::open_sharded(dir.join("factors"), shards)?,
             )?;
             let t0 = Instant::now();
             for (t, e) in pool.iter().enumerate() {
@@ -547,6 +551,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             max_batch,
             cache_budget_bytes: cache_mb << 20,
             spill_dir: store_dir.as_ref().map(|dir| dir.join("spill")),
+            maint_interval: std::time::Duration::from_millis(maint_ms),
             trace_ring_cap: trace_cap,
             capture_slow_ns: capture_slow_ms.map(|ms| ms.saturating_mul(1_000_000)),
             tenant_topk: topk,
@@ -607,6 +612,9 @@ fn serve_bench(args: &Args) -> Result<()> {
         h.wait()?;
     }
     let wall = t0.elapsed();
+    // Let the maintenance thread finish queued spill writes before the
+    // front probe reads the spill tier, so its tallies are settled.
+    engine.drain_maintenance();
     // Front-end request latency (DESIGN.md §11): stand the network front
     // up on a loopback ephemeral port over the still-hot engine and time
     // end-to-end HTTP queries — parse, admission, batcher, JSON response.
@@ -760,6 +768,7 @@ fn serve_bench(args: &Args) -> Result<()> {
         fields.push((
             "store",
             Json::obj(vec![
+                ("shards", Json::Num(shards as f64)),
                 ("reg_every", Json::Num(reg_every as f64)),
                 ("registrations", Json::Num(reg_ns.len() as f64)),
                 ("reg_p50_ns", Json::Num(pct(&reg_ns, 0.50))),
@@ -1051,27 +1060,40 @@ fn conv_bench(args: &Args) -> Result<()> {
 fn store_bench(args: &Args) -> Result<()> {
     use gsoft::report::{emit_json_record, fmt, Table};
     use gsoft::serve::{synthetic, synthetic_conv, Engine, EngineOpts, Registry, TenantId};
-    use gsoft::store::AdapterStore;
+    use gsoft::store::{AdapterStore, DEFAULT_MAINT_INTERVAL_MS, DEFAULT_SHARDS};
     use gsoft::util::json::Json;
     use gsoft::util::rng::Rng;
     use gsoft::util::tmp::unique_temp_dir;
-    use std::time::Instant;
+    use std::time::{Duration, Instant};
 
     let smoke = args.flag("smoke");
     let seed = args.opt_u64("seed", 7)?;
     let out_path = args.opt_or("out", "BENCH_store.json").to_string();
     let server = bind_global_listener(args)?;
     let requests = args.opt_usize("requests", if smoke { 64 } else { 1024 })?;
+    // `--shards N` pins every config to N segment-log shards; without it
+    // the full sweep adds a shard-scaling axis ({1, 4, 16}) on the mixed
+    // fleet so registration throughput vs shard count lands in the record.
+    let shards_opt = match args.opt("shards") {
+        Some(_) => Some(args.opt_usize("shards", DEFAULT_SHARDS)?),
+        None => None,
+    };
+    let maint_ms = args.opt_u64("maint-interval-ms", DEFAULT_MAINT_INTERVAL_MS)?;
 
-    // (adapter kind, tenant count, hot-set hit ratio)
-    let grid: Vec<(&str, usize, f64)> = if smoke {
-        vec![("mixed", 12, 0.7)]
+    // (adapter kind, tenant count, hot-set hit ratio, shards)
+    let grid: Vec<(&str, usize, f64, usize)> = if smoke {
+        vec![("mixed", 12, 0.7, shards_opt.unwrap_or(DEFAULT_SHARDS))]
     } else {
         let mut g = Vec::new();
+        if shards_opt.is_none() {
+            for &s in &[1usize, 4, 16] {
+                g.push(("mixed", 256, 0.7, s));
+            }
+        }
         for &tenants in &[64usize, 256] {
             for kind in ["mixed", "conv_gssoc"] {
                 for &hit in &[0.5f64, 0.9] {
-                    g.push((kind, tenants, hit));
+                    g.push((kind, tenants, hit, shards_opt.unwrap_or(DEFAULT_SHARDS)));
                 }
             }
         }
@@ -1084,6 +1106,7 @@ fn store_bench(args: &Args) -> Result<()> {
         &[
             "config",
             "persist (ms)",
+            "reg storm (reg/s)",
             "cold open (ms)",
             "hydrate (µs/tenant)",
             "re-merge p50 (ms)",
@@ -1092,7 +1115,7 @@ fn store_bench(args: &Args) -> Result<()> {
         ],
     );
     let mut configs = Vec::new();
-    for &(kind, tenants, hit_ratio) in &grid {
+    for &(kind, tenants, hit_ratio, shards) in &grid {
         let (donor, d) = match kind {
             "mixed" => {
                 let d = if smoke { 16 } else { 32 };
@@ -1109,20 +1132,47 @@ fn store_bench(args: &Args) -> Result<()> {
             .collect();
 
         let dir = unique_temp_dir("store_bench");
-        // Phase 1: durable persist (synced appends).
+        // Phase 1: durable persist (synced appends, one writer).
         let t0 = Instant::now();
         {
-            let mut store = AdapterStore::open(dir.join("factors"))?;
+            let store = AdapterStore::open_sharded(dir.join("factors"), shards)?;
             for (t, e) in &entries {
                 store.put(*t, e)?;
             }
         }
         let persist = t0.elapsed();
 
-        // Phase 2: cold boot — log replay, then lazy hydration of the fleet.
+        // Phase 1b: parallel registration storm — concurrent registers
+        // through a store-backed registry land on independent shard
+        // locks, so durable registration throughput scales with the
+        // shard count (the tentpole's headline number).
+        let storm_workers = gsoft::util::pool::default_workers().min(8);
+        let t0 = Instant::now();
+        {
+            let reg = Registry::with_store(
+                base_w.clone(),
+                base_spec.clone(),
+                AdapterStore::open_sharded(dir.join("storm"), shards)?,
+            )?;
+            gsoft::util::pool::parallel_map(entries.len(), storm_workers, |i| {
+                let (t, e) = &entries[i];
+                reg.register(*t, e.clone()).expect("storm register");
+            });
+            anyhow::ensure!(reg.len() == tenants, "storm lost registrations");
+        }
+        let storm = t0.elapsed();
+        let storm_rps = tenants as f64 / storm.as_secs_f64().max(1e-9);
+
+        // Phase 2: cold boot — parallel shard replay, then lazy
+        // hydration of the fleet.
         let t0 = Instant::now();
         let store = AdapterStore::open(dir.join("factors"))?;
         let open = t0.elapsed();
+        anyhow::ensure!(
+            store.num_shards() == shards,
+            "reopen changed the shard count ({} != {shards})",
+            store.num_shards()
+        );
         let registry = Registry::with_store(base_w, base_spec, store)?;
         let t0 = Instant::now();
         let hydrated = registry.hydrate_all()?;
@@ -1135,6 +1185,9 @@ fn store_bench(args: &Args) -> Result<()> {
         let hot = (tenants / 8).max(1);
         let model_bytes =
             registry.base().weights.len() * 4 + layers * d * d * 8;
+        // Keep a handle on the sharded log: after finish() the engine is
+        // gone, but the log's counters prove where compactions ran.
+        let slog = registry.sharded_log().expect("store-backed registry");
         let engine = Engine::new(
             registry,
             EngineOpts {
@@ -1143,6 +1196,7 @@ fn store_bench(args: &Args) -> Result<()> {
                 cache_budget_bytes: model_bytes * hot + model_bytes / 2,
                 promote_after: Some(1),
                 spill_dir: Some(dir.join("spill")),
+                maint_interval: Duration::from_millis(maint_ms),
                 ..EngineOpts::default()
             },
         )?;
@@ -1164,16 +1218,37 @@ fn store_bench(args: &Args) -> Result<()> {
         for h in handles {
             h.wait()?;
         }
+        // Flush queued maintenance work (spill writes for evicted
+        // models, one compaction scan) so the maint tallies below are
+        // complete before the report is cut.
+        engine.drain_maintenance();
         let report = engine.finish();
         let m = &report.metrics;
         let spill = report.spill.unwrap_or_default();
+        let maint = report.maint.unwrap_or_default();
+        let lstats = slog.stats();
+        // The tentpole's off-path contract: every compaction and every
+        // spill write this run was the maintenance thread's, never a
+        // request's. (The log instance was opened fresh in phase 2, so
+        // its compaction counter covers exactly the engine's lifetime.)
+        anyhow::ensure!(
+            lstats.compactions == maint.compactions,
+            "{} compaction(s) ran on the request path",
+            lstats.compactions - maint.compactions
+        );
+        anyhow::ensure!(
+            spill.puts == maint.spill_writes,
+            "{} spill write(s) ran on the request path",
+            spill.puts - maint.spill_writes
+        );
 
         let ns_ms = 1e-6;
-        let tag = format!("{kind}_{tenants}t_hit{hit_ratio}");
+        let tag = format!("{kind}_{tenants}t_hit{hit_ratio}_s{shards}");
         let hydrate_us = hydrate.as_secs_f64() * 1e6 / tenants as f64;
         table.row(vec![
             tag,
             fmt(persist.as_secs_f64() * 1e3, 2),
+            fmt(storm_rps, 0),
             fmt(open.as_secs_f64() * 1e3, 2),
             fmt(hydrate_us, 1),
             fmt(m.service_cold.p50_ns * ns_ms, 4),
@@ -1186,8 +1261,11 @@ fn store_bench(args: &Args) -> Result<()> {
             ("layers", Json::Num(layers as f64)),
             ("d", Json::Num(d as f64)),
             ("hit_ratio", Json::Num(hit_ratio)),
+            ("shards", Json::Num(shards as f64)),
             ("requests", Json::Num(requests as f64)),
             ("persist_s", Json::Num(persist.as_secs_f64())),
+            ("reg_storm_s", Json::Num(storm.as_secs_f64())),
+            ("reg_storm_rps", Json::Num(storm_rps)),
             ("cold_open_s", Json::Num(open.as_secs_f64())),
             ("hydrate_us_per_tenant", Json::Num(hydrate_us)),
             ("merges", Json::Num(m.merges as f64)),
@@ -1197,6 +1275,31 @@ fn store_bench(args: &Args) -> Result<()> {
             ("spill_hits", Json::Num(spill.hits as f64)),
             ("spill_evictions", Json::Num(spill.evictions as f64)),
             ("cache_hit_rate", Json::Num(report.cache.hit_rate())),
+            // Background maintenance attribution (DESIGN.md §13): the
+            // request path never compacts or writes spills; the two
+            // request_path_* leaves are invariants pinned at 0.
+            (
+                "maint",
+                Json::obj(vec![
+                    ("ticks", Json::Num(maint.ticks as f64)),
+                    ("compactions", Json::Num(maint.compactions as f64)),
+                    ("spill_writes", Json::Num(maint.spill_writes as f64)),
+                    (
+                        "spill_write_failures",
+                        Json::Num(maint.spill_write_failures as f64),
+                    ),
+                    ("queue_depth_peak", Json::Num(maint.max_queue_depth as f64)),
+                    ("off_path_ns", Json::Num(maint.off_path_ns as f64)),
+                    (
+                        "request_path_compactions",
+                        Json::Num((lstats.compactions - maint.compactions) as f64),
+                    ),
+                    (
+                        "request_path_spill_writes",
+                        Json::Num((spill.puts - maint.spill_writes) as f64),
+                    ),
+                ]),
+            ),
         ]));
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -1291,11 +1394,14 @@ Utilities:
   serve-bench   multi-tenant adapter serving engine benchmark
                 [--tenants 256 --requests 4096 --layers 4 --d 64
                  --block 8 --zipf-s 1.1 --max-batch 16 --cache-mb 64]
-                with --store DIR: durable store-backed registry, and the
-                Zipf query trace is mixed with registration traffic
+                with --store DIR: durable store-backed registry over
+                --shards N hash-sharded segment logs (default 4), and
+                the Zipf query trace is mixed with registration traffic
                 (every --reg-every-th request durably registers a new
                 tenant, then queries it cold — write/read contention);
-                --smoke shrinks the run for CI
+                compaction and spill writes run on the background
+                maintenance thread (--maint-interval-ms N, default 200),
+                never on a request; --smoke shrinks the run for CI
                 Adapter families are an open set (gsoft, oft, lora,
                 conv_gssoc, monarch, ... — see gsoft::adapter): new
                 families serve, persist, and merge with zero engine or
@@ -1308,9 +1414,15 @@ Utilities:
                 materialized dense operator; writes BENCH_conv.json
                 [--smoke --seed 7 --out PATH]
   store-bench   persistent tiered adapter store sweep over (tenants x
-                adapter kind x hit ratio): durable persist, cold-boot
-                log replay, lazy hydration, spill-hit vs re-merge;
-                writes BENCH_store.json [--smoke --seed 7 --out PATH]
+                adapter kind x hit ratio x shards): durable persist, a
+                parallel registration storm across the hash-sharded
+                segment logs, cold-boot parallel shard replay, lazy
+                hydration, spill-hit vs re-merge, and a background-
+                maintenance attribution section (maint) proving zero
+                request-path compactions/spill writes; without --shards
+                the full sweep adds a {1,4,16} shard-scaling axis
+                [--smoke --seed 7 --out PATH --shards N
+                 --maint-interval-ms 200]
   metrics       drive a tiny synthetic fleet with full telemetry on and
                 dump the unified metrics registry (serve_* + kernel_* +
                 store_* counters/gauges/latency histograms) as

@@ -129,13 +129,24 @@ pub fn kernel() -> &'static KernelObs {
     KERNEL.get_or_init(|| KernelObs::new(global()))
 }
 
-/// Pre-resolved handles for the tiered store (`store_*` timings).
+/// Pre-resolved handles for the tiered store (`store_*` timings), the
+/// sharded factor tier (`store_shard_*`) and the background maintenance
+/// thread (`store_maint_*`).
 pub struct StoreObs {
     append_ns: Arc<Histo>,
     fsync_ns: Arc<Histo>,
     compact_ns: Arc<Histo>,
     spill_read_ns: Arc<Histo>,
     spill_write_ns: Arc<Histo>,
+    shard_count: Arc<Gauge>,
+    shard_appends: Arc<Counter>,
+    shard_replay_ns: Arc<Histo>,
+    shard_torn_tails: Arc<Counter>,
+    maint_ticks: Arc<Counter>,
+    maint_compactions: Arc<Counter>,
+    maint_spill_writes: Arc<Counter>,
+    maint_queue_depth: Arc<Gauge>,
+    maint_cycle_ns: Arc<Histo>,
 }
 
 impl StoreObs {
@@ -146,6 +157,15 @@ impl StoreObs {
             compact_ns: reg.histogram("store_compaction_ns"),
             spill_read_ns: reg.histogram("store_spill_read_ns"),
             spill_write_ns: reg.histogram("store_spill_write_ns"),
+            shard_count: reg.gauge("store_shard_count"),
+            shard_appends: reg.counter("store_shard_appends_total"),
+            shard_replay_ns: reg.histogram("store_shard_replay_ns"),
+            shard_torn_tails: reg.counter("store_shard_torn_tails_total"),
+            maint_ticks: reg.counter("store_maint_ticks_total"),
+            maint_compactions: reg.counter("store_maint_compactions_total"),
+            maint_spill_writes: reg.counter("store_maint_spill_writes_total"),
+            maint_queue_depth: reg.gauge("store_maint_queue_depth"),
+            maint_cycle_ns: reg.histogram("store_maint_cycle_ns"),
         }
     }
 
@@ -167,6 +187,47 @@ impl StoreObs {
 
     pub fn record_spill_write(&self, elapsed: Duration) {
         self.spill_write_ns.record_duration(elapsed);
+    }
+
+    pub fn set_shard_count(&self, n: usize) {
+        self.shard_count.set(n as u64);
+    }
+
+    pub fn record_shard_append(&self) {
+        self.shard_appends.inc();
+    }
+
+    /// One shard's boot replay (they run in parallel; each records its
+    /// own wall time).
+    pub fn record_shard_replay(&self, elapsed: Duration) {
+        self.shard_replay_ns.record_duration(elapsed);
+    }
+
+    /// A shard came up with a torn tail (it recovered its prefix; the
+    /// counter surfaces *which boot* was crashy fleet-wide).
+    pub fn record_shard_torn_tail(&self) {
+        self.shard_torn_tails.inc();
+    }
+
+    pub fn record_maint_tick(&self) {
+        self.maint_ticks.inc();
+    }
+
+    pub fn record_maint_compaction(&self) {
+        self.maint_compactions.inc();
+    }
+
+    pub fn record_maint_spill_write(&self) {
+        self.maint_spill_writes.inc();
+    }
+
+    pub fn set_maint_queue_depth(&self, n: usize) {
+        self.maint_queue_depth.set(n as u64);
+    }
+
+    /// One maintenance cycle's off-request-path busy time.
+    pub fn record_maint_cycle(&self, elapsed: Duration) {
+        self.maint_cycle_ns.record_duration(elapsed);
     }
 }
 

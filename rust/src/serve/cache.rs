@@ -208,6 +208,21 @@ impl MergedCache {
         }
     }
 
+    /// Drop a tenant's model outright (live re-registration made it
+    /// stale), returning it. Not an LRU *eviction*: the model is invalid,
+    /// so it must not be spilled and is not counted in
+    /// [`CacheStats::evictions`] — the caller accounts for invalidations.
+    pub fn remove(&mut self, tenant: TenantId) -> Option<Arc<CachedModel>> {
+        let slot = self.slots.remove(&tenant)?;
+        self.used_bytes -= slot.bytes;
+        // Stale recency-queue entries for this tenant are skipped by
+        // `evict_lru`'s liveness check; no need to scrub them here.
+        if let Some(obs) = &self.obs {
+            obs.used_bytes.set(self.used_bytes as u64);
+        }
+        Some(slot.model)
+    }
+
     /// Evict the least-recently-used entry, returning it (`None` if empty).
     fn evict_lru(&mut self) -> Option<(TenantId, Arc<CachedModel>)> {
         while let Some((tick, tenant)) = self.recency.pop_front() {
@@ -446,6 +461,26 @@ mod tests {
         assert_eq!(snap.gauges["serve_cache_used_bytes"], c.used_bytes() as u64);
         assert_eq!(snap.gauges["serve_cache_budget_bytes"], 800);
         assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn remove_releases_bytes_without_counting_an_eviction() {
+        let mut c = MergedCache::new(800);
+        assert!(c.insert(1, model(100)).inserted);
+        assert!(c.insert(2, model(100)).inserted);
+        let gone = c.remove(1).expect("tenant 1 was cached");
+        assert_eq!(gone.flat.len(), 100);
+        assert!(c.remove(1).is_none(), "second remove is a no-op");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 400);
+        assert_eq!(c.stats().evictions, 0, "invalidation is not an eviction");
+        // The freed budget is usable again and the stale recency entry
+        // for tenant 1 does not confuse later evictions.
+        assert!(c.insert(3, model(100)).inserted);
+        let outcome = c.insert(4, model(100));
+        assert!(outcome.inserted);
+        let evicted: Vec<TenantId> = outcome.evicted.iter().map(|&(t, _)| t).collect();
+        assert_eq!(evicted, vec![2], "LRU order unaffected by the removal");
     }
 
     #[test]

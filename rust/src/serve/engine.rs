@@ -27,7 +27,7 @@
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -44,8 +44,8 @@ use crate::obs::{
     RegistrySnapshot, Stage, TenantStats, TenantSummary, Trace, TraceRing, CAPTURE_RING_CAP,
     DEFAULT_TENANT_TOPK,
 };
-use crate::store::gsad::{self, params_crc};
-use crate::store::{spill, SpillStats, SpillTier};
+use crate::store::gsad::params_crc;
+use crate::store::{spill, MaintStats, Maintainer, SpillStats, SpillTier, DEFAULT_MAINT_INTERVAL_MS};
 use crate::util::pool::{default_workers, WorkQueue};
 
 use super::batcher::{Batch, BatcherObs, MicroBatcher};
@@ -184,6 +184,13 @@ pub struct EngineOpts {
     /// `/tenantz`, `serve_tenant_topk_*`): telemetry cardinality is
     /// capped at K entries per dimension regardless of fleet size.
     pub tenant_topk: usize,
+    /// Idle tick interval of the background maintenance thread
+    /// ([`crate::store::Maintainer`]): how often it scans for log
+    /// compaction work when no spill job wakes it. The thread is spawned
+    /// whenever the engine has a store-backed registry or an engaged
+    /// spill tier; it owns *all* compaction and spill-file writes, so
+    /// neither ever runs on a request.
+    pub maint_interval: Duration,
 }
 
 impl Default for EngineOpts {
@@ -201,6 +208,7 @@ impl Default for EngineOpts {
             trace_ring_cap: TRACE_RING_CAP,
             capture_slow_ns: None,
             tenant_topk: DEFAULT_TENANT_TOPK,
+            maint_interval: Duration::from_millis(DEFAULT_MAINT_INTERVAL_MS),
         }
     }
 }
@@ -349,6 +357,10 @@ struct EngineObs {
     /// Jobs dropped unserved because their client deadline passed
     /// before a worker reached them.
     deadline_shed: Arc<Counter>,
+    /// Merged-cache hits whose merge-time params CRC no longer matched
+    /// the registry (tenant re-registered live): the hit is demoted to a
+    /// miss and the stale model dropped.
+    stale_crc: Arc<Counter>,
     /// Indexed by [`path_index`].
     paths: [PathObs; 4],
     /// Indexed by [`Stage::index`].
@@ -383,6 +395,7 @@ impl EngineObs {
             merges: registry.counter("serve_merges_total"),
             spill_loads: registry.counter("serve_spill_loads_total"),
             deadline_shed: registry.counter("serve_deadline_shed_total"),
+            stale_crc: registry.counter("serve_cache_stale_crc_total"),
             paths,
             stages,
             family_requests: Mutex::new(HashMap::new()),
@@ -505,6 +518,9 @@ pub struct EngineReport {
     pub cache: CacheStats,
     /// Spill-tier counters, when a tier was mounted and engaged.
     pub spill: Option<SpillStats>,
+    /// Background maintenance counters (compactions, spill writes,
+    /// off-request-path busy time), when the thread ran.
+    pub maint: Option<MaintStats>,
     /// Full metric dump (`serve_*` taxonomy) — the `obs` section of
     /// `BENCH_serve.json` and the engine's share of `gsoft metrics`.
     pub obs: RegistrySnapshot,
@@ -531,7 +547,12 @@ struct Shared {
     kernel: KernelCtx,
     /// Disk tier for evicted merged weights — `Some` only when a spill
     /// dir was configured *and* the load-vs-remerge break-even favors it.
-    spill: Option<Mutex<SpillTier>>,
+    /// Shared with the maintenance thread, which owns the writes.
+    spill: Option<Arc<Mutex<SpillTier>>>,
+    /// Background maintenance thread (log compaction + spill writes) —
+    /// `Some` whenever there is a sharded store log or a spill tier to
+    /// maintain. Requests only *enqueue* work on it.
+    maint: Option<Arc<Maintainer>>,
     cache: Mutex<MergedCache>,
     seen: Mutex<HashMap<TenantId, u64>>,
     /// Tenants with a merge in flight — prevents two workers that both
@@ -659,10 +680,27 @@ impl Engine {
         let model_bytes = base.weights.len() * 4 + base_layers.len() * d * d * 8;
         let spill = match &opts.spill_dir {
             Some(dir) if policy.spill_pays_off(base_layers.len(), model_bytes) => {
-                Some(Mutex::new(SpillTier::open(dir, opts.spill_budget_bytes)?))
+                Some(Arc::new(Mutex::new(SpillTier::open(dir, opts.spill_budget_bytes)?)))
             }
             Some(_) => None, // re-merging is cheaper than the disk here
             None => None,
+        };
+
+        // Background maintenance: spawned whenever there is a sharded
+        // store log to compact or a spill tier to write. It takes
+        // ownership of both duties — the log's inline auto-compaction is
+        // disabled for the thread's lifetime, and cache evictions only
+        // *enqueue* their spill write — so the request path never pays a
+        // compaction or a bulk disk write.
+        let maint_log = registry.sharded_log();
+        let maint = if maint_log.is_some() || spill.is_some() {
+            Some(Arc::new(Maintainer::spawn(
+                opts.maint_interval,
+                maint_log,
+                spill.clone(),
+            )))
+        } else {
+            None
         };
 
         let obs = EngineObs::new(opts.trace_ring_cap, opts.tenant_topk);
@@ -696,6 +734,7 @@ impl Engine {
             policy,
             kernel: opts.kernel,
             spill,
+            maint,
             cache: Mutex::new(cache),
             seen: Mutex::new(HashMap::new()),
             merging: Mutex::new(HashSet::new()),
@@ -711,6 +750,22 @@ impl Engine {
             workers_alive: AtomicUsize::new(0),
             workers_spawned: opts.workers.max(1),
         });
+
+        // Live re-registration: when the registry overwrites a live
+        // tenant it calls back here (post-durability), and the engine
+        // drops that tenant's memoized factorized operators and its
+        // uncacheable pin — both were built from the old adapter. The
+        // merged cache is left to the per-hit CRC recheck in
+        // `serve_batch`, which also covers windows this hook can't (a
+        // merge that was already in flight when the hook fired). Weak:
+        // the registry must not keep the engine alive.
+        let weak: Weak<Shared> = Arc::downgrade(&shared);
+        shared.registry.set_update_hook(Box::new(move |tenant| {
+            if let Some(sh) = weak.upgrade() {
+                sh.factored.lock().unwrap().remove(&tenant);
+                sh.uncacheable.lock().unwrap().remove(&tenant);
+            }
+        }));
 
         let workers = (0..opts.workers.max(1))
             .map(|w| {
@@ -753,10 +808,14 @@ impl Engine {
 
     /// The registry this engine serves from. Registration is
     /// concurrent-safe, so *new* tenants can join while traffic flows
-    /// (`serve-bench --store` drives exactly that contention); replacing
-    /// an existing tenant's adapter under live traffic is not supported —
-    /// merged-cache entries and factorized operators are keyed by tenant
-    /// and assume immutable adapters.
+    /// (`serve-bench --store` drives exactly that contention), and
+    /// replacing a live tenant's adapter under traffic is safe end to
+    /// end: the registry's update hook drops the tenant's factorized
+    /// operators, and every merged-cache hit rechecks the params CRC
+    /// captured at merge time against the registry
+    /// (`serve_cache_stale_crc_total` counts the invalidations), so a
+    /// stale model can be served at most until the registration is
+    /// acknowledged — never after.
     pub fn registry(&self) -> &Registry {
         &self.shared.registry
     }
@@ -888,6 +947,23 @@ impl Engine {
         self.shared.spill.as_ref().map(|s| s.lock().unwrap().stats())
     }
 
+    /// Background-maintenance counters so far (`None` when no thread
+    /// was spawned — in-memory registry and no spill tier).
+    pub fn maint_stats(&self) -> Option<MaintStats> {
+        self.shared.maint.as_ref().map(|m| m.stats())
+    }
+
+    /// Block until the maintenance thread has drained every queued spill
+    /// write and run one full compaction scan. Benches call this between
+    /// phases so spilled models are on disk before a reload is measured;
+    /// it is never needed for correctness (the factor tier is always
+    /// durable before an ack).
+    pub fn drain_maintenance(&self) {
+        if let Some(m) = &self.shared.maint {
+            m.drain();
+        }
+    }
+
     /// Point-in-time health probes — the `/healthz` payload: still
     /// accepting, worker pool alive, spill dir writable, store log tail
     /// acked.
@@ -944,6 +1020,12 @@ impl Engine {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Workers are quiet: drain queued spill writes, run a final
+        // compaction scan, and hand inline auto-compaction back to the
+        // log before the engine reports.
+        if let Some(m) = &self.shared.maint {
+            m.shutdown();
+        }
     }
 
     /// Drain pending work, join workers, and return the final report.
@@ -964,6 +1046,7 @@ impl Engine {
             metrics: self.metrics(),
             cache: self.cache_stats(),
             spill: self.spill_stats(),
+            maint: self.maint_stats(),
             obs,
             slo,
             traces: self.traces(),
@@ -1091,9 +1174,11 @@ fn factored_ops(
     ))
 }
 
-/// Cache a merged model; displaced models ride to the spill tier (the
-/// I/O happens here, outside the cache lock), and a model too big for the
-/// whole budget pins its tenant to the factorized path.
+/// Cache a merged model; displaced models are handed to the maintenance
+/// thread, which encodes and writes them to the spill tier off the
+/// request path (the worker only pushes `(tenant, crc, Arc<flat>)` onto a
+/// queue). A model too big for the whole budget pins its tenant to the
+/// factorized path.
 fn insert_cached(sh: &Shared, tenant: TenantId, model: CachedModel) {
     let outcome = sh.cache.lock().unwrap().insert(tenant, model);
     if outcome.inserted {
@@ -1104,41 +1189,20 @@ fn insert_cached(sh: &Shared, tenant: TenantId, model: CachedModel) {
         // keep serving this tenant factorized.
         sh.uncacheable.lock().unwrap().insert(tenant);
     }
-    let Some(spill) = &sh.spill else { return };
+    if sh.spill.is_none() {
+        return;
+    }
+    let Some(maint) = &sh.maint else { return };
     for (t, m) in outcome.evicted {
         // The freshness tag is the CRC captured when the model was
         // merged — never a re-read of the registry, which could have a
         // newer adapter by now.
-        if let Err(err) = spill_put(spill, t, m.params_crc, &m.flat) {
-            eprintln!("[serve] spilling evicted tenant {t} failed: {err:#}");
-        }
-    }
-}
-
-/// Spill a merged model with the bulk disk I/O (encode + write + rename)
-/// *outside* the tier mutex: the lock is held only for the metadata
-/// phases — budget reservation and index commit — so concurrent workers'
-/// cold-path reads/writes no longer serialize on one file transfer
-/// (ROADMAP item from PR 4).
-fn spill_put(spill: &Mutex<SpillTier>, tenant: TenantId, crc: u32, flat: &[f32]) -> Result<bool> {
-    let bytes = gsad::encode_merged(tenant, crc, flat); // CPU-bound, lock-free
-    let Some(pending) = spill.lock().unwrap().reserve(tenant, bytes.len() as u64) else {
-        return Ok(false); // larger than the whole budget
-    };
-    match pending.write(&bytes) {
-        Ok(()) => {
-            spill.lock().unwrap().commit(pending);
-            Ok(true)
-        }
-        Err(e) => {
-            spill.lock().unwrap().abort(pending);
-            Err(e)
-        }
+        maint.enqueue_spill(t, m.params_crc, Arc::clone(&m.flat));
     }
 }
 
 /// Load a spilled model with the read + CRC/staleness check *outside*
-/// the tier mutex (see [`spill_put`]). The generation from `begin_get`
+/// the tier mutex. The generation from `begin_get`
 /// makes the invalidation safe against racing re-puts: a failed read of
 /// an already-replaced entry must not drop the replacement.
 fn spill_get(spill: &Mutex<SpillTier>, tenant: TenantId, expected_crc: u32) -> Option<Vec<f32>> {
@@ -1182,11 +1246,20 @@ fn serve_batch(
         }
     }
 
-    // Hot path: merged weights already cached.
+    // Hot path: merged weights already cached — but a hit is only
+    // servable if the params CRC captured at merge time still matches
+    // the registry's current adapter. A mismatch means the tenant was
+    // re-registered live: the stale model is dropped (treated as a
+    // miss, counted under `serve_cache_stale_crc_total`) and this batch
+    // falls through to the cold path, which merges the new params.
     let cached = timer.time(Stage::Plan, || sh.cache.lock().unwrap().get(tenant));
     if let Some(model) = cached {
-        let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
-        return Ok((y, ServePath::CachedDense, timer.ns));
+        if sh.registry.params_crc_of(tenant) == Some(model.params_crc) {
+            let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
+            return Ok((y, ServePath::CachedDense, timer.ns));
+        }
+        sh.obs.stale_crc.inc();
+        sh.cache.lock().unwrap().remove(tenant);
     }
 
     let entry = sh
@@ -1211,12 +1284,18 @@ fn serve_batch(
     if promotable && sh.merging.lock().unwrap().insert(tenant) {
         // Double-check: a peer may have finished merging between our
         // cache miss and the claim. Bind the lookup so the cache mutex
-        // is released before the forward pass.
+        // is released before the forward pass. Same staleness guard as
+        // the hit path — the peer may have merged a since-replaced
+        // adapter.
         let recheck = timer.time(Stage::Plan, || sh.cache.lock().unwrap().get(tenant));
         if let Some(model) = recheck {
-            sh.merging.lock().unwrap().remove(&tenant);
-            let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
-            return Ok((y, ServePath::CachedDense, timer.ns));
+            if sh.registry.params_crc_of(tenant) == Some(model.params_crc) {
+                sh.merging.lock().unwrap().remove(&tenant);
+                let y = timer.time(Stage::Kernel, || forward_dense(&sh.kernel, &model.layers, x));
+                return Ok((y, ServePath::CachedDense, timer.ns));
+            }
+            sh.obs.stale_crc.inc();
+            sh.cache.lock().unwrap().remove(tenant);
         }
         // Spill tier first: an earlier eviction may have left this
         // tenant's merged weights one sequential read away (the tier is
@@ -1423,6 +1502,7 @@ mod tests {
             trace_ring_cap: TRACE_RING_CAP,
             capture_slow_ns: None,
             tenant_topk: DEFAULT_TENANT_TOPK,
+            maint_interval: Duration::from_millis(25),
         }
     }
 
@@ -1920,8 +2000,11 @@ mod tests {
 
         let t0_merge = serve(0);
         assert_eq!(t0_merge.path, ServePath::ColdMerge);
-        let t1_merge = serve(1); // evicts tenant 0 → spilled to disk
+        let t1_merge = serve(1); // evicts tenant 0 → enqueued for spilling
         assert_eq!(t1_merge.path, ServePath::ColdMerge);
+        // The spill write happens on the maintenance thread, not the
+        // request path — wait for it to land before asking for a reload.
+        engine.drain_maintenance();
         let t0_back = serve(0); // must come back from disk, not a re-merge
         assert_eq!(t0_back.path, ServePath::SpillLoad);
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
@@ -1940,6 +2023,80 @@ mod tests {
         let spill = report.spill.expect("tier engaged");
         assert_eq!(spill.hits, 1);
         assert!(spill.puts >= 1);
+        // Every spill write was the maintenance thread's, not a worker's.
+        let maint = report.maint.expect("maintainer ran");
+        assert_eq!(maint.spill_writes, spill.puts, "all spill puts off-path");
+        assert!(maint.off_path_ns > 0);
         let _ = std::fs::remove_dir_all(&spill_dir);
+    }
+
+    /// Clone `tenant`'s adapter from `donor` (same-family different
+    /// params — `seed` varies the donor registry) for re-registration.
+    fn entry_from(seed: u64, tenant: TenantId) -> AdapterEntry {
+        let donor = synthetic(2, 2, 8, 2, seed).unwrap();
+        donor.get(tenant).unwrap()
+    }
+
+    #[test]
+    fn live_re_registration_invalidates_the_cached_model() {
+        let reg = synthetic(2, 2, 8, 2, 16).unwrap();
+        let mut opts = quick_opts();
+        opts.workers = 1; // deterministic path sequence
+        opts.promote_after = Some(1);
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| (i as f32).cos() * 0.2).collect();
+        let serve = || engine.submit(0, input.clone()).unwrap().wait().unwrap();
+
+        assert_eq!(serve().path, ServePath::ColdMerge);
+        let old_hot = serve();
+        assert_eq!(old_hot.path, ServePath::CachedDense);
+
+        // Replace tenant 0's adapter while the engine is live. The next
+        // request *hits* the cache, detects the stale CRC, and re-merges
+        // the new params instead of serving the old model.
+        let new_entry = entry_from(61, 0);
+        engine.registry().register(0, new_entry).unwrap();
+        let post = serve();
+        assert_eq!(post.path, ServePath::ColdMerge, "stale hit must demote to a merge");
+        assert_ne!(
+            post.output, old_hot.output,
+            "post-update outputs must reflect the new adapter"
+        );
+        // And the re-merged model serves hot and bit-identically after.
+        let post_hot = serve();
+        assert_eq!(post_hot.path, ServePath::CachedDense);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&post_hot.output), bits(&post.output));
+
+        let report = engine.finish();
+        assert_eq!(report.obs.counters["serve_cache_stale_crc_total"], 1);
+        assert_eq!(report.metrics.merges, 2);
+    }
+
+    #[test]
+    fn re_registration_rebuilds_factorized_operators() {
+        // A cold (never-promoted) tenant's memoized LayerOps were built
+        // from the old adapter — the update hook must drop them so the
+        // very next factorized serve uses the new params.
+        let reg = synthetic(2, 2, 8, 2, 17).unwrap();
+        let mut opts = quick_opts();
+        opts.workers = 1;
+        opts.promote_after = Some(100); // stay factorized throughout
+        let engine = Engine::new(reg, opts).unwrap();
+        let d = engine.input_dim();
+        let input: Vec<f32> = (0..d).map(|i| ((i % 3) as f32) * 0.1 - 0.1).collect();
+        let serve = || engine.submit(0, input.clone()).unwrap().wait().unwrap();
+
+        let before = serve();
+        assert_eq!(before.path, ServePath::Factorized);
+        engine.registry().register(0, entry_from(62, 0)).unwrap();
+        let after = serve();
+        assert_eq!(after.path, ServePath::Factorized);
+        assert_ne!(
+            after.output, before.output,
+            "factorized serve must use the re-registered adapter"
+        );
+        engine.finish();
     }
 }

@@ -50,32 +50,43 @@ pub struct BaseModel {
 }
 
 /// Registry of adapters keyed by tenant id over one shared base.
-/// Registration is concurrent-safe (`RwLock`); lookups clone `Arc`s only
-/// (in store-backed mode a cold lookup additionally pays one disk read).
+/// Registration is concurrent-safe; lookups clone `Arc`s only (in
+/// store-backed mode a cold lookup additionally pays one disk read).
+///
+/// Mutations for one tenant serialize on a *stripe* lock chosen by the
+/// same hash that places the tenant in the store's sharded log
+/// ([`crate::store::shard_of`]), so registrations landing in different
+/// shards proceed fully in parallel — neither the tenant map nor the
+/// store is locked across another shard's durable append.
 pub struct Registry {
     base: BaseModel,
     /// In-memory mode: the tenant set. Store-backed mode: the hydration
     /// cache — always a subset of the store's live set.
     tenants: RwLock<HashMap<TenantId, AdapterEntry>>,
-    store: Option<Mutex<AdapterStore>>,
+    /// The durable store ([`AdapterStore`] is internally synchronized
+    /// per shard — no outer lock, so appends to different shards run in
+    /// parallel).
+    store: Option<AdapterStore>,
+    /// Striped mutation locks (stripe = store shard of the tenant).
+    /// Holding a tenant's stripe makes register / unregister / hydrate
+    /// atomic with respect to each other *for that tenant* — the
+    /// RAM-map-vs-log agreement the old whole-map lock provided, at
+    /// per-shard granularity.
+    stripes: Vec<Mutex<()>>,
+    /// CRC32 of every known tenant's current flat params
+    /// ([`gsad::params_crc`]), maintained on register / hydrate /
+    /// unregister. The serving engine compares a merged-cache hit's
+    /// captured CRC against this map to detect live re-registrations.
+    crcs: Mutex<HashMap<TenantId, u32>>,
+    /// Fired (outside all registry locks) after a registration
+    /// *overwrites* a live tenant — the engine hooks this to evict that
+    /// tenant's factored operators and cached merged weights.
+    update_hook: RwLock<Option<Box<dyn Fn(TenantId) + Send + Sync>>>,
 }
 
 impl Registry {
     pub fn new(base_weights: Vec<f32>, base_spec: FlatSpec) -> Result<Registry> {
-        anyhow::ensure!(
-            base_weights.len() == base_spec.size(),
-            "base buffer has {} floats but spec expects {}",
-            base_weights.len(),
-            base_spec.size()
-        );
-        Ok(Registry {
-            base: BaseModel {
-                weights: Arc::new(base_weights),
-                spec: Arc::new(base_spec),
-            },
-            tenants: RwLock::new(HashMap::new()),
-            store: None,
-        })
+        Registry::build(base_weights, base_spec, None)
     }
 
     /// Store-backed mode: mount a durable [`AdapterStore`] under the same
@@ -88,9 +99,43 @@ impl Registry {
         base_spec: FlatSpec,
         store: AdapterStore,
     ) -> Result<Registry> {
-        let mut reg = Registry::new(base_weights, base_spec)?;
-        reg.store = Some(Mutex::new(store));
-        Ok(reg)
+        Registry::build(base_weights, base_spec, Some(store))
+    }
+
+    fn build(
+        base_weights: Vec<f32>,
+        base_spec: FlatSpec,
+        store: Option<AdapterStore>,
+    ) -> Result<Registry> {
+        anyhow::ensure!(
+            base_weights.len() == base_spec.size(),
+            "base buffer has {} floats but spec expects {}",
+            base_weights.len(),
+            base_spec.size()
+        );
+        let n_stripes = store
+            .as_ref()
+            .map(|s| s.num_shards())
+            .unwrap_or(crate::store::DEFAULT_SHARDS)
+            .max(1);
+        Ok(Registry {
+            base: BaseModel {
+                weights: Arc::new(base_weights),
+                spec: Arc::new(base_spec),
+            },
+            tenants: RwLock::new(HashMap::new()),
+            store,
+            stripes: (0..n_stripes).map(|_| Mutex::new(())).collect(),
+            crcs: Mutex::new(HashMap::new()),
+            update_hook: RwLock::new(None),
+        })
+    }
+
+    /// The stripe serializing mutations of `tenant`. Same hash as the
+    /// store's shard placement, so one stripe maps onto one shard's
+    /// append lock and two stripes never contend on the same shard file.
+    fn stripe(&self, tenant: TenantId) -> &Mutex<()> {
+        &self.stripes[crate::store::shard_of(tenant, self.stripes.len())]
     }
 
     pub fn base(&self) -> &BaseModel {
@@ -105,26 +150,82 @@ impl Registry {
     /// Health probe of the backing store, if any (`/healthz`). `None`
     /// for in-memory registries — which are vacuously healthy.
     pub fn store_health(&self) -> Option<crate::store::StoreHealth> {
-        self.store.as_ref().map(|s| s.lock().unwrap().health())
+        self.store.as_ref().map(|s| s.health())
+    }
+
+    /// The backing store's sharded log, if any — for wiring the
+    /// background [`crate::store::Maintainer`].
+    pub fn sharded_log(&self) -> Option<Arc<crate::store::ShardedLog>> {
+        self.store.as_ref().map(|s| s.sharded_log())
+    }
+
+    /// Install the live re-registration hook: called with the tenant id
+    /// after a registration overwrites a live tenant, once the new
+    /// record is durable and visible. Runs outside every registry lock
+    /// (it may take its own), but must not call back into registration.
+    pub fn set_update_hook(&self, hook: Box<dyn Fn(TenantId) + Send + Sync>) {
+        *self.update_hook.write().unwrap() = Some(hook);
     }
 
     /// Register (or replace) a tenant's adapter. Validates
     /// ([`Registry::validate`]), then — in store-backed mode — durably
     /// appends to the segment log *before* the in-RAM insert, so an
     /// acknowledged registration survives a crash.
-    /// Lock order everywhere in this type: `tenants` (write) before
-    /// `store` — holding the map lock across the durable append keeps
-    /// RAM and log in agreement under concurrent register / unregister /
-    /// hydrate (two racing re-registrations must not leave the map on
-    /// v1 while the log's live record is v2).
+    ///
+    /// Lock order everywhere in this type: stripe → store shard →
+    /// `tenants` (brief) → `crcs`. Holding the tenant's *stripe* across
+    /// the durable append keeps RAM and log in agreement under
+    /// concurrent register / unregister / hydrate (two racing
+    /// re-registrations must not leave the map on v1 while the log's
+    /// live record is v2) — without serializing registrations that land
+    /// in different shards.
     pub fn register(&self, tenant: TenantId, entry: AdapterEntry) -> Result<()> {
         self.validate(tenant, &entry)?;
-        let mut map = self.tenants.write().unwrap();
-        if let Some(store) = &self.store {
-            store.lock().unwrap().put(tenant, &entry)?;
+        let crc = gsad::params_crc(&entry);
+        let replaced = {
+            let _stripe = self.stripe(tenant).lock().unwrap();
+            let live = self.tenants.read().unwrap().contains_key(&tenant)
+                || self.store.as_ref().is_some_and(|s| s.contains(tenant));
+            if let Some(store) = &self.store {
+                store.put(tenant, &entry)?;
+            }
+            self.tenants.write().unwrap().insert(tenant, entry);
+            self.crcs.lock().unwrap().insert(tenant, crc);
+            live
+        };
+        if replaced {
+            // Outside the stripe: the hook takes engine locks, and the
+            // engine's miss path takes them before hydrating (stripe).
+            // Correctness does not depend on this ordering — the CRC
+            // recheck on cache hits is the backstop for any window
+            // between the insert above and the eviction here.
+            if let Some(hook) = self.update_hook.read().unwrap().as_ref() {
+                hook(tenant);
+            }
         }
-        map.insert(tenant, entry);
         Ok(())
+    }
+
+    /// CRC32 of the tenant's current flat params, or `None` for an
+    /// unknown tenant. Served from the maintained map; a store-backed
+    /// tenant that was never hydrated pays one uncached disk read, after
+    /// which the value is remembered. This is the engine's staleness
+    /// oracle for merged-cache hits.
+    pub fn params_crc_of(&self, tenant: TenantId) -> Option<u32> {
+        if let Some(c) = self.crcs.lock().unwrap().get(&tenant) {
+            return Some(*c);
+        }
+        // Serialize with register/unregister so we never cache a CRC
+        // computed from a record that a racing overwrite already
+        // superseded.
+        let _stripe = self.stripe(tenant).lock().unwrap();
+        if let Some(c) = self.crcs.lock().unwrap().get(&tenant) {
+            return Some(*c);
+        }
+        let entry = self.read_uncached(tenant).ok().flatten()?;
+        let crc = gsad::params_crc(&entry);
+        self.crcs.lock().unwrap().insert(tenant, crc);
+        Some(crc)
     }
 
     /// Validate an adapter entry: the parameter buffer against its spec,
@@ -199,18 +300,20 @@ impl Registry {
         let Some(store) = &self.store else {
             return Ok(None);
         };
-        // Map lock first (see `register` for the order), held across the
+        // Stripe first (see `register` for the order), held across the
         // disk read: a hydration must not resurrect a tenant that a
-        // concurrent `unregister` tombstones between our read and insert.
-        let mut map = self.tenants.write().unwrap();
-        if let Some(e) = map.get(&tenant) {
+        // concurrent `unregister` tombstones between our read and
+        // insert. Hydrations of tenants in other shards proceed freely.
+        let _stripe = self.stripe(tenant).lock().unwrap();
+        if let Some(e) = self.tenants.read().unwrap().get(&tenant) {
             return Ok(Some(e.clone())); // raced hydrator landed first
         }
-        let Some(entry) = store.lock().unwrap().get(tenant)? else {
+        let Some(entry) = store.get(tenant)? else {
             return Ok(None);
         };
         self.validate(tenant, &entry)?;
-        map.insert(tenant, entry.clone());
+        self.crcs.lock().unwrap().insert(tenant, gsad::params_crc(&entry));
+        self.tenants.write().unwrap().insert(tenant, entry.clone());
         Ok(Some(entry))
     }
 
@@ -224,7 +327,7 @@ impl Registry {
         let Some(store) = &self.store else {
             return Ok(None);
         };
-        store.lock().unwrap().get(tenant)
+        store.get(tenant)
     }
 
     /// A tenant's family descriptor without hydrating it (store-backed
@@ -252,10 +355,11 @@ impl Registry {
     /// Remove a tenant entirely (tombstoned in the store when backed).
     /// Returns `false` if the tenant was unknown.
     pub fn unregister(&self, tenant: TenantId) -> Result<bool> {
-        let mut map = self.tenants.write().unwrap();
-        let in_ram = map.remove(&tenant).is_some();
+        let _stripe = self.stripe(tenant).lock().unwrap();
+        let in_ram = self.tenants.write().unwrap().remove(&tenant).is_some();
+        self.crcs.lock().unwrap().remove(&tenant);
         if let Some(store) = &self.store {
-            let in_store = store.lock().unwrap().delete(tenant)?;
+            let in_store = store.delete(tenant)?;
             return Ok(in_ram || in_store);
         }
         Ok(in_ram)
@@ -265,15 +369,13 @@ impl Registry {
         if self.tenants.read().unwrap().contains_key(&tenant) {
             return true;
         }
-        self.store
-            .as_ref()
-            .is_some_and(|s| s.lock().unwrap().contains(tenant))
+        self.store.as_ref().is_some_and(|s| s.contains(tenant))
     }
 
     pub fn len(&self) -> usize {
         match &self.store {
             // Write-through keeps RAM ⊆ store, so the store is authoritative.
-            Some(s) => s.lock().unwrap().len(),
+            Some(s) => s.len(),
             None => self.tenants.read().unwrap().len(),
         }
     }
@@ -284,7 +386,7 @@ impl Registry {
 
     pub fn tenant_ids(&self) -> Vec<TenantId> {
         match &self.store {
-            Some(s) => s.lock().unwrap().tenant_ids(),
+            Some(s) => s.tenant_ids(),
             None => {
                 let mut ids: Vec<TenantId> =
                     self.tenants.read().unwrap().keys().copied().collect();
@@ -923,6 +1025,73 @@ mod tests {
         assert_eq!(merged.len(), reg.base().weights.len());
         assert_eq!(reg.hydrate_all().unwrap(), pool.len() - 1);
         assert_eq!(reg.hydrated_len(), pool.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn re_registration_fires_the_update_hook_and_refreshes_the_crc() {
+        let (base, spec, pool) = entry_pool(54);
+        let dir = unique_temp_dir("reg_rereg");
+        let reg = Registry::with_store(
+            base,
+            spec,
+            AdapterStore::open(&dir).unwrap(),
+        )
+        .unwrap();
+        let fired: Arc<Mutex<Vec<TenantId>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&fired);
+        reg.set_update_hook(Box::new(move |t| sink.lock().unwrap().push(t)));
+
+        assert_eq!(reg.params_crc_of(7), None, "unknown tenant has no CRC");
+        reg.register(7, pool[0].clone()).unwrap();
+        assert!(fired.lock().unwrap().is_empty(), "first registration is not an update");
+        let crc1 = reg.params_crc_of(7).expect("registered tenant has a CRC");
+        assert_eq!(crc1, crate::store::gsad::params_crc(&pool[0]));
+
+        // Overwrite with different params: hook fires, CRC moves.
+        reg.register(7, pool[1].clone()).unwrap();
+        assert_eq!(*fired.lock().unwrap(), vec![7]);
+        let crc2 = reg.params_crc_of(7).unwrap();
+        assert_eq!(crc2, crate::store::gsad::params_crc(&pool[1]));
+        assert_ne!(crc1, crc2, "pool entries must differ for this test");
+
+        // A dehydrated tenant still answers the CRC oracle (one uncached
+        // read), and unregister forgets it.
+        reg.drop_hydrated(7);
+        assert_eq!(reg.params_crc_of(7), Some(crc2));
+        assert!(reg.unregister(7).unwrap());
+        assert_eq!(reg.params_crc_of(7), None);
+        assert_eq!(*fired.lock().unwrap(), vec![7], "unregister is not an update");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_registrations_across_shards_all_land() {
+        // The lock-narrowing contract: stripes only serialize same-shard
+        // tenants, so a storm of distinct-tenant registrations from many
+        // threads must all be acknowledged, durable, and readable.
+        let (base, spec, pool) = entry_pool(55);
+        let dir = unique_temp_dir("reg_storm");
+        let reg = Registry::with_store(
+            base,
+            spec,
+            AdapterStore::open_sharded(&dir, 8).unwrap(),
+        )
+        .unwrap();
+        crate::util::pool::parallel_map(48, 8, |i| {
+            let t = i as TenantId;
+            reg.register(t, pool[i % pool.len()].clone()).unwrap();
+        });
+        assert_eq!(reg.len(), 48);
+        for i in 0..48usize {
+            let t = i as TenantId;
+            let back = reg.get(t).expect("registered tenant");
+            assert!(entries_equal(&back, &pool[i % pool.len()]), "tenant {t} drifted");
+            assert_eq!(
+                reg.params_crc_of(t),
+                Some(crate::store::gsad::params_crc(&pool[i % pool.len()]))
+            );
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

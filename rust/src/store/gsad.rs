@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::adapter::{desc_from_json, desc_to_json};
+use crate::adapter::{desc_from_json_versioned, desc_to_json, AdapterDesc};
 use crate::coordinator::FlatSpec;
 use crate::serve::registry::{AdapterEntry, BaseModel, TenantId};
 use crate::util::container::{crc32_f32, Container};
@@ -100,6 +100,29 @@ pub fn encode_tombstone(tenant: TenantId) -> Vec<u8> {
     Container::new(base_meta("tombstone", tenant)).encode(MAGIC, true)
 }
 
+/// Decode a `"kind"` header object and, when the record predates the
+/// family's current wire version, rewrite the slab through the family's
+/// [`crate::adapter::AdapterFamily::migrate`] hook — so a v2 build keeps
+/// reading the v1 records it persisted. Future versions were already
+/// rejected by [`desc_from_json_versioned`].
+fn decode_kind_migrated(
+    kind: &Json,
+    tenant: TenantId,
+    params: &mut Vec<f32>,
+    spec: &mut FlatSpec,
+) -> Result<AdapterDesc> {
+    let (desc, fv) = desc_from_json_versioned(kind)?;
+    let current = desc.family().wire_version();
+    if fv < current {
+        desc.family()
+            .migrate(desc.cfg(), fv, params, spec)
+            .map_err(|e| {
+                anyhow!("migrating tenant {tenant} ('{}' v{fv} -> v{current}): {e:#}", desc.tag())
+            })?;
+    }
+    Ok(desc)
+}
+
 fn decode_common(c: &Container) -> Result<(String, TenantId)> {
     let v = c.meta_usize("v")?;
     anyhow::ensure!(v == VERSION, "unsupported GSAD version {v} (this reader is v{VERSION})");
@@ -119,9 +142,9 @@ pub fn decode(bytes: &[u8]) -> Result<Record> {
     let (record, tenant) = decode_common(&c)?;
     match record.as_str() {
         "adapter" => {
-            let desc = desc_from_json(c.meta_req("kind")?)?;
-            let spec = FlatSpec::from_json(c.meta_req("spec")?)?;
-            let params = c.get("params")?.to_vec();
+            let mut spec = FlatSpec::from_json(c.meta_req("spec")?)?;
+            let mut params = c.get("params")?.to_vec();
+            let desc = decode_kind_migrated(c.meta_req("kind")?, tenant, &mut params, &mut spec)?;
             anyhow::ensure!(
                 params.len() == spec.size(),
                 "GSAD adapter for tenant {tenant}: {} params but spec expects {}",
@@ -203,9 +226,14 @@ pub fn decode_fleet(bytes: &[u8]) -> Result<(Vec<f32>, FlatSpec, Vec<(TenantId, 
             .filter(|x| *x >= 0.0 && x.fract() == 0.0)
             .ok_or_else(|| anyhow!("fleet tenant id is not a non-negative integer"))?
             as TenantId;
-        let desc = desc_from_json(a.req("kind").map_err(|e| anyhow!("{e}"))?)?;
-        let spec = FlatSpec::from_json(a.req("spec").map_err(|e| anyhow!("{e}"))?)?;
-        let params = c.get(&format!("t{tenant}"))?.to_vec();
+        let mut spec = FlatSpec::from_json(a.req("spec").map_err(|e| anyhow!("{e}"))?)?;
+        let mut params = c.get(&format!("t{tenant}"))?.to_vec();
+        let desc = decode_kind_migrated(
+            a.req("kind").map_err(|e| anyhow!("{e}"))?,
+            tenant,
+            &mut params,
+            &mut spec,
+        )?;
         anyhow::ensure!(
             params.len() == spec.size(),
             "fleet adapter for tenant {tenant}: {} params but spec expects {}",
@@ -464,6 +492,178 @@ pub(crate) mod tests {
         let foreign = with_patched_header(&fleet, "\"kind\":\"gsoft\"", "\"kind\":\"butterfly\"");
         let err = decode_fleet(&foreign).expect_err("unknown family in a fleet");
         assert!(format!("{err:#}").contains("unknown adapter family 'butterfly'"));
+    }
+
+    #[test]
+    fn migrate_hook_lets_a_bumped_family_read_its_v1_records() {
+        // Satellite: a family that bumped its wire version to 2 must
+        // still read the v1 records it persisted, routed through its
+        // `migrate` hook — and a *future* v3 record must stay an error.
+        use crate::adapter::{AdapterFamily, Config, FamilyRegistry, LayerOp, SlabCx};
+
+        struct Relay2;
+        impl AdapterFamily for Relay2 {
+            fn tag(&self) -> &'static str {
+                "relay2_test"
+            }
+            fn wire_version(&self) -> usize {
+                2
+            }
+            fn suffixes(&self) -> &'static [&'static str] {
+                &["r2_q"]
+            }
+            fn validate_slab(&self, _cfg: &Config, _cx: &SlabCx) -> Result<()> {
+                Ok(())
+            }
+            fn synthetic_spec(
+                &self,
+                _cfg: &Config,
+                _layers: &[String],
+                _d: usize,
+                _hint: usize,
+            ) -> Result<FlatSpec> {
+                Err(anyhow!("test-only family"))
+            }
+            fn merge(
+                &self,
+                _cfg: &Config,
+                _base: &[f32],
+                _adapter: &[f32],
+                _base_spec: &FlatSpec,
+                _adapter_spec: &FlatSpec,
+            ) -> Result<Vec<f32>> {
+                Err(anyhow!("test-only family"))
+            }
+            fn plan_layer(
+                &self,
+                _cfg: &Config,
+                _params: &[f32],
+                _spec: &FlatSpec,
+                _layer: &str,
+                _d: usize,
+            ) -> Result<Option<Box<dyn LayerOp>>> {
+                Ok(None)
+            }
+            // v1 stored the slab in reverse element order.
+            fn migrate(
+                &self,
+                _cfg: &Config,
+                old_fv: usize,
+                params: &mut Vec<f32>,
+                _spec: &mut FlatSpec,
+            ) -> Result<()> {
+                anyhow::ensure!(old_fv == 1, "only v1 records are migratable");
+                params.reverse();
+                Ok(())
+            }
+        }
+        static RELAY2: Relay2 = Relay2;
+        FamilyRegistry::register(&RELAY2).unwrap();
+
+        let spec = FlatSpec {
+            entries: vec![("layer0.w.r2_q".into(), vec![2, 2])],
+        };
+        let params = vec![1.0f32, 2.0, 3.0, 4.0];
+        let entry = AdapterEntry {
+            desc: crate::adapter::AdapterDesc::new("relay2_test", &[]).unwrap(),
+            params: Arc::new(params.clone()),
+            spec: Arc::new(spec),
+        };
+        let bytes = encode_adapter(9, &entry); // header carries "fv":2
+
+        // Current-version record: decodes untouched, migrate not called.
+        match decode(&bytes).unwrap() {
+            Record::Adapter { entry: back, .. } => {
+                assert_eq!(back.params.as_ref(), &params)
+            }
+            _ => panic!("wrong record type"),
+        }
+
+        // v1 record: decodes through the migrate hook (reversed slab).
+        let v1 = with_patched_header(&bytes, "\"fv\":2", "\"fv\":1");
+        match decode(&v1).unwrap() {
+            Record::Adapter { tenant, entry: back } => {
+                assert_eq!(tenant, 9);
+                assert_eq!(back.desc.tag(), "relay2_test");
+                let want: Vec<f32> = params.iter().rev().copied().collect();
+                assert_eq!(back.params.as_ref(), &want, "migrate hook did not run");
+            }
+            _ => panic!("wrong record type"),
+        }
+
+        // Future record: still a clean error.
+        let v3 = with_patched_header(&bytes, "\"fv\":2", "\"fv\":3");
+        let err = decode(&v3).expect_err("future family version must be rejected");
+        assert!(
+            format!("{err:#}").contains("reads up to v2"),
+            "unexpected error: {err:#}"
+        );
+
+        // A version the hook itself refuses surfaces as a decode error
+        // (not a panic, not a silent wrong slab).
+        let v0 = with_patched_header(&bytes, "\"fv\":2", "\"fv\":0");
+        let err = decode(&v0).expect_err("hook-refused version must error");
+        assert!(
+            format!("{err:#}").contains("only v1 records are migratable"),
+            "unexpected error: {err:#}"
+        );
+
+        // A bumped family *without* a migrate override fails loudly via
+        // the default hook (called directly; never registered).
+        struct NoPath;
+        impl AdapterFamily for NoPath {
+            fn tag(&self) -> &'static str {
+                "nopath_test"
+            }
+            fn wire_version(&self) -> usize {
+                2
+            }
+            fn suffixes(&self) -> &'static [&'static str] {
+                &["np_q"]
+            }
+            fn validate_slab(&self, _cfg: &Config, _cx: &SlabCx) -> Result<()> {
+                Ok(())
+            }
+            fn synthetic_spec(
+                &self,
+                _cfg: &Config,
+                _layers: &[String],
+                _d: usize,
+                _hint: usize,
+            ) -> Result<FlatSpec> {
+                Err(anyhow!("test-only family"))
+            }
+            fn merge(
+                &self,
+                _cfg: &Config,
+                _base: &[f32],
+                _adapter: &[f32],
+                _base_spec: &FlatSpec,
+                _adapter_spec: &FlatSpec,
+            ) -> Result<Vec<f32>> {
+                Err(anyhow!("test-only family"))
+            }
+            fn plan_layer(
+                &self,
+                _cfg: &Config,
+                _params: &[f32],
+                _spec: &FlatSpec,
+                _layer: &str,
+                _d: usize,
+            ) -> Result<Option<Box<dyn LayerOp>>> {
+                Ok(None)
+            }
+        }
+        let cfg = AdapterKind::Lora.desc().cfg().clone();
+        let mut p = vec![0.0f32];
+        let mut s = FlatSpec { entries: vec![] };
+        let err = NoPath
+            .migrate(&cfg, 1, &mut p, &mut s)
+            .expect_err("default migrate must decline");
+        assert!(
+            format!("{err:#}").contains("no migration path from wire version 1 to v2"),
+            "unexpected error: {err:#}"
+        );
     }
 
     #[test]

@@ -77,6 +77,11 @@ pub struct SegmentLog {
     live_bytes: u64,
     opts: LogOpts,
     stats: LogStats,
+    /// When `false`, appends/deletes never compact inline — a background
+    /// maintainer owns compaction instead ([`super::maint::Maintainer`]
+    /// polls [`SegmentLog::wants_compaction`] and calls
+    /// [`SegmentLog::compact`] off the request path).
+    auto_compact: bool,
 }
 
 const RECORD_HEADER: u64 = 8;
@@ -87,7 +92,7 @@ const MAX_RECORD_BYTES: u32 = 1 << 30;
 
 /// Flush a directory entry (file creation / rename) to disk — `sync_all`
 /// on the file alone does not make the *name* durable across power loss.
-fn sync_dir(path: &Path) -> Result<()> {
+pub(crate) fn sync_dir(path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             File::open(dir)
@@ -177,7 +182,24 @@ impl SegmentLog {
             live_bytes,
             opts,
             stats,
+            auto_compact: true,
         })
+    }
+
+    /// Toggle inline compaction on the append/delete path. Off means the
+    /// caller promises some other actor (the maintenance thread) watches
+    /// [`SegmentLog::wants_compaction`] — garbage accumulates unboundedly
+    /// otherwise.
+    pub fn set_auto_compact(&mut self, on: bool) {
+        self.auto_compact = on;
+    }
+
+    /// Would [`LogOpts`] trigger a compaction right now? (The predicate
+    /// behind inline auto-compaction, exposed so an external maintainer
+    /// can apply the same policy off the request path.)
+    pub fn wants_compaction(&self) -> bool {
+        self.file_bytes > self.opts.min_compact_bytes
+            && self.garbage_ratio() > self.opts.garbage_threshold
     }
 
     fn write_record(&mut self, payload: &[u8]) -> Result<Span> {
@@ -304,9 +326,7 @@ impl SegmentLog {
     }
 
     fn maybe_compact(&mut self) -> Result<()> {
-        if self.file_bytes > self.opts.min_compact_bytes
-            && self.garbage_ratio() > self.opts.garbage_threshold
-        {
+        if self.auto_compact && self.wants_compaction() {
             self.compact()?;
         }
         Ok(())
@@ -436,6 +456,30 @@ mod tests {
         // And a reopen of the compacted file agrees.
         drop(log);
         let mut log = SegmentLog::open(&path, tight_opts()).unwrap();
+        assert_eq!(log.get(1).unwrap().unwrap(), payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_compact_gate_defers_compaction_to_an_external_caller() {
+        // With the gate off, overwrites only *flag* compaction
+        // (wants_compaction) — the request path never pays it; an explicit
+        // compact() then reclaims the garbage, which is exactly the
+        // maintenance thread's contract.
+        let dir = unique_temp_dir("log_gate");
+        let path = dir.join("adapters.log");
+        let mut rng = crate::util::rng::Rng::new(35);
+        let mut log = SegmentLog::open(&path, tight_opts()).unwrap();
+        log.set_auto_compact(false);
+        let payload = gsad::encode_adapter(1, &random_entry(&mut rng, 0));
+        for _ in 0..8 {
+            log.append(1, &payload).unwrap();
+        }
+        assert_eq!(log.stats().compactions, 0, "gated appends must not compact");
+        assert!(log.wants_compaction(), "garbage past threshold must be flagged");
+        log.compact().unwrap();
+        assert_eq!(log.stats().compactions, 1);
+        assert!(!log.wants_compaction());
         assert_eq!(log.get(1).unwrap().unwrap(), payload);
         let _ = std::fs::remove_dir_all(&dir);
     }

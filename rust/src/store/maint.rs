@@ -1,0 +1,410 @@
+//! Background maintenance thread: compaction and spill-tier writes off
+//! the request path (DESIGN.md §13).
+//!
+//! Before this module, whichever request tripped a garbage threshold
+//! paid a synchronous compaction, and every RAM-cache eviction paid the
+//! merged-weight encode + `fs::write` inline. The [`Maintainer`] owns
+//! both: requests only *enqueue* work (an O(1) push under a short
+//! mutex), and the bulk encode/fs ops happen on this thread.
+//!
+//! Safety under live re-registration follows the split-phase
+//! generation-fenced [`SpillTier`] design from PR 5:
+//!
+//! - spill writes run `reserve` → [`super::spill::PendingSpill::write`] →
+//!   `commit` with the bulk I/O outside the tier lock, and the tier's
+//!   generation tags mean a reader that observed a stale entry can never
+//!   invalidate a racing re-put's fresh file;
+//! - the maintainer is the *single* spill writer, and its queue is FIFO,
+//!   so two queued writes for the same tenant land oldest-first — the
+//!   newest merged weights always win the index, and a stale file is
+//!   caught by the params-CRC tag on read regardless;
+//! - compaction takes exactly one shard's lock at a time
+//!   ([`ShardedLog::compact_shard`]); while the maintainer is alive it
+//!   flips the shards' inline auto-compaction off, so the request path
+//!   provably never compacts — and flips it back on at shutdown so an
+//!   unmaintained store still stays bounded.
+//!
+//! Every cycle (a queued job, an explicit [`Maintainer::kick`], or the
+//! `interval` tick) drains the spill queue, then scans the shards for
+//! garbage past policy. [`MaintStats`] accounts the whole plane:
+//! compaction/spill-write counts and the total off-request-path busy
+//! time, mirrored into the global `store_maint_*` metrics when obs is on.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serve::registry::TenantId;
+
+use super::gsad;
+use super::shard::ShardedLog;
+use super::spill::SpillTier;
+
+/// Default `--maint-interval-ms`: how often the maintainer wakes with no
+/// queued work to scan for compactions.
+pub const DEFAULT_MAINT_INTERVAL_MS: u64 = 200;
+
+/// Monotonic counters for the maintenance plane (snapshot with
+/// [`Maintainer::stats`]; the `maint` section of `BENCH_store.json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MaintStats {
+    /// Maintenance cycles run (ticks, kicks and job wakeups).
+    pub ticks: u64,
+    /// Shard compactions performed by this thread.
+    pub compactions: u64,
+    /// Spill files written by this thread.
+    pub spill_writes: u64,
+    /// Spill writes that failed (reservation refused or I/O error).
+    pub spill_write_failures: u64,
+    /// High-water mark of the job queue.
+    pub max_queue_depth: u64,
+    /// Total busy time on this thread — work the request path no longer
+    /// pays.
+    pub off_path_ns: u64,
+}
+
+/// A queued spill write: everything needed to encode and write the
+/// merged file off-path. The flat buffer is shared with the RAM cache's
+/// (just-evicted) entry, so enqueueing copies nothing.
+struct SpillJob {
+    tenant: TenantId,
+    params_crc: u32,
+    flat: Arc<Vec<f32>>,
+}
+
+struct State {
+    jobs: VecDeque<SpillJob>,
+    kicks: u64,
+    shutdown: bool,
+    /// A cycle is in flight (jobs already drained from the queue).
+    busy: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Wakes the maintenance thread (new job / kick / shutdown).
+    wake: Condvar,
+    /// Wakes [`Maintainer::drain`] waiters (cycle finished).
+    done: Condvar,
+    stats: Mutex<MaintStats>,
+    log: Option<Arc<ShardedLog>>,
+    spill: Option<Arc<Mutex<SpillTier>>>,
+    interval: Duration,
+}
+
+/// Handle to the background maintenance thread. Dropping it shuts the
+/// thread down (draining queued spill writes first).
+pub struct Maintainer {
+    inner: Arc<Inner>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Maintainer {
+    /// Spawn the maintenance thread over an optional factor tier and an
+    /// optional spill tier. Takes ownership of compaction for `log`
+    /// (inline auto-compaction is disabled until shutdown).
+    pub fn spawn(
+        interval: Duration,
+        log: Option<Arc<ShardedLog>>,
+        spill: Option<Arc<Mutex<SpillTier>>>,
+    ) -> Maintainer {
+        if let Some(log) = &log {
+            log.set_auto_compact(false);
+        }
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                kicks: 0,
+                shutdown: false,
+                busy: false,
+            }),
+            wake: Condvar::new(),
+            done: Condvar::new(),
+            stats: Mutex::new(MaintStats::default()),
+            log,
+            spill,
+            interval: interval.max(Duration::from_millis(1)),
+        });
+        let worker = Arc::clone(&inner);
+        let thread = std::thread::Builder::new()
+            .name("gsoft-maint".into())
+            .spawn(move || run(&worker))
+            .expect("failed to spawn maintenance thread");
+        Maintainer {
+            inner,
+            thread: Mutex::new(Some(thread)),
+        }
+    }
+
+    /// Enqueue a spill write (the request path's entire cost: one push
+    /// under a short mutex). Jobs enqueued after shutdown are dropped.
+    pub fn enqueue_spill(&self, tenant: TenantId, params_crc: u32, flat: Arc<Vec<f32>>) {
+        let depth = {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.shutdown {
+                return;
+            }
+            st.jobs.push_back(SpillJob {
+                tenant,
+                params_crc,
+                flat,
+            });
+            st.jobs.len()
+        };
+        {
+            let mut stats = self.inner.stats.lock().unwrap();
+            stats.max_queue_depth = stats.max_queue_depth.max(depth as u64);
+        }
+        if crate::obs::enabled() {
+            crate::obs::store().set_maint_queue_depth(depth);
+        }
+        self.inner.wake.notify_one();
+    }
+
+    /// Force a maintenance cycle now (tests and benches; production
+    /// callers just let the interval tick).
+    pub fn kick(&self) {
+        self.inner.state.lock().unwrap().kicks += 1;
+        self.inner.wake.notify_one();
+    }
+
+    /// Block until every job enqueued before this call has been
+    /// processed and the current cycle (if any) has finished.
+    pub fn drain(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.kicks += 1;
+        self.inner.wake.notify_one();
+        while !(st.jobs.is_empty() && !st.busy && st.kicks == 0) {
+            st = self.inner.done.wait(st).unwrap();
+        }
+    }
+
+    pub fn stats(&self) -> MaintStats {
+        *self.inner.stats.lock().unwrap()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.state.lock().unwrap().jobs.len()
+    }
+
+    /// Stop the thread: queued spill writes drain first, then compaction
+    /// ownership is handed back to the inline path. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.wake.notify_one();
+        if let Some(thread) = self.thread.lock().unwrap().take() {
+            let _ = thread.join();
+            if let Some(log) = &self.inner.log {
+                log.set_auto_compact(true);
+            }
+        }
+    }
+}
+
+impl Drop for Maintainer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run(inner: &Inner) {
+    loop {
+        // Wait for work, a kick, shutdown, or the compaction-scan tick.
+        let (jobs, shutdown) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown || !st.jobs.is_empty() || st.kicks > 0 {
+                    break;
+                }
+                let (guard, timeout) = inner.wake.wait_timeout(st, inner.interval).unwrap();
+                st = guard;
+                if timeout.timed_out() {
+                    break; // interval tick: run a compaction scan
+                }
+            }
+            st.busy = true;
+            let jobs: Vec<SpillJob> = st.jobs.drain(..).collect();
+            (jobs, st.shutdown)
+        };
+
+        let t0 = Instant::now();
+        let obs = crate::obs::enabled();
+        let mut cycle = MaintStats {
+            ticks: 1,
+            ..MaintStats::default()
+        };
+        if obs && !jobs.is_empty() {
+            crate::obs::store().set_maint_queue_depth(0);
+        }
+        if let Some(spill) = &inner.spill {
+            for job in jobs {
+                // Bulk encode outside the tier lock; reserve/commit are
+                // the metadata-only lock-held phases (generation-fenced —
+                // see the module docs).
+                let bytes = gsad::encode_merged(job.tenant, job.params_crc, &job.flat);
+                let pending = spill.lock().unwrap().reserve(job.tenant, bytes.len() as u64);
+                let Some(pending) = pending else {
+                    cycle.spill_write_failures += 1;
+                    continue;
+                };
+                match pending.write(&bytes) {
+                    Ok(()) => {
+                        spill.lock().unwrap().commit(pending);
+                        cycle.spill_writes += 1;
+                        if obs {
+                            crate::obs::store().record_maint_spill_write();
+                        }
+                    }
+                    Err(_) => {
+                        spill.lock().unwrap().abort(pending);
+                        cycle.spill_write_failures += 1;
+                    }
+                }
+            }
+        }
+        if let Some(log) = &inner.log {
+            for i in log.shards_wanting_compaction() {
+                if log.compact_shard(i).is_ok() {
+                    cycle.compactions += 1;
+                    if obs {
+                        crate::obs::store().record_maint_compaction();
+                    }
+                }
+            }
+        }
+        cycle.off_path_ns = t0.elapsed().as_nanos() as u64;
+        if obs {
+            let store = crate::obs::store();
+            store.record_maint_tick();
+            store.record_maint_cycle(t0.elapsed());
+        }
+        {
+            let mut stats = inner.stats.lock().unwrap();
+            stats.ticks += cycle.ticks;
+            stats.compactions += cycle.compactions;
+            stats.spill_writes += cycle.spill_writes;
+            stats.spill_write_failures += cycle.spill_write_failures;
+            stats.off_path_ns += cycle.off_path_ns;
+        }
+
+        let mut st = inner.state.lock().unwrap();
+        st.busy = false;
+        st.kicks = 0;
+        inner.done.notify_all();
+        if shutdown && st.jobs.is_empty() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::gsad::tests::random_entry;
+    use crate::store::log::LogOpts;
+    use crate::util::tmp::unique_temp_dir;
+
+    #[test]
+    fn enqueued_spill_writes_land_off_path() {
+        let dir = unique_temp_dir("maint_spill");
+        let spill = Arc::new(Mutex::new(SpillTier::open(&dir, 1 << 20).unwrap()));
+        let maint = Maintainer::spawn(Duration::from_secs(3600), None, Arc::clone(&spill).into());
+        let flat = Arc::new(vec![1.5f32; 64]);
+        maint.enqueue_spill(3, 0x33, Arc::clone(&flat));
+        maint.drain();
+        assert_eq!(
+            spill.lock().unwrap().get(3, 0x33).as_deref(),
+            Some(flat.as_slice())
+        );
+        let s = maint.stats();
+        assert_eq!(s.spill_writes, 1);
+        assert_eq!(s.spill_write_failures, 0);
+        assert!(s.off_path_ns > 0);
+        maint.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fifo_queue_means_the_newest_re_put_wins() {
+        // A re-registered tenant can have two spill writes queued: the
+        // stale merge first, the fresh one second. FIFO processing plus
+        // the tier's rename-replace means the fresh file is what remains.
+        let dir = unique_temp_dir("maint_fifo");
+        let spill = Arc::new(Mutex::new(SpillTier::open(&dir, 1 << 20).unwrap()));
+        let maint = Maintainer::spawn(Duration::from_secs(3600), None, Arc::clone(&spill).into());
+        let stale = Arc::new(vec![1.0f32; 16]);
+        let fresh = Arc::new(vec![2.0f32; 16]);
+        maint.enqueue_spill(7, 0xAA, stale);
+        maint.enqueue_spill(7, 0xBB, Arc::clone(&fresh));
+        maint.drain();
+        assert_eq!(
+            spill.lock().unwrap().get(7, 0xBB).as_deref(),
+            Some(fresh.as_slice()),
+            "the newest enqueued write must win the index"
+        );
+        maint.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn maintainer_owns_compaction_and_hands_it_back() {
+        let dir = unique_temp_dir("maint_compact");
+        let log = Arc::new(
+            ShardedLog::open(
+                &dir,
+                2,
+                LogOpts {
+                    garbage_threshold: 0.5,
+                    min_compact_bytes: 0,
+                },
+            )
+            .unwrap(),
+        );
+        let maint = Maintainer::spawn(Duration::from_secs(3600), Some(Arc::clone(&log)), None);
+        let mut rng = crate::util::rng::Rng::new(61);
+        let payload = crate::store::gsad::encode_adapter(1, &random_entry(&mut rng, 0));
+        for _ in 0..8 {
+            log.append(1, &payload).unwrap();
+        }
+        assert_eq!(
+            log.stats().compactions,
+            0,
+            "request-path appends must not compact while the maintainer is alive"
+        );
+        maint.drain();
+        let s = maint.stats();
+        assert!(s.compactions >= 1, "the maintainer compacts the dirty shard");
+        assert_eq!(log.stats().compactions, s.compactions);
+        assert_eq!(log.get(1).unwrap().unwrap(), payload);
+        maint.shutdown();
+        // Ownership handed back: inline appends compact again.
+        for _ in 0..8 {
+            log.append(1, &payload).unwrap();
+        }
+        assert!(log.stats().compactions > s.compactions);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        let dir = unique_temp_dir("maint_shutdown");
+        let spill = Arc::new(Mutex::new(SpillTier::open(&dir, 1 << 20).unwrap()));
+        let maint = Maintainer::spawn(Duration::from_secs(3600), None, Arc::clone(&spill).into());
+        for t in 0..8u64 {
+            maint.enqueue_spill(t, t as u32, Arc::new(vec![t as f32; 8]));
+        }
+        maint.shutdown();
+        let mut tier = spill.lock().unwrap();
+        for t in 0..8u64 {
+            assert!(
+                tier.get(t, t as u32).is_some(),
+                "job for tenant {t} must land before shutdown completes"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

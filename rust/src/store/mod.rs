@@ -1,16 +1,16 @@
-//! Persistent tiered adapter store (DESIGN.md §7).
+//! Persistent tiered adapter store (DESIGN.md §7, §13).
 //!
 //! The paper's economics make a two-tier layout natural: GS-OFT adapter
 //! *factors* are tiny (O(d·b) floats per layer) while *merged* dense
 //! weights are O(d²) — so the store persists the cheap factors durably in
-//! an append-only segment log and spills the expensive merged products to
+//! append-only segment logs and spills the expensive merged products to
 //! a size-capped disk cache, hydrating either lazily:
 //!
 //! ```text
 //!            RAM                          disk
 //!   ┌─────────────────────┐   ┌─────────────────────────────┐
-//!   │ Registry tenant map │◄──│ factor tier: segment log of │
-//!   │ (hydrated entries)  │   │ GSAD adapter records + index│  durable
+//!   │ Registry tenant map │◄──│ factor tier: shard{i}.log   │
+//!   │ (hydrated entries)  │   │ GSAD records, tenant-hashed │  durable
 //!   ├─────────────────────┤   ├─────────────────────────────┤
 //!   │ MergedCache (LRU of │◄──│ spill tier: t{id}.gsad      │  cache
 //!   │ merged weights)     │──►│ merged-weight files         │  (lossy)
@@ -19,52 +19,82 @@
 //!
 //! - [`gsad`] — the versioned `GSAD` record format (shared
 //!   [`crate::util::container`] framing, per-section CRC32);
-//! - [`log`] — the append-only segment log: synced appends, tombstone
-//!   deletes, torn-tail recovery, synchronous compaction past a garbage
-//!   ratio;
+//! - [`log`] — one append-only segment log: synced appends, tombstone
+//!   deletes, torn-tail recovery, compaction past a garbage ratio;
+//! - [`shard`] — N independent segment logs partitioned by tenant hash:
+//!   parallel appends, parallel boot replay, per-shard crash recovery;
 //! - [`spill`] — the merged-weight disk tier, params-CRC-tagged so stale
 //!   spills can never serve a re-registered tenant;
+//! - [`maint`] — the background maintenance thread owning compaction and
+//!   spill writes, so neither ever runs on a request;
 //! - [`AdapterStore`] — the facade the serving registry mounts
-//!   ([`crate::serve::Registry::with_store`]).
+//!   ([`crate::serve::Registry::with_store`]). All methods take `&self`:
+//!   synchronization lives in the per-shard locks, so appends for
+//!   different shards run in parallel.
 //!
 //! Durability invariants: an acknowledged `put` survives crash+reopen; a
-//! torn tail loses only unacknowledged writes; the factor tier is the
-//! source of truth and the spill tier is a pure cache (safe to `rm -rf`).
+//! torn tail loses only unacknowledged writes of its own shard; the
+//! factor tier is the source of truth and the spill tier is a pure cache
+//! (safe to `rm -rf`).
 
 pub mod gsad;
 pub mod log;
+pub mod maint;
+pub mod shard;
 pub mod spill;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::serve::registry::{AdapterEntry, TenantId};
 
 pub use log::{LogOpts, LogStats, SegmentLog};
+pub use maint::{MaintStats, Maintainer, DEFAULT_MAINT_INTERVAL_MS};
+pub use shard::{shard_of, ShardedLog, DEFAULT_SHARDS};
 pub use spill::{read_merged, PendingSpill, SpillStats, SpillTier};
 
-/// File name of the factor-tier segment log inside a store directory.
+/// File name of the pre-sharding single segment log. New stores never
+/// create it; an existing one is migrated into the sharded layout on
+/// open ([`ShardedLog::open`]).
 pub const LOG_FILE: &str = "adapters.log";
 
-/// The durable factor tier: tenant adapters in a segment log under one
-/// directory. (The spill tier is owned by the serving engine, which knows
-/// merged-model sizes and the load-vs-remerge break-even; see
-/// [`crate::serve::EngineOpts::spill_dir`].)
+/// The durable factor tier: tenant adapters in hash-sharded segment logs
+/// under one directory. (The spill tier is owned by the serving engine,
+/// which knows merged-model sizes and the load-vs-remerge break-even;
+/// see [`crate::serve::EngineOpts::spill_dir`].)
 pub struct AdapterStore {
     dir: PathBuf,
-    log: SegmentLog,
+    log: Arc<ShardedLog>,
 }
 
 impl AdapterStore {
-    /// Open (creating if needed) the store at `dir`, replaying its log.
+    /// Open (creating if needed) the store at `dir`, replaying its shards
+    /// in parallel. Fresh directories get [`DEFAULT_SHARDS`] shards; an
+    /// existing layout keeps its shard count.
     pub fn open(dir: impl AsRef<Path>) -> Result<AdapterStore> {
-        AdapterStore::open_with(dir, LogOpts::default())
+        AdapterStore::open_sharded_with(dir, DEFAULT_SHARDS, LogOpts::default())
     }
 
     pub fn open_with(dir: impl AsRef<Path>, opts: LogOpts) -> Result<AdapterStore> {
+        AdapterStore::open_sharded_with(dir, DEFAULT_SHARDS, opts)
+    }
+
+    /// Open with an explicit shard count (`gsoft ... --shards N`). The
+    /// count only applies to a fresh directory — reopening always honors
+    /// the layout on disk.
+    pub fn open_sharded(dir: impl AsRef<Path>, shards: usize) -> Result<AdapterStore> {
+        AdapterStore::open_sharded_with(dir, shards, LogOpts::default())
+    }
+
+    pub fn open_sharded_with(
+        dir: impl AsRef<Path>,
+        shards: usize,
+        opts: LogOpts,
+    ) -> Result<AdapterStore> {
         let dir = dir.as_ref().to_path_buf();
-        let log = SegmentLog::open(dir.join(LOG_FILE), opts)?;
+        let log = Arc::new(ShardedLog::open(&dir, shards, opts)?);
         Ok(AdapterStore { dir, log })
     }
 
@@ -72,14 +102,26 @@ impl AdapterStore {
         &self.dir
     }
 
+    pub fn num_shards(&self) -> usize {
+        self.log.num_shards()
+    }
+
+    /// The sharded log itself — shared with the background
+    /// [`Maintainer`], which owns compaction while it runs.
+    pub fn sharded_log(&self) -> Arc<ShardedLog> {
+        Arc::clone(&self.log)
+    }
+
     /// Durably persist (or overwrite) a tenant's adapter. On return the
-    /// record is synced to disk and will survive crash + reopen.
-    pub fn put(&mut self, tenant: TenantId, entry: &AdapterEntry) -> Result<()> {
+    /// record is synced to disk and will survive crash + reopen. Holds
+    /// only the tenant's shard lock — puts to other shards proceed in
+    /// parallel.
+    pub fn put(&self, tenant: TenantId, entry: &AdapterEntry) -> Result<()> {
         self.log.append(tenant, &gsad::encode_adapter(tenant, entry))
     }
 
     /// Load a tenant's adapter (CRC-verified), or `None` if absent.
-    pub fn get(&mut self, tenant: TenantId) -> Result<Option<AdapterEntry>> {
+    pub fn get(&self, tenant: TenantId) -> Result<Option<AdapterEntry>> {
         let Some(payload) = self.log.get(tenant)? else {
             return Ok(None);
         };
@@ -96,7 +138,7 @@ impl AdapterStore {
     }
 
     /// Tombstone a tenant. Returns `false` if it was not present.
-    pub fn delete(&mut self, tenant: TenantId) -> Result<bool> {
+    pub fn delete(&self, tenant: TenantId) -> Result<bool> {
         self.log.delete(tenant)
     }
 
@@ -116,9 +158,9 @@ impl AdapterStore {
         self.log.tenant_ids()
     }
 
-    /// Force a compaction (normally triggered automatically).
-    pub fn compact(&mut self) -> Result<()> {
-        self.log.compact()
+    /// Force-compact every shard (normally the maintenance thread's job).
+    pub fn compact(&self) -> Result<()> {
+        self.log.compact_all()
     }
 
     pub fn garbage_ratio(&self) -> f64 {
@@ -145,6 +187,7 @@ impl AdapterStore {
         };
         StoreHealth {
             tenants: self.len(),
+            shards: self.num_shards(),
             file_bytes: self.file_bytes(),
             garbage_ratio: self.garbage_ratio(),
             truncated_tail_bytes: self.log_stats().truncated_tail_bytes,
@@ -157,12 +200,13 @@ impl AdapterStore {
 #[derive(Clone, Copy, Debug)]
 pub struct StoreHealth {
     pub tenants: usize,
+    pub shards: usize,
     pub file_bytes: u64,
     pub garbage_ratio: f64,
-    /// Bytes dropped at the last replay because the tail record was torn.
-    /// Non-zero means the *previous* process lost unacknowledged writes —
-    /// surfaced so operators notice crashy restarts, and treated as
-    /// unhealthy until a clean reopen clears it.
+    /// Bytes dropped at the last replay because a shard's tail record was
+    /// torn. Non-zero means the *previous* process lost unacknowledged
+    /// writes — surfaced so operators notice crashy restarts, and treated
+    /// as unhealthy until a clean reopen clears it.
     pub truncated_tail_bytes: u64,
     /// Whether the store directory still accepts new files.
     pub dir_writable: bool,
@@ -187,14 +231,14 @@ mod tests {
         let mut rng = Rng::new(41);
         let entries: Vec<_> = (0..4).map(|i| random_entry(&mut rng, i)).collect();
         {
-            let mut store = AdapterStore::open(&dir).unwrap();
+            let store = AdapterStore::open(&dir).unwrap();
             for (t, e) in entries.iter().enumerate() {
                 store.put(t as TenantId, e).unwrap();
             }
             assert!(store.delete(2).unwrap());
             assert_eq!(store.len(), 3);
         }
-        let mut store = AdapterStore::open(&dir).unwrap();
+        let store = AdapterStore::open(&dir).unwrap();
         assert_eq!(store.tenant_ids(), vec![0, 1, 3]);
         for t in [0usize, 1, 3] {
             let back = store.get(t as TenantId).unwrap().expect("live tenant");
@@ -210,14 +254,39 @@ mod tests {
         let mut rng = Rng::new(42);
         let v1 = random_entry(&mut rng, 0);
         let v2 = random_entry(&mut rng, 0);
-        let mut store = AdapterStore::open(&dir).unwrap();
+        let store = AdapterStore::open(&dir).unwrap();
         store.put(5, &v1).unwrap();
         store.put(5, &v2).unwrap();
         let back = store.get(5).unwrap().unwrap();
         assert!(entries_equal(&back, &v2));
         drop(store);
-        let mut store = AdapterStore::open(&dir).unwrap();
+        let store = AdapterStore::open(&dir).unwrap();
         assert!(entries_equal(&store.get(5).unwrap().unwrap(), &v2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parallel_puts_to_many_shards_all_land() {
+        // The narrowed locking contract: concurrent puts (different
+        // tenants, hence mostly different shards) must all be durable and
+        // readable — no lost updates, no torn index.
+        let dir = unique_temp_dir("store_parallel");
+        let store = AdapterStore::open_sharded(&dir, 8).unwrap();
+        let entries: Vec<_> = {
+            let mut rng = Rng::new(43);
+            (0..32).map(|i| random_entry(&mut rng, i)).collect()
+        };
+        crate::util::pool::parallel_map(entries.len(), 8, |t| {
+            store.put(t as TenantId, &entries[t]).unwrap();
+        });
+        assert_eq!(store.len(), 32);
+        drop(store);
+        let store = AdapterStore::open(&dir).unwrap();
+        assert_eq!(store.num_shards(), 8, "reopen keeps the on-disk shard count");
+        for (t, e) in entries.iter().enumerate() {
+            let back = store.get(t as TenantId).unwrap().expect("live tenant");
+            assert!(entries_equal(&back, e), "tenant {t} drifted");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

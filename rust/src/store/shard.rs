@@ -1,0 +1,561 @@
+//! Sharded segment logs: the factor tier at fleet scale (DESIGN.md §13).
+//!
+//! One [`SegmentLog`] behind one mutex caps registration throughput at a
+//! single fsync stream and makes every torn tail a fleet-wide event. The
+//! [`ShardedLog`] partitions records by tenant hash across N independent
+//! segment logs (`shard{i}.log` under the store directory), each behind
+//! its own append mutex:
+//!
+//! - **appends to different shards run in parallel** — N concurrent fsync
+//!   streams, so registration throughput scales with shard count until
+//!   the disk saturates;
+//! - **boot replay is parallel** (`util::pool::parallel_map` over the
+//!   shard files), so cold-open latency is the slowest shard, not the sum;
+//! - **torn-tail recovery is per-shard**: a crash mid-append corrupts at
+//!   most the tail of one shard, and that shard recovers its own prefix
+//!   while the other N−1 come up untouched — one corrupt shard never
+//!   blocks the fleet.
+//!
+//! The tenant→shard map is a fixed [SplitMix64] finalizer over the tenant
+//! id, so it is stable across processes, platforms and reopens; the shard
+//! *count* is inferred from the files on disk at open (the requested
+//! count only seeds a fresh directory), so a directory can never be
+//! reopened under a different partitioning than it was written with. A
+//! legacy single-file `adapters.log` found at open is folded into the
+//! shards once and removed — old store directories upgrade in place.
+//!
+//! [SplitMix64]: https://prng.di.unimi.it/splitmix64.c
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::serve::registry::TenantId;
+use crate::util::pool::{default_workers, parallel_map};
+
+use super::log::{sync_dir, LogOpts, LogStats, SegmentLog};
+
+/// Shard count used when a fresh store directory is opened without an
+/// explicit request (`gsoft ... --shards N` overrides it).
+pub const DEFAULT_SHARDS: usize = 4;
+
+/// Stable tenant→shard map: a SplitMix64 finalizer, so the partitioning
+/// is a pure function of the tenant id — identical across runs, builds
+/// and platforms (replay depends on it).
+pub fn shard_of(tenant: TenantId, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut x = tenant.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x % shards as u64) as usize
+}
+
+fn shard_file(i: usize) -> String {
+    format!("shard{i}.log")
+}
+
+/// N independent segment logs partitioned by tenant hash. All methods
+/// take `&self`: each shard guards itself, so appends to different
+/// shards never contend.
+pub struct ShardedLog {
+    dir: PathBuf,
+    shards: Vec<Mutex<SegmentLog>>,
+}
+
+impl ShardedLog {
+    /// Open (creating if needed) the sharded log under `dir`.
+    ///
+    /// `requested_shards` applies only when the directory holds no shard
+    /// files yet; an existing layout always wins, because the on-disk
+    /// partitioning must match the hash that wrote it. A legacy
+    /// `adapters.log` (single-log layout) is migrated into the shards
+    /// and removed.
+    pub fn open(dir: impl AsRef<Path>, requested_shards: usize, opts: LogOpts) -> Result<ShardedLog> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        let n = match Self::detect_shards(&dir)? {
+            Some(existing) => existing,
+            None => requested_shards.max(1),
+        };
+
+        // Parallel replay: each shard recovers (and truncates) its own
+        // torn tail independently; only real I/O errors propagate.
+        let opened: Vec<Result<SegmentLog>> = parallel_map(n, default_workers(), |i| {
+            let t0 = crate::obs::enabled().then(Instant::now);
+            let log = SegmentLog::open(dir.join(shard_file(i)), opts)?;
+            if let Some(t0) = t0 {
+                let store = crate::obs::store();
+                store.record_shard_replay(t0.elapsed());
+                if log.stats().truncated_tail_bytes > 0 {
+                    store.record_shard_torn_tail();
+                }
+            }
+            Ok(log)
+        });
+        let mut shards = Vec::with_capacity(n);
+        for (i, log) in opened.into_iter().enumerate() {
+            shards.push(Mutex::new(
+                log.with_context(|| format!("replaying shard {i} of {}", dir.display()))?,
+            ));
+        }
+        if crate::obs::enabled() {
+            crate::obs::store().set_shard_count(n);
+        }
+        let sharded = ShardedLog { dir, shards };
+        sharded.migrate_legacy(opts)?;
+        Ok(sharded)
+    }
+
+    /// Shard count already on disk, if any (`None` for a fresh directory).
+    fn detect_shards(dir: &Path) -> Result<Option<usize>> {
+        let mut max_idx: Option<usize> = None;
+        for e in std::fs::read_dir(dir)? {
+            let name = e?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(i) = name
+                .strip_prefix("shard")
+                .and_then(|s| s.strip_suffix(".log"))
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                max_idx = Some(max_idx.map_or(i, |m: usize| m.max(i)));
+            }
+        }
+        Ok(max_idx.map(|m| m + 1))
+    }
+
+    /// Fold a pre-sharding `adapters.log` into the shards, then remove it.
+    ///
+    /// Idempotent across crashes: every folded record is synced before
+    /// the legacy file is unlinked, and a rerun (crash before the unlink)
+    /// skips tenants the shards already hold — so a shard record can
+    /// never be rolled back to an older legacy version.
+    fn migrate_legacy(&self, opts: LogOpts) -> Result<()> {
+        let legacy = self.dir.join(super::LOG_FILE);
+        if !legacy.exists() {
+            return Ok(());
+        }
+        let mut old = SegmentLog::open(&legacy, opts)
+            .with_context(|| format!("replaying legacy log {}", legacy.display()))?;
+        for tenant in old.tenant_ids() {
+            let shard = &self.shards[self.shard_index(tenant)];
+            let mut shard = shard.lock().unwrap();
+            if shard.contains(tenant) {
+                continue; // already folded by an interrupted migration
+            }
+            let payload = old
+                .get(tenant)?
+                .expect("legacy log index points at a vanished record");
+            shard.append(tenant, &payload)?;
+        }
+        drop(old);
+        std::fs::remove_file(&legacy)
+            .with_context(|| format!("removing migrated legacy log {}", legacy.display()))?;
+        sync_dir(&legacy)?;
+        Ok(())
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_index(&self, tenant: TenantId) -> usize {
+        shard_of(tenant, self.shards.len())
+    }
+
+    /// Append (or overwrite) a tenant's adapter record — holds only that
+    /// tenant's shard lock.
+    pub fn append(&self, tenant: TenantId, payload: &[u8]) -> Result<()> {
+        let r = self.shards[self.shard_index(tenant)]
+            .lock()
+            .unwrap()
+            .append(tenant, payload);
+        if r.is_ok() && crate::obs::enabled() {
+            crate::obs::store().record_shard_append();
+        }
+        r
+    }
+
+    /// Tombstone a tenant. Returns `false` if it was not live.
+    pub fn delete(&self, tenant: TenantId) -> Result<bool> {
+        self.shards[self.shard_index(tenant)]
+            .lock()
+            .unwrap()
+            .delete(tenant)
+    }
+
+    /// Read a tenant's latest record payload (CRC re-verified).
+    pub fn get(&self, tenant: TenantId) -> Result<Option<Vec<u8>>> {
+        self.shards[self.shard_index(tenant)]
+            .lock()
+            .unwrap()
+            .get(tenant)
+    }
+
+    pub fn contains(&self, tenant: TenantId) -> bool {
+        self.shards[self.shard_index(tenant)]
+            .lock()
+            .unwrap()
+            .contains(tenant)
+    }
+
+    /// Live tenants fleet-wide (each tenant lives in exactly one shard).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn tenant_ids(&self) -> Vec<TenantId> {
+        let mut ids: Vec<TenantId> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().tenant_ids())
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn file_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().file_bytes()).sum()
+    }
+
+    /// Fleet-wide garbage fraction (byte-weighted across shards).
+    pub fn garbage_ratio(&self) -> f64 {
+        let (mut file, mut live) = (0u64, 0u64);
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            file += s.file_bytes();
+            live += s.live_bytes();
+        }
+        if file == 0 {
+            0.0
+        } else {
+            1.0 - live as f64 / file as f64
+        }
+    }
+
+    /// Aggregated monotonic counters across all shards.
+    pub fn stats(&self) -> LogStats {
+        let mut total = LogStats::default();
+        for s in &self.shards {
+            let st = s.lock().unwrap().stats();
+            total.appends += st.appends;
+            total.deletes += st.deletes;
+            total.compactions += st.compactions;
+            total.truncated_tail_bytes += st.truncated_tail_bytes;
+        }
+        total
+    }
+
+    /// Toggle inline compaction on every shard's append path. The
+    /// maintenance thread flips this off while it owns compaction and
+    /// back on at shutdown, so an unmaintained store stays bounded.
+    pub fn set_auto_compact(&self, on: bool) {
+        for s in &self.shards {
+            s.lock().unwrap().set_auto_compact(on);
+        }
+    }
+
+    /// Shards whose garbage ratio is past their compaction policy — the
+    /// maintenance thread's scan. Only reads per-shard counters; holds
+    /// each shard lock briefly.
+    pub fn shards_wanting_compaction(&self) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| self.shards[i].lock().unwrap().wants_compaction())
+            .collect()
+    }
+
+    /// Compact one shard (under that shard's lock only — the other
+    /// shards keep serving appends throughout).
+    pub fn compact_shard(&self, i: usize) -> Result<()> {
+        self.shards[i].lock().unwrap().compact()
+    }
+
+    /// Force-compact every shard (tests / explicit `AdapterStore::compact`).
+    pub fn compact_all(&self) -> Result<()> {
+        for i in 0..self.shards.len() {
+            self.compact_shard(i)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::gsad;
+    use crate::store::gsad::tests::random_entry;
+    use crate::util::prop;
+    use crate::util::tmp::unique_temp_dir;
+    use std::collections::HashMap;
+
+    fn no_compact() -> LogOpts {
+        LogOpts {
+            garbage_threshold: 1.1,
+            min_compact_bytes: u64::MAX,
+        }
+    }
+
+    #[test]
+    fn partitions_are_stable_and_cover_all_shards() {
+        // The hash is pinned by on-disk state: if this mapping ever
+        // changes, existing sharded directories replay records into the
+        // wrong shards.
+        for &n in &[1usize, 2, 4, 16] {
+            let mut seen = vec![false; n];
+            for t in 0..512u64 {
+                let s = shard_of(t, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(t, n), "hash must be deterministic");
+                seen[s] = true;
+            }
+            assert!(seen.iter().all(|&b| b), "512 tenants must cover {n} shards");
+        }
+    }
+
+    #[test]
+    fn sharded_round_trip_and_reopen_infers_the_shard_count() {
+        let dir = unique_temp_dir("shard_basic");
+        let mut rng = crate::util::rng::Rng::new(51);
+        let entries: Vec<_> = (0..12).map(|i| random_entry(&mut rng, i)).collect();
+        {
+            let log = ShardedLog::open(&dir, 4, LogOpts::default()).unwrap();
+            assert_eq!(log.num_shards(), 4);
+            for (t, e) in entries.iter().enumerate() {
+                log.append(t as TenantId, &gsad::encode_adapter(t as TenantId, e))
+                    .unwrap();
+            }
+            assert!(log.delete(3).unwrap());
+            assert_eq!(log.len(), 11);
+        }
+        // Reopen with a *different* requested count: the on-disk layout
+        // must win, or records would hash to the wrong shard.
+        let log = ShardedLog::open(&dir, 16, LogOpts::default()).unwrap();
+        assert_eq!(log.num_shards(), 4, "existing layout overrides the request");
+        let want: Vec<TenantId> = (0..12u64).filter(|&t| t != 3).collect();
+        assert_eq!(log.tenant_ids(), want);
+        for &t in &want {
+            let payload = log.get(t).unwrap().expect("tenant survives reopen");
+            match gsad::decode(&payload).unwrap() {
+                gsad::Record::Adapter { tenant, .. } => assert_eq!(tenant, t),
+                _ => panic!("wrong record"),
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_single_log_migrates_in_place() {
+        let dir = unique_temp_dir("shard_migrate");
+        let mut rng = crate::util::rng::Rng::new(52);
+        let entries: Vec<_> = (0..6).map(|i| random_entry(&mut rng, i)).collect();
+        // Write a pre-sharding store: one adapters.log.
+        {
+            let mut old = SegmentLog::open(dir.join(crate::store::LOG_FILE), LogOpts::default())
+                .unwrap();
+            for (t, e) in entries.iter().enumerate() {
+                old.append(t as TenantId, &gsad::encode_adapter(t as TenantId, e))
+                    .unwrap();
+            }
+        }
+        let log = ShardedLog::open(&dir, 3, LogOpts::default()).unwrap();
+        assert_eq!(log.len(), 6, "every legacy tenant migrates");
+        assert!(
+            !dir.join(crate::store::LOG_FILE).exists(),
+            "legacy log is removed after migration"
+        );
+        // A post-migration overwrite must not be rolled back by a rerun
+        // of the migration path (simulated crash: legacy file reappears).
+        let updated = random_entry(&mut rng, 9);
+        let updated_payload = gsad::encode_adapter(2, &updated);
+        log.append(2, &updated_payload).unwrap();
+        drop(log);
+        let log = ShardedLog::open(&dir, 3, LogOpts::default()).unwrap();
+        assert_eq!(log.get(2).unwrap().unwrap(), updated_payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Random op sequence × shard count × kill point for the
+    /// sharded-vs-single replay equivalence property.
+    #[derive(Debug, Clone)]
+    struct ShardCase {
+        shards: usize,
+        ops: Vec<(TenantId, bool)>, // (tenant, is_delete)
+        /// Kill point: how many ops actually land before the "crash".
+        applied: usize,
+        /// Which (applied) op's shard gets its tail torn, scaled 0..=1000
+        /// into the ops that landed.
+        tear_millis: usize,
+    }
+
+    fn shrink_shard(c: &ShardCase) -> Vec<ShardCase> {
+        let mut out = Vec::new();
+        if c.shards > 1 {
+            out.push(ShardCase {
+                shards: c.shards / 2,
+                ..c.clone()
+            });
+        }
+        if !c.ops.is_empty() {
+            out.push(ShardCase {
+                ops: c.ops[..c.ops.len() / 2].to_vec(),
+                applied: c.applied.min(c.ops.len() / 2),
+                ..c.clone()
+            });
+        }
+        for applied in prop::shrink_usize(c.applied, 0) {
+            out.push(ShardCase {
+                applied,
+                ..c.clone()
+            });
+        }
+        for tear in prop::shrink_usize(c.tear_millis, 0) {
+            out.push(ShardCase {
+                tear_millis: tear,
+                ..c.clone()
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn sharded_replay_equals_single_log_replay() {
+        // Property (shrinking): apply the same op sequence to a sharded
+        // log and a single log, kill both after `applied` ops, then tear
+        // the tail of exactly one shard — the sharded replay must equal
+        // the single-log replay minus at most the torn shard's own
+        // un-acknowledged suffix, and every *other* shard must come up
+        // complete (one corrupt shard never blocks the fleet).
+        prop::check_shrunk(
+            "sharded replay ≡ single-log replay",
+            910,
+            24,
+            |rng| {
+                let ops: Vec<(TenantId, bool)> = (0..prop::size_in(rng, 1, 16))
+                    .map(|_| (rng.below(6) as TenantId, rng.below(4) == 0))
+                    .collect();
+                let applied = rng.below(ops.len() + 1);
+                ShardCase {
+                    shards: [1, 2, 4, 16][rng.below(4)],
+                    ops,
+                    applied,
+                    tear_millis: rng.below(1001),
+                }
+            },
+            shrink_shard,
+            |case| {
+                let dir = unique_temp_dir("shard_prop");
+                let mut rng = crate::util::rng::Rng::new(78);
+                let sharded = ShardedLog::open(dir.join("sharded"), case.shards, no_compact())
+                    .unwrap();
+                let mut single =
+                    SegmentLog::open(dir.join("single/adapters.log"), no_compact()).unwrap();
+                // Reference live view after the kill point.
+                let mut expect: HashMap<TenantId, Vec<u8>> = HashMap::new();
+                for &(tenant, is_delete) in &case.ops[..case.applied] {
+                    if is_delete {
+                        sharded.delete(tenant).unwrap();
+                        single.delete(tenant).unwrap();
+                        expect.remove(&tenant);
+                    } else {
+                        let e = random_entry(&mut rng, tenant as usize);
+                        let payload = gsad::encode_adapter(tenant, &e);
+                        sharded.append(tenant, &payload).unwrap();
+                        single.append(tenant, &payload).unwrap();
+                        expect.insert(tenant, payload);
+                    }
+                }
+                drop(single);
+                // Tear the tail of exactly one shard: cut its file at a
+                // byte chosen inside the last record, so that shard loses
+                // its most recent op (and only that).
+                let torn_shard = case.tear_millis % case.shards;
+                let torn_path = dir.join("sharded").join(shard_file(torn_shard));
+                let bytes = std::fs::read(&torn_path).unwrap();
+                drop(sharded);
+                if !bytes.is_empty() {
+                    // Cutting mid-file can only lose a suffix of *that
+                    // shard's* ops (per-shard order is a subsequence of
+                    // the global op order).
+                    let cut = bytes.len() - 1 - (case.tear_millis * (bytes.len() - 1) / 1000);
+                    std::fs::write(&torn_path, &bytes[..cut]).unwrap();
+                }
+
+                let sharded =
+                    ShardedLog::open(dir.join("sharded"), case.shards, no_compact()).unwrap();
+                for (&tenant, payload) in &expect {
+                    if shard_of(tenant, case.shards) == torn_shard {
+                        // The torn shard recovered *some* prefix of its
+                        // own history: the tenant either reads back its
+                        // exact acknowledged payload or an older one, or
+                        // is gone — but never garbage.
+                        if let Some(got) = sharded.get(tenant).unwrap() {
+                            gsad::decode(&got).expect("recovered record must decode");
+                        }
+                    } else {
+                        // Every untorn shard must equal the single-log
+                        // replay exactly.
+                        assert_eq!(
+                            sharded.get(tenant).unwrap().as_deref(),
+                            Some(payload.as_slice()),
+                            "tenant {tenant} (untorn shard) diverged from the single log"
+                        );
+                    }
+                }
+                // No tenant outside the torn shard may have vanished.
+                let single = SegmentLog::open(dir.join("single/adapters.log"), no_compact())
+                    .unwrap();
+                for t in single.tenant_ids() {
+                    if shard_of(t, case.shards) != torn_shard {
+                        assert!(
+                            sharded.contains(t),
+                            "tenant {t} lost outside the torn shard"
+                        );
+                    }
+                }
+                // The fleet keeps serving: an append to every shard works.
+                for t in 0..case.shards as TenantId {
+                    let e = random_entry(&mut rng, 99);
+                    sharded.append(1000 + t, &gsad::encode_adapter(1000 + t, &e)).unwrap();
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+            },
+        );
+    }
+
+    #[test]
+    fn per_shard_compaction_leaves_other_shards_untouched() {
+        let dir = unique_temp_dir("shard_compact");
+        let mut rng = crate::util::rng::Rng::new(53);
+        let log = ShardedLog::open(
+            &dir,
+            4,
+            LogOpts {
+                garbage_threshold: 0.5,
+                min_compact_bytes: 0,
+            },
+        )
+        .unwrap();
+        log.set_auto_compact(false);
+        // Overwrite one tenant many times: exactly its shard accumulates
+        // garbage and shows up in the maintenance scan.
+        let e = random_entry(&mut rng, 0);
+        let payload = gsad::encode_adapter(7, &e);
+        for _ in 0..8 {
+            log.append(7, &payload).unwrap();
+        }
+        let dirty = log.shards_wanting_compaction();
+        assert_eq!(dirty, vec![log.shard_index(7)]);
+        log.compact_shard(dirty[0]).unwrap();
+        assert!(log.shards_wanting_compaction().is_empty());
+        assert_eq!(log.stats().compactions, 1);
+        assert_eq!(log.get(7).unwrap().unwrap(), payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -543,7 +543,7 @@ fn store_backed_engine_round_trips_bit_identically() {
         // in-memory structure.
         let dir = unique_temp_dir("itest_store");
         {
-            let mut store = AdapterStore::open(&dir).unwrap();
+            let store = AdapterStore::open(&dir).unwrap();
             for (t, e) in &entries {
                 store.put(*t, e).unwrap();
             }
@@ -583,4 +583,105 @@ fn store_backed_engine_round_trips_bit_identically() {
         engine.finish();
         let _ = std::fs::remove_dir_all(&dir);
     }
+}
+
+#[test]
+fn re_registered_tenant_survives_restart_bit_identically() {
+    // Acceptance scenario for safe live re-registration over the sharded
+    // store: a tenant whose adapter is replaced *while the engine serves
+    // traffic* must (a) immediately serve the new model (stale-CRC hit
+    // demotes the cached entry to a re-merge), and (b) after a full
+    // restart — engine dropped, sharded log re-opened from disk — serve
+    // bit-identical post-update outputs, because the registration
+    // durably appended v2 before acknowledging.
+    use gsoft::serve::{synthetic, Engine, EngineOpts, Registry, ServePath, TenantId};
+    use gsoft::store::AdapterStore;
+    use gsoft::util::tmp::unique_temp_dir;
+
+    let opts = || EngineOpts {
+        workers: 1, // deterministic path sequence
+        max_batch: 2,
+        max_wait: std::time::Duration::from_micros(200),
+        promote_after: Some(1),
+        ..EngineOpts::default()
+    };
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+    let donor = synthetic(4, 2, 8, 2, 71).unwrap();
+    let base_w = donor.base().weights.as_ref().clone();
+    let base_spec = donor.base().spec.as_ref().clone();
+    let tenants: Vec<TenantId> = donor.tenant_ids();
+    let entries: Vec<_> = tenants
+        .iter()
+        .map(|&t| (t, donor.get(t).unwrap()))
+        .collect();
+    // Same shapes, different params: the v2 adapter for tenant 0.
+    let v2 = synthetic(4, 2, 8, 2, 72).unwrap().get(tenants[0]).unwrap();
+
+    let dir = unique_temp_dir("itest_rereg");
+    let registry = Registry::with_store(
+        base_w.clone(),
+        base_spec.clone(),
+        AdapterStore::open_sharded(&dir, 4).unwrap(),
+    )
+    .unwrap();
+    for (t, e) in &entries {
+        registry.register(*t, e.clone()).unwrap();
+    }
+    drop(entries);
+
+    let engine = Engine::new(registry, opts()).unwrap();
+    let d = engine.input_dim();
+    let input: Vec<f32> = (0..d).map(|i| ((i * 7 % 13) as f32) * 0.05 - 0.2).collect();
+    let serve = |t: TenantId| engine.submit(t, input.clone()).unwrap().wait().unwrap();
+
+    // Traffic before the update: tenant 0 merged and hot, the rest warm.
+    assert_eq!(serve(tenants[0]).path, ServePath::ColdMerge);
+    let old_hot = serve(tenants[0]);
+    assert_eq!(old_hot.path, ServePath::CachedDense);
+    let mut others_before = Vec::new();
+    for &t in &tenants[1..] {
+        others_before.push(bits(&serve(t).output));
+    }
+
+    // Live replacement under traffic: next hit detects the stale CRC and
+    // re-merges v2 instead of serving the cached v1 model.
+    engine.registry().register(tenants[0], v2).unwrap();
+    let post = serve(tenants[0]);
+    assert_eq!(post.path, ServePath::ColdMerge, "stale hit must demote to a merge");
+    assert_ne!(post.output, old_hot.output, "post-update outputs must be v2's");
+    let post_hot = serve(tenants[0]);
+    assert_eq!(post_hot.path, ServePath::CachedDense);
+    assert_eq!(bits(&post_hot.output), bits(&post.output));
+    let post_bits = bits(&post.output);
+    let report = engine.finish();
+    assert_eq!(report.obs.counters["serve_cache_stale_crc_total"], 1);
+
+    // Restart: every in-memory structure dropped, sharded log re-opened
+    // from disk (the on-disk layout dictates the shard count).
+    let registry =
+        Registry::with_store(base_w, base_spec, AdapterStore::open(&dir).unwrap()).unwrap();
+    assert_eq!(registry.hydrated_len(), 0, "cold boot must be lazy");
+    assert_eq!(registry.len(), tenants.len());
+    let engine = Engine::new(registry, opts()).unwrap();
+    let serve = |t: TenantId| engine.submit(t, input.clone()).unwrap().wait().unwrap();
+    let a = serve(tenants[0]);
+    assert_eq!(a.path, ServePath::ColdMerge);
+    assert_eq!(
+        bits(&a.output),
+        post_bits,
+        "re-registered tenant's post-update output drifted across restart"
+    );
+    let b = serve(tenants[0]);
+    assert_eq!(b.path, ServePath::CachedDense);
+    assert_eq!(bits(&b.output), post_bits);
+    for (i, &t) in tenants[1..].iter().enumerate() {
+        assert_eq!(
+            bits(&serve(t).output),
+            others_before[i],
+            "tenant {t}: v1 output drifted across restart"
+        );
+    }
+    engine.finish();
+    let _ = std::fs::remove_dir_all(&dir);
 }

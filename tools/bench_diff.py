@@ -64,7 +64,9 @@ RULES = [
     # Sweep-grid dimensions inside configs[i] entries (kernel/conv/store
     # benches): shape drift is a different benchmark.
     (
-        re.compile(r"(^|\.)(d|b|m|batch|c|k|hw|groups|kind|tenants|hit_ratio|layers|block)$"),
+        re.compile(
+            r"(^|\.)(d|b|m|batch|c|k|hw|groups|kind|tenants|hit_ratio|layers|block|shards)$"
+        ),
         "exact",
     ),
     (
@@ -216,6 +218,39 @@ def self_test():
     assert not f, f
     f, _ = compare(nested, {"configs": [{"d": 128, "gemm_p50_us": 100.0}]})
     assert f, "config drift inside an array must fail"
+
+    # Store-bench sweep: the shard count is a grid dimension (exact),
+    # the registration-storm rate is noisy, and the maint section's
+    # request-path attribution leaves are near-exact invariants.
+    sbase = {
+        "configs": [
+            {
+                "shards": 4,
+                "reg_storm_rps": 1000.0,
+                "maint": {"spill_writes": None, "request_path_spill_writes": 0},
+            }
+        ]
+    }
+    sfresh = {
+        "configs": [
+            {
+                "shards": 4,
+                "reg_storm_rps": 8000.0,
+                "maint": {"spill_writes": 9, "request_path_spill_writes": 0},
+            }
+        ]
+    }
+    f, w = compare(sbase, sfresh)
+    assert not f, f
+    assert any("spill_writes" in m and "unseeded" in m for m in w), w
+    bad_shards = json.loads(json.dumps(sfresh))
+    bad_shards["configs"][0]["shards"] = 16
+    f, _ = compare(sbase, bad_shards)
+    assert any("shards" in m for m in f), "shard-count drift must fail"
+    on_path = json.loads(json.dumps(sfresh))
+    on_path["configs"][0]["maint"]["request_path_spill_writes"] = 40
+    f, _ = compare(sbase, on_path)
+    assert any("request_path_spill_writes" in m for m in f), f
 
     print("[bench_diff] self-test PASS")
     return 0

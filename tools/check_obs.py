@@ -66,6 +66,18 @@ SLO_STATUSES = {"pass", "fail", "no_data"}
 # Heavy-hitter dimensions (obs::tenantstats::TENANT_DIMS). Keep in sync
 # with DESIGN.md §12.
 TENANT_DIMS = ["requests", "latency_ns_sum", "deadline_sheds", "admission_rejected"]
+# Sharded-store + background-maintenance metrics (DESIGN.md §13). A
+# store-bench record run with --obs must carry all of them — they are
+# registered up front, so zero-valued series still appear.
+STORE_COUNTERS = [
+    "store_shard_appends_total",
+    "store_shard_torn_tails_total",
+    "store_maint_ticks_total",
+    "store_maint_compactions_total",
+    "store_maint_spill_writes_total",
+]
+STORE_GAUGES = ["store_shard_count", "store_maint_queue_depth"]
+STORE_TIMINGS = ["store_shard_replay_ns", "store_maint_cycle_ns"]
 
 
 def as_int(v):
@@ -211,6 +223,27 @@ def check_serve(path, record, obs):
     check_tenants(path, record, obs, requests)
 
 
+def check_store(path, record, obs):
+    for name in STORE_COUNTERS:
+        if name not in obs["counters"]:
+            fail(path, f"declared store counter {name!r} missing")
+    for name in STORE_GAUGES:
+        if name not in obs["gauges"]:
+            fail(path, f"declared store gauge {name!r} missing")
+    for name in STORE_TIMINGS:
+        if name not in obs["timings"]:
+            fail(path, f"declared store timing {name!r} missing")
+    # Every config in the sweep must attribute all compactions and spill
+    # writes to the maintenance thread — the request path owns neither.
+    for i, cfg in enumerate(record.get("configs", [])):
+        maint = cfg.get("maint")
+        if not isinstance(maint, dict):
+            fail(path, f"configs[{i}] has no 'maint' section")
+        for key in ("request_path_compactions", "request_path_spill_writes"):
+            if as_int(maint.get(key, -1)) != 0:
+                fail(path, f"configs[{i}].maint.{key} = {maint.get(key)!r}, must be 0")
+
+
 def check_chrome(path):
     with open(path) as f:
         doc = json.load(f)
@@ -284,6 +317,8 @@ def main(argv):
         check_timings(path, obs["timings"])
         if i == 0:
             check_serve(path, record, obs)
+        if os.path.basename(path).startswith("BENCH_store"):
+            check_store(path, record, obs)
         if "slo" in record:
             check_slo(path, record["slo"])
         n = len(obs["counters"]) + len(obs["gauges"]) + len(obs["timings"])
